@@ -1,0 +1,110 @@
+//! Cluster demo: the full Figure 7 topology over real HTTP.
+//!
+//! Boots a sharded cluster, serves the Table 1 REST interface, then
+//! exercises it as remote clients would: cutouts over the wire, CATMAID
+//! tile fetches (stored layout + prefetch cache), annotation uploads with
+//! write disciplines, predicate queries, and batch metadata reads.
+//!
+//! ```sh
+//! cargo run --release --example cluster_demo
+//! ```
+
+use ocpd::annotation::{RamonObject, SynapseType};
+use ocpd::array::DenseVolume;
+use ocpd::client::{cluster_info, OcpClient};
+use ocpd::cluster::Cluster;
+use ocpd::core::{Box3, DatasetBuilder, Project, WriteDiscipline};
+use ocpd::ingest::{generate, ingest_volume, SynthSpec};
+
+fn main() -> ocpd::Result<()> {
+    // --- Server side -----------------------------------------------------
+    let dims = [512u64, 512, 32];
+    let cluster = Cluster::in_memory(2, 1);
+    cluster.register_dataset(DatasetBuilder::new("bock_mini", dims).levels(2).build());
+    let img = cluster.create_image_project(Project::image("bock_mini", "bock_mini"))?;
+    cluster.create_annotation_project(
+        Project::annotation("bock_ann", "bock_mini").with_exceptions(),
+        true,
+    )?;
+    let sv = generate(&SynthSpec::small(dims, 7));
+    ingest_volume(&img, &sv.vol, [256, 256, 16])?;
+
+    let server = ocpd::web::serve(std::sync::Arc::clone(&cluster), None, "127.0.0.1:0", 8)?;
+    println!("serving at {}", server.url());
+    println!("{}", cluster_info(&server.url())?);
+
+    // --- Remote clients ---------------------------------------------------
+    let image_client = OcpClient::new(&server.url(), "bock_mini");
+    let anno_client = OcpClient::new(&server.url(), "bock_ann");
+
+    // Cutout over the wire (Table 1 row 1) and verify against the source.
+    let bx = Box3::new([64, 64, 4], [192, 192, 20]);
+    let cut = image_client.cutout_u8(0, bx)?;
+    assert_eq!(cut, sv.vol.extract_box(bx));
+    println!("HTTP cutout {:?}: verified {} voxels", bx.extent(), cut.len());
+
+    // CATMAID tile fetches — stored layout r/z/y_x (§3.3).
+    let t0 = std::time::Instant::now();
+    let tile = image_client.tile(0, 8, 0, 0)?;
+    let cold = t0.elapsed();
+    let t0 = std::time::Instant::now();
+    let tile2 = image_client.tile(0, 8, 0, 1)?; // prefetched neighbour
+    let warm = t0.elapsed();
+    println!(
+        "tiles: {} bytes each; cold fetch {:?}, neighbour (prefetched) {:?}",
+        tile.len(),
+        cold,
+        warm
+    );
+    assert_eq!(tile.len(), 256 * 256);
+    assert_eq!(tile2.len(), 256 * 256);
+
+    // Annotation upload with disciplines (Table 1 "Write an annotation").
+    let abx = Box3::new([100, 100, 8], [164, 164, 16]);
+    let mut labels = DenseVolume::<u32>::zeros(abx.extent());
+    labels.fill_box(Box3::new([0, 0, 0], [32, 64, 8]), 1);
+    labels.fill_box(Box3::new([32, 0, 0], [64, 64, 8]), 2);
+    let resp = anno_client.write_annotation(0, abx.lo, &labels, WriteDiscipline::Overwrite)?;
+    println!("annotation write: {resp}");
+
+    // Overlapping exception write.
+    let mut overlay = DenseVolume::<u32>::zeros(abx.extent());
+    overlay.fill_box(Box3::new([16, 0, 0], [48, 64, 8]), 3);
+    let resp = anno_client.write_annotation(0, abx.lo, &overlay, WriteDiscipline::Exception)?;
+    println!("exception write: {resp}");
+
+    // RAMON metadata batch write + predicate query (Table 1 last row).
+    let objs: Vec<RamonObject> = (1..=3u32)
+        .map(|id| RamonObject::synapse(id, 0.5 + 0.15 * id as f32, SynapseType::Excitatory))
+        .collect();
+    let ids = anno_client.put_objects(&objs)?;
+    println!("wrote RAMON objects {ids:?}");
+    let hits = anno_client.query(&["type", "synapse", "confidence", "geq", "0.9"])?;
+    println!("objects/type/synapse/confidence/geq/0.9/ -> {hits:?}");
+    assert_eq!(hits, vec![3]);
+
+    // Batch metadata read + spatial reads over the wire.
+    let got = anno_client.get_objects(&[1, 2, 3])?;
+    println!("batch read {} objects", got.len());
+    let bb = anno_client.bounding_box(1)?;
+    println!("object 1 bbox: {:?}..{:?}", bb.lo, bb.hi);
+    let voxels = anno_client.voxels(3)?;
+    println!("object 3 (exception-labeled): {} voxels via voxel-list", voxels.len());
+    assert!(!voxels.is_empty(), "exception voxels must be readable");
+    let (obx, ovol) = anno_client.object_cutout(2, None)?;
+    println!("object 2 dense read: {:?} box, {} labeled", obx.extent(), ovol.count_eq(2));
+
+    // Annotation cutout (u32) over the wire.
+    let acut = anno_client.cutout_u32(0, abx)?;
+    assert_eq!(acut.count_eq(1), 32 * 64 * 8);
+    println!("annotation cutout verified");
+
+    println!("requests served: {}", server.requests.get());
+    println!(
+        "server latency: mean {:.1}ms p90 {:.1}ms",
+        server.latency.mean_us() / 1000.0,
+        server.latency.percentile_us(90.0) as f64 / 1000.0
+    );
+    println!("cluster demo OK");
+    Ok(())
+}

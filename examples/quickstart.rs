@@ -1,0 +1,99 @@
+//! Quickstart: the OCP Data Cluster in ~80 lines.
+//!
+//! Boots an in-memory cluster, registers a dataset, ingests a synthetic
+//! EM volume, reads cutouts, writes annotations with RAMON metadata, and
+//! runs the spatial + metadata queries of paper §4.2.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use ocpd::annotation::{Predicate, PredicateOp, RamonObject, SynapseType};
+use ocpd::array::DenseVolume;
+use ocpd::cluster::Cluster;
+use ocpd::core::{Box3, DatasetBuilder, Project, WriteDiscipline};
+use ocpd::ingest::{generate, ingest_volume, SynthSpec};
+use ocpd::resolution::Propagator;
+
+fn main() -> ocpd::Result<()> {
+    // 1. A cluster: two database nodes, one SSD write node.
+    let cluster = Cluster::in_memory(2, 1);
+
+    // 2. A dataset: 512x512x64 voxels, 3 resolution levels (XY halve, Z
+    //    fixed — paper §3.1).
+    cluster.register_dataset(
+        DatasetBuilder::new("demo", [512, 512, 64]).voxel_nm([4.0, 4.0, 40.0]).levels(3).build(),
+    );
+
+    // 3. An image project (sharded across database nodes) + synthetic EM.
+    let img = cluster.create_image_project(Project::image("demo", "demo"))?;
+    let sv = generate(&SynthSpec::small([512, 512, 64], 42));
+    ingest_volume(&img, &sv.vol, [256, 256, 16])?;
+    println!("ingested {} voxels ({} planted synapses)", sv.vol.len(), sv.synapses.len());
+
+    // 4. Build the resolution hierarchy.
+    let built = Propagator::new(&img).propagate_image()?;
+    println!("hierarchy: {built} cuboids materialized across levels 1..2");
+
+    // 5. Cutouts: the core service (Table 1 row 1).
+    let cut = img.read::<u8>(0, 0, 0, Box3::new([100, 100, 10], [356, 356, 26]))?;
+    println!("cutout 256x256x16 @ res 0: mean gray {:.1}", mean(&cut));
+    let low = img.read::<u8>(2, 0, 0, Box3::new([0, 0, 0], [128, 128, 64]))?;
+    println!("cutout whole volume @ res 2: mean gray {:.1}", mean(&low));
+
+    // 6. An annotation project on the SSD node, with exceptions enabled.
+    let anno = cluster.create_annotation_project(
+        Project::annotation("demo_anno", "demo").with_exceptions(),
+        true,
+    )?;
+
+    // 7. Write two overlapping objects with different disciplines.
+    let bx = Box3::new([40, 40, 8], [72, 72, 16]);
+    let mut vol = DenseVolume::<u32>::zeros(bx.extent());
+    vol.fill_box(Box3::new([0, 0, 0], bx.extent()), 1);
+    anno.write_volume(0, bx, &vol, WriteDiscipline::Overwrite)?;
+    let bx2 = Box3::new([56, 56, 8], [88, 88, 16]);
+    let mut vol2 = DenseVolume::<u32>::zeros(bx2.extent());
+    vol2.fill_box(Box3::new([0, 0, 0], bx2.extent()), 2);
+    let o = anno.write_volume(0, bx2, &vol2, WriteDiscipline::Exception)?;
+    println!(
+        "overlap write: {} voxels written, {} exceptions",
+        o.voxels_written, o.exceptions_added
+    );
+
+    // 8. RAMON metadata + the paper's predicate query.
+    anno.put_object(RamonObject::synapse(1, 0.97, SynapseType::Excitatory))?;
+    anno.put_object(RamonObject::synapse(2, 0.42, SynapseType::Inhibitory))?;
+    let hits = anno.query(&[
+        Predicate::eq("type", "synapse"),
+        Predicate::cmp("confidence", PredicateOp::Geq, 0.9),
+    ])?;
+    println!("objects/type/synapse/confidence/geq/0.9/ -> {hits:?}");
+
+    // 9. Spatial queries: voxel list, bounding box, dense read.
+    println!(
+        "object 1: {} voxels, bbox {:?}",
+        anno.voxel_list(0, 1)?.len(),
+        anno.bounding_box(0, 1)?
+    );
+    let (dbx, dvol) = anno.dense_read(0, 2, None)?.expect("object 2");
+    println!(
+        "object 2 dense read: box {:?}..{:?}, {} labeled voxels",
+        dbx.lo,
+        dbx.hi,
+        dvol.count_eq(2)
+    );
+
+    // 10. Migrate the annotation project off the SSD node (§4.1).
+    let (_, moved) = cluster.migrate_annotation_project("demo_anno")?;
+    println!("migrated demo_anno to a database node ({moved} values)");
+
+    for (name, s) in cluster.node_stats() {
+        println!("node {name}: {} reads / {} writes", s.reads, s.writes);
+    }
+    Ok(())
+}
+
+fn mean(v: &DenseVolume<u8>) -> f64 {
+    v.as_slice().iter().map(|&x| x as f64).sum::<f64>() / v.len() as f64
+}

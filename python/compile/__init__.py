@@ -1,0 +1,3 @@
+"""Build-time Python package: Layer-2 JAX models, Layer-1 Pallas kernels,
+and the AOT lowering entry point. Never imported at runtime — `make
+artifacts` runs once and the Rust coordinator loads the HLO text."""

@@ -1,0 +1,80 @@
+"""AOT lowering: JAX/Pallas compute graphs -> HLO text artifacts.
+
+The interchange format is HLO *text*, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage::
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Produces one ``<name>.hlo.txt`` per graph plus ``manifest.txt`` recording
+the input/output shapes the Rust runtime expects. ``make artifacts`` runs
+this exactly once; the Rust binary is self-contained afterwards.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """Lower a jitted computation to XLA HLO text (return_tuple=True; the
+    Rust side unwraps with to_tuple1)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+GRAPHS = {
+    "synapse_detector": (model.synapse_detector, [model.DET_IN], [model.CORE]),
+    "color_correct": (model.color_correct, [model.CC_SHAPE], [model.CC_SHAPE]),
+    "downsample2x": (
+        model.downsample2x,
+        [model.DS_IN],
+        [(model.DS_IN[0], model.DS_IN[1] // 2, model.DS_IN[2] // 2)],
+    ),
+}
+
+
+def lower_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = []
+    written = {}
+    for name, (fn, in_shapes, out_shapes) in GRAPHS.items():
+        specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in in_shapes]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(
+            f"{name} in={';'.join(map(str, in_shapes))} "
+            f"out={';'.join(map(str, out_shapes))} dtype=f32"
+        )
+        written[name] = path
+        print(f"  {name}: {len(text)} chars -> {path}")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    return written
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    print(f"AOT-lowering {len(GRAPHS)} graphs to {args.out}")
+    lower_all(args.out)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

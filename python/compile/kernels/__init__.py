@@ -1,0 +1,14 @@
+"""Layer-1 Pallas kernels for the OCP vision compute graphs.
+
+Every kernel is authored with ``interpret=True`` — the CPU PJRT plugin
+cannot run Mosaic custom-calls, so interpret mode is both the correctness
+path and what gets AOT-lowered into the artifacts (see aot_recipe gotchas).
+On a real TPU the same ``pallas_call`` bodies lower to Mosaic; the tiling
+choices (cuboid-shaped blocks) are discussed in DESIGN.md §2.
+"""
+
+from compile.kernels.conv3d import sepconv3d
+from compile.kernels.downsample import downsample2x_xy
+from compile.kernels.jacobi import diffuse_xy, diffuse_z
+
+__all__ = ["sepconv3d", "downsample2x_xy", "diffuse_xy", "diffuse_z"]

@@ -1,0 +1,33 @@
+"""2x2 XY mean-pool as a Pallas kernel — the resolution-hierarchy builder.
+
+The paper's hierarchy halves X and Y but never Z (§3.1); this kernel is
+the compute for one level step. Arrays are ``[Z, Y, X]`` (see conv3d.py).
+The grid iterates over Z sections with cuboid-plane-shaped blocks: input
+blocks ``(1, Y, X)``, output blocks ``(1, Y/2, X/2)`` — an example of
+asymmetric in/out BlockSpecs.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _down_kernel(x_ref, o_ref):
+    v = x_ref[...]  # (1, Y, X)
+    o_ref[...] = 0.25 * (
+        v[:, 0::2, 0::2] + v[:, 1::2, 0::2] + v[:, 0::2, 1::2] + v[:, 1::2, 1::2]
+    )
+
+
+def downsample2x_xy(x):
+    """Mean-pool 2x2 in XY, preserving Z. f32[Z,Y,X] -> f32[Z,Y/2,X/2]."""
+    Z, Y, X = x.shape
+    assert X % 2 == 0 and Y % 2 == 0, f"even XY required, got {x.shape}"
+    return pl.pallas_call(
+        _down_kernel,
+        grid=(Z,),
+        in_specs=[pl.BlockSpec((1, Y, X), lambda z: (z, 0, 0))],
+        out_specs=pl.BlockSpec((1, Y // 2, X // 2), lambda z: (z, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Z, Y // 2, X // 2), x.dtype),
+        interpret=True,
+    )(x)

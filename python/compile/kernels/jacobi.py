@@ -1,0 +1,65 @@
+"""Jacobi relaxation steps as Pallas kernels — the gradient-domain color
+correction of §3.4 (after Kazhdan & Hoppe [18]).
+
+The paper color-corrects EM stacks by solving a global Poisson equation
+that smooths low-frequency exposure differences between serial sections
+while high frequencies are added back. The relaxation primitive here is a
+damped Jacobi step of the heat equation:
+
+    u' = (1 - a) * u + a * mean(neighbours)
+
+Arrays are ``[Z, Y, X]`` (see conv3d.py). ``diffuse_xy`` relaxes within
+each section (5-point stencil over Y/X, one grid step per section);
+``diffuse_z`` relaxes across sections (3-point stencil along axis 0),
+which is where inter-slice exposure differences actually live. L2
+composes K steps of each around high-frequency add-back
+(model.color_correct).
+
+Edge semantics: circular shifts; callers either pad or accept periodic
+boundaries on the block border (acceptable for the low-frequency field).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _xy_kernel(x_ref, o_ref, *, alpha):
+    v = x_ref[...]  # (1, Y, X)
+    n = (
+        jnp.roll(v, 1, axis=1)
+        + jnp.roll(v, -1, axis=1)
+        + jnp.roll(v, 1, axis=2)
+        + jnp.roll(v, -1, axis=2)
+    ) * 0.25
+    o_ref[...] = (1.0 - alpha) * v + alpha * n
+
+
+def _z_kernel(x_ref, o_ref, *, alpha):
+    v = x_ref[...]
+    n = (jnp.roll(v, 1, axis=0) + jnp.roll(v, -1, axis=0)) * 0.5
+    o_ref[...] = (1.0 - alpha) * v + alpha * n
+
+
+def diffuse_xy(x, alpha=0.8):
+    """One damped-Jacobi diffusion step within each section (Y/X axes)."""
+    Z, Y, X = x.shape
+    return pl.pallas_call(
+        functools.partial(_xy_kernel, alpha=float(alpha)),
+        grid=(Z,),
+        in_specs=[pl.BlockSpec((1, Y, X), lambda z: (z, 0, 0))],
+        out_specs=pl.BlockSpec((1, Y, X), lambda z: (z, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x)
+
+
+def diffuse_z(x, alpha=0.8):
+    """One damped-Jacobi diffusion step along Z (across sections)."""
+    return pl.pallas_call(
+        functools.partial(_z_kernel, alpha=float(alpha)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for every Pallas kernel — the build-time correctness
+signal. pytest asserts kernel == ref to float tolerance across
+hypothesis-generated shapes (python/tests/test_kernels.py).
+
+Arrays are [Z, Y, X] throughout (see conv3d.py)."""
+
+import jax.numpy as jnp
+
+
+def conv_axis_ref(v, taps, axis):
+    """Circular correlation with `taps` along `axis` (matches the kernel's
+    roll-based edge semantics)."""
+    r = len(taps) // 2
+    acc = jnp.zeros_like(v)
+    for i, t in enumerate(taps):
+        acc = acc + float(t) * jnp.roll(v, r - i, axis=axis)
+    return acc
+
+
+def sepconv3d_ref(x, taps_xy, taps_z):
+    v = conv_axis_ref(x, taps_xy, axis=1)  # Y
+    v = conv_axis_ref(v, taps_xy, axis=2)  # X
+    return conv_axis_ref(v, taps_z, axis=0)  # Z
+
+
+def downsample2x_xy_ref(x):
+    return 0.25 * (
+        x[:, 0::2, 0::2] + x[:, 1::2, 0::2] + x[:, 0::2, 1::2] + x[:, 1::2, 1::2]
+    )
+
+
+def diffuse_xy_ref(x, alpha=0.8):
+    n = (
+        jnp.roll(x, 1, axis=1)
+        + jnp.roll(x, -1, axis=1)
+        + jnp.roll(x, 1, axis=2)
+        + jnp.roll(x, -1, axis=2)
+    ) * 0.25
+    return (1.0 - alpha) * x + alpha * n
+
+
+def diffuse_z_ref(x, alpha=0.8):
+    n = (jnp.roll(x, 1, axis=0) + jnp.roll(x, -1, axis=0)) * 0.5
+    return (1.0 - alpha) * x + alpha * n

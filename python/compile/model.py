@@ -1,0 +1,139 @@
+"""Layer-2 JAX compute graphs for the OCP vision workloads.
+
+Three graphs, each AOT-lowered to HLO text by aot.py and executed from the
+Rust coordinator via PJRT (Python never runs on the request path):
+
+* ``synapse_detector`` — the parallel synapse-finding workload of §2/§4:
+  Gaussian smoothing, difference-of-Gaussians band-pass (synapses are
+  compact bright blobs of a characteristic scale), logistic squashing to a
+  probability map. Rust thresholds + connected-components the output and
+  writes RAMON synapses.
+* ``color_correct`` — §3.4's gradient-domain exposure correction: separate
+  the stack into low/high frequencies, diffuse the low frequencies across
+  sections (where exposure differences live), add the high frequencies
+  back to preserve edges.
+* ``downsample2x`` — one XY-halving step of the resolution hierarchy
+  (§3.1), used by the hierarchy builder.
+
+AXIS CONVENTION: arrays are ``[Z, Y, X]`` — row-major with X fastest,
+which is exactly the memory order of the Rust ``DenseVolume`` (x-fastest),
+so buffers cross the PJRT bridge with zero copies.
+
+Block geometry (static AOT shapes, [Z, Y, X]):
+  synapse_detector : f32[20,144,144] -> f32[16,128,128]
+      (one flat cuboid of core plus a 2/8/8 halo; the halo absorbs both
+       filter support and the kernels' circular-shift edge effects)
+  color_correct    : f32[32,256,256] -> f32[32,256,256]
+  downsample2x     : f32[16,128,128] -> f32[16,64,64]
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile import kernels
+
+# Detector geometry [Z, Y, X]: core block (one flat cuboid) + halo. The
+# halo must exceed the composed filter radius (XY: 3 passes x radius 2 =
+# 6 < 8; Z: 3 passes x radius 1 = 3 < 4) so circular-shift wraparound
+# never reaches the core.
+CORE = (16, 128, 128)
+HALO = (4, 8, 8)
+DET_IN = tuple(c + 2 * h for c, h in zip(CORE, HALO))
+
+# Binomial (Gaussian-approximating) taps. sigma ~ sqrt(n)/2.
+GAUSS_XY = (1 / 16, 4 / 16, 6 / 16, 4 / 16, 1 / 16)
+GAUSS_Z = (1 / 4, 2 / 4, 1 / 4)
+
+# Logistic squash parameters, tuned on the synthetic EM generator
+# (rust/src/ingest): a planted synapse (amp ~0.43 of full scale, sigma
+# ~(1,2,2) vox) produces a DoG peak ~0.13; dendrite/vessel edges and
+# sensor noise stay below ~0.04. The bias sits between; the gain makes
+# the logistic crisp. The Rust pipeline applies its own decision
+# threshold on top.
+DOG_GAIN = 120.0
+DOG_BIAS = 0.07
+
+CC_SHAPE = (32, 256, 256)
+CC_XY_STEPS = 6  # in-section smoothing to isolate low frequencies
+CC_Z_STEPS = 12  # cross-section diffusion of exposure
+DS_IN = (16, 128, 128)
+
+
+def synapse_detector(x):
+    """f32[20,144,144] haloed block -> f32[16,128,128] synapse probability.
+
+    DoG = G_narrow(x) - G_wide(x): positive on bright blobs at the synapse
+    scale, ~0 on flat background and on structures much larger than the
+    filter (dendrite shafts, vessels).
+    """
+    assert x.shape == DET_IN, x.shape
+    narrow = kernels.sepconv3d(x, GAUSS_XY, GAUSS_Z)
+    # Wider Gaussian by composing the same taps twice more (binomial
+    # composition: variance adds).
+    wide = kernels.sepconv3d(narrow, GAUSS_XY, GAUSS_Z)
+    wide = kernels.sepconv3d(wide, GAUSS_XY, GAUSS_Z)
+    dog = narrow - wide
+    core = dog[
+        HALO[0] : HALO[0] + CORE[0],
+        HALO[1] : HALO[1] + CORE[1],
+        HALO[2] : HALO[2] + CORE[2],
+    ]
+    return (jax.nn.sigmoid(DOG_GAIN * (core - DOG_BIAS)),)
+
+
+def color_correct(x):
+    """f32[32,256,256] stack -> exposure-corrected stack (§3.4).
+
+    low  = in-section diffusion of x          (low-frequency content)
+    high = x - low                            (edges and texture)
+    lowz = cross-section diffusion of low     (smooths exposure steps)
+    out  = clip(lowz + high)
+    """
+    assert x.shape == CC_SHAPE, x.shape
+    low = x
+    for _ in range(CC_XY_STEPS):
+        low = kernels.diffuse_xy(low, alpha=0.9)
+    high = x - low
+    lowz = low
+    for _ in range(CC_Z_STEPS):
+        lowz = kernels.diffuse_z(lowz, alpha=0.9)
+    return (jnp.clip(lowz + high, 0.0, 1.0),)
+
+
+def downsample2x(x):
+    """f32[16,128,128] -> f32[16,64,64]: one hierarchy level step."""
+    assert x.shape == DS_IN, x.shape
+    return (kernels.downsample2x_xy(x),)
+
+
+# ---------------------------------------------------------------------
+# Pure-jnp reference models (oracles for python/tests/test_models.py and
+# documentation of intent — independent of the Pallas layer).
+# ---------------------------------------------------------------------
+
+from compile.kernels import ref as _ref  # noqa: E402
+
+
+def synapse_detector_ref(x):
+    narrow = _ref.sepconv3d_ref(x, GAUSS_XY, GAUSS_Z)
+    wide = _ref.sepconv3d_ref(
+        _ref.sepconv3d_ref(narrow, GAUSS_XY, GAUSS_Z), GAUSS_XY, GAUSS_Z
+    )
+    dog = narrow - wide
+    core = dog[
+        HALO[0] : HALO[0] + CORE[0],
+        HALO[1] : HALO[1] + CORE[1],
+        HALO[2] : HALO[2] + CORE[2],
+    ]
+    return jax.nn.sigmoid(DOG_GAIN * (core - DOG_BIAS))
+
+
+def color_correct_ref(x):
+    low = x
+    for _ in range(CC_XY_STEPS):
+        low = _ref.diffuse_xy_ref(low, alpha=0.9)
+    high = x - low
+    lowz = low
+    for _ in range(CC_Z_STEPS):
+        lowz = _ref.diffuse_z_ref(lowz, alpha=0.9)
+    return jnp.clip(lowz + high, 0.0, 1.0)

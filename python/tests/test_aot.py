@@ -1,0 +1,66 @@
+"""AOT lowering: every graph lowers to parseable HLO text with the shapes
+the Rust runtime expects, and the manifest is written."""
+
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    return aot.lower_all(str(out)), str(out)
+
+
+def test_all_graphs_lowered(artifacts):
+    written, out = artifacts
+    assert set(written) == {"synapse_detector", "color_correct", "downsample2x"}
+    for path in written.values():
+        assert os.path.getsize(path) > 0
+
+
+def test_hlo_text_headers(artifacts):
+    written, _ = artifacts
+    for name, path in written.items():
+        text = open(path).read()
+        assert text.startswith("HloModule"), f"{name} missing HloModule header"
+        assert "ENTRY" in text, f"{name} missing entry computation"
+
+
+def test_shapes_in_hlo(artifacts):
+    written, _ = artifacts
+    det = open(written["synapse_detector"]).read()
+    ins = ",".join(map(str, model.DET_IN))
+    outs = ",".join(map(str, model.CORE))
+    assert f"f32[{ins}]" in det, "detector input shape missing"
+    assert f"f32[{outs}]" in det, "detector output shape missing"
+    ds = open(written["downsample2x"]).read()
+    assert "f32[16,64,64]" in ds
+
+
+def test_outputs_are_tuples(artifacts):
+    # return_tuple=True: the Rust side unwraps with to_tuple1.
+    written, _ = artifacts
+    for name, path in written.items():
+        text = open(path).read()
+        assert "(f32[" in text, f"{name} entry not tuple-shaped"
+
+
+def test_manifest_written(artifacts):
+    _, out = artifacts
+    manifest = open(os.path.join(out, "manifest.txt")).read()
+    for name in ("synapse_detector", "color_correct", "downsample2x"):
+        assert name in manifest
+
+
+def test_no_custom_calls(artifacts):
+    # interpret=True must not leave Mosaic custom-calls behind — the CPU
+    # PJRT client cannot execute those.
+    written, _ = artifacts
+    for name, path in written.items():
+        text = open(path).read()
+        assert "custom-call" not in text.lower() or "mosaic" not in text.lower(), (
+            f"{name} contains a Mosaic custom-call"
+        )

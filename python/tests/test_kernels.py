@@ -1,0 +1,141 @@
+"""Pallas kernels vs pure-jnp oracles — the core build-time correctness
+signal. hypothesis sweeps shapes and tap sets; assert_allclose against
+ref.py."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.random(shape, dtype=np.float32))
+
+
+# Small even dims keep interpret-mode runtime reasonable.
+dims_xy = st.sampled_from([4, 8, 12, 16])
+dims_z = st.sampled_from([2, 4, 6, 8])
+taps3 = st.sampled_from([(0.25, 0.5, 0.25), (1.0, 2.0, 1.0), (0.0, 1.0, 0.0)])
+taps5 = st.sampled_from([(1 / 16, 4 / 16, 6 / 16, 4 / 16, 1 / 16), (0.1, 0.2, 0.4, 0.2, 0.1)])
+
+
+class TestSepconv3d:
+    @settings(max_examples=10, deadline=None)
+    @given(x=dims_xy, y=dims_xy, z=dims_z, txy=taps3, tz=taps3, seed=st.integers(0, 100))
+    def test_matches_ref_taps3(self, x, y, z, txy, tz, seed):
+        v = rand((x, y, z), seed)
+        got = kernels.sepconv3d(v, txy, tz)
+        want = ref.sepconv3d_ref(v, txy, tz)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    @settings(max_examples=6, deadline=None)
+    @given(txy=taps5, tz=taps3, seed=st.integers(0, 100))
+    def test_matches_ref_taps5(self, txy, tz, seed):
+        v = rand((16, 16, 4), seed)
+        got = kernels.sepconv3d(v, txy, tz)
+        want = ref.sepconv3d_ref(v, txy, tz)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_z_blocking_invariant(self):
+        # Tiling over Z slabs must not change the XY passes.
+        v = rand((8, 8, 8), 7)
+        t = (0.25, 0.5, 0.25)
+        full = kernels.sepconv3d(v, t, t, z_block=None)
+        tiled = kernels.sepconv3d(v, t, t, z_block=2)
+        np.testing.assert_allclose(full, tiled, rtol=1e-6)
+
+    def test_identity_taps(self):
+        v = rand((8, 8, 4), 1)
+        got = kernels.sepconv3d(v, (0.0, 1.0, 0.0), (0.0, 1.0, 0.0))
+        np.testing.assert_allclose(got, v, rtol=1e-6)
+
+    def test_dc_preserved_by_normalized_taps(self):
+        # Normalized taps preserve a constant field exactly.
+        v = jnp.full((8, 8, 4), 0.37, dtype=jnp.float32)
+        got = kernels.sepconv3d(v, (0.25, 0.5, 0.25), (0.25, 0.5, 0.25))
+        np.testing.assert_allclose(got, v, rtol=1e-6)
+
+    def test_even_taps_rejected(self):
+        with pytest.raises(AssertionError):
+            kernels.sepconv3d(rand((4, 4, 2), 0), (0.5, 0.5), (1.0,))
+
+
+class TestDownsample:
+    @settings(max_examples=10, deadline=None)
+    @given(x=dims_xy, y=dims_xy, z=dims_z, seed=st.integers(0, 100))
+    def test_matches_ref(self, x, y, z, seed):
+        v = rand((z, y, x), seed)
+        got = kernels.downsample2x_xy(v)
+        want = ref.downsample2x_xy_ref(v)
+        assert got.shape == (z, y // 2, x // 2)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    def test_mean_of_window(self):
+        # [Z=1, Y=4, X=4]; window (y=0..2, x=0..2) = elements 0, 1, 4, 5.
+        v = jnp.arange(4 * 4, dtype=jnp.float32).reshape(1, 4, 4)
+        got = kernels.downsample2x_xy(v)
+        np.testing.assert_allclose(got[0, 0, 0], (0 + 1 + 4 + 5) / 4)
+
+    def test_odd_dims_rejected(self):
+        with pytest.raises(AssertionError):
+            kernels.downsample2x_xy(rand((2, 4, 5), 0))
+
+
+class TestJacobi:
+    @settings(max_examples=10, deadline=None)
+    @given(
+        x=dims_xy,
+        y=dims_xy,
+        z=dims_z,
+        alpha=st.sampled_from([0.2, 0.5, 0.9]),
+        seed=st.integers(0, 100),
+    )
+    def test_xy_matches_ref(self, x, y, z, alpha, seed):
+        v = rand((x, y, z), seed)
+        np.testing.assert_allclose(
+            kernels.diffuse_xy(v, alpha), ref.diffuse_xy_ref(v, alpha), rtol=1e-5, atol=1e-6
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        x=dims_xy,
+        y=dims_xy,
+        z=dims_z,
+        alpha=st.sampled_from([0.2, 0.5, 0.9]),
+        seed=st.integers(0, 100),
+    )
+    def test_z_matches_ref(self, x, y, z, alpha, seed):
+        v = rand((x, y, z), seed)
+        np.testing.assert_allclose(
+            kernels.diffuse_z(v, alpha), ref.diffuse_z_ref(v, alpha), rtol=1e-5, atol=1e-6
+        )
+
+    def test_fixed_point_constant(self):
+        # A constant field is a fixed point of diffusion.
+        v = jnp.full((8, 8, 4), 0.5, dtype=jnp.float32)
+        np.testing.assert_allclose(kernels.diffuse_xy(v, 0.9), v, rtol=1e-6)
+        np.testing.assert_allclose(kernels.diffuse_z(v, 0.9), v, rtol=1e-6)
+
+    def test_diffusion_contracts_variance(self):
+        v = rand((16, 16, 8), 3)
+        out = kernels.diffuse_xy(v, 0.9)
+        assert float(jnp.var(out)) < float(jnp.var(v))
+        outz = kernels.diffuse_z(v, 0.9)
+        assert float(jnp.var(outz)) < float(jnp.var(v))
+
+    def test_mean_preserved(self):
+        # Diffusion with periodic boundaries conserves mass.
+        v = rand((8, 8, 8), 11)
+        np.testing.assert_allclose(
+            float(jnp.mean(kernels.diffuse_xy(v, 0.7))), float(jnp.mean(v)), rtol=1e-5
+        )
+        np.testing.assert_allclose(
+            float(jnp.mean(kernels.diffuse_z(v, 0.7))), float(jnp.mean(v)), rtol=1e-5
+        )

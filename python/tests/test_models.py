@@ -1,0 +1,135 @@
+"""Layer-2 model behaviour: shapes, kernel-vs-ref agreement at model
+scope, and semantic sanity (the detector fires on synapse-scale blobs;
+color correction removes exposure steps).
+
+Arrays are [Z, Y, X] (see compile/model.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def blob(shape, center, sigma, amp):
+    """Gaussian blob on a [Z, Y, X] grid; sigma is (sz, sy, sx)."""
+    zs = jnp.arange(shape[0])[:, None, None]
+    ys = jnp.arange(shape[1])[None, :, None]
+    xs = jnp.arange(shape[2])[None, None, :]
+    d2 = (
+        (zs - center[0]) ** 2 / sigma[0] ** 2
+        + (ys - center[1]) ** 2 / sigma[1] ** 2
+        + (xs - center[2]) ** 2 / sigma[2] ** 2
+    )
+    return amp * jnp.exp(-0.5 * d2).astype(jnp.float32)
+
+
+class TestSynapseDetector:
+    def test_shapes(self):
+        x = jnp.zeros(model.DET_IN, dtype=jnp.float32)
+        (out,) = model.synapse_detector(x)
+        assert out.shape == model.CORE
+        assert out.dtype == jnp.float32
+
+    def test_matches_ref_model(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.random(model.DET_IN, dtype=np.float32))
+        (got,) = model.synapse_detector(x)
+        want = model.synapse_detector_ref(x)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_fires_on_synapse_scale_blob(self):
+        # Background 0.43 + a bright compact blob at the block center
+        # (matching the synthetic generator: BG 110/255, amp 110/255,
+        # sigma (1, 2, 2) in zyx).
+        bg = jnp.full(model.DET_IN, 0.43, dtype=jnp.float32)
+        center = tuple(s // 2 for s in model.DET_IN)
+        x = bg + blob(model.DET_IN, center, (1.0, 2.0, 2.0), 0.43)
+        (out,) = model.synapse_detector(x)
+        cc = tuple(c - h for c, h in zip(center, model.HALO))
+        at_blob = float(out[cc])
+        far = float(out[2, 5, 5])
+        assert at_blob > 0.9, f"blob response {at_blob}"
+        assert far < 0.1, f"background response {far}"
+
+    def test_flat_background_quiet(self):
+        x = jnp.full(model.DET_IN, 0.5, dtype=jnp.float32)
+        (out,) = model.synapse_detector(x)
+        # DoG of a constant is 0 -> sigmoid(-GAIN*BIAS) ~ 0; must be
+        # uniform and near zero.
+        assert float(out.max()) - float(out.min()) < 1e-4
+        assert float(out.max()) < 0.01
+
+    def test_noise_stays_quiet(self):
+        # Sensor noise at the generator's sigma (6/255) must not fire.
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(
+            0.43 + rng.normal(0, 6.0 / 255.0, model.DET_IN).astype(np.float32)
+        )
+        (out,) = model.synapse_detector(x)
+        assert float(out.max()) < 0.5, f"noise fired: {float(out.max())}"
+
+    def test_large_structure_suppressed(self):
+        # A structure much larger than the DoG scale (a "vessel") responds
+        # weakly compared to a synapse-scale blob.
+        bg = jnp.full(model.DET_IN, 0.43, dtype=jnp.float32)
+        center = tuple(s // 2 for s in model.DET_IN)
+        big = bg + blob(model.DET_IN, center, (6.0, 20.0, 20.0), 0.43)
+        small = bg + blob(model.DET_IN, center, (1.0, 2.0, 2.0), 0.43)
+        cc = tuple(c - h for c, h in zip(center, model.HALO))
+        (out_big,) = model.synapse_detector(big)
+        (out_small,) = model.synapse_detector(small)
+        assert float(out_small[cc]) > float(out_big[cc]) + 0.3
+
+
+class TestColorCorrect:
+    def striped_stack(self):
+        """Uniform texture with a per-section exposure step (the Figure 6
+        pathology). Sections are axis 0."""
+        rng = np.random.default_rng(1)
+        base = rng.random(model.CC_SHAPE, dtype=np.float32) * 0.2 + 0.4
+        exposure = np.where(np.arange(model.CC_SHAPE[0]) % 2 == 0, 0.15, -0.15)
+        return jnp.asarray(base + exposure[:, None, None])
+
+    def test_shapes_and_range(self):
+        x = self.striped_stack()
+        (out,) = model.color_correct(x)
+        assert out.shape == model.CC_SHAPE
+        assert float(out.min()) >= 0.0 and float(out.max()) <= 1.0
+
+    def test_matches_ref_model(self):
+        x = self.striped_stack()
+        (got,) = model.color_correct(x)
+        want = model.color_correct_ref(x)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_reduces_intersection_exposure_steps(self):
+        x = self.striped_stack()
+        (out,) = model.color_correct(x)
+        means_in = jnp.mean(x, axis=(1, 2))
+        means_out = jnp.mean(out, axis=(1, 2))
+        # Variance of per-section means (the exposure signature) must
+        # shrink substantially.
+        assert float(jnp.var(means_out)) < 0.35 * float(jnp.var(means_in))
+
+    def test_preserves_high_frequencies(self):
+        x = self.striped_stack()
+        (out,) = model.color_correct(x)
+        # In-section contrast (std within each section) is preserved.
+        s_in = jnp.std(x, axis=(1, 2)).mean()
+        s_out = jnp.std(out, axis=(1, 2)).mean()
+        assert float(s_out) > 0.8 * float(s_in)
+
+
+class TestDownsampleModel:
+    def test_shape(self):
+        x = jnp.zeros(model.DS_IN, dtype=jnp.float32)
+        (out,) = model.downsample2x(x)
+        assert out.shape == (model.DS_IN[0], model.DS_IN[1] // 2, model.DS_IN[2] // 2)
+
+    def test_constant_preserved(self):
+        x = jnp.full(model.DS_IN, 0.25, dtype=jnp.float32)
+        (out,) = model.downsample2x(x)
+        np.testing.assert_allclose(out, 0.25, rtol=1e-6)

@@ -1,0 +1,112 @@
+//! Figure 12: annotation write throughput as a function of the uploaded
+//! region size — and why it collapses.
+//!
+//! The paper uploads dense manual annotations (>90% labeled, compressing
+//! to ~6%) with 16 parallel writers and finds: writes scale to ~2 MB
+//! regions, peak far below read throughput (19 vs 121 MB/s), and collapse
+//! beyond 2 MB because every upload is a read-modify-write *plus* a
+//! spatial-index update — and parallel index updates contend ("transaction
+//! retries and timeouts in MySQL"; here, the index transaction lock).
+//!
+//! We reproduce the sweep over the RAID-6 device model and also print the
+//! read throughput of the same regions for the read≫write comparison.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::sync::Arc;
+
+use common::*;
+use ocpd::annotation::AnnotationDb;
+use ocpd::chunkstore::CuboidStore;
+use ocpd::core::{Box3, DatasetBuilder, Project, Vec3, WriteDiscipline};
+use ocpd::storage::{DeviceProfile, Engine, MemStore, SimulatedStore};
+use ocpd::util::pool::scoped_map;
+use ocpd::util::Rng;
+
+const DIMS: [u64; 3] = [1024, 1024, 64];
+const PARALLEL: usize = 16;
+
+fn db() -> Arc<AnnotationDb> {
+    let ds = Arc::new(DatasetBuilder::new("ds", DIMS).levels(1).build());
+    let pr = Arc::new(Project::annotation("ann", "ds"));
+    let engine: Engine = Arc::new(SimulatedStore::new(
+        Arc::new(MemStore::new()),
+        DeviceProfile::hdd_array(),
+        1.0,
+    ));
+    Arc::new(
+        AnnotationDb::new(
+            Arc::new(CuboidStore::new(ds, pr, Arc::clone(&engine))),
+            engine,
+        )
+        .unwrap(),
+    )
+}
+
+/// Region shape holding `voxels` voxels.
+fn shape_for(voxels: u64) -> Vec3 {
+    let mut s = [16u64, 16, 1];
+    let mut cur = 256;
+    let mut axis = 0;
+    while cur < voxels {
+        s[axis % 3] *= 2;
+        cur *= 2;
+        axis += 1;
+    }
+    [s[0].min(DIMS[0]), s[1].min(DIMS[1]), s[2].min(DIMS[2])]
+}
+
+fn main() {
+    println!("Figure 12: dense annotation upload throughput, {PARALLEL} parallel writers");
+    header(
+        "Fig 12: throughput (MB/s of region) vs region size",
+        &["size", "write", "read", "ids/region"],
+    );
+    // Region sizes in voxels (4B each): 16K .. 2M voxels = 64KB .. 8MB.
+    for exp in 0..8u32 {
+        let voxels = 16 * 1024u64 << exp;
+        let shape = shape_for(voxels);
+        let db = db();
+        let mut rng = Rng::new(exp as u64);
+        // Pre-generate distinct regions + payloads; one label per 32^3
+        // sub-block, like fused segmentation output — bigger regions
+        // carry more distinct ids, so the index-update fan-out grows.
+        let payload = dense_labels(shape, 32, exp as u64 + 9);
+        let ids = payload.unique_nonzero().len();
+        let boxes: Vec<Box3> = (0..PARALLEL)
+            .map(|_| {
+                Box3::at(
+                    [
+                        rng.below(DIMS[0] - shape[0] + 1),
+                        rng.below(DIMS[1] - shape[1] + 1),
+                        rng.below(DIMS[2] - shape[2] + 1),
+                    ],
+                    shape,
+                )
+            })
+            .collect();
+        let bytes = voxels * 4 * PARALLEL as u64;
+        let wsecs = time(|| {
+            scoped_map(PARALLEL, PARALLEL, |i| {
+                db.write_volume(0, boxes[i], &payload, WriteDiscipline::Overwrite).unwrap()
+            });
+        });
+        let rsecs = time(|| {
+            scoped_map(PARALLEL, PARALLEL, |i| {
+                db.cutout.read::<u32>(0, 0, 0, boxes[i]).unwrap().len()
+            });
+        });
+        row(&[
+            size_label(voxels * 4),
+            format!("{:.1}", bytes as f64 / 1e6 / wsecs),
+            format!("{:.1}", bytes as f64 / 1e6 / rsecs),
+            ids.to_string(),
+        ]);
+    }
+    println!(
+        "\npaper shape: write ≪ read at equal size; write peaks near ~2MB then\n\
+         collapses as per-region id count multiplies index-update contention\n\
+         (§5, Fig 12: 19 MB/s write vs 121 MB/s read)."
+    );
+}

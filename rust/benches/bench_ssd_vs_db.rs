@@ -1,0 +1,124 @@
+//! Figure 13: small random synapse writes — SSD node vs. Database node.
+//!
+//! The paper uploads all kasthuri11 synapse annotations in random order,
+//! committing after each write, and finds the SSD node achieves more than
+//! 150% of the database (RAID-6) node's throughput; absolute rates are
+//! low (~6 RAMON objects/s) because each object write updates metadata
+//! tables, the spatial index, and the volume database. With locality and
+//! batching the production pipeline reached 73 objects/s/node.
+//!
+//! We reproduce all three rows: random-per-commit on both device models,
+//! plus the batched+Morton-ordered configuration.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::sync::Arc;
+
+use common::*;
+use ocpd::annotation::{AnnotationDb, RamonObject, SynapseType};
+use ocpd::chunkstore::CuboidStore;
+use ocpd::core::{DatasetBuilder, Project, Vec3, WriteDiscipline};
+use ocpd::storage::{DeviceProfile, Engine, MemStore, SimulatedStore};
+use ocpd::util::Rng;
+
+const DIMS: [u64; 3] = [1024, 1024, 64];
+const N_SYNAPSES: usize = 150;
+
+fn db(profile: DeviceProfile) -> Arc<AnnotationDb> {
+    let ds = Arc::new(DatasetBuilder::new("ds", DIMS).levels(1).build());
+    let pr = Arc::new(Project::annotation("ann", "ds"));
+    let engine: Engine =
+        Arc::new(SimulatedStore::new(Arc::new(MemStore::new()), profile, 1.0));
+    Arc::new(
+        AnnotationDb::new(Arc::new(CuboidStore::new(ds, pr, Arc::clone(&engine))), engine)
+            .unwrap(),
+    )
+}
+
+/// kasthuri11-like synapse set: compact blobs at random positions.
+fn synapses(seed: u64) -> Vec<(u32, Vec<Vec3>)> {
+    let mut rng = Rng::new(seed);
+    (0..N_SYNAPSES as u32)
+        .map(|i| {
+            let c = [rng.below(DIMS[0] - 6), rng.below(DIMS[1] - 6), rng.below(DIMS[2] - 3)];
+            let mut voxels = Vec::new();
+            for z in 0..3 {
+                for y in 0..5 {
+                    for x in 0..5 {
+                        voxels.push([c[0] + x, c[1] + y, c[2] + z]);
+                    }
+                }
+            }
+            (i + 1, voxels)
+        })
+        .collect()
+}
+
+/// Random order, one commit per object (the Figure 13 workload).
+fn random_per_commit(db: &AnnotationDb, seed: u64) -> f64 {
+    let mut syns = synapses(seed);
+    let mut rng = Rng::new(seed + 1);
+    rng.shuffle(&mut syns);
+    let secs = time(|| {
+        for (id, voxels) in &syns {
+            db.put_object(RamonObject::synapse(*id, 0.9, SynapseType::Unknown)).unwrap();
+            db.write_voxels(0, *id, voxels, WriteDiscipline::Overwrite).unwrap();
+        }
+    });
+    N_SYNAPSES as f64 / secs
+}
+
+/// Morton-ordered, metadata batched 40 at a time (the production
+/// pipeline configuration, §4.2 "Batch Interfaces").
+fn batched_with_locality(db: &AnnotationDb, seed: u64) -> f64 {
+    let mut syns = synapses(seed);
+    syns.sort_by_key(|(_, v)| ocpd::morton::encode3(v[0][0], v[0][1], v[0][2]));
+    let secs = time(|| {
+        for chunk in syns.chunks(40) {
+            let objs: Vec<RamonObject> = chunk
+                .iter()
+                .map(|(id, _)| RamonObject::synapse(*id, 0.9, SynapseType::Unknown))
+                .collect();
+            db.put_objects(objs).unwrap();
+            for (id, voxels) in chunk {
+                db.write_voxels(0, *id, voxels, WriteDiscipline::Overwrite).unwrap();
+            }
+        }
+    });
+    N_SYNAPSES as f64 / secs
+}
+
+fn main() {
+    println!("Figure 13: {N_SYNAPSES} synapse writes (25x5x3-voxel blobs), commit per write");
+    header("Fig 13: RAMON objects/second", &["config", "db-node", "ssd-node", "ssd/db"]);
+
+    let db_hdd = db(DeviceProfile::hdd_array());
+    let db_ssd = db(DeviceProfile::ssd_raid0());
+    let h = random_per_commit(&db_hdd, 5);
+    let s = random_per_commit(&db_ssd, 5);
+    row(&[
+        "random".into(),
+        format!("{h:.1}"),
+        format!("{s:.1}"),
+        format!("{:.2}x", s / h),
+    ]);
+
+    let db_hdd = db(DeviceProfile::hdd_array());
+    let db_ssd = db(DeviceProfile::ssd_raid0());
+    let hb = batched_with_locality(&db_hdd, 6);
+    let sb = batched_with_locality(&db_ssd, 6);
+    row(&[
+        "batched+morton".into(),
+        format!("{hb:.1}"),
+        format!("{sb:.1}"),
+        format!("{:.2}x", sb / hb),
+    ]);
+
+    println!(
+        "\npaper shape: ssd >= 1.5x db on random small writes (Fig 13);\n\
+         locality+batching lifts absolute rate by an order of magnitude\n\
+         (6/s random -> 73/s in production, §5)."
+    );
+    assert!(s / h >= 1.5, "SSD advantage collapsed: {:.2}", s / h);
+}

@@ -1,0 +1,89 @@
+//! Shared helpers for the bench binaries (no criterion in the offline
+//! vendor set — each bench is a `harness = false` binary that prints the
+//! rows of the paper table/figure it regenerates).
+
+use std::time::Instant;
+
+use ocpd::array::DenseVolume;
+use ocpd::util::Rng;
+
+/// Print a fixed-width table row.
+pub fn row(cells: &[String]) {
+    let line: Vec<String> = cells.iter().map(|c| format!("{c:>14}")).collect();
+    println!("{}", line.join(" "));
+}
+
+pub fn header(title: &str, cols: &[&str]) {
+    println!("\n=== {title} ===");
+    row(&cols.iter().map(|c| c.to_string()).collect::<Vec<_>>());
+    println!("{}", "-".repeat(15 * cols.len()));
+}
+
+/// Human size label.
+pub fn size_label(bytes: u64) -> String {
+    if bytes >= 1 << 20 {
+        format!("{}M", bytes >> 20)
+    } else if bytes >= 1 << 10 {
+        format!("{}K", bytes >> 10)
+    } else {
+        format!("{bytes}B")
+    }
+}
+
+/// Time a closure, returning seconds.
+pub fn time<F: FnOnce()>(f: F) -> f64 {
+    let t0 = Instant::now();
+    f();
+    t0.elapsed().as_secs_f64()
+}
+
+/// Median of `n` timed runs.
+pub fn median_time<F: FnMut()>(n: usize, mut f: F) -> f64 {
+    let mut ts: Vec<f64> = (0..n).map(|_| time(&mut f)).collect();
+    ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ts[ts.len() / 2]
+}
+
+/// A high-entropy (incompressible, EM-like) u8 volume.
+pub fn em_like_volume(dims: [u64; 3], seed: u64) -> DenseVolume<u8> {
+    let n = (dims[0] * dims[1] * dims[2]) as usize;
+    let mut rng = Rng::new(seed);
+    let mut data = Vec::with_capacity(n);
+    // Word-at-a-time fill: bench setup time matters.
+    for _ in 0..n.div_ceil(8) {
+        data.extend_from_slice(&rng.next_u64().to_le_bytes());
+    }
+    data.truncate(n);
+    DenseVolume::from_vec(dims, data).unwrap()
+}
+
+/// A dense (>90% labeled) annotation volume with one label per `block`
+/// sub-block — matching the paper's Figure 12 upload payload ("dense
+/// manual annotations ... more than 90% of voxels are labeled").
+pub fn dense_labels(dims: [u64; 3], block: u64, seed: u64) -> DenseVolume<u32> {
+    let mut rng = Rng::new(seed);
+    let mut v = DenseVolume::<u32>::zeros(dims);
+    let mut next_id = 1u32;
+    let mut z = 0;
+    while z < dims[2] {
+        let mut y = 0;
+        while y < dims[1] {
+            let mut x = 0;
+            while x < dims[0] {
+                let id = if rng.chance(0.93) { next_id } else { 0 };
+                next_id += 1;
+                let bx = ocpd::core::Box3::new(
+                    [x, y, z],
+                    [(x + block).min(dims[0]), (y + block).min(dims[1]), (z + block).min(dims[2])],
+                );
+                if id != 0 {
+                    v.fill_box(bx, id);
+                }
+                x += block;
+            }
+            y += block;
+        }
+        z += block;
+    }
+    v
+}

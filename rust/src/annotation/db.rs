@@ -1,0 +1,661 @@
+//! The annotation database: RAMON metadata + spatial volume + per-object
+//! index, with the paper's write disciplines and read interfaces (§3.2,
+//! §4.2 "Object Representations").
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+
+use crate::annotation::exceptions::ExceptionStore;
+use crate::annotation::ramon::{Predicate, RamonObject};
+use crate::array::DenseVolume;
+use crate::chunkstore::CuboidStore;
+use crate::core::{Box3, Project, Vec3, WriteDiscipline};
+use crate::cutout::CutoutService;
+use crate::morton;
+use crate::spatialindex::SpatialIndex;
+use crate::storage::Engine;
+use crate::{Error, Result};
+
+/// Result of a spatial annotation write.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WriteOutcome {
+    /// Voxels whose label changed.
+    pub voxels_written: u64,
+    /// Voxels kept under `Preserve` or diverted to exceptions.
+    pub voxels_conflicted: u64,
+    /// Exception entries added.
+    pub exceptions_added: u64,
+    /// Cuboids read-modified-written.
+    pub cuboids_touched: u64,
+}
+
+/// Options for region queries.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RegionQuery {
+    /// Include labels that exist only in exception lists.
+    pub include_exceptions: bool,
+}
+
+/// One annotation project: spatial database + metadata + index.
+pub struct AnnotationDb {
+    pub project: Arc<Project>,
+    pub cutout: CutoutService,
+    pub index: SpatialIndex,
+    pub exceptions: ExceptionStore,
+    engine: Engine,
+    next_id: AtomicU32,
+    /// Striped per-cuboid write locks: concurrent spatial writes that
+    /// share a cuboid serialize their read-modify-write on it (the
+    /// paper's MySQL row transactions play this role). 64 stripes keyed
+    /// by Morton code.
+    write_stripes: Vec<std::sync::Mutex<()>>,
+}
+
+impl AnnotationDb {
+    pub fn new(store: Arc<CuboidStore>, engine: Engine) -> Result<Self> {
+        let project = Arc::clone(&store.project);
+        let index = SpatialIndex::new(Arc::clone(&project), Arc::clone(&engine));
+        let exceptions = ExceptionStore::new(Arc::clone(&project), Arc::clone(&engine));
+        // Resume id allocation above any persisted object.
+        let max_id = engine
+            .keys(&project.ramon_table())?
+            .into_iter()
+            .max()
+            .unwrap_or(0) as u32;
+        Ok(AnnotationDb {
+            project,
+            cutout: CutoutService::new(store),
+            index,
+            exceptions,
+            engine,
+            next_id: AtomicU32::new(max_id + 1),
+            write_stripes: (0..64).map(|_| std::sync::Mutex::new(())).collect(),
+        })
+    }
+
+    fn stripe(&self, code: u64) -> &std::sync::Mutex<()> {
+        &self.write_stripes[(code % 64) as usize]
+    }
+
+    // ------------------------------------------------------------------
+    // RAMON metadata
+    // ------------------------------------------------------------------
+
+    /// Store an object; id 0 means "server assigns a unique identifier"
+    /// (§4.2 write semantics). Returns the id.
+    pub fn put_object(&self, mut obj: RamonObject) -> Result<u32> {
+        if obj.id == 0 {
+            obj.id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        } else {
+            // Keep the allocator ahead of explicit ids.
+            self.next_id.fetch_max(obj.id + 1, Ordering::Relaxed);
+        }
+        self.engine.put(&self.project.ramon_table(), obj.id as u64, &obj.encode())?;
+        Ok(obj.id)
+    }
+
+    /// Batch object write: one storage transaction — the batch interface
+    /// that doubled synapse-finder throughput (§4.2 "Batch Interfaces").
+    pub fn put_objects(&self, objs: Vec<RamonObject>) -> Result<Vec<u32>> {
+        let mut ids = Vec::with_capacity(objs.len());
+        let mut batch = Vec::with_capacity(objs.len());
+        for mut obj in objs {
+            if obj.id == 0 {
+                obj.id = self.next_id.fetch_add(1, Ordering::Relaxed);
+            } else {
+                self.next_id.fetch_max(obj.id + 1, Ordering::Relaxed);
+            }
+            ids.push(obj.id);
+            batch.push((obj.id as u64, obj.encode()));
+        }
+        self.engine.put_batch(&self.project.ramon_table(), &batch)?;
+        Ok(ids)
+    }
+
+    pub fn get_object(&self, id: u32) -> Result<RamonObject> {
+        match self.engine.get(&self.project.ramon_table(), id as u64)? {
+            Some(v) => RamonObject::decode(&v),
+            None => Err(Error::NotFound(format!("annotation {id}"))),
+        }
+    }
+
+    /// Batch read (Table 1 `/{id1},{id2},.../`).
+    pub fn get_objects(&self, ids: &[u32]) -> Result<Vec<Option<RamonObject>>> {
+        let keys: Vec<u64> = ids.iter().map(|&i| i as u64).collect();
+        self.engine
+            .get_batch(&self.project.ramon_table(), &keys)?
+            .into_iter()
+            .map(|v| v.map(|v| RamonObject::decode(&v)).transpose())
+            .collect()
+    }
+
+    /// Predicate query over metadata (§4.2 "Querying Metadata"): returns
+    /// matching ids, ascending.
+    pub fn query(&self, predicates: &[Predicate]) -> Result<Vec<u32>> {
+        let table = self.project.ramon_table();
+        let mut out = Vec::new();
+        for key in self.engine.keys(&table)? {
+            if let Some(v) = self.engine.get(&table, key)? {
+                let obj = RamonObject::decode(&v)?;
+                if predicates.iter().all(|p| p.matches(&obj)) {
+                    out.push(obj.id);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Delete an object's metadata, spatial voxels, exceptions and index
+    /// entries.
+    pub fn delete_object(&self, res: u32, id: u32) -> Result<()> {
+        let codes = self.index.cuboids_of(res, id)?;
+        let store = self.cutout.store();
+        for &code in &codes {
+            let _txn = self.stripe(code).lock().unwrap();
+            if let Some(mut cub) = store.read_cuboid::<u32>(res, 0, code)? {
+                let mut changed = false;
+                for v in cub.as_mut_slice() {
+                    if *v == id {
+                        *v = 0;
+                        changed = true;
+                    }
+                }
+                if changed {
+                    store.write_cuboid(res, 0, code, &cub)?;
+                }
+            }
+            if self.project.exceptions {
+                let mut exc = self.exceptions.get(res, code)?;
+                if !exc.is_empty() {
+                    exc.remove_label(id);
+                    self.exceptions.put(res, code, &exc)?;
+                }
+            }
+        }
+        self.index.delete(res, id)?;
+        self.engine.delete(&self.project.ramon_table(), id as u64)?;
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Spatial writes
+    // ------------------------------------------------------------------
+
+    /// Write a labeled volume at `bx` with the given discipline — the
+    /// paper's six-step read-modify-write path (§5). Labels are RAMON
+    /// ids; 0 voxels are untouched.
+    pub fn write_volume(
+        &self,
+        res: u32,
+        bx: Box3,
+        vol: &DenseVolume<u32>,
+        discipline: WriteDiscipline,
+    ) -> Result<WriteOutcome> {
+        if vol.dims() != bx.extent() {
+            return Err(Error::BadRequest("volume dims != box extent".into()));
+        }
+        if discipline == WriteDiscipline::Exception && !self.project.exceptions {
+            return Err(Error::BadRequest(format!(
+                "project '{}' does not support exceptions",
+                self.project.token
+            )));
+        }
+        let store = self.cutout.store();
+        store.dataset.check_box(res, &bx)?;
+        let cshape = store.cuboid_shape(res)?;
+        let cover = bx.cuboid_cover(cshape);
+
+        let mut outcome = WriteOutcome::default();
+        let mut index_updates: HashMap<u32, Vec<u64>> = HashMap::new();
+
+        for cz in cover.lo[2]..cover.hi[2] {
+            for cy in cover.lo[1]..cover.hi[1] {
+                for cx in cover.lo[0]..cover.hi[0] {
+                    let code = morton::encode3(cx, cy, cz);
+                    let cub_box =
+                        Box3::at([cx * cshape[0], cy * cshape[1], cz * cshape[2]], cshape);
+                    let isect = cub_box.intersect(&bx);
+                    if isect.is_empty() {
+                        continue;
+                    }
+                    // Per-cuboid transaction: the read-modify-write below
+                    // must be atomic w.r.t. concurrent writers sharing
+                    // this cuboid.
+                    let _txn = self.stripe(code).lock().unwrap();
+                    // (1) read previous annotations
+                    let mut cub = store
+                        .read_cuboid::<u32>(res, 0, code)?
+                        .unwrap_or_else(|| DenseVolume::zeros(cshape));
+                    let mut exc = if self.project.exceptions {
+                        Some(self.exceptions.get(res, code)?)
+                    } else {
+                        None
+                    };
+                    let mut cub_changed = false;
+                    let mut exc_changed = false;
+                    // (2) apply new labels, resolving conflicts per voxel
+                    for z in isect.lo[2]..isect.hi[2] {
+                        for y in isect.lo[1]..isect.hi[1] {
+                            for x in isect.lo[0]..isect.hi[0] {
+                                let src =
+                                    [x - bx.lo[0], y - bx.lo[1], z - bx.lo[2]];
+                                let new = vol.get(src);
+                                if new == 0 {
+                                    continue;
+                                }
+                                let local =
+                                    [x - cub_box.lo[0], y - cub_box.lo[1], z - cub_box.lo[2]];
+                                let old = cub.get(local);
+                                if old == 0 {
+                                    cub.set(local, new);
+                                    cub_changed = true;
+                                    outcome.voxels_written += 1;
+                                    index_updates.entry(new).or_default().push(code);
+                                } else if old == new {
+                                    index_updates.entry(new).or_default().push(code);
+                                } else {
+                                    match discipline {
+                                        WriteDiscipline::Overwrite => {
+                                            cub.set(local, new);
+                                            cub_changed = true;
+                                            outcome.voxels_written += 1;
+                                            index_updates.entry(new).or_default().push(code);
+                                        }
+                                        WriteDiscipline::Preserve => {
+                                            outcome.voxels_conflicted += 1;
+                                        }
+                                        WriteDiscipline::Exception => {
+                                            let off = cub.index(local) as u32;
+                                            exc.as_mut().unwrap().add(off, new);
+                                            exc_changed = true;
+                                            outcome.voxels_conflicted += 1;
+                                            outcome.exceptions_added += 1;
+                                            index_updates.entry(new).or_default().push(code);
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    // (3) write back while the cuboid transaction holds
+                    if cub_changed {
+                        store.write_cuboid(res, 0, code, &cub)?;
+                        outcome.cuboids_touched += 1;
+                    }
+                    if exc_changed {
+                        self.exceptions.put(res, code, exc.as_ref().unwrap())?;
+                    }
+                }
+            }
+        }
+        // (4)(5)(6) read, union and write back the spatial index
+        for codes in index_updates.values_mut() {
+            codes.sort_unstable();
+            codes.dedup();
+        }
+        self.index.append_batch(res, &index_updates)?;
+        Ok(outcome)
+    }
+
+    /// Write one object's voxels from a sparse voxel list (the voxel-list
+    /// upload interface).
+    pub fn write_voxels(
+        &self,
+        res: u32,
+        id: u32,
+        voxels: &[Vec3],
+        discipline: WriteDiscipline,
+    ) -> Result<WriteOutcome> {
+        if voxels.is_empty() {
+            return Ok(WriteOutcome::default());
+        }
+        // Bounding box of the voxel list, then one dense write within it.
+        let mut lo = voxels[0];
+        let mut hi = voxels[0];
+        for v in voxels {
+            for a in 0..3 {
+                lo[a] = lo[a].min(v[a]);
+                hi[a] = hi[a].max(v[a]);
+            }
+        }
+        let bx = Box3::new(lo, [hi[0] + 1, hi[1] + 1, hi[2] + 1]);
+        let mut vol = DenseVolume::<u32>::zeros(bx.extent());
+        for v in voxels {
+            vol.set([v[0] - lo[0], v[1] - lo[1], v[2] - lo[2]], id);
+        }
+        self.write_volume(res, bx, &vol, discipline)
+    }
+
+    // ------------------------------------------------------------------
+    // Spatial reads
+    // ------------------------------------------------------------------
+
+    /// Cuboid-granular bounding box from the index alone — no voxel I/O
+    /// (§4.2: the `boundingbox` data option "queries a spatial index but
+    /// does not access voxel data").
+    pub fn bounding_box(&self, res: u32, id: u32) -> Result<Option<Box3>> {
+        let codes = self.index.cuboids_of(res, id)?;
+        if codes.is_empty() {
+            return Ok(None);
+        }
+        let cshape = self.cutout.store().cuboid_shape(res)?;
+        let mut bb: Option<Box3> = None;
+        for code in codes {
+            let (x, y, z) = morton::decode3(code);
+            let cb = Box3::at([x * cshape[0], y * cshape[1], z * cshape[2]], cshape);
+            bb = Some(match bb {
+                Some(b) => b.union(&cb),
+                None => cb,
+            });
+        }
+        Ok(bb)
+    }
+
+    /// The object's voxels as global coordinates — retrieved in a single
+    /// Morton-ordered sequential pass over its cuboids (Figure 9).
+    pub fn voxel_list(&self, res: u32, id: u32) -> Result<Vec<Vec3>> {
+        let codes = self.index.cuboids_of(res, id)?; // already sorted
+        if codes.is_empty() {
+            return Ok(Vec::new());
+        }
+        let store = self.cutout.store();
+        let cshape = store.cuboid_shape(res)?;
+        let cubs = store.read_cuboids::<u32>(res, 0, &codes)?;
+        let mut out = Vec::new();
+        for (code, cub) in codes.iter().zip(cubs) {
+            let (cx, cy, cz) = morton::decode3(*code);
+            let base = [cx * cshape[0], cy * cshape[1], cz * cshape[2]];
+            if let Some(cub) = cub {
+                for z in 0..cshape[2] {
+                    for y in 0..cshape[1] {
+                        for x in 0..cshape[0] {
+                            if cub.get([x, y, z]) == id {
+                                out.push([base[0] + x, base[1] + y, base[2] + z]);
+                            }
+                        }
+                    }
+                }
+            }
+            if self.project.exceptions {
+                let exc = self.exceptions.get(res, *code)?;
+                for off in exc.offsets_of(id) {
+                    let off = off as u64;
+                    let x = off % cshape[0];
+                    let y = (off / cshape[0]) % cshape[1];
+                    let z = off / (cshape[0] * cshape[1]);
+                    out.push([base[0] + x, base[1] + y, base[2] + z]);
+                }
+            }
+        }
+        out.sort_unstable();
+        out.dedup();
+        Ok(out)
+    }
+
+    /// Dense read of one object: a cutout of its bounding box (optionally
+    /// restricted to `region`) with all other labels filtered out in
+    /// place (§4.2: "reads cuboids from disk and filters the data in
+    /// place in the read buffer").
+    pub fn dense_read(
+        &self,
+        res: u32,
+        id: u32,
+        region: Option<Box3>,
+    ) -> Result<Option<(Box3, DenseVolume<u32>)>> {
+        let Some(bb) = self.bounding_box(res, id)? else { return Ok(None) };
+        let bounds = self.cutout.store().dataset.level(res)?.bounds();
+        let mut bx = bb.intersect(&bounds);
+        if let Some(r) = region {
+            bx = bx.intersect(&r);
+        }
+        if bx.is_empty() {
+            return Ok(None);
+        }
+        let mut vol = self.cutout.read::<u32>(res, 0, 0, bx)?;
+        // Filter in place.
+        for v in vol.as_mut_slice() {
+            if *v != id {
+                *v = 0;
+            }
+        }
+        // Splice exception voxels back in.
+        if self.project.exceptions {
+            let cshape = self.cutout.store().cuboid_shape(res)?;
+            for &code in &self.index.cuboids_of(res, id)? {
+                let exc = self.exceptions.get(res, code)?;
+                let (cx, cy, cz) = morton::decode3(code);
+                let base = [cx * cshape[0], cy * cshape[1], cz * cshape[2]];
+                for off in exc.offsets_of(id) {
+                    let off = off as u64;
+                    let p = [
+                        base[0] + off % cshape[0],
+                        base[1] + (off / cshape[0]) % cshape[1],
+                        base[2] + off / (cshape[0] * cshape[1]),
+                    ];
+                    if bx.contains(p) {
+                        vol.set([p[0] - bx.lo[0], p[1] - bx.lo[1], p[2] - bx.lo[2]], id);
+                    }
+                }
+            }
+        }
+        Ok(Some((bx, vol)))
+    }
+
+    /// "What objects are in a region?" — cutout + unique labels (§4.2),
+    /// plus exception labels when requested.
+    pub fn objects_in_region(&self, res: u32, bx: Box3, q: RegionQuery) -> Result<Vec<u32>> {
+        let vol = self.cutout.read::<u32>(res, 0, 0, bx)?;
+        let mut ids = vol.unique_nonzero();
+        if q.include_exceptions && self.project.exceptions {
+            let cshape = self.cutout.store().cuboid_shape(res)?;
+            let cover = bx.cuboid_cover(cshape);
+            for cz in cover.lo[2]..cover.hi[2] {
+                for cy in cover.lo[1]..cover.hi[1] {
+                    for cx in cover.lo[0]..cover.hi[0] {
+                        let exc = self.exceptions.get(res, morton::encode3(cx, cy, cz))?;
+                        ids.extend(exc.labels());
+                    }
+                }
+            }
+            ids.sort_unstable();
+            ids.dedup();
+        }
+        Ok(ids)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::annotation::ramon::{PredicateOp, RamonType, SynapseType};
+    use crate::core::DatasetBuilder;
+    use crate::storage::MemStore;
+
+    fn db(exceptions: bool) -> AnnotationDb {
+        let ds = Arc::new(DatasetBuilder::new("t", [256, 256, 32]).levels(2).build());
+        let mut pr = Project::annotation("ann", "t");
+        if exceptions {
+            pr = pr.with_exceptions();
+        }
+        let engine: Engine = Arc::new(MemStore::new());
+        let store =
+            Arc::new(CuboidStore::new(ds, Arc::new(pr), Arc::clone(&engine)));
+        AnnotationDb::new(store, engine).unwrap()
+    }
+
+    fn blob(db: &AnnotationDb, id: u32, bx: Box3) {
+        let mut vol = DenseVolume::<u32>::zeros(bx.extent());
+        vol.fill_box(Box3::new([0, 0, 0], bx.extent()), id);
+        db.write_volume(0, bx, &vol, WriteDiscipline::Overwrite).unwrap();
+    }
+
+    #[test]
+    fn id_assignment_and_metadata_roundtrip() {
+        let db = db(false);
+        let id1 = db.put_object(RamonObject::synapse(0, 0.9, SynapseType::Excitatory)).unwrap();
+        let id2 = db.put_object(RamonObject::synapse(0, 0.5, SynapseType::Inhibitory)).unwrap();
+        assert_ne!(id1, id2);
+        assert_eq!(db.get_object(id1).unwrap().confidence, 0.9);
+        assert!(db.get_object(9999).is_err());
+        // Explicit id bumps the allocator.
+        db.put_object(RamonObject::new(500, RamonType::Seed)).unwrap();
+        let id3 = db.put_object(RamonObject::new(0, RamonType::Seed)).unwrap();
+        assert!(id3 > 500);
+    }
+
+    #[test]
+    fn batch_objects_and_batch_get() {
+        let db = db(false);
+        let objs: Vec<RamonObject> =
+            (0..10).map(|_| RamonObject::synapse(0, 0.7, SynapseType::Unknown)).collect();
+        let ids = db.put_objects(objs).unwrap();
+        assert_eq!(ids.len(), 10);
+        let got = db.get_objects(&ids).unwrap();
+        assert!(got.iter().all(|o| o.is_some()));
+        let got = db.get_objects(&[ids[0], 99999]).unwrap();
+        assert!(got[0].is_some() && got[1].is_none());
+    }
+
+    #[test]
+    fn query_predicates() {
+        let db = db(false);
+        let a = db.put_object(RamonObject::synapse(0, 0.995, SynapseType::Excitatory)).unwrap();
+        let _b = db.put_object(RamonObject::synapse(0, 0.4, SynapseType::Excitatory)).unwrap();
+        let c = db.put_object(RamonObject::segment(0, 7)).unwrap();
+        let ids = db
+            .query(&[
+                Predicate::eq("type", "synapse"),
+                Predicate::cmp("confidence", PredicateOp::Geq, 0.99),
+            ])
+            .unwrap();
+        assert_eq!(ids, vec![a]);
+        let segs = db.query(&[Predicate::eq("type", "segment")]).unwrap();
+        assert_eq!(segs, vec![c]);
+    }
+
+    #[test]
+    fn spatial_write_read_object() {
+        let db = db(false);
+        let bx = Box3::new([10, 20, 3], [40, 50, 9]);
+        blob(&db, 42, bx);
+        // Voxel list covers exactly the box.
+        let vl = db.voxel_list(0, 42).unwrap();
+        assert_eq!(vl.len() as u64, bx.volume());
+        assert!(vl.contains(&[10, 20, 3]));
+        assert!(vl.contains(&[39, 49, 8]));
+        // Bounding box is cuboid-granular and contains the true box.
+        let bb = db.bounding_box(0, 42).unwrap().unwrap();
+        assert!(bb.lo[0] <= 10 && bb.hi[0] >= 40);
+        // Dense read equals the blob within its box.
+        let (dbx, dvol) = db.dense_read(0, 42, None).unwrap().unwrap();
+        assert_eq!(dvol.count_eq(42), bx.volume());
+        assert!(dbx.volume() >= bx.volume());
+        // Restricted dense read.
+        let r = Box3::new([10, 20, 3], [20, 30, 5]);
+        let (_, rvol) = db.dense_read(0, 42, Some(r)).unwrap().unwrap();
+        assert_eq!(rvol.count_eq(42), r.volume());
+    }
+
+    #[test]
+    fn disciplines_overwrite_preserve() {
+        let db = db(false);
+        let bx = Box3::new([0, 0, 0], [16, 16, 4]);
+        blob(&db, 1, bx);
+        let mut v2 = DenseVolume::<u32>::zeros(bx.extent());
+        v2.fill_box(Box3::new([0, 0, 0], [8, 16, 4]), 2);
+        // Preserve: voxels stay 1.
+        let o = db.write_volume(0, bx, &v2, WriteDiscipline::Preserve).unwrap();
+        assert_eq!(o.voxels_written, 0);
+        assert_eq!(o.voxels_conflicted, 8 * 16 * 4);
+        assert!(db.voxel_list(0, 2).unwrap().is_empty());
+        // Overwrite: voxels become 2.
+        let o = db.write_volume(0, bx, &v2, WriteDiscipline::Overwrite).unwrap();
+        assert_eq!(o.voxels_written, 8 * 16 * 4);
+        assert_eq!(db.voxel_list(0, 2).unwrap().len() as u64, 8 * 16 * 4);
+    }
+
+    #[test]
+    fn discipline_exception_records_both_labels() {
+        let db = db(true);
+        let bx = Box3::new([0, 0, 0], [8, 8, 2]);
+        blob(&db, 1, bx);
+        let mut v2 = DenseVolume::<u32>::zeros(bx.extent());
+        v2.fill_box(Box3::new([0, 0, 0], [4, 8, 2]), 2);
+        let o = db.write_volume(0, bx, &v2, WriteDiscipline::Exception).unwrap();
+        assert_eq!(o.exceptions_added, 4 * 8 * 2);
+        // Volume still shows 1; object 2 readable via exceptions.
+        let vl1 = db.voxel_list(0, 1).unwrap();
+        assert_eq!(vl1.len() as u64, bx.volume());
+        let vl2 = db.voxel_list(0, 2).unwrap();
+        assert_eq!(vl2.len() as u64, 4 * 8 * 2);
+        // Dense read of 2 splices exceptions back in.
+        let (_, dv) = db.dense_read(0, 2, None).unwrap().unwrap();
+        assert_eq!(dv.count_eq(2), 4 * 8 * 2);
+        // Region query sees both.
+        let ids = db
+            .objects_in_region(0, bx, RegionQuery { include_exceptions: true })
+            .unwrap();
+        assert_eq!(ids, vec![1, 2]);
+        // Without exceptions only the volume label shows.
+        let ids = db.objects_in_region(0, bx, RegionQuery::default()).unwrap();
+        assert_eq!(ids, vec![1]);
+    }
+
+    #[test]
+    fn exception_write_without_support_rejected() {
+        let db = db(false);
+        let bx = Box3::new([0, 0, 0], [4, 4, 1]);
+        let vol = DenseVolume::<u32>::zeros(bx.extent());
+        assert!(db.write_volume(0, bx, &vol, WriteDiscipline::Exception).is_err());
+    }
+
+    #[test]
+    fn write_voxels_sparse() {
+        let db = db(false);
+        let voxels: Vec<Vec3> = vec![[5, 5, 1], [100, 7, 2], [5, 6, 1]];
+        let o = db.write_voxels(0, 9, &voxels, WriteDiscipline::Overwrite).unwrap();
+        assert_eq!(o.voxels_written, 3);
+        let mut vl = db.voxel_list(0, 9).unwrap();
+        vl.sort_unstable();
+        let mut expect = voxels.clone();
+        expect.sort_unstable();
+        assert_eq!(vl, expect);
+    }
+
+    #[test]
+    fn objects_in_region_unique() {
+        let db = db(false);
+        blob(&db, 1, Box3::new([0, 0, 0], [8, 8, 2]));
+        blob(&db, 2, Box3::new([100, 100, 10], [108, 108, 12]));
+        let ids = db
+            .objects_in_region(0, Box3::new([0, 0, 0], [256, 256, 32]), RegionQuery::default())
+            .unwrap();
+        assert_eq!(ids, vec![1, 2]);
+        let ids = db
+            .objects_in_region(0, Box3::new([0, 0, 0], [16, 16, 4]), RegionQuery::default())
+            .unwrap();
+        assert_eq!(ids, vec![1]);
+    }
+
+    #[test]
+    fn delete_object_removes_everything() {
+        let db = db(true);
+        let bx = Box3::new([0, 0, 0], [8, 8, 2]);
+        blob(&db, 5, bx);
+        db.put_object(RamonObject::new(5, RamonType::Synapse)).unwrap();
+        db.delete_object(0, 5).unwrap();
+        assert!(db.voxel_list(0, 5).unwrap().is_empty());
+        assert!(db.bounding_box(0, 5).unwrap().is_none());
+        assert!(db.get_object(5).is_err());
+        let ids = db.objects_in_region(0, bx, RegionQuery::default()).unwrap();
+        assert!(ids.is_empty());
+    }
+
+    #[test]
+    fn missing_object_dense_read_none() {
+        let db = db(false);
+        assert!(db.dense_read(0, 777, None).unwrap().is_none());
+        assert!(db.voxel_list(0, 777).unwrap().is_empty());
+    }
+}

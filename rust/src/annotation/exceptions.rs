@@ -1,0 +1,172 @@
+//! Per-cuboid exception lists: multiple annotations per voxel (§3.2).
+//!
+//! A voxel in the spatial database carries one label; when a write with
+//! the `Exception` discipline collides with an existing label, the new
+//! label is recorded in the cuboid's exception list instead. Exceptions
+//! are activated per project and — as the paper notes — "incur a minor
+//! runtime cost to check for exceptions on every read, even if no
+//! exceptions are defined"; the ablation bench measures exactly that.
+
+use std::collections::BTreeMap;
+
+use crate::core::Project;
+use crate::storage::Engine;
+use crate::util::codec::{Dec, Enc};
+use crate::Result;
+
+/// Exceptions for one cuboid: voxel linear offset → extra labels.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CuboidExceptions {
+    pub by_voxel: BTreeMap<u32, Vec<u32>>,
+}
+
+impl CuboidExceptions {
+    pub fn is_empty(&self) -> bool {
+        self.by_voxel.is_empty()
+    }
+
+    /// Add `label` at `offset` (deduplicated).
+    pub fn add(&mut self, offset: u32, label: u32) {
+        let labels = self.by_voxel.entry(offset).or_default();
+        if !labels.contains(&label) {
+            labels.push(label);
+        }
+    }
+
+    /// Remove every occurrence of `label`.
+    pub fn remove_label(&mut self, label: u32) {
+        self.by_voxel.retain(|_, ls| {
+            ls.retain(|&l| l != label);
+            !ls.is_empty()
+        });
+    }
+
+    /// All distinct labels present in the list.
+    pub fn labels(&self) -> Vec<u32> {
+        let mut ls: Vec<u32> =
+            self.by_voxel.values().flat_map(|v| v.iter().copied()).collect();
+        ls.sort_unstable();
+        ls.dedup();
+        ls
+    }
+
+    /// Voxel offsets carrying `label`.
+    pub fn offsets_of(&self, label: u32) -> Vec<u32> {
+        self.by_voxel
+            .iter()
+            .filter(|(_, ls)| ls.contains(&label))
+            .map(|(o, _)| *o)
+            .collect()
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        e.varint(self.by_voxel.len() as u64);
+        for (off, labels) in &self.by_voxel {
+            e.u32(*off).u32s(labels);
+        }
+        e.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        let mut d = Dec::new(buf);
+        let n = d.varint()? as usize;
+        let mut by_voxel = BTreeMap::new();
+        for _ in 0..n {
+            let off = d.u32()?;
+            by_voxel.insert(off, d.u32s()?);
+        }
+        Ok(CuboidExceptions { by_voxel })
+    }
+}
+
+/// Storage for exception lists, keyed by cuboid Morton code.
+pub struct ExceptionStore {
+    engine: Engine,
+    project: std::sync::Arc<Project>,
+}
+
+impl ExceptionStore {
+    pub fn new(project: std::sync::Arc<Project>, engine: Engine) -> Self {
+        ExceptionStore { engine, project }
+    }
+
+    /// Load exceptions for one cuboid (empty if none stored).
+    pub fn get(&self, res: u32, code: u64) -> Result<CuboidExceptions> {
+        match self.engine.get(&self.project.exceptions_table(res), code)? {
+            Some(v) => CuboidExceptions::decode(&v),
+            None => Ok(CuboidExceptions::default()),
+        }
+    }
+
+    /// Store exceptions for one cuboid; empty lists are deleted (lazy).
+    pub fn put(&self, res: u32, code: u64, exc: &CuboidExceptions) -> Result<()> {
+        let table = self.project.exceptions_table(res);
+        if exc.is_empty() {
+            self.engine.delete(&table, code)
+        } else {
+            self.engine.put(&table, code, &exc.encode())
+        }
+    }
+
+    /// Cuboids with any exceptions at `res`.
+    pub fn codes(&self, res: u32) -> Result<Vec<u64>> {
+        self.engine.keys(&self.project.exceptions_table(res))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::MemStore;
+    use std::sync::Arc;
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let mut e = CuboidExceptions::default();
+        e.add(5, 100);
+        e.add(5, 200);
+        e.add(9, 100);
+        let b = e.encode();
+        assert_eq!(CuboidExceptions::decode(&b).unwrap(), e);
+    }
+
+    #[test]
+    fn add_dedups_and_remove_cleans() {
+        let mut e = CuboidExceptions::default();
+        e.add(1, 7);
+        e.add(1, 7);
+        assert_eq!(e.by_voxel[&1], vec![7]);
+        e.add(1, 8);
+        e.remove_label(7);
+        assert_eq!(e.by_voxel[&1], vec![8]);
+        e.remove_label(8);
+        assert!(e.is_empty());
+    }
+
+    #[test]
+    fn labels_and_offsets() {
+        let mut e = CuboidExceptions::default();
+        e.add(10, 3);
+        e.add(20, 3);
+        e.add(20, 4);
+        assert_eq!(e.labels(), vec![3, 4]);
+        assert_eq!(e.offsets_of(3), vec![10, 20]);
+        assert_eq!(e.offsets_of(4), vec![20]);
+        assert!(e.offsets_of(9).is_empty());
+    }
+
+    #[test]
+    fn store_roundtrip_and_lazy_delete() {
+        let p = Arc::new(Project::annotation("ann", "ds").with_exceptions());
+        let s = ExceptionStore::new(p, Arc::new(MemStore::new()));
+        assert!(s.get(0, 42).unwrap().is_empty());
+        let mut e = CuboidExceptions::default();
+        e.add(3, 9);
+        s.put(0, 42, &e).unwrap();
+        assert_eq!(s.get(0, 42).unwrap(), e);
+        assert_eq!(s.codes(0).unwrap(), vec![42]);
+        s.put(0, 42, &CuboidExceptions::default()).unwrap();
+        assert!(s.codes(0).unwrap().is_empty());
+    }
+}

@@ -1,0 +1,20 @@
+//! Annotation databases: RAMON object metadata, the spatial annotation
+//! volume with write disciplines and per-voxel exceptions, and predicate
+//! queries over metadata (paper §3.2 and §4.2).
+//!
+//! An *annotation* is an object identifier linked to RAMON metadata plus
+//! the set of voxels labeled with that identifier in the spatial database.
+//! Writes follow the paper's read-modify-write path: (1) read previous
+//! cuboids, (2) apply labels resolving per-voxel conflicts by discipline,
+//! (3) write back, (4) read spatial-index entries, (5) union in new cuboid
+//! locations, (6) write back the index (§5's six-step description).
+
+mod db;
+mod exceptions;
+mod ramon;
+
+pub use db::{AnnotationDb, RegionQuery, WriteOutcome};
+pub use exceptions::ExceptionStore;
+pub use ramon::{
+    Predicate, PredicateOp, RamonObject, RamonStatus, RamonType, SynapseType,
+};

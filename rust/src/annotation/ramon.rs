@@ -1,0 +1,479 @@
+//! RAMON (Reusable Annotation Markup for Open coNnectomes) — the
+//! neuroscience ontology the paper links spatial annotations to ([19],
+//! §3.2): synapses, seeds, segments, neurons, organelles, each with common
+//! metadata (confidence, status, author, free key/value pairs) and
+//! type-specific fields.
+
+use std::collections::BTreeMap;
+
+use crate::util::codec::{Dec, Enc};
+use crate::{Error, Result};
+
+/// RAMON object classes (§3.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RamonType {
+    Generic,
+    Seed,
+    Synapse,
+    Segment,
+    Neuron,
+    Organelle,
+}
+
+impl RamonType {
+    pub fn name(self) -> &'static str {
+        match self {
+            RamonType::Generic => "generic",
+            RamonType::Seed => "seed",
+            RamonType::Synapse => "synapse",
+            RamonType::Segment => "segment",
+            RamonType::Neuron => "neuron",
+            RamonType::Organelle => "organelle",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<RamonType> {
+        Ok(match s {
+            "generic" => RamonType::Generic,
+            "seed" => RamonType::Seed,
+            "synapse" => RamonType::Synapse,
+            "segment" => RamonType::Segment,
+            "neuron" => RamonType::Neuron,
+            "organelle" => RamonType::Organelle,
+            _ => return Err(Error::BadRequest(format!("unknown RAMON type '{s}'"))),
+        })
+    }
+
+    fn tag(self) -> u8 {
+        match self {
+            RamonType::Generic => 0,
+            RamonType::Seed => 1,
+            RamonType::Synapse => 2,
+            RamonType::Segment => 3,
+            RamonType::Neuron => 4,
+            RamonType::Organelle => 5,
+        }
+    }
+
+    fn from_tag(t: u8) -> Result<Self> {
+        Ok(match t {
+            0 => RamonType::Generic,
+            1 => RamonType::Seed,
+            2 => RamonType::Synapse,
+            3 => RamonType::Segment,
+            4 => RamonType::Neuron,
+            5 => RamonType::Organelle,
+            _ => return Err(Error::Codec(format!("bad RAMON tag {t}"))),
+        })
+    }
+}
+
+/// Processing status of an annotation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum RamonStatus {
+    #[default]
+    Unprocessed,
+    Locked,
+    Processed,
+    Ignored,
+}
+
+impl RamonStatus {
+    pub fn name(self) -> &'static str {
+        match self {
+            RamonStatus::Unprocessed => "unprocessed",
+            RamonStatus::Locked => "locked",
+            RamonStatus::Processed => "processed",
+            RamonStatus::Ignored => "ignored",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "unprocessed" => RamonStatus::Unprocessed,
+            "locked" => RamonStatus::Locked,
+            "processed" => RamonStatus::Processed,
+            "ignored" => RamonStatus::Ignored,
+            _ => return Err(Error::BadRequest(format!("unknown status '{s}'"))),
+        })
+    }
+
+    fn tag(self) -> u8 {
+        self as u8
+    }
+
+    fn from_tag(t: u8) -> Result<Self> {
+        Ok(match t {
+            0 => RamonStatus::Unprocessed,
+            1 => RamonStatus::Locked,
+            2 => RamonStatus::Processed,
+            3 => RamonStatus::Ignored,
+            _ => return Err(Error::Codec(format!("bad status tag {t}"))),
+        })
+    }
+}
+
+/// Synapse polarity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum SynapseType {
+    #[default]
+    Unknown,
+    Excitatory,
+    Inhibitory,
+}
+
+impl SynapseType {
+    pub fn name(self) -> &'static str {
+        match self {
+            SynapseType::Unknown => "unknown",
+            SynapseType::Excitatory => "excitatory",
+            SynapseType::Inhibitory => "inhibitory",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "unknown" => SynapseType::Unknown,
+            "excitatory" => SynapseType::Excitatory,
+            "inhibitory" => SynapseType::Inhibitory,
+            _ => return Err(Error::BadRequest(format!("unknown synapse type '{s}'"))),
+        })
+    }
+}
+
+/// A RAMON annotation object: common metadata plus type-specific fields.
+/// Unused type-specific fields stay at their defaults.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RamonObject {
+    pub id: u32,
+    pub rtype: RamonType,
+    pub confidence: f32,
+    pub status: RamonStatus,
+    pub author: String,
+    /// Free-form key/value pairs (queryable with equality predicates).
+    pub kv: BTreeMap<String, String>,
+
+    // -- synapse fields --
+    pub synapse_type: SynapseType,
+    pub weight: f32,
+    /// Segments this synapse connects (presynaptic, postsynaptic).
+    pub segments: Vec<(u32, u32)>,
+    /// Seeds used to detect this object.
+    pub seeds: Vec<u32>,
+
+    // -- seed fields --
+    pub position: [u64; 3],
+    pub parent: u32,
+
+    // -- segment fields --
+    pub neuron: u32,
+    pub synapses: Vec<u32>,
+    pub organelles: Vec<u32>,
+
+    // -- neuron fields --
+    pub neuron_segments: Vec<u32>,
+
+    // -- organelle fields --
+    pub organelle_class: u32,
+}
+
+impl RamonObject {
+    /// A bare object of the given type (id 0 = "assign me one").
+    pub fn new(id: u32, rtype: RamonType) -> Self {
+        RamonObject {
+            id,
+            rtype,
+            confidence: 0.0,
+            status: RamonStatus::Unprocessed,
+            author: String::new(),
+            kv: BTreeMap::new(),
+            synapse_type: SynapseType::Unknown,
+            weight: 0.0,
+            segments: Vec::new(),
+            seeds: Vec::new(),
+            position: [0, 0, 0],
+            parent: 0,
+            neuron: 0,
+            synapses: Vec::new(),
+            organelles: Vec::new(),
+            neuron_segments: Vec::new(),
+            organelle_class: 0,
+        }
+    }
+
+    pub fn synapse(id: u32, confidence: f32, stype: SynapseType) -> Self {
+        let mut o = RamonObject::new(id, RamonType::Synapse);
+        o.confidence = confidence;
+        o.synapse_type = stype;
+        o
+    }
+
+    pub fn segment(id: u32, neuron: u32) -> Self {
+        let mut o = RamonObject::new(id, RamonType::Segment);
+        o.neuron = neuron;
+        o
+    }
+
+    pub fn neuron(id: u32) -> Self {
+        RamonObject::new(id, RamonType::Neuron)
+    }
+
+    pub fn seed(id: u32, position: [u64; 3]) -> Self {
+        let mut o = RamonObject::new(id, RamonType::Seed);
+        o.position = position;
+        o
+    }
+
+    pub fn with_author(mut self, a: &str) -> Self {
+        self.author = a.into();
+        self
+    }
+
+    pub fn with_kv(mut self, k: &str, v: &str) -> Self {
+        self.kv.insert(k.into(), v.into());
+        self
+    }
+
+    /// Serialize (versioned record).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::with_capacity(96);
+        e.u8(1); // record version
+        e.u32(self.id)
+            .u8(self.rtype.tag())
+            .f32(self.confidence)
+            .u8(self.status.tag())
+            .str(&self.author);
+        e.varint(self.kv.len() as u64);
+        for (k, v) in &self.kv {
+            e.str(k).str(v);
+        }
+        e.u8(self.synapse_type as u8).f32(self.weight);
+        e.varint(self.segments.len() as u64);
+        for (a, b) in &self.segments {
+            e.u32(*a).u32(*b);
+        }
+        e.u32s(&self.seeds);
+        e.u64(self.position[0]).u64(self.position[1]).u64(self.position[2]);
+        e.u32(self.parent).u32(self.neuron);
+        e.u32s(&self.synapses);
+        e.u32s(&self.organelles);
+        e.u32s(&self.neuron_segments);
+        e.u32(self.organelle_class);
+        e.finish()
+    }
+
+    /// Deserialize.
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        let mut d = Dec::new(buf);
+        let ver = d.u8()?;
+        if ver != 1 {
+            return Err(Error::Codec(format!("bad RAMON record version {ver}")));
+        }
+        let id = d.u32()?;
+        let rtype = RamonType::from_tag(d.u8()?)?;
+        let confidence = d.f32()?;
+        let status = RamonStatus::from_tag(d.u8()?)?;
+        let author = d.str()?;
+        let nkv = d.varint()? as usize;
+        let mut kv = BTreeMap::new();
+        for _ in 0..nkv {
+            let k = d.str()?;
+            let v = d.str()?;
+            kv.insert(k, v);
+        }
+        let synapse_type = match d.u8()? {
+            0 => SynapseType::Unknown,
+            1 => SynapseType::Excitatory,
+            2 => SynapseType::Inhibitory,
+            t => return Err(Error::Codec(format!("bad synapse type {t}"))),
+        };
+        let weight = d.f32()?;
+        let nseg = d.varint()? as usize;
+        let mut segments = Vec::with_capacity(nseg);
+        for _ in 0..nseg {
+            segments.push((d.u32()?, d.u32()?));
+        }
+        let seeds = d.u32s()?;
+        let position = [d.u64()?, d.u64()?, d.u64()?];
+        let parent = d.u32()?;
+        let neuron = d.u32()?;
+        let synapses = d.u32s()?;
+        let organelles = d.u32s()?;
+        let neuron_segments = d.u32s()?;
+        let organelle_class = d.u32()?;
+        Ok(RamonObject {
+            id,
+            rtype,
+            confidence,
+            status,
+            author,
+            kv,
+            synapse_type,
+            weight,
+            segments,
+            seeds,
+            position,
+            parent,
+            neuron,
+            synapses,
+            organelles,
+            neuron_segments,
+            organelle_class,
+        })
+    }
+
+    /// Value of a named field for predicate evaluation. String-valued
+    /// fields return `Err(string)`, numeric fields `Ok(f64)`.
+    fn field(&self, name: &str) -> Option<std::result::Result<f64, String>> {
+        match name {
+            "id" => Some(Ok(self.id as f64)),
+            "type" => Some(Err(self.rtype.name().to_string())),
+            "confidence" => Some(Ok(self.confidence as f64)),
+            "status" => Some(Err(self.status.name().to_string())),
+            "author" => Some(Err(self.author.clone())),
+            "weight" => Some(Ok(self.weight as f64)),
+            "synapse_type" => Some(Err(self.synapse_type.name().to_string())),
+            "neuron" => Some(Ok(self.neuron as f64)),
+            "parent" => Some(Ok(self.parent as f64)),
+            "organelle_class" => Some(Ok(self.organelle_class as f64)),
+            _ => self.kv.get(name).map(|v| Err(v.clone())),
+        }
+    }
+}
+
+/// Comparison operator in a metadata predicate (§4.2 "Querying Metadata":
+/// equality on integers/enums/strings/KV pairs, ranges on floats).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PredicateOp {
+    Eq,
+    Geq,
+    Leq,
+    Gt,
+    Lt,
+}
+
+impl PredicateOp {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "eq" => PredicateOp::Eq,
+            "geq" => PredicateOp::Geq,
+            "leq" => PredicateOp::Leq,
+            "gt" => PredicateOp::Gt,
+            "lt" => PredicateOp::Lt,
+            _ => return Err(Error::BadRequest(format!("unknown predicate op '{s}'"))),
+        })
+    }
+}
+
+/// One metadata predicate: `field op value`.
+#[derive(Clone, Debug)]
+pub struct Predicate {
+    pub field: String,
+    pub op: PredicateOp,
+    pub value: String,
+}
+
+impl Predicate {
+    pub fn eq(field: &str, value: &str) -> Self {
+        Predicate { field: field.into(), op: PredicateOp::Eq, value: value.into() }
+    }
+
+    pub fn cmp(field: &str, op: PredicateOp, value: f64) -> Self {
+        Predicate { field: field.into(), op, value: value.to_string() }
+    }
+
+    /// Evaluate against an object. Unknown fields never match.
+    pub fn matches(&self, o: &RamonObject) -> bool {
+        let Some(v) = o.field(&self.field) else { return false };
+        match (v, self.op) {
+            (Err(s), PredicateOp::Eq) => s == self.value,
+            (Ok(x), op) => {
+                let Ok(rhs) = self.value.parse::<f64>() else { return false };
+                match op {
+                    PredicateOp::Eq => x == rhs,
+                    PredicateOp::Geq => x >= rhs,
+                    PredicateOp::Leq => x <= rhs,
+                    PredicateOp::Gt => x > rhs,
+                    PredicateOp::Lt => x < rhs,
+                }
+            }
+            (Err(_), _) => false, // range ops on string fields never match
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip_full() {
+        let mut o = RamonObject::synapse(77, 0.993, SynapseType::Excitatory)
+            .with_author("vision-v2")
+            .with_kv("algo", "dog-3d")
+            .with_kv("run", "17");
+        o.weight = 2.5;
+        o.segments = vec![(10, 11), (12, 13)];
+        o.seeds = vec![1, 2, 3];
+        let b = o.encode();
+        assert_eq!(RamonObject::decode(&b).unwrap(), o);
+    }
+
+    #[test]
+    fn encode_decode_all_types() {
+        for t in [
+            RamonType::Generic,
+            RamonType::Seed,
+            RamonType::Synapse,
+            RamonType::Segment,
+            RamonType::Neuron,
+            RamonType::Organelle,
+        ] {
+            let o = RamonObject::new(5, t);
+            assert_eq!(RamonObject::decode(&o.encode()).unwrap().rtype, t);
+            assert_eq!(RamonType::parse(t.name()).unwrap(), t);
+        }
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(RamonObject::decode(&[]).is_err());
+        assert!(RamonObject::decode(&[9, 9, 9]).is_err());
+    }
+
+    #[test]
+    fn predicates_match_paper_example() {
+        // openconnecto.me/objects/type/synapse/confidence/geq/0.99/
+        let hi = RamonObject::synapse(1, 0.995, SynapseType::Unknown);
+        let lo = RamonObject::synapse(2, 0.42, SynapseType::Unknown);
+        let seg = RamonObject::segment(3, 9);
+        let p_type = Predicate::eq("type", "synapse");
+        let p_conf = Predicate::cmp("confidence", PredicateOp::Geq, 0.99);
+        assert!(p_type.matches(&hi) && p_conf.matches(&hi));
+        assert!(p_type.matches(&lo) && !p_conf.matches(&lo));
+        assert!(!p_type.matches(&seg));
+    }
+
+    #[test]
+    fn kv_predicates() {
+        let o = RamonObject::new(1, RamonType::Generic).with_kv("stain", "PSD95");
+        assert!(Predicate::eq("stain", "PSD95").matches(&o));
+        assert!(!Predicate::eq("stain", "synapsin").matches(&o));
+        assert!(!Predicate::eq("missing", "x").matches(&o));
+    }
+
+    #[test]
+    fn numeric_predicates_on_string_fields_never_match() {
+        let o = RamonObject::new(1, RamonType::Generic).with_author("alice");
+        assert!(!Predicate::cmp("author", PredicateOp::Geq, 1.0).matches(&o));
+    }
+
+    #[test]
+    fn status_parse_roundtrip() {
+        for s in
+            [RamonStatus::Unprocessed, RamonStatus::Locked, RamonStatus::Processed, RamonStatus::Ignored]
+        {
+            assert_eq!(RamonStatus::parse(s.name()).unwrap(), s);
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Dense nd-array support: the in-memory representation of cuboids and
+//! cutouts, and the copy routines that assemble cutouts from cuboids.
+//!
+//! This is the system's memory hot path. The paper's evaluation (§5) finds
+//! that "array slicing and assembly for cutout requests keeps all
+//! processors fully utilized reorganizing data in memory" — the copy
+//! kernels here are therefore written as contiguous x-run `memcpy`s, and
+//! the perf pass (EXPERIMENTS.md §Perf) iterates on them.
+
+mod volume;
+
+pub use volume::{DenseVolume, Plane, VoxelScalar};

@@ -1,0 +1,374 @@
+//! `DenseVolume<T>`: a dense 3-d voxel array with x-fastest layout and
+//! box copy-in/copy-out kernels.
+
+use crate::core::{Box3, Vec3};
+use crate::{Error, Result};
+
+/// Scalar voxel types storable in volumes. The `as_bytes`/`from_bytes`
+/// casts are little-endian (the only platform we target) and alignment-safe
+/// because `Vec<T>` allocations are `T`-aligned.
+pub trait VoxelScalar: Copy + Default + PartialEq + Send + Sync + 'static {
+    const BYTES: usize;
+    fn to_f32(self) -> f32;
+    fn from_f32(v: f32) -> Self;
+}
+
+macro_rules! impl_scalar {
+    ($t:ty, $b:expr) => {
+        impl VoxelScalar for $t {
+            const BYTES: usize = $b;
+            #[inline]
+            fn to_f32(self) -> f32 {
+                self as f32
+            }
+            #[inline]
+            fn from_f32(v: f32) -> Self {
+                v as $t
+            }
+        }
+    };
+}
+
+impl_scalar!(u8, 1);
+impl_scalar!(u16, 2);
+impl_scalar!(u32, 4);
+impl_scalar!(u64, 8);
+impl_scalar!(f32, 4);
+
+/// Axis-aligned plane selector for lower-dimensional projections (§3.3:
+/// tiles; §4.2: cutout projections).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Plane {
+    /// XY plane at a fixed z (the imaging plane).
+    Xy(u64),
+    /// XZ plane at a fixed y.
+    Xz(u64),
+    /// YZ plane at a fixed x.
+    Yz(u64),
+}
+
+/// A dense 3-d array with dims `[x, y, z]`, x fastest:
+/// `idx = x + dims.x * (y + dims.y * z)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseVolume<T: VoxelScalar> {
+    dims: Vec3,
+    data: Vec<T>,
+}
+
+impl<T: VoxelScalar> DenseVolume<T> {
+    /// Zero-filled volume.
+    pub fn zeros(dims: Vec3) -> Self {
+        let n = (dims[0] * dims[1] * dims[2]) as usize;
+        DenseVolume { dims, data: vec![T::default(); n] }
+    }
+
+    /// Wrap existing data (must match dims).
+    pub fn from_vec(dims: Vec3, data: Vec<T>) -> Result<Self> {
+        if data.len() as u64 != dims[0] * dims[1] * dims[2] {
+            return Err(Error::BadRequest(format!(
+                "data length {} != dims {:?}",
+                data.len(),
+                dims
+            )));
+        }
+        Ok(DenseVolume { dims, data })
+    }
+
+    pub fn dims(&self) -> Vec3 {
+        self.dims
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn as_slice(&self) -> &[T] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<T> {
+        self.data
+    }
+
+    #[inline]
+    pub fn index(&self, p: Vec3) -> usize {
+        debug_assert!(p[0] < self.dims[0] && p[1] < self.dims[1] && p[2] < self.dims[2]);
+        (p[0] + self.dims[0] * (p[1] + self.dims[1] * p[2])) as usize
+    }
+
+    #[inline]
+    pub fn get(&self, p: Vec3) -> T {
+        self.data[self.index(p)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, p: Vec3, v: T) {
+        let i = self.index(p);
+        self.data[i] = v;
+    }
+
+    /// Is every voxel the default (zero) value? Lazy cuboid allocation
+    /// skips storing such cuboids (§3.2).
+    pub fn all_zero(&self) -> bool {
+        let z = T::default();
+        self.data.iter().all(|&v| v == z)
+    }
+
+    /// View as raw little-endian bytes (cuboid serialization).
+    pub fn as_bytes(&self) -> &[u8] {
+        // Safe: T is a plain scalar; allocation is T-aligned; LE target.
+        unsafe {
+            std::slice::from_raw_parts(
+                self.data.as_ptr() as *const u8,
+                self.data.len() * T::BYTES,
+            )
+        }
+    }
+
+    /// Rebuild from raw little-endian bytes.
+    pub fn from_bytes(dims: Vec3, bytes: &[u8]) -> Result<Self> {
+        let n = (dims[0] * dims[1] * dims[2]) as usize;
+        if bytes.len() != n * T::BYTES {
+            return Err(Error::Codec(format!(
+                "byte length {} != {} for dims {:?}",
+                bytes.len(),
+                n * T::BYTES,
+                dims
+            )));
+        }
+        let mut data = vec![T::default(); n];
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                bytes.as_ptr(),
+                data.as_mut_ptr() as *mut u8,
+                bytes.len(),
+            );
+        }
+        Ok(DenseVolume { dims, data })
+    }
+
+    /// Copy the sub-box `src_box` of `src` into this volume at `dst_lo`.
+    /// Inner x-runs are contiguous in both volumes, so each (y, z) line is
+    /// one `copy_from_slice` — the cutout-assembly hot kernel.
+    pub fn copy_box_from(&mut self, src: &DenseVolume<T>, src_box: Box3, dst_lo: Vec3) {
+        let e = src_box.extent();
+        debug_assert!(src_box.hi[0] <= src.dims[0] && src_box.hi[1] <= src.dims[1]);
+        debug_assert!(src_box.hi[2] <= src.dims[2]);
+        debug_assert!(dst_lo[0] + e[0] <= self.dims[0]);
+        debug_assert!(dst_lo[1] + e[1] <= self.dims[1]);
+        debug_assert!(dst_lo[2] + e[2] <= self.dims[2]);
+        let run = e[0] as usize;
+        for dz in 0..e[2] {
+            let sz = src_box.lo[2] + dz;
+            let tz = dst_lo[2] + dz;
+            for dy in 0..e[1] {
+                let si = src.index([src_box.lo[0], src_box.lo[1] + dy, sz]);
+                let ti = self.index([dst_lo[0], dst_lo[1] + dy, tz]);
+                self.data[ti..ti + run].copy_from_slice(&src.data[si..si + run]);
+            }
+        }
+    }
+
+    /// Extract the sub-box `b` as a new volume.
+    pub fn extract_box(&self, b: Box3) -> DenseVolume<T> {
+        let mut out = DenseVolume::zeros(b.extent());
+        out.copy_box_from(self, b, [0, 0, 0]);
+        out
+    }
+
+    /// Fill the sub-box `b` with `v`.
+    pub fn fill_box(&mut self, b: Box3, v: T) {
+        let run = (b.hi[0] - b.lo[0]) as usize;
+        for z in b.lo[2]..b.hi[2] {
+            for y in b.lo[1]..b.hi[1] {
+                let i = self.index([b.lo[0], y, z]);
+                self.data[i..i + run].fill(v);
+            }
+        }
+    }
+
+    /// Extract a 2-d plane as a (width, height, data) triple — the
+    /// projection primitive behind tiles and orthogonal views. Width is
+    /// the faster-varying axis of the plane.
+    pub fn extract_plane(&self, plane: Plane) -> (u64, u64, Vec<T>) {
+        match plane {
+            Plane::Xy(z) => {
+                let (w, h) = (self.dims[0], self.dims[1]);
+                let start = self.index([0, 0, z]);
+                (w, h, self.data[start..start + (w * h) as usize].to_vec())
+            }
+            Plane::Xz(y) => {
+                let (w, h) = (self.dims[0], self.dims[2]);
+                let mut out = Vec::with_capacity((w * h) as usize);
+                for z in 0..h {
+                    let i = self.index([0, y, z]);
+                    out.extend_from_slice(&self.data[i..i + w as usize]);
+                }
+                (w, h, out)
+            }
+            Plane::Yz(x) => {
+                let (w, h) = (self.dims[1], self.dims[2]);
+                let mut out = Vec::with_capacity((w * h) as usize);
+                for z in 0..h {
+                    for y in 0..w {
+                        out.push(self.get([x, y, z]));
+                    }
+                }
+                (w, h, out)
+            }
+        }
+    }
+
+    /// Count voxels equal to `v`.
+    pub fn count_eq(&self, v: T) -> u64 {
+        self.data.iter().filter(|&&x| x == v).count() as u64
+    }
+
+    /// Map every voxel (used by false-coloring and filtering — the
+    /// operations the paper accelerates with parallel Cython, §4.2).
+    pub fn map_in_place(&mut self, f: impl Fn(T) -> T + Sync) {
+        for v in &mut self.data {
+            *v = f(*v);
+        }
+    }
+
+    /// The set of distinct non-zero values in the box (the "what objects
+    /// are in a region?" primitive, §4.2 — numpy-unique equivalent).
+    pub fn unique_nonzero(&self) -> Vec<T>
+    where
+        T: Ord,
+    {
+        let mut vs: Vec<T> = self.data.iter().copied().filter(|&v| v != T::default()).collect();
+        vs.sort_unstable();
+        vs.dedup();
+        vs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::property;
+    use crate::util::Rng;
+
+    fn random_vol(rng: &mut Rng, dims: Vec3) -> DenseVolume<u32> {
+        let n = (dims[0] * dims[1] * dims[2]) as usize;
+        DenseVolume::from_vec(dims, (0..n).map(|_| rng.next_u32()).collect()).unwrap()
+    }
+
+    #[test]
+    fn index_layout_x_fastest() {
+        let v = DenseVolume::<u8>::zeros([4, 3, 2]);
+        assert_eq!(v.index([0, 0, 0]), 0);
+        assert_eq!(v.index([1, 0, 0]), 1);
+        assert_eq!(v.index([0, 1, 0]), 4);
+        assert_eq!(v.index([0, 0, 1]), 12);
+        assert_eq!(v.index([3, 2, 1]), 23);
+    }
+
+    #[test]
+    fn from_vec_validates() {
+        assert!(DenseVolume::<u8>::from_vec([2, 2, 2], vec![0; 7]).is_err());
+        assert!(DenseVolume::<u8>::from_vec([2, 2, 2], vec![0; 8]).is_ok());
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let mut rng = Rng::new(1);
+        let v = random_vol(&mut rng, [8, 4, 2]);
+        let b = v.as_bytes().to_vec();
+        assert_eq!(b.len(), 8 * 4 * 2 * 4);
+        let w = DenseVolume::<u32>::from_bytes([8, 4, 2], &b).unwrap();
+        assert_eq!(v, w);
+        assert!(DenseVolume::<u32>::from_bytes([8, 4, 2], &b[1..]).is_err());
+    }
+
+    #[test]
+    fn extract_then_fill_roundtrip_prop() {
+        property("extract_box_matches_get", 200, |g| {
+            let dims = [16 + g.u64_below(17), 16 + g.u64_below(17), 4 + g.u64_below(5)];
+            let mut rng = Rng::new(g.seed);
+            let vol = random_vol(&mut rng, dims);
+            let (lo, hi) = g.boxed(dims, 12);
+            let sub = vol.extract_box(Box3::new(lo, hi));
+            for z in 0..sub.dims()[2] {
+                for y in 0..sub.dims()[1] {
+                    for x in 0..sub.dims()[0] {
+                        assert_eq!(
+                            sub.get([x, y, z]),
+                            vol.get([lo[0] + x, lo[1] + y, lo[2] + z])
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn copy_box_roundtrip_prop() {
+        // copy out + copy back = identity on the box.
+        property("copy_box_roundtrip", 200, |g| {
+            let dims = [24, 24, 8];
+            let mut rng = Rng::new(g.seed ^ 0xabc);
+            let vol = random_vol(&mut rng, dims);
+            let (lo, hi) = g.boxed(dims, 16);
+            let b = Box3::new(lo, hi);
+            let sub = vol.extract_box(b);
+            let mut target = vol.clone();
+            target.fill_box(b, 0);
+            target.copy_box_from(&sub, Box3::new([0, 0, 0], sub.dims()), lo);
+            assert_eq!(target, vol);
+        });
+    }
+
+    #[test]
+    fn fill_box_only_touches_box() {
+        let mut v = DenseVolume::<u32>::zeros([8, 8, 4]);
+        v.fill_box(Box3::new([2, 2, 1], [5, 6, 3]), 7);
+        assert_eq!(v.count_eq(7), 3 * 4 * 2);
+        assert_eq!(v.get([2, 2, 1]), 7);
+        assert_eq!(v.get([4, 5, 2]), 7);
+        assert_eq!(v.get([5, 2, 1]), 0);
+        assert_eq!(v.get([1, 2, 1]), 0);
+    }
+
+    #[test]
+    fn planes_match_direct_indexing() {
+        let mut rng = Rng::new(3);
+        let vol = random_vol(&mut rng, [5, 6, 7]);
+        let (w, h, xy) = vol.extract_plane(Plane::Xy(3));
+        assert_eq!((w, h), (5, 6));
+        assert_eq!(xy[(2 + 3 * 5) as usize], vol.get([2, 3, 3]));
+        let (w, h, xz) = vol.extract_plane(Plane::Xz(2));
+        assert_eq!((w, h), (5, 7));
+        assert_eq!(xz[(1 + 6 * 5) as usize], vol.get([1, 2, 6]));
+        let (w, h, yz) = vol.extract_plane(Plane::Yz(4));
+        assert_eq!((w, h), (6, 7));
+        assert_eq!(yz[(5 + 6 * 6) as usize], vol.get([4, 5, 6]));
+    }
+
+    #[test]
+    fn unique_nonzero_sorted() {
+        let mut v = DenseVolume::<u32>::zeros([4, 4, 1]);
+        v.set([0, 0, 0], 9);
+        v.set([1, 0, 0], 3);
+        v.set([2, 0, 0], 9);
+        assert_eq!(v.unique_nonzero(), vec![3, 9]);
+    }
+
+    #[test]
+    fn all_zero_detects() {
+        let mut v = DenseVolume::<u8>::zeros([4, 4, 4]);
+        assert!(v.all_zero());
+        v.set([3, 3, 3], 1);
+        assert!(!v.all_zero());
+    }
+}

@@ -1,0 +1,168 @@
+//! Typed client for the OCP Web services — what a vision pipeline or an
+//! analysis script links against. Wraps the HTTP wire protocol of
+//! [`crate::web`]; the paper's clients did the same over HDF5 from
+//! "Java, C/C++, Python, Perl, php, and Matlab" (§4.2).
+
+use crate::annotation::RamonObject;
+use crate::array::DenseVolume;
+use crate::core::{Box3, Vec3, WriteDiscipline};
+use crate::web::http::request;
+use crate::web::ocpk;
+use crate::{Error, Result};
+
+/// HTTP client bound to one server and project token.
+pub struct OcpClient {
+    base: String,
+    token: String,
+}
+
+impl OcpClient {
+    pub fn new(base_url: &str, token: &str) -> Self {
+        OcpClient { base: base_url.trim_end_matches('/').to_string(), token: token.to_string() }
+    }
+
+    fn check(status: u16, body: Vec<u8>) -> Result<Vec<u8>> {
+        if status == 200 {
+            Ok(body)
+        } else {
+            let msg = String::from_utf8_lossy(&body).to_string();
+            Err(match status {
+                404 => Error::NotFound(msg),
+                400 => Error::BadRequest(msg),
+                _ => Error::Other(format!("http {status}: {msg}")),
+            })
+        }
+    }
+
+    fn get(&self, path: &str) -> Result<Vec<u8>> {
+        let (s, b) = request("GET", &format!("{}{path}", self.base), &[])?;
+        Self::check(s, b)
+    }
+
+    fn put(&self, path: &str, body: &[u8]) -> Result<Vec<u8>> {
+        let (s, b) = request("PUT", &format!("{}{path}", self.base), body)?;
+        Self::check(s, b)
+    }
+
+    /// Image cutout (Table 1's first row).
+    pub fn cutout_u8(&self, res: u32, bx: Box3) -> Result<DenseVolume<u8>> {
+        let body = self.get(&format!(
+            "/{}/ocpk/{res}/{},{}/{},{}/{},{}/",
+            self.token, bx.lo[0], bx.hi[0], bx.lo[1], bx.hi[1], bx.lo[2], bx.hi[2]
+        ))?;
+        Ok(ocpk::decode_volume::<u8>(&body)?.2)
+    }
+
+    /// Annotation cutout.
+    pub fn cutout_u32(&self, res: u32, bx: Box3) -> Result<DenseVolume<u32>> {
+        let body = self.get(&format!(
+            "/{}/ocpk/{res}/{},{}/{},{}/{},{}/",
+            self.token, bx.lo[0], bx.hi[0], bx.lo[1], bx.hi[1], bx.lo[2], bx.hi[2]
+        ))?;
+        Ok(ocpk::decode_volume::<u32>(&body)?.2)
+    }
+
+    /// Upload an image block.
+    pub fn write_image(&self, res: u32, lo: Vec3, vol: &DenseVolume<u8>) -> Result<()> {
+        let body = ocpk::encode_volume(crate::core::Dtype::U8, lo, vol)?;
+        self.put(&format!("/{}/image/{res}/", self.token), &body)?;
+        Ok(())
+    }
+
+    /// Write an annotation volume under a discipline.
+    pub fn write_annotation(
+        &self,
+        res: u32,
+        lo: Vec3,
+        vol: &DenseVolume<u32>,
+        discipline: WriteDiscipline,
+    ) -> Result<String> {
+        let disc = match discipline {
+            WriteDiscipline::Overwrite => "overwrite",
+            WriteDiscipline::Preserve => "preserve",
+            WriteDiscipline::Exception => "exception",
+        };
+        let body = ocpk::encode_volume(crate::core::Dtype::U32, lo, vol)?;
+        let resp = self.put(&format!("/{}/{disc}/{res}/", self.token), &body)?;
+        Ok(String::from_utf8_lossy(&resp).to_string())
+    }
+
+    /// Batch-write RAMON objects; returns assigned ids.
+    pub fn put_objects(&self, objs: &[RamonObject]) -> Result<Vec<u32>> {
+        let resp = self.put(&format!("/{}/ramon/", self.token), &ocpk::encode_objects(objs))?;
+        String::from_utf8_lossy(&resp)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.parse().map_err(|_| Error::Other(format!("bad id '{s}'"))))
+            .collect()
+    }
+
+    /// Batch metadata read.
+    pub fn get_objects(&self, ids: &[u32]) -> Result<Vec<RamonObject>> {
+        let path = format!(
+            "/{}/{}/",
+            self.token,
+            ids.iter().map(|i| i.to_string()).collect::<Vec<_>>().join(",")
+        );
+        ocpk::decode_objects(&self.get(&path)?)
+    }
+
+    /// Object voxel list.
+    pub fn voxels(&self, id: u32) -> Result<Vec<Vec3>> {
+        ocpk::decode_voxels(&self.get(&format!("/{}/{id}/voxels/", self.token))?)
+    }
+
+    /// Object bounding box.
+    pub fn bounding_box(&self, id: u32) -> Result<Box3> {
+        let text = String::from_utf8_lossy(
+            &self.get(&format!("/{}/{id}/boundingbox/", self.token))?,
+        )
+        .to_string();
+        let parts: Vec<u64> = text
+            .split(['/', ','])
+            .map(|s| s.parse().map_err(|_| Error::Other(format!("bad bbox '{text}'"))))
+            .collect::<Result<_>>()?;
+        if parts.len() != 6 {
+            return Err(Error::Other(format!("bad bbox '{text}'")));
+        }
+        Ok(Box3::new([parts[0], parts[2], parts[4]], [parts[1], parts[3], parts[5]]))
+    }
+
+    /// Dense object read, optionally restricted.
+    pub fn object_cutout(&self, id: u32, region: Option<(u32, Box3)>) -> Result<(Box3, DenseVolume<u32>)> {
+        let path = match region {
+            None => format!("/{}/{id}/cutout/", self.token),
+            Some((res, b)) => format!(
+                "/{}/{id}/cutout/{res}/{},{}/{},{}/{},{}/",
+                self.token, b.lo[0], b.hi[0], b.lo[1], b.hi[1], b.lo[2], b.hi[2]
+            ),
+        };
+        let (_, bx, vol) = ocpk::decode_volume::<u32>(&self.get(&path)?)?;
+        Ok((bx, vol))
+    }
+
+    /// Predicate query; `preds` are URL segments, e.g.
+    /// `&["type", "synapse", "confidence", "geq", "0.99"]`.
+    pub fn query(&self, preds: &[&str]) -> Result<Vec<u32>> {
+        let resp = self.get(&format!("/{}/objects/{}/", self.token, preds.join("/")))?;
+        let text = String::from_utf8_lossy(&resp);
+        text.split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.parse().map_err(|_| Error::Other(format!("bad id '{s}'"))))
+            .collect()
+    }
+
+    /// Fetch a stored-layout tile.
+    pub fn tile(&self, res: u32, z: u64, y: u64, x: u64) -> Result<Vec<u8>> {
+        self.get(&format!("/{}/tile/{res}/{z}/{y}_{x}.gray", self.token))
+    }
+}
+
+/// Cluster-wide (token-free) info.
+pub fn cluster_info(base_url: &str) -> Result<String> {
+    let (s, b) = request("GET", &format!("{}/info/", base_url.trim_end_matches('/')), &[])?;
+    if s != 200 {
+        return Err(Error::Other(format!("http {s}")));
+    }
+    Ok(String::from_utf8_lossy(&b).to_string())
+}

@@ -1,0 +1,440 @@
+//! The OCP Data Cluster: heterogeneous node roles, workload placement,
+//! application-level sharding, and project migration (§4.1, Figure 7).
+//!
+//! * **Database nodes** store image and annotation cuboids for cutout —
+//!   read-optimized (RAID-6 arrays in the paper).
+//! * **SSD I/O nodes** absorb the random small writes of parallel vision
+//!   pipelines; projects migrate off them ("dump and restore") once no
+//!   longer actively written.
+//! * **Application servers** do all request parsing/assembly; here the
+//!   [`crate::web`] front end plays that role over this struct.
+//!
+//! Placement policy ("Data Distribution"): concurrent workloads land on
+//! distinct nodes — cutout reads on database nodes, annotation writes on
+//! SSD nodes. Image cuboids shard across database nodes by partitioning
+//! the Morton curve; sharding is application-level via [`ShardedEngine`].
+
+mod sharded;
+
+pub use sharded::ShardedEngine;
+
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+use crate::annotation::AnnotationDb;
+use crate::chunkstore::CuboidStore;
+use crate::core::{Dataset, Project};
+use crate::cutout::CutoutService;
+use crate::shard::{NodeId, ShardMap};
+use crate::storage::{migrate, DeviceProfile, Engine, MemStore, SimulatedStore};
+use crate::{Error, Result};
+
+/// What a node is for (§4.1 "Architecture").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeRole {
+    /// Cutout storage: capacity + sequential read I/O.
+    Database,
+    /// Random-write absorber for vision pipelines.
+    Ssd,
+    /// Tile stacks and ingest staging.
+    FileServer,
+}
+
+/// One cluster node: a role and a storage engine.
+pub struct Node {
+    pub id: NodeId,
+    pub name: String,
+    pub role: NodeRole,
+    pub engine: Engine,
+}
+
+/// A project's runtime handle: where its pieces live.
+enum ProjectHandle {
+    Image(Arc<CutoutService>),
+    Annotation(Arc<AnnotationDb>),
+}
+
+/// The cluster: nodes + datasets + projects + placement.
+pub struct Cluster {
+    nodes: Vec<Node>,
+    datasets: RwLock<HashMap<String, Arc<Dataset>>>,
+    projects: RwLock<HashMap<String, ProjectHandle>>,
+    /// Round-robin cursor for SSD placement.
+    next_ssd: std::sync::atomic::AtomicUsize,
+}
+
+impl Cluster {
+    /// A cluster whose nodes are plain in-memory engines (unit tests,
+    /// "in cache" bench configurations).
+    pub fn in_memory(n_database: usize, n_ssd: usize) -> Arc<Cluster> {
+        let mut nodes = Vec::new();
+        for i in 0..n_database.max(1) {
+            nodes.push(Node {
+                id: nodes.len(),
+                name: format!("db{i}"),
+                role: NodeRole::Database,
+                engine: Arc::new(MemStore::new()),
+            });
+        }
+        for i in 0..n_ssd {
+            nodes.push(Node {
+                id: nodes.len(),
+                name: format!("ssd{i}"),
+                role: NodeRole::Ssd,
+                engine: Arc::new(MemStore::new()),
+            });
+        }
+        Arc::new(Cluster {
+            nodes,
+            datasets: RwLock::new(HashMap::new()),
+            projects: RwLock::new(HashMap::new()),
+            next_ssd: std::sync::atomic::AtomicUsize::new(0),
+        })
+    }
+
+    /// A durable cluster: every node is a [`crate::storage::FileStore`]
+    /// rooted under `dir/<node-name>/` — the file-server / persistence
+    /// analogue of §4.1. Reopening the same directory restores all
+    /// cuboids, metadata and indexes (projects must be re-registered;
+    /// configuration is code, as in the paper's dataset/project tables).
+    pub fn persistent(
+        dir: impl AsRef<std::path::Path>,
+        n_database: usize,
+        n_ssd: usize,
+    ) -> crate::Result<Arc<Cluster>> {
+        let dir = dir.as_ref();
+        let mut nodes = Vec::new();
+        for i in 0..n_database.max(1) {
+            nodes.push(Node {
+                id: nodes.len(),
+                name: format!("db{i}"),
+                role: NodeRole::Database,
+                engine: Arc::new(crate::storage::FileStore::open(dir.join(format!("db{i}")))?)
+                    as Engine,
+            });
+        }
+        for i in 0..n_ssd {
+            nodes.push(Node {
+                id: nodes.len(),
+                name: format!("ssd{i}"),
+                role: NodeRole::Ssd,
+                engine: Arc::new(crate::storage::FileStore::open(dir.join(format!("ssd{i}")))?)
+                    as Engine,
+            });
+        }
+        Ok(Arc::new(Cluster {
+            nodes,
+            datasets: RwLock::new(HashMap::new()),
+            projects: RwLock::new(HashMap::new()),
+            next_ssd: std::sync::atomic::AtomicUsize::new(0),
+        }))
+    }
+
+    /// A cluster with simulated device economics: database nodes behind
+    /// the RAID-6 HDD profile, SSD nodes behind the Vertex4 profile
+    /// (DESIGN.md §1). `time_scale` shrinks all charged latencies.
+    pub fn simulated(n_database: usize, n_ssd: usize, time_scale: f64) -> Arc<Cluster> {
+        let mut nodes = Vec::new();
+        for i in 0..n_database.max(1) {
+            nodes.push(Node {
+                id: nodes.len(),
+                name: format!("db{i}"),
+                role: NodeRole::Database,
+                engine: Arc::new(SimulatedStore::new(
+                    Arc::new(MemStore::new()),
+                    DeviceProfile::hdd_array(),
+                    time_scale,
+                )) as Engine,
+            });
+        }
+        for i in 0..n_ssd {
+            nodes.push(Node {
+                id: nodes.len(),
+                name: format!("ssd{i}"),
+                role: NodeRole::Ssd,
+                engine: Arc::new(SimulatedStore::new(
+                    Arc::new(MemStore::new()),
+                    DeviceProfile::ssd_raid0(),
+                    time_scale,
+                )) as Engine,
+            });
+        }
+        Arc::new(Cluster {
+            nodes,
+            datasets: RwLock::new(HashMap::new()),
+            projects: RwLock::new(HashMap::new()),
+            next_ssd: std::sync::atomic::AtomicUsize::new(0),
+        })
+    }
+
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    fn nodes_with_role(&self, role: NodeRole) -> Vec<NodeId> {
+        self.nodes.iter().filter(|n| n.role == role).map(|n| n.id).collect()
+    }
+
+    // ------------------------------------------------------------------
+    // Datasets
+    // ------------------------------------------------------------------
+
+    pub fn register_dataset(&self, ds: Dataset) -> Arc<Dataset> {
+        let ds = Arc::new(ds);
+        self.datasets.write().unwrap().insert(ds.name.clone(), Arc::clone(&ds));
+        ds
+    }
+
+    pub fn dataset(&self, name: &str) -> Result<Arc<Dataset>> {
+        self.datasets
+            .read()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| Error::NotFound(format!("dataset '{name}'")))
+    }
+
+    // ------------------------------------------------------------------
+    // Projects and placement
+    // ------------------------------------------------------------------
+
+    /// Create an image project, sharding cuboids across ALL database
+    /// nodes by Morton partition (§4.1: only the largest datasets are
+    /// sharded for capacity; a single DB node degenerates to no
+    /// sharding).
+    pub fn create_image_project(&self, project: Project) -> Result<Arc<CutoutService>> {
+        let ds = self.dataset(&project.dataset)?;
+        let db_nodes = self.nodes_with_role(NodeRole::Database);
+        // Partition the Morton space of the *finest* level's grid.
+        let g = ds.level(0)?.grid();
+        let total_keys = (g[0].max(g[1]).max(g[2]).next_power_of_two()).pow(3);
+        let map = ShardMap::even(total_keys, db_nodes.clone())?;
+        let engines: Vec<Engine> =
+            self.nodes.iter().map(|n| Arc::clone(&n.engine)).collect();
+        let engine: Engine = Arc::new(ShardedEngine::new(map, engines));
+        let store = Arc::new(CuboidStore::new(ds, Arc::new(project.clone()), engine));
+        let svc = Arc::new(CutoutService::new(store));
+        self.projects
+            .write()
+            .unwrap()
+            .insert(project.token.clone(), ProjectHandle::Image(Arc::clone(&svc)));
+        Ok(svc)
+    }
+
+    /// Create an annotation project. `hot` projects (actively written by
+    /// vision pipelines) are placed on an SSD node; cold ones directly on
+    /// a database node (§4.1 placement policy).
+    pub fn create_annotation_project(
+        &self,
+        project: Project,
+        hot: bool,
+    ) -> Result<Arc<AnnotationDb>> {
+        let ds = self.dataset(&project.dataset)?;
+        let ssd = self.nodes_with_role(NodeRole::Ssd);
+        let node = if hot && !ssd.is_empty() {
+            let i = self.next_ssd.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            ssd[i % ssd.len()]
+        } else {
+            let dbs = self.nodes_with_role(NodeRole::Database);
+            dbs[0]
+        };
+        let engine = Arc::clone(&self.nodes[node].engine);
+        let store =
+            Arc::new(CuboidStore::new(ds, Arc::new(project.clone()), Arc::clone(&engine)));
+        let db = Arc::new(AnnotationDb::new(store, engine)?);
+        self.projects
+            .write()
+            .unwrap()
+            .insert(project.token.clone(), ProjectHandle::Annotation(Arc::clone(&db)));
+        Ok(db)
+    }
+
+    pub fn image(&self, token: &str) -> Result<Arc<CutoutService>> {
+        match self.projects.read().unwrap().get(token) {
+            Some(ProjectHandle::Image(svc)) => Ok(Arc::clone(svc)),
+            Some(_) => Err(Error::BadRequest(format!("'{token}' is not an image project"))),
+            None => Err(Error::NotFound(format!("project '{token}'"))),
+        }
+    }
+
+    pub fn annotation(&self, token: &str) -> Result<Arc<AnnotationDb>> {
+        match self.projects.read().unwrap().get(token) {
+            Some(ProjectHandle::Annotation(db)) => Ok(Arc::clone(db)),
+            Some(_) => {
+                Err(Error::BadRequest(format!("'{token}' is not an annotation project")))
+            }
+            None => Err(Error::NotFound(format!("project '{token}'"))),
+        }
+    }
+
+    pub fn tokens(&self) -> Vec<String> {
+        let mut t: Vec<String> = self.projects.read().unwrap().keys().cloned().collect();
+        t.sort();
+        t
+    }
+
+    /// Migrate an annotation project from its current node to the first
+    /// database node — the paper's administrative dump/restore performed
+    /// "when we build the annotation resolution hierarchy" (§4.1).
+    /// Returns the rebound handle and the number of values moved.
+    pub fn migrate_annotation_project(&self, token: &str) -> Result<(Arc<AnnotationDb>, u64)> {
+        let db = self.annotation(token)?;
+        let project = Arc::clone(&db.project);
+        let ds = self.dataset(&project.dataset)?;
+        let src_engine = Arc::clone(db.cutout.store().engine());
+        let dst_node = self.nodes_with_role(NodeRole::Database)[0];
+        let dst_engine = Arc::clone(&self.nodes[dst_node].engine);
+        // Dump and restore every table belonging to this project.
+        let mut moved = 0;
+        for table in src_engine.tables()? {
+            if table.starts_with(&format!("{}/", project.token)) {
+                moved += migrate(src_engine.as_ref(), dst_engine.as_ref(), Some(&table))?;
+            }
+        }
+        let store = Arc::new(CuboidStore::new(ds, project, Arc::clone(&dst_engine)));
+        let new_db = Arc::new(AnnotationDb::new(store, dst_engine)?);
+        self.projects
+            .write()
+            .unwrap()
+            .insert(token.to_string(), ProjectHandle::Annotation(Arc::clone(&new_db)));
+        Ok((new_db, moved))
+    }
+
+    /// Per-node I/O snapshots (the `ocpd info` CLI and benches).
+    pub fn node_stats(&self) -> Vec<(String, crate::storage::IoSnapshot)> {
+        self.nodes
+            .iter()
+            .map(|n| (n.name.clone(), n.engine.stats().snapshot()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::annotation::RamonObject;
+    use crate::array::DenseVolume;
+    use crate::core::{Box3, DatasetBuilder, WriteDiscipline};
+
+    fn cluster() -> Arc<Cluster> {
+        let c = Cluster::in_memory(2, 1);
+        c.register_dataset(DatasetBuilder::new("ds", [256, 256, 32]).levels(2).build());
+        c
+    }
+
+    #[test]
+    fn image_project_sharded_across_db_nodes() {
+        let c = cluster();
+        let svc = c.create_image_project(Project::image("img", "ds")).unwrap();
+        let whole = Box3::new([0, 0, 0], [256, 256, 32]);
+        let mut v = DenseVolume::<u8>::zeros(whole.extent());
+        v.fill_box(whole, 7);
+        svc.write(0, 0, 0, whole, &v).unwrap();
+        assert_eq!(svc.read::<u8>(0, 0, 0, whole).unwrap(), v);
+        // Both database nodes hold data; the SSD node holds none.
+        let stats = c.node_stats();
+        assert!(stats[0].1.write_bytes > 0, "db0 idle");
+        assert!(stats[1].1.write_bytes > 0, "db1 idle");
+        assert_eq!(stats[2].1.write_bytes, 0, "ssd should be idle");
+    }
+
+    #[test]
+    fn hot_annotation_lands_on_ssd() {
+        let c = cluster();
+        let db = c
+            .create_annotation_project(Project::annotation("ann", "ds"), true)
+            .unwrap();
+        let bx = Box3::new([0, 0, 0], [16, 16, 4]);
+        let mut v = DenseVolume::<u32>::zeros(bx.extent());
+        v.fill_box(Box3::new([0, 0, 0], bx.extent()), 5);
+        db.write_volume(0, bx, &v, WriteDiscipline::Overwrite).unwrap();
+        let stats = c.node_stats();
+        assert!(stats[2].1.write_bytes > 0, "ssd idle");
+        assert_eq!(stats[0].1.write_bytes + stats[1].1.write_bytes, 0, "db wrote");
+    }
+
+    #[test]
+    fn cold_annotation_lands_on_db() {
+        let c = cluster();
+        let db = c
+            .create_annotation_project(Project::annotation("cold", "ds"), false)
+            .unwrap();
+        db.put_object(RamonObject::new(0, crate::annotation::RamonType::Seed)).unwrap();
+        let stats = c.node_stats();
+        assert!(stats[0].1.write_bytes > 0);
+        assert_eq!(stats[2].1.write_bytes, 0);
+    }
+
+    #[test]
+    fn migration_moves_project_and_preserves_data() {
+        let c = cluster();
+        let db = c
+            .create_annotation_project(Project::annotation("ann", "ds"), true)
+            .unwrap();
+        let bx = Box3::new([3, 5, 1], [40, 44, 9]);
+        let mut v = DenseVolume::<u32>::zeros(bx.extent());
+        v.fill_box(Box3::new([0, 0, 0], bx.extent()), 9);
+        db.write_volume(0, bx, &v, WriteDiscipline::Overwrite).unwrap();
+        let id = db.put_object(RamonObject::synapse(9, 0.8, Default::default())).unwrap();
+        assert_eq!(id, 9);
+
+        let (new_db, moved) = c.migrate_annotation_project("ann").unwrap();
+        assert!(moved >= 2, "expected cuboids + index + metadata moved, got {moved}");
+        // All reads work against the database node now.
+        assert_eq!(new_db.voxel_list(0, 9).unwrap().len() as u64, bx.volume());
+        assert_eq!(new_db.get_object(9).unwrap().confidence, 0.8);
+        // Handle rebound in the registry.
+        let again = c.annotation("ann").unwrap();
+        assert_eq!(again.voxel_list(0, 9).unwrap().len() as u64, bx.volume());
+    }
+
+    #[test]
+    fn persistent_cluster_survives_reopen() {
+        let dir = std::env::temp_dir().join(format!("ocpd-cluster-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let ds = || DatasetBuilder::new("ds", [128, 128, 16]).levels(1).build();
+        let bx = Box3::new([3, 5, 1], [40, 44, 9]);
+        {
+            let c = Cluster::persistent(&dir, 1, 1).unwrap();
+            c.register_dataset(ds());
+            let img = c.create_image_project(Project::image("img", "ds")).unwrap();
+            let anno =
+                c.create_annotation_project(Project::annotation("ann", "ds"), true).unwrap();
+            let mut v = DenseVolume::<u8>::zeros(bx.extent());
+            v.fill_box(Box3::new([0, 0, 0], bx.extent()), 9);
+            img.write(0, 0, 0, bx, &v).unwrap();
+            let mut a = DenseVolume::<u32>::zeros(bx.extent());
+            a.fill_box(Box3::new([0, 0, 0], bx.extent()), 5);
+            anno.write_volume(0, bx, &a, WriteDiscipline::Overwrite).unwrap();
+            anno.put_object(RamonObject::synapse(5, 0.7, Default::default())).unwrap();
+        }
+        {
+            let c = Cluster::persistent(&dir, 1, 1).unwrap();
+            c.register_dataset(ds());
+            let img = c.create_image_project(Project::image("img", "ds")).unwrap();
+            let anno =
+                c.create_annotation_project(Project::annotation("ann", "ds"), true).unwrap();
+            assert_eq!(img.read::<u8>(0, 0, 0, bx).unwrap().count_eq(9), bx.volume());
+            assert_eq!(anno.voxel_list(0, 5).unwrap().len() as u64, bx.volume());
+            assert_eq!(anno.get_object(5).unwrap().confidence, 0.7);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unknown_tokens_error() {
+        let c = cluster();
+        assert!(c.image("nope").is_err());
+        assert!(c.annotation("nope").is_err());
+        c.create_image_project(Project::image("img", "ds")).unwrap();
+        assert!(c.annotation("img").is_err(), "type mismatch must error");
+    }
+
+    #[test]
+    fn dataset_registry() {
+        let c = cluster();
+        assert!(c.dataset("ds").is_ok());
+        assert!(c.dataset("missing").is_err());
+        assert!(c.create_image_project(Project::image("x", "missing")).is_err());
+    }
+}

@@ -1,0 +1,289 @@
+//! Dataset configuration: the spatial shape of a stored volume — base
+//! dimensions, anisotropy, the multi-resolution hierarchy and the cuboid
+//! shape at each level (paper §3.1, Figure 5).
+
+use crate::core::{Box3, Vec3};
+use crate::{Error, Result};
+
+/// One level of the resolution hierarchy.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LevelSpec {
+    /// Resolution level (0 = native).
+    pub level: u32,
+    /// Volume dimensions in voxels at this level.
+    pub dims: Vec3,
+    /// Cuboid shape at this level. The paper uses flat (128,128,16)
+    /// cuboids at the highest (most anisotropic) levels and cubic
+    /// (64,64,64) below (Figure 5), keeping cuboids roughly isotropic in
+    /// *sample* space while holding 2^18 voxels.
+    pub cuboid: Vec3,
+}
+
+impl LevelSpec {
+    /// Extent of the cuboid grid at this level.
+    pub fn grid(&self) -> Vec3 {
+        [
+            self.dims[0].div_ceil(self.cuboid[0]),
+            self.dims[1].div_ceil(self.cuboid[1]),
+            self.dims[2].div_ceil(self.cuboid[2]),
+        ]
+    }
+
+    /// Voxels per cuboid.
+    pub fn cuboid_voxels(&self) -> u64 {
+        self.cuboid[0] * self.cuboid[1] * self.cuboid[2]
+    }
+
+    /// The whole volume as a box.
+    pub fn bounds(&self) -> Box3 {
+        Box3::new([0, 0, 0], self.dims)
+    }
+}
+
+/// A dataset describes the spatial configuration shared by every project
+/// (database) registered against it: dimensions, number of resolutions,
+/// optional time dimension and channel count (§4.2).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    /// Voxel size at level 0 in nanometres `[x, y, z]` — bock11 is
+    /// (4, 4, 40): a 10x anisotropy between plane and section.
+    pub voxel_nm: [f64; 3],
+    /// Resolution hierarchy, level 0 first.
+    pub levels: Vec<LevelSpec>,
+    /// Number of time points (1 = static volume). Time joins the Morton
+    /// index via the 4-d curve (§3.1).
+    pub timesteps: u64,
+    /// Number of channels (1 = single channel). Channels are *not* in the
+    /// index; each channel has its own cuboid space (§3.1).
+    pub channels: u16,
+}
+
+impl Dataset {
+    /// Look up a level spec.
+    pub fn level(&self, res: u32) -> Result<&LevelSpec> {
+        self.levels
+            .get(res as usize)
+            .ok_or_else(|| Error::BadRequest(format!(
+                "resolution {res} out of range (dataset '{}' has {} levels)",
+                self.name,
+                self.levels.len()
+            )))
+    }
+
+    pub fn num_levels(&self) -> u32 {
+        self.levels.len() as u32
+    }
+
+    /// Validate that a requested box lies within the volume at `res`.
+    pub fn check_box(&self, res: u32, b: &Box3) -> Result<()> {
+        let spec = self.level(res)?;
+        for a in 0..3 {
+            if b.hi[a] > spec.dims[a] || b.lo[a] >= b.hi[a] {
+                return Err(Error::BadRequest(format!(
+                    "box {:?}..{:?} outside volume {:?} at resolution {res}",
+                    b.lo, b.hi, spec.dims
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn check_timestep(&self, t: u64) -> Result<()> {
+        if t >= self.timesteps {
+            return Err(Error::BadRequest(format!(
+                "timestep {t} out of range ({} timesteps)",
+                self.timesteps
+            )));
+        }
+        Ok(())
+    }
+
+    pub fn check_channel(&self, c: u16) -> Result<()> {
+        if c >= self.channels {
+            return Err(Error::BadRequest(format!(
+                "channel {c} out of range ({} channels)",
+                self.channels
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Builder implementing the paper's hierarchy policy: each level halves X
+/// and Y but never Z, time, or channels (§3.1); cuboids are flat
+/// (128,128,16) while the per-voxel Z length exceeds the XY length, and
+/// cubic (64,64,64) beyond (Figure 5). Both shapes hold 2^18 voxels (§3.1:
+/// "cuboids contain only 2^18 = 256K of data").
+pub struct DatasetBuilder {
+    name: String,
+    dims: Vec3,
+    voxel_nm: [f64; 3],
+    levels: u32,
+    timesteps: u64,
+    channels: u16,
+    flat_cuboid: Vec3,
+    cubic_cuboid: Vec3,
+}
+
+impl DatasetBuilder {
+    /// Start a builder for an EM-like volume of `dims` voxels.
+    pub fn new(name: &str, dims: Vec3) -> Self {
+        DatasetBuilder {
+            name: name.to_string(),
+            dims,
+            voxel_nm: [4.0, 4.0, 40.0], // bock11-style default anisotropy
+            levels: 1,
+            timesteps: 1,
+            channels: 1,
+            flat_cuboid: [128, 128, 16],
+            cubic_cuboid: [64, 64, 64],
+        }
+    }
+
+    /// Physical voxel size at level 0 (nm), setting the anisotropy.
+    pub fn voxel_nm(mut self, nm: [f64; 3]) -> Self {
+        self.voxel_nm = nm;
+        self
+    }
+
+    /// Number of hierarchy levels (bock11: 9, kasthuri11: 6).
+    pub fn levels(mut self, n: u32) -> Self {
+        self.levels = n.max(1);
+        self
+    }
+
+    /// Time dimension (§3.1: 1000s of time points in MR data).
+    pub fn timesteps(mut self, t: u64) -> Self {
+        self.timesteps = t.max(1);
+        self
+    }
+
+    /// Channel count (array tomography: up to 17 channels).
+    pub fn channels(mut self, c: u16) -> Self {
+        self.channels = c.max(1);
+        self
+    }
+
+    /// Override cuboid shapes (the cuboid-size ablation bench uses this).
+    pub fn cuboids(mut self, flat: Vec3, cubic: Vec3) -> Self {
+        self.flat_cuboid = flat;
+        self.cubic_cuboid = cubic;
+        self
+    }
+
+    pub fn build(self) -> Dataset {
+        let mut levels = Vec::with_capacity(self.levels as usize);
+        let mut dims = self.dims;
+        let mut nm = self.voxel_nm;
+        for level in 0..self.levels {
+            // Cuboid shape policy: while voxels are anisotropic (Z length
+            // > 2x XY length) use flat cuboids, else cubic (Figure 5).
+            let cuboid = if nm[2] > 2.0 * nm[0] { self.flat_cuboid } else { self.cubic_cuboid };
+            let clamped = [
+                cuboid[0].min(dims[0].next_power_of_two()),
+                cuboid[1].min(dims[1].next_power_of_two()),
+                cuboid[2].min(dims[2].next_power_of_two()),
+            ];
+            levels.push(LevelSpec { level, dims, cuboid: clamped });
+            // Next level: halve X and Y only (§3.1: "we do not scale Z").
+            dims = [(dims[0] / 2).max(1), (dims[1] / 2).max(1), dims[2]];
+            nm = [nm[0] * 2.0, nm[1] * 2.0, nm[2]];
+        }
+        Dataset {
+            name: self.name,
+            voxel_nm: self.voxel_nm,
+            levels,
+            timesteps: self.timesteps,
+            channels: self.channels,
+        }
+    }
+}
+
+/// The bock11 dataset configuration from the paper (§2): ~20 Tvox at
+/// 4x4x40 nm, nine resolution levels. Scaled here by `scale` (1 = full
+/// size; tests and examples use small scales).
+pub fn bock11_like(scale_div: u64) -> Dataset {
+    let d = scale_div.max(1);
+    DatasetBuilder::new("bock11", [135_424 / d, 119_808 / d, 1_239.max(16 / d + 16)])
+        .voxel_nm([4.0, 4.0, 40.0])
+        .levels(9)
+        .build()
+}
+
+/// The kasthuri11 dataset configuration (§2): 12000x12000x1850 voxels at
+/// 3x3x30 nm, six levels.
+pub fn kasthuri11_like(scale_div: u64) -> Dataset {
+    let d = scale_div.max(1);
+    DatasetBuilder::new("kasthuri11", [12_000 / d, 12_000 / d, (1_850 / d).max(32)])
+        .voxel_nm([3.0, 3.0, 30.0])
+        .levels(6)
+        .build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hierarchy_halves_xy_not_z() {
+        let ds = DatasetBuilder::new("t", [4096, 2048, 512]).levels(4).build();
+        assert_eq!(ds.levels[0].dims, [4096, 2048, 512]);
+        assert_eq!(ds.levels[1].dims, [2048, 1024, 512]);
+        assert_eq!(ds.levels[3].dims, [512, 256, 512]);
+    }
+
+    #[test]
+    fn cuboid_shape_switches_flat_to_cubic() {
+        // 4x4x40nm: the highest levels are anisotropic (flat cuboids); by
+        // level 3 the voxel is 32x32x40nm — roughly isotropic — and
+        // cuboids go cubic. Mirrors the paper: "at the highest three
+        // resolutions in bock11, cuboids are flat (128x128x16) ... Beyond
+        // level 4, we shift to a cube of (64x64x64)".
+        let ds = DatasetBuilder::new("t", [1 << 17, 1 << 17, 2048]).levels(9).build();
+        for l in 0..=2 {
+            assert_eq!(ds.levels[l].cuboid, [128, 128, 16], "level {l}");
+        }
+        for l in 3..9 {
+            assert_eq!(ds.levels[l].cuboid, [64, 64, 64], "level {l}");
+        }
+    }
+
+    #[test]
+    fn both_cuboid_shapes_hold_2_18_voxels() {
+        let ds = DatasetBuilder::new("t", [1 << 17, 1 << 17, 2048]).levels(9).build();
+        assert_eq!(ds.levels[0].cuboid_voxels(), 1 << 18);
+        assert_eq!(ds.levels[8].cuboid_voxels(), 1 << 18);
+    }
+
+    #[test]
+    fn grid_rounds_up() {
+        let spec = LevelSpec { level: 0, dims: [300, 128, 17], cuboid: [128, 128, 16] };
+        assert_eq!(spec.grid(), [3, 1, 2]);
+    }
+
+    #[test]
+    fn check_box_bounds() {
+        let ds = DatasetBuilder::new("t", [256, 256, 64]).levels(2).build();
+        assert!(ds.check_box(0, &Box3::new([0, 0, 0], [256, 256, 64])).is_ok());
+        assert!(ds.check_box(0, &Box3::new([0, 0, 0], [257, 1, 1])).is_err());
+        assert!(ds.check_box(5, &Box3::new([0, 0, 0], [1, 1, 1])).is_err());
+        assert!(ds.check_box(1, &Box3::new([0, 0, 0], [128, 128, 64])).is_ok());
+    }
+
+    #[test]
+    fn named_datasets() {
+        let b = bock11_like(64);
+        assert_eq!(b.num_levels(), 9);
+        assert_eq!(b.voxel_nm, [4.0, 4.0, 40.0]);
+        let k = kasthuri11_like(8);
+        assert_eq!(k.num_levels(), 6);
+    }
+
+    #[test]
+    fn small_volume_clamps_cuboid() {
+        let ds = DatasetBuilder::new("t", [32, 32, 8]).levels(1).build();
+        assert!(ds.levels[0].cuboid[0] <= 32);
+        assert!(ds.levels[0].cuboid[2] <= 8);
+    }
+}

@@ -1,0 +1,208 @@
+//! Axis-aligned integer geometry used throughout the cutout and annotation
+//! paths. Boxes are half-open `[lo, hi)` in voxel coordinates.
+
+/// A 3-d point / extent in voxels, ordered `[x, y, z]`.
+pub type Vec3 = [u64; 3];
+
+/// A half-open axis-aligned box `[lo, hi)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Box3 {
+    pub lo: Vec3,
+    pub hi: Vec3,
+}
+
+impl Box3 {
+    /// Construct, asserting a well-formed (possibly empty) box.
+    pub fn new(lo: Vec3, hi: Vec3) -> Box3 {
+        debug_assert!((0..3).all(|a| lo[a] <= hi[a]), "bad box {lo:?}..{hi:?}");
+        Box3 { lo, hi }
+    }
+
+    /// Box at `lo` with the given extent.
+    pub fn at(lo: Vec3, extent: Vec3) -> Box3 {
+        Box3::new(lo, [lo[0] + extent[0], lo[1] + extent[1], lo[2] + extent[2]])
+    }
+
+    /// Extent along each axis.
+    pub fn extent(&self) -> Vec3 {
+        [self.hi[0] - self.lo[0], self.hi[1] - self.lo[1], self.hi[2] - self.lo[2]]
+    }
+
+    /// Number of voxels.
+    pub fn volume(&self) -> u64 {
+        let e = self.extent();
+        e[0] * e[1] * e[2]
+    }
+
+    pub fn is_empty(&self) -> bool {
+        (0..3).any(|a| self.lo[a] >= self.hi[a])
+    }
+
+    /// Intersection (possibly empty).
+    pub fn intersect(&self, other: &Box3) -> Box3 {
+        let lo = [
+            self.lo[0].max(other.lo[0]),
+            self.lo[1].max(other.lo[1]),
+            self.lo[2].max(other.lo[2]),
+        ];
+        let hi = [
+            self.hi[0].min(other.hi[0]).max(lo[0]),
+            self.hi[1].min(other.hi[1]).max(lo[1]),
+            self.hi[2].min(other.hi[2]).max(lo[2]),
+        ];
+        Box3 { lo, hi }
+    }
+
+    /// Smallest box containing both.
+    pub fn union(&self, other: &Box3) -> Box3 {
+        if self.is_empty() {
+            return *other;
+        }
+        if other.is_empty() {
+            return *self;
+        }
+        Box3 {
+            lo: [
+                self.lo[0].min(other.lo[0]),
+                self.lo[1].min(other.lo[1]),
+                self.lo[2].min(other.lo[2]),
+            ],
+            hi: [
+                self.hi[0].max(other.hi[0]),
+                self.hi[1].max(other.hi[1]),
+                self.hi[2].max(other.hi[2]),
+            ],
+        }
+    }
+
+    /// Does the box contain the point?
+    pub fn contains(&self, p: Vec3) -> bool {
+        (0..3).all(|a| self.lo[a] <= p[a] && p[a] < self.hi[a])
+    }
+
+    /// The cuboid-grid box covering this voxel box for cuboids of shape
+    /// `cshape`: lo rounded down, hi rounded up, in cuboid coordinates.
+    pub fn cuboid_cover(&self, cshape: Vec3) -> Box3 {
+        let lo = [
+            self.lo[0] / cshape[0],
+            self.lo[1] / cshape[1],
+            self.lo[2] / cshape[2],
+        ];
+        let hi = [
+            self.hi[0].div_ceil(cshape[0]).max(lo[0]),
+            self.hi[1].div_ceil(cshape[1]).max(lo[1]),
+            self.hi[2].div_ceil(cshape[2]).max(lo[2]),
+        ];
+        Box3 { lo, hi }
+    }
+
+    /// Is this voxel box exactly aligned to the cuboid grid? Aligned
+    /// cutouts avoid partial-cuboid copies (§5 Fig 10's aligned/unaligned
+    /// split).
+    pub fn is_aligned(&self, cshape: Vec3) -> bool {
+        (0..3).all(|a| self.lo[a] % cshape[a] == 0 && self.hi[a] % cshape[a] == 0)
+    }
+
+    /// Round outward to the cuboid grid (used by the tile prefetcher).
+    pub fn align_outward(&self, cshape: Vec3) -> Box3 {
+        let c = self.cuboid_cover(cshape);
+        Box3 {
+            lo: [c.lo[0] * cshape[0], c.lo[1] * cshape[1], c.lo[2] * cshape[2]],
+            hi: [c.hi[0] * cshape[0], c.hi[1] * cshape[1], c.hi[2] * cshape[2]],
+        }
+    }
+
+    /// Euclidean distance between box centers, in voxels (used by the
+    /// spatial analysis example for synapse–dendrite distances).
+    pub fn center_distance(&self, other: &Box3) -> f64 {
+        let c = |b: &Box3, a: usize| (b.lo[a] + b.hi[a]) as f64 / 2.0;
+        let mut s = 0.0;
+        for a in 0..3 {
+            let d = c(self, a) - c(other, a);
+            s += d * d;
+        }
+        s.sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::property;
+
+    #[test]
+    fn extent_volume() {
+        let b = Box3::new([1, 2, 3], [4, 6, 8]);
+        assert_eq!(b.extent(), [3, 4, 5]);
+        assert_eq!(b.volume(), 60);
+        assert!(!b.is_empty());
+        assert!(Box3::new([1, 1, 1], [1, 5, 5]).is_empty());
+    }
+
+    #[test]
+    fn intersect_union() {
+        let a = Box3::new([0, 0, 0], [10, 10, 10]);
+        let b = Box3::new([5, 5, 5], [15, 15, 15]);
+        assert_eq!(a.intersect(&b), Box3::new([5, 5, 5], [10, 10, 10]));
+        assert_eq!(a.union(&b), Box3::new([0, 0, 0], [15, 15, 15]));
+        let c = Box3::new([20, 20, 20], [30, 30, 30]);
+        assert!(a.intersect(&c).is_empty());
+    }
+
+    #[test]
+    fn cuboid_cover_examples() {
+        let b = Box3::new([100, 0, 5], [300, 128, 17]);
+        let cover = b.cuboid_cover([128, 128, 16]);
+        assert_eq!(cover, Box3::new([0, 0, 0], [3, 1, 2]));
+        assert!(!b.is_aligned([128, 128, 16]));
+        assert!(Box3::new([128, 0, 16], [256, 128, 32]).is_aligned([128, 128, 16]));
+    }
+
+    #[test]
+    fn cover_contains_box_prop() {
+        property("cuboid_cover_contains", 500, |g| {
+            let (lo, hi) = g.boxed([4096, 4096, 512], 700);
+            let b = Box3::new(lo, hi);
+            let cs = [64, 64, 16];
+            let outer = b.align_outward(cs);
+            assert!(outer.lo[0] <= b.lo[0] && outer.hi[0] >= b.hi[0]);
+            assert!(outer.lo[1] <= b.lo[1] && outer.hi[1] >= b.hi[1]);
+            assert!(outer.lo[2] <= b.lo[2] && outer.hi[2] >= b.hi[2]);
+            assert!(outer.is_aligned(cs));
+            // Cover must be minimal: shrinking any face by one cuboid
+            // must lose coverage.
+            let cover = b.cuboid_cover(cs);
+            for a in 0..3 {
+                assert!(cover.lo[a] * cs[a] <= b.lo[a]);
+                assert!((cover.lo[a] + 1) * cs[a] > b.lo[a]);
+                assert!(cover.hi[a] * cs[a] >= b.hi[a]);
+                assert!((cover.hi[a] - 1) * cs[a] < b.hi[a]);
+            }
+        });
+    }
+
+    #[test]
+    fn intersect_commutes_prop() {
+        property("intersect_commutes", 500, |g| {
+            let (alo, ahi) = g.boxed([256, 256, 64], 64);
+            let (blo, bhi) = g.boxed([256, 256, 64], 64);
+            let a = Box3::new(alo, ahi);
+            let b = Box3::new(blo, bhi);
+            let ab = a.intersect(&b);
+            let ba = b.intersect(&a);
+            assert_eq!(ab.is_empty(), ba.is_empty());
+            if !ab.is_empty() {
+                assert_eq!(ab, ba);
+                assert!(ab.volume() <= a.volume().min(b.volume()));
+            }
+        });
+    }
+
+    #[test]
+    fn contains_center() {
+        let b = Box3::new([0, 0, 0], [4, 4, 4]);
+        assert!(b.contains([0, 0, 0]));
+        assert!(b.contains([3, 3, 3]));
+        assert!(!b.contains([4, 0, 0]));
+    }
+}

@@ -1,0 +1,110 @@
+//! Core data model: voxel datatypes, geometry, datasets (the spatial
+//! configuration of a stored volume) and projects (a database bound to a
+//! dataset) — paper §3 and §4.2 "Projects and Datasets".
+
+mod dataset;
+mod geometry;
+mod project;
+
+pub use dataset::{bock11_like, kasthuri11_like, Dataset, DatasetBuilder, LevelSpec};
+pub use geometry::{Box3, Vec3};
+pub use project::{Project, ProjectKind, WriteDiscipline};
+
+use crate::{Error, Result};
+
+/// Voxel datatype of a database. EM image databases are 8-bit grayscale;
+/// annotation databases are 32-bit identifiers; 16-bit (TIFF-like) and
+/// 32-bit RGBA image formats are also supported (§4.2 "Cutout").
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    /// 8-bit grayscale (EM imagery).
+    U8,
+    /// 16-bit grayscale (e.g. array tomography channels).
+    U16,
+    /// 32-bit annotation identifiers.
+    U32,
+    /// 32-bit RGBA imagery.
+    Rgba,
+    /// 32-bit float (probability maps produced by the vision pipeline).
+    F32,
+}
+
+impl Dtype {
+    /// Bytes per voxel.
+    pub fn bytes(self) -> usize {
+        match self {
+            Dtype::U8 => 1,
+            Dtype::U16 => 2,
+            Dtype::U32 | Dtype::Rgba | Dtype::F32 => 4,
+        }
+    }
+
+    /// Wire tag used by the `ocpk` interchange format.
+    pub fn tag(self) -> u8 {
+        match self {
+            Dtype::U8 => 1,
+            Dtype::U16 => 2,
+            Dtype::U32 => 3,
+            Dtype::Rgba => 4,
+            Dtype::F32 => 5,
+        }
+    }
+
+    /// Inverse of [`Dtype::tag`].
+    pub fn from_tag(t: u8) -> Result<Dtype> {
+        Ok(match t {
+            1 => Dtype::U8,
+            2 => Dtype::U16,
+            3 => Dtype::U32,
+            4 => Dtype::Rgba,
+            5 => Dtype::F32,
+            _ => return Err(Error::Codec(format!("unknown dtype tag {t}"))),
+        })
+    }
+
+    /// Parse from the names used in dataset configs and URLs.
+    pub fn parse(s: &str) -> Result<Dtype> {
+        Ok(match s {
+            "u8" | "uint8" | "gray8" => Dtype::U8,
+            "u16" | "uint16" => Dtype::U16,
+            "u32" | "uint32" | "anno32" => Dtype::U32,
+            "rgba" | "rgba32" => Dtype::Rgba,
+            "f32" | "float32" => Dtype::F32,
+            _ => return Err(Error::BadRequest(format!("unknown dtype '{s}'"))),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::U8 => "u8",
+            Dtype::U16 => "u16",
+            Dtype::U32 => "u32",
+            Dtype::Rgba => "rgba",
+            Dtype::F32 => "f32",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_tag_roundtrip() {
+        for d in [Dtype::U8, Dtype::U16, Dtype::U32, Dtype::Rgba, Dtype::F32] {
+            assert_eq!(Dtype::from_tag(d.tag()).unwrap(), d);
+            assert_eq!(Dtype::parse(d.name()).unwrap(), d);
+        }
+        assert!(Dtype::from_tag(0).is_err());
+        assert!(Dtype::parse("complex128").is_err());
+    }
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(Dtype::U8.bytes(), 1);
+        assert_eq!(Dtype::U16.bytes(), 2);
+        assert_eq!(Dtype::U32.bytes(), 4);
+        assert_eq!(Dtype::Rgba.bytes(), 4);
+        assert_eq!(Dtype::F32.bytes(), 4);
+    }
+}

@@ -1,0 +1,92 @@
+//! # ocpd — The Open Connectome Project Data Cluster, reproduced
+//!
+//! A from-scratch reimplementation of the OCP Data Cluster (Burns et al.,
+//! SSDBM '13): a spatial database cluster for the storage, cutout, and
+//! annotation of high-throughput volumetric neuroimaging data, designed to
+//! feed parallel computer-vision workloads that build *connectomes*.
+//!
+//! The system is a three-layer stack:
+//!
+//! * **Layer 3 (this crate)** — the Rust coordinator: cuboid storage under a
+//!   Morton-order space-filling curve ([`morton`]), the cutout service
+//!   ([`cutout`]), RAMON annotation databases ([`annotation`]) with a sparse
+//!   per-object spatial index ([`spatialindex`]), multi-resolution
+//!   hierarchies ([`resolution`]), Morton-partition sharding across
+//!   heterogeneous node roles ([`shard`], [`cluster`]), and a RESTful HTTP
+//!   front end ([`web`]) speaking the URL grammar of the paper's Table 1.
+//! * **Layer 2 (JAX, build time)** — the vision compute graphs (synapse
+//!   detector, gradient-domain color correction, hierarchy down-sampler),
+//!   lowered once to HLO text under `artifacts/`.
+//! * **Layer 1 (Pallas, build time)** — the per-voxel hot loops of those
+//!   graphs, tiled to the cuboid geometry.
+//!
+//! The [`runtime`] module loads the AOT artifacts through the PJRT CPU
+//! client; [`vision`] drives the paper's parallel synapse-finding workflow
+//! end to end. Python never runs on the request path.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod annotation;
+pub mod array;
+pub mod chunkstore;
+pub mod client;
+pub mod cluster;
+pub mod core;
+pub mod cutout;
+pub mod ingest;
+pub mod metrics;
+pub mod morton;
+pub mod resolution;
+pub mod runtime;
+pub mod shard;
+pub mod spatialindex;
+pub mod storage;
+pub mod tiles;
+pub mod util;
+pub mod vision;
+pub mod web;
+
+pub use crate::core::{Dataset, DatasetBuilder, Dtype, Project, ProjectKind};
+pub use crate::cutout::CutoutService;
+
+/// Crate-wide result type.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("I/O error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("storage error: {0}")]
+    Storage(String),
+    #[error("bad request: {0}")]
+    BadRequest(String),
+    #[error("not found: {0}")]
+    NotFound(String),
+    #[error("codec error: {0}")]
+    Codec(String),
+    #[error("xla error: {0}")]
+    Xla(String),
+    #[error("cluster error: {0}")]
+    Cluster(String),
+    #[error("{0}")]
+    Other(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+impl Error {
+    /// HTTP status code this error maps to at the web layer.
+    pub fn http_status(&self) -> u16 {
+        match self {
+            Error::BadRequest(_) => 400,
+            Error::NotFound(_) => 404,
+            _ => 500,
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! `ocpd` — leader entrypoint and CLI for the OCP Data Cluster.
+//!
+//! Subcommands (hand-rolled parser; no clap in the offline vendor set):
+//!
+//! ```text
+//! ocpd serve   [--addr 127.0.0.1:8642] [--db N] [--ssd N] [--dims X,Y,Z]
+//!              [--seed S] [--artifacts DIR]
+//!     Boot a cluster with a synthetic EM dataset, start the Web services,
+//!     print example URLs, serve until killed.
+//!
+//! ocpd detect  [--dims X,Y,Z] [--seed S] [--workers N] [--artifacts DIR]
+//!     One-shot synapse-detection run (ingest -> detect -> report
+//!     precision/recall and throughput).
+//!
+//! ocpd info    --url http://host:port
+//!     Print a remote cluster's project and node info.
+//! ```
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use ocpd::cluster::Cluster;
+use ocpd::core::{Box3, DatasetBuilder, Project};
+use ocpd::ingest::{generate, ingest_volume, SynthSpec};
+use ocpd::runtime::{artifact_dir, Runtime};
+use ocpd::vision::{precision_recall, SynapsePipeline};
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    flags
+}
+
+fn flag<T: std::str::FromStr>(flags: &HashMap<String, String>, key: &str, default: T) -> T {
+    flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn parse_dims(flags: &HashMap<String, String>, default: [u64; 3]) -> [u64; 3] {
+    flags
+        .get("dims")
+        .and_then(|s| {
+            let v: Vec<u64> = s.split(',').filter_map(|p| p.parse().ok()).collect();
+            (v.len() == 3).then(|| [v[0], v[1], v[2]])
+        })
+        .unwrap_or(default)
+}
+
+/// Boot a cluster with one synthetic image project + one annotation
+/// project, ingested and ready.
+fn boot(
+    dims: [u64; 3],
+    seed: u64,
+    n_db: usize,
+    n_ssd: usize,
+) -> ocpd::Result<(Arc<Cluster>, Vec<[u64; 3]>)> {
+    let cluster = Cluster::in_memory(n_db, n_ssd);
+    cluster.register_dataset(DatasetBuilder::new("synth", dims).levels(3).build());
+    let img = cluster.create_image_project(Project::image("synth", "synth"))?;
+    cluster.create_annotation_project(Project::annotation("synapses_v0", "synth"), true)?;
+    eprintln!("generating synthetic EM volume {dims:?} (seed {seed})...");
+    let sv = generate(&SynthSpec::small(dims, seed));
+    ingest_volume(&img, &sv.vol, [256, 256, 16])?;
+    eprintln!("ingested {} voxels, {} planted synapses", sv.vol.len(), sv.synapses.len());
+    Ok((cluster, sv.synapses))
+}
+
+fn cmd_serve(flags: HashMap<String, String>) -> ocpd::Result<()> {
+    let addr: String = flag(&flags, "addr", "127.0.0.1:8642".to_string());
+    let dims = parse_dims(&flags, [512, 512, 64]);
+    let (cluster, _) = boot(
+        dims,
+        flag(&flags, "seed", 2013),
+        flag(&flags, "db", 2usize),
+        flag(&flags, "ssd", 1usize),
+    )?;
+    let runtime = Runtime::load_dir(
+        flags.get("artifacts").map(std::path::PathBuf::from).unwrap_or_else(artifact_dir),
+    )
+    .ok()
+    .map(Arc::new);
+    let server = ocpd::web::serve(cluster, runtime, &addr, 16)?;
+    println!("ocpd serving at {}", server.url());
+    println!("try:");
+    println!("  GET {}/info/", server.url());
+    println!("  GET {}/synth/ocpk/0/0,128/0,128/0,16/", server.url());
+    println!("  GET {}/synth/tile/0/4/0_0.gray", server.url());
+    println!("  GET {}/synapses_v0/objects/type/synapse/confidence/geq/0.9/", server.url());
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_detect(flags: HashMap<String, String>) -> ocpd::Result<()> {
+    let dims = parse_dims(&flags, [512, 512, 32]);
+    let seed = flag(&flags, "seed", 2013u64);
+    let artifacts =
+        flags.get("artifacts").map(std::path::PathBuf::from).unwrap_or_else(artifact_dir);
+    let runtime = Arc::new(Runtime::load_dir(&artifacts)?);
+
+    let cluster = Cluster::in_memory(2, 1);
+    cluster.register_dataset(DatasetBuilder::new("synth", dims).levels(1).build());
+    let img = cluster.create_image_project(Project::image("synth", "synth"))?;
+    let anno =
+        cluster.create_annotation_project(Project::annotation("synapses_v0", "synth"), true)?;
+
+    eprintln!("generating + ingesting {dims:?}...");
+    let sv = generate(&SynthSpec::small(dims, seed));
+    ingest_volume(&img, &sv.vol, [256, 256, 16])?;
+
+    let mut pipeline = SynapsePipeline::new(runtime, img, anno);
+    pipeline.workers = flag(&flags, "workers", 4usize);
+    eprintln!("running detector ({} workers)...", pipeline.workers);
+    let report = pipeline.run(0, Box3::new([0, 0, 0], dims))?;
+    let (p, r, m) = precision_recall(&report.detections, &sv.synapses, 6.0);
+    println!("blocks:            {}", report.blocks);
+    println!("detections:        {}", report.detections.len());
+    println!("ground truth:      {}", sv.synapses.len());
+    println!("matches:           {m}");
+    println!("precision:         {p:.3}");
+    println!("recall:            {r:.3}");
+    println!("wall:              {:.2}s", report.wall_secs);
+    println!("cutout read:       {:.1} MB/s", report.read_mbps);
+    println!("synapse writes:    {:.1} obj/s", report.objects_per_sec);
+    Ok(())
+}
+
+fn cmd_info(flags: HashMap<String, String>) -> ocpd::Result<()> {
+    let url: String = flag(&flags, "url", "http://127.0.0.1:8642".to_string());
+    print!("{}", ocpd::client::cluster_info(&url)?);
+    Ok(())
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match args.split_first() {
+        Some((c, r)) => (c.as_str(), r.to_vec()),
+        None => {
+            eprintln!("usage: ocpd <serve|detect|info> [flags]");
+            std::process::exit(2);
+        }
+    };
+    let flags = parse_flags(&rest);
+    let result = match cmd {
+        "serve" => cmd_serve(flags),
+        "detect" => cmd_detect(flags),
+        "info" => cmd_info(flags),
+        other => {
+            eprintln!("unknown command '{other}' (want serve|detect|info)");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,321 @@
+//! Morton (z-order) space-filling curve: encode/decode in 2/3/4 dimensions
+//! and decomposition of axis-aligned boxes into maximal contiguous runs of
+//! the curve.
+//!
+//! This is the paper's core physical-design decision (§3, Figure 4): every
+//! cuboid is keyed by the Morton code of its cuboid-grid coordinates, so
+//! any power-of-two aligned subregion is wholly contiguous in the key
+//! space, convex reads decompose into few contiguous runs (Moon et al.
+//! [23]), and — because codes are non-decreasing in every dimension — the
+//! same index works on lower-dimensional subspaces. Time series use the
+//! 4-d curve (§3.1); channels are *not* in the index (separate cuboid
+//! spaces per channel).
+
+/// Spread the low 21 bits of `v` so consecutive bits land 3 apart
+/// (for 3-d interleave).
+#[inline]
+fn spread3(v: u64) -> u64 {
+    let mut x = v & 0x1f_ffff; // 21 bits
+    x = (x | (x << 32)) & 0x1f00000000ffff;
+    x = (x | (x << 16)) & 0x1f0000ff0000ff;
+    x = (x | (x << 8)) & 0x100f00f00f00f00f;
+    x = (x | (x << 4)) & 0x10c30c30c30c30c3;
+    x = (x | (x << 2)) & 0x1249249249249249;
+    x
+}
+
+/// Inverse of [`spread3`].
+#[inline]
+fn compact3(v: u64) -> u64 {
+    let mut x = v & 0x1249249249249249;
+    x = (x | (x >> 2)) & 0x10c30c30c30c30c3;
+    x = (x | (x >> 4)) & 0x100f00f00f00f00f;
+    x = (x | (x >> 8)) & 0x1f0000ff0000ff;
+    x = (x | (x >> 16)) & 0x1f00000000ffff;
+    x = (x | (x >> 32)) & 0x1f_ffff;
+    x
+}
+
+/// Spread the low 32 bits of `v` so consecutive bits land 2 apart
+/// (for 2-d interleave).
+#[inline]
+fn spread2(v: u64) -> u64 {
+    let mut x = v & 0xffff_ffff;
+    x = (x | (x << 16)) & 0x0000ffff0000ffff;
+    x = (x | (x << 8)) & 0x00ff00ff00ff00ff;
+    x = (x | (x << 4)) & 0x0f0f0f0f0f0f0f0f;
+    x = (x | (x << 2)) & 0x3333333333333333;
+    x = (x | (x << 1)) & 0x5555555555555555;
+    x
+}
+
+/// Inverse of [`spread2`].
+#[inline]
+fn compact2(v: u64) -> u64 {
+    let mut x = v & 0x5555555555555555;
+    x = (x | (x >> 1)) & 0x3333333333333333;
+    x = (x | (x >> 2)) & 0x0f0f0f0f0f0f0f0f;
+    x = (x | (x >> 4)) & 0x00ff00ff00ff00ff;
+    x = (x | (x >> 8)) & 0x0000ffff0000ffff;
+    x = (x | (x >> 16)) & 0xffff_ffff;
+    x
+}
+
+/// Spread the low 16 bits of `v` so consecutive bits land 4 apart
+/// (for 4-d interleave).
+#[inline]
+fn spread4(v: u64) -> u64 {
+    let mut x = v & 0xffff;
+    x = (x | (x << 24)) & 0x000000ff000000ff;
+    x = (x | (x << 12)) & 0x000f000f000f000f;
+    x = (x | (x << 6)) & 0x0303030303030303;
+    x = (x | (x << 3)) & 0x1111111111111111;
+    x
+}
+
+/// Inverse of [`spread4`].
+#[inline]
+fn compact4(v: u64) -> u64 {
+    let mut x = v & 0x1111111111111111;
+    x = (x | (x >> 3)) & 0x0303030303030303;
+    x = (x | (x >> 6)) & 0x000f000f000f000f;
+    x = (x | (x >> 12)) & 0x000000ff000000ff;
+    x = (x | (x >> 24)) & 0xffff;
+    x
+}
+
+/// 2-d Morton encode (x fastest). Supports 32 bits per axis.
+#[inline]
+pub fn encode2(x: u64, y: u64) -> u64 {
+    spread2(x) | (spread2(y) << 1)
+}
+
+/// 2-d Morton decode.
+#[inline]
+pub fn decode2(m: u64) -> (u64, u64) {
+    (compact2(m), compact2(m >> 1))
+}
+
+/// 3-d Morton encode (x fastest, then y, then z). Supports 21 bits per
+/// axis — a 2M-cuboid-per-axis grid, far beyond any current dataset
+/// (bock11 at full resolution is ~2^10 cuboids per axis).
+#[inline]
+pub fn encode3(x: u64, y: u64, z: u64) -> u64 {
+    debug_assert!(x < (1 << 21) && y < (1 << 21) && z < (1 << 21));
+    spread3(x) | (spread3(y) << 1) | (spread3(z) << 2)
+}
+
+/// 3-d Morton decode.
+#[inline]
+pub fn decode3(m: u64) -> (u64, u64, u64) {
+    (compact3(m), compact3(m >> 1), compact3(m >> 2))
+}
+
+/// 4-d Morton encode for time-series databases (§3.1): time participates
+/// in the curve so that "time history of a small region" queries stay
+/// local. 16 bits per axis.
+#[inline]
+pub fn encode4(x: u64, y: u64, z: u64, t: u64) -> u64 {
+    debug_assert!(x < (1 << 16) && y < (1 << 16) && z < (1 << 16) && t < (1 << 16));
+    spread4(x) | (spread4(y) << 1) | (spread4(z) << 2) | (spread4(t) << 3)
+}
+
+/// 4-d Morton decode.
+#[inline]
+pub fn decode4(m: u64) -> (u64, u64, u64, u64) {
+    (compact4(m), compact4(m >> 1), compact4(m >> 2), compact4(m >> 3))
+}
+
+/// A contiguous run `[start, start + len)` of Morton codes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Run {
+    pub start: u64,
+    pub len: u64,
+}
+
+/// Enumerate the Morton codes of every cell in the box `[lo, hi)` (cuboid
+/// grid coordinates), sorted ascending. The box is half-open.
+pub fn codes_in_box3(lo: [u64; 3], hi: [u64; 3]) -> Vec<u64> {
+    let mut out = Vec::with_capacity(
+        ((hi[0] - lo[0]) * (hi[1] - lo[1]) * (hi[2] - lo[2])) as usize,
+    );
+    for z in lo[2]..hi[2] {
+        for y in lo[1]..hi[1] {
+            for x in lo[0]..hi[0] {
+                out.push(encode3(x, y, z));
+            }
+        }
+    }
+    out.sort_unstable();
+    out
+}
+
+/// Decompose sorted Morton codes into maximal contiguous runs. Larger
+/// aligned boxes produce fewer, longer runs — the property that turns
+/// cutouts into streaming I/O (§5: "larger cutouts intersect larger
+/// aligned regions of the Morton-order curve producing larger contiguous
+/// I/Os").
+pub fn coalesce_runs(sorted_codes: &[u64]) -> Vec<Run> {
+    let mut runs = Vec::new();
+    let mut iter = sorted_codes.iter().copied();
+    let Some(first) = iter.next() else { return runs };
+    let mut cur = Run { start: first, len: 1 };
+    for c in iter {
+        if c == cur.start + cur.len {
+            cur.len += 1;
+        } else {
+            debug_assert!(c > cur.start + cur.len, "codes must be sorted+unique");
+            runs.push(cur);
+            cur = Run { start: c, len: 1 };
+        }
+    }
+    runs.push(cur);
+    runs
+}
+
+/// Runs covering the box `[lo, hi)` in one call.
+pub fn runs_in_box3(lo: [u64; 3], hi: [u64; 3]) -> Vec<Run> {
+    coalesce_runs(&codes_in_box3(lo, hi))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::property;
+
+    #[test]
+    fn encode3_known_values() {
+        // First cells of the canonical z-order.
+        assert_eq!(encode3(0, 0, 0), 0);
+        assert_eq!(encode3(1, 0, 0), 1);
+        assert_eq!(encode3(0, 1, 0), 2);
+        assert_eq!(encode3(1, 1, 0), 3);
+        assert_eq!(encode3(0, 0, 1), 4);
+        assert_eq!(encode3(1, 1, 1), 7);
+        assert_eq!(encode3(2, 0, 0), 8);
+    }
+
+    #[test]
+    fn encode2_known_values() {
+        assert_eq!(encode2(0, 0), 0);
+        assert_eq!(encode2(1, 0), 1);
+        assert_eq!(encode2(0, 1), 2);
+        assert_eq!(encode2(1, 1), 3);
+        assert_eq!(encode2(2, 0), 4);
+        assert_eq!(encode2(2, 3), 0b1110);
+    }
+
+    #[test]
+    fn roundtrip3_prop() {
+        property("morton3_roundtrip", 2000, |g| {
+            let x = g.u64_below(1 << 21);
+            let y = g.u64_below(1 << 21);
+            let z = g.u64_below(1 << 21);
+            assert_eq!(decode3(encode3(x, y, z)), (x, y, z));
+        });
+    }
+
+    #[test]
+    fn roundtrip2_prop() {
+        property("morton2_roundtrip", 2000, |g| {
+            let x = g.u64_below(1 << 32);
+            let y = g.u64_below(1 << 32);
+            assert_eq!(decode2(encode2(x, y)), (x, y));
+        });
+    }
+
+    #[test]
+    fn roundtrip4_prop() {
+        property("morton4_roundtrip", 2000, |g| {
+            let v: Vec<u64> = (0..4).map(|_| g.u64_below(1 << 16)).collect();
+            assert_eq!(decode4(encode4(v[0], v[1], v[2], v[3])), (v[0], v[1], v[2], v[3]));
+        });
+    }
+
+    #[test]
+    fn monotone_in_each_dimension_prop() {
+        // §3: "cube addresses are strictly non-decreasing in each dimension
+        // so that the index works on subspaces".
+        property("morton3_monotone", 2000, |g| {
+            let x = g.u64_below(1 << 20);
+            let y = g.u64_below(1 << 20);
+            let z = g.u64_below(1 << 20);
+            assert!(encode3(x + 1, y, z) > encode3(x, y, z));
+            assert!(encode3(x, y + 1, z) > encode3(x, y, z));
+            assert!(encode3(x, y, z + 1) > encode3(x, y, z));
+        });
+    }
+
+    #[test]
+    fn aligned_power_of_two_box_is_single_run() {
+        // §3: "any power-of-two aligned subregion is wholly contiguous".
+        for log in 0..4u32 {
+            let s = 1u64 << log;
+            for &(bx, by, bz) in &[(0u64, 0u64, 0u64), (1, 0, 2), (3, 2, 1)] {
+                let lo = [bx * s, by * s, bz * s];
+                let hi = [lo[0] + s, lo[1] + s, lo[2] + s];
+                let runs = runs_in_box3(lo, hi);
+                assert_eq!(runs.len(), 1, "box {lo:?}..{hi:?} not one run: {runs:?}");
+                assert_eq!(runs[0].len, s * s * s);
+            }
+        }
+    }
+
+    #[test]
+    fn runs_cover_box_exactly_prop() {
+        property("runs_cover_box", 300, |g| {
+            let (lo, hi) = g.boxed([64, 64, 32], 16);
+            let codes = codes_in_box3(lo, hi);
+            let runs = coalesce_runs(&codes);
+            let total: u64 = runs.iter().map(|r| r.len).sum();
+            assert_eq!(total, codes.len() as u64);
+            // Expand runs and compare to code set.
+            let mut expanded = Vec::new();
+            for r in &runs {
+                expanded.extend(r.start..r.start + r.len);
+            }
+            assert_eq!(expanded, codes);
+            // Runs must be disjoint and ordered.
+            for w in runs.windows(2) {
+                assert!(w[0].start + w[0].len < w[1].start + 1);
+            }
+        });
+    }
+
+    #[test]
+    fn larger_aligned_boxes_give_longer_mean_runs() {
+        // The clustering property behind Fig 10(b,c)'s continued scaling.
+        let mean_run = |s: u64| {
+            let runs = runs_in_box3([0, 0, 0], [s, s, s]);
+            (s * s * s) as f64 / runs.len() as f64
+        };
+        assert!(mean_run(2) >= mean_run(1));
+        assert!(mean_run(4) > mean_run(2));
+        assert!(mean_run(8) > mean_run(4));
+    }
+
+    #[test]
+    fn empty_and_unit_boxes() {
+        assert!(codes_in_box3([3, 3, 3], [3, 5, 5]).is_empty());
+        let runs = runs_in_box3([5, 7, 2], [6, 8, 3]);
+        assert_eq!(runs, vec![Run { start: encode3(5, 7, 2), len: 1 }]);
+    }
+
+    #[test]
+    fn subspace_property_z0_matches_2d() {
+        // With z fixed at 0, the 3-d curve visits XY cells in an order
+        // consistent with increasing 2-d codes (the "works on subspaces"
+        // claim): encode3(x,y,0) is a strictly monotone function of
+        // encode2(x,y).
+        let mut pairs: Vec<(u64, u64)> = Vec::new();
+        for y in 0..8 {
+            for x in 0..8 {
+                pairs.push((encode2(x, y), encode3(x, y, 0)));
+            }
+        }
+        pairs.sort_unstable();
+        for w in pairs.windows(2) {
+            assert!(w[0].1 < w[1].1);
+        }
+    }
+}

@@ -1,0 +1,325 @@
+//! The multi-resolution hierarchy: XY-halving builds for image databases
+//! and background propagation for annotation databases (§3.1, §3.2,
+//! Figure 5).
+//!
+//! Each level halves X and Y but never Z (sections are poorly resolved),
+//! time, or channels. Annotations are written at a single level and
+//! propagated to all others "as a background, batch I/O job" — the paper
+//! deliberately sacrifices instantaneous cross-resolution consistency for
+//! write throughput; [`Propagator`] is that job.
+
+#[cfg(test)]
+use std::sync::Arc;
+
+use crate::array::DenseVolume;
+use crate::core::Box3;
+use crate::cutout::CutoutService;
+use crate::util::pool::scoped_map;
+use crate::Result;
+
+/// Downsample a volume by 2x in X and Y with box-mean filtering (image
+/// data). Z is untouched. Odd extents truncate (matching the level dims).
+pub fn downsample_mean_u8(src: &DenseVolume<u8>) -> DenseVolume<u8> {
+    let [sx, sy, sz] = src.dims();
+    let (dx, dy) = (sx / 2, sy / 2);
+    let mut out = DenseVolume::zeros([dx.max(1), dy.max(1), sz]);
+    if dx == 0 || dy == 0 {
+        return out;
+    }
+    for z in 0..sz {
+        for y in 0..dy {
+            for x in 0..dx {
+                let s = src.get([2 * x, 2 * y, z]) as u16
+                    + src.get([2 * x + 1, 2 * y, z]) as u16
+                    + src.get([2 * x, 2 * y + 1, z]) as u16
+                    + src.get([2 * x + 1, 2 * y + 1, z]) as u16;
+                out.set([x, y, z], (s / 4) as u8);
+            }
+        }
+    }
+    out
+}
+
+/// Downsample annotation labels by 2x in X and Y: the 2x2 window's
+/// majority non-zero label wins (ties: smallest id — deterministic).
+/// Mean filtering would invent ids, so labels get a vote instead.
+pub fn downsample_labels_u32(src: &DenseVolume<u32>) -> DenseVolume<u32> {
+    let [sx, sy, sz] = src.dims();
+    let (dx, dy) = (sx / 2, sy / 2);
+    let mut out = DenseVolume::zeros([dx.max(1), dy.max(1), sz]);
+    if dx == 0 || dy == 0 {
+        return out;
+    }
+    for z in 0..sz {
+        for y in 0..dy {
+            for x in 0..dx {
+                let w = [
+                    src.get([2 * x, 2 * y, z]),
+                    src.get([2 * x + 1, 2 * y, z]),
+                    src.get([2 * x, 2 * y + 1, z]),
+                    src.get([2 * x + 1, 2 * y + 1, z]),
+                ];
+                out.set([x, y, z], majority_nonzero(w));
+            }
+        }
+    }
+    out
+}
+
+/// Majority non-zero element of a 2x2 window (ties -> smallest id).
+fn majority_nonzero(mut w: [u32; 4]) -> u32 {
+    w.sort_unstable();
+    // After sorting, equal labels are adjacent; scan for the best run
+    // among non-zero values.
+    let (mut best, mut best_n) = (0u32, 0u32);
+    let mut i = 0;
+    while i < 4 {
+        let v = w[i];
+        let mut n = 1;
+        while i + n < 4 && w[i + n] == v {
+            n += 1;
+        }
+        if v != 0 && (n as u32 > best_n) {
+            best = v;
+            best_n = n as u32;
+        }
+        i += n;
+    }
+    best
+}
+
+/// Background hierarchy builder. Drives one [`CutoutService`] (one
+/// project), producing level `l` from level `l-1` cuboid by cuboid.
+pub struct Propagator<'a> {
+    svc: &'a CutoutService,
+    /// Worker threads for the per-cuboid fan-out (a batch I/O job).
+    pub parallelism: usize,
+}
+
+impl<'a> Propagator<'a> {
+    pub fn new(svc: &'a CutoutService) -> Self {
+        Propagator { svc, parallelism: 4 }
+    }
+
+    /// Build level `dst_res` of an image database from `dst_res - 1`.
+    pub fn build_image_level(&self, dst_res: u32) -> Result<u64> {
+        self.build_level(dst_res, downsample_mean_u8)
+    }
+
+    /// Build level `dst_res` of an annotation database from `dst_res - 1`.
+    pub fn build_annotation_level(&self, dst_res: u32) -> Result<u64> {
+        self.build_level(dst_res, downsample_labels_u32)
+    }
+
+    /// Build every level above the project's base resolution.
+    pub fn propagate_image(&self) -> Result<u64> {
+        let levels = self.svc.store().dataset.num_levels();
+        let base = self.svc.store().project.base_resolution;
+        let mut total = 0;
+        for res in base + 1..levels {
+            total += self.build_image_level(res)?;
+        }
+        Ok(total)
+    }
+
+    /// Propagate annotations from the base resolution to all coarser
+    /// levels — the paper's background batch job (§3.2).
+    pub fn propagate_annotations(&self) -> Result<u64> {
+        let levels = self.svc.store().dataset.num_levels();
+        let base = self.svc.store().project.base_resolution;
+        let mut total = 0;
+        for res in base + 1..levels {
+            total += self.build_annotation_level(res)?;
+        }
+        Ok(total)
+    }
+
+    fn build_level<T: crate::array::VoxelScalar>(
+        &self,
+        dst_res: u32,
+        down: fn(&DenseVolume<T>) -> DenseVolume<T>,
+    ) -> Result<u64> {
+        assert!(dst_res >= 1, "level 0 is the source");
+        let ds = &self.svc.store().dataset;
+        let dst = ds.level(dst_res)?.clone();
+        let src = ds.level(dst_res - 1)?.clone();
+        let grid = dst.grid();
+
+        // Enumerate destination cuboids; skip ones whose source region is
+        // empty by reading lazily (cutout returns zeros -> all_zero).
+        let mut coords = Vec::new();
+        for cz in 0..grid[2] {
+            for cy in 0..grid[1] {
+                for cx in 0..grid[0] {
+                    coords.push([cx, cy, cz]);
+                }
+            }
+        }
+        let results = scoped_map(coords.len(), self.parallelism, |i| -> Result<u64> {
+            let c = coords[i];
+            let dst_box = Box3::at(
+                [c[0] * dst.cuboid[0], c[1] * dst.cuboid[1], c[2] * dst.cuboid[2]],
+                dst.cuboid,
+            )
+            .intersect(&dst.bounds());
+            if dst_box.is_empty() {
+                return Ok(0);
+            }
+            // Source region: 2x in XY, same Z, clipped to source bounds.
+            let src_box = Box3::new(
+                [dst_box.lo[0] * 2, dst_box.lo[1] * 2, dst_box.lo[2]],
+                [
+                    (dst_box.hi[0] * 2).min(src.dims[0]),
+                    (dst_box.hi[1] * 2).min(src.dims[1]),
+                    dst_box.hi[2].min(src.dims[2]),
+                ],
+            );
+            if src_box.is_empty() {
+                return Ok(0);
+            }
+            let sv = self.svc.read::<T>(dst_res - 1, 0, 0, src_box)?;
+            if sv.all_zero() {
+                return Ok(0); // lazy: nothing to materialize
+            }
+            let dv = down(&sv);
+            let real_dst = Box3::new(
+                dst_box.lo,
+                [
+                    dst_box.lo[0] + dv.dims()[0].min(dst_box.extent()[0]),
+                    dst_box.lo[1] + dv.dims()[1].min(dst_box.extent()[1]),
+                    dst_box.lo[2] + dv.dims()[2].min(dst_box.extent()[2]),
+                ],
+            );
+            let dv = dv.extract_box(Box3::new([0, 0, 0], real_dst.extent()));
+            self.svc.write(dst_res, 0, 0, real_dst, &dv)?;
+            Ok(1)
+        });
+        let mut built = 0;
+        for r in results {
+            built += r?;
+        }
+        Ok(built)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunkstore::CuboidStore;
+    use crate::core::{DatasetBuilder, Project};
+    use crate::storage::MemStore;
+    use crate::util::Rng;
+
+    fn image_service(dims: [u64; 3], levels: u32) -> CutoutService {
+        let ds = Arc::new(DatasetBuilder::new("t", dims).levels(levels).build());
+        let pr = Arc::new(Project::image("img", "t"));
+        CutoutService::new(Arc::new(CuboidStore::new(ds, pr, Arc::new(MemStore::new()))))
+    }
+
+    fn anno_service(dims: [u64; 3], levels: u32) -> CutoutService {
+        let ds = Arc::new(DatasetBuilder::new("t", dims).levels(levels).build());
+        let pr = Arc::new(Project::annotation("ann", "t"));
+        CutoutService::new(Arc::new(CuboidStore::new(ds, pr, Arc::new(MemStore::new()))))
+    }
+
+    #[test]
+    fn mean_downsample_exact() {
+        let v = DenseVolume::<u8>::from_vec([2, 2, 1], vec![10, 20, 30, 40]).unwrap();
+        let d = downsample_mean_u8(&v);
+        assert_eq!(d.dims(), [1, 1, 1]);
+        assert_eq!(d.get([0, 0, 0]), 25);
+    }
+
+    #[test]
+    fn label_downsample_majority() {
+        // Window (7, 7, 9, 0): 7 wins with two votes.
+        let v = DenseVolume::<u32>::from_vec([2, 2, 1], vec![7, 7, 9, 0]).unwrap();
+        assert_eq!(downsample_labels_u32(&v).get([0, 0, 0]), 7);
+        // Tie (7, 9): smallest id wins.
+        let v = DenseVolume::<u32>::from_vec([2, 2, 1], vec![9, 7, 9, 7]).unwrap();
+        assert_eq!(downsample_labels_u32(&v).get([0, 0, 0]), 7);
+        // All zero stays zero.
+        let v = DenseVolume::<u32>::zeros([2, 2, 1]);
+        assert_eq!(downsample_labels_u32(&v).get([0, 0, 0]), 0);
+    }
+
+    #[test]
+    fn majority_nonzero_cases() {
+        assert_eq!(majority_nonzero([0, 0, 0, 0]), 0);
+        assert_eq!(majority_nonzero([5, 0, 0, 0]), 5);
+        assert_eq!(majority_nonzero([5, 5, 3, 3]), 3); // tie -> smallest
+        assert_eq!(majority_nonzero([5, 5, 5, 3]), 5);
+        assert_eq!(majority_nonzero([1, 2, 3, 4]), 1);
+    }
+
+    #[test]
+    fn image_hierarchy_constant_volume() {
+        // A constant volume stays constant at every level.
+        let svc = image_service([256, 256, 32], 3);
+        let whole = Box3::new([0, 0, 0], [256, 256, 32]);
+        let mut v = DenseVolume::<u8>::zeros(whole.extent());
+        v.fill_box(whole, 100);
+        svc.write(0, 0, 0, whole, &v).unwrap();
+        let built = Propagator::new(&svc).propagate_image().unwrap();
+        assert!(built > 0);
+        for res in 1..3u32 {
+            let dims = svc.store().dataset.level(res).unwrap().dims;
+            let out = svc.read::<u8>(res, 0, 0, Box3::new([0, 0, 0], dims)).unwrap();
+            assert_eq!(out.count_eq(100), dims[0] * dims[1] * dims[2], "res {res}");
+        }
+    }
+
+    #[test]
+    fn image_hierarchy_mean_of_random() {
+        let svc = image_service([128, 128, 16], 2);
+        let whole = Box3::new([0, 0, 0], [128, 128, 16]);
+        let mut rng = Rng::new(17);
+        let n = whole.volume() as usize;
+        let v = DenseVolume::<u8>::from_vec(
+            whole.extent(),
+            (0..n).map(|_| rng.next_u32() as u8).collect(),
+        )
+        .unwrap();
+        svc.write(0, 0, 0, whole, &v).unwrap();
+        Propagator::new(&svc).propagate_image().unwrap();
+        let d = svc.read::<u8>(1, 0, 0, Box3::new([0, 0, 0], [64, 64, 16])).unwrap();
+        // Spot check against direct mean.
+        for &(x, y, z) in &[(0u64, 0u64, 0u64), (10, 20, 5), (63, 63, 15)] {
+            let s = v.get([2 * x, 2 * y, z]) as u16
+                + v.get([2 * x + 1, 2 * y, z]) as u16
+                + v.get([2 * x, 2 * y + 1, z]) as u16
+                + v.get([2 * x + 1, 2 * y + 1, z]) as u16;
+            assert_eq!(d.get([x, y, z]), (s / 4) as u8);
+        }
+    }
+
+    #[test]
+    fn annotation_propagation_preserves_objects() {
+        let svc = anno_service([256, 256, 32], 3);
+        let bx = Box3::new([32, 32, 4], [96, 96, 12]);
+        let mut v = DenseVolume::<u32>::zeros(bx.extent());
+        v.fill_box(Box3::new([0, 0, 0], bx.extent()), 42);
+        svc.write(0, 0, 0, bx, &v).unwrap();
+        Propagator::new(&svc).propagate_annotations().unwrap();
+        // At res 1 the object occupies the half-scale box.
+        let out = svc.read::<u32>(1, 0, 0, Box3::new([16, 16, 4], [48, 48, 12])).unwrap();
+        assert_eq!(out.count_eq(42), 32 * 32 * 8);
+        // At res 2 quarter scale.
+        let out = svc.read::<u32>(2, 0, 0, Box3::new([8, 8, 4], [24, 24, 12])).unwrap();
+        assert_eq!(out.count_eq(42), 16 * 16 * 8);
+    }
+
+    #[test]
+    fn lazy_propagation_skips_empty_space() {
+        let svc = anno_service([512, 512, 32], 2);
+        // One small object in a huge volume.
+        let bx = Box3::new([0, 0, 0], [8, 8, 2]);
+        let mut v = DenseVolume::<u32>::zeros(bx.extent());
+        v.fill_box(Box3::new([0, 0, 0], bx.extent()), 7);
+        svc.write(0, 0, 0, bx, &v).unwrap();
+        Propagator::new(&svc).propagate_annotations().unwrap();
+        // Level 1 must store at most a couple of cuboids.
+        let stored = svc.store().stored_codes(1, 0).unwrap();
+        assert!(stored.len() <= 2, "stored {} cuboids at level 1", stored.len());
+    }
+}

@@ -1,0 +1,174 @@
+//! PJRT runtime: loads the AOT-compiled HLO text artifacts and executes
+//! them from the Rust request path. Python is never involved here — this
+//! is the Layer-3 side of the AOT bridge.
+//!
+//! One [`Runtime`] owns one PJRT CPU client and a registry of compiled
+//! executables (one per model variant, compiled once at load). Execution
+//! is thread-safe; worker threads of the vision pipeline call
+//! [`Runtime::run3d`] concurrently.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::array::DenseVolume;
+use crate::{Error, Result};
+
+/// Static shape registry for the shipped artifacts (must match
+/// python/compile/model.py; checked against artifacts/manifest.txt at
+/// load).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GraphSpec {
+    pub name: &'static str,
+    pub input: [usize; 3],
+    pub output: [usize; 3],
+}
+
+/// The three shipped graphs (dims are Rust-side `[X, Y, Z]`; the HLO
+/// entry shapes are the same buffers labeled `[Z, Y, X]` row-major —
+/// identical memory order, zero copies across the bridge).
+pub const GRAPHS: [GraphSpec; 3] = [
+    GraphSpec { name: "synapse_detector", input: [144, 144, 24], output: [128, 128, 16] },
+    GraphSpec { name: "color_correct", input: [256, 256, 32], output: [256, 256, 32] },
+    GraphSpec { name: "downsample2x", input: [128, 128, 16], output: [64, 64, 16] },
+];
+
+/// Halo the synapse detector expects around its core block `[X, Y, Z]`.
+/// Must exceed the composed filter radius (see python/compile/model.py).
+pub const DETECTOR_HALO: [u64; 3] = [8, 8, 4];
+
+struct Loaded {
+    exe: xla::PjRtLoadedExecutable,
+    spec: GraphSpec,
+}
+
+/// PJRT CPU client + compiled executables.
+pub struct Runtime {
+    _client: xla::PjRtClient,
+    // The xla crate's executables are not Sync; serialize dispatch. CPU
+    // PJRT parallelizes inside a computation, and pipeline-level
+    // parallelism comes from running many blocks through the queue.
+    exes: Mutex<HashMap<String, Loaded>>,
+}
+
+// Safety: the PJRT CPU client is internally synchronized; we additionally
+// serialize all calls through the mutex above.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// Create a runtime and load every artifact found in `dir`
+    /// (`<name>.hlo.txt` files produced by `make artifacts`).
+    pub fn load_dir(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let client = xla::PjRtClient::cpu()?;
+        let mut exes = HashMap::new();
+        for spec in GRAPHS {
+            let path = dir.join(format!("{}.hlo.txt", spec.name));
+            if !path.exists() {
+                continue; // partial artifact sets are fine for tests
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| Error::Other("bad path".into()))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            exes.insert(spec.name.to_string(), Loaded { exe, spec });
+        }
+        if exes.is_empty() {
+            return Err(Error::NotFound(format!(
+                "no artifacts in {dir:?} — run `make artifacts` first"
+            )));
+        }
+        Ok(Runtime { _client: client, exes: Mutex::new(exes) })
+    }
+
+    /// Names of loaded graphs.
+    pub fn graphs(&self) -> Vec<String> {
+        let mut g: Vec<String> = self.exes.lock().unwrap().keys().cloned().collect();
+        g.sort();
+        g
+    }
+
+    /// Spec for a loaded graph.
+    pub fn spec(&self, name: &str) -> Result<GraphSpec> {
+        self.exes
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|l| l.spec)
+            .ok_or_else(|| Error::NotFound(format!("graph '{name}'")))
+    }
+
+    /// Execute a graph on one f32 volume, returning the f32 output volume.
+    ///
+    /// The volume's x-fastest layout maps to the HLO's row-major
+    /// `f32[X,Y,Z]` with dimensions reversed; rather than transpose, we
+    /// declare the literal with reversed dims on both sides, which is a
+    /// pure relabeling (the memory order is identical).
+    pub fn run3d(&self, name: &str, input: &DenseVolume<f32>) -> Result<DenseVolume<f32>> {
+        let guard = self.exes.lock().unwrap();
+        let loaded = guard
+            .get(name)
+            .ok_or_else(|| Error::NotFound(format!("graph '{name}'")))?;
+        let spec = loaded.spec;
+        let dims = input.dims();
+        if [dims[0] as usize, dims[1] as usize, dims[2] as usize] != spec.input {
+            return Err(Error::BadRequest(format!(
+                "graph '{name}' expects input {:?}, got {:?}",
+                spec.input, dims
+            )));
+        }
+        // DenseVolume is x-fastest; XLA literals are row-major (last dim
+        // fastest). Present the buffer as [Z, Y, X].
+        let lit = xla::Literal::vec1(input.as_slice()).reshape(&[
+            dims[2] as i64,
+            dims[1] as i64,
+            dims[0] as i64,
+        ])?;
+        let result = loaded.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let values = out.to_vec::<f32>()?;
+        drop(guard);
+        DenseVolume::from_vec(
+            [spec.output[0] as u64, spec.output[1] as u64, spec.output[2] as u64],
+            values,
+        )
+    }
+}
+
+/// Default artifact directory: `$OCPD_ARTIFACTS` or `./artifacts`.
+pub fn artifact_dir() -> std::path::PathBuf {
+    std::env::var("OCPD_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime tests that need artifacts live in rust/tests/pipeline_e2e.rs
+    // (they require `make artifacts`). Here: spec registry sanity.
+
+    #[test]
+    fn graph_specs_consistent() {
+        for g in GRAPHS {
+            assert!(g.input.iter().all(|&d| d > 0));
+            assert!(g.output.iter().all(|&d| d > 0));
+        }
+        // Detector: input = output + 2 * halo.
+        let det = GRAPHS[0];
+        for a in 0..3 {
+            assert_eq!(det.input[a], det.output[a] + 2 * DETECTOR_HALO[a] as usize);
+        }
+        // Downsample halves XY only.
+        let ds = GRAPHS[2];
+        assert_eq!(ds.output, [ds.input[0] / 2, ds.input[1] / 2, ds.input[2]]);
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(Runtime::load_dir("/nonexistent-ocpd-artifacts").is_err());
+    }
+}

@@ -1,0 +1,247 @@
+//! Morton-curve sharding: partitioning the space-filling curve across
+//! nodes (§4.1 "Data Distribution", Figure 4).
+//!
+//! The paper shards its largest dataset (bock11) by partitioning the
+//! Morton-order curve at the application level: "The application is aware
+//! of the data distribution and redirects requests to the node that
+//! stores the data." A [`ShardMap`] holds the split points; the router
+//! groups cuboid keys by owning node so each node receives one batched,
+//! Morton-ordered request.
+
+use crate::{Error, Result};
+
+/// Identifies a node within a cluster.
+pub type NodeId = usize;
+
+/// A partition of the Morton key space: `splits[i]` is the first key of
+/// shard `i + 1`. `n` shards need `n - 1` ascending split points.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardMap {
+    splits: Vec<u64>,
+    nodes: Vec<NodeId>,
+}
+
+impl ShardMap {
+    /// A single-node (unsharded) map.
+    pub fn single(node: NodeId) -> Self {
+        ShardMap { splits: Vec::new(), nodes: vec![node] }
+    }
+
+    /// Build from explicit split points (ascending) and one node per
+    /// resulting shard.
+    pub fn new(splits: Vec<u64>, nodes: Vec<NodeId>) -> Result<Self> {
+        if nodes.is_empty() {
+            return Err(Error::Cluster("shard map needs >= 1 node".into()));
+        }
+        if nodes.len() != splits.len() + 1 {
+            return Err(Error::Cluster(format!(
+                "{} nodes need {} splits, got {}",
+                nodes.len(),
+                nodes.len() - 1,
+                splits.len()
+            )));
+        }
+        if splits.windows(2).any(|w| w[0] >= w[1]) {
+            return Err(Error::Cluster("split points must be strictly ascending".into()));
+        }
+        Ok(ShardMap { splits, nodes })
+    }
+
+    /// Partition a Morton key space of `total_keys` evenly across `nodes`
+    /// — the Figure 4 construction (equal curve segments per node).
+    pub fn even(total_keys: u64, nodes: Vec<NodeId>) -> Result<Self> {
+        let n = nodes.len() as u64;
+        if n == 0 {
+            return Err(Error::Cluster("shard map needs >= 1 node".into()));
+        }
+        let splits = (1..n).map(|i| i * total_keys.div_ceil(n)).collect();
+        ShardMap::new(splits, nodes)
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn nodes(&self) -> &[NodeId] {
+        &self.nodes
+    }
+
+    /// The node owning `key` (binary search over split points).
+    pub fn node_for(&self, key: u64) -> NodeId {
+        let shard = self.splits.partition_point(|&s| s <= key);
+        self.nodes[shard]
+    }
+
+    /// Group sorted `keys` by owning node, preserving order within each
+    /// group — the router's batching step. Returns `(node, keys)` pairs
+    /// in curve order; for "the vast majority of cutout requests" the
+    /// result is a single group (§4.1).
+    pub fn route(&self, keys: &[u64]) -> Vec<(NodeId, Vec<u64>)> {
+        let mut out: Vec<(NodeId, Vec<u64>)> = Vec::new();
+        for &k in keys {
+            let node = self.node_for(k);
+            match out.last_mut() {
+                Some((n, ks)) if *n == node => ks.push(k),
+                _ => out.push((node, vec![k])),
+            }
+        }
+        out
+    }
+
+    /// Split a contiguous key run `[start, start+len)` into per-shard
+    /// sub-runs (runs never straddle a shard boundary after this).
+    pub fn route_run(&self, start: u64, len: u64) -> Vec<(NodeId, u64, u64)> {
+        let mut out = Vec::new();
+        let end = start + len;
+        let mut cur = start;
+        while cur < end {
+            let node = self.node_for(cur);
+            let next_split = self
+                .splits
+                .iter()
+                .copied()
+                .find(|&s| s > cur)
+                .unwrap_or(u64::MAX)
+                .min(end);
+            out.push((node, cur, next_split - cur));
+            cur = next_split;
+        }
+        out
+    }
+
+    /// Rebalance onto a new node set: returns the new map and the key
+    /// ranges that change owner as `(lo, hi, from, to)`. (Data movement
+    /// itself is [`crate::storage::migrate`].)
+    pub fn rebalance(
+        &self,
+        total_keys: u64,
+        nodes: Vec<NodeId>,
+    ) -> Result<(ShardMap, Vec<(u64, u64, NodeId, NodeId)>)> {
+        let new = ShardMap::even(total_keys, nodes)?;
+        let mut bounds: Vec<u64> = vec![0, total_keys];
+        bounds.extend(&self.splits);
+        bounds.extend(&new.splits);
+        bounds.sort_unstable();
+        bounds.dedup();
+        let mut moves = Vec::new();
+        for w in bounds.windows(2) {
+            let (lo, hi) = (w[0], w[1]);
+            if lo >= total_keys {
+                break;
+            }
+            let (from, to) = (self.node_for(lo), new.node_for(lo));
+            if from != to {
+                moves.push((lo, hi.min(total_keys), from, to));
+            }
+        }
+        Ok((new, moves))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::property;
+
+    #[test]
+    fn single_routes_everything() {
+        let m = ShardMap::single(3);
+        assert_eq!(m.node_for(0), 3);
+        assert_eq!(m.node_for(u64::MAX), 3);
+        assert_eq!(m.route(&[1, 5, 9]), vec![(3, vec![1, 5, 9])]);
+    }
+
+    #[test]
+    fn even_partition_figure4() {
+        // 16 cuboids over 4 nodes, as in Figure 4.
+        let m = ShardMap::even(16, vec![0, 1, 2, 3]).unwrap();
+        for k in 0..4 {
+            assert_eq!(m.node_for(k), 0);
+        }
+        for k in 4..8 {
+            assert_eq!(m.node_for(k), 1);
+        }
+        for k in 12..16 {
+            assert_eq!(m.node_for(k), 3);
+        }
+    }
+
+    #[test]
+    fn invalid_maps_rejected() {
+        assert!(ShardMap::new(vec![], vec![]).is_err());
+        assert!(ShardMap::new(vec![5], vec![0]).is_err());
+        assert!(ShardMap::new(vec![5, 5], vec![0, 1, 2]).is_err());
+        assert!(ShardMap::new(vec![9, 5], vec![0, 1, 2]).is_err());
+    }
+
+    #[test]
+    fn route_groups_contiguously() {
+        let m = ShardMap::even(100, vec![10, 20]).unwrap();
+        let routed = m.route(&[1, 2, 49, 50, 60, 99]);
+        assert_eq!(routed, vec![(10, vec![1, 2, 49]), (20, vec![50, 60, 99])]);
+    }
+
+    #[test]
+    fn route_run_splits_at_boundaries() {
+        let m = ShardMap::even(100, vec![0, 1]).unwrap(); // split at 50
+        assert_eq!(m.route_run(40, 20), vec![(0, 40, 10), (1, 50, 10)]);
+        assert_eq!(m.route_run(0, 50), vec![(0, 0, 50)]);
+        assert_eq!(m.route_run(50, 10), vec![(1, 50, 10)]);
+    }
+
+    #[test]
+    fn routing_prop_consistent() {
+        property("shard_route_consistent", 300, |g| {
+            let n_nodes = 1 + g.usize_below(6);
+            let total = 1 + g.u64_below(10_000);
+            let m = ShardMap::even(total, (0..n_nodes).collect()).unwrap();
+            let mut keys = g.vec_u64(32, total);
+            keys.sort_unstable();
+            let routed = m.route(&keys);
+            let mut rebuilt = Vec::new();
+            for (node, ks) in &routed {
+                for &k in ks {
+                    assert_eq!(m.node_for(k), *node);
+                    rebuilt.push(k);
+                }
+            }
+            assert_eq!(rebuilt, keys);
+        });
+    }
+
+    #[test]
+    fn route_run_prop_covers_exactly() {
+        property("route_run_covers", 300, |g| {
+            let total = 16 + g.u64_below(4096);
+            let n = 1 + g.usize_below(5);
+            let m = ShardMap::even(total, (0..n).collect()).unwrap();
+            let start = g.u64_below(total);
+            let len = 1 + g.u64_below(total - start);
+            let parts = m.route_run(start, len);
+            // Parts tile [start, start+len) exactly.
+            let mut cur = start;
+            for (node, lo, l) in &parts {
+                assert_eq!(*lo, cur);
+                assert!(*l > 0);
+                assert_eq!(m.node_for(*lo), *node);
+                assert_eq!(m.node_for(lo + l - 1), *node, "run must stay on one shard");
+                cur = lo + l;
+            }
+            assert_eq!(cur, start + len);
+        });
+    }
+
+    #[test]
+    fn rebalance_moves_cover_changes() {
+        let m = ShardMap::even(100, vec![0, 1]).unwrap();
+        let (new, moves) = m.rebalance(100, vec![0, 1, 2]).unwrap();
+        assert_eq!(new.num_shards(), 3);
+        assert!(!moves.is_empty());
+        for (lo, hi, from, to) in moves {
+            assert_ne!(from, to);
+            assert!(lo < hi);
+            assert_eq!(m.node_for(lo), from);
+            assert_eq!(new.node_for(lo), to);
+        }
+    }
+}

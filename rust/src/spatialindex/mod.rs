@@ -1,0 +1,323 @@
+//! The sparse per-object spatial index (§4.2 "Spatial Queries and
+//! Indexing Objects", Figure 9).
+//!
+//! For each annotation identifier the index stores the list of Morton
+//! locations of the cuboids containing that object's voxels. The design
+//! choices mirror the paper:
+//!
+//! * **append-mostly**: writes collect the cuboids newly touched by each
+//!   id and append them to the blob in one batch transaction;
+//! * **batch retrieval**: reading an object fetches its cuboid list,
+//!   sorts it, and retrieves all cuboids in a single Morton-ordered
+//!   sequential pass;
+//! * the blob is delta-varint coded (the paper stored a Python array and
+//!   notes the index "is not particularly compact" — ours is).
+//!
+//! The per-table mutex emulates MySQL's transactional serialization on
+//! index updates; under many parallel writers this is precisely the
+//! contention that collapses write throughput in Figure 12.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::core::Project;
+use crate::storage::Engine;
+use crate::util::codec::{Dec, Enc};
+use crate::Result;
+
+/// Per-object cuboid-list index for one project.
+pub struct SpatialIndex {
+    engine: Engine,
+    project: Arc<Project>,
+    /// Commit lock: the write phase of an index transaction is atomic.
+    txn: Mutex<()>,
+    /// Commit counter for optimistic validation: an appender reads its
+    /// entries lock-free, then validates nothing committed in between;
+    /// on conflict it retries (re-reading — wasted I/O). This is the
+    /// MySQL behaviour behind Figure 12's write collapse: "Parallel
+    /// writes to the spatial index result in transaction retries and
+    /// timeouts ... due to contention."
+    version: AtomicU64,
+    /// Observability: conflicted (retried) transactions.
+    pub retries: crate::metrics::Counter,
+}
+
+/// Optimistic attempts before falling back to a pessimistic hold.
+const MAX_OPTIMISTIC: usize = 3;
+
+impl SpatialIndex {
+    pub fn new(project: Arc<Project>, engine: Engine) -> Self {
+        SpatialIndex {
+            engine,
+            project,
+            txn: Mutex::new(()),
+            version: AtomicU64::new(0),
+            retries: crate::metrics::Counter::default(),
+        }
+    }
+
+    fn decode_list(buf: &[u8]) -> Result<Vec<u64>> {
+        Dec::new(buf).sorted_u64s()
+    }
+
+    fn encode_list(codes: &[u64]) -> Vec<u8> {
+        let mut e = Enc::with_capacity(codes.len() + 8);
+        e.sorted_u64s(codes);
+        e.finish()
+    }
+
+    /// The sorted cuboid (Morton) list for `id` at `res` — empty if the
+    /// object has no voxels there.
+    pub fn cuboids_of(&self, res: u32, id: u32) -> Result<Vec<u64>> {
+        match self.engine.get(&self.project.index_table(res), id as u64)? {
+            Some(v) => Self::decode_list(&v),
+            None => Ok(Vec::new()),
+        }
+    }
+
+    /// Append newly-touched cuboid locations for many objects in one
+    /// transaction: the paper's steps (4) read index entries, (5) union
+    /// new and old lists, (6) write back (§5).
+    ///
+    /// Concurrency follows MySQL's optimistic pattern: the read+union
+    /// phase runs lock-free; the commit validates that no other
+    /// transaction committed in between, otherwise the whole read phase
+    /// is retried (wasted I/O — the source of Figure 12's write-
+    /// throughput collapse under many parallel annotators). After
+    /// [`MAX_OPTIMISTIC`] conflicts the appender commits pessimistically.
+    pub fn append_batch(&self, res: u32, updates: &HashMap<u32, Vec<u64>>) -> Result<()> {
+        if updates.is_empty() {
+            return Ok(());
+        }
+        let table = self.project.index_table(res);
+        // Deterministic order for reproducible I/O patterns.
+        let mut ids: Vec<u32> = updates.keys().copied().collect();
+        ids.sort_unstable();
+
+        for attempt in 0.. {
+            let pessimistic = attempt >= MAX_OPTIMISTIC;
+            let held = if pessimistic { Some(self.txn.lock().unwrap()) } else { None };
+            let v0 = self.version.load(Ordering::Acquire);
+
+            // (4) + (5): read entries and union in the new locations.
+            let mut batch = Vec::with_capacity(ids.len());
+            for &id in &ids {
+                let new_codes = &updates[&id];
+                let mut list = match self.engine.get(&table, id as u64)? {
+                    Some(v) => Self::decode_list(&v)?,
+                    None => Vec::new(),
+                };
+                let before = list.len();
+                list.extend(new_codes.iter().copied());
+                list.sort_unstable();
+                list.dedup();
+                if list.len() != before {
+                    batch.push((id as u64, Self::encode_list(&list)));
+                }
+            }
+
+            // (6): commit under the lock, validating the read snapshot.
+            let _commit = match held {
+                Some(g) => g,
+                None => self.txn.lock().unwrap(),
+            };
+            if !pessimistic && self.version.load(Ordering::Acquire) != v0 {
+                // Conflict: another transaction committed entries we may
+                // have read stale. Back off (MySQL's lock-wait behaviour
+                // — the "transaction retries and timeouts" of §5) and
+                // retry from the read phase.
+                self.retries.inc();
+                drop(_commit);
+                std::thread::sleep(std::time::Duration::from_millis(
+                    25 * (attempt as u64 + 1),
+                ));
+                continue;
+            }
+            if !batch.is_empty() {
+                self.engine.put_batch(&table, &batch)?;
+            }
+            self.version.fetch_add(1, Ordering::AcqRel);
+            return Ok(());
+        }
+        unreachable!()
+    }
+
+    /// Remove cuboid locations for an object (annotation deletion — rare;
+    /// the workload is append-mostly).
+    pub fn remove(&self, res: u32, id: u32, codes: &[u64]) -> Result<()> {
+        let _txn = self.txn.lock().unwrap();
+        let table = self.project.index_table(res);
+        let mut list = match self.engine.get(&table, id as u64)? {
+            Some(v) => Self::decode_list(&v)?,
+            None => return Ok(()),
+        };
+        list.retain(|c| !codes.contains(c));
+        if list.is_empty() {
+            self.engine.delete(&table, id as u64)
+        } else {
+            self.engine.put(&table, id as u64, &Self::encode_list(&list))
+        }
+    }
+
+    /// Drop an object's index entry entirely.
+    pub fn delete(&self, res: u32, id: u32) -> Result<()> {
+        let _txn = self.txn.lock().unwrap();
+        self.engine.delete(&self.project.index_table(res), id as u64)
+    }
+
+    /// All indexed object ids at `res`.
+    pub fn ids(&self, res: u32) -> Result<Vec<u32>> {
+        Ok(self
+            .engine
+            .keys(&self.project.index_table(res))?
+            .into_iter()
+            .map(|k| k as u32)
+            .collect())
+    }
+
+    /// Stored index size for an object, bytes (compactness ablation).
+    pub fn entry_bytes(&self, res: u32, id: u32) -> Result<usize> {
+        Ok(self
+            .engine
+            .get(&self.project.index_table(res), id as u64)?
+            .map(|v| v.len())
+            .unwrap_or(0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::morton;
+    use crate::storage::MemStore;
+    use crate::util::prop::property;
+
+    fn index() -> SpatialIndex {
+        SpatialIndex::new(
+            Arc::new(Project::annotation("ann", "ds")),
+            Arc::new(MemStore::new()),
+        )
+    }
+
+    #[test]
+    fn append_union_sorted_dedup() {
+        let idx = index();
+        let mut u = HashMap::new();
+        u.insert(7u32, vec![30u64, 10, 20]);
+        idx.append_batch(0, &u).unwrap();
+        let mut u2 = HashMap::new();
+        u2.insert(7u32, vec![20u64, 5, 40]);
+        idx.append_batch(0, &u2).unwrap();
+        assert_eq!(idx.cuboids_of(0, 7).unwrap(), vec![5, 10, 20, 30, 40]);
+    }
+
+    #[test]
+    fn missing_object_empty() {
+        let idx = index();
+        assert!(idx.cuboids_of(0, 999).unwrap().is_empty());
+        assert_eq!(idx.entry_bytes(0, 999).unwrap(), 0);
+    }
+
+    #[test]
+    fn resolutions_are_separate() {
+        let idx = index();
+        let mut u = HashMap::new();
+        u.insert(1u32, vec![1u64]);
+        idx.append_batch(0, &u).unwrap();
+        assert!(idx.cuboids_of(1, 1).unwrap().is_empty());
+        assert_eq!(idx.cuboids_of(0, 1).unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn remove_and_delete() {
+        let idx = index();
+        let mut u = HashMap::new();
+        u.insert(3u32, vec![1u64, 2, 3]);
+        idx.append_batch(0, &u).unwrap();
+        idx.remove(0, 3, &[2]).unwrap();
+        assert_eq!(idx.cuboids_of(0, 3).unwrap(), vec![1, 3]);
+        idx.remove(0, 3, &[1, 3]).unwrap();
+        assert!(idx.cuboids_of(0, 3).unwrap().is_empty());
+        // Delete is idempotent.
+        idx.delete(0, 3).unwrap();
+    }
+
+    #[test]
+    fn ids_lists_all() {
+        let idx = index();
+        let mut u = HashMap::new();
+        u.insert(10u32, vec![1u64]);
+        u.insert(20u32, vec![2u64]);
+        idx.append_batch(0, &u).unwrap();
+        let mut ids = idx.ids(0).unwrap();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![10, 20]);
+    }
+
+    #[test]
+    fn blob_is_compact_for_clustered_objects() {
+        // Neural objects are long and skinny: their cuboids cluster along
+        // the curve, so delta coding stores ~1-2 bytes per cuboid.
+        let idx = index();
+        let codes: Vec<u64> =
+            (0..1000u64).map(|i| morton::encode3(i % 64, i / 64, 3)).collect();
+        let mut sorted = codes.clone();
+        sorted.sort_unstable();
+        let mut u = HashMap::new();
+        u.insert(1u32, sorted);
+        idx.append_batch(0, &u).unwrap();
+        let bytes = idx.entry_bytes(0, 1).unwrap();
+        assert!(bytes < 4_000, "index blob {bytes}B for 1000 cuboids");
+    }
+
+    #[test]
+    fn concurrent_appends_serialize_correctly() {
+        let idx = Arc::new(index());
+        crossbeam_utils::thread::scope(|s| {
+            for w in 0..8u64 {
+                let idx = Arc::clone(&idx);
+                s.spawn(move |_| {
+                    for i in 0..50u64 {
+                        let mut u = HashMap::new();
+                        u.insert(1u32, vec![w * 1000 + i]);
+                        idx.append_batch(0, &u).unwrap();
+                    }
+                });
+            }
+        })
+        .unwrap();
+        assert_eq!(idx.cuboids_of(0, 1).unwrap().len(), 400);
+    }
+
+    #[test]
+    fn append_batch_prop_union_semantics() {
+        property("index_union", 100, |g| {
+            let idx = index();
+            let na = g.usize_below(40);
+            let a = {
+                let mut v = g.vec_u64(na, 500);
+                v.sort_unstable();
+                v.dedup();
+                v
+            };
+            let nb = g.usize_below(40);
+            let b = {
+                let mut v = g.vec_u64(nb, 500);
+                v.sort_unstable();
+                v.dedup();
+                v
+            };
+            let mut u = HashMap::new();
+            u.insert(1u32, a.clone());
+            idx.append_batch(0, &u).unwrap();
+            let mut u2 = HashMap::new();
+            u2.insert(1u32, b.clone());
+            idx.append_batch(0, &u2).unwrap();
+            let mut expect: Vec<u64> = a.into_iter().chain(b).collect();
+            expect.sort_unstable();
+            expect.dedup();
+            assert_eq!(idx.cuboids_of(0, 1).unwrap(), expect);
+        });
+    }
+}

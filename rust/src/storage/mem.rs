@@ -1,0 +1,184 @@
+//! In-memory storage engine: B-tree tables under an RwLock.
+//!
+//! Serves as the "data in memory" configuration of the paper's evaluation
+//! (Figure 10 "aligned memory") and as the content store under
+//! [`super::sim::SimulatedStore`].
+
+use std::collections::BTreeMap;
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+use crate::storage::{Blob, IoStats, StorageEngine};
+use crate::Result;
+
+type Table = BTreeMap<u64, Blob>;
+
+/// In-memory engine. Values are `Arc`-shared so concurrent readers never
+/// copy under the lock.
+pub struct MemStore {
+    tables: RwLock<HashMap<String, Table>>,
+    stats: IoStats,
+}
+
+impl MemStore {
+    pub fn new() -> Self {
+        MemStore { tables: RwLock::new(HashMap::new()), stats: IoStats::default() }
+    }
+
+    /// Total stored bytes (capacity accounting for migration decisions).
+    pub fn stored_bytes(&self) -> u64 {
+        let t = self.tables.read().unwrap();
+        t.values()
+            .map(|tab| tab.values().map(|v| v.len() as u64).sum::<u64>())
+            .sum()
+    }
+
+    /// Number of stored values across all tables.
+    pub fn stored_values(&self) -> u64 {
+        let t = self.tables.read().unwrap();
+        t.values().map(|tab| tab.len() as u64).sum()
+    }
+}
+
+impl Default for MemStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StorageEngine for MemStore {
+    fn name(&self) -> &str {
+        "mem"
+    }
+
+    fn get(&self, table: &str, key: u64) -> Result<Option<Blob>> {
+        let tables = self.tables.read().unwrap();
+        let v = tables.get(table).and_then(|t| t.get(&key)).map(Arc::clone);
+        match &v {
+            Some(v) => self.stats.record_read(v.len()),
+            None => self.stats.record_miss(),
+        }
+        Ok(v)
+    }
+
+    fn put(&self, table: &str, key: u64, value: &[u8]) -> Result<()> {
+        self.stats.record_write(value.len());
+        let mut tables = self.tables.write().unwrap();
+        tables
+            .entry(table.to_string())
+            .or_default()
+            .insert(key, Arc::new(value.to_vec()));
+        Ok(())
+    }
+
+    fn delete(&self, table: &str, key: u64) -> Result<()> {
+        let mut tables = self.tables.write().unwrap();
+        if let Some(t) = tables.get_mut(table) {
+            t.remove(&key);
+        }
+        Ok(())
+    }
+
+    fn get_batch(&self, table: &str, keys: &[u64]) -> Result<Vec<Option<Blob>>> {
+        let tables = self.tables.read().unwrap();
+        let t = tables.get(table);
+        Ok(keys
+            .iter()
+            .map(|k| {
+                let v = t.and_then(|t| t.get(k)).map(Arc::clone);
+                match &v {
+                    Some(v) => self.stats.record_read(v.len()),
+                    None => self.stats.record_miss(),
+                }
+                v
+            })
+            .collect())
+    }
+
+    fn put_batch(&self, table: &str, items: &[(u64, Vec<u8>)]) -> Result<()> {
+        let mut tables = self.tables.write().unwrap();
+        let t = tables.entry(table.to_string()).or_default();
+        for (k, v) in items {
+            self.stats.record_write(v.len());
+            t.insert(*k, Arc::new(v.clone()));
+        }
+        Ok(())
+    }
+
+    fn get_run(&self, table: &str, start: u64, len: u64) -> Result<Vec<(u64, Blob)>> {
+        self.stats.record_run_read();
+        let tables = self.tables.read().unwrap();
+        let Some(t) = tables.get(table) else { return Ok(Vec::new()) };
+        let end = start.saturating_add(len);
+        let out: Vec<(u64, Blob)> = t
+            .range(start..end)
+            .map(|(k, v)| {
+                self.stats.record_read(v.len());
+                (*k, Arc::clone(v))
+            })
+            .collect();
+        Ok(out)
+    }
+
+    fn keys(&self, table: &str) -> Result<Vec<u64>> {
+        let tables = self.tables.read().unwrap();
+        Ok(tables.get(table).map(|t| t.keys().copied().collect()).unwrap_or_default())
+    }
+
+    fn tables(&self) -> Result<Vec<String>> {
+        let tables = self.tables.read().unwrap();
+        let mut names: Vec<String> = tables.keys().cloned().collect();
+        names.sort();
+        Ok(names)
+    }
+
+    fn stats(&self) -> &IoStats {
+        &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conformance() {
+        crate::storage::tests::conformance(&MemStore::new());
+    }
+
+    #[test]
+    fn accounting() {
+        let m = MemStore::new();
+        m.put("a", 1, &[0u8; 100]).unwrap();
+        m.put("b", 2, &[0u8; 50]).unwrap();
+        assert_eq!(m.stored_bytes(), 150);
+        assert_eq!(m.stored_values(), 2);
+        m.put("a", 1, &[0u8; 10]).unwrap(); // replace shrinks
+        assert_eq!(m.stored_bytes(), 60);
+    }
+
+    #[test]
+    fn concurrent_readers_and_writers() {
+        let m = std::sync::Arc::new(MemStore::new());
+        crossbeam_utils::thread::scope(|s| {
+            for w in 0..4u64 {
+                let m = std::sync::Arc::clone(&m);
+                s.spawn(move |_| {
+                    for i in 0..500u64 {
+                        m.put("t", w * 1000 + i, &i.to_le_bytes()).unwrap();
+                    }
+                });
+            }
+            for _ in 0..4 {
+                let m = std::sync::Arc::clone(&m);
+                s.spawn(move |_| {
+                    for i in 0..500u64 {
+                        let _ = m.get("t", i).unwrap();
+                    }
+                });
+            }
+        })
+        .unwrap();
+        assert_eq!(m.stored_values(), 2000);
+    }
+}

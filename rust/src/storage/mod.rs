@@ -1,0 +1,243 @@
+//! Storage engines: keyed BLOB tables with batch and contiguous-run reads.
+//!
+//! The paper stores cuboids as BLOBs in MySQL tables laid out in Morton
+//! order on RAID-6 disk arrays, with a separate class of SSD nodes for
+//! random-write workloads (§4.1). Here a [`StorageEngine`] abstracts the
+//! same access pattern:
+//!
+//! * [`MemStore`] — in-memory B-tree tables (the "in cache / aligned
+//!   memory" configuration of Figure 10).
+//! * [`FileStore`] — append-log + page-table persistence on the local
+//!   filesystem.
+//! * [`sim::SimulatedStore`] — wraps another engine with a device cost
+//!   model (HDD array vs. SSD) so the benches reproduce the *shape* of the
+//!   paper's I/O results without the paper's hardware (DESIGN.md §1).
+//!
+//! Keys are `u64` (Morton codes or object ids); tables are named by the
+//! project helpers in [`crate::core::Project`].
+
+mod file;
+mod mem;
+pub mod sim;
+
+pub use file::FileStore;
+pub use mem::MemStore;
+pub use sim::{DeviceProfile, SimulatedStore};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::Result;
+
+/// Shared value blob: engines return `Arc`-shared bytes so the cutout hot
+/// path never copies under (or after) the engine lock — a §Perf change
+/// (EXPERIMENTS.md): the memory configuration previously copied every
+/// cuboid once in the engine and once in assembly.
+pub type Blob = std::sync::Arc<Vec<u8>>;
+
+/// Cumulative I/O statistics for an engine (feeds the benches and the
+/// `ocpd info` CLI).
+#[derive(Debug, Default)]
+pub struct IoStats {
+    pub reads: AtomicU64,
+    pub read_bytes: AtomicU64,
+    pub writes: AtomicU64,
+    pub write_bytes: AtomicU64,
+    pub run_reads: AtomicU64,
+    pub misses: AtomicU64,
+}
+
+impl IoStats {
+    pub fn record_read(&self, bytes: usize) {
+        self.reads.fetch_add(1, Ordering::Relaxed);
+        self.read_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_write(&self, bytes: usize) {
+        self.writes.fetch_add(1, Ordering::Relaxed);
+        self.write_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_miss(&self) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_run_read(&self) {
+        self.run_reads.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> IoSnapshot {
+        IoSnapshot {
+            reads: self.reads.load(Ordering::Relaxed),
+            read_bytes: self.read_bytes.load(Ordering::Relaxed),
+            writes: self.writes.load(Ordering::Relaxed),
+            write_bytes: self.write_bytes.load(Ordering::Relaxed),
+            run_reads: self.run_reads.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of [`IoStats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct IoSnapshot {
+    pub reads: u64,
+    pub read_bytes: u64,
+    pub writes: u64,
+    pub write_bytes: u64,
+    pub run_reads: u64,
+    pub misses: u64,
+}
+
+/// A keyed BLOB store with batch and contiguous-run access.
+///
+/// `get_run` is the Morton payoff: a contiguous key run maps to physically
+/// sequential storage, so engines can serve it as one streaming read
+/// instead of `len` random reads.
+pub trait StorageEngine: Send + Sync {
+    /// Engine name for logs/benches.
+    fn name(&self) -> &str;
+
+    /// Read one value.
+    fn get(&self, table: &str, key: u64) -> Result<Option<Blob>>;
+
+    /// Write one value (create or replace).
+    fn put(&self, table: &str, key: u64, value: &[u8]) -> Result<()>;
+
+    /// Delete one value; no-op if absent.
+    fn delete(&self, table: &str, key: u64) -> Result<()>;
+
+    /// Read many keys. Default: loop over `get`.
+    fn get_batch(&self, table: &str, keys: &[u64]) -> Result<Vec<Option<Blob>>> {
+        keys.iter().map(|&k| self.get(table, k)).collect()
+    }
+
+    /// Write many values in one transaction-like batch.
+    fn put_batch(&self, table: &str, items: &[(u64, Vec<u8>)]) -> Result<()> {
+        for (k, v) in items {
+            self.put(table, *k, v)?;
+        }
+        Ok(())
+    }
+
+    /// Read every present key in `[start, start + len)` — the contiguous
+    /// Morton-run read. Returns (key, value) pairs in key order.
+    fn get_run(&self, table: &str, start: u64, len: u64) -> Result<Vec<(u64, Blob)>>;
+
+    /// All keys in a table, ascending (migration, hierarchy builds).
+    fn keys(&self, table: &str) -> Result<Vec<u64>>;
+
+    /// Tables present in the engine.
+    fn tables(&self) -> Result<Vec<String>>;
+
+    /// Cumulative stats.
+    fn stats(&self) -> &IoStats;
+
+    /// Flush durable state (no-op for memory engines).
+    fn sync(&self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Shared handle to any engine.
+pub type Engine = Arc<dyn StorageEngine>;
+
+/// Copy every table (or one table) from `src` to `dst` — the
+/// dump-and-restore migration the paper performs when an annotation
+/// project stops being actively written and moves off the SSD node
+/// (§4.1 "Data Distribution").
+pub fn migrate(src: &dyn StorageEngine, dst: &dyn StorageEngine, table: Option<&str>) -> Result<u64> {
+    let tables = match table {
+        Some(t) => vec![t.to_string()],
+        None => src.tables()?,
+    };
+    let mut moved = 0u64;
+    for t in tables {
+        let keys = src.keys(&t)?;
+        // Dump in key order (sequential source scan), restore as batches.
+        let mut batch = Vec::with_capacity(256);
+        for k in keys {
+            if let Some(v) = src.get(&t, k)? {
+                batch.push((k, (*v).clone()));
+                moved += 1;
+            }
+            if batch.len() >= 256 {
+                dst.put_batch(&t, &batch)?;
+                batch.clear();
+            }
+        }
+        if !batch.is_empty() {
+            dst.put_batch(&t, &batch)?;
+        }
+    }
+    Ok(moved)
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+
+    /// Engine conformance suite, run against every implementation.
+    pub(crate) fn conformance(engine: &dyn StorageEngine) {
+        let t = "conf/test";
+        assert_eq!(engine.get(t, 1).unwrap(), None);
+        engine.put(t, 1, b"one").unwrap();
+        engine.put(t, 5, b"five").unwrap();
+        engine.put(t, 3, b"three").unwrap();
+        assert_eq!(**engine.get(t, 1).unwrap().unwrap(), *b"one");
+        assert_eq!(engine.get(t, 2).unwrap(), None);
+
+        // Replace.
+        engine.put(t, 1, b"uno").unwrap();
+        assert_eq!(**engine.get(t, 1).unwrap().unwrap(), *b"uno");
+
+        // Batch get preserves order and gaps.
+        let b = engine.get_batch(t, &[5, 2, 1]).unwrap();
+        assert_eq!(b[0].as_deref().map(|v| &v[..]), Some(b"five".as_ref()));
+        assert_eq!(b[1], None);
+        assert_eq!(b[2].as_deref().map(|v| &v[..]), Some(b"uno".as_ref()));
+
+        // Run read: keys in [1, 6) present = 1, 3, 5.
+        let run = engine.get_run(t, 1, 5).unwrap();
+        assert_eq!(run.iter().map(|(k, _)| *k).collect::<Vec<_>>(), vec![1, 3, 5]);
+
+        // Keys ascending.
+        assert_eq!(engine.keys(t).unwrap(), vec![1, 3, 5]);
+
+        // Delete.
+        engine.delete(t, 3).unwrap();
+        assert_eq!(engine.get(t, 3).unwrap(), None);
+        engine.delete(t, 3).unwrap(); // idempotent
+
+        // Batch put.
+        let items: Vec<(u64, Vec<u8>)> = (10..20).map(|k| (k, vec![k as u8; 8])).collect();
+        engine.put_batch(t, &items).unwrap();
+        let run = engine.get_run(t, 10, 10).unwrap();
+        assert_eq!(run.len(), 10);
+
+        // Table list contains ours.
+        assert!(engine.tables().unwrap().iter().any(|x| x == t));
+
+        // Stats moved.
+        let s = engine.stats().snapshot();
+        assert!(s.reads > 0 && s.writes > 0);
+    }
+
+    #[test]
+    fn migrate_moves_everything() {
+        let a = MemStore::new();
+        let b = MemStore::new();
+        for k in 0..100u64 {
+            a.put("tbl", k, &k.to_le_bytes()).unwrap();
+        }
+        a.put("other", 7, b"x").unwrap();
+        let moved = migrate(&a, &b, None).unwrap();
+        assert_eq!(moved, 101);
+        assert_eq!(**b.get("tbl", 42).unwrap().unwrap(), 42u64.to_le_bytes());
+        assert_eq!(**b.get("other", 7).unwrap().unwrap(), *b"x");
+        // Single-table migration.
+        let c = MemStore::new();
+        assert_eq!(migrate(&a, &c, Some("other")).unwrap(), 1);
+        assert_eq!(c.get("tbl", 0).unwrap(), None);
+    }
+}

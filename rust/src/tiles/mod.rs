@@ -1,0 +1,310 @@
+//! CATMAID-style tile service (§3.3).
+//!
+//! The paper stores a redundant 2-d tile stack for the image plane and
+//! dynamically builds orthogonal-plane tiles from the cutout service. It
+//! proposes — as future work — replacing stored tiles entirely with
+//! cutout-backed tiles plus caching and cuboid-rounded prefetch; this
+//! module implements that proposal:
+//!
+//! * tiles are cut from the cutout service on demand,
+//! * an LRU cache holds recent tiles,
+//! * a miss rounds the request up to the covering cuboids and
+//!   materializes *all* tiles in that region ("round the request up to
+//!   the next cuboid and materialize and cache all the nearby tiles").
+//!
+//! Tile keys follow the paper's restructured layout `r/z/y_x` (one
+//! directory per viewing plane, §3.3).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::array::Plane;
+use crate::cutout::CutoutService;
+use crate::metrics::Counter;
+use crate::Result;
+
+/// Tile coordinates in the stored layout `r/z/y_x`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TileKey {
+    pub res: u32,
+    pub z: u64,
+    pub y: u64,
+    pub x: u64,
+}
+
+impl TileKey {
+    /// The paper's restructured path: `r/z/y_x.png` — one directory per
+    /// viewing plane (§3.3).
+    pub fn path(&self) -> String {
+        format!("{}/{}/{}_{}.gray", self.res, self.z, self.y, self.x)
+    }
+
+    /// Parse the legacy CATMAID layout `z/y_x_r.png` (§3.3 describes
+    /// rewriting these URLs).
+    pub fn from_legacy(path: &str) -> Option<TileKey> {
+        let mut parts = path.trim_end_matches(".png").split('/');
+        let z = parts.next()?.parse().ok()?;
+        let rest = parts.next()?;
+        let mut seg = rest.split('_');
+        let y = seg.next()?.parse().ok()?;
+        let x = seg.next()?.parse().ok()?;
+        let res = seg.next()?.parse().ok()?;
+        Some(TileKey { res, z, y, x })
+    }
+}
+
+/// Cutout-backed tile server with LRU cache and cuboid prefetch.
+pub struct TileService {
+    svc: std::sync::Arc<CutoutService>,
+    tile_size: u64,
+    cache: Mutex<LruCache>,
+    pub hits: Counter,
+    pub misses: Counter,
+}
+
+struct LruCache {
+    cap: usize,
+    map: HashMap<TileKey, (u64, Vec<u8>)>, // key -> (stamp, tile)
+    clock: u64,
+}
+
+impl LruCache {
+    fn get(&mut self, k: &TileKey) -> Option<Vec<u8>> {
+        self.clock += 1;
+        let clock = self.clock;
+        self.map.get_mut(k).map(|(stamp, v)| {
+            *stamp = clock;
+            v.clone()
+        })
+    }
+
+    fn put(&mut self, k: TileKey, v: Vec<u8>) {
+        self.clock += 1;
+        if self.map.len() >= self.cap && !self.map.contains_key(&k) {
+            // Evict the oldest entry.
+            if let Some((&old, _)) =
+                self.map.iter().min_by_key(|(_, (stamp, _))| *stamp)
+            {
+                self.map.remove(&old);
+            }
+        }
+        self.map.insert(k, (self.clock, v));
+    }
+}
+
+impl TileService {
+    pub fn new(svc: std::sync::Arc<CutoutService>, tile_size: u64, cache_tiles: usize) -> Self {
+        TileService {
+            svc,
+            tile_size,
+            cache: Mutex::new(LruCache { cap: cache_tiles.max(1), map: HashMap::new(), clock: 0 }),
+            hits: Counter::default(),
+            misses: Counter::default(),
+        }
+    }
+
+    pub fn tile_size(&self) -> u64 {
+        self.tile_size
+    }
+
+    /// Fetch one XY tile (row-major u8 grayscale, `tile_size^2` bytes,
+    /// zero-padded at volume edges). On a cache miss the covering
+    /// cuboid-aligned region is materialized and all its tiles cached.
+    pub fn get_tile(&self, key: TileKey) -> Result<Vec<u8>> {
+        if let Some(t) = self.cache.lock().unwrap().get(&key) {
+            self.hits.inc();
+            return Ok(t);
+        }
+        self.misses.inc();
+        self.prefetch_region(key)?;
+        Ok(self
+            .cache
+            .lock()
+            .unwrap()
+            .get(&key)
+            .expect("prefetch populated requested tile"))
+    }
+
+    /// Materialize every tile overlapping the cuboid-aligned region
+    /// around `key`, caching each (the §3.3 future-work prefetcher).
+    fn prefetch_region(&self, key: TileKey) -> Result<()> {
+        let ts = self.tile_size;
+        let level = self.svc.store().dataset.level(key.res)?.clone();
+        let cshape = level.cuboid;
+        let dims = level.dims;
+
+        // Requested tile box, rounded out to cuboids, clipped to volume.
+        let tile_lo = [key.x * ts, key.y * ts, key.z];
+        let want = crate::core::Box3::new(
+            tile_lo,
+            [
+                (tile_lo[0] + ts).min(dims[0].max(tile_lo[0] + 1)),
+                (tile_lo[1] + ts).min(dims[1].max(tile_lo[1] + 1)),
+                key.z + 1,
+            ],
+        );
+        let rounded = want.align_outward(cshape).intersect(&level.bounds());
+
+        // One cutout for the whole rounded slab.
+        let region = if rounded.is_empty() { want.intersect(&level.bounds()) } else { rounded };
+        let vol = if region.is_empty() {
+            None
+        } else {
+            Some((region, self.svc.read::<u8>(key.res, 0, 0, region)?))
+        };
+
+        // Slice every covered tile out of the slab.
+        let t_lo = [region.lo[0] / ts, region.lo[1] / ts];
+        let t_hi = [region.hi[0].div_ceil(ts), region.hi[1].div_ceil(ts)];
+        let mut cache = self.cache.lock().unwrap();
+        for ty in t_lo[1]..t_hi[1].max(t_lo[1] + 1) {
+            for tx in t_lo[0]..t_hi[0].max(t_lo[0] + 1) {
+                let k = TileKey { res: key.res, z: key.z, y: ty, x: tx };
+                let mut tile = vec![0u8; (ts * ts) as usize];
+                if let Some((region, vol)) = &vol {
+                    for py in 0..ts {
+                        let gy = ty * ts + py;
+                        if gy < region.lo[1] || gy >= region.hi[1] {
+                            continue;
+                        }
+                        for px in 0..ts {
+                            let gx = tx * ts + px;
+                            if gx < region.lo[0] || gx >= region.hi[0] {
+                                continue;
+                            }
+                            tile[(px + py * ts) as usize] = vol.get([
+                                gx - region.lo[0],
+                                gy - region.lo[1],
+                                key.z - region.lo[2],
+                            ]);
+                        }
+                    }
+                }
+                cache.put(k, tile);
+            }
+        }
+        // Ensure the requested tile exists even outside volume bounds.
+        if !cache.map.contains_key(&key) {
+            cache.put(key, vec![0u8; (ts * ts) as usize]);
+        }
+        Ok(())
+    }
+
+    /// Orthogonal-plane tile (XZ or YZ) built dynamically from the cutout
+    /// service — never cached in the paper's design either (most viewing
+    /// happens in the image plane).
+    pub fn get_ortho_tile(&self, res: u32, plane: Plane, u0: u64, v0: u64) -> Result<Vec<u8>> {
+        let ts = self.tile_size;
+        let level = self.svc.store().dataset.level(res)?.clone();
+        let (we, he) = match plane {
+            Plane::Xy(_) => (level.dims[0], level.dims[1]),
+            Plane::Xz(_) => (level.dims[0], level.dims[2]),
+            Plane::Yz(_) => (level.dims[1], level.dims[2]),
+        };
+        let lo = [(u0 * ts).min(we), (v0 * ts).min(he)];
+        let hi = [((u0 + 1) * ts).min(we), ((v0 + 1) * ts).min(he)];
+        let mut tile = vec![0u8; (ts * ts) as usize];
+        if lo[0] < hi[0] && lo[1] < hi[1] {
+            let (w, _h, data) = self.svc.read_plane::<u8>(res, 0, 0, plane, lo, hi)?;
+            for py in 0..hi[1] - lo[1] {
+                for px in 0..hi[0] - lo[0] {
+                    tile[(px + py * ts) as usize] = data[(px + py * w) as usize];
+                }
+            }
+        }
+        Ok(tile)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunkstore::CuboidStore;
+    use crate::core::{Box3, DatasetBuilder, Project};
+    use crate::storage::MemStore;
+    use std::sync::Arc;
+
+    fn service() -> Arc<CutoutService> {
+        let ds = Arc::new(DatasetBuilder::new("t", [256, 256, 32]).levels(1).build());
+        let pr = Arc::new(Project::image("img", "t"));
+        let svc = Arc::new(CutoutService::new(Arc::new(CuboidStore::new(
+            ds,
+            pr,
+            Arc::new(MemStore::new()),
+        ))));
+        // Position-hash image.
+        let whole = Box3::new([0, 0, 0], [256, 256, 32]);
+        let mut v = crate::array::DenseVolume::<u8>::zeros(whole.extent());
+        for z in 0..32u64 {
+            for y in 0..256u64 {
+                for x in 0..256u64 {
+                    v.set([x, y, z], ((x * 7 + y * 13 + z * 31) % 251) as u8);
+                }
+            }
+        }
+        svc.write(0, 0, 0, whole, &v).unwrap();
+        svc
+    }
+
+    #[test]
+    fn tile_content_matches_volume() {
+        let ts = TileService::new(service(), 64, 128);
+        let tile = ts.get_tile(TileKey { res: 0, z: 3, y: 1, x: 2 }).unwrap();
+        // Global (x=128..192, y=64..128) at z=3.
+        for py in 0..64u64 {
+            for px in 0..64u64 {
+                let expect = (((128 + px) * 7 + (64 + py) * 13 + 3 * 31) % 251) as u8;
+                assert_eq!(tile[(px + py * 64) as usize], expect, "at ({px},{py})");
+            }
+        }
+    }
+
+    #[test]
+    fn prefetch_warms_neighbours() {
+        let ts = TileService::new(service(), 64, 128);
+        ts.get_tile(TileKey { res: 0, z: 0, y: 0, x: 0 }).unwrap();
+        assert_eq!(ts.misses.get(), 1);
+        // Neighbour within the same cuboid span is already cached.
+        ts.get_tile(TileKey { res: 0, z: 0, y: 1, x: 1 }).unwrap();
+        assert_eq!(ts.hits.get(), 1);
+        assert_eq!(ts.misses.get(), 1);
+    }
+
+    #[test]
+    fn edge_tiles_zero_padded() {
+        let ts = TileService::new(service(), 100, 64);
+        // Tile starting at x=200: valid to 256, padded beyond.
+        let tile = ts.get_tile(TileKey { res: 0, z: 0, y: 0, x: 2 }).unwrap();
+        assert_eq!(tile.len(), 100 * 100);
+        let expect = ((200 * 7) % 251) as u8;
+        assert_eq!(tile[0], expect);
+        assert_eq!(tile[99], 0, "beyond volume must be zero");
+    }
+
+    #[test]
+    fn lru_evicts() {
+        let ts = TileService::new(service(), 64, 2);
+        for x in 0..4 {
+            ts.get_tile(TileKey { res: 0, z: 0, y: 0, x }).unwrap();
+        }
+        let cache_len = ts.cache.lock().unwrap().map.len();
+        assert!(cache_len <= 2);
+    }
+
+    #[test]
+    fn ortho_tiles_match() {
+        let ts = TileService::new(service(), 32, 16);
+        let tile = ts.get_ortho_tile(0, Plane::Xz(5), 0, 0).unwrap();
+        // (x=0..32, z=0..32 clipped to 32); row py = z.
+        let expect = ((3 * 7 + 5 * 13 + 2 * 31) % 251) as u8;
+        assert_eq!(tile[3 + 2 * 32], expect);
+    }
+
+    #[test]
+    fn legacy_path_parse_and_new_layout() {
+        let k = TileKey::from_legacy("12/34_56_2.png").unwrap();
+        assert_eq!(k, TileKey { res: 2, z: 12, y: 34, x: 56 });
+        assert_eq!(k.path(), "2/12/34_56.gray");
+        assert!(TileKey::from_legacy("garbage").is_none());
+    }
+}

@@ -1,0 +1,292 @@
+//! Minimal little-endian binary encode/decode helpers.
+//!
+//! The vendor set has no `serde`, so persistent records (RAMON metadata,
+//! spatial-index blobs, `ocpk` interchange frames) use this hand-rolled
+//! codec. Encodings are versioned by their containing record, length-
+//! prefixed, and deliberately boring.
+
+use crate::{Error, Result};
+
+/// Append-only encoder.
+#[derive(Default)]
+pub struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    pub fn new() -> Self {
+        Enc { buf: Vec::new() }
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Enc { buf: Vec::with_capacity(n) }
+    }
+
+    pub fn u8(&mut self, v: u8) -> &mut Self {
+        self.buf.push(v);
+        self
+    }
+
+    pub fn u16(&mut self, v: u16) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn u32(&mut self, v: u32) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn u64(&mut self, v: u64) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn f32(&mut self, v: f32) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn f64(&mut self, v: f64) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    /// LEB128 variable-length unsigned integer.
+    pub fn varint(&mut self, mut v: u64) -> &mut Self {
+        loop {
+            let byte = (v & 0x7f) as u8;
+            v >>= 7;
+            if v == 0 {
+                self.buf.push(byte);
+                break;
+            }
+            self.buf.push(byte | 0x80);
+        }
+        self
+    }
+
+    /// Length-prefixed byte string.
+    pub fn bytes(&mut self, v: &[u8]) -> &mut Self {
+        self.varint(v.len() as u64);
+        self.buf.extend_from_slice(v);
+        self
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn str(&mut self, v: &str) -> &mut Self {
+        self.bytes(v.as_bytes())
+    }
+
+    /// Length-prefixed list of u32.
+    pub fn u32s(&mut self, vs: &[u32]) -> &mut Self {
+        self.varint(vs.len() as u64);
+        for &v in vs {
+            self.u32(v);
+        }
+        self
+    }
+
+    /// Length-prefixed, delta-varint-encoded sorted u64 list (spatial index
+    /// blobs: Morton codes compress very well this way).
+    pub fn sorted_u64s(&mut self, vs: &[u64]) -> &mut Self {
+        self.varint(vs.len() as u64);
+        let mut prev = 0u64;
+        for &v in vs {
+            debug_assert!(v >= prev, "sorted_u64s requires sorted input");
+            self.varint(v - prev);
+            prev = v;
+        }
+        self
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+/// Cursor-based decoder.
+pub struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Dec { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(Error::Codec(format!(
+                "decode overrun: need {n} bytes at {} of {}",
+                self.pos,
+                self.buf.len()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn varint(&mut self) -> Result<u64> {
+        let mut v = 0u64;
+        let mut shift = 0u32;
+        loop {
+            let b = self.u8()?;
+            v |= ((b & 0x7f) as u64) << shift;
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+            if shift >= 64 {
+                return Err(Error::Codec("varint too long".into()));
+            }
+        }
+    }
+
+    pub fn bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.varint()? as usize;
+        self.take(n)
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let b = self.bytes()?;
+        String::from_utf8(b.to_vec()).map_err(|e| Error::Codec(format!("bad utf8: {e}")))
+    }
+
+    pub fn u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.varint()? as usize;
+        let mut out = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            out.push(self.u32()?);
+        }
+        Ok(out)
+    }
+
+    pub fn sorted_u64s(&mut self) -> Result<Vec<u64>> {
+        let n = self.varint()? as usize;
+        let mut out = Vec::with_capacity(n.min(1 << 20));
+        let mut prev = 0u64;
+        for _ in 0..n {
+            prev += self.varint()?;
+            out.push(prev);
+        }
+        Ok(out)
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn done(&self) -> bool {
+        self.remaining() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip_scalars() {
+        let mut e = Enc::new();
+        e.u8(7).u16(300).u32(70_000).u64(1 << 40).f32(1.5).f64(-2.25).str("synapse");
+        let b = e.finish();
+        let mut d = Dec::new(&b);
+        assert_eq!(d.u8().unwrap(), 7);
+        assert_eq!(d.u16().unwrap(), 300);
+        assert_eq!(d.u32().unwrap(), 70_000);
+        assert_eq!(d.u64().unwrap(), 1 << 40);
+        assert_eq!(d.f32().unwrap(), 1.5);
+        assert_eq!(d.f64().unwrap(), -2.25);
+        assert_eq!(d.str().unwrap(), "synapse");
+        assert!(d.done());
+    }
+
+    #[test]
+    fn varint_roundtrip_edges() {
+        for v in [0u64, 1, 127, 128, 16_383, 16_384, u32::MAX as u64, u64::MAX] {
+            let mut e = Enc::new();
+            e.varint(v);
+            let b = e.finish();
+            assert_eq!(Dec::new(&b).varint().unwrap(), v, "value {v}");
+        }
+    }
+
+    #[test]
+    fn varint_roundtrip_random() {
+        let mut rng = Rng::new(42);
+        for _ in 0..5_000 {
+            let v = rng.next_u64() >> rng.below(64) as u32;
+            let mut e = Enc::new();
+            e.varint(v);
+            let b = e.finish();
+            assert_eq!(Dec::new(&b).varint().unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn sorted_u64s_compact_and_roundtrip() {
+        let vs: Vec<u64> = (0..1000u64).map(|i| i * 3).collect();
+        let mut e = Enc::new();
+        e.sorted_u64s(&vs);
+        let b = e.finish();
+        // Delta coding: ~1 byte per element for small gaps.
+        assert!(b.len() < 1200, "blob too large: {}", b.len());
+        assert_eq!(Dec::new(&b).sorted_u64s().unwrap(), vs);
+    }
+
+    #[test]
+    fn overrun_is_error_not_panic() {
+        let b = vec![1u8, 2];
+        let mut d = Dec::new(&b);
+        assert!(d.u64().is_err());
+        let mut d2 = Dec::new(&[0x80u8; 12]);
+        assert!(d2.varint().is_err(), "unterminated varint must error");
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let mut e = Enc::new();
+        e.bytes(&[1, 2, 3]).bytes(&[]).u32s(&[9, 8, 7]);
+        let b = e.finish();
+        let mut d = Dec::new(&b);
+        assert_eq!(d.bytes().unwrap(), &[1, 2, 3]);
+        assert_eq!(d.bytes().unwrap(), &[] as &[u8]);
+        assert_eq!(d.u32s().unwrap(), vec![9, 8, 7]);
+    }
+}

@@ -1,0 +1,137 @@
+//! Gzip compression helpers for cuboid payloads.
+//!
+//! The paper gzip-compresses cube data on disk (§3.2): EM image data has
+//! high entropy and compresses <10%; annotation labels have low entropy
+//! (many zeros, long runs) and compress extremely well. We reproduce both
+//! behaviours, and additionally provide the run-length codec the paper
+//! cites as possible future work ([1, 44]) so the ablation bench can
+//! compare them.
+
+use std::io::{Read, Write};
+
+use flate2::read::GzDecoder;
+use flate2::write::GzEncoder;
+use flate2::Compression;
+
+use crate::{Error, Result};
+
+/// Compress with gzip at the given level (paper default behaviour: level 6).
+pub fn compress(data: &[u8], level: u32) -> Result<Vec<u8>> {
+    let mut enc = GzEncoder::new(Vec::with_capacity(data.len() / 2), Compression::new(level));
+    enc.write_all(data)?;
+    enc.finish().map_err(Error::from)
+}
+
+/// Decompress a gzip stream. `size_hint` pre-sizes the output buffer (the
+/// cuboid shape is known from the level config, so the exact size is known).
+pub fn decompress(data: &[u8], size_hint: usize) -> Result<Vec<u8>> {
+    let mut dec = GzDecoder::new(data);
+    let mut out = Vec::with_capacity(size_hint);
+    dec.read_to_end(&mut out)?;
+    Ok(out)
+}
+
+/// Run-length encode 32-bit words (annotation labels). Format: repeated
+/// (varint run_length, u32 value) pairs. Wins over gzip for long
+/// single-label runs; the ablation bench quantifies the tradeoff.
+pub fn rle32_encode(words: &[u32]) -> Vec<u8> {
+    let mut e = crate::util::codec::Enc::with_capacity(words.len() / 8 + 16);
+    let mut i = 0usize;
+    while i < words.len() {
+        let v = words[i];
+        let mut j = i + 1;
+        while j < words.len() && words[j] == v {
+            j += 1;
+        }
+        e.varint((j - i) as u64);
+        e.u32(v);
+        i = j;
+    }
+    e.finish()
+}
+
+/// Decode [`rle32_encode`] output; `count` is the expected word count.
+pub fn rle32_decode(data: &[u8], count: usize) -> Result<Vec<u32>> {
+    let mut d = crate::util::codec::Dec::new(data);
+    let mut out = Vec::with_capacity(count);
+    while !d.done() {
+        let run = d.varint()? as usize;
+        let v = d.u32()?;
+        if out.len() + run > count {
+            return Err(Error::Codec("rle32 overrun".into()));
+        }
+        out.resize(out.len() + run, v);
+    }
+    if out.len() != count {
+        return Err(Error::Codec(format!("rle32 short: {} of {count}", out.len())));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn gzip_roundtrip() {
+        let data: Vec<u8> = (0..100_000u32).map(|i| (i % 251) as u8).collect();
+        let c = compress(&data, 6).unwrap();
+        assert!(c.len() < data.len());
+        assert_eq!(decompress(&c, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn gzip_empty() {
+        let c = compress(&[], 6).unwrap();
+        assert_eq!(decompress(&c, 0).unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn annotation_like_data_compresses_well() {
+        // Low-entropy labels: long zero runs + labeled regions — the §3.2
+        // claim that cube labels compress well.
+        let mut words = vec![0u32; 1 << 16];
+        for i in 20_000..30_000 {
+            words[i] = 42;
+        }
+        let bytes: Vec<u8> = words.iter().flat_map(|w| w.to_le_bytes()).collect();
+        let c = compress(&bytes, 6).unwrap();
+        assert!(c.len() * 50 < bytes.len(), "expected >50x on labels, got {}", c.len());
+    }
+
+    #[test]
+    fn em_like_data_compresses_poorly() {
+        // High-entropy image data: <10% reduction (§5).
+        let mut rng = Rng::new(11);
+        let data: Vec<u8> = (0..1 << 16).map(|_| rng.next_u32() as u8).collect();
+        let c = compress(&data, 6).unwrap();
+        assert!(c.len() as f64 > data.len() as f64 * 0.9);
+    }
+
+    #[test]
+    fn rle_roundtrip_runs() {
+        let mut words = vec![0u32; 4096];
+        words[100..200].fill(7);
+        words[4000..4096].fill(123456);
+        let e = rle32_encode(&words);
+        assert!(e.len() < 64);
+        assert_eq!(rle32_decode(&e, words.len()).unwrap(), words);
+    }
+
+    #[test]
+    fn rle_roundtrip_random() {
+        let mut rng = Rng::new(12);
+        let words: Vec<u32> = (0..2048).map(|_| rng.below(4) as u32).collect();
+        let e = rle32_encode(&words);
+        assert_eq!(rle32_decode(&e, words.len()).unwrap(), words);
+    }
+
+    #[test]
+    fn rle_wrong_count_errors() {
+        let words = vec![5u32; 16];
+        let e = rle32_encode(&words);
+        assert!(rle32_decode(&e, 15).is_err());
+        assert!(rle32_decode(&e, 17).is_err());
+    }
+}

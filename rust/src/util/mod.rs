@@ -1,0 +1,14 @@
+//! Small shared utilities: PRNG, thread pool, binary codec, gzip, and an
+//! in-repo property-testing mini-framework.
+//!
+//! The offline vendor set has no `rand`, `rayon`, `serde` or `proptest`, so
+//! these live here (see DESIGN.md §1).
+
+pub mod codec;
+pub mod gzip;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+
+pub use pool::ThreadPool;
+pub use rng::Rng;

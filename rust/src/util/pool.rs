@@ -1,0 +1,188 @@
+//! A fixed-size worker thread pool with a bounded queue and a scoped
+//! fork-join helper.
+//!
+//! The paper's application servers run each Web-service request on a single
+//! process thread and realize throughput through request-level parallelism
+//! (§5, Fig 11). This pool is the analogue: the web server, the cutout
+//! assembler, and the vision pipeline all submit per-request / per-cuboid
+//! work items here.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size thread pool.
+pub struct ThreadPool {
+    tx: Option<SyncSender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    inflight: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    /// Spawn `n` workers (min 1) with a queue bound of `4 * n`.
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let (tx, rx) = sync_channel::<Job>(4 * n);
+        let rx = Arc::new(Mutex::new(rx));
+        let inflight = Arc::new(AtomicUsize::new(0));
+        let workers = (0..n)
+            .map(|i| {
+                let rx: Arc<Mutex<Receiver<Job>>> = Arc::clone(&rx);
+                let inflight = Arc::clone(&inflight);
+                std::thread::Builder::new()
+                    .name(format!("ocpd-pool-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                inflight.fetch_sub(1, Ordering::Release);
+                            }
+                            Err(_) => break, // channel closed: shut down
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, inflight }
+    }
+
+    /// Pool with one worker per available core.
+    pub fn per_core() -> Self {
+        Self::new(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4))
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a fire-and-forget job. Blocks if the queue is full
+    /// (backpressure).
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.inflight.fetch_add(1, Ordering::Acquire);
+        self.tx.as_ref().expect("pool live").send(Box::new(f)).expect("pool send");
+    }
+
+    /// Jobs submitted but not yet completed.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Acquire)
+    }
+
+    /// Block until every submitted job has completed.
+    pub fn wait_idle(&self) {
+        while self.inflight() > 0 {
+            std::thread::yield_now();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close channel; workers drain and exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Run `f(i)` for `i in 0..n` across up to `par` scoped threads and collect
+/// results in order. Panics propagate. This is the fork-join primitive used
+/// on the cutout hot path (one task per cuboid batch) — scoped, so tasks
+/// may borrow from the caller.
+pub fn scoped_map<T, F>(n: usize, par: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let par = par.max(1).min(n.max(1));
+    if n == 0 {
+        return Vec::new();
+    }
+    if par == 1 {
+        return (0..n).map(&f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let slots = out.as_mut_ptr() as usize;
+    crossbeam_utils::thread::scope(|s| {
+        for _ in 0..par {
+            let next = &next;
+            let f = &f;
+            s.spawn(move |_| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                // Each index is claimed exactly once, so the write is
+                // exclusive; Vec storage outlives the scope.
+                unsafe {
+                    let base = slots as *mut Option<T>;
+                    *base.add(i) = Some(v);
+                }
+            });
+        }
+    })
+    .expect("scoped_map thread panicked");
+    out.into_iter().map(|v| v.expect("slot filled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..1000 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn pool_shutdown_joins() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..64 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        drop(pool);
+        assert_eq!(counter.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn scoped_map_ordered() {
+        let out = scoped_map(100, 8, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scoped_map_empty_and_serial() {
+        assert!(scoped_map(0, 4, |i| i).is_empty());
+        assert_eq!(scoped_map(5, 1, |i| i + 1), vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn scoped_map_borrows() {
+        let data: Vec<u64> = (0..1000).collect();
+        let sums = scoped_map(10, 4, |i| data[i * 100..(i + 1) * 100].iter().sum::<u64>());
+        assert_eq!(sums.iter().sum::<u64>(), data.iter().sum::<u64>());
+    }
+}

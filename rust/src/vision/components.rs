@@ -1,0 +1,172 @@
+//! 3-d connected components over a binary mask (6-connectivity) via
+//! union-find — the detection-extraction step of the synapse pipeline.
+
+use crate::array::DenseVolume;
+use crate::core::Vec3;
+
+/// One connected component of the mask.
+#[derive(Clone, Debug)]
+pub struct Component {
+    /// Member voxels (local coordinates).
+    pub voxels: Vec<Vec3>,
+    /// Integer centroid (local coordinates).
+    pub centroid: Vec3,
+}
+
+struct UnionFind {
+    parent: Vec<u32>,
+}
+
+impl UnionFind {
+    fn new(n: usize) -> Self {
+        UnionFind { parent: (0..n as u32).collect() }
+    }
+
+    fn find(&mut self, mut x: u32) -> u32 {
+        while self.parent[x as usize] != x {
+            let gp = self.parent[self.parent[x as usize] as usize];
+            self.parent[x as usize] = gp; // path halving
+            x = gp;
+        }
+        x
+    }
+
+    fn union(&mut self, a: u32, b: u32) {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra != rb {
+            self.parent[ra.max(rb) as usize] = ra.min(rb);
+        }
+    }
+}
+
+/// Extract 6-connected components of non-zero voxels.
+pub fn connected_components(mask: &DenseVolume<u8>) -> Vec<Component> {
+    let d = mask.dims();
+    let n = mask.len();
+    // Map voxel linear index -> dense component slot (only for set voxels).
+    let mut slot = vec![u32::MAX; n];
+    let mut count = 0u32;
+    for i in 0..n {
+        if mask.as_slice()[i] != 0 {
+            slot[i] = count;
+            count += 1;
+        }
+    }
+    if count == 0 {
+        return Vec::new();
+    }
+    let mut uf = UnionFind::new(count as usize);
+    let idx = |x: u64, y: u64, z: u64| (x + d[0] * (y + d[1] * z)) as usize;
+    for z in 0..d[2] {
+        for y in 0..d[1] {
+            for x in 0..d[0] {
+                let i = idx(x, y, z);
+                if slot[i] == u32::MAX {
+                    continue;
+                }
+                // Only look backwards: -x, -y, -z (each pair united once).
+                if x > 0 && slot[idx(x - 1, y, z)] != u32::MAX {
+                    uf.union(slot[i], slot[idx(x - 1, y, z)]);
+                }
+                if y > 0 && slot[idx(x, y - 1, z)] != u32::MAX {
+                    uf.union(slot[i], slot[idx(x, y - 1, z)]);
+                }
+                if z > 0 && slot[idx(x, y, z - 1)] != u32::MAX {
+                    uf.union(slot[i], slot[idx(x, y, z - 1)]);
+                }
+            }
+        }
+    }
+    // Gather members per root.
+    let mut by_root: std::collections::HashMap<u32, Vec<Vec3>> =
+        std::collections::HashMap::new();
+    for z in 0..d[2] {
+        for y in 0..d[1] {
+            for x in 0..d[0] {
+                let i = idx(x, y, z);
+                if slot[i] != u32::MAX {
+                    let root = uf.find(slot[i]);
+                    by_root.entry(root).or_default().push([x, y, z]);
+                }
+            }
+        }
+    }
+    let mut comps: Vec<Component> = by_root
+        .into_values()
+        .map(|voxels| {
+            let n = voxels.len() as u64;
+            let mut s = [0u64; 3];
+            for v in &voxels {
+                for a in 0..3 {
+                    s[a] += v[a];
+                }
+            }
+            Component { centroid: [s[0] / n, s[1] / n, s[2] / n], voxels }
+        })
+        .collect();
+    comps.sort_by_key(|c| c.voxels[0]); // deterministic order
+    comps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Box3;
+
+    #[test]
+    fn empty_mask_no_components() {
+        let mask = DenseVolume::<u8>::zeros([8, 8, 4]);
+        assert!(connected_components(&mask).is_empty());
+    }
+
+    #[test]
+    fn single_blob() {
+        let mut mask = DenseVolume::<u8>::zeros([16, 16, 4]);
+        mask.fill_box(Box3::new([2, 2, 1], [6, 6, 3]), 1);
+        let comps = connected_components(&mask);
+        assert_eq!(comps.len(), 1);
+        assert_eq!(comps[0].voxels.len(), 4 * 4 * 2);
+        assert_eq!(comps[0].centroid, [3, 3, 1]);
+    }
+
+    #[test]
+    fn two_separate_blobs() {
+        let mut mask = DenseVolume::<u8>::zeros([16, 16, 4]);
+        mask.fill_box(Box3::new([0, 0, 0], [3, 3, 2]), 1);
+        mask.fill_box(Box3::new([10, 10, 2], [13, 13, 4]), 1);
+        let comps = connected_components(&mask);
+        assert_eq!(comps.len(), 2);
+        let sizes: Vec<usize> = comps.iter().map(|c| c.voxels.len()).collect();
+        assert_eq!(sizes, vec![18, 18]);
+    }
+
+    #[test]
+    fn diagonal_touch_is_not_connected() {
+        // 6-connectivity: diagonal neighbours are separate components.
+        let mut mask = DenseVolume::<u8>::zeros([4, 4, 1]);
+        mask.set([0, 0, 0], 1);
+        mask.set([1, 1, 0], 1);
+        assert_eq!(connected_components(&mask).len(), 2);
+    }
+
+    #[test]
+    fn l_shape_connected() {
+        let mut mask = DenseVolume::<u8>::zeros([8, 8, 1]);
+        mask.fill_box(Box3::new([0, 0, 0], [5, 1, 1]), 1);
+        mask.fill_box(Box3::new([4, 0, 0], [5, 5, 1]), 1);
+        let comps = connected_components(&mask);
+        assert_eq!(comps.len(), 1);
+        assert_eq!(comps[0].voxels.len(), 9);
+    }
+
+    #[test]
+    fn connected_across_z() {
+        let mut mask = DenseVolume::<u8>::zeros([4, 4, 4]);
+        for z in 0..4 {
+            mask.set([2, 2, z], 1);
+        }
+        let comps = connected_components(&mask);
+        assert_eq!(comps.len(), 1);
+        assert_eq!(comps[0].voxels.len(), 4);
+    }
+}

@@ -1,0 +1,357 @@
+//! Minimal HTTP/1.1 server and client.
+//!
+//! The paper's application stack runs each Web-service request on a
+//! single process thread (Apache2 + Django/WSGI, §4.2/§5) and realizes
+//! throughput by issuing many requests in parallel; this server does the
+//! same with a thread pool over `std::net`. No external HTTP crates exist
+//! in the offline vendor set (DESIGN.md §1).
+//!
+//! Supported surface: GET/PUT/DELETE request line, `Content-Length`
+//! bodies, connection-close semantics.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::metrics::{Counter, Histogram};
+use crate::util::ThreadPool;
+use crate::{Error, Result};
+
+/// A parsed request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// Path, percent-decoding not needed for our grammar.
+    pub path: String,
+    pub body: Vec<u8>,
+}
+
+/// A response under construction.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn ok(body: Vec<u8>, content_type: &'static str) -> Response {
+        Response { status: 200, content_type, body }
+    }
+
+    pub fn text(s: impl Into<String>) -> Response {
+        Response::ok(s.into().into_bytes(), "text/plain")
+    }
+
+    pub fn binary(body: Vec<u8>) -> Response {
+        Response::ok(body, "application/x-ocpk")
+    }
+
+    pub fn error(status: u16, msg: impl Into<String>) -> Response {
+        Response { status, content_type: "text/plain", body: msg.into().into_bytes() }
+    }
+
+    fn reason(&self) -> &'static str {
+        match self.status {
+            200 => "OK",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            _ => "Internal Server Error",
+        }
+    }
+}
+
+/// A running HTTP server (drops → stops accepting).
+pub struct Server {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    pub requests: Arc<Counter>,
+    pub latency: Arc<Histogram>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and serve `handler` on `workers` threads.
+    pub fn bind<F>(addr: &str, workers: usize, handler: F) -> Result<Server>
+    where
+        F: Fn(Request) -> Response + Send + Sync + 'static,
+    {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let requests = Arc::new(Counter::default());
+        let latency = Arc::new(Histogram::new());
+        let handler = Arc::new(handler);
+
+        let stop2 = Arc::clone(&stop);
+        let requests2 = Arc::clone(&requests);
+        let latency2 = Arc::clone(&latency);
+        let accept_thread = std::thread::Builder::new()
+            .name("ocpd-accept".into())
+            .spawn(move || {
+                let pool = ThreadPool::new(workers);
+                loop {
+                    if stop2.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let h = Arc::clone(&handler);
+                            let reqs = Arc::clone(&requests2);
+                            let lat = Arc::clone(&latency2);
+                            pool.submit(move || {
+                                let t0 = std::time::Instant::now();
+                                let _ = handle_connection(stream, h.as_ref());
+                                reqs.inc();
+                                lat.record(t0.elapsed());
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_micros(200));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+            .expect("spawn accept thread");
+
+        Ok(Server { addr, stop, requests, latency, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    pub fn url(&self) -> String {
+        format!("http://{}", self.addr)
+    }
+
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn handle_connection<F: Fn(Request) -> Response>(stream: TcpStream, handler: &F) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let req = match read_request(&mut reader) {
+        Ok(r) => r,
+        Err(e) => {
+            let resp = Response::error(400, format!("bad request: {e}"));
+            write_response(&stream, &resp)?;
+            return Ok(());
+        }
+    };
+    let resp = handler(req);
+    write_response(&stream, &resp)
+}
+
+fn read_request(reader: &mut BufReader<TcpStream>) -> Result<Request> {
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts
+        .next()
+        .ok_or_else(|| Error::BadRequest("empty request line".into()))?
+        .to_string();
+    let path = parts
+        .next()
+        .ok_or_else(|| Error::BadRequest("missing path".into()))?
+        .to_string();
+    // Headers.
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v
+                    .trim()
+                    .parse()
+                    .map_err(|_| Error::BadRequest("bad content-length".into()))?;
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    if content_length > 0 {
+        reader.read_exact(&mut body)?;
+    }
+    Ok(Request { method, path, body })
+}
+
+fn write_response(mut stream: &TcpStream, resp: &Response) -> Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        resp.status,
+        resp.reason(),
+        resp.content_type,
+        resp.body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(&resp.body)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Minimal blocking HTTP client (one request per connection — matches the
+/// server's connection-close semantics).
+pub fn request(method: &str, url: &str, body: &[u8]) -> Result<(u16, Vec<u8>)> {
+    let rest = url
+        .strip_prefix("http://")
+        .ok_or_else(|| Error::BadRequest(format!("unsupported url '{url}'")))?;
+    let (host, path) = match rest.split_once('/') {
+        Some((h, p)) => (h, format!("/{p}")),
+        None => (rest, "/".to_string()),
+    };
+    let mut stream = TcpStream::connect(host)?;
+    stream.set_nodelay(true).ok();
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {host}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()?;
+
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| Error::Other(format!("bad status line '{status_line}'")))?;
+    let mut content_length = None;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse::<usize>().ok();
+            }
+        }
+    }
+    let mut body = Vec::new();
+    match content_length {
+        Some(n) => {
+            body.resize(n, 0);
+            reader.read_exact(&mut body)?;
+        }
+        None => {
+            reader.read_to_end(&mut body)?;
+        }
+    }
+    Ok((status, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn echo_server() -> Server {
+        Server::bind("127.0.0.1:0", 4, |req| match req.path.as_str() {
+            "/hello/" => Response::text("world"),
+            "/echo/" => Response::binary(req.body),
+            "/missing/" => Response::error(404, "nope"),
+            p => Response::text(format!("{} {p}", req.method)),
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn get_roundtrip() {
+        let s = echo_server();
+        let (code, body) = request("GET", &format!("{}/hello/", s.url()), &[]).unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(body, b"world");
+        assert_eq!(s.requests.get(), 1);
+    }
+
+    #[test]
+    fn put_body_roundtrip() {
+        let s = echo_server();
+        let payload: Vec<u8> = (0..10_000u32).map(|i| i as u8).collect();
+        let (code, body) = request("PUT", &format!("{}/echo/", s.url()), &payload).unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(body, payload);
+    }
+
+    #[test]
+    fn status_codes_propagate() {
+        let s = echo_server();
+        let (code, _) = request("GET", &format!("{}/missing/", s.url()), &[]).unwrap();
+        assert_eq!(code, 404);
+    }
+
+    #[test]
+    fn concurrent_requests() {
+        let s = echo_server();
+        let url = s.url();
+        let handles: Vec<_> = (0..16)
+            .map(|i| {
+                let url = url.clone();
+                std::thread::spawn(move || {
+                    // Retry transient connect failures (the suite runs many
+                    // servers concurrently and SYN backlogs can overflow).
+                    let mut last = None;
+                    for _ in 0..10 {
+                        match request("GET", &format!("{url}/req{i}/"), &[]) {
+                            Ok((code, body)) => {
+                                assert_eq!(code, 200);
+                                assert_eq!(body, format!("GET /req{i}/").into_bytes());
+                                return;
+                            }
+                            Err(e) => {
+                                last = Some(e);
+                                std::thread::sleep(std::time::Duration::from_millis(20));
+                            }
+                        }
+                    }
+                    panic!("request kept failing: {last:?}");
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        // The counter increments after the response is written, so give
+        // the worker threads a beat to record the last requests.
+        let t0 = std::time::Instant::now();
+        while s.requests.get() < 16 && t0.elapsed() < std::time::Duration::from_secs(2) {
+            std::thread::yield_now();
+        }
+        assert!(s.requests.get() >= 16);
+    }
+
+    #[test]
+    fn stops_on_drop() {
+        let url;
+        {
+            let s = echo_server();
+            url = s.url();
+        }
+        // After drop, connection must fail (allow a beat for teardown).
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        assert!(request("GET", &format!("{url}/hello/"), &[]).is_err());
+    }
+}

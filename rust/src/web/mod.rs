@@ -1,0 +1,48 @@
+//! RESTful Web services: the URL grammar of the paper's Table 1 over a
+//! minimal HTTP/1.1 server (§4.2 "Web Services").
+//!
+//! All interfaces are stateless GET/PUT requests to human-readable URLs.
+//! The interchange format is `ocpk` (a self-describing nd-array framing —
+//! the offline stand-in for the paper's HDF5, DESIGN.md §1).
+//!
+//! Route grammar (Table 1 with `hdf5` → `ocpk`):
+//!
+//! ```text
+//! GET /{token}/ocpk/{res}/{x0},{x1}/{y0},{y1}/{z0},{z1}/          cutout
+//! GET /{token}/xy/{res}/{z}/{x0},{x1}/{y0},{y1}/                  plane
+//! GET /{token}/tile/{res}/{z}/{y}_{x}.gray                        tile
+//! GET /{token}/{id}/                                              RAMON metadata
+//! GET /{token}/{id}/voxels/                                       voxel list
+//! GET /{token}/{id}/boundingbox/                                  bounding box
+//! GET /{token}/{id}/cutout/                                       dense object
+//! GET /{token}/{id}/cutout/{res}/{x0},{x1}/{y0},{y1}/{z0},{z1}/   restricted
+//! GET /{token}/{id1},{id2},.../                                   batch metadata
+//! GET /{token}/objects/{field}/{value}/...                        predicate query
+//! GET /{token}/objects/{field}/{geq|leq|gt|lt}/{value}/...        range predicate
+//! PUT /{token}/{overwrite|preserve|exception}/{res}/{x0},..{z1}/  write volume
+//! PUT /{token}/ramon/                                             write objects
+//! GET /info/                                                      cluster info
+//! ```
+
+pub mod http;
+pub mod ocpk;
+mod routes;
+
+pub use http::{Request, Response, Server};
+pub use routes::OcpService;
+
+use std::sync::Arc;
+
+use crate::cluster::Cluster;
+use crate::runtime::Runtime;
+
+/// Build an HTTP server serving the OCP Web services for `cluster`.
+pub fn serve(
+    cluster: Arc<Cluster>,
+    runtime: Option<Arc<Runtime>>,
+    addr: &str,
+    workers: usize,
+) -> crate::Result<Server> {
+    let svc = Arc::new(OcpService::new(cluster, runtime));
+    Server::bind(addr, workers, move |req| svc.handle(req))
+}

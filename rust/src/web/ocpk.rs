@@ -1,0 +1,238 @@
+//! `ocpk`: the interchange format for volumes and voxel lists.
+//!
+//! The paper ships HDF5 over the wire for its multidimensional-array
+//! support; no pure-Rust HDF5 implementation exists in the offline vendor
+//! set, so `ocpk` carries the identical payload (DESIGN.md §1):
+//!
+//! ```text
+//! magic "OCPK" | version u8 | kind u8 | dtype u8 | flags u8
+//! kind=1 volume:  lo[3] u64 | dims[3] u64 | payload (gzip if flag bit 0)
+//! kind=2 voxels:  count varint | delta-coded sorted (x,y,z) triples
+//! kind=3 objects: count varint | length-prefixed RAMON records
+//! ```
+
+use crate::annotation::RamonObject;
+use crate::array::{DenseVolume, VoxelScalar};
+use crate::core::{Box3, Dtype, Vec3};
+use crate::util::codec::{Dec, Enc};
+use crate::util::gzip;
+use crate::{Error, Result};
+
+const MAGIC: &[u8; 4] = b"OCPK";
+const VERSION: u8 = 1;
+const KIND_VOLUME: u8 = 1;
+const KIND_VOXELS: u8 = 2;
+const KIND_OBJECTS: u8 = 3;
+const FLAG_GZIP: u8 = 1;
+
+fn header(kind: u8, dtype: u8, flags: u8) -> Enc {
+    let mut e = Enc::with_capacity(64);
+    e.u8(MAGIC[0]).u8(MAGIC[1]).u8(MAGIC[2]).u8(MAGIC[3]);
+    e.u8(VERSION).u8(kind).u8(dtype).u8(flags);
+    e
+}
+
+fn check_header(d: &mut Dec) -> Result<(u8, u8, u8)> {
+    let m = [d.u8()?, d.u8()?, d.u8()?, d.u8()?];
+    if &m != MAGIC {
+        return Err(Error::Codec("not an OCPK frame".into()));
+    }
+    let v = d.u8()?;
+    if v != VERSION {
+        return Err(Error::Codec(format!("unsupported OCPK version {v}")));
+    }
+    Ok((d.u8()?, d.u8()?, d.u8()?))
+}
+
+/// Encode a volume positioned at `lo` (gzip payload when it pays).
+pub fn encode_volume<T: VoxelScalar>(
+    dtype: Dtype,
+    lo: Vec3,
+    vol: &DenseVolume<T>,
+) -> Result<Vec<u8>> {
+    let raw = vol.as_bytes();
+    let z = gzip::compress(raw, 6)?;
+    let (flags, payload): (u8, &[u8]) =
+        if z.len() < raw.len() { (FLAG_GZIP, &z) } else { (0, raw) };
+    let mut e = header(KIND_VOLUME, dtype.tag(), flags);
+    for v in lo {
+        e.u64(v);
+    }
+    for v in vol.dims() {
+        e.u64(v);
+    }
+    e.varint(raw.len() as u64);
+    let mut buf = e.finish();
+    buf.extend_from_slice(payload);
+    Ok(buf)
+}
+
+/// Decode a volume frame; returns `(dtype, box, raw payload bytes)`.
+pub fn decode_volume_raw(buf: &[u8]) -> Result<(Dtype, Box3, Vec<u8>)> {
+    let mut d = Dec::new(buf);
+    let (kind, dtype, flags) = check_header(&mut d)?;
+    if kind != KIND_VOLUME {
+        return Err(Error::Codec(format!("expected volume frame, got kind {kind}")));
+    }
+    let dtype = Dtype::from_tag(dtype)?;
+    let lo = [d.u64()?, d.u64()?, d.u64()?];
+    let dims = [d.u64()?, d.u64()?, d.u64()?];
+    let raw_len = d.varint()? as usize;
+    let payload = &buf[buf.len() - d.remaining()..];
+    let raw = if flags & FLAG_GZIP != 0 {
+        gzip::decompress(payload, raw_len)?
+    } else {
+        payload.to_vec()
+    };
+    if raw.len() != raw_len {
+        return Err(Error::Codec(format!("payload {} != declared {raw_len}", raw.len())));
+    }
+    Ok((dtype, Box3::at(lo, dims), raw))
+}
+
+/// Decode a typed volume.
+pub fn decode_volume<T: VoxelScalar>(buf: &[u8]) -> Result<(Dtype, Box3, DenseVolume<T>)> {
+    let (dtype, bx, raw) = decode_volume_raw(buf)?;
+    if dtype.bytes() != T::BYTES {
+        return Err(Error::Codec(format!(
+            "dtype {} is {}B, requested {}B",
+            dtype.name(),
+            dtype.bytes(),
+            T::BYTES
+        )));
+    }
+    Ok((dtype, bx, DenseVolume::from_bytes(bx.extent(), &raw)?))
+}
+
+/// Encode a sorted voxel list (delta-coded Morton-free triples).
+pub fn encode_voxels(voxels: &[Vec3]) -> Vec<u8> {
+    let mut e = header(KIND_VOXELS, 0, 0);
+    e.varint(voxels.len() as u64);
+    let mut prev = [0u64; 3];
+    for v in voxels {
+        // Delta on x re-zeroes when y/z change; plain varints are simple
+        // and compact enough (sorted lists share long prefixes).
+        e.varint(v[0] ^ prev[0]).varint(v[1] ^ prev[1]).varint(v[2] ^ prev[2]);
+        prev = *v;
+    }
+    e.finish()
+}
+
+/// Decode a voxel list.
+pub fn decode_voxels(buf: &[u8]) -> Result<Vec<Vec3>> {
+    let mut d = Dec::new(buf);
+    let (kind, _, _) = check_header(&mut d)?;
+    if kind != KIND_VOXELS {
+        return Err(Error::Codec(format!("expected voxel frame, got kind {kind}")));
+    }
+    let n = d.varint()? as usize;
+    let mut out = Vec::with_capacity(n.min(1 << 22));
+    let mut prev = [0u64; 3];
+    for _ in 0..n {
+        let v = [d.varint()? ^ prev[0], d.varint()? ^ prev[1], d.varint()? ^ prev[2]];
+        out.push(v);
+        prev = v;
+    }
+    Ok(out)
+}
+
+/// Encode RAMON objects (batch read/write bodies).
+pub fn encode_objects(objs: &[RamonObject]) -> Vec<u8> {
+    let mut e = header(KIND_OBJECTS, 0, 0);
+    e.varint(objs.len() as u64);
+    let mut buf = e.finish();
+    for o in objs {
+        let rec = o.encode();
+        let mut le = Enc::new();
+        le.bytes(&rec);
+        buf.extend_from_slice(&le.finish());
+    }
+    buf
+}
+
+/// Decode RAMON objects.
+pub fn decode_objects(buf: &[u8]) -> Result<Vec<RamonObject>> {
+    let mut d = Dec::new(buf);
+    let (kind, _, _) = check_header(&mut d)?;
+    if kind != KIND_OBJECTS {
+        return Err(Error::Codec(format!("expected objects frame, got kind {kind}")));
+    }
+    let n = d.varint()? as usize;
+    let mut out = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        out.push(RamonObject::decode(d.bytes()?)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::annotation::{RamonObject, SynapseType};
+    use crate::util::Rng;
+
+    #[test]
+    fn volume_roundtrip_u8_and_u32() {
+        let mut rng = Rng::new(1);
+        let dims = [16u64, 12, 4];
+        let v8 = DenseVolume::<u8>::from_vec(
+            dims,
+            (0..768).map(|_| rng.next_u32() as u8).collect(),
+        )
+        .unwrap();
+        let b = encode_volume(Dtype::U8, [5, 6, 7], &v8).unwrap();
+        let (dt, bx, back) = decode_volume::<u8>(&b).unwrap();
+        assert_eq!(dt, Dtype::U8);
+        assert_eq!(bx, Box3::at([5, 6, 7], dims));
+        assert_eq!(back, v8);
+
+        let mut v32 = DenseVolume::<u32>::zeros(dims);
+        v32.fill_box(Box3::new([0, 0, 0], [8, 8, 2]), 99);
+        let b = encode_volume(Dtype::U32, [0, 0, 0], &v32).unwrap();
+        // Labels compress: frame smaller than raw.
+        assert!(b.len() < v32.as_bytes().len() / 4);
+        let (_, _, back) = decode_volume::<u32>(&b).unwrap();
+        assert_eq!(back, v32);
+    }
+
+    #[test]
+    fn dtype_mismatch_rejected() {
+        let v = DenseVolume::<u8>::zeros([4, 4, 1]);
+        let b = encode_volume(Dtype::U8, [0, 0, 0], &v).unwrap();
+        assert!(decode_volume::<u32>(&b).is_err());
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        assert!(decode_volume_raw(b"HDF5 is elsewhere").is_err());
+        assert!(decode_voxels(&[]).is_err());
+    }
+
+    #[test]
+    fn voxels_roundtrip() {
+        let mut voxels: Vec<Vec3> =
+            (0..500u64).map(|i| [i % 64, (i / 7) % 64, i % 16]).collect();
+        voxels.sort_unstable();
+        voxels.dedup();
+        let b = encode_voxels(&voxels);
+        assert_eq!(decode_voxels(&b).unwrap(), voxels);
+        assert!(decode_voxels(&encode_voxels(&[])).unwrap().is_empty());
+    }
+
+    #[test]
+    fn objects_roundtrip() {
+        let objs = vec![
+            RamonObject::synapse(7, 0.9, SynapseType::Excitatory).with_author("a"),
+            RamonObject::neuron(9).with_kv("k", "v"),
+        ];
+        let b = encode_objects(&objs);
+        assert_eq!(decode_objects(&b).unwrap(), objs);
+    }
+
+    #[test]
+    fn frame_kinds_not_interchangeable() {
+        let b = encode_voxels(&[[1, 2, 3]]);
+        assert!(decode_objects(&b).is_err());
+        assert!(decode_volume_raw(&b).is_err());
+    }
+}

@@ -1,0 +1,346 @@
+//! Request dispatch: Table 1's URL grammar bound to the cluster services.
+
+use std::sync::Arc;
+
+use crate::annotation::{Predicate, PredicateOp, RegionQuery};
+use crate::array::Plane;
+use crate::cluster::Cluster;
+use crate::core::{Box3, Dtype, WriteDiscipline};
+use crate::runtime::Runtime;
+use crate::tiles::{TileKey, TileService};
+use crate::web::http::{Request, Response};
+use crate::web::ocpk;
+use crate::{Error, Result};
+
+/// The Web-service layer over a cluster (the paper's "application
+/// server" role).
+pub struct OcpService {
+    cluster: Arc<Cluster>,
+    #[allow(dead_code)] // reserved for server-side vision endpoints
+    runtime: Option<Arc<Runtime>>,
+    tiles: std::sync::Mutex<std::collections::HashMap<String, Arc<TileService>>>,
+}
+
+impl OcpService {
+    pub fn new(cluster: Arc<Cluster>, runtime: Option<Arc<Runtime>>) -> Self {
+        OcpService {
+            cluster,
+            runtime,
+            tiles: std::sync::Mutex::new(std::collections::HashMap::new()),
+        }
+    }
+
+    /// Entry point: map a request to a response, turning errors into
+    /// their HTTP status codes.
+    pub fn handle(&self, req: Request) -> Response {
+        match self.dispatch(&req) {
+            Ok(resp) => resp,
+            Err(e) => Response::error(e.http_status(), e.to_string()),
+        }
+    }
+
+    fn dispatch(&self, req: &Request) -> Result<Response> {
+        let segs: Vec<&str> =
+            req.path.split('/').filter(|s| !s.is_empty()).collect();
+        if segs.is_empty() {
+            return Ok(Response::text("ocpd: Open Connectome Project data cluster"));
+        }
+        match (req.method.as_str(), segs[0]) {
+            (_, "info") => self.info(),
+            ("GET", token) => self.get(token, &segs[1..]),
+            ("PUT" | "POST", token) => self.put(token, &segs[1..], &req.body),
+            _ => Ok(Response::error(405, "method not allowed")),
+        }
+    }
+
+    fn info(&self) -> Result<Response> {
+        let mut out = String::from("ocpd cluster\nprojects:\n");
+        for t in self.cluster.tokens() {
+            out.push_str(&format!("  {t}\n"));
+        }
+        out.push_str("nodes:\n");
+        for (name, s) in self.cluster.node_stats() {
+            out.push_str(&format!(
+                "  {name}: reads={} read_bytes={} writes={} write_bytes={}\n",
+                s.reads, s.read_bytes, s.writes, s.write_bytes
+            ));
+        }
+        Ok(Response::text(out))
+    }
+
+    // ------------------------------------------------------------------
+    // GET routes
+    // ------------------------------------------------------------------
+
+    fn get(&self, token: &str, rest: &[&str]) -> Result<Response> {
+        match rest {
+            // /{token}/ocpk/{res}/{xr}/{yr}/{zr}/
+            ["ocpk", res, xr, yr, zr] => {
+                let bx = parse_box(xr, yr, zr)?;
+                let res = parse_res(res)?;
+                self.cutout(token, res, bx)
+            }
+            // /{token}/xy/{res}/{z}/{xr}/{yr}/
+            ["xy", res, z, xr, yr] => {
+                let res = parse_res(res)?;
+                let z: u64 = parse_num(z)?;
+                let (x0, x1) = parse_range(xr)?;
+                let (y0, y1) = parse_range(yr)?;
+                let svc = self.cluster.image(token)?;
+                let (w, h, data) =
+                    svc.read_plane::<u8>(res, 0, 0, Plane::Xy(z), [x0, y0], [x1, y1])?;
+                let vol = crate::array::DenseVolume::from_vec([w, h, 1], data)?;
+                Ok(Response::binary(ocpk::encode_volume(Dtype::U8, [x0, y0, z], &vol)?))
+            }
+            // /{token}/tile/{res}/{z}/{y}_{x}.gray
+            ["tile", res, z, yx] => {
+                let res = parse_res(res)?;
+                let z: u64 = parse_num(z)?;
+                let (y, x) = yx
+                    .strip_suffix(".gray")
+                    .and_then(|s| s.split_once('_'))
+                    .ok_or_else(|| Error::BadRequest(format!("bad tile name '{yx}'")))?;
+                let key = TileKey { res, z, y: parse_num(y)?, x: parse_num(x)? };
+                let ts = self.tile_service(token)?;
+                Ok(Response::binary(ts.get_tile(key)?))
+            }
+            // /{token}/objects/{field}/{value}/... predicate query
+            ["objects", preds @ ..] => {
+                let db = self.cluster.annotation(token)?;
+                let predicates = parse_predicates(preds)?;
+                let ids = db.query(&predicates)?;
+                Ok(Response::text(
+                    ids.iter().map(|i| i.to_string()).collect::<Vec<_>>().join(","),
+                ))
+            }
+            // /{token}/region/{res}/{xr}/{yr}/{zr}/ — ids in region
+            ["region", res, xr, yr, zr] => {
+                let db = self.cluster.annotation(token)?;
+                let ids = db.objects_in_region(
+                    parse_res(res)?,
+                    parse_box(xr, yr, zr)?,
+                    RegionQuery { include_exceptions: true },
+                )?;
+                Ok(Response::text(
+                    ids.iter().map(|i| i.to_string()).collect::<Vec<_>>().join(","),
+                ))
+            }
+            // /{token}/{id}/voxels/
+            [id, "voxels"] => {
+                let db = self.cluster.annotation(token)?;
+                let voxels = db.voxel_list(db.project.base_resolution, parse_num(id)? as u32)?;
+                Ok(Response::binary(ocpk::encode_voxels(&voxels)))
+            }
+            // /{token}/{id}/boundingbox/
+            [id, "boundingbox"] => {
+                let db = self.cluster.annotation(token)?;
+                match db.bounding_box(db.project.base_resolution, parse_num(id)? as u32)? {
+                    Some(b) => Ok(Response::text(format!(
+                        "{},{}/{},{}/{},{}",
+                        b.lo[0], b.hi[0], b.lo[1], b.hi[1], b.lo[2], b.hi[2]
+                    ))),
+                    None => Err(Error::NotFound(format!("annotation {id} has no voxels"))),
+                }
+            }
+            // /{token}/{id}/cutout/ — dense object read
+            [id, "cutout"] => {
+                let db = self.cluster.annotation(token)?;
+                let res = db.project.base_resolution;
+                match db.dense_read(res, parse_num(id)? as u32, None)? {
+                    Some((bx, vol)) => {
+                        Ok(Response::binary(ocpk::encode_volume(Dtype::U32, bx.lo, &vol)?))
+                    }
+                    None => Err(Error::NotFound(format!("annotation {id} has no voxels"))),
+                }
+            }
+            // /{token}/{id}/cutout/{res}/{xr}/{yr}/{zr}/ — restricted
+            [id, "cutout", res, xr, yr, zr] => {
+                let db = self.cluster.annotation(token)?;
+                let bx = parse_box(xr, yr, zr)?;
+                match db.dense_read(parse_res(res)?, parse_num(id)? as u32, Some(bx))? {
+                    Some((bx, vol)) => {
+                        Ok(Response::binary(ocpk::encode_volume(Dtype::U32, bx.lo, &vol)?))
+                    }
+                    None => Err(Error::NotFound(format!("annotation {id} has no voxels"))),
+                }
+            }
+            // /{token}/{id}/ or /{token}/{id1},{id2},.../ — metadata
+            [ids] => {
+                let db = self.cluster.annotation(token)?;
+                let ids: Vec<u32> = ids
+                    .split(',')
+                    .map(|s| parse_num(s).map(|v| v as u32))
+                    .collect::<Result<_>>()?;
+                let objs = db.get_objects(&ids)?;
+                let found: Vec<_> = objs.into_iter().flatten().collect();
+                if found.is_empty() {
+                    return Err(Error::NotFound("no matching annotations".into()));
+                }
+                Ok(Response::binary(ocpk::encode_objects(&found)))
+            }
+            _ => Err(Error::BadRequest(format!("unrecognized GET /{token}/{}", rest.join("/")))),
+        }
+    }
+
+    /// Image cutout if the token is an image project, else annotation.
+    fn cutout(&self, token: &str, res: u32, bx: Box3) -> Result<Response> {
+        if let Ok(svc) = self.cluster.image(token) {
+            let vol = svc.read::<u8>(res, 0, 0, bx)?;
+            return Ok(Response::binary(ocpk::encode_volume(Dtype::U8, bx.lo, &vol)?));
+        }
+        let db = self.cluster.annotation(token)?;
+        let vol = db.cutout.read::<u32>(res, 0, 0, bx)?;
+        Ok(Response::binary(ocpk::encode_volume(Dtype::U32, bx.lo, &vol)?))
+    }
+
+    fn tile_service(&self, token: &str) -> Result<Arc<TileService>> {
+        let mut guard = self.tiles.lock().unwrap();
+        if let Some(t) = guard.get(token) {
+            return Ok(Arc::clone(t));
+        }
+        let svc = self.cluster.image(token)?;
+        let ts = Arc::new(TileService::new(svc, 256, 1024));
+        guard.insert(token.to_string(), Arc::clone(&ts));
+        Ok(ts)
+    }
+
+    // ------------------------------------------------------------------
+    // PUT routes
+    // ------------------------------------------------------------------
+
+    fn put(&self, token: &str, rest: &[&str], body: &[u8]) -> Result<Response> {
+        match rest {
+            // PUT /{token}/ramon/ — batch metadata write; server assigns
+            // ids for id=0 objects (§4.2).
+            ["ramon"] => {
+                let db = self.cluster.annotation(token)?;
+                let objs = ocpk::decode_objects(body)?;
+                let ids = db.put_objects(objs)?;
+                Ok(Response::text(
+                    ids.iter().map(|i| i.to_string()).collect::<Vec<_>>().join(","),
+                ))
+            }
+            // PUT /{token}/image/{res}/ — image ingest (OCPK u8 volume).
+            ["image", res] => {
+                let svc = self.cluster.image(token)?;
+                let (_dt, bx, vol) = ocpk::decode_volume::<u8>(body)?;
+                svc.write(parse_res(res)?, 0, 0, bx, &vol)?;
+                Ok(Response::text("ok"))
+            }
+            // PUT /{token}/{discipline}/{res}/ with an OCPK volume body
+            // (frame carries its own offset).
+            [disc, res] => {
+                let discipline = WriteDiscipline::parse(disc).ok_or_else(|| {
+                    Error::BadRequest(format!("unknown write discipline '{disc}'"))
+                })?;
+                let db = self.cluster.annotation(token)?;
+                let (_dt, bx, vol) = ocpk::decode_volume::<u32>(body)?;
+                let outcome = db.write_volume(parse_res(res)?, bx, &vol, discipline)?;
+                Ok(Response::text(format!(
+                    "written={} conflicted={} exceptions={} cuboids={}",
+                    outcome.voxels_written,
+                    outcome.voxels_conflicted,
+                    outcome.exceptions_added,
+                    outcome.cuboids_touched
+                )))
+            }
+            _ => Err(Error::BadRequest(format!("unrecognized PUT /{token}/{}", rest.join("/")))),
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// URL parsing helpers
+// ----------------------------------------------------------------------
+
+fn parse_num(s: &str) -> Result<u64> {
+    s.parse().map_err(|_| Error::BadRequest(format!("bad number '{s}'")))
+}
+
+fn parse_res(s: &str) -> Result<u32> {
+    Ok(parse_num(s)? as u32)
+}
+
+/// `"lo,hi"` → half-open range.
+fn parse_range(s: &str) -> Result<(u64, u64)> {
+    let (a, b) = s
+        .split_once(',')
+        .ok_or_else(|| Error::BadRequest(format!("bad range '{s}' (want lo,hi)")))?;
+    let (lo, hi) = (parse_num(a)?, parse_num(b)?);
+    if lo >= hi {
+        return Err(Error::BadRequest(format!("empty range '{s}'")));
+    }
+    Ok((lo, hi))
+}
+
+fn parse_box(xr: &str, yr: &str, zr: &str) -> Result<Box3> {
+    let (x0, x1) = parse_range(xr)?;
+    let (y0, y1) = parse_range(yr)?;
+    let (z0, z1) = parse_range(zr)?;
+    Ok(Box3::new([x0, y0, z0], [x1, y1, z1]))
+}
+
+/// Predicate segments: `field/value` pairs, with `field/op/value` for
+/// range operators (§4.2: equality everywhere, inequalities on floats).
+fn parse_predicates(segs: &[&str]) -> Result<Vec<Predicate>> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < segs.len() {
+        let field = segs[i];
+        if i + 1 >= segs.len() {
+            return Err(Error::BadRequest(format!("predicate '{field}' missing value")));
+        }
+        if let Ok(op) = PredicateOp::parse(segs[i + 1]) {
+            if op != PredicateOp::Eq {
+                if i + 2 >= segs.len() {
+                    return Err(Error::BadRequest(format!(
+                        "predicate '{field}/{}' missing value",
+                        segs[i + 1]
+                    )));
+                }
+                out.push(Predicate {
+                    field: field.to_string(),
+                    op,
+                    value: segs[i + 2].to_string(),
+                });
+                i += 3;
+                continue;
+            }
+        }
+        out.push(Predicate::eq(field, segs[i + 1]));
+        i += 2;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn range_parsing() {
+        assert_eq!(parse_range("5,10").unwrap(), (5, 10));
+        assert!(parse_range("10,5").is_err());
+        assert!(parse_range("abc").is_err());
+        assert!(parse_range("5").is_err());
+    }
+
+    #[test]
+    fn predicate_parsing_paper_example() {
+        // objects/type/synapse/confidence/geq/0.99/
+        let p = parse_predicates(&["type", "synapse", "confidence", "geq", "0.99"]).unwrap();
+        assert_eq!(p.len(), 2);
+        assert_eq!(p[0].field, "type");
+        assert_eq!(p[0].op, PredicateOp::Eq);
+        assert_eq!(p[1].op, PredicateOp::Geq);
+        assert_eq!(p[1].value, "0.99");
+        assert!(parse_predicates(&["type"]).is_err());
+        assert!(parse_predicates(&["confidence", "geq"]).is_err());
+    }
+
+    #[test]
+    fn box_parsing() {
+        let b = parse_box("0,128", "128,256", "0,16").unwrap();
+        assert_eq!(b, Box3::new([0, 128, 0], [128, 256, 16]));
+    }
+}

@@ -1,0 +1,251 @@
+//! Cross-module integration: cluster + cutout + annotation + index +
+//! hierarchy + sharding working together (no AOT artifacts required).
+
+use std::sync::Arc;
+
+use ocpd::annotation::{Predicate, PredicateOp, RamonObject, RegionQuery, SynapseType};
+use ocpd::array::DenseVolume;
+use ocpd::cluster::Cluster;
+use ocpd::core::{Box3, DatasetBuilder, Project, WriteDiscipline};
+use ocpd::ingest::{generate, ingest_volume, SynthSpec};
+use ocpd::resolution::Propagator;
+use ocpd::util::prop::property;
+use ocpd::util::Rng;
+
+fn cluster(dims: [u64; 3], levels: u32) -> Arc<Cluster> {
+    let c = Cluster::in_memory(2, 1);
+    c.register_dataset(DatasetBuilder::new("ds", dims).levels(levels).build());
+    c
+}
+
+#[test]
+fn ingest_hierarchy_cutout_roundtrip() {
+    let c = cluster([512, 512, 32], 3);
+    let img = c.create_image_project(Project::image("img", "ds")).unwrap();
+    let sv = generate(&SynthSpec::small([512, 512, 32], 1));
+    ingest_volume(&img, &sv.vol, [256, 256, 16]).unwrap();
+    // Full-volume read matches the source exactly.
+    let whole = Box3::new([0, 0, 0], [512, 512, 32]);
+    assert_eq!(img.read::<u8>(0, 0, 0, whole).unwrap(), sv.vol);
+    // Hierarchy: level dims halve in XY; content is locally averaged.
+    Propagator::new(&img).propagate_image().unwrap();
+    let l1 = img.read::<u8>(1, 0, 0, Box3::new([0, 0, 0], [256, 256, 32])).unwrap();
+    let mean0 = sv.vol.as_slice().iter().map(|&v| v as f64).sum::<f64>() / sv.vol.len() as f64;
+    let mean1 = l1.as_slice().iter().map(|&v| v as f64).sum::<f64>() / l1.len() as f64;
+    assert!((mean0 - mean1).abs() < 2.0, "level means {mean0:.1} vs {mean1:.1}");
+}
+
+#[test]
+fn annotation_full_lifecycle_through_cluster() {
+    let c = cluster([256, 256, 32], 2);
+    let anno = c
+        .create_annotation_project(Project::annotation("ann", "ds").with_exceptions(), true)
+        .unwrap();
+
+    // Write 30 labeled blobs at disjoint sites + metadata.
+    let mut objs = Vec::new();
+    for id in 1..=30u32 {
+        let i = (id - 1) as u64;
+        let lo = [(i % 6) * 40, (i / 6) * 40, (i % 4) * 6];
+        let bx = Box3::at(lo, [8, 8, 4]);
+        let mut v = DenseVolume::<u32>::zeros(bx.extent());
+        v.fill_box(Box3::new([0, 0, 0], bx.extent()), id);
+        anno.write_volume(0, bx, &v, WriteDiscipline::Preserve).unwrap();
+        objs.push(RamonObject::synapse(id, id as f32 / 30.0, SynapseType::Excitatory));
+    }
+    anno.put_objects(objs).unwrap();
+
+    // Predicate query matches the confidence partition (>= 0.5 -> ids 15..30).
+    let hi = anno
+        .query(&[
+            Predicate::eq("type", "synapse"),
+            Predicate::cmp("confidence", PredicateOp::Geq, 0.5),
+        ])
+        .unwrap();
+    assert_eq!(hi.len(), 16, "{hi:?}");
+
+    // Every object readable: voxels + bbox agree.
+    for id in 1..=30u32 {
+        let voxels = anno.voxel_list(0, id).unwrap();
+        assert_eq!(voxels.len(), 8 * 8 * 4, "object {id}");
+        let bb = anno.bounding_box(0, id).unwrap().unwrap();
+        for v in &voxels {
+            assert!(bb.contains(*v), "voxel {v:?} outside bbox {bb:?} for {id}");
+        }
+    }
+
+    // Propagate annotations and check they exist at level 1.
+    Propagator::new(&anno.cutout).propagate_annotations().unwrap();
+    let ids_l1 = anno
+        .objects_in_region(1, Box3::new([0, 0, 0], [128, 128, 32]), RegionQuery::default())
+        .unwrap();
+    assert!(!ids_l1.is_empty());
+
+    // Migration preserves everything.
+    let before = anno.voxel_list(0, 7).unwrap();
+    let (anno2, moved) = c.migrate_annotation_project("ann").unwrap();
+    assert!(moved > 0);
+    assert_eq!(anno2.voxel_list(0, 7).unwrap(), before);
+    assert_eq!(anno2.get_object(7).unwrap().rtype, ocpd::annotation::RamonType::Synapse);
+}
+
+#[test]
+fn sharded_image_cutouts_match_prop() {
+    // Cutouts from a 2-node sharded store must equal the source volume,
+    // for arbitrary boxes straddling shard boundaries.
+    let c = cluster([256, 256, 32], 1);
+    let img = c.create_image_project(Project::image("img", "ds")).unwrap();
+    let sv = generate(&SynthSpec::small([256, 256, 32], 3));
+    ingest_volume(&img, &sv.vol, [128, 128, 16]).unwrap();
+    property("sharded_cutouts", 60, |g| {
+        let (lo, hi) = g.boxed([256, 256, 32], 128);
+        let bx = Box3::new(lo, hi);
+        assert_eq!(img.read::<u8>(0, 0, 0, bx).unwrap(), sv.vol.extract_box(bx));
+    });
+}
+
+#[test]
+fn concurrent_cutouts_and_annotation_writes() {
+    // The paper's concurrent-workload placement: vision reads cutouts
+    // while writing annotations. Run both in parallel and verify nothing
+    // interferes.
+    let c = cluster([256, 256, 32], 1);
+    let img = c.create_image_project(Project::image("img", "ds")).unwrap();
+    let anno = c.create_annotation_project(Project::annotation("ann", "ds"), true).unwrap();
+    let sv = generate(&SynthSpec::small([256, 256, 32], 5));
+    ingest_volume(&img, &sv.vol, [256, 256, 16]).unwrap();
+
+    crossbeam_utils::thread::scope(|s| {
+        for t in 0..4u64 {
+            let img = Arc::clone(&img);
+            let truth = sv.vol.clone();
+            s.spawn(move |_| {
+                let mut rng = Rng::new(t);
+                for _ in 0..20 {
+                    let lo = [rng.below(192), rng.below(192), rng.below(16)];
+                    let bx = Box3::at(lo, [64, 64, 16]);
+                    let got = img.read::<u8>(0, 0, 0, bx).unwrap();
+                    assert_eq!(got, truth.extract_box(bx));
+                }
+            });
+        }
+        for w in 0..4u32 {
+            let anno = Arc::clone(&anno);
+            s.spawn(move |_| {
+                for i in 0..16u32 {
+                    let id = w * 16 + i + 1;
+                    // Disjoint sites per id so overwrites never collide.
+                    let k = (id - 1) as u64;
+                    let lo = [(k % 8) * 30, ((k / 8) % 8) * 30, (k % 4) * 7];
+                    let bx = Box3::at(lo, [6, 6, 3]);
+                    let mut v = DenseVolume::<u32>::zeros(bx.extent());
+                    v.fill_box(Box3::new([0, 0, 0], bx.extent()), id);
+                    anno.write_volume(0, bx, &v, WriteDiscipline::Overwrite).unwrap();
+                }
+            });
+        }
+    })
+    .unwrap();
+
+    // All 64 writer objects present.
+    for id in 1..=64u32 {
+        assert!(!anno.voxel_list(0, id).unwrap().is_empty(), "object {id}");
+    }
+}
+
+#[test]
+fn spatial_index_consistent_with_volume_prop() {
+    // For random annotation writes, the index's cuboid list must cover
+    // every cuboid where the object's voxels live.
+    let c = cluster([256, 256, 32], 1);
+    let anno = c.create_annotation_project(Project::annotation("ann", "ds"), false).unwrap();
+    let cshape = anno.cutout.store().cuboid_shape(0).unwrap();
+    property("index_covers_voxels", 30, |g| {
+        let id = 1 + g.u32_below(1000);
+        let (lo, hi) = g.boxed([256, 256, 32], 40);
+        let bx = Box3::new(lo, hi);
+        let mut v = DenseVolume::<u32>::zeros(bx.extent());
+        v.fill_box(Box3::new([0, 0, 0], bx.extent()), id);
+        anno.write_volume(0, bx, &v, WriteDiscipline::Overwrite).unwrap();
+        let codes = anno.index.cuboids_of(0, id).unwrap();
+        let cover = bx.cuboid_cover(cshape);
+        for cz in cover.lo[2]..cover.hi[2] {
+            for cy in cover.lo[1]..cover.hi[1] {
+                for cx in cover.lo[0]..cover.hi[0] {
+                    let e = ocpd::morton::encode3(cx, cy, cz);
+                    assert!(codes.binary_search(&e).is_ok(), "missing cuboid {e}");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn io_separation_reads_db_writes_ssd() {
+    // Reads hit database nodes; annotation writes hit the SSD node.
+    let c = cluster([256, 256, 32], 1);
+    let img = c.create_image_project(Project::image("img", "ds")).unwrap();
+    let anno = c.create_annotation_project(Project::annotation("ann", "ds"), true).unwrap();
+    let sv = generate(&SynthSpec::small([256, 256, 32], 8));
+    ingest_volume(&img, &sv.vol, [256, 256, 16]).unwrap();
+    let base = c.node_stats();
+
+    for _ in 0..8 {
+        img.read::<u8>(0, 0, 0, Box3::new([0, 0, 0], [128, 128, 16])).unwrap();
+    }
+    let bx = Box3::new([0, 0, 0], [8, 8, 4]);
+    let mut v = DenseVolume::<u32>::zeros(bx.extent());
+    v.fill_box(Box3::new([0, 0, 0], bx.extent()), 1);
+    anno.write_volume(0, bx, &v, WriteDiscipline::Overwrite).unwrap();
+
+    let now = c.node_stats();
+    let delta = |i: usize| {
+        (
+            now[i].1.read_bytes - base[i].1.read_bytes,
+            now[i].1.write_bytes - base[i].1.write_bytes,
+        )
+    };
+    let (db0_r, db0_w) = delta(0);
+    let (_db1_r, db1_w) = delta(1);
+    let (_ssd_r, ssd_w) = delta(2);
+    assert!(db0_r > 0, "db reads expected");
+    assert_eq!(db0_w + db1_w, 0, "image reads must not write db nodes");
+    assert!(ssd_w > 0, "annotation write must hit ssd node");
+}
+
+#[test]
+fn simulated_cluster_end_to_end() {
+    // The device-model cluster serves the same workload, just slower.
+    let c = Cluster::simulated(1, 1, 0.001);
+    c.register_dataset(DatasetBuilder::new("ds", [128, 128, 16]).levels(1).build());
+    let img = c.create_image_project(Project::image("img", "ds")).unwrap();
+    let anno = c.create_annotation_project(Project::annotation("ann", "ds"), true).unwrap();
+    let sv = generate(&SynthSpec::small([128, 128, 16], 9));
+    ingest_volume(&img, &sv.vol, [128, 128, 16]).unwrap();
+    let whole = Box3::new([0, 0, 0], [128, 128, 16]);
+    assert_eq!(img.read::<u8>(0, 0, 0, whole).unwrap(), sv.vol);
+    let bx = Box3::new([4, 4, 2], [12, 12, 6]);
+    let mut v = DenseVolume::<u32>::zeros(bx.extent());
+    v.fill_box(Box3::new([0, 0, 0], bx.extent()), 3);
+    anno.write_volume(0, bx, &v, WriteDiscipline::Overwrite).unwrap();
+    assert_eq!(anno.voxel_list(0, 3).unwrap().len() as u64, bx.volume());
+}
+
+#[test]
+fn timeseries_dataset_through_cluster() {
+    let c = Cluster::in_memory(1, 0);
+    c.register_dataset(
+        DatasetBuilder::new("ts", [64, 64, 8]).levels(1).timesteps(6).build(),
+    );
+    let img = c.create_image_project(Project::image("tsimg", "ts")).unwrap();
+    let bx = Box3::new([0, 0, 0], [64, 64, 8]);
+    for t in 0..6u64 {
+        let mut v = DenseVolume::<u8>::zeros(bx.extent());
+        v.fill_box(bx, 10 + t as u8);
+        img.write(0, 0, t, bx, &v).unwrap();
+    }
+    let series = img.read_timeseries::<u8>(0, 0, 0, 6, Box3::new([8, 8, 2], [16, 16, 4])).unwrap();
+    for (t, v) in series.iter().enumerate() {
+        assert_eq!(v.get([0, 0, 0]), 10 + t as u8);
+    }
+}

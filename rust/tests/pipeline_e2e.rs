@@ -1,0 +1,197 @@
+//! End-to-end integration over runtime + vision: requires `make
+//! artifacts` (skipped gracefully when artifacts are absent).
+
+use std::sync::Arc;
+
+use ocpd::array::DenseVolume;
+use ocpd::cluster::Cluster;
+use ocpd::core::{Box3, DatasetBuilder, Project};
+use ocpd::ingest::{generate, ingest_volume, SynthSpec};
+use ocpd::runtime::{artifact_dir, Runtime};
+use ocpd::vision::{color_correct_volume, precision_recall, SynapsePipeline};
+
+fn runtime() -> Option<Arc<Runtime>> {
+    Runtime::load_dir(artifact_dir()).ok().map(Arc::new)
+}
+
+fn boot(dims: [u64; 3], seed: u64) -> (Arc<Cluster>, Arc<ocpd::cutout::CutoutService>, Arc<ocpd::annotation::AnnotationDb>) {
+    let cluster = Cluster::in_memory(1, 1);
+    cluster.register_dataset(DatasetBuilder::new("t", dims).levels(1).build());
+    let img = cluster.create_image_project(Project::image("t", "t")).unwrap();
+    let anno = cluster
+        .create_annotation_project(Project::annotation("a", "t"), true)
+        .unwrap();
+    let _ = seed;
+    (cluster, img, anno)
+}
+
+#[test]
+fn detector_finds_single_planted_synapse() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    };
+    let dims = [128u64, 128, 16];
+    let (_c, img, anno) = boot(dims, 1);
+    // One synapse, no distractors, no noise.
+    let spec = SynthSpec {
+        dims,
+        seed: 5,
+        n_synapses: 1,
+        n_dendrites: 0,
+        n_vessels: 0,
+        noise_sigma: 0.0,
+        exposure_amp: 0.0,
+    };
+    let sv = generate(&spec);
+    ingest_volume(&img, &sv.vol, [128, 128, 16]).unwrap();
+
+    let pipeline = SynapsePipeline::new(rt, img, anno);
+    let report = pipeline.run(0, Box3::new([0, 0, 0], dims)).unwrap();
+    assert_eq!(report.blocks, 1);
+    assert_eq!(
+        report.detections.len(),
+        1,
+        "expected exactly one detection, got {:?}",
+        report
+            .detections
+            .iter()
+            .map(|d| (d.centroid, d.voxels, d.confidence))
+            .collect::<Vec<_>>()
+    );
+    let d = &report.detections[0];
+    let t = sv.synapses[0];
+    let dist = ((d.centroid[0] as f64 - t[0] as f64).powi(2)
+        + (d.centroid[1] as f64 - t[1] as f64).powi(2)
+        + (d.centroid[2] as f64 - t[2] as f64).powi(2))
+    .sqrt();
+    assert!(
+        dist <= 3.0,
+        "detection at {:?} too far from truth {:?} (dist {dist:.1})",
+        d.centroid,
+        t
+    );
+}
+
+#[test]
+fn detector_precision_recall_with_distractors() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let dims = [256u64, 256, 32];
+    let (_c, img, anno) = boot(dims, 2);
+    let sv = generate(&SynthSpec::small(dims, 17));
+    ingest_volume(&img, &sv.vol, [256, 256, 16]).unwrap();
+    let mut pipeline = SynapsePipeline::new(rt, img, anno);
+    pipeline.workers = 2;
+    let report = pipeline.run(0, Box3::new([0, 0, 0], dims)).unwrap();
+    let (p, r, _m) = precision_recall(&report.detections, &sv.synapses, 6.0);
+    assert!(r > 0.7, "recall {r:.3} (detections {})", report.detections.len());
+    assert!(p > 0.7, "precision {p:.3} (detections {})", report.detections.len());
+}
+
+#[test]
+fn detections_written_as_annotations() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let dims = [128u64, 128, 16];
+    let (_c, img, anno) = boot(dims, 3);
+    let spec = SynthSpec {
+        dims,
+        seed: 9,
+        n_synapses: 3,
+        n_dendrites: 0,
+        n_vessels: 0,
+        noise_sigma: 2.0,
+        exposure_amp: 0.0,
+    };
+    let sv = generate(&spec);
+    ingest_volume(&img, &sv.vol, [128, 128, 16]).unwrap();
+    let pipeline = SynapsePipeline::new(rt, Arc::clone(&img), Arc::clone(&anno));
+    let report = pipeline.run(0, Box3::new([0, 0, 0], dims)).unwrap();
+    // Every detection must be readable back: metadata + voxels + index.
+    for d in &report.detections {
+        let obj = anno.get_object(d.id).unwrap();
+        assert_eq!(obj.rtype, ocpd::annotation::RamonType::Synapse);
+        assert!((obj.confidence - d.confidence).abs() < 1e-5);
+        let voxels = anno.voxel_list(0, d.id).unwrap();
+        assert_eq!(voxels.len(), d.voxels);
+        assert!(anno.bounding_box(0, d.id).unwrap().is_some());
+    }
+}
+
+#[test]
+fn color_correct_reduces_exposure_variance() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let dims = [256u64, 256, 32];
+    let cluster = Cluster::in_memory(1, 0);
+    cluster.register_dataset(DatasetBuilder::new("s", dims).levels(1).build());
+    let raw = cluster.create_image_project(Project::image("s", "s")).unwrap();
+    let clean = cluster.create_image_project(Project::image("s_clean", "s")).unwrap();
+    let spec = SynthSpec {
+        dims,
+        seed: 4,
+        n_synapses: 10,
+        n_dendrites: 2,
+        n_vessels: 0,
+        noise_sigma: 4.0,
+        exposure_amp: 50.0,
+    };
+    let sv = generate(&spec);
+    ingest_volume(&raw, &sv.vol, [256, 256, 16]).unwrap();
+    color_correct_volume(&rt, &raw, &clean, 0).unwrap();
+
+    let whole = Box3::new([0, 0, 0], dims);
+    let before = raw.read::<u8>(0, 0, 0, whole).unwrap();
+    let after = clean.read::<u8>(0, 0, 0, whole).unwrap();
+    let section_var = |v: &DenseVolume<u8>| {
+        let means: Vec<f64> = (0..dims[2])
+            .map(|z| {
+                let mut s = 0u64;
+                for y in 0..dims[1] {
+                    for x in 0..dims[0] {
+                        s += v.get([x, y, z]) as u64;
+                    }
+                }
+                s as f64 / (dims[0] * dims[1]) as f64
+            })
+            .collect();
+        let m = means.iter().sum::<f64>() / means.len() as f64;
+        means.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / means.len() as f64
+    };
+    let (vb, va) = (section_var(&before), section_var(&after));
+    assert!(va < vb * 0.5, "exposure variance {vb:.1} -> {va:.1}");
+}
+
+#[test]
+fn downsample_graph_matches_rust_hierarchy() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    // The AOT downsampler and the Rust-side mean downsampler must agree.
+    let mut input = DenseVolume::<f32>::zeros([128, 128, 16]);
+    for z in 0..16u64 {
+        for y in 0..128u64 {
+            for x in 0..128u64 {
+                input.set([x, y, z], ((x * 31 + y * 7 + z * 3) % 255) as f32 / 255.0);
+            }
+        }
+    }
+    let out = rt.run3d("downsample2x", &input).unwrap();
+    assert_eq!(out.dims(), [64, 64, 16]);
+    for &(x, y, z) in &[(0u64, 0u64, 0u64), (13, 40, 7), (63, 63, 15)] {
+        let mean = (input.get([2 * x, 2 * y, z])
+            + input.get([2 * x + 1, 2 * y, z])
+            + input.get([2 * x, 2 * y + 1, z])
+            + input.get([2 * x + 1, 2 * y + 1, z]))
+            / 4.0;
+        assert!((out.get([x, y, z]) - mean).abs() < 1e-5);
+    }
+}

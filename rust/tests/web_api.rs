@@ -1,0 +1,208 @@
+//! Web API conformance: the Table 1 URL grammar over real HTTP.
+
+use std::sync::Arc;
+
+use ocpd::array::DenseVolume;
+use ocpd::client::OcpClient;
+use ocpd::cluster::Cluster;
+use ocpd::core::{Box3, DatasetBuilder, Project, WriteDiscipline};
+use ocpd::ingest::{generate, ingest_volume, SynthSpec};
+use ocpd::web::http::request;
+use ocpd::web::Server;
+
+struct Fixture {
+    server: Server,
+    truth: DenseVolume<u8>,
+}
+
+fn fixture() -> Fixture {
+    let dims = [256u64, 256, 32];
+    let cluster = Cluster::in_memory(1, 1);
+    cluster.register_dataset(DatasetBuilder::new("img", dims).levels(2).build());
+    let img = cluster.create_image_project(Project::image("img", "img")).unwrap();
+    cluster
+        .create_annotation_project(Project::annotation("ann", "img").with_exceptions(), true)
+        .unwrap();
+    let sv = generate(&SynthSpec::small(dims, 1));
+    ingest_volume(&img, &sv.vol, [256, 256, 16]).unwrap();
+    let server = ocpd::web::serve(cluster, None, "127.0.0.1:0", 8).unwrap();
+    Fixture { server, truth: sv.vol }
+}
+
+#[test]
+fn cutout_url_table1() {
+    let f = fixture();
+    // Table 1: http://.../token/ocpk/resolution/x-range/y-range/z-range/
+    let url = format!("{}/img/ocpk/0/64,128/32,96/4,12/", f.server.url());
+    let (code, body) = request("GET", &url, &[]).unwrap();
+    assert_eq!(code, 200);
+    let (_dt, bx, vol) = ocpd::web::ocpk::decode_volume::<u8>(&body).unwrap();
+    assert_eq!(bx, Box3::new([64, 32, 4], [128, 96, 12]));
+    assert_eq!(vol, f.truth.extract_box(bx));
+}
+
+#[test]
+fn cutout_errors_are_http_statuses() {
+    let f = fixture();
+    // Out of bounds -> 400.
+    let (code, _) =
+        request("GET", &format!("{}/img/ocpk/0/0,9999/0,8/0,8/", f.server.url()), &[]).unwrap();
+    assert_eq!(code, 400);
+    // Unknown token -> 404.
+    let (code, _) =
+        request("GET", &format!("{}/nope/ocpk/0/0,8/0,8/0,8/", f.server.url()), &[]).unwrap();
+    assert_eq!(code, 404);
+    // Bad range -> 400.
+    let (code, _) =
+        request("GET", &format!("{}/img/ocpk/0/8,0/0,8/0,8/", f.server.url()), &[]).unwrap();
+    assert_eq!(code, 400);
+    // Bad method -> 405.
+    let (code, _) = request("DELETE", &format!("{}/img/", f.server.url()), &[]).unwrap();
+    assert_eq!(code, 405);
+}
+
+#[test]
+fn annotation_write_then_object_reads() {
+    let f = fixture();
+    let client = OcpClient::new(&f.server.url(), "ann");
+
+    // Write two objects.
+    let bx = Box3::new([10, 10, 2], [42, 42, 10]);
+    let mut labels = DenseVolume::<u32>::zeros(bx.extent());
+    labels.fill_box(Box3::new([0, 0, 0], [16, 32, 8]), 7);
+    labels.fill_box(Box3::new([16, 0, 0], [32, 32, 8]), 9);
+    client.write_annotation(0, bx.lo, &labels, WriteDiscipline::Overwrite).unwrap();
+
+    // Table 1: voxel list.
+    let voxels = client.voxels(7).unwrap();
+    assert_eq!(voxels.len() as u64, 16 * 32 * 8);
+    assert!(voxels.contains(&[10, 10, 2]));
+
+    // Table 1: bounding box (cuboid-granular; must contain the object).
+    let bb = client.bounding_box(9).unwrap();
+    assert!(bb.contains([26, 10, 2]));
+
+    // Table 1: cutout restricted to a region.
+    let region = Box3::new([10, 10, 2], [26, 20, 6]);
+    let (obx, ovol) = client.object_cutout(7, Some((0, region))).unwrap();
+    assert_eq!(obx, region);
+    assert_eq!(ovol.count_eq(7), 16 * 10 * 4);
+
+    // Annotation cutout of the region shows both labels.
+    let acut = client.cutout_u32(0, bx).unwrap();
+    assert_eq!(acut.count_eq(7), 16 * 32 * 8);
+    assert_eq!(acut.count_eq(9), 16 * 32 * 8);
+}
+
+#[test]
+fn ramon_batch_and_predicate_query() {
+    let f = fixture();
+    let client = OcpClient::new(&f.server.url(), "ann");
+    use ocpd::annotation::{RamonObject, SynapseType};
+    let objs = vec![
+        RamonObject::synapse(0, 0.99, SynapseType::Excitatory),
+        RamonObject::synapse(0, 0.45, SynapseType::Inhibitory),
+        RamonObject::segment(0, 12),
+    ];
+    let ids = client.put_objects(&objs).unwrap();
+    assert_eq!(ids.len(), 3);
+    // Server-assigned unique ids (§4.2).
+    assert!(ids[0] != ids[1] && ids[1] != ids[2]);
+
+    // Paper's example: /objects/type/synapse/confidence/geq/0.99/
+    let hits = client.query(&["type", "synapse", "confidence", "geq", "0.99"]).unwrap();
+    assert_eq!(hits, vec![ids[0]]);
+
+    // Batch metadata read: /{id1},{id2}/
+    let got = client.get_objects(&[ids[0], ids[2]]).unwrap();
+    assert_eq!(got.len(), 2);
+    assert_eq!(got[0].confidence, 0.99);
+    assert_eq!(got[1].neuron, 12);
+}
+
+#[test]
+fn exception_discipline_over_http() {
+    let f = fixture();
+    let client = OcpClient::new(&f.server.url(), "ann");
+    let bx = Box3::new([0, 0, 0], [16, 16, 4]);
+    let mut a = DenseVolume::<u32>::zeros(bx.extent());
+    a.fill_box(Box3::new([0, 0, 0], bx.extent()), 1);
+    client.write_annotation(0, bx.lo, &a, WriteDiscipline::Overwrite).unwrap();
+    let mut b = DenseVolume::<u32>::zeros(bx.extent());
+    b.fill_box(Box3::new([0, 0, 0], [8, 16, 4]), 2);
+    let resp = client.write_annotation(0, bx.lo, &b, WriteDiscipline::Exception).unwrap();
+    assert!(resp.contains("exceptions=512"), "{resp}");
+    // Both readable.
+    assert_eq!(client.voxels(1).unwrap().len() as u64, bx.volume());
+    assert_eq!(client.voxels(2).unwrap().len(), 8 * 16 * 4);
+}
+
+#[test]
+fn plane_and_tile_routes() {
+    let f = fixture();
+    // Plane projection.
+    let url = format!("{}/img/xy/0/5/0,64/0,64/", f.server.url());
+    let (code, body) = request("GET", &url, &[]).unwrap();
+    assert_eq!(code, 200);
+    let (_dt, bx, plane) = ocpd::web::ocpk::decode_volume::<u8>(&body).unwrap();
+    assert_eq!(bx.extent(), [64, 64, 1]);
+    assert_eq!(plane.get([3, 4, 0]), f.truth.get([3, 4, 5]));
+
+    // Tile (256x256 grayscale, stored layout r/z/y_x).
+    let url = format!("{}/img/tile/0/7/0_0.gray", f.server.url());
+    let (code, tile) = request("GET", &url, &[]).unwrap();
+    assert_eq!(code, 200);
+    assert_eq!(tile.len(), 256 * 256);
+    assert_eq!(tile[5 + 9 * 256], f.truth.get([5, 9, 7]));
+}
+
+#[test]
+fn region_query_route() {
+    let f = fixture();
+    let client = OcpClient::new(&f.server.url(), "ann");
+    let bx = Box3::new([100, 100, 20], [110, 110, 24]);
+    let mut v = DenseVolume::<u32>::zeros(bx.extent());
+    v.fill_box(Box3::new([0, 0, 0], bx.extent()), 77);
+    client.write_annotation(0, bx.lo, &v, WriteDiscipline::Overwrite).unwrap();
+    let (code, body) = request(
+        "GET",
+        &format!("{}/ann/region/0/96,128/96,128/16,28/", f.server.url()),
+        &[],
+    )
+    .unwrap();
+    assert_eq!(code, 200);
+    assert_eq!(String::from_utf8_lossy(&body), "77");
+}
+
+#[test]
+fn info_route_lists_projects_and_nodes() {
+    let f = fixture();
+    let info = ocpd::client::cluster_info(&f.server.url()).unwrap();
+    assert!(info.contains("img"));
+    assert!(info.contains("ann"));
+    assert!(info.contains("db0"));
+    assert!(info.contains("ssd0"));
+}
+
+#[test]
+fn parallel_http_cutouts_consistent() {
+    let f = Arc::new(fixture());
+    let handles: Vec<_> = (0..8)
+        .map(|i| {
+            let f = Arc::clone(&f);
+            std::thread::spawn(move || {
+                let client = OcpClient::new(&f.server.url(), "img");
+                let x0 = (i % 4) * 32;
+                let bx = Box3::new([x0, 0, 0], [x0 + 64, 64, 8]);
+                for _ in 0..5 {
+                    let got = client.cutout_u8(0, bx).unwrap();
+                    assert_eq!(got, f.truth.extract_box(bx));
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert!(f.server.requests.get() >= 40);
+}
