@@ -1,0 +1,176 @@
+//! The SSD write-absorber's money shot: random small writes issued by
+//! 1/4/16 concurrent writers, as direct per-write engine puts vs. group
+//! committed WAL appends, on the paper's simulated device models.
+//!
+//! * `direct-hdd` — every put pays the RAID-6 parity read-modify-write
+//!   seek (the seed's fate for cold projects under random writes).
+//! * `direct-ssd` — the seed's "place the hot project on the SSD node"
+//!   configuration.
+//! * `wal-absorb` — puts group-commit into the SSD-resident log while
+//!   the HDD array stays untouched; the drain row shows sealed segments
+//!   applied to the HDD as Morton-sorted batches afterwards.
+//!
+//! Prints the table and rewrites `../BENCH_wal.json` (override with
+//! `OCPD_BENCH_OUT`).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use common::*;
+use ocpd::storage::{DeviceProfile, Engine, MemStore, SimulatedStore};
+use ocpd::util::Rng;
+use ocpd::wal::{Wal, WalConfig, WalEngine};
+
+const RECORDS_PER_WRITER: usize = 100;
+const VALUE_BYTES: usize = 4096;
+const WRITER_COUNTS: [usize; 3] = [1, 4, 16];
+const TABLE: &str = "ann/cub/r0/c0";
+
+fn sim(profile: DeviceProfile) -> Engine {
+    Arc::new(SimulatedStore::new(Arc::new(MemStore::new()), profile, 1.0))
+}
+
+/// `writers` threads issuing random-key puts through `engine`; returns
+/// elapsed seconds.
+fn hammer(engine: &Engine, writers: usize) -> f64 {
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for w in 0..writers {
+            let engine = Arc::clone(engine);
+            s.spawn(move || {
+                let mut rng = Rng::new(w as u64 + 1);
+                let v = vec![0xabu8; VALUE_BYTES];
+                for _ in 0..RECORDS_PER_WRITER {
+                    // Scattered Morton keys: the random-write workload of
+                    // a parallel vision pipeline (Figure 13).
+                    engine.put(TABLE, rng.next_u64() >> 20, &v).unwrap();
+                }
+            });
+        }
+    });
+    t0.elapsed().as_secs_f64()
+}
+
+struct Row {
+    config: &'static str,
+    writers: usize,
+    records: usize,
+    seconds: f64,
+    mean_batch: f64,
+    drain_seconds: f64,
+}
+
+impl Row {
+    fn rec_per_sec(&self) -> f64 {
+        self.records as f64 / self.seconds.max(1e-9)
+    }
+}
+
+fn main() {
+    let mut rows: Vec<Row> = Vec::new();
+    header(
+        "WAL write-absorber: random 4K writes (Figure 13 workload)",
+        &["config", "writers", "rec/s", "mean batch", "drain ms"],
+    );
+
+    for &writers in &WRITER_COUNTS {
+        let records = writers * RECORDS_PER_WRITER;
+
+        // Direct puts against each device class.
+        for (config, profile) in [
+            ("direct-hdd", DeviceProfile::hdd_array()),
+            ("direct-ssd", DeviceProfile::ssd_raid0()),
+        ] {
+            let engine = sim(profile);
+            let seconds = hammer(&engine, writers);
+            rows.push(Row { config, writers, records, seconds, mean_batch: 1.0, drain_seconds: 0.0 });
+        }
+
+        // Group-committed WAL: SSD log absorbing, HDD destination idle
+        // until the drain.
+        let log = sim(DeviceProfile::ssd_raid0());
+        let dest = sim(DeviceProfile::hdd_array());
+        let cfg = WalConfig { background_flush: false, ..WalConfig::default() };
+        let wal = Wal::open("ann", log, dest, cfg).unwrap();
+        let engine: Engine = Arc::new(WalEngine::new(Arc::clone(&wal)));
+        let seconds = hammer(&engine, writers);
+        let st = wal.status().unwrap();
+        let t0 = Instant::now();
+        wal.flush_now().unwrap();
+        let drain_seconds = t0.elapsed().as_secs_f64();
+        rows.push(Row {
+            config: "wal-absorb",
+            writers,
+            records,
+            seconds,
+            mean_batch: st.mean_batch(),
+            drain_seconds,
+        });
+
+        for r in rows.iter().skip(rows.len() - 3) {
+            row(&[
+                r.config.to_string(),
+                r.writers.to_string(),
+                format!("{:.0}", r.rec_per_sec()),
+                format!("{:.1}", r.mean_batch),
+                format!("{:.1}", r.drain_seconds * 1e3),
+            ]);
+        }
+    }
+
+    // The acceptance comparison: at 16 writers the absorber must beat
+    // direct per-write puts on the HDD array.
+    let direct_hdd_16 = rows
+        .iter()
+        .find(|r| r.config == "direct-hdd" && r.writers == 16)
+        .map(Row::rec_per_sec)
+        .unwrap();
+    let wal_16 = rows
+        .iter()
+        .find(|r| r.config == "wal-absorb" && r.writers == 16)
+        .map(Row::rec_per_sec)
+        .unwrap();
+    println!(
+        "\nwal-absorb vs direct-hdd at 16 writers: {:.0} vs {:.0} rec/s ({:.1}x)",
+        wal_16,
+        direct_hdd_16,
+        wal_16 / direct_hdd_16
+    );
+    assert!(
+        wal_16 > direct_hdd_16,
+        "WAL group commit must out-absorb direct HDD puts at 16 writers"
+    );
+
+    // Machine-readable results.
+    let out = std::env::var("OCPD_BENCH_OUT").unwrap_or_else(|_| "../BENCH_wal.json".into());
+    let mut json = String::from("{\n  \"bench\": \"bench_wal\",\n");
+    json.push_str(&format!(
+        "  \"workload\": {{\"records_per_writer\": {RECORDS_PER_WRITER}, \
+         \"value_bytes\": {VALUE_BYTES}, \"time_scale\": 1.0}},\n"
+    ));
+    json.push_str("  \"provenance\": \"measured by cargo bench --bench bench_wal\",\n");
+    json.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"config\": \"{}\", \"writers\": {}, \"records\": {}, \
+             \"seconds\": {:.4}, \"rec_per_sec\": {:.1}, \"mean_batch\": {:.2}, \
+             \"drain_seconds\": {:.4}}}{}\n",
+            r.config,
+            r.writers,
+            r.records,
+            r.seconds,
+            r.rec_per_sec(),
+            r.mean_batch,
+            r.drain_seconds,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

@@ -15,6 +15,7 @@ use crate::cutout::CutoutService;
 use crate::morton;
 use crate::spatialindex::SpatialIndex;
 use crate::storage::Engine;
+use crate::wal::Wal;
 use crate::{Error, Result};
 
 /// Result of a spatial annotation write.
@@ -44,6 +45,11 @@ pub struct AnnotationDb {
     pub index: SpatialIndex,
     pub exceptions: ExceptionStore,
     engine: Engine,
+    /// The write-absorber this project writes through, when it is hot:
+    /// `engine` is then a [`crate::wal::WalEngine`] and every mutation
+    /// below group-commits to the SSD log instead of touching the
+    /// database node directly.
+    wal: Option<Arc<Wal>>,
     next_id: AtomicU32,
     /// Striped per-cuboid write locks: concurrent spatial writes that
     /// share a cuboid serialize their read-modify-write on it (the
@@ -54,10 +60,23 @@ pub struct AnnotationDb {
 
 impl AnnotationDb {
     pub fn new(store: Arc<CuboidStore>, engine: Engine) -> Result<Self> {
+        Self::new_with_wal(store, engine, None)
+    }
+
+    /// Build a database whose `engine` routes through `wal` (the cluster
+    /// passes the matching [`crate::wal::WalEngine`]); the handle is kept
+    /// so callers can flush or inspect the log through the project.
+    pub fn new_with_wal(
+        store: Arc<CuboidStore>,
+        engine: Engine,
+        wal: Option<Arc<Wal>>,
+    ) -> Result<Self> {
         let project = Arc::clone(&store.project);
         let index = SpatialIndex::new(Arc::clone(&project), Arc::clone(&engine));
         let exceptions = ExceptionStore::new(Arc::clone(&project), Arc::clone(&engine));
-        // Resume id allocation above any persisted object.
+        // Resume id allocation above any persisted object. With a WAL
+        // this merges unflushed ids from the overlay, so recovery never
+        // re-issues an id that was assigned before a crash.
         let max_id = engine
             .keys(&project.ramon_table())?
             .into_iter()
@@ -69,9 +88,24 @@ impl AnnotationDb {
             index,
             exceptions,
             engine,
+            wal,
             next_id: AtomicU32::new(max_id + 1),
             write_stripes: (0..64).map(|_| std::sync::Mutex::new(())).collect(),
         })
+    }
+
+    /// The project's write-ahead log, if it is hot.
+    pub fn wal(&self) -> Option<&Arc<Wal>> {
+        self.wal.as_ref()
+    }
+
+    /// Drain this project's log into its database node. Returns records
+    /// applied (0 when the project has no log).
+    pub fn flush_wal(&self) -> Result<u64> {
+        match &self.wal {
+            Some(w) => w.flush_now(),
+            None => Ok(0),
+        }
     }
 
     fn stripe(&self, code: u64) -> &std::sync::Mutex<()> {
@@ -657,5 +691,67 @@ mod tests {
         let db = db(false);
         assert!(db.dense_read(0, 777, None).unwrap().is_none());
         assert!(db.voxel_list(0, 777).unwrap().is_empty());
+    }
+
+    #[test]
+    fn hot_db_reads_through_wal_overlay() {
+        // AnnotationDb over a WalEngine: writes absorb into the log,
+        // reads merge the overlay, and a flush moves everything to the
+        // database node with identical answers before and after.
+        use crate::wal::{Wal, WalConfig, WalEngine};
+        let ds = Arc::new(DatasetBuilder::new("t", [256, 256, 32]).levels(1).build());
+        let pr = Arc::new(Project::annotation("hot", "t"));
+        let log: Engine = Arc::new(MemStore::new());
+        let dest: Engine = Arc::new(MemStore::new());
+        let cfg = WalConfig { background_flush: false, ..WalConfig::default() };
+        let wal = Wal::open("hot", Arc::clone(&log), Arc::clone(&dest), cfg).unwrap();
+        let engine: Engine = Arc::new(WalEngine::new(Arc::clone(&wal)));
+        let store = Arc::new(CuboidStore::new(ds, pr, Arc::clone(&engine)));
+        let db = AnnotationDb::new_with_wal(store, engine, Some(Arc::clone(&wal))).unwrap();
+
+        let bx = Box3::new([10, 20, 3], [40, 50, 9]);
+        blob(&db, 42, bx);
+        let id = db.put_object(RamonObject::synapse(42, 0.9, SynapseType::Unknown)).unwrap();
+        assert_eq!(id, 42);
+        // Unflushed: the database node is untouched, reads still correct.
+        assert!(wal.depth() > 0);
+        assert!(dest.tables().unwrap().is_empty(), "dest written before flush");
+        assert_eq!(db.voxel_list(0, 42).unwrap().len() as u64, bx.volume());
+        // Flush, then identical answers served from the database node.
+        let moved = db.flush_wal().unwrap();
+        assert!(moved >= 2, "expected cuboids + index + metadata, got {moved}");
+        assert_eq!(wal.depth(), 0);
+        assert_eq!(db.voxel_list(0, 42).unwrap().len() as u64, bx.volume());
+        assert_eq!(db.get_object(42).unwrap().confidence, 0.9);
+        assert!(!dest.tables().unwrap().is_empty());
+    }
+
+    #[test]
+    fn wal_id_allocation_survives_reopen_without_flush() {
+        // The id allocator scans engine keys at open; with a WAL those
+        // keys come from the overlay, so a crash between commit and
+        // flush never re-issues an id.
+        use crate::wal::{Wal, WalConfig, WalEngine};
+        let ds = Arc::new(DatasetBuilder::new("t", [64, 64, 8]).levels(1).build());
+        let pr = Arc::new(Project::annotation("hot", "t"));
+        let log: Engine = Arc::new(MemStore::new());
+        let dest: Engine = Arc::new(MemStore::new());
+        let cfg = WalConfig { background_flush: false, ..WalConfig::default() };
+        {
+            let wal = Wal::open("hot", Arc::clone(&log), Arc::clone(&dest), cfg).unwrap();
+            let engine: Engine = Arc::new(WalEngine::new(Arc::clone(&wal)));
+            let store =
+                Arc::new(CuboidStore::new(Arc::clone(&ds), Arc::clone(&pr), Arc::clone(&engine)));
+            let db = AnnotationDb::new_with_wal(store, engine, Some(wal)).unwrap();
+            db.put_object(RamonObject::new(7, RamonType::Seed)).unwrap();
+            // Dropped without flushing — simulated crash.
+        }
+        let wal = Wal::open("hot", Arc::clone(&log), Arc::clone(&dest), cfg).unwrap();
+        let engine: Engine = Arc::new(WalEngine::new(Arc::clone(&wal)));
+        let store = Arc::new(CuboidStore::new(ds, pr, Arc::clone(&engine)));
+        let db = AnnotationDb::new_with_wal(store, engine, Some(wal)).unwrap();
+        assert_eq!(db.get_object(7).unwrap().id, 7);
+        let next = db.put_object(RamonObject::new(0, RamonType::Seed)).unwrap();
+        assert!(next > 7, "allocator must resume above replayed ids, got {next}");
     }
 }

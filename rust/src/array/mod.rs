@@ -4,8 +4,8 @@
 //! This is the system's memory hot path. The paper's evaluation (§5) finds
 //! that "array slicing and assembly for cutout requests keeps all
 //! processors fully utilized reorganizing data in memory" — the copy
-//! kernels here are therefore written as contiguous x-run `memcpy`s, and
-//! the perf pass (EXPERIMENTS.md §Perf) iterates on them.
+//! kernels here are therefore written as contiguous x-run `memcpy`s;
+//! `benches/bench_cutout.rs` regenerates the figure they reproduce.
 
 mod volume;
 

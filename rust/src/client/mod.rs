@@ -166,3 +166,28 @@ pub fn cluster_info(base_url: &str) -> Result<String> {
     }
     Ok(String::from_utf8_lossy(&b).to_string())
 }
+
+/// Status of every hot project's write-ahead log.
+pub fn wal_status(base_url: &str) -> Result<String> {
+    let (s, b) =
+        request("GET", &format!("{}/wal/status/", base_url.trim_end_matches('/')), &[])?;
+    if s != 200 {
+        return Err(Error::Other(format!("http {s}")));
+    }
+    Ok(String::from_utf8_lossy(&b).to_string())
+}
+
+/// Drain write-ahead logs into their database nodes: all of them, or one
+/// project's. Returns the server's `flushed=N` report.
+pub fn wal_flush(base_url: &str, token: Option<&str>) -> Result<String> {
+    let base = base_url.trim_end_matches('/');
+    let url = match token {
+        Some(t) => format!("{base}/wal/flush/{t}/"),
+        None => format!("{base}/wal/flush/"),
+    };
+    let (s, b) = request("PUT", &url, &[])?;
+    if s != 200 {
+        return Err(Error::Other(format!("http {s}: {}", String::from_utf8_lossy(&b))));
+    }
+    Ok(String::from_utf8_lossy(&b).to_string())
+}

@@ -13,6 +13,15 @@
 //! distinct nodes — cutout reads on database nodes, annotation writes on
 //! SSD nodes. Image cuboids shard across database nodes by partitioning
 //! the Morton curve; sharding is application-level via [`ShardedEngine`].
+//!
+//! Hot annotation projects write through the SSD **write-absorber**
+//! ([`crate::wal`]): every mutation is group-committed to a segmented
+//! log on an SSD node, reads merge the log's overlay over the database
+//! node, and a background flusher drains sealed segments into the
+//! database node in Morton order. This replaces the seed's one-shot
+//! "dump and restore" migration with a continuous pipeline; an explicit
+//! [`Cluster::migrate_annotation_project`] is now just "flush the log
+//! and drop it".
 
 mod sharded;
 
@@ -27,6 +36,7 @@ use crate::core::{Dataset, Project};
 use crate::cutout::CutoutService;
 use crate::shard::{NodeId, ShardMap};
 use crate::storage::{migrate, DeviceProfile, Engine, MemStore, SimulatedStore};
+use crate::wal::{Wal, WalConfig, WalEngine, WalStatus};
 use crate::{Error, Result};
 
 /// What a node is for (§4.1 "Architecture").
@@ -59,8 +69,21 @@ pub struct Cluster {
     nodes: Vec<Node>,
     datasets: RwLock<HashMap<String, Arc<Dataset>>>,
     projects: RwLock<HashMap<String, ProjectHandle>>,
-    /// Round-robin cursor for SSD placement.
-    next_ssd: std::sync::atomic::AtomicUsize,
+    /// Write-ahead logs of hot projects, by token.
+    wals: RwLock<HashMap<String, Arc<Wal>>>,
+}
+
+/// Stable FNV-1a hash for SSD placement: a hot project's log node is
+/// *derived* from its token, not remembered, so reopening a persistent
+/// cluster finds each project's segments on the same SSD node it wrote
+/// them to.
+fn placement_hash(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in s.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
 }
 
 impl Cluster {
@@ -88,7 +111,7 @@ impl Cluster {
             nodes,
             datasets: RwLock::new(HashMap::new()),
             projects: RwLock::new(HashMap::new()),
-            next_ssd: std::sync::atomic::AtomicUsize::new(0),
+            wals: RwLock::new(HashMap::new()),
         })
     }
 
@@ -126,7 +149,7 @@ impl Cluster {
             nodes,
             datasets: RwLock::new(HashMap::new()),
             projects: RwLock::new(HashMap::new()),
-            next_ssd: std::sync::atomic::AtomicUsize::new(0),
+            wals: RwLock::new(HashMap::new()),
         }))
     }
 
@@ -163,7 +186,7 @@ impl Cluster {
             nodes,
             datasets: RwLock::new(HashMap::new()),
             projects: RwLock::new(HashMap::new()),
-            next_ssd: std::sync::atomic::AtomicUsize::new(0),
+            wals: RwLock::new(HashMap::new()),
         })
     }
 
@@ -178,6 +201,27 @@ impl Cluster {
     // ------------------------------------------------------------------
     // Datasets
     // ------------------------------------------------------------------
+
+    /// A token must be unclaimed and must not shadow a reserved
+    /// top-level route name (`/info/`, `/wal/...`). Re-creating an
+    /// existing hot token would be worse than confusing: two [`Wal`]s
+    /// over one chunk table would overwrite each other's durable
+    /// frames. Callers pass the held write guard so check and insert
+    /// are one atomic step.
+    fn check_token_free(
+        projects: &HashMap<String, ProjectHandle>,
+        token: &str,
+    ) -> Result<()> {
+        if token == "info" || token == "wal" {
+            return Err(Error::BadRequest(format!(
+                "'{token}' is a reserved name and cannot be a project token"
+            )));
+        }
+        if projects.contains_key(token) {
+            return Err(Error::BadRequest(format!("project '{token}' already exists")));
+        }
+        Ok(())
+    }
 
     pub fn register_dataset(&self, ds: Dataset) -> Arc<Dataset> {
         let ds = Arc::new(ds);
@@ -203,6 +247,10 @@ impl Cluster {
     /// sharded for capacity; a single DB node degenerates to no
     /// sharding).
     pub fn create_image_project(&self, project: Project) -> Result<Arc<CutoutService>> {
+        // Hold the registry lock across check-and-insert so concurrent
+        // creates of one token cannot both pass the check.
+        let mut projects = self.projects.write().unwrap();
+        Self::check_token_free(&projects, &project.token)?;
         let ds = self.dataset(&project.dataset)?;
         let db_nodes = self.nodes_with_role(NodeRole::Database);
         // Partition the Morton space of the *finest* level's grid.
@@ -214,38 +262,43 @@ impl Cluster {
         let engine: Engine = Arc::new(ShardedEngine::new(map, engines));
         let store = Arc::new(CuboidStore::new(ds, Arc::new(project.clone()), engine));
         let svc = Arc::new(CutoutService::new(store));
-        self.projects
-            .write()
-            .unwrap()
-            .insert(project.token.clone(), ProjectHandle::Image(Arc::clone(&svc)));
+        projects.insert(project.token.clone(), ProjectHandle::Image(Arc::clone(&svc)));
         Ok(svc)
     }
 
     /// Create an annotation project. `hot` projects (actively written by
-    /// vision pipelines) are placed on an SSD node; cold ones directly on
-    /// a database node (§4.1 placement policy).
+    /// vision pipelines) write through the SSD write-absorber: mutations
+    /// group-commit to a [`Wal`] segmented over an SSD node and drain in
+    /// the background into a database node, while reads merge the log's
+    /// overlay over the database node (§4.1 placement policy, done
+    /// continuously). Cold projects live directly on a database node.
     pub fn create_annotation_project(
         &self,
         project: Project,
         hot: bool,
     ) -> Result<Arc<AnnotationDb>> {
+        // Hold the registry lock across check-and-insert: two racing
+        // creates of one hot token would otherwise open two `Wal`s over
+        // the same chunk table and corrupt each other's frames.
+        let mut projects = self.projects.write().unwrap();
+        Self::check_token_free(&projects, &project.token)?;
         let ds = self.dataset(&project.dataset)?;
         let ssd = self.nodes_with_role(NodeRole::Ssd);
-        let node = if hot && !ssd.is_empty() {
-            let i = self.next_ssd.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-            ssd[i % ssd.len()]
+        let dbs = self.nodes_with_role(NodeRole::Database);
+        let dest = Arc::clone(&self.nodes[dbs[0]].engine);
+        let (engine, wal): (Engine, Option<Arc<Wal>>) = if hot && !ssd.is_empty() {
+            let i = placement_hash(&project.token) as usize % ssd.len();
+            let log = Arc::clone(&self.nodes[ssd[i]].engine);
+            let wal = Wal::open(&project.token, log, dest, WalConfig::default())?;
+            self.wals.write().unwrap().insert(project.token.clone(), Arc::clone(&wal));
+            (Arc::new(WalEngine::new(Arc::clone(&wal))) as Engine, Some(wal))
         } else {
-            let dbs = self.nodes_with_role(NodeRole::Database);
-            dbs[0]
+            (dest, None)
         };
-        let engine = Arc::clone(&self.nodes[node].engine);
         let store =
             Arc::new(CuboidStore::new(ds, Arc::new(project.clone()), Arc::clone(&engine)));
-        let db = Arc::new(AnnotationDb::new(store, engine)?);
-        self.projects
-            .write()
-            .unwrap()
-            .insert(project.token.clone(), ProjectHandle::Annotation(Arc::clone(&db)));
+        let db = Arc::new(AnnotationDb::new_with_wal(store, engine, wal)?);
+        projects.insert(project.token.clone(), ProjectHandle::Annotation(Arc::clone(&db)));
         Ok(db)
     }
 
@@ -273,24 +326,44 @@ impl Cluster {
         t
     }
 
-    /// Migrate an annotation project from its current node to the first
-    /// database node — the paper's administrative dump/restore performed
-    /// "when we build the annotation resolution hierarchy" (§4.1).
-    /// Returns the rebound handle and the number of values moved.
+    /// Demote an annotation project to cold storage. For a WAL'd (hot)
+    /// project this is "flush the log, drop it, rebind on the database
+    /// node" — the continuous-pipeline version of the paper's
+    /// administrative dump/restore performed "when we build the
+    /// annotation resolution hierarchy" (§4.1). For a project without a
+    /// log it falls back to the legacy table copy. Returns the rebound
+    /// handle and the number of records/values moved.
     pub fn migrate_annotation_project(&self, token: &str) -> Result<(Arc<AnnotationDb>, u64)> {
         let db = self.annotation(token)?;
         let project = Arc::clone(&db.project);
         let ds = self.dataset(&project.dataset)?;
-        let src_engine = Arc::clone(db.cutout.store().engine());
         let dst_node = self.nodes_with_role(NodeRole::Database)[0];
         let dst_engine = Arc::clone(&self.nodes[dst_node].engine);
-        // Dump and restore every table belonging to this project.
-        let mut moved = 0;
-        for table in src_engine.tables()? {
-            if table.starts_with(&format!("{}/", project.token)) {
-                moved += migrate(src_engine.as_ref(), dst_engine.as_ref(), Some(&table))?;
+        let wal = self.wals.read().unwrap().get(token).cloned();
+        let moved = if let Some(wal) = wal {
+            // Drain everything the log absorbed into the database node,
+            // then retire it. The registry entry is removed only after
+            // the flush succeeds — a failed flush must leave the log
+            // reachable (and still draining) rather than orphaned.
+            let mut moved = wal.flush_now()?;
+            // Retire first (stale handles now get errors instead of
+            // appending into a log nothing will drain), then sweep any
+            // straggler appends that raced the retirement.
+            wal.shutdown();
+            moved += wal.flush_now()?;
+            self.wals.write().unwrap().remove(token);
+            moved
+        } else {
+            // Legacy dump-and-restore of every table of the project.
+            let src_engine = Arc::clone(db.cutout.store().engine());
+            let mut moved = 0;
+            for table in src_engine.tables()? {
+                if table.starts_with(&format!("{}/", project.token)) {
+                    moved += migrate(src_engine.as_ref(), dst_engine.as_ref(), Some(&table))?;
+                }
             }
-        }
+            moved
+        };
         let store = Arc::new(CuboidStore::new(ds, project, Arc::clone(&dst_engine)));
         let new_db = Arc::new(AnnotationDb::new(store, dst_engine)?);
         self.projects
@@ -298,6 +371,48 @@ impl Cluster {
             .unwrap()
             .insert(token.to_string(), ProjectHandle::Annotation(Arc::clone(&new_db)));
         Ok((new_db, moved))
+    }
+
+    // ------------------------------------------------------------------
+    // Write-ahead logs
+    // ------------------------------------------------------------------
+
+    /// The write-ahead log of a hot project, if it has one.
+    pub fn wal(&self, token: &str) -> Option<Arc<Wal>> {
+        self.wals.read().unwrap().get(token).cloned()
+    }
+
+    /// Status of every project log, by token (the `/wal/status` route).
+    pub fn wal_status(&self) -> Result<Vec<WalStatus>> {
+        let wals: Vec<Arc<Wal>> = {
+            let guard = self.wals.read().unwrap();
+            let mut v: Vec<(String, Arc<Wal>)> =
+                guard.iter().map(|(k, w)| (k.clone(), Arc::clone(w))).collect();
+            v.sort_by(|a, b| a.0.cmp(&b.0));
+            v.into_iter().map(|(_, w)| w).collect()
+        };
+        wals.iter().map(|w| w.status()).collect()
+    }
+
+    /// Force one project's log down to its database node. Returns records
+    /// applied.
+    pub fn flush_wal(&self, token: &str) -> Result<u64> {
+        match self.wal(token) {
+            Some(w) => w.flush_now(),
+            None => Err(Error::NotFound(format!("project '{token}' has no write log"))),
+        }
+    }
+
+    /// Flush every project log (the `/wal/flush` route). Returns total
+    /// records applied.
+    pub fn flush_all_wals(&self) -> Result<u64> {
+        let wals: Vec<Arc<Wal>> =
+            self.wals.read().unwrap().values().map(Arc::clone).collect();
+        let mut total = 0;
+        for w in wals {
+            total += w.flush_now()?;
+        }
+        Ok(total)
     }
 
     /// Per-node I/O snapshots (the `ocpd info` CLI and benches).
@@ -422,12 +537,57 @@ mod tests {
     }
 
     #[test]
+    fn hot_project_write_absorber_flushes_to_db() {
+        let c = cluster();
+        let db =
+            c.create_annotation_project(Project::annotation("ann", "ds"), true).unwrap();
+        assert!(c.wal("ann").is_some(), "hot project must have a log");
+        let bx = Box3::new([0, 0, 0], [32, 32, 8]);
+        let mut v = DenseVolume::<u32>::zeros(bx.extent());
+        v.fill_box(Box3::new([0, 0, 0], bx.extent()), 3);
+        db.write_volume(0, bx, &v, WriteDiscipline::Overwrite).unwrap();
+
+        // Absorbed: log depth > 0, reads correct, database nodes idle.
+        let st = c.wal_status().unwrap();
+        assert_eq!(st.len(), 1);
+        assert!(st[0].depth_records > 0);
+        assert!(st[0].commit_batches > 0);
+        assert_eq!(db.voxel_list(0, 3).unwrap().len() as u64, bx.volume());
+        let before = c.node_stats();
+        assert_eq!(before[0].1.write_bytes + before[1].1.write_bytes, 0, "db written early");
+
+        // Flush through the cluster; data lands on db0, answers unchanged.
+        let moved = c.flush_wal("ann").unwrap();
+        assert!(moved >= 2, "expected cuboids + index records, got {moved}");
+        let after = c.node_stats();
+        assert!(after[0].1.write_bytes > 0, "flush must write the database node");
+        assert_eq!(db.voxel_list(0, 3).unwrap().len() as u64, bx.volume());
+        assert_eq!(c.wal_status().unwrap()[0].depth_records, 0);
+        assert_eq!(c.flush_all_wals().unwrap(), 0, "nothing left to flush");
+        assert!(c.flush_wal("nope").is_err());
+        assert!(c.wal("img").is_none());
+    }
+
+    #[test]
     fn unknown_tokens_error() {
         let c = cluster();
         assert!(c.image("nope").is_err());
         assert!(c.annotation("nope").is_err());
         c.create_image_project(Project::image("img", "ds")).unwrap();
         assert!(c.annotation("img").is_err(), "type mismatch must error");
+    }
+
+    #[test]
+    fn duplicate_and_reserved_tokens_rejected() {
+        let c = cluster();
+        c.create_annotation_project(Project::annotation("ann", "ds"), true).unwrap();
+        // A second registration of the same token would open a second
+        // Wal over the same chunk table — refuse it.
+        assert!(c.create_annotation_project(Project::annotation("ann", "ds"), true).is_err());
+        assert!(c.create_image_project(Project::image("ann", "ds")).is_err());
+        // Reserved route names can never be project tokens.
+        assert!(c.create_image_project(Project::image("info", "ds")).is_err());
+        assert!(c.create_annotation_project(Project::annotation("wal", "ds"), false).is_err());
     }
 
     #[test]

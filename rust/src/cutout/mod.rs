@@ -416,6 +416,43 @@ mod tests {
     }
 
     #[test]
+    fn read_your_writes_through_wal_overlay() {
+        // A hot project's CutoutService runs over a WalEngine: writes sit
+        // in the SSD log, and cutouts must merge the overlay over the
+        // database node both before and after the flush.
+        use crate::storage::Engine;
+        use crate::wal::{Wal, WalConfig, WalEngine};
+        let ds = Arc::new(DatasetBuilder::new("t", [160, 160, 48]).levels(1).build());
+        let pr = Arc::new(Project::annotation("ann", "t"));
+        let log: Engine = Arc::new(MemStore::new());
+        let dest: Engine = Arc::new(MemStore::new());
+        let cfg = WalConfig { background_flush: false, ..WalConfig::default() };
+        let wal = Wal::open("ann", Arc::clone(&log), Arc::clone(&dest), cfg).unwrap();
+        let engine: Engine = Arc::new(WalEngine::new(Arc::clone(&wal)));
+        let svc = CutoutService::new(Arc::new(CuboidStore::new(ds, pr, engine)));
+
+        let whole = Box3::new([0, 0, 0], [160, 160, 48]);
+        let vol = hash_vol(whole);
+        svc.write(0, 0, 0, whole, &vol).unwrap();
+        assert!(wal.depth() > 0, "writes must land in the log");
+        let bx = Box3::new([13, 27, 5], [90, 140, 41]);
+        assert_eq!(svc.read::<u32>(0, 0, 0, bx).unwrap(), vol.extract_box(bx));
+
+        // Same answer once the log has drained to the database node.
+        wal.flush_now().unwrap();
+        assert_eq!(svc.read::<u32>(0, 0, 0, bx).unwrap(), vol.extract_box(bx));
+
+        // A post-flush RMW write reads base data and overlays the patch.
+        let inner = Box3::new([30, 30, 4], [90, 90, 12]);
+        let mut patch = DenseVolume::<u32>::zeros(inner.extent());
+        patch.fill_box(Box3::new([0, 0, 0], inner.extent()), 777);
+        svc.write(0, 0, 0, inner, &patch).unwrap();
+        let got = svc.read::<u32>(0, 0, 0, whole).unwrap();
+        assert_eq!(got.get([30, 30, 4]), 777);
+        assert_eq!(got.get([29, 30, 4]), vol.get([29, 30, 4]));
+    }
+
+    #[test]
     fn rmw_write_noise_immune() {
         // Unaligned write must not clobber neighbours within shared cuboids.
         let svc = service([128, 128, 16], 1);

@@ -12,8 +12,11 @@
 //!   ([`cutout`]), RAMON annotation databases ([`annotation`]) with a sparse
 //!   per-object spatial index ([`spatialindex`]), multi-resolution
 //!   hierarchies ([`resolution`]), Morton-partition sharding across
-//!   heterogeneous node roles ([`shard`], [`cluster`]), and a RESTful HTTP
-//!   front end ([`web`]) speaking the URL grammar of the paper's Table 1.
+//!   heterogeneous node roles ([`shard`], [`cluster`]), an SSD
+//!   write-absorber — a segmented write-ahead log with group commit,
+//!   read-through overlay and background flush to database nodes
+//!   ([`wal`]) — and a RESTful HTTP front end ([`web`]) speaking the URL
+//!   grammar of the paper's Table 1.
 //! * **Layer 2 (JAX, build time)** — the vision compute graphs (synapse
 //!   detector, gradient-domain color correction, hierarchy down-sampler),
 //!   lowered once to HLO text under `artifacts/`.
@@ -24,8 +27,9 @@
 //! client; [`vision`] drives the paper's parallel synapse-finding workflow
 //! end to end. Python never runs on the request path.
 //!
-//! See `DESIGN.md` for the system inventory and the per-experiment index,
-//! and `EXPERIMENTS.md` for paper-vs-measured results.
+//! See `DESIGN.md` (repository root) for the layer inventory, the offline
+//! vendor-set substitutions, and the WAL subsystem's design and REST
+//! surface.
 
 pub mod annotation;
 pub mod array;
@@ -45,6 +49,7 @@ pub mod storage;
 pub mod tiles;
 pub mod util;
 pub mod vision;
+pub mod wal;
 pub mod web;
 
 pub use crate::core::{Dataset, DatasetBuilder, Dtype, Project, ProjectKind};

@@ -14,6 +14,11 @@
 //!
 //! ocpd info    --url http://host:port
 //!     Print a remote cluster's project and node info.
+//!
+//! ocpd wal     [--url http://host:port] [--flush [TOKEN]]
+//!     Print every hot project's write-log status (depth, segments,
+//!     group-commit batch size, flush lag); with --flush, drain the logs
+//!     into their database nodes first.
 //! ```
 
 use std::collections::HashMap;
@@ -98,6 +103,8 @@ fn cmd_serve(flags: HashMap<String, String>) -> ocpd::Result<()> {
     println!("  GET {}/synth/ocpk/0/0,128/0,128/0,16/", server.url());
     println!("  GET {}/synth/tile/0/4/0_0.gray", server.url());
     println!("  GET {}/synapses_v0/objects/type/synapse/confidence/geq/0.9/", server.url());
+    println!("  GET {}/wal/status/", server.url());
+    println!("  PUT {}/wal/flush/", server.url());
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
@@ -143,12 +150,22 @@ fn cmd_info(flags: HashMap<String, String>) -> ocpd::Result<()> {
     Ok(())
 }
 
+fn cmd_wal(flags: HashMap<String, String>) -> ocpd::Result<()> {
+    let url: String = flag(&flags, "url", "http://127.0.0.1:8642".to_string());
+    if let Some(v) = flags.get("flush") {
+        let token = if v == "true" { None } else { Some(v.as_str()) };
+        println!("{}", ocpd::client::wal_flush(&url, token)?);
+    }
+    print!("{}", ocpd::client::wal_status(&url)?);
+    Ok(())
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let (cmd, rest) = match args.split_first() {
         Some((c, r)) => (c.as_str(), r.to_vec()),
         None => {
-            eprintln!("usage: ocpd <serve|detect|info> [flags]");
+            eprintln!("usage: ocpd <serve|detect|info|wal> [flags]");
             std::process::exit(2);
         }
     };
@@ -157,8 +174,9 @@ fn main() {
         "serve" => cmd_serve(flags),
         "detect" => cmd_detect(flags),
         "info" => cmd_info(flags),
+        "wal" => cmd_wal(flags),
         other => {
-            eprintln!("unknown command '{other}' (want serve|detect|info)");
+            eprintln!("unknown command '{other}' (want serve|detect|info|wal)");
             std::process::exit(2);
         }
     };

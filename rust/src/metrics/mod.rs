@@ -23,6 +23,32 @@ impl Counter {
     }
 }
 
+/// A settable level (WAL log depth, flush lag, queue lengths) — unlike
+/// [`Counter`] it can go down.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Saturating decrement.
+    pub fn sub(&self, n: u64) {
+        let _ = self.0.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+            Some(v.saturating_sub(n))
+        });
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
 /// Log-bucketed latency histogram (1us .. ~1000s, 2x buckets).
 #[derive(Debug)]
 pub struct Histogram {
@@ -130,6 +156,17 @@ mod tests {
         c.inc();
         c.add(9);
         assert_eq!(c.get(), 10);
+    }
+
+    #[test]
+    fn gauge_moves_both_ways() {
+        let g = Gauge::default();
+        g.set(10);
+        g.add(5);
+        g.sub(3);
+        assert_eq!(g.get(), 12);
+        g.sub(100); // saturates at zero
+        assert_eq!(g.get(), 0);
     }
 
     #[test]

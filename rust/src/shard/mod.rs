@@ -232,6 +232,57 @@ mod tests {
     }
 
     #[test]
+    fn rebalance_single_node_identity() {
+        // Single node → single node: nothing moves, split list stays empty.
+        let m = ShardMap::even(100, vec![0]).unwrap();
+        let (new, moves) = m.rebalance(100, vec![0]).unwrap();
+        assert_eq!(new.num_shards(), 1);
+        assert!(moves.is_empty());
+        // Same-layout rebalance on a multi-node map is also a no-op.
+        let two = ShardMap::even(100, vec![0, 1]).unwrap();
+        let (_, moves) = two.rebalance(100, vec![0, 1]).unwrap();
+        assert!(moves.is_empty());
+    }
+
+    #[test]
+    fn rebalance_from_empty_split_list_grows() {
+        // The unsharded (empty-splits) map growing onto two nodes moves
+        // exactly the upper half.
+        let m = ShardMap::single(0);
+        let (new, moves) = m.rebalance(100, vec![0, 1]).unwrap();
+        assert_eq!(new.num_shards(), 2);
+        assert_eq!(moves, vec![(50, 100, 0, 1)]);
+        // And shrinking back returns it.
+        let (one, back) = new.rebalance(100, vec![0]).unwrap();
+        assert_eq!(one.num_shards(), 1);
+        assert_eq!(back, vec![(50, 100, 1, 0)]);
+    }
+
+    #[test]
+    fn rebalance_all_keys_on_one_shard() {
+        // A degenerate map whose split leaves every live key on shard 0
+        // (the second shard owns only keys >= total_keys).
+        let m = ShardMap::new(vec![100], vec![0, 1]).unwrap();
+        for k in 0..100 {
+            assert_eq!(m.node_for(k), 0);
+        }
+        let (new, moves) = m.rebalance(100, vec![0, 1]).unwrap();
+        assert_eq!(moves, vec![(50, 100, 0, 1)]);
+        assert_eq!(new.node_for(49), 0);
+        assert_eq!(new.node_for(50), 1);
+        // Move ranges never extend past the live key space.
+        for (lo, hi, _, _) in &moves {
+            assert!(lo < hi && *hi <= 100);
+        }
+    }
+
+    #[test]
+    fn rebalance_to_empty_node_set_rejected() {
+        let m = ShardMap::even(100, vec![0, 1]).unwrap();
+        assert!(m.rebalance(100, vec![]).is_err());
+    }
+
+    #[test]
     fn rebalance_moves_cover_changes() {
         let m = ShardMap::even(100, vec![0, 1]).unwrap();
         let (new, moves) = m.rebalance(100, vec![0, 1, 2]).unwrap();

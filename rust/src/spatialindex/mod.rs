@@ -274,10 +274,10 @@ mod tests {
     #[test]
     fn concurrent_appends_serialize_correctly() {
         let idx = Arc::new(index());
-        crossbeam_utils::thread::scope(|s| {
+        std::thread::scope(|s| {
             for w in 0..8u64 {
                 let idx = Arc::clone(&idx);
-                s.spawn(move |_| {
+                s.spawn(move || {
                     for i in 0..50u64 {
                         let mut u = HashMap::new();
                         u.insert(1u32, vec![w * 1000 + i]);
@@ -285,8 +285,7 @@ mod tests {
                     }
                 });
             }
-        })
-        .unwrap();
+        });
         assert_eq!(idx.cuboids_of(0, 1).unwrap().len(), 400);
     }
 

@@ -160,10 +160,10 @@ mod tests {
     #[test]
     fn concurrent_readers_and_writers() {
         let m = std::sync::Arc::new(MemStore::new());
-        crossbeam_utils::thread::scope(|s| {
+        std::thread::scope(|s| {
             for w in 0..4u64 {
                 let m = std::sync::Arc::clone(&m);
-                s.spawn(move |_| {
+                s.spawn(move || {
                     for i in 0..500u64 {
                         m.put("t", w * 1000 + i, &i.to_le_bytes()).unwrap();
                     }
@@ -171,14 +171,13 @@ mod tests {
             }
             for _ in 0..4 {
                 let m = std::sync::Arc::clone(&m);
-                s.spawn(move |_| {
+                s.spawn(move || {
                     for i in 0..500u64 {
                         let _ = m.get("t", i).unwrap();
                     }
                 });
             }
-        })
-        .unwrap();
+        });
         assert_eq!(m.stored_values(), 2000);
     }
 }

@@ -30,9 +30,9 @@ use std::sync::Arc;
 use crate::Result;
 
 /// Shared value blob: engines return `Arc`-shared bytes so the cutout hot
-/// path never copies under (or after) the engine lock — a §Perf change
-/// (EXPERIMENTS.md): the memory configuration previously copied every
-/// cuboid once in the engine and once in assembly.
+/// path never copies under (or after) the engine lock — the memory
+/// configuration previously copied every cuboid once in the engine and
+/// once in assembly.
 pub type Blob = std::sync::Arc<Vec<u8>>;
 
 /// Cumulative I/O statistics for an engine (feeds the benches and the

@@ -7,6 +7,34 @@
 
 use crate::{Error, Result};
 
+/// IEEE CRC-32 lookup table (reflected polynomial 0xEDB88320), built at
+/// compile time.
+const CRC32_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xedb8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// IEEE CRC-32 of `data` — the checksum guarding WAL record frames
+/// ([`crate::wal`]) against torn writes and bit rot.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xffff_ffffu32;
+    for &b in data {
+        c = CRC32_TABLE[((c ^ b as u32) & 0xff) as usize] ^ (c >> 8);
+    }
+    c ^ 0xffff_ffff
+}
+
 /// Append-only encoder.
 #[derive(Default)]
 pub struct Enc {
@@ -277,6 +305,15 @@ mod tests {
         assert!(d.u64().is_err());
         let mut d2 = Dec::new(&[0x80u8; 12]);
         assert!(d2.varint().is_err(), "unterminated varint must error");
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // The standard IEEE check value.
+        assert_eq!(crc32(b"123456789"), 0xcbf4_3926);
+        assert_eq!(crc32(b""), 0);
+        // Sensitive to single-bit corruption.
+        assert_ne!(crc32(b"123456789"), crc32(b"123456788"));
     }
 
     #[test]

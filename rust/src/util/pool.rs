@@ -111,11 +111,11 @@ where
     let next = AtomicUsize::new(0);
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
     let slots = out.as_mut_ptr() as usize;
-    crossbeam_utils::thread::scope(|s| {
+    std::thread::scope(|s| {
         for _ in 0..par {
             let next = &next;
             let f = &f;
-            s.spawn(move |_| loop {
+            s.spawn(move || loop {
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= n {
                     break;
@@ -129,8 +129,7 @@ where
                 }
             });
         }
-    })
-    .expect("scoped_map thread panicked");
+    });
     out.into_iter().map(|v| v.expect("slot filled")).collect()
 }
 

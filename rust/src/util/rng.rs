@@ -1,8 +1,8 @@
 //! A small, fast, deterministic PRNG (xoshiro256**) used by the synthetic
 //! data generator, the workload generators, and the property tester.
 //!
-//! Deterministic seeding keeps every experiment in EXPERIMENTS.md exactly
-//! reproducible.
+//! Deterministic seeding keeps every bench table and property-test run
+//! exactly reproducible.
 
 /// xoshiro256** by Blackman & Vigna — public domain reference algorithm.
 #[derive(Clone, Debug)]

@@ -1,0 +1,264 @@
+//! [`WalEngine`]: a [`StorageEngine`] that routes every mutation through
+//! a [`Wal`] and serves reads by merging the WAL's unflushed overlay over
+//! the base (destination) engine.
+//!
+//! This is how the write-absorber plugs into the rest of the stack with
+//! zero changes to [`crate::chunkstore`], [`crate::cutout`] or
+//! [`crate::annotation`]: the cluster hands a hot project a `WalEngine`
+//! instead of a raw node engine, and every cuboid, index, exception and
+//! RAMON table write becomes a durable log append while reads stay
+//! consistent (read-your-writes through the overlay).
+
+use std::sync::Arc;
+
+use crate::storage::{Blob, Engine, IoStats, StorageEngine};
+use crate::wal::Wal;
+use crate::Result;
+
+/// Write-through-log view over `wal.dest()`.
+pub struct WalEngine {
+    wal: Arc<Wal>,
+    stats: IoStats,
+}
+
+impl WalEngine {
+    pub fn new(wal: Arc<Wal>) -> Self {
+        WalEngine { wal, stats: IoStats::default() }
+    }
+
+    pub fn wal(&self) -> &Arc<Wal> {
+        &self.wal
+    }
+
+    fn base(&self) -> &Engine {
+        self.wal.dest()
+    }
+}
+
+impl StorageEngine for WalEngine {
+    fn name(&self) -> &str {
+        "wal"
+    }
+
+    fn get(&self, table: &str, key: u64) -> Result<Option<Blob>> {
+        let v = match self.wal.overlay_get(table, key) {
+            Some(Some(b)) => Some(b),
+            Some(None) => None, // logged delete masks the base value
+            None => self.base().get(table, key)?,
+        };
+        match &v {
+            Some(b) => self.stats.record_read(b.len()),
+            None => self.stats.record_miss(),
+        }
+        Ok(v)
+    }
+
+    fn put(&self, table: &str, key: u64, value: &[u8]) -> Result<()> {
+        self.stats.record_write(value.len());
+        self.wal.append(vec![(table.to_string(), key, Some(value.to_vec()))])?;
+        Ok(())
+    }
+
+    fn delete(&self, table: &str, key: u64) -> Result<()> {
+        self.wal.append(vec![(table.to_string(), key, None)])?;
+        Ok(())
+    }
+
+    fn get_batch(&self, table: &str, keys: &[u64]) -> Result<Vec<Option<Blob>>> {
+        // Resolve what the overlay can; fetch the rest in one base batch.
+        let mut out: Vec<Option<Option<Blob>>> = Vec::with_capacity(keys.len());
+        let mut missing: Vec<u64> = Vec::new();
+        let mut missing_at: Vec<usize> = Vec::new();
+        for (i, &k) in keys.iter().enumerate() {
+            match self.wal.overlay_get(table, k) {
+                Some(hit) => out.push(Some(hit)),
+                None => {
+                    out.push(None);
+                    missing.push(k);
+                    missing_at.push(i);
+                }
+            }
+        }
+        if !missing.is_empty() {
+            let fetched = self.base().get_batch(table, &missing)?;
+            for (i, v) in missing_at.into_iter().zip(fetched) {
+                out[i] = Some(v);
+            }
+        }
+        let resolved: Vec<Option<Blob>> =
+            out.into_iter().map(|v| v.expect("all slots resolved")).collect();
+        for v in &resolved {
+            match v {
+                Some(b) => self.stats.record_read(b.len()),
+                None => self.stats.record_miss(),
+            }
+        }
+        Ok(resolved)
+    }
+
+    /// One group commit for the whole batch — this is where the
+    /// write-absorber earns its keep: a cuboid batch that would be N
+    /// random device writes becomes one log append.
+    fn put_batch(&self, table: &str, items: &[(u64, Vec<u8>)]) -> Result<()> {
+        let muts: Vec<(String, u64, Option<Vec<u8>>)> = items
+            .iter()
+            .map(|(k, v)| {
+                self.stats.record_write(v.len());
+                (table.to_string(), *k, Some(v.clone()))
+            })
+            .collect();
+        self.wal.append(muts)?;
+        Ok(())
+    }
+
+    fn get_run(&self, table: &str, start: u64, len: u64) -> Result<Vec<(u64, Blob)>> {
+        self.stats.record_run_read();
+        let end = start.saturating_add(len);
+        let base = self.base().get_run(table, start, len)?;
+        let over = self.wal.overlay_range(table, start, end);
+        if over.is_empty() {
+            for (_, b) in &base {
+                self.stats.record_read(b.len());
+            }
+            return Ok(base);
+        }
+        // Merge: overlay wins per key; logged deletes drop base entries.
+        let mut merged: std::collections::BTreeMap<u64, Blob> = base.into_iter().collect();
+        for (k, v) in over {
+            match v {
+                Some(b) => {
+                    merged.insert(k, b);
+                }
+                None => {
+                    merged.remove(&k);
+                }
+            }
+        }
+        let out: Vec<(u64, Blob)> = merged.into_iter().collect();
+        for (_, b) in &out {
+            self.stats.record_read(b.len());
+        }
+        Ok(out)
+    }
+
+    fn keys(&self, table: &str) -> Result<Vec<u64>> {
+        let mut keys = self.base().keys(table)?;
+        let (live, dead) = self.wal.overlay_keys(table);
+        if !live.is_empty() || !dead.is_empty() {
+            keys.extend(live);
+            keys.sort_unstable();
+            keys.dedup();
+            if !dead.is_empty() {
+                let dead: std::collections::HashSet<u64> = dead.into_iter().collect();
+                keys.retain(|k| !dead.contains(k));
+            }
+        }
+        Ok(keys)
+    }
+
+    fn tables(&self) -> Result<Vec<String>> {
+        let mut t = self.base().tables()?;
+        t.extend(self.wal.overlay_tables());
+        t.sort();
+        t.dedup();
+        Ok(t)
+    }
+
+    fn stats(&self) -> &IoStats {
+        &self.stats
+    }
+
+    /// Everything appended through this engine is already durable in the
+    /// log when the call returns; `sync` additionally syncs both devices.
+    fn sync(&self) -> Result<()> {
+        self.wal.log_engine().sync()?;
+        self.base().sync()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::MemStore;
+    use crate::wal::WalConfig;
+
+    fn wal_engine() -> (WalEngine, Engine, Engine) {
+        let log: Engine = Arc::new(MemStore::new());
+        let dest: Engine = Arc::new(MemStore::new());
+        let cfg = WalConfig { background_flush: false, ..WalConfig::default() };
+        let wal = Wal::open("t", Arc::clone(&log), Arc::clone(&dest), cfg).unwrap();
+        (WalEngine::new(wal), log, dest)
+    }
+
+    #[test]
+    fn conformance() {
+        let (e, _log, _dest) = wal_engine();
+        crate::storage::tests::conformance(&e);
+    }
+
+    #[test]
+    fn read_your_writes_before_flush() {
+        let (e, _log, dest) = wal_engine();
+        e.put("tbl", 3, b"three").unwrap();
+        assert_eq!(**e.get("tbl", 3).unwrap().unwrap(), *b"three");
+        // The destination has not seen the write.
+        assert_eq!(dest.get("tbl", 3).unwrap(), None);
+        // ... and still answers identically after the flush.
+        e.wal().flush_now().unwrap();
+        assert_eq!(**e.get("tbl", 3).unwrap().unwrap(), *b"three");
+        assert_eq!(**dest.get("tbl", 3).unwrap().unwrap(), *b"three");
+    }
+
+    #[test]
+    fn overlay_masks_base_after_delete() {
+        let (e, _log, dest) = wal_engine();
+        dest.put("tbl", 9, b"base").unwrap();
+        assert!(e.get("tbl", 9).unwrap().is_some());
+        e.delete("tbl", 9).unwrap();
+        assert!(e.get("tbl", 9).unwrap().is_none(), "logged delete must mask base");
+        assert!(!e.keys("tbl").unwrap().contains(&9));
+        e.wal().flush_now().unwrap();
+        assert!(dest.get("tbl", 9).unwrap().is_none());
+    }
+
+    #[test]
+    fn get_run_merges_overlay_over_base() {
+        let (e, _log, dest) = wal_engine();
+        // Base holds keys 0, 2, 4; the log holds 1 (new), 2 (newer), and
+        // a delete of 4.
+        dest.put("tbl", 0, b"b0").unwrap();
+        dest.put("tbl", 2, b"b2").unwrap();
+        dest.put("tbl", 4, b"b4").unwrap();
+        e.put("tbl", 1, b"w1").unwrap();
+        e.put("tbl", 2, b"w2").unwrap();
+        e.delete("tbl", 4).unwrap();
+        let run = e.get_run("tbl", 0, 8).unwrap();
+        let keys: Vec<u64> = run.iter().map(|(k, _)| *k).collect();
+        assert_eq!(keys, vec![0, 1, 2]);
+        assert_eq!(**run[1].1, *b"w1");
+        assert_eq!(**run[2].1, *b"w2", "overlay must win over stale base");
+    }
+
+    #[test]
+    fn get_batch_mixes_overlay_and_base() {
+        let (e, _log, dest) = wal_engine();
+        dest.put("tbl", 10, b"base10").unwrap();
+        e.put("tbl", 11, b"log11").unwrap();
+        let got = e.get_batch("tbl", &[10, 11, 12]).unwrap();
+        assert_eq!(got[0].as_deref().map(|v| &v[..]), Some(b"base10".as_ref()));
+        assert_eq!(got[1].as_deref().map(|v| &v[..]), Some(b"log11".as_ref()));
+        assert_eq!(got[2], None);
+    }
+
+    #[test]
+    fn keys_and_tables_are_merged_views() {
+        let (e, _log, dest) = wal_engine();
+        dest.put("a", 1, b"x").unwrap();
+        e.put("b", 2, b"y").unwrap();
+        assert_eq!(e.keys("a").unwrap(), vec![1]);
+        assert_eq!(e.keys("b").unwrap(), vec![2]);
+        let tables = e.tables().unwrap();
+        assert!(tables.contains(&"a".to_string()));
+        assert!(tables.contains(&"b".to_string()));
+    }
+}

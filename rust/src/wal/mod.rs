@@ -1,0 +1,905 @@
+//! SSD write-absorber: a segmented write-ahead log with group commit, a
+//! read-through overlay, and background flush into database nodes.
+//!
+//! The paper "directs I/O to different systems — reads to parallel disk
+//! arrays and writes to solid-state storage — to avoid I/O interference"
+//! (§4.1). The seed approximated that by *placing* hot annotation
+//! projects wholly on SSD nodes and migrating them once. This subsystem
+//! does it properly, as a continuous pipeline:
+//!
+//! * **Log** — every mutation (cuboid put/delete, RAMON metadata, index
+//!   blobs) is framed ([`record`]) with a CRC32 and appended to the
+//!   current *segment*, stored as chunk blobs on an SSD-class
+//!   [`Engine`]. Segments seal at a size threshold and become immutable.
+//! * **Group commit** — concurrent writers park on a condvar while one
+//!   leader writes a single chunk + `sync` for everything queued behind
+//!   it; under load, dozens of logical writes cost one device commit.
+//! * **Overlay** — an in-memory `table → key → value` index of every
+//!   unflushed record. Reads consult it first and merge over the base
+//!   engine, so readers never observe stale data while writes sit in
+//!   the log ([`engine::WalEngine`]).
+//! * **Flusher** — a background thread drains sealed segments into the
+//!   destination (database-node) engine in Morton-sorted, per-table
+//!   batches — turning the vision pipeline's random writes into the
+//!   sequential runs the disk arrays want — then truncates the log.
+//! * **Recovery** — [`Wal::open`] replays whatever segments the log
+//!   engine holds, truncating a torn tail frame, and rebuilds the
+//!   overlay, so a crash loses nothing that was group-committed.
+
+pub mod engine;
+pub mod record;
+
+pub use engine::WalEngine;
+pub use record::WalRecord;
+
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+use crate::metrics::{Counter, Gauge};
+use crate::storage::{Blob, Engine};
+use crate::util::codec::{Dec, Enc};
+use crate::{Error, Result};
+
+/// Chunk keys pack `(segment << SEG_SHIFT) | chunk_index`.
+const SEG_SHIFT: u64 = 20;
+const CHUNK_MASK: u64 = (1 << SEG_SHIFT) - 1;
+const META_VERSION: u32 = 1;
+
+/// Tuning knobs for one log.
+#[derive(Clone, Copy, Debug)]
+pub struct WalConfig {
+    /// Seal the active segment once it holds this many framed bytes.
+    pub segment_bytes: usize,
+    /// Extra time a group-commit leader waits before taking the queue —
+    /// larger windows coalesce more writers per device commit at the
+    /// cost of write latency. Zero (default) still batches naturally:
+    /// whatever queues during the previous commit rides the next one.
+    pub group_window: Duration,
+    /// Background flusher poll period.
+    pub flush_interval: Duration,
+    /// Spawn the background flusher thread. Benches and deterministic
+    /// tests turn this off and call [`Wal::flush_now`] themselves.
+    pub background_flush: bool,
+}
+
+impl Default for WalConfig {
+    fn default() -> Self {
+        WalConfig {
+            segment_bytes: 1 << 20,
+            group_window: Duration::ZERO,
+            flush_interval: Duration::from_millis(25),
+            background_flush: true,
+        }
+    }
+}
+
+/// Counters exported through `/wal/status` and `ocpd wal`.
+#[derive(Debug, Default)]
+pub struct WalMetrics {
+    /// Records ever appended (including those replayed at open).
+    pub appended_records: Counter,
+    /// Framed bytes ever appended.
+    pub appended_bytes: Counter,
+    /// Device commits (one chunk write + sync each).
+    pub commit_batches: Counter,
+    /// Records carried by those commits — `commit_records /
+    /// commit_batches` is the group-commit batch size.
+    pub commit_records: Counter,
+    /// Segments sealed.
+    pub segments_sealed: Counter,
+    /// Records drained into the destination engine.
+    pub flushed_records: Counter,
+    /// Segments drained.
+    pub flushed_segments: Counter,
+    /// Torn frames dropped during recovery or drain.
+    pub truncated_chunks: Counter,
+    /// Unflushed records currently in the log (log depth).
+    pub depth: Gauge,
+    /// Unflushed framed bytes currently in the log.
+    pub depth_bytes: Gauge,
+}
+
+/// Point-in-time summary of one log.
+#[derive(Clone, Debug)]
+pub struct WalStatus {
+    pub scope: String,
+    pub depth_records: u64,
+    pub depth_bytes: u64,
+    pub active_segment: u64,
+    pub sealed_segments: u64,
+    pub appended_records: u64,
+    pub commit_batches: u64,
+    pub commit_records: u64,
+    pub flushed_records: u64,
+    pub durable_lsn: u64,
+    /// Age of the oldest unflushed record (approximate).
+    pub flush_lag_ms: f64,
+}
+
+impl WalStatus {
+    /// Mean records per group commit.
+    pub fn mean_batch(&self) -> f64 {
+        if self.commit_batches == 0 {
+            0.0
+        } else {
+            self.commit_records as f64 / self.commit_batches as f64
+        }
+    }
+}
+
+#[derive(Clone)]
+struct OverlayEntry {
+    lsn: u64,
+    /// `None` masks the base value (a logged delete).
+    value: Option<Blob>,
+}
+
+type OverlayMap = HashMap<String, BTreeMap<u64, OverlayEntry>>;
+
+struct WalState {
+    next_lsn: u64,
+    durable_lsn: u64,
+    committing: bool,
+    /// Framed records awaiting the next group commit.
+    pending: Vec<u8>,
+    pending_records: u64,
+    pending_last_lsn: u64,
+    active_seg: u64,
+    next_chunk: u64,
+    /// Framed bytes committed into the active segment.
+    active_bytes: u64,
+}
+
+/// One project's write-ahead log: SSD-resident segments + overlay +
+/// flusher. Cheap to share (`Arc`); all methods take `&self`.
+pub struct Wal {
+    scope: String,
+    log: Engine,
+    dest: Engine,
+    cfg: WalConfig,
+    chunk_table: String,
+    meta_table: String,
+    state: Mutex<WalState>,
+    commit_cv: Condvar,
+    overlay: RwLock<OverlayMap>,
+    /// Serializes drains (background flusher vs. explicit flush).
+    flush_lock: Mutex<()>,
+    /// Append time of the oldest unflushed record (flush-lag probe).
+    oldest_pending: Mutex<Option<Instant>>,
+    pub metrics: WalMetrics,
+    stop: AtomicBool,
+    flusher: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Wal {
+    /// Open (or create) the log named `scope` on `log` (SSD-class
+    /// engine), draining into `dest` (database-node engine). Replays any
+    /// existing segments to rebuild the overlay — crash recovery and a
+    /// plain reopen are the same code path.
+    pub fn open(scope: &str, log: Engine, dest: Engine, cfg: WalConfig) -> Result<Arc<Wal>> {
+        let chunk_table = format!("{scope}/wal/log");
+        let meta_table = format!("{scope}/wal/meta");
+
+        // Last sealed boundary, if recorded.
+        let mut active_seg = match log.get(&meta_table, 0)? {
+            Some(b) => {
+                let mut d = Dec::new(&b);
+                let v = d.u32()?;
+                if v != META_VERSION {
+                    return Err(Error::Codec(format!("wal meta version {v} unsupported")));
+                }
+                d.u64()?
+            }
+            None => 0,
+        };
+
+        let keys = log.keys(&chunk_table)?;
+        if let Some(&max) = keys.last() {
+            // Trust the data over a stale/lost meta blob.
+            active_seg = active_seg.max(max >> SEG_SHIFT);
+        }
+
+        let mut overlay: OverlayMap = HashMap::new();
+        let mut next_lsn = 1u64;
+        let mut replayed = 0u64;
+        let mut replayed_bytes = 0u64;
+        let mut truncated = 0u64;
+        let mut next_chunk = 0u64;
+        let mut active_bytes = 0u64;
+        for &k in &keys {
+            let Some(blob) = log.get(&chunk_table, k)? else { continue };
+            let d = record::decode_chunk(&blob);
+            if !d.clean {
+                // Torn tail (crash mid-append): persist the truncation so
+                // the next open sees a clean chunk.
+                truncated += 1;
+                if d.valid_bytes == 0 {
+                    log.delete(&chunk_table, k)?;
+                } else {
+                    log.put(&chunk_table, k, &blob[..d.valid_bytes])?;
+                }
+            }
+            replayed += d.records.len() as u64;
+            replayed_bytes += d.valid_bytes as u64;
+            for r in d.records {
+                if r.lsn >= next_lsn {
+                    next_lsn = r.lsn + 1;
+                }
+                overlay_insert(&mut overlay, r);
+            }
+            if k >> SEG_SHIFT == active_seg {
+                next_chunk = next_chunk.max((k & CHUNK_MASK) + 1);
+                active_bytes += d.valid_bytes as u64;
+            }
+        }
+
+        let wal = Arc::new(Wal {
+            scope: scope.to_string(),
+            log,
+            dest,
+            cfg,
+            chunk_table,
+            meta_table,
+            state: Mutex::new(WalState {
+                next_lsn,
+                durable_lsn: next_lsn - 1,
+                committing: false,
+                pending: Vec::new(),
+                pending_records: 0,
+                pending_last_lsn: 0,
+                active_seg,
+                next_chunk,
+                active_bytes,
+            }),
+            commit_cv: Condvar::new(),
+            overlay: RwLock::new(overlay),
+            flush_lock: Mutex::new(()),
+            oldest_pending: Mutex::new(if replayed > 0 { Some(Instant::now()) } else { None }),
+            metrics: WalMetrics::default(),
+            stop: AtomicBool::new(false),
+            flusher: Mutex::new(None),
+        });
+        wal.metrics.appended_records.add(replayed);
+        wal.metrics.appended_bytes.add(replayed_bytes);
+        wal.metrics.truncated_chunks.add(truncated);
+        wal.metrics.depth.add(replayed);
+        wal.metrics.depth_bytes.add(replayed_bytes);
+
+        if wal.cfg.background_flush {
+            let weak = Arc::downgrade(&wal);
+            let interval = wal.cfg.flush_interval;
+            let handle = std::thread::Builder::new()
+                .name(format!("ocpd-wal-{scope}"))
+                .spawn(move || loop {
+                    std::thread::sleep(interval);
+                    let Some(wal) = weak.upgrade() else { break };
+                    if wal.stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    // Sealed segments only; the active segment keeps
+                    // absorbing until it seals or someone flushes.
+                    let _ = wal.drain_sealed();
+                })
+                .map_err(|e| Error::Other(format!("spawn wal flusher: {e}")))?;
+            *wal.flusher.lock().unwrap() = Some(handle);
+        }
+        Ok(wal)
+    }
+
+    pub fn scope(&self) -> &str {
+        &self.scope
+    }
+
+    /// Destination engine (where sealed segments drain).
+    pub fn dest(&self) -> &Engine {
+        &self.dest
+    }
+
+    /// Log engine (where segments live).
+    pub fn log_engine(&self) -> &Engine {
+        &self.log
+    }
+
+    /// Unflushed records currently absorbed by the log.
+    pub fn depth(&self) -> u64 {
+        self.metrics.depth.get()
+    }
+
+    // ------------------------------------------------------------------
+    // Write path: append + group commit
+    // ------------------------------------------------------------------
+
+    /// Append mutations (`value: None` = delete) and block until they are
+    /// durable in the log. Concurrent callers are group-committed: one
+    /// leader performs a single chunk write + sync for every record
+    /// queued behind it. Returns the number of records appended.
+    pub fn append(&self, muts: Vec<(String, u64, Option<Vec<u8>>)>) -> Result<u64> {
+        if muts.is_empty() {
+            return Ok(0);
+        }
+        let n = muts.len() as u64;
+        let my_last;
+        let mut recs: Vec<WalRecord> = Vec::with_capacity(muts.len());
+        {
+            let mut st = self.state.lock().unwrap();
+            // Retirement check under the state lock: after `shutdown`
+            // stores the flag, any append that got in first has its
+            // records in `pending`, where the retiring flush's commit
+            // barrier is guaranteed to cover them — no window where an
+            // acknowledged write can be stranded.
+            if self.stop.load(Ordering::Relaxed) {
+                return Err(Error::Cluster(format!(
+                    "write-ahead log '{}' has been retired",
+                    self.scope
+                )));
+            }
+            if self.metrics.depth.get() == 0 {
+                *self.oldest_pending.lock().unwrap() = Some(Instant::now());
+            }
+            for (table, key, value) in muts {
+                let lsn = st.next_lsn;
+                st.next_lsn += 1;
+                let rec = WalRecord { lsn, table, key, value };
+                let before = st.pending.len();
+                rec.encode_into(&mut st.pending);
+                let frame = (st.pending.len() - before) as u64;
+                st.pending_records += 1;
+                st.pending_last_lsn = lsn;
+                self.metrics.appended_records.inc();
+                self.metrics.appended_bytes.add(frame);
+                self.metrics.depth.add(1);
+                self.metrics.depth_bytes.add(frame);
+                recs.push(rec);
+            }
+            my_last = st.pending_last_lsn;
+            // Overlay entries must become visible before any higher LSN
+            // can be assigned (i.e. within this critical section): if a
+            // later write to the same key could be drained before this
+            // insert ran, the insert would resurrect the stale value.
+            // The overlay write lock is taken only for the cheap insert
+            // loop — encoding above never holds it.
+            let mut ov = self.overlay.write().unwrap();
+            for rec in recs {
+                overlay_insert(&mut ov, rec);
+            }
+        }
+        self.commit_until(my_last)?;
+        Ok(n)
+    }
+
+    /// Make everything appended so far durable (an explicit group-commit
+    /// barrier).
+    pub fn commit(&self) -> Result<()> {
+        let target = {
+            let mut st = self.state.lock().unwrap();
+            // Wait out an in-flight leader first: it already took records
+            // off the queue, and `durable_lsn` does not cover them yet.
+            while st.committing {
+                st = self.commit_cv.wait(st).unwrap();
+            }
+            if st.pending_records == 0 { st.durable_lsn } else { st.pending_last_lsn }
+        };
+        self.commit_until(target)
+    }
+
+    fn commit_until(&self, target: u64) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.durable_lsn >= target {
+                return Ok(());
+            }
+            if st.committing {
+                st = self.commit_cv.wait(st).unwrap();
+                continue;
+            }
+            // Become the group-commit leader.
+            st.committing = true;
+            drop(st);
+            if !self.cfg.group_window.is_zero() {
+                std::thread::sleep(self.cfg.group_window);
+            }
+            let (batch, batch_records, batch_last, chunk_key) = {
+                let mut st = self.state.lock().unwrap();
+                let batch = std::mem::take(&mut st.pending);
+                let records = std::mem::take(&mut st.pending_records);
+                let last = st.pending_last_lsn;
+                let key = (st.active_seg << SEG_SHIFT) | st.next_chunk;
+                st.next_chunk += 1;
+                (batch, records, last, key)
+            };
+            if batch.is_empty() {
+                st = self.state.lock().unwrap();
+                st.committing = false;
+                // Saturating: a concurrent seal may have reset the cursor.
+                st.next_chunk = st.next_chunk.saturating_sub(1);
+                self.commit_cv.notify_all();
+                continue;
+            }
+            let res = self
+                .log
+                .put(&self.chunk_table, chunk_key, &batch)
+                .and_then(|()| self.log.sync());
+            st = self.state.lock().unwrap();
+            st.committing = false;
+            match res {
+                Ok(()) => {
+                    st.durable_lsn = st.durable_lsn.max(batch_last);
+                    st.active_bytes += batch.len() as u64;
+                    self.metrics.commit_batches.inc();
+                    self.metrics.commit_records.add(batch_records);
+                    if st.active_bytes >= self.cfg.segment_bytes as u64
+                        || st.next_chunk >= CHUNK_MASK
+                    {
+                        let sealed = self.seal_locked(&mut st);
+                        self.commit_cv.notify_all();
+                        sealed?;
+                    } else {
+                        self.commit_cv.notify_all();
+                    }
+                }
+                Err(e) => {
+                    // Put the batch back so waiters can retry leadership.
+                    let mut restored = batch;
+                    restored.extend_from_slice(&st.pending);
+                    st.pending = restored;
+                    st.pending_records += batch_records;
+                    if st.pending_last_lsn < batch_last {
+                        st.pending_last_lsn = batch_last;
+                    }
+                    st.next_chunk = st.next_chunk.saturating_sub(1);
+                    self.commit_cv.notify_all();
+                    return Err(e);
+                }
+            }
+        }
+    }
+
+    /// Seal the active segment: later appends start a fresh one and the
+    /// sealed segment becomes eligible for background drain.
+    fn seal_locked(&self, st: &mut WalState) -> Result<()> {
+        st.active_seg += 1;
+        st.next_chunk = 0;
+        st.active_bytes = 0;
+        let mut e = Enc::new();
+        e.u32(META_VERSION).u64(st.active_seg);
+        self.log.put(&self.meta_table, 0, &e.finish())?;
+        self.log.sync()?;
+        self.metrics.segments_sealed.inc();
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Read path: the overlay
+    // ------------------------------------------------------------------
+
+    /// Overlay lookup: `None` = not in the log; `Some(None)` = deleted in
+    /// the log (masks the base value); `Some(Some(b))` = logged value.
+    pub fn overlay_get(&self, table: &str, key: u64) -> Option<Option<Blob>> {
+        let ov = self.overlay.read().unwrap();
+        ov.get(table).and_then(|m| m.get(&key)).map(|e| e.value.clone())
+    }
+
+    /// Overlay entries with keys in `[start, end)`, ascending.
+    pub fn overlay_range(&self, table: &str, start: u64, end: u64) -> Vec<(u64, Option<Blob>)> {
+        let ov = self.overlay.read().unwrap();
+        match ov.get(table) {
+            Some(m) => m.range(start..end).map(|(k, e)| (*k, e.value.clone())).collect(),
+            None => Vec::new(),
+        }
+    }
+
+    /// `(live keys, deleted keys)` the overlay holds for `table`.
+    pub fn overlay_keys(&self, table: &str) -> (Vec<u64>, Vec<u64>) {
+        let ov = self.overlay.read().unwrap();
+        let mut live = Vec::new();
+        let mut dead = Vec::new();
+        if let Some(m) = ov.get(table) {
+            for (k, e) in m {
+                if e.value.is_some() {
+                    live.push(*k);
+                } else {
+                    dead.push(*k);
+                }
+            }
+        }
+        (live, dead)
+    }
+
+    /// Tables with at least one unflushed record.
+    pub fn overlay_tables(&self) -> Vec<String> {
+        let ov = self.overlay.read().unwrap();
+        let mut t: Vec<String> = ov.keys().cloned().collect();
+        t.sort();
+        t
+    }
+
+    // ------------------------------------------------------------------
+    // Flush path
+    // ------------------------------------------------------------------
+
+    /// Drain every *sealed* segment into the destination engine. Runs on
+    /// the background flusher; safe to call concurrently with writes.
+    /// Returns records applied.
+    pub fn drain_sealed(&self) -> Result<u64> {
+        let _g = self.flush_lock.lock().unwrap();
+        let active = self.state.lock().unwrap().active_seg;
+        let mut seg_keys: BTreeMap<u64, Vec<u64>> = BTreeMap::new();
+        for k in self.log.keys(&self.chunk_table)? {
+            if k >> SEG_SHIFT < active {
+                seg_keys.entry(k >> SEG_SHIFT).or_default().push(k);
+            }
+        }
+        let mut total = 0u64;
+        for keys in seg_keys.values() {
+            total += self.drain_segment(keys)?;
+        }
+        if total > 0 {
+            let mut oldest = self.oldest_pending.lock().unwrap();
+            *oldest = if self.metrics.depth.get() == 0 { None } else { Some(Instant::now()) };
+        }
+        Ok(total)
+    }
+
+    /// Force everything — pending, active, sealed — down to the
+    /// destination engine. Returns records applied. This is the
+    /// `/wal/flush` endpoint and the project-migration primitive.
+    pub fn flush_now(&self) -> Result<u64> {
+        self.commit()?;
+        {
+            let mut st = self.state.lock().unwrap();
+            // Never seal under a leader's feet: it has a chunk key in the
+            // old segment in hand, and resetting the cursor while its
+            // write is in flight could reuse a durable chunk key.
+            while st.committing {
+                st = self.commit_cv.wait(st).unwrap();
+            }
+            if st.active_bytes > 0 || st.next_chunk > 0 {
+                self.seal_locked(&mut st)?;
+            }
+        }
+        self.drain_sealed()
+    }
+
+    /// Apply one sealed segment: last-write-wins per key, Morton-sorted
+    /// per-table batches to the destination, then truncate the log.
+    fn drain_segment(&self, keys: &[u64]) -> Result<u64> {
+        let mut records: Vec<WalRecord> = Vec::new();
+        let mut chunk_bytes = 0u64;
+        for &k in keys {
+            if let Some(blob) = self.log.get(&self.chunk_table, k)? {
+                chunk_bytes += blob.len() as u64;
+                let d = record::decode_chunk(&blob);
+                if !d.clean {
+                    self.metrics.truncated_chunks.inc();
+                }
+                records.extend(d.records);
+            }
+        }
+        let n_records = records.len() as u64;
+
+        // Collapse to the newest record per (table, key).
+        let mut by_table: HashMap<String, BTreeMap<u64, WalRecord>> = HashMap::new();
+        for r in records {
+            let slot = by_table.entry(r.table.clone()).or_default();
+            match slot.get(&r.key) {
+                Some(prev) if prev.lsn > r.lsn => {}
+                _ => {
+                    slot.insert(r.key, r);
+                }
+            }
+        }
+        let mut items: Vec<(String, BTreeMap<u64, WalRecord>)> = by_table.into_iter().collect();
+        items.sort_by(|a, b| a.0.cmp(&b.0));
+
+        for (table, entries) in items {
+            let mut puts: Vec<(u64, Vec<u8>)> = Vec::new();
+            let mut dels: Vec<u64> = Vec::new();
+            let mut applied: Vec<(u64, u64)> = Vec::with_capacity(entries.len());
+            for (key, rec) in entries {
+                applied.push((key, rec.lsn));
+                match rec.value {
+                    Some(v) => puts.push((key, v)),
+                    None => dels.push(key),
+                }
+            }
+            // BTreeMap iteration is ascending, so `puts` is already the
+            // Morton-sorted sequential run the destination wants.
+            if !puts.is_empty() {
+                self.dest.put_batch(&table, &puts)?;
+            }
+            for k in dels {
+                self.dest.delete(&table, k)?;
+            }
+            // Drop overlay entries this apply made redundant. A newer
+            // write sitting in a later (possibly active) segment keeps
+            // its overlay entry — its lsn is higher.
+            let mut ov = self.overlay.write().unwrap();
+            if let Some(map) = ov.get_mut(&table) {
+                for (key, lsn) in applied {
+                    if let Some(e) = map.get(&key) {
+                        if e.lsn <= lsn {
+                            map.remove(&key);
+                        }
+                    }
+                }
+                if map.is_empty() {
+                    ov.remove(&table);
+                }
+            }
+        }
+
+        // The segment is applied; truncate it from the log.
+        for &k in keys {
+            self.log.delete(&self.chunk_table, k)?;
+        }
+        self.log.sync()?;
+        self.metrics.flushed_records.add(n_records);
+        self.metrics.flushed_segments.inc();
+        self.metrics.depth.sub(n_records);
+        self.metrics.depth_bytes.sub(chunk_bytes);
+        Ok(n_records)
+    }
+
+    /// Stop the background flusher (idempotent). Pending data stays in
+    /// the log for the next [`Wal::open`] — dropping a `Wal` is always
+    /// crash-consistent.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.flusher.lock().unwrap().take() {
+            // The flusher itself may hold the last `Arc<Wal>`, making it
+            // the thread that runs Drop → shutdown: never join yourself
+            // (the thread exits on its own once its upgrade fails).
+            if h.thread().id() != std::thread::current().id() {
+                let _ = h.join();
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Observability
+    // ------------------------------------------------------------------
+
+    pub fn status(&self) -> Result<WalStatus> {
+        let (active, durable) = {
+            let st = self.state.lock().unwrap();
+            (st.active_seg, st.durable_lsn)
+        };
+        let mut sealed: BTreeSet<u64> = BTreeSet::new();
+        for k in self.log.keys(&self.chunk_table)? {
+            if k >> SEG_SHIFT < active {
+                sealed.insert(k >> SEG_SHIFT);
+            }
+        }
+        let lag_ms = self
+            .oldest_pending
+            .lock()
+            .unwrap()
+            .map(|t| t.elapsed().as_secs_f64() * 1e3)
+            .unwrap_or(0.0);
+        Ok(WalStatus {
+            scope: self.scope.clone(),
+            depth_records: self.metrics.depth.get(),
+            depth_bytes: self.metrics.depth_bytes.get(),
+            active_segment: active,
+            sealed_segments: sealed.len() as u64,
+            appended_records: self.metrics.appended_records.get(),
+            commit_batches: self.metrics.commit_batches.get(),
+            commit_records: self.metrics.commit_records.get(),
+            flushed_records: self.metrics.flushed_records.get(),
+            durable_lsn: durable,
+            flush_lag_ms: if self.metrics.depth.get() == 0 { 0.0 } else { lag_ms },
+        })
+    }
+}
+
+impl Drop for Wal {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn overlay_insert(ov: &mut OverlayMap, rec: WalRecord) {
+    let WalRecord { lsn, table, key, value } = rec;
+    let slot = ov.entry(table).or_default();
+    match slot.get(&key) {
+        Some(prev) if prev.lsn > lsn => {}
+        _ => {
+            slot.insert(key, OverlayEntry { lsn, value: value.map(Arc::new) });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::{DeviceProfile, MemStore, SimulatedStore};
+
+    fn quiet_cfg() -> WalConfig {
+        WalConfig { background_flush: false, ..WalConfig::default() }
+    }
+
+    fn mem_wal(cfg: WalConfig) -> (Arc<Wal>, Engine, Engine) {
+        let log: Engine = Arc::new(MemStore::new());
+        let dest: Engine = Arc::new(MemStore::new());
+        let wal = Wal::open("t", Arc::clone(&log), Arc::clone(&dest), cfg).unwrap();
+        (wal, log, dest)
+    }
+
+    fn put(table: &str, key: u64, v: &[u8]) -> (String, u64, Option<Vec<u8>>) {
+        (table.to_string(), key, Some(v.to_vec()))
+    }
+
+    #[test]
+    fn append_then_overlay_read() {
+        let (wal, _log, dest) = mem_wal(quiet_cfg());
+        wal.append(vec![put("tbl", 5, b"five"), put("tbl", 9, b"nine")]).unwrap();
+        assert_eq!(**wal.overlay_get("tbl", 5).unwrap().unwrap(), *b"five");
+        assert!(wal.overlay_get("tbl", 6).is_none());
+        // Nothing reached the destination yet.
+        assert_eq!(dest.get("tbl", 5).unwrap(), None);
+        assert_eq!(wal.depth(), 2);
+    }
+
+    #[test]
+    fn delete_masks_base_value() {
+        let (wal, _log, dest) = mem_wal(quiet_cfg());
+        dest.put("tbl", 1, b"base").unwrap();
+        wal.append(vec![("tbl".to_string(), 1, None)]).unwrap();
+        assert_eq!(wal.overlay_get("tbl", 1), Some(None));
+        // Flush applies the tombstone.
+        wal.flush_now().unwrap();
+        assert_eq!(dest.get("tbl", 1).unwrap(), None);
+    }
+
+    #[test]
+    fn flush_moves_everything_morton_sorted() {
+        let (wal, log, dest) = mem_wal(quiet_cfg());
+        // Append in deliberately random key order.
+        for &k in &[9u64, 2, 7, 0, 5, 3] {
+            wal.append(vec![put("a/cub", k, &k.to_le_bytes())]).unwrap();
+        }
+        wal.append(vec![put("b/ramon", 1, b"meta")]).unwrap();
+        let moved = wal.flush_now().unwrap();
+        assert_eq!(moved, 7);
+        assert_eq!(wal.depth(), 0);
+        assert_eq!(dest.keys("a/cub").unwrap(), vec![0, 2, 3, 5, 7, 9]);
+        assert_eq!(**dest.get("b/ramon", 1).unwrap().unwrap(), *b"meta");
+        // Log truncated.
+        assert!(log.keys("t/wal/log").unwrap().is_empty());
+        // Overlay emptied.
+        assert!(wal.overlay_get("a/cub", 9).is_none());
+    }
+
+    #[test]
+    fn last_write_wins_within_segment() {
+        let (wal, _log, dest) = mem_wal(quiet_cfg());
+        wal.append(vec![put("tbl", 4, b"old")]).unwrap();
+        wal.append(vec![put("tbl", 4, b"new")]).unwrap();
+        assert_eq!(**wal.overlay_get("tbl", 4).unwrap().unwrap(), *b"new");
+        wal.flush_now().unwrap();
+        assert_eq!(**dest.get("tbl", 4).unwrap().unwrap(), *b"new");
+    }
+
+    #[test]
+    fn reopen_replays_unflushed_records() {
+        let log: Engine = Arc::new(MemStore::new());
+        let dest: Engine = Arc::new(MemStore::new());
+        {
+            let wal =
+                Wal::open("t", Arc::clone(&log), Arc::clone(&dest), quiet_cfg()).unwrap();
+            wal.append(vec![put("tbl", 11, b"eleven")]).unwrap();
+            // Dropped without flushing — the simulated crash.
+        }
+        let wal = Wal::open("t", Arc::clone(&log), Arc::clone(&dest), quiet_cfg()).unwrap();
+        assert_eq!(**wal.overlay_get("tbl", 11).unwrap().unwrap(), *b"eleven");
+        assert_eq!(wal.depth(), 1);
+        // And the replayed record still flushes.
+        wal.flush_now().unwrap();
+        assert_eq!(**dest.get("tbl", 11).unwrap().unwrap(), *b"eleven");
+    }
+
+    #[test]
+    fn recovery_truncates_torn_tail() {
+        let log: Engine = Arc::new(MemStore::new());
+        let dest: Engine = Arc::new(MemStore::new());
+        {
+            let wal =
+                Wal::open("t", Arc::clone(&log), Arc::clone(&dest), quiet_cfg()).unwrap();
+            wal.append(vec![put("tbl", 1, b"good")]).unwrap();
+            wal.append(vec![put("tbl", 2, b"also good")]).unwrap();
+        }
+        // Corrupt the tail of the last chunk (torn write at power loss).
+        let keys = log.keys("t/wal/log").unwrap();
+        let last = *keys.last().unwrap();
+        let blob = log.get("t/wal/log", last).unwrap().unwrap();
+        let mut torn = (*blob).clone();
+        let n = torn.len();
+        torn.truncate(n - 3);
+        log.put("t/wal/log", last, &torn).unwrap();
+
+        let wal = Wal::open("t", Arc::clone(&log), Arc::clone(&dest), quiet_cfg()).unwrap();
+        assert_eq!(wal.metrics.truncated_chunks.get(), 1);
+        // Record 1 survived; the torn record 2 is gone.
+        assert_eq!(**wal.overlay_get("tbl", 1).unwrap().unwrap(), *b"good");
+        assert!(wal.overlay_get("tbl", 2).is_none());
+        // New appends continue after the truncation.
+        wal.append(vec![put("tbl", 3, b"after")]).unwrap();
+        wal.flush_now().unwrap();
+        assert_eq!(dest.keys("tbl").unwrap(), vec![1, 3]);
+    }
+
+    #[test]
+    fn sealing_rolls_segments_and_background_style_drain_applies_them() {
+        let cfg = WalConfig { segment_bytes: 256, ..quiet_cfg() };
+        let (wal, _log, dest) = mem_wal(cfg);
+        for k in 0..32u64 {
+            wal.append(vec![put("tbl", k, &[7u8; 40])]).unwrap();
+        }
+        assert!(wal.metrics.segments_sealed.get() >= 2, "tiny segments must seal");
+        // Drain only sealed segments — the active one keeps absorbing.
+        let drained = wal.drain_sealed().unwrap();
+        assert!(drained > 0);
+        assert!(wal.depth() < 32);
+        // Overlay still answers for the undrained tail; dest has the rest.
+        for k in 0..32u64 {
+            let in_overlay = wal.overlay_get("tbl", k).is_some();
+            let in_dest = dest.get("tbl", k).unwrap().is_some();
+            assert!(in_overlay || in_dest, "key {k} lost");
+        }
+    }
+
+    #[test]
+    fn group_commit_batches_concurrent_writers() {
+        let cfg = WalConfig {
+            group_window: Duration::from_millis(4),
+            ..quiet_cfg()
+        };
+        let log: Engine = Arc::new(SimulatedStore::new(
+            Arc::new(MemStore::new()),
+            DeviceProfile::ssd_raid0(),
+            0.01,
+        ));
+        let dest: Engine = Arc::new(MemStore::new());
+        let wal = Wal::open("t", log, dest, cfg).unwrap();
+        std::thread::scope(|s| {
+            for w in 0..8u64 {
+                let wal = Arc::clone(&wal);
+                s.spawn(move || {
+                    for i in 0..5u64 {
+                        wal.append(vec![put("tbl", w * 100 + i, &[1u8; 64])]).unwrap();
+                    }
+                });
+            }
+        });
+        let st = wal.status().unwrap();
+        assert_eq!(st.appended_records, 40);
+        assert_eq!(st.commit_records, 40);
+        assert!(
+            st.commit_batches < 40,
+            "expected group commit to batch: {} batches",
+            st.commit_batches
+        );
+        assert!(st.mean_batch() > 1.0);
+        // Nothing lost.
+        wal.flush_now().unwrap();
+        assert_eq!(wal.dest().keys("tbl").unwrap().len(), 40);
+    }
+
+    #[test]
+    fn status_reports_depth_and_lag() {
+        let (wal, _log, _dest) = mem_wal(quiet_cfg());
+        let st = wal.status().unwrap();
+        assert_eq!(st.depth_records, 0);
+        assert_eq!(st.flush_lag_ms, 0.0);
+        wal.append(vec![put("tbl", 1, b"x")]).unwrap();
+        let st = wal.status().unwrap();
+        assert_eq!(st.depth_records, 1);
+        assert!(st.depth_bytes > 0);
+        wal.flush_now().unwrap();
+        let st = wal.status().unwrap();
+        assert_eq!(st.depth_records, 0);
+        assert_eq!(st.flush_lag_ms, 0.0);
+    }
+}

@@ -8,15 +8,36 @@
 //!
 //! Supported surface: GET/PUT/DELETE request line, `Content-Length`
 //! bodies, connection-close semantics.
+//!
+//! The parser is hostile-input hardened: request heads are size-capped,
+//! bodies are bounded (413 beyond the limit), garbage request lines and
+//! `Content-Length` values produce 400s, and reads carry a timeout so a
+//! stalled peer cannot pin a worker thread.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::metrics::{Counter, Histogram};
 use crate::util::ThreadPool;
 use crate::{Error, Result};
+
+/// Default request-body cap (64 MiB — comfortably above the largest
+/// cutout upload the benches issue). See [`Server::bind_with_limit`].
+pub const DEFAULT_MAX_BODY: usize = 64 << 20;
+
+/// Cap on the request line + headers together.
+const MAX_HEAD_BYTES: u64 = 64 << 10;
+
+/// How long a worker waits on a silent peer before giving up.
+const READ_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Overall wall-clock budget for reading one request (head + body). A
+/// peer that trickles bytes — each arriving just inside the socket
+/// timeout — is cut off here instead of pinning a worker indefinitely.
+const REQUEST_DEADLINE: Duration = Duration::from_secs(60);
 
 /// A parsed request.
 #[derive(Debug)]
@@ -58,6 +79,7 @@ impl Response {
             400 => "Bad Request",
             404 => "Not Found",
             405 => "Method Not Allowed",
+            413 => "Payload Too Large",
             _ => "Internal Server Error",
         }
     }
@@ -73,8 +95,24 @@ pub struct Server {
 }
 
 impl Server {
-    /// Bind and serve `handler` on `workers` threads.
+    /// Bind and serve `handler` on `workers` threads with the default
+    /// body cap ([`DEFAULT_MAX_BODY`]).
     pub fn bind<F>(addr: &str, workers: usize, handler: F) -> Result<Server>
+    where
+        F: Fn(Request) -> Response + Send + Sync + 'static,
+    {
+        Self::bind_with_limit(addr, workers, DEFAULT_MAX_BODY, handler)
+    }
+
+    /// Bind with an explicit request-body cap: requests advertising a
+    /// larger `Content-Length` are refused with `413` before any body
+    /// byte is read or buffered.
+    pub fn bind_with_limit<F>(
+        addr: &str,
+        workers: usize,
+        max_body: usize,
+        handler: F,
+    ) -> Result<Server>
     where
         F: Fn(Request) -> Response + Send + Sync + 'static,
     {
@@ -104,7 +142,7 @@ impl Server {
                             let lat = Arc::clone(&latency2);
                             pool.submit(move || {
                                 let t0 = std::time::Instant::now();
-                                let _ = handle_connection(stream, h.as_ref());
+                                let _ = handle_connection(stream, h.as_ref(), max_body);
                                 reqs.inc();
                                 lat.record(t0.elapsed());
                             });
@@ -143,54 +181,160 @@ impl Drop for Server {
     }
 }
 
-fn handle_connection<F: Fn(Request) -> Response>(stream: TcpStream, handler: &F) -> Result<()> {
+fn handle_connection<F: Fn(Request) -> Response>(
+    stream: TcpStream,
+    handler: &F,
+    max_body: usize,
+) -> Result<()> {
     stream.set_nodelay(true).ok();
+    // A stalled or byte-at-a-time peer times out instead of pinning the
+    // worker thread forever.
+    stream.set_read_timeout(Some(READ_TIMEOUT)).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
-    let req = match read_request(&mut reader) {
-        Ok(r) => r,
-        Err(e) => {
-            let resp = Response::error(400, format!("bad request: {e}"));
-            write_response(&stream, &resp)?;
-            return Ok(());
-        }
+    let deadline = std::time::Instant::now() + REQUEST_DEADLINE;
+    let (resp, rejected) = match read_request(&mut reader, max_body, deadline) {
+        Ok(req) => (handler(req), false),
+        Err(resp) => (resp, true),
     };
-    let resp = handler(req);
-    write_response(&stream, &resp)
+    write_response(&stream, &resp)?;
+    if rejected {
+        // Drain (bounded in bytes AND time) whatever the peer already
+        // sent before the socket closes, so the error response is not
+        // reset out of the peer's receive buffer mid-flight. The short
+        // read timeout means a trickling peer cannot pin the worker.
+        stream.set_read_timeout(Some(Duration::from_millis(250))).ok();
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        let mut sink = [0u8; 8192];
+        let mut budget = 256usize << 10;
+        while budget > 0 && std::time::Instant::now() < deadline {
+            match reader.read(&mut sink) {
+                Ok(0) | Err(_) => break,
+                Ok(n) => budget -= n.min(budget),
+            }
+        }
+    }
+    Ok(())
 }
 
-fn read_request(reader: &mut BufReader<TcpStream>) -> Result<Request> {
+/// `read_line` under an overall deadline: bytes are consumed one at a
+/// time through the `BufRead` buffer (cheap), with a deadline check
+/// before every read, so a peer trickling one byte per almost-timeout
+/// is bounded by `deadline + one socket timeout`, not `bytes x timeout`.
+fn read_line_bounded<R: BufRead>(
+    reader: &mut R,
+    line: &mut String,
+    deadline: std::time::Instant,
+) -> std::io::Result<usize> {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        // Every iteration: a single 1-byte read can block for the whole
+        // socket timeout, so a sparser check would multiply the bound.
+        if std::time::Instant::now() >= deadline {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::TimedOut,
+                "request deadline exceeded",
+            ));
+        }
+        let mut b = [0u8; 1];
+        match reader.read(&mut b) {
+            Ok(0) => break,
+            Ok(_) => {
+                buf.push(b[0]);
+                if b[0] == b'\n' {
+                    break;
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    let n = buf.len();
+    line.push_str(&String::from_utf8_lossy(&buf));
+    Ok(n)
+}
+
+/// Parse one request, or produce the error response to send instead.
+/// Every failure path is a response, never a panic, never an unbounded
+/// buffer, and never an unbounded wait.
+fn read_request(
+    reader: &mut BufReader<TcpStream>,
+    max_body: usize,
+    deadline: std::time::Instant,
+) -> std::result::Result<Request, Response> {
+    // Cap the request line + headers together so hostile peers cannot
+    // grow memory without bound.
+    let mut head = Read::take(&mut *reader, MAX_HEAD_BYTES);
     let mut line = String::new();
-    reader.read_line(&mut line)?;
+    match read_line_bounded(&mut head, &mut line, deadline) {
+        Ok(0) => return Err(Response::error(400, "empty request")),
+        Ok(_) => {}
+        Err(e) => return Err(Response::error(400, format!("unreadable request line: {e}"))),
+    }
+    if !line.ends_with('\n') {
+        // EOF mid-line, or the head cap was hit before a newline.
+        return Err(Response::error(400, "truncated or oversized request line"));
+    }
     let mut parts = line.split_whitespace();
-    let method = parts
-        .next()
-        .ok_or_else(|| Error::BadRequest("empty request line".into()))?
-        .to_string();
-    let path = parts
-        .next()
-        .ok_or_else(|| Error::BadRequest("missing path".into()))?
-        .to_string();
+    let Some(method) = parts.next().map(str::to_string) else {
+        return Err(Response::error(400, "empty request line"));
+    };
+    if !method.chars().all(|c| c.is_ascii_alphabetic()) || method.len() > 16 {
+        return Err(Response::error(400, format!("bad method '{method}'")));
+    }
+    let Some(path) = parts.next().map(str::to_string) else {
+        return Err(Response::error(400, "missing path"));
+    };
+
     // Headers.
     let mut content_length = 0usize;
     loop {
         let mut h = String::new();
-        reader.read_line(&mut h)?;
+        match read_line_bounded(&mut head, &mut h, deadline) {
+            Ok(0) => return Err(Response::error(400, "truncated headers")),
+            Ok(_) => {}
+            Err(e) => return Err(Response::error(400, format!("unreadable header: {e}"))),
+        }
+        if !h.ends_with('\n') {
+            return Err(Response::error(400, "truncated or oversized headers"));
+        }
         let h = h.trim();
         if h.is_empty() {
             break;
         }
         if let Some((k, v)) = h.split_once(':') {
             if k.eq_ignore_ascii_case("content-length") {
-                content_length = v
-                    .trim()
-                    .parse()
-                    .map_err(|_| Error::BadRequest("bad content-length".into()))?;
+                content_length = match v.trim().parse() {
+                    Ok(n) => n,
+                    Err(_) => {
+                        return Err(Response::error(
+                            400,
+                            format!("bad content-length '{}'", v.trim()),
+                        ))
+                    }
+                };
             }
         }
     }
+    if content_length > max_body {
+        return Err(Response::error(
+            413,
+            format!("body of {content_length} bytes exceeds the {max_body}-byte limit"),
+        ));
+    }
+    // Body: chunked reads under the same overall deadline, so the
+    // worker's total time on one request is bounded even when every
+    // chunk arrives just inside the socket timeout.
     let mut body = vec![0u8; content_length];
-    if content_length > 0 {
-        reader.read_exact(&mut body)?;
+    let mut filled = 0usize;
+    while filled < content_length {
+        if std::time::Instant::now() >= deadline {
+            return Err(Response::error(400, "request body deadline exceeded"));
+        }
+        let want = (content_length - filled).min(64 << 10);
+        match reader.read(&mut body[filled..filled + want]) {
+            Ok(0) => return Err(Response::error(400, "truncated body")),
+            Ok(n) => filled += n,
+            Err(e) => return Err(Response::error(400, format!("truncated body: {e}"))),
+        }
     }
     Ok(Request { method, path, body })
 }
@@ -341,6 +485,79 @@ mod tests {
             std::thread::yield_now();
         }
         assert!(s.requests.get() >= 16);
+    }
+
+    /// Write raw bytes to the server and return the status code it
+    /// answers with.
+    fn raw_status(addr: std::net::SocketAddr, payload: &[u8]) -> u16 {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(std::time::Duration::from_secs(10))).unwrap();
+        // The server may answer (and close) before the payload is fully
+        // written; that is fine — we only care about the status line.
+        let _ = s.write_all(payload);
+        let _ = s.shutdown(std::net::Shutdown::Write);
+        let mut line = String::new();
+        BufReader::new(s).read_line(&mut line).unwrap();
+        line.split_whitespace().nth(1).and_then(|v| v.parse().ok()).unwrap_or(0)
+    }
+
+    #[test]
+    fn malformed_request_lines_get_400() {
+        let s = echo_server();
+        // No path.
+        assert_eq!(raw_status(s.addr(), b"GARBAGE\r\n\r\n"), 400);
+        // Empty request line.
+        assert_eq!(raw_status(s.addr(), b"\r\n\r\n"), 400);
+        // Binary junk where a method should be.
+        assert_eq!(raw_status(s.addr(), b"\x00\x01\x02 /x/ HTTP/1.1\r\n\r\n"), 400);
+        // Connection closed before any byte.
+        assert_eq!(raw_status(s.addr(), b""), 400);
+    }
+
+    #[test]
+    fn garbage_content_length_gets_400() {
+        let s = echo_server();
+        assert_eq!(
+            raw_status(s.addr(), b"PUT /echo/ HTTP/1.1\r\nContent-Length: banana\r\n\r\n"),
+            400
+        );
+        assert_eq!(
+            raw_status(s.addr(), b"PUT /echo/ HTTP/1.1\r\nContent-Length: -5\r\n\r\n"),
+            400
+        );
+        // Body shorter than advertised (peer hangs up): 400, not a hang.
+        assert_eq!(
+            raw_status(s.addr(), b"PUT /echo/ HTTP/1.1\r\nContent-Length: 50\r\n\r\nhi"),
+            400
+        );
+    }
+
+    #[test]
+    fn oversized_body_gets_413() {
+        let s = Server::bind_with_limit("127.0.0.1:0", 2, 1024, |req| {
+            Response::binary(req.body)
+        })
+        .unwrap();
+        // Advertised over the cap: refused before any body byte is read.
+        assert_eq!(
+            raw_status(s.addr(), b"PUT /echo/ HTTP/1.1\r\nContent-Length: 10000\r\n\r\n"),
+            413
+        );
+        // At the cap: accepted.
+        let payload = vec![7u8; 1024];
+        let (code, body) = request("PUT", &format!("{}/echo/", s.url()), &payload).unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(body, payload);
+    }
+
+    #[test]
+    fn oversized_head_gets_400() {
+        let s = echo_server();
+        // A single endless header line (no terminator) must be cut off
+        // at the head cap, not buffered forever.
+        let mut payload = b"GET /hello/ HTTP/1.1\r\nX-Junk: ".to_vec();
+        payload.extend(std::iter::repeat(b'a').take(80 << 10));
+        assert_eq!(raw_status(s.addr(), &payload), 400);
     }
 
     #[test]

@@ -22,7 +22,11 @@
 //! PUT /{token}/{overwrite|preserve|exception}/{res}/{x0},..{z1}/  write volume
 //! PUT /{token}/ramon/                                             write objects
 //! GET /info/                                                      cluster info
+//! GET /wal/status/                                                write-log status
+//! PUT /wal/flush/  |  PUT /wal/flush/{token}/                     drain write logs
 //! ```
+//!
+//! `info` and `wal` are reserved top-level names, not project tokens.
 
 pub mod http;
 pub mod ocpk;

@@ -47,9 +47,60 @@ impl OcpService {
         }
         match (req.method.as_str(), segs[0]) {
             (_, "info") => self.info(),
+            // `wal` is a reserved top-level name (like `info`): the
+            // write-absorber's observability and control surface.
+            ("GET", "wal") => self.wal_get(&segs[1..]),
+            ("PUT" | "POST", "wal") => self.wal_flush(&segs[1..]),
             ("GET", token) => self.get(token, &segs[1..]),
             ("PUT" | "POST", token) => self.put(token, &segs[1..], &req.body),
             _ => Ok(Response::error(405, "method not allowed")),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // WAL routes
+    // ------------------------------------------------------------------
+
+    /// GET /wal/status/ — one line per hot project's log.
+    fn wal_get(&self, rest: &[&str]) -> Result<Response> {
+        match rest {
+            ["status"] => {
+                let statuses = self.cluster.wal_status()?;
+                let mut out = String::from("wal:\n");
+                for s in statuses {
+                    out.push_str(&format!(
+                        "  {}: depth={} records ({} bytes) active_seg={} sealed={} \
+                         commits={} mean_batch={:.1} flushed={} lag_ms={:.1}\n",
+                        s.scope,
+                        s.depth_records,
+                        s.depth_bytes,
+                        s.active_segment,
+                        s.sealed_segments,
+                        s.commit_batches,
+                        s.mean_batch(),
+                        s.flushed_records,
+                        s.flush_lag_ms
+                    ));
+                }
+                Ok(Response::text(out))
+            }
+            ["flush", ..] => Ok(Response::error(405, "flush requires PUT or POST")),
+            _ => Err(Error::BadRequest(format!("unrecognized GET /wal/{}", rest.join("/")))),
+        }
+    }
+
+    /// PUT /wal/flush/ (all logs) or /wal/flush/{token}/ (one log).
+    fn wal_flush(&self, rest: &[&str]) -> Result<Response> {
+        match rest {
+            ["flush"] => {
+                let n = self.cluster.flush_all_wals()?;
+                Ok(Response::text(format!("flushed={n}")))
+            }
+            ["flush", token] => {
+                let n = self.cluster.flush_wal(token)?;
+                Ok(Response::text(format!("flushed={n}")))
+            }
+            _ => Err(Error::BadRequest(format!("unrecognized PUT /wal/{}", rest.join("/")))),
         }
     }
 
@@ -64,6 +115,16 @@ impl OcpService {
                 "  {name}: reads={} read_bytes={} writes={} write_bytes={}\n",
                 s.reads, s.read_bytes, s.writes, s.write_bytes
             ));
+        }
+        let wals = self.cluster.wal_status()?;
+        if !wals.is_empty() {
+            out.push_str("wal:\n");
+            for s in wals {
+                out.push_str(&format!(
+                    "  {}: depth={} flushed={}\n",
+                    s.scope, s.depth_records, s.flushed_records
+                ));
+            }
         }
         Ok(Response::text(out))
     }

@@ -185,6 +185,37 @@ fn info_route_lists_projects_and_nodes() {
 }
 
 #[test]
+fn wal_status_and_flush_routes() {
+    let f = fixture();
+    let client = OcpClient::new(&f.server.url(), "ann");
+    let bx = Box3::new([0, 0, 0], [16, 16, 4]);
+    let mut v = DenseVolume::<u32>::zeros(bx.extent());
+    v.fill_box(Box3::new([0, 0, 0], bx.extent()), 5);
+    client.write_annotation(0, bx.lo, &v, WriteDiscipline::Overwrite).unwrap();
+
+    // Status lists the hot project's log.
+    let status = ocpd::client::wal_status(&f.server.url()).unwrap();
+    assert!(status.contains("ann:"), "{status}");
+
+    // GET on flush is rejected; PUT drains everything.
+    let (code, _) = request("GET", &format!("{}/wal/flush/", f.server.url()), &[]).unwrap();
+    assert_eq!(code, 405);
+    let resp = ocpd::client::wal_flush(&f.server.url(), None).unwrap();
+    assert!(resp.starts_with("flushed="), "{resp}");
+    let status = ocpd::client::wal_status(&f.server.url()).unwrap();
+    assert!(status.contains("depth=0"), "{status}");
+    // Reads answer identically from the database node.
+    assert_eq!(client.voxels(5).unwrap().len() as u64, bx.volume());
+
+    // Per-token flush; unknown tokens are 404.
+    let resp = ocpd::client::wal_flush(&f.server.url(), Some("ann")).unwrap();
+    assert!(resp.starts_with("flushed="), "{resp}");
+    let (code, _) =
+        request("PUT", &format!("{}/wal/flush/nope/", f.server.url()), &[]).unwrap();
+    assert_eq!(code, 404);
+}
+
+#[test]
 fn parallel_http_cutouts_consistent() {
     let f = Arc::new(fixture());
     let handles: Vec<_> = (0..8)

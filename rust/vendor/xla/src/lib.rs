@@ -1,0 +1,143 @@
+//! Offline stub of the `xla` (PJRT) bridge crate.
+//!
+//! The real crate links the PJRT C API and executes AOT-compiled HLO;
+//! that toolchain is not present in the offline vendor set, so this stub
+//! provides the exact API surface `ocpd::runtime` consumes and fails at
+//! client construction with a descriptive error. Everything downstream
+//! (`Runtime::load_dir` callers, the vision pipeline, `ocpd serve`)
+//! already degrades gracefully when no runtime is available.
+//!
+//! Swap the `xla` path dependency in `rust/Cargo.toml` for the real crate
+//! to run the Layer-1/2 artifacts; no `ocpd` source changes are needed.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error`: a message, displayable.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(
+        "xla/PJRT backend unavailable: ocpd was built against the offline stub \
+         (point the `xla` dependency at the real crate to execute artifacts)"
+            .to_string(),
+    ))
+}
+
+/// A parsed HLO module (stub: holds nothing).
+#[derive(Debug, Default)]
+pub struct HloModuleProto {}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug, Default)]
+pub struct XlaComputation {}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {}
+    }
+}
+
+/// Host literal: a typed, shaped buffer.
+#[derive(Debug, Default, Clone)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    pub fn vec1(v: &[f32]) -> Literal {
+        Literal { data: v.to_vec(), dims: vec![v.len() as i64] }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape {:?} incompatible with {} elements",
+                dims,
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        unavailable()
+    }
+
+    pub fn to_vec<T: Clone + Default>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+}
+
+impl AsRef<Literal> for Literal {
+    fn as_ref(&self) -> &Literal {
+        self
+    }
+}
+
+/// Device-side buffer handle.
+#[derive(Debug, Default)]
+pub struct PjRtBuffer {}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// A compiled, loaded executable.
+#[derive(Debug, Default)]
+pub struct PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: AsRef<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// PJRT client handle. The stub's constructor always errors, which is the
+/// single gate all `ocpd` runtime users already handle.
+#[derive(Debug)]
+pub struct PjRtClient {}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_surface_errors_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[2, 2]).is_ok());
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+}
