@@ -1,20 +1,21 @@
-//! Figure 10 (a, b, c): cutout throughput vs. cutout size for the three
-//! configurations of the paper's §5 —
+//! Cutout read-path benches:
 //!
-//! * **aligned memory** — data in cache, requests on cuboid boundaries:
-//!   bounded by the application stack's in-memory assembly (paper peak
-//!   173 MB/s);
-//! * **aligned disk** — random offsets on cuboid boundaries over the
-//!   RAID-6 device model (paper peak 121 MB/s);
-//! * **unaligned** — offsets shifted off the cuboid grid, adding the
-//!   partial-cuboid memory reorganization penalty (paper peak 61 MB/s).
+//! 1. **Figure 10 (a, b, c)** — cutout throughput vs. cutout size for
+//!    the three configurations of the paper's §5 (aligned memory /
+//!    aligned disk / unaligned; 16 parallel requests per measurement).
+//! 2. **Fan-out scaling** — one multi-cuboid cutout served by the
+//!    parallel read engine at 1/2/4/8 workers over the RAID-6 device
+//!    model: the paper's "a single request fans out across spindles"
+//!    claim, measured.
+//! 3. **Cold vs. warm cache** — the same cutout with the sharded LRU
+//!    cuboid cache cleared vs. primed.
 //!
-//! 16 parallel requests per measurement, as in the paper. We report MB/s
-//! of cutout payload; absolute values differ from the paper's hardware
-//! but the ordering (mem > aligned-disk > unaligned), the near-linear
-//! scaling up to ~256K, and the continued slow growth from Morton-run
-//! coalescing must reproduce. The device model runs at time_scale 1.0
-//! (real charged latencies).
+//! Sections 2 and 3 are recorded in `../BENCH_cutout.json` (override
+//! with `OCPD_BENCH_OUT`); the binary rewrites that file on every run.
+//! Paper shape that must reproduce: mem > aligned-disk > unaligned,
+//! near-linear scaling to ~256K (Fig 10); ≥2x at 8-worker fan-out and
+//! ≥5x warm-over-cold (ROADMAP north star: reads as fast as the
+//! hardware allows).
 
 #[path = "common/mod.rs"]
 mod common;
@@ -22,9 +23,9 @@ mod common;
 use std::sync::Arc;
 
 use common::*;
-use ocpd::chunkstore::CuboidStore;
+use ocpd::chunkstore::{CacheConfig, CuboidCache, CuboidStore};
 use ocpd::core::{Box3, DatasetBuilder, Project, Vec3};
-use ocpd::cutout::CutoutService;
+use ocpd::cutout::{CutoutService, ReadConfig};
 use ocpd::ingest::ingest_volume;
 use ocpd::storage::{DeviceProfile, Engine, MemStore, SimulatedStore};
 use ocpd::util::pool::scoped_map;
@@ -104,6 +105,67 @@ fn throughput(svc: &CutoutService, shape: Vec3, aligned: bool, seed: u64) -> f64
     bytes as f64 / 1e6 / secs
 }
 
+// ----------------------------------------------------------------------
+// Sections 2 + 3: the parallel read engine and the cuboid cache
+// ----------------------------------------------------------------------
+
+/// Store over the RAID-6 device model with a cuboid cache, pre-ingested
+/// through the raw memory engine so setup pays no simulated latency.
+fn engine_fixture() -> (Arc<CuboidStore>, Arc<CuboidCache>) {
+    let ds = Arc::new(
+        DatasetBuilder::new("kasthuri_like", DIMS).voxel_nm([3.0, 3.0, 30.0]).levels(1).build(),
+    );
+    let pr = Arc::new(Project::image("img", "kasthuri_like").with_gzip(0));
+    let mem: Engine = Arc::new(MemStore::new());
+    // Ingest straight into the memory engine.
+    let plain = Arc::new(CuboidStore::new(Arc::clone(&ds), Arc::clone(&pr), Arc::clone(&mem)));
+    let vol = em_like_volume(DIMS, 7);
+    ingest_volume(&CutoutService::new(plain), &vol, [512, 512, 16]).unwrap();
+    // Read through the device model, fronted by the cache.
+    let engine: Engine = Arc::new(SimulatedStore::new(mem, DeviceProfile::hdd_array(), 1.0));
+    let cache = Arc::new(CuboidCache::new(CacheConfig {
+        shards: 16,
+        capacity_bytes: 256 << 20,
+    }));
+    let store =
+        Arc::new(CuboidStore::new(ds, pr, engine).with_cache(Arc::clone(&cache)));
+    (store, cache)
+}
+
+/// Median seconds for one cutout of `bx` at the given fan-out width.
+/// Cold runs clear the cache first; warm runs are primed.
+fn timed_read(
+    store: &Arc<CuboidStore>,
+    cache: &Arc<CuboidCache>,
+    workers: usize,
+    warm: bool,
+    bx: Box3,
+) -> f64 {
+    let svc = CutoutService::new(Arc::clone(store)).with_read_config(ReadConfig {
+        workers,
+        parallel_threshold: 1,
+        batches_per_worker: 2,
+    });
+    if warm {
+        let _ = svc.read::<u8>(0, 0, 0, bx).unwrap().len();
+    }
+    median_time(3, || {
+        if !warm {
+            cache.clear();
+        }
+        let _ = svc.read::<u8>(0, 0, 0, bx).unwrap().len();
+    })
+}
+
+struct EngineRow {
+    config: &'static str,
+    cache: &'static str,
+    workers: usize,
+    seconds: f64,
+    mbps: f64,
+    speedup: f64,
+}
+
 fn main() {
     println!("Figure 10: cutout throughput, {PARALLEL} parallel requests, volume {DIMS:?}");
     let mem = service(false);
@@ -131,4 +193,107 @@ fn main() {
         "\npaper shape: mem > aligned-disk > unaligned; near-linear to ~256K,\n\
          then slower growth as Morton runs lengthen (§5, Fig 10)."
     );
+
+    // ------------------------------------------------------------------
+    // Fan-out scaling + cache, recorded to BENCH_cutout.json.
+    // ------------------------------------------------------------------
+    drop(mem);
+    drop(disk);
+    let (store, cache) = engine_fixture();
+    let bx = Box3::new([0, 0, 0], DIMS); // 256 cuboids, 64 MB
+    let bytes = bx.volume() as f64;
+    let mut rows: Vec<EngineRow> = Vec::new();
+
+    header(
+        "Parallel fan-out: one 64M cutout on the RAID-6 model (cold cache)",
+        &["workers", "seconds", "MB/s", "speedup"],
+    );
+    let seq_cold = timed_read(&store, &cache, 1, false, bx);
+    for &w in &[1usize, 2, 4, 8] {
+        let s = if w == 1 { seq_cold } else { timed_read(&store, &cache, w, false, bx) };
+        let r = EngineRow {
+            config: "fanout",
+            cache: "cold",
+            workers: w,
+            seconds: s,
+            mbps: bytes / 1e6 / s,
+            speedup: seq_cold / s,
+        };
+        row(&[
+            w.to_string(),
+            format!("{:.4}", r.seconds),
+            format!("{:.1}", r.mbps),
+            format!("{:.2}x", r.speedup),
+        ]);
+        rows.push(r);
+    }
+
+    header(
+        "Cuboid cache: same cutout, cold vs warm",
+        &["workers", "state", "seconds", "MB/s", "speedup-vs-cold"],
+    );
+    for &w in &[1usize, 8] {
+        let cold = rows
+            .iter()
+            .find(|r| r.workers == w && r.cache == "cold")
+            .map(|r| r.seconds)
+            .unwrap_or(seq_cold);
+        let s = timed_read(&store, &cache, w, true, bx);
+        let r = EngineRow {
+            config: "cache",
+            cache: "warm",
+            workers: w,
+            seconds: s,
+            mbps: bytes / 1e6 / s,
+            speedup: cold / s,
+        };
+        row(&[
+            w.to_string(),
+            "warm".to_string(),
+            format!("{:.4}", r.seconds),
+            format!("{:.1}", r.mbps),
+            format!("{:.2}x", r.speedup),
+        ]);
+        rows.push(r);
+    }
+    let st = cache.status();
+    println!(
+        "\ncache: entries={} bytes={} hit_rate={:.3} evictions={}",
+        st.entries,
+        st.bytes,
+        st.hit_rate(),
+        st.evictions
+    );
+
+    // Rewrite the JSON record.
+    let mut json = String::from("{\n  \"bench\": \"bench_cutout\",\n");
+    json.push_str(&format!(
+        "  \"workload\": {{\"cutout_bytes\": {}, \"cuboids\": 256, \"device\": \"raid6-sata\", \"time_scale\": 1.0}},\n",
+        bx.volume()
+    ));
+    json.push_str(
+        "  \"provenance\": \"measured by cargo bench --bench bench_cutout; \
+         speedup is vs the 1-worker cold-cache read (fanout rows) or the \
+         same-width cold read (cache rows)\",\n",
+    );
+    json.push_str("  \"rows\": [\n");
+    let n = rows.len();
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"config\": \"{}\", \"cache\": \"{}\", \"workers\": {}, \"seconds\": {:.4}, \"mbps\": {:.1}, \"speedup\": {:.2}}}{}\n",
+            r.config,
+            r.cache,
+            r.workers,
+            r.seconds,
+            r.mbps,
+            r.speedup,
+            if i + 1 == n { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    let out = std::env::var("OCPD_BENCH_OUT").unwrap_or_else(|_| "../BENCH_cutout.json".into());
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("\ncould not write {out}: {e}"),
+    }
 }

@@ -10,13 +10,21 @@
 //!   an RLE codec is provided for the ablation bench (§3.2).
 //! * Reads over sorted code sets are coalesced into maximal contiguous
 //!   Morton runs and served by `get_run` — one streaming I/O per run.
+//! * An optional sharded LRU [`CuboidCache`] sits in front of the
+//!   engine: consulted per code on read, populated on miss (with the
+//!   epoch fence of [`cache`]'s invalidation protocol), and invalidated
+//!   by every write.
+
+pub mod cache;
+
+pub use cache::{CacheConfig, CacheMetrics, CacheStatus, CuboidCache};
 
 use std::sync::Arc;
 
 use crate::array::{DenseVolume, VoxelScalar};
 use crate::core::{Dataset, Project, Vec3};
 use crate::morton;
-use crate::storage::Engine;
+use crate::storage::{Blob, Engine};
 use crate::util::{codec, gzip};
 use crate::{Error, Result};
 
@@ -45,19 +53,31 @@ pub struct CuboidStore {
     pub project: Arc<Project>,
     engine: Engine,
     codec: Codec,
+    cache: Option<Arc<CuboidCache>>,
 }
 
 impl CuboidStore {
     pub fn new(dataset: Arc<Dataset>, project: Arc<Project>, engine: Engine) -> Self {
         let codec =
             if project.gzip_level == 0 { Codec::Raw } else { Codec::Gzip(project.gzip_level) };
-        CuboidStore { dataset, project, engine, codec }
+        CuboidStore { dataset, project, engine, codec, cache: None }
     }
 
     /// Override the value codec (ablation bench: gzip vs RLE vs raw).
     pub fn with_codec(mut self, codec: Codec) -> Self {
         self.codec = codec;
         self
+    }
+
+    /// Attach a cuboid cache in front of the engine.
+    pub fn with_cache(mut self, cache: Arc<CuboidCache>) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// The attached cuboid cache, if any.
+    pub fn cache(&self) -> Option<&Arc<CuboidCache>> {
+        self.cache.as_ref()
     }
 
     pub fn engine(&self) -> &Engine {
@@ -137,8 +157,10 @@ impl CuboidStore {
 
     /// Read cuboids for sorted Morton `codes` at `(res, channel)`.
     /// Missing (never-written) cuboids come back as `None` — callers
-    /// treat them as all-zero (lazy allocation). Contiguous code runs are
-    /// fetched with single streaming reads.
+    /// treat them as all-zero (lazy allocation). The cache (when
+    /// attached) resolves what it can; the remainder is coalesced into
+    /// maximal contiguous runs and fetched with single streaming reads,
+    /// then installed in the cache under the epoch fence.
     pub fn read_cuboids<T: VoxelScalar>(
         &self,
         res: u32,
@@ -148,25 +170,58 @@ impl CuboidStore {
         debug_assert!(codes.windows(2).all(|w| w[0] < w[1]), "codes must be sorted unique");
         let shape = self.cuboid_shape(res)?;
         let table = self.project.cuboid_table(res, channel);
-        let runs = morton::coalesce_runs(codes);
-        let mut out: Vec<Option<DenseVolume<T>>> = Vec::with_capacity(codes.len());
-        for run in runs {
-            let got = self.engine.get_run(&table, run.start, run.len)?;
-            let mut it = got.into_iter().peekable();
-            for code in run.start..run.start + run.len {
-                match it.peek() {
-                    Some((k, _)) if *k == code => {
-                        let (_, v) = it.next().unwrap();
-                        out.push(Some(self.unframe(shape, &v)?));
+
+        // Resolve from the cache first; remember which slots are missing.
+        let mut blobs: Vec<Option<Option<Blob>>> = vec![None; codes.len()];
+        let mut missing_at: Vec<usize> = Vec::new();
+        match &self.cache {
+            Some(cache) => {
+                for (i, &code) in codes.iter().enumerate() {
+                    match cache.get(&table, code) {
+                        Some(hit) => blobs[i] = Some(hit),
+                        None => missing_at.push(i),
                     }
-                    _ => out.push(None),
+                }
+            }
+            None => missing_at.extend(0..codes.len()),
+        }
+
+        if !missing_at.is_empty() {
+            let missing: Vec<u64> = missing_at.iter().map(|&i| codes[i]).collect();
+            // Epoch snapshots BEFORE the engine fetch: an invalidation
+            // racing this read fences the insert below.
+            let epochs: Vec<u64> = match &self.cache {
+                Some(cache) => missing.iter().map(|&c| cache.epoch(&table, c)).collect(),
+                None => Vec::new(),
+            };
+            let mut j = 0usize; // cursor into `missing`
+            for run in morton::coalesce_runs(&missing) {
+                let got = self.engine.get_run(&table, run.start, run.len)?;
+                let mut it = got.into_iter().peekable();
+                for code in run.start..run.start + run.len {
+                    let v = match it.peek() {
+                        Some((k, _)) if *k == code => Some(it.next().unwrap().1),
+                        _ => None,
+                    };
+                    if let Some(cache) = &self.cache {
+                        cache.insert_if(&table, code, v.clone(), epochs[j]);
+                    }
+                    blobs[missing_at[j]] = Some(v);
+                    j += 1;
                 }
             }
         }
-        Ok(out)
+
+        blobs
+            .into_iter()
+            .map(|slot| match slot.expect("all slots resolved") {
+                Some(v) => self.unframe(shape, &v).map(Some),
+                None => Ok(None),
+            })
+            .collect()
     }
 
-    /// Read a single cuboid.
+    /// Read a single cuboid (cache-aware).
     pub fn read_cuboid<T: VoxelScalar>(
         &self,
         res: u32,
@@ -175,6 +230,21 @@ impl CuboidStore {
     ) -> Result<Option<DenseVolume<T>>> {
         let shape = self.cuboid_shape(res)?;
         let table = self.project.cuboid_table(res, channel);
+        if let Some(cache) = &self.cache {
+            if let Some(hit) = cache.get(&table, code) {
+                return match hit {
+                    Some(v) => Ok(Some(self.unframe(shape, &v)?)),
+                    None => Ok(None),
+                };
+            }
+            let epoch = cache.epoch(&table, code);
+            let v = self.engine.get(&table, code)?;
+            cache.insert_if(&table, code, v.clone(), epoch);
+            return match v {
+                Some(v) => Ok(Some(self.unframe(shape, &v)?)),
+                None => Ok(None),
+            };
+        }
         match self.engine.get(&table, code)? {
             Some(v) => Ok(Some(self.unframe(shape, &v)?)),
             None => Ok(None),
@@ -182,7 +252,9 @@ impl CuboidStore {
     }
 
     /// Write cuboids as one batch. All-zero cuboids are *deleted* rather
-    /// than stored (lazy allocation invariant).
+    /// than stored (lazy allocation invariant). Every written code is
+    /// invalidated in the cache *after* the engine write, so later reads
+    /// refetch through the engine (and its WAL overlay, when present).
     pub fn write_cuboids<T: VoxelScalar>(
         &self,
         res: u32,
@@ -203,6 +275,11 @@ impl CuboidStore {
         }
         if !batch.is_empty() {
             self.engine.put_batch(&table, &batch)?;
+        }
+        if let Some(cache) = &self.cache {
+            for (code, _) in items {
+                cache.invalidate(&table, *code);
+            }
         }
         Ok(())
     }
@@ -332,6 +409,59 @@ mod tests {
         let stored = s.stored_size(0, 0, 5).unwrap().unwrap();
         assert!(stored <= n + 16, "raw fallback expected, got {stored} for {n}");
         assert_eq!(s.read_cuboid::<u8>(0, 0, 5).unwrap().unwrap(), vol);
+    }
+
+    #[test]
+    fn cached_store_serves_hits_and_negatives_without_engine() {
+        use crate::storage::StorageEngine;
+        let ds = Arc::new(DatasetBuilder::new("t", [512, 512, 64]).levels(1).build());
+        let pr = Arc::new(Project::annotation("ann", "t"));
+        let mem = Arc::new(MemStore::new());
+        let cache = Arc::new(CuboidCache::new(CacheConfig::default()));
+        let s = CuboidStore::new(ds, pr, Arc::clone(&mem) as Engine)
+            .with_cache(Arc::clone(&cache));
+        let shape = s.cuboid_shape(0).unwrap();
+        let mut rng = Rng::new(11);
+        let vol = random_cuboid(&mut rng, shape, 5);
+        s.write_cuboid(0, 0, 4, &vol).unwrap();
+
+        // Cold read populates; codes 3 and 5 are absent → negative entries.
+        let got = s.read_cuboids::<u32>(0, 0, &[3, 4, 5]).unwrap();
+        assert!(got[0].is_none() && got[2].is_none());
+        assert_eq!(got[1].as_ref().unwrap(), &vol);
+        let engine_reads = mem.stats().snapshot();
+
+        // Warm read: engine untouched, all three served by the cache.
+        let again = s.read_cuboids::<u32>(0, 0, &[3, 4, 5]).unwrap();
+        assert_eq!(again[1].as_ref().unwrap(), &vol);
+        assert!(again[0].is_none() && again[2].is_none());
+        assert_eq!(mem.stats().snapshot(), engine_reads, "warm read must not touch engine");
+        assert!(cache.status().hits >= 3);
+    }
+
+    #[test]
+    fn write_invalidates_cache() {
+        let ds = Arc::new(DatasetBuilder::new("t", [512, 512, 64]).levels(1).build());
+        let pr = Arc::new(Project::annotation("ann", "t"));
+        let cache = Arc::new(CuboidCache::new(CacheConfig::default()));
+        let s = CuboidStore::new(ds, pr, Arc::new(MemStore::new()))
+            .with_cache(Arc::clone(&cache));
+        let shape = s.cuboid_shape(0).unwrap();
+        let mut rng = Rng::new(13);
+        let v1 = random_cuboid(&mut rng, shape, 3);
+        let v2 = random_cuboid(&mut rng, shape, 7);
+        s.write_cuboid(0, 0, 8, &v1).unwrap();
+        assert_eq!(s.read_cuboid::<u32>(0, 0, 8).unwrap().unwrap(), v1);
+        s.write_cuboid(0, 0, 8, &v2).unwrap();
+        assert_eq!(
+            s.read_cuboid::<u32>(0, 0, 8).unwrap().unwrap(),
+            v2,
+            "stale cache entry served after overwrite"
+        );
+        // Deleting (all-zero write) invalidates the positive entry too.
+        s.write_cuboid(0, 0, 8, &DenseVolume::<u32>::zeros(shape)).unwrap();
+        assert!(s.read_cuboid::<u32>(0, 0, 8).unwrap().is_none());
+        assert!(cache.status().invalidations >= 3);
     }
 
     #[test]

@@ -177,6 +177,16 @@ pub fn wal_status(base_url: &str) -> Result<String> {
     Ok(String::from_utf8_lossy(&b).to_string())
 }
 
+/// Status of every project's cuboid cache (entries, bytes, hit rate).
+pub fn cache_status(base_url: &str) -> Result<String> {
+    let (s, b) =
+        request("GET", &format!("{}/cache/status/", base_url.trim_end_matches('/')), &[])?;
+    if s != 200 {
+        return Err(Error::Other(format!("http {s}")));
+    }
+    Ok(String::from_utf8_lossy(&b).to_string())
+}
+
 /// Drain write-ahead logs into their database nodes: all of them, or one
 /// project's. Returns the server's `flushed=N` report.
 pub fn wal_flush(base_url: &str, token: Option<&str>) -> Result<String> {

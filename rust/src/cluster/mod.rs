@@ -22,6 +22,13 @@
 //! "dump and restore" migration with a continuous pipeline; an explicit
 //! [`Cluster::migrate_annotation_project`] is now just "flush the log
 //! and drop it".
+//!
+//! Every project also gets a sharded LRU **cuboid cache**
+//! ([`crate::chunkstore::CuboidCache`]) in front of its engine. The
+//! cluster owns the caches (surfaced at `GET /cache/status/` and `ocpd
+//! cache`), and wires the WAL flusher's apply hook to them so draining
+//! a log into a database node invalidates any cached cuboids for the
+//! drained keys — read-your-writes holds end to end.
 
 mod sharded;
 
@@ -31,7 +38,7 @@ use std::collections::HashMap;
 use std::sync::{Arc, RwLock};
 
 use crate::annotation::AnnotationDb;
-use crate::chunkstore::CuboidStore;
+use crate::chunkstore::{CacheConfig, CacheStatus, CuboidCache, CuboidStore};
 use crate::core::{Dataset, Project};
 use crate::cutout::CutoutService;
 use crate::shard::{NodeId, ShardMap};
@@ -71,6 +78,10 @@ pub struct Cluster {
     projects: RwLock<HashMap<String, ProjectHandle>>,
     /// Write-ahead logs of hot projects, by token.
     wals: RwLock<HashMap<String, Arc<Wal>>>,
+    /// Cuboid caches, by project token (the `/cache/status` surface).
+    caches: RwLock<HashMap<String, Arc<CuboidCache>>>,
+    /// Configuration applied to every project's cache.
+    cache_cfg: CacheConfig,
 }
 
 /// Stable FNV-1a hash for SSD placement: a hot project's log node is
@@ -78,12 +89,7 @@ pub struct Cluster {
 /// cluster finds each project's segments on the same SSD node it wrote
 /// them to.
 fn placement_hash(s: &str) -> u64 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
-    for &b in s.as_bytes() {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100_0000_01b3);
-    }
-    h
+    crate::util::fnv1a(&[s.as_bytes()])
 }
 
 impl Cluster {
@@ -112,6 +118,8 @@ impl Cluster {
             datasets: RwLock::new(HashMap::new()),
             projects: RwLock::new(HashMap::new()),
             wals: RwLock::new(HashMap::new()),
+            caches: RwLock::new(HashMap::new()),
+            cache_cfg: CacheConfig::default(),
         })
     }
 
@@ -150,6 +158,8 @@ impl Cluster {
             datasets: RwLock::new(HashMap::new()),
             projects: RwLock::new(HashMap::new()),
             wals: RwLock::new(HashMap::new()),
+            caches: RwLock::new(HashMap::new()),
+            cache_cfg: CacheConfig::default(),
         }))
     }
 
@@ -187,6 +197,8 @@ impl Cluster {
             datasets: RwLock::new(HashMap::new()),
             projects: RwLock::new(HashMap::new()),
             wals: RwLock::new(HashMap::new()),
+            caches: RwLock::new(HashMap::new()),
+            cache_cfg: CacheConfig::default(),
         })
     }
 
@@ -203,16 +215,16 @@ impl Cluster {
     // ------------------------------------------------------------------
 
     /// A token must be unclaimed and must not shadow a reserved
-    /// top-level route name (`/info/`, `/wal/...`). Re-creating an
-    /// existing hot token would be worse than confusing: two [`Wal`]s
-    /// over one chunk table would overwrite each other's durable
-    /// frames. Callers pass the held write guard so check and insert
-    /// are one atomic step.
+    /// top-level route name (`/info/`, `/wal/...`, `/cache/...`).
+    /// Re-creating an existing hot token would be worse than confusing:
+    /// two [`Wal`]s over one chunk table would overwrite each other's
+    /// durable frames. Callers pass the held write guard so check and
+    /// insert are one atomic step.
     fn check_token_free(
         projects: &HashMap<String, ProjectHandle>,
         token: &str,
     ) -> Result<()> {
-        if token == "info" || token == "wal" {
+        if token == "info" || token == "wal" || token == "cache" {
             return Err(Error::BadRequest(format!(
                 "'{token}' is a reserved name and cannot be a project token"
             )));
@@ -260,8 +272,13 @@ impl Cluster {
         let engines: Vec<Engine> =
             self.nodes.iter().map(|n| Arc::clone(&n.engine)).collect();
         let engine: Engine = Arc::new(ShardedEngine::new(map, engines));
-        let store = Arc::new(CuboidStore::new(ds, Arc::new(project.clone()), engine));
+        let cache = Arc::new(CuboidCache::new(self.cache_cfg));
+        let store = Arc::new(
+            CuboidStore::new(ds, Arc::new(project.clone()), engine)
+                .with_cache(Arc::clone(&cache)),
+        );
         let svc = Arc::new(CutoutService::new(store));
+        self.caches.write().unwrap().insert(project.token.clone(), cache);
         projects.insert(project.token.clone(), ProjectHandle::Image(Arc::clone(&svc)));
         Ok(svc)
     }
@@ -295,9 +312,22 @@ impl Cluster {
         } else {
             (dest, None)
         };
-        let store =
-            Arc::new(CuboidStore::new(ds, Arc::new(project.clone()), Arc::clone(&engine)));
+        let cache = Arc::new(CuboidCache::new(self.cache_cfg));
+        if let Some(wal) = &wal {
+            // Flush-side invalidation: when the flusher drains a record
+            // into the database node, any cached cuboid for that key is
+            // dropped before the overlay entry disappears.
+            let hook_cache = Arc::clone(&cache);
+            let hook: Arc<dyn Fn(&str, u64) + Send + Sync> =
+                Arc::new(move |table: &str, key: u64| hook_cache.invalidate(table, key));
+            wal.set_on_apply(Some(hook));
+        }
+        let store = Arc::new(
+            CuboidStore::new(ds, Arc::new(project.clone()), Arc::clone(&engine))
+                .with_cache(Arc::clone(&cache)),
+        );
         let db = Arc::new(AnnotationDb::new_with_wal(store, engine, wal)?);
+        self.caches.write().unwrap().insert(project.token.clone(), cache);
         projects.insert(project.token.clone(), ProjectHandle::Annotation(Arc::clone(&db)));
         Ok(db)
     }
@@ -364,8 +394,16 @@ impl Cluster {
             }
             moved
         };
-        let store = Arc::new(CuboidStore::new(ds, project, Arc::clone(&dst_engine)));
-        let new_db = Arc::new(AnnotationDb::new(store, dst_engine)?);
+        // Rebind with a cleared cache: entries cached through the WAL'd
+        // view are value-identical post-flush, but clearing makes the
+        // rebind trivially stale-free.
+        let cache = self.caches.read().unwrap().get(token).cloned();
+        let mut store = CuboidStore::new(ds, project, Arc::clone(&dst_engine));
+        if let Some(cache) = cache {
+            cache.clear();
+            store = store.with_cache(cache);
+        }
+        let new_db = Arc::new(AnnotationDb::new(Arc::new(store), dst_engine)?);
         self.projects
             .write()
             .unwrap()
@@ -413,6 +451,29 @@ impl Cluster {
             total += w.flush_now()?;
         }
         Ok(total)
+    }
+
+    // ------------------------------------------------------------------
+    // Cuboid caches
+    // ------------------------------------------------------------------
+
+    /// One project's cuboid cache, if it has one.
+    pub fn cache(&self, token: &str) -> Option<Arc<CuboidCache>> {
+        self.caches.read().unwrap().get(token).cloned()
+    }
+
+    /// Status of every project's cuboid cache, by token (the
+    /// `/cache/status` route).
+    pub fn cache_status(&self) -> Vec<(String, CacheStatus)> {
+        let mut v: Vec<(String, CacheStatus)> = self
+            .caches
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, c)| (k.clone(), c.status()))
+            .collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
     }
 
     /// Per-node I/O snapshots (the `ocpd info` CLI and benches).
@@ -588,6 +649,58 @@ mod tests {
         // Reserved route names can never be project tokens.
         assert!(c.create_image_project(Project::image("info", "ds")).is_err());
         assert!(c.create_annotation_project(Project::annotation("wal", "ds"), false).is_err());
+        assert!(c.create_image_project(Project::image("cache", "ds")).is_err());
+    }
+
+    #[test]
+    fn every_project_gets_a_cache_and_status_reports_it() {
+        let c = cluster();
+        c.create_image_project(Project::image("img", "ds")).unwrap();
+        c.create_annotation_project(Project::annotation("ann", "ds"), true).unwrap();
+        assert!(c.cache("img").is_some());
+        assert!(c.cache("ann").is_some());
+        assert!(c.cache("nope").is_none());
+        // Warm the image cache and see counters move.
+        let svc = c.image("img").unwrap();
+        let bx = Box3::new([0, 0, 0], [256, 256, 32]);
+        let mut v = DenseVolume::<u8>::zeros(bx.extent());
+        v.fill_box(bx, 7);
+        svc.write(0, 0, 0, bx, &v).unwrap();
+        let _ = svc.read::<u8>(0, 0, 0, bx).unwrap();
+        let _ = svc.read::<u8>(0, 0, 0, bx).unwrap();
+        let st = c.cache_status();
+        assert_eq!(st.len(), 2);
+        assert_eq!(st[0].0, "ann");
+        assert_eq!(st[1].0, "img");
+        assert!(st[1].1.hits > 0, "second read must hit the cache");
+        assert!(st[1].1.bytes > 0);
+    }
+
+    #[test]
+    fn wal_flush_invalidates_cached_cuboids() {
+        // Write → read (cache warm from the overlay) → flush → read:
+        // the flush hook drops the cached entries, and the refetch from
+        // the database node returns the same (fresh) data — no stale
+        // hits, and invalidations are observable.
+        let c = cluster();
+        let db = c
+            .create_annotation_project(Project::annotation("ann", "ds"), true)
+            .unwrap();
+        let bx = Box3::new([0, 0, 0], [64, 64, 16]);
+        let mut v = DenseVolume::<u32>::zeros(bx.extent());
+        v.fill_box(Box3::new([0, 0, 0], bx.extent()), 5);
+        db.write_volume(0, bx, &v, crate::core::WriteDiscipline::Overwrite).unwrap();
+        assert_eq!(db.cutout.read::<u32>(0, 0, 0, bx).unwrap(), v);
+        let cache = c.cache("ann").unwrap();
+        let before = cache.status();
+        assert!(before.entries > 0, "overlay read must populate the cache");
+        c.flush_wal("ann").unwrap();
+        let after = cache.status();
+        assert!(
+            after.invalidations > before.invalidations,
+            "flush must invalidate drained keys"
+        );
+        assert_eq!(db.cutout.read::<u32>(0, 0, 0, bx).unwrap(), v, "post-flush read fresh");
     }
 
     #[test]

@@ -3,11 +3,14 @@
 //! Wraps the full node engine list plus a [`ShardMap`]; every operation
 //! routes by Morton key to the owning node. Contiguous-run reads split at
 //! shard boundaries ([`ShardMap::route_run`]) so each node still serves
-//! its fragment as one streaming I/O — and concurrent users of a sharded
-//! dataset get parallel access to multiple nodes (§4.1).
+//! its fragment as one streaming I/O — and multi-node reads (`get_run`,
+//! `get_batch`) issue their per-node requests *concurrently* on scoped
+//! threads, so a single cutout fans out across the node set the way the
+//! paper's requests fan out across disk arrays (§4.1).
 
 use crate::shard::ShardMap;
 use crate::storage::{Blob, Engine, IoStats, StorageEngine};
+use crate::util::pool::scoped_map;
 use crate::Result;
 
 /// Routes keys across per-node engines by Morton partition.
@@ -54,8 +57,9 @@ impl StorageEngine for ShardedEngine {
     }
 
     fn get_batch(&self, table: &str, keys: &[u64]) -> Result<Vec<Option<Blob>>> {
-        // Group by node, one batched request per node, then reassemble in
-        // request order.
+        // Group by node, one batched request per node — issued
+        // concurrently when several nodes are involved — then reassemble
+        // in request order.
         let mut out = vec![None; keys.len()];
         let mut per_node: Vec<(usize, Vec<(usize, u64)>)> = Vec::new();
         for (i, &k) in keys.iter().enumerate() {
@@ -65,11 +69,15 @@ impl StorageEngine for ShardedEngine {
                 None => per_node.push((node, vec![(i, k)])),
             }
         }
-        for (node, items) in per_node {
+        let n = per_node.len();
+        let fetched = scoped_map(n, n, |p| {
+            let (node, items) = &per_node[p];
             let ks: Vec<u64> = items.iter().map(|(_, k)| *k).collect();
-            let vs = self.engines[node].get_batch(table, &ks)?;
-            for ((i, _), v) in items.into_iter().zip(vs) {
-                out[i] = v;
+            self.engines[*node].get_batch(table, &ks)
+        });
+        for ((_, items), vs) in per_node.iter().zip(fetched) {
+            for ((i, _), v) in items.iter().zip(vs?) {
+                out[*i] = v;
             }
         }
         Ok(out)
@@ -93,9 +101,18 @@ impl StorageEngine for ShardedEngine {
 
     fn get_run(&self, table: &str, start: u64, len: u64) -> Result<Vec<(u64, Blob)>> {
         self.stats.record_run_read();
+        // A run that straddles shard boundaries reads each node's
+        // fragment concurrently; per-shard sub-runs are disjoint and
+        // ascending, so concatenation preserves key order.
+        let parts = self.map.route_run(start, len);
+        let n = parts.len();
+        let fetched = scoped_map(n, n, |p| {
+            let (node, lo, l) = parts[p];
+            self.engines[node].get_run(table, lo, l)
+        });
         let mut out = Vec::new();
-        for (node, lo, l) in self.map.route_run(start, len) {
-            out.extend(self.engines[node].get_run(table, lo, l)?);
+        for part in fetched {
+            out.extend(part?);
         }
         Ok(out)
     }
@@ -140,6 +157,10 @@ impl StorageEngine for ShardedEngine {
             e.sync()?;
         }
         Ok(())
+    }
+
+    fn shard_map(&self) -> Option<&ShardMap> {
+        Some(&self.map)
     }
 }
 

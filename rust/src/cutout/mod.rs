@@ -3,25 +3,41 @@
 //! System" (§4.2).
 //!
 //! A cutout request specifies a resolution and a range in each dimension.
-//! The service:
+//! The read path is a **parallel fan-out engine** modeled on the paper's
+//! "parallel disk arrays" claim (§4.1 — a single request spreads across
+//! spindles and nodes):
 //!
-//! 1. covers the request box with cuboids,
-//! 2. coalesces their Morton codes into maximal contiguous runs,
-//! 3. fetches each run as a single streaming read ([`crate::chunkstore`]),
-//! 4. assembles the result in memory with contiguous x-run copies.
+//! 1. cover the request box with cuboids and sort their Morton codes,
+//! 2. coalesce the codes into maximal contiguous runs and split each run
+//!    at shard boundaries ([`crate::shard::ShardMap`], via the engine's
+//!    [`shard_map`]) so no batch straddles two nodes,
+//! 3. chop the shard-aligned runs into roughly
+//!    `workers × batches_per_worker` batches ([`ReadConfig`]),
+//! 4. scatter the batches across a scoped worker pool
+//!    (`std::thread::scope`); each worker streams its runs through the
+//!    store ([`crate::chunkstore`], cache-first) and assembles its
+//!    cuboids **directly into disjoint regions of the output volume**,
+//!    so the merge needs no lock,
+//! 5. the store consults the sharded LRU cuboid cache
+//!    ([`crate::chunkstore::CuboidCache`]) before touching the engine.
 //!
-//! Step 4 is the system's memory hot path (§5: unaligned cutouts drop
-//! throughput from 173 to 61 MB/s purely from in-memory reorganization).
-//! [`CutoutService::classify`] reports whether a request is
-//! cuboid-aligned, which the benches use to reproduce Figure 10's three
-//! curves.
+//! The in-memory assembly copy is the system's memory hot path (§5:
+//! unaligned cutouts drop throughput from 173 to 61 MB/s purely from
+//! in-memory reorganization). [`CutoutService::classify`] reports whether
+//! a request is cuboid-aligned, which the benches use to reproduce
+//! Figure 10's three curves; `BENCH_cutout.json` records the fan-out and
+//! cache speedups.
+//!
+//! [`shard_map`]: crate::storage::StorageEngine::shard_map
 
 use std::sync::Arc;
 
 use crate::array::{DenseVolume, Plane, VoxelScalar};
 use crate::chunkstore::CuboidStore;
 use crate::core::{Box3, Vec3};
+use crate::metrics::{Counter, Histogram};
 use crate::morton;
+use crate::util::pool::scoped_map;
 use crate::{Error, Result};
 
 /// Alignment class of a cutout request (Figure 10's configurations).
@@ -35,14 +51,113 @@ pub enum Alignment {
     Unaligned,
 }
 
+/// Tuning knobs for the parallel read engine.
+#[derive(Clone, Copy, Debug)]
+pub struct ReadConfig {
+    /// Fan-out width: scoped worker threads per read (1 = sequential).
+    pub workers: usize,
+    /// Minimum cuboid count before a read fans out; smaller requests run
+    /// on the caller's thread (thread setup would dominate).
+    pub parallel_threshold: usize,
+    /// Batch granularity: runs are chopped so each worker sees about
+    /// this many batches, which load-balances skewed runs.
+    pub batches_per_worker: usize,
+}
+
+impl Default for ReadConfig {
+    fn default() -> Self {
+        let workers =
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8);
+        ReadConfig { workers, parallel_threshold: 4, batches_per_worker: 2 }
+    }
+}
+
+impl ReadConfig {
+    /// A sequential configuration (benches' baseline; also useful under
+    /// an outer parallelism layer).
+    pub fn sequential() -> Self {
+        ReadConfig { workers: 1, ..ReadConfig::default() }
+    }
+
+    /// Fan-out width `n` with defaults elsewhere.
+    pub fn with_workers(n: usize) -> Self {
+        ReadConfig { workers: n.max(1), ..ReadConfig::default() }
+    }
+}
+
+/// Read-engine counters: how often reads fan out and how wide.
+#[derive(Debug, Default)]
+pub struct ReadMetrics {
+    /// Reads served on the caller's thread.
+    pub sequential_reads: Counter,
+    /// Reads scattered across the worker pool.
+    pub parallel_reads: Counter,
+    /// Batches per parallel read (the fan-out width distribution).
+    pub fanout_width: Histogram,
+}
+
+/// Unsynchronized writer into the output volume. Workers copy their
+/// cuboids' voxels into *disjoint* destination boxes — the batch plan
+/// partitions the code set, and distinct cuboids intersect the request
+/// box in disjoint regions — so the merge is lock-free by construction.
+struct RawOut<T> {
+    ptr: *mut T,
+    dims: Vec3,
+}
+
+// Safety: every write through `ptr` targets a region derived from a
+// cuboid owned by exactly one worker (see `plan_batches`), and the
+// allocation outlives the thread scope.
+unsafe impl<T: VoxelScalar> Send for RawOut<T> {}
+unsafe impl<T: VoxelScalar> Sync for RawOut<T> {}
+
+impl<T: VoxelScalar> RawOut<T> {
+    /// Copy `src_box` of `src` to `dst_lo`, x-run at a time — the same
+    /// kernel as [`DenseVolume::copy_box_from`], against the raw output.
+    ///
+    /// Safety: caller guarantees the destination region is disjoint from
+    /// every other concurrent copy and within `dims`.
+    unsafe fn copy_box_from(&self, src: &DenseVolume<T>, src_box: Box3, dst_lo: Vec3) {
+        let e = src_box.extent();
+        let run = e[0] as usize;
+        let src_data = src.as_slice();
+        for dz in 0..e[2] {
+            for dy in 0..e[1] {
+                let si = src.index([src_box.lo[0], src_box.lo[1] + dy, src_box.lo[2] + dz]);
+                let ti = (dst_lo[0]
+                    + self.dims[0]
+                        * ((dst_lo[1] + dy) + self.dims[1] * (dst_lo[2] + dz)))
+                    as usize;
+                std::ptr::copy_nonoverlapping(src_data.as_ptr().add(si), self.ptr.add(ti), run);
+            }
+        }
+    }
+}
+
 /// Cutout reader/writer over one project's cuboid store.
 pub struct CutoutService {
     store: Arc<CuboidStore>,
+    cfg: ReadConfig,
+    /// Read-engine observability (fan-out widths, parallel/sequential
+    /// split); cache counters live on the store's [`CuboidCache`].
+    ///
+    /// [`CuboidCache`]: crate::chunkstore::CuboidCache
+    pub metrics: ReadMetrics,
 }
 
 impl CutoutService {
     pub fn new(store: Arc<CuboidStore>) -> Self {
-        CutoutService { store }
+        CutoutService { store, cfg: ReadConfig::default(), metrics: ReadMetrics::default() }
+    }
+
+    /// Override the read-engine configuration.
+    pub fn with_read_config(mut self, cfg: ReadConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    pub fn read_config(&self) -> ReadConfig {
+        self.cfg
     }
 
     pub fn store(&self) -> &Arc<CuboidStore> {
@@ -65,13 +180,40 @@ impl CutoutService {
         Ok(if bx.is_aligned(shape) { Alignment::Aligned } else { Alignment::Unaligned })
     }
 
-    /// Read the sub-volume `bx` at `(res, channel, timestep)`.
+    /// Read the sub-volume `bx` at `(res, channel, timestep)`, fanning
+    /// out across the worker pool per [`ReadConfig`].
     pub fn read<T: VoxelScalar>(
         &self,
         res: u32,
         channel: u16,
         t: u64,
         bx: Box3,
+    ) -> Result<DenseVolume<T>> {
+        self.read_with_workers(res, channel, t, bx, self.cfg.workers)
+    }
+
+    /// `read` with an explicit fan-out width (1 = sequential). Used by
+    /// [`CutoutService::read_timeseries`], which spends its parallelism
+    /// across timesteps instead, and by the parity tests/benches.
+    pub fn read_with_workers<T: VoxelScalar>(
+        &self,
+        res: u32,
+        channel: u16,
+        t: u64,
+        bx: Box3,
+        workers: usize,
+    ) -> Result<DenseVolume<T>> {
+        self.read_impl(res, channel, t, bx, workers, true)
+    }
+
+    fn read_impl<T: VoxelScalar>(
+        &self,
+        res: u32,
+        channel: u16,
+        t: u64,
+        bx: Box3,
+        workers: usize,
+        record: bool,
     ) -> Result<DenseVolume<T>> {
         self.store.dataset.check_box(res, &bx)?;
         self.store.dataset.check_timestep(t)?;
@@ -90,33 +232,124 @@ impl CutoutService {
         }
         codes.sort_unstable();
 
-        let cuboids = self.store.read_cuboids::<T>(res, channel, &codes)?;
         let mut out = DenseVolume::<T>::zeros(bx.extent());
-        for (code, cub) in codes.iter().zip(cuboids) {
-            let Some(cub) = cub else { continue }; // lazy: absent = zeros
-            let (cx, cy, cz) = self.decode(*code);
-            let cub_box = Box3::at([cx * cshape[0], cy * cshape[1], cz * cshape[2]], cshape);
-            let isect = cub_box.intersect(&bx);
-            if isect.is_empty() {
-                continue;
+        if codes.is_empty() {
+            return Ok(out);
+        }
+
+        // Guaranteed-sequential reads skip batch planning entirely (a
+        // per-timestep call from `read_timeseries` would otherwise plan
+        // and discard on every step).
+        let batches = if workers <= 1 || codes.len() < self.cfg.parallel_threshold {
+            Vec::new()
+        } else {
+            self.plan_batches(&codes, workers)
+        };
+        if batches.len() <= 1 {
+            // Sequential path: one streaming pass, assemble in place.
+            if record {
+                self.metrics.sequential_reads.inc();
             }
-            // Source box within the cuboid; destination offset within out.
-            let src = Box3::new(
-                [
-                    isect.lo[0] - cub_box.lo[0],
-                    isect.lo[1] - cub_box.lo[1],
-                    isect.lo[2] - cub_box.lo[2],
-                ],
-                [
-                    isect.hi[0] - cub_box.lo[0],
-                    isect.hi[1] - cub_box.lo[1],
-                    isect.hi[2] - cub_box.lo[2],
-                ],
-            );
-            let dst = [isect.lo[0] - bx.lo[0], isect.lo[1] - bx.lo[1], isect.lo[2] - bx.lo[2]];
-            out.copy_box_from(&cub, src, dst);
+            let cuboids = self.store.read_cuboids::<T>(res, channel, &codes)?;
+            for (code, cub) in codes.iter().zip(cuboids) {
+                let Some(cub) = cub else { continue }; // lazy: absent = zeros
+                let Some((src, dst)) = self.placement(*code, cshape, &bx) else { continue };
+                out.copy_box_from(&cub, src, dst);
+            }
+            return Ok(out);
+        }
+
+        // Parallel path: scatter batches over scoped workers, each
+        // assembling into its own disjoint region of `out`.
+        if record {
+            self.metrics.parallel_reads.inc();
+            self.metrics.fanout_width.record_value(batches.len() as u64);
+        }
+        let raw = RawOut::<T> { ptr: out.as_mut_slice().as_mut_ptr(), dims: bx.extent() };
+        let results = scoped_map(batches.len(), workers, |b| -> Result<()> {
+            let (lo, hi) = batches[b];
+            let chunk = &codes[lo..hi];
+            let cuboids = self.store.read_cuboids::<T>(res, channel, chunk)?;
+            for (code, cub) in chunk.iter().zip(cuboids) {
+                let Some(cub) = cub else { continue };
+                let Some((src, dst)) = self.placement(*code, cshape, &bx) else { continue };
+                // Safety: batches partition the code set, and distinct
+                // cuboids map to disjoint regions of the output.
+                unsafe { raw.copy_box_from(&cub, src, dst) };
+            }
+            Ok(())
+        });
+        for r in results {
+            r?;
         }
         Ok(out)
+    }
+
+    /// The batch plan: Morton-contiguous, shard-aligned index ranges
+    /// into the sorted code list.
+    ///
+    /// 1. coalesce codes into maximal contiguous runs;
+    /// 2. split each run at shard boundaries (when the engine is a
+    ///    [`crate::cluster::ShardedEngine`]) so a batch never straddles
+    ///    nodes;
+    /// 3. chop runs to at most `ceil(n / (workers × batches_per_worker))`
+    ///    codes so the pool load-balances skewed runs.
+    fn plan_batches(&self, codes: &[u64], workers: usize) -> Vec<(usize, usize)> {
+        let map = self.store.engine().shard_map();
+        let mut bounds: Vec<(usize, usize)> = Vec::new();
+        let mut idx = 0usize;
+        for run in morton::coalesce_runs(codes) {
+            match map {
+                Some(m) => {
+                    for (_node, lo, len) in m.route_run(run.start, run.len) {
+                        let off = (lo - run.start) as usize;
+                        bounds.push((idx + off, idx + off + len as usize));
+                    }
+                }
+                None => bounds.push((idx, idx + run.len as usize)),
+            }
+            idx += run.len as usize;
+        }
+        let target = codes
+            .len()
+            .div_ceil(workers.max(1) * self.cfg.batches_per_worker.max(1))
+            .max(1);
+        let mut out = Vec::new();
+        for (lo, hi) in bounds {
+            let mut cur = lo;
+            while cur < hi {
+                let end = (cur + target).min(hi);
+                out.push((cur, end));
+                cur = end;
+            }
+        }
+        out
+    }
+
+    /// Where `code`'s cuboid lands in the request box: the source box
+    /// within the cuboid and the destination offset within the output.
+    /// `None` when the cuboid does not intersect the box.
+    fn placement(&self, code: u64, cshape: Vec3, bx: &Box3) -> Option<(Box3, Vec3)> {
+        let (cx, cy, cz) = self.decode(code);
+        let cub_box = Box3::at([cx * cshape[0], cy * cshape[1], cz * cshape[2]], cshape);
+        let isect = cub_box.intersect(bx);
+        if isect.is_empty() {
+            return None;
+        }
+        let src = Box3::new(
+            [
+                isect.lo[0] - cub_box.lo[0],
+                isect.lo[1] - cub_box.lo[1],
+                isect.lo[2] - cub_box.lo[2],
+            ],
+            [
+                isect.hi[0] - cub_box.lo[0],
+                isect.hi[1] - cub_box.lo[1],
+                isect.hi[2] - cub_box.lo[2],
+            ],
+        );
+        let dst = [isect.lo[0] - bx.lo[0], isect.lo[1] - bx.lo[1], isect.lo[2] - bx.lo[2]];
+        Some((src, dst))
     }
 
     fn decode(&self, code: u64) -> (u64, u64, u64) {
@@ -232,7 +465,9 @@ impl CutoutService {
 
     /// Time series of a fixed box: one volume per timestep in
     /// `[t_lo, t_hi)` (§3.1: "queries that analyze the time history of a
-    /// smaller region").
+    /// smaller region"). Multi-timestep requests spend the fan-out
+    /// budget *across timesteps* (each per-t read runs sequentially), so
+    /// the engine never nests thread scopes.
     pub fn read_timeseries<T: VoxelScalar>(
         &self,
         res: u32,
@@ -241,6 +476,17 @@ impl CutoutService {
         t_hi: u64,
         bx: Box3,
     ) -> Result<Vec<DenseVolume<T>>> {
+        let nt = t_hi.saturating_sub(t_lo) as usize;
+        if nt >= 2 && self.cfg.workers > 1 {
+            // One parallel read of width nt; the per-timestep inner reads
+            // run on pool workers and are excluded from the counters.
+            self.metrics.parallel_reads.inc();
+            self.metrics.fanout_width.record_value(nt.min(self.cfg.workers) as u64);
+            let results = scoped_map(nt, self.cfg.workers.min(nt), |i| {
+                self.read_impl(res, channel, t_lo + i as u64, bx, 1, false)
+            });
+            return results.into_iter().collect();
+        }
         (t_lo..t_hi).map(|t| self.read(res, channel, t, bx)).collect()
     }
 }
@@ -450,6 +696,113 @@ mod tests {
         let got = svc.read::<u32>(0, 0, 0, whole).unwrap();
         assert_eq!(got.get([30, 30, 4]), 777);
         assert_eq!(got.get([29, 30, 4]), vol.get([29, 30, 4]));
+    }
+
+    #[test]
+    fn parallel_read_matches_sequential_prop() {
+        // The satellite property: 1-worker and 8-worker reads are
+        // byte-identical across aligned, unaligned, and empty boxes.
+        property("parallel_read_parity", 30, |g| {
+            let dims = [160, 160, 48];
+            let svc = service(dims, 1)
+                .with_read_config(ReadConfig { parallel_threshold: 1, ..ReadConfig::default() });
+            let whole = Box3::new([0, 0, 0], dims);
+            let vol = hash_vol(whole);
+            svc.write(0, 0, 0, whole, &vol).unwrap();
+            let cshape = svc.store().cuboid_shape(0).unwrap();
+
+            let (lo, hi) = g.boxed(dims, 120);
+            let unaligned = Box3::new(lo, hi);
+            let aligned = unaligned.align_outward(cshape).intersect(&whole);
+            for bx in [unaligned, aligned] {
+                let seq = svc.read_with_workers::<u32>(0, 0, 0, bx, 1).unwrap();
+                let par = svc.read_with_workers::<u32>(0, 0, 0, bx, 8).unwrap();
+                assert_eq!(seq.as_bytes(), par.as_bytes(), "box {bx:?}");
+                assert_eq!(seq, vol.extract_box(bx), "box {bx:?} vs ground truth");
+            }
+            // Empty boxes are rejected identically on both paths.
+            let empty = Box3::new(lo, lo);
+            assert!(svc.read_with_workers::<u32>(0, 0, 0, empty, 1).is_err());
+            assert!(svc.read_with_workers::<u32>(0, 0, 0, empty, 8).is_err());
+            // A never-written region reads all-zero on both paths.
+            let fresh = service(dims, 1)
+                .with_read_config(ReadConfig { parallel_threshold: 1, ..ReadConfig::default() });
+            let seq = fresh.read_with_workers::<u32>(0, 0, 0, unaligned, 1).unwrap();
+            let par = fresh.read_with_workers::<u32>(0, 0, 0, unaligned, 8).unwrap();
+            assert!(seq.all_zero());
+            assert_eq!(seq, par);
+        });
+    }
+
+    #[test]
+    fn parallel_read_records_fanout_metrics() {
+        let svc = service([256, 256, 32], 1)
+            .with_read_config(ReadConfig { workers: 4, parallel_threshold: 2, batches_per_worker: 2 });
+        let whole = Box3::new([0, 0, 0], [256, 256, 32]);
+        let vol = hash_vol(whole);
+        svc.write(0, 0, 0, whole, &vol).unwrap();
+        assert_eq!(svc.read::<u32>(0, 0, 0, whole).unwrap(), vol);
+        assert_eq!(svc.metrics.parallel_reads.get(), 1);
+        assert!(svc.metrics.fanout_width.count() == 1);
+        // A single-cuboid read stays sequential.
+        let tiny = Box3::new([0, 0, 0], [8, 8, 8]);
+        let _ = svc.read::<u32>(0, 0, 0, tiny).unwrap();
+        assert!(svc.metrics.sequential_reads.get() >= 1);
+    }
+
+    #[test]
+    fn batch_plan_is_shard_aligned_and_covers() {
+        use crate::cluster::ShardedEngine;
+        use crate::shard::ShardMap;
+        use crate::storage::Engine;
+        let ds = Arc::new(DatasetBuilder::new("t", [256, 256, 32]).levels(1).build());
+        let pr = Arc::new(Project::annotation("ann", "t"));
+        let engines: Vec<Engine> =
+            (0..2).map(|_| Arc::new(MemStore::new()) as Engine).collect();
+        let map = ShardMap::even(64, vec![0, 1]).unwrap();
+        let engine: Engine = Arc::new(ShardedEngine::new(map.clone(), engines));
+        let svc = CutoutService::new(Arc::new(CuboidStore::new(ds, pr, engine)))
+            .with_read_config(ReadConfig { workers: 4, parallel_threshold: 1, batches_per_worker: 2 });
+        let codes: Vec<u64> = (0..64).collect(); // spans the split at 32
+        let batches = svc.plan_batches(&codes, 4);
+        // Batches tile the code list in order...
+        let mut cur = 0usize;
+        for &(lo, hi) in &batches {
+            assert_eq!(lo, cur);
+            assert!(hi > lo);
+            cur = hi;
+        }
+        assert_eq!(cur, codes.len());
+        // ...and no batch straddles the shard boundary.
+        for &(lo, hi) in &batches {
+            let first = map.node_for(codes[lo]);
+            assert!(
+                codes[lo..hi].iter().all(|&c| map.node_for(c) == first),
+                "batch {lo}..{hi} straddles shards"
+            );
+        }
+    }
+
+    #[test]
+    fn timeseries_parallel_matches_sequential() {
+        let ds = Arc::new(
+            DatasetBuilder::new("ts", [64, 64, 8]).levels(1).timesteps(6).build(),
+        );
+        let pr = Arc::new(Project::annotation("ann", "ts"));
+        let store = Arc::new(CuboidStore::new(ds, pr, Arc::new(MemStore::new())));
+        let par = CutoutService::new(Arc::clone(&store))
+            .with_read_config(ReadConfig { workers: 4, ..ReadConfig::default() });
+        let seq = CutoutService::new(store).with_read_config(ReadConfig::sequential());
+        let bx = Box3::new([3, 5, 1], [50, 60, 7]);
+        for t in 0..6u64 {
+            let mut v = DenseVolume::<u32>::zeros(bx.extent());
+            v.fill_box(Box3::new([0, 0, 0], bx.extent()), (t + 1) as u32 * 11);
+            par.write(0, 0, t, bx, &v).unwrap();
+        }
+        let a = par.read_timeseries::<u32>(0, 0, 0, 6, bx).unwrap();
+        let b = seq.read_timeseries::<u32>(0, 0, 0, 6, bx).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a[3].get([0, 0, 0]), 44);
     }
 
     #[test]

@@ -8,15 +8,17 @@
 //! The system is a three-layer stack:
 //!
 //! * **Layer 3 (this crate)** — the Rust coordinator: cuboid storage under a
-//!   Morton-order space-filling curve ([`morton`]), the cutout service
-//!   ([`cutout`]), RAMON annotation databases ([`annotation`]) with a sparse
-//!   per-object spatial index ([`spatialindex`]), multi-resolution
-//!   hierarchies ([`resolution`]), Morton-partition sharding across
-//!   heterogeneous node roles ([`shard`], [`cluster`]), an SSD
-//!   write-absorber — a segmented write-ahead log with group commit,
-//!   read-through overlay and background flush to database nodes
-//!   ([`wal`]) — and a RESTful HTTP front end ([`web`]) speaking the URL
-//!   grammar of the paper's Table 1.
+//!   Morton-order space-filling curve ([`morton`]), the parallel cutout
+//!   read engine ([`cutout`]) with its sharded LRU cuboid cache
+//!   ([`chunkstore::CuboidCache`]), RAMON annotation databases
+//!   ([`annotation`]) with a sparse per-object spatial index
+//!   ([`spatialindex`]), multi-resolution hierarchies ([`resolution`]),
+//!   Morton-partition sharding across heterogeneous node roles
+//!   ([`shard`], [`cluster`]), an SSD write-absorber — a segmented
+//!   write-ahead log with group commit, read-through overlay and
+//!   background flush to database nodes ([`wal`]) — and a RESTful HTTP
+//!   front end ([`web`]) speaking the URL grammar of the paper's
+//!   Table 1.
 //! * **Layer 2 (JAX, build time)** — the vision compute graphs (synapse
 //!   detector, gradient-domain color correction, hierarchy down-sampler),
 //!   lowered once to HLO text under `artifacts/`.

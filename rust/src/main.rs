@@ -19,6 +19,10 @@
 //!     Print every hot project's write-log status (depth, segments,
 //!     group-commit batch size, flush lag); with --flush, drain the logs
 //!     into their database nodes first.
+//!
+//! ocpd cache   [--url http://host:port]
+//!     Print every project's cuboid-cache status (entries, bytes, hit
+//!     rate, evictions, invalidations).
 //! ```
 
 use std::collections::HashMap;
@@ -105,6 +109,7 @@ fn cmd_serve(flags: HashMap<String, String>) -> ocpd::Result<()> {
     println!("  GET {}/synapses_v0/objects/type/synapse/confidence/geq/0.9/", server.url());
     println!("  GET {}/wal/status/", server.url());
     println!("  PUT {}/wal/flush/", server.url());
+    println!("  GET {}/cache/status/", server.url());
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
@@ -160,12 +165,18 @@ fn cmd_wal(flags: HashMap<String, String>) -> ocpd::Result<()> {
     Ok(())
 }
 
+fn cmd_cache(flags: HashMap<String, String>) -> ocpd::Result<()> {
+    let url: String = flag(&flags, "url", "http://127.0.0.1:8642".to_string());
+    print!("{}", ocpd::client::cache_status(&url)?);
+    Ok(())
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let (cmd, rest) = match args.split_first() {
         Some((c, r)) => (c.as_str(), r.to_vec()),
         None => {
-            eprintln!("usage: ocpd <serve|detect|info|wal> [flags]");
+            eprintln!("usage: ocpd <serve|detect|info|wal|cache> [flags]");
             std::process::exit(2);
         }
     };
@@ -175,8 +186,9 @@ fn main() {
         "detect" => cmd_detect(flags),
         "info" => cmd_info(flags),
         "wal" => cmd_wal(flags),
+        "cache" => cmd_cache(flags),
         other => {
-            eprintln!("unknown command '{other}' (want serve|detect|info|wal)");
+            eprintln!("unknown command '{other}' (want serve|detect|info|wal|cache)");
             std::process::exit(2);
         }
     };

@@ -49,7 +49,10 @@ impl Gauge {
     }
 }
 
-/// Log-bucketed latency histogram (1us .. ~1000s, 2x buckets).
+/// Log-bucketed histogram (2x buckets). Records either latencies
+/// ([`Histogram::record`], microseconds) or plain values
+/// ([`Histogram::record_value`] — e.g. the cutout engine's fan-out
+/// width); the bucketing is the same.
 #[derive(Debug)]
 pub struct Histogram {
     buckets: Vec<AtomicU64>,
@@ -77,10 +80,15 @@ impl Histogram {
     }
 
     pub fn record(&self, d: Duration) {
-        let us = d.as_micros() as u64;
-        self.buckets[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.record_value(d.as_micros() as u64);
+    }
+
+    /// Record a dimensionless value (fan-out widths, batch sizes); shares
+    /// the log-bucket layout with latency recording.
+    pub fn record_value(&self, v: u64) {
+        self.buckets[Self::bucket_of(v)].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
-        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.sum_us.fetch_add(v, Ordering::Relaxed);
     }
 
     pub fn count(&self) -> u64 {

@@ -10,6 +10,20 @@
 //! same index works on lower-dimensional subspaces. Time series use the
 //! 4-d curve (§3.1); channels are *not* in the index (separate cuboid
 //! spaces per channel).
+//!
+//! ```
+//! use ocpd::morton::{encode3, decode3, runs_in_box3};
+//!
+//! // The curve visits the 2x2x2 neighborhood before moving on...
+//! assert_eq!(encode3(0, 0, 0), 0);
+//! assert_eq!(encode3(1, 1, 1), 7);
+//! // ...so a power-of-two aligned box is one contiguous key run.
+//! let runs = runs_in_box3([0, 0, 0], [4, 4, 4]);
+//! assert_eq!(runs.len(), 1);
+//! assert_eq!(runs[0].len, 64);
+//! // Codes round-trip.
+//! assert_eq!(decode3(encode3(12, 34, 56)), (12, 34, 56));
+//! ```
 
 /// Spread the low 21 bits of `v` so consecutive bits land 3 apart
 /// (for 3-d interleave).
@@ -99,13 +113,28 @@ pub fn decode2(m: u64) -> (u64, u64) {
 /// 3-d Morton encode (x fastest, then y, then z). Supports 21 bits per
 /// axis — a 2M-cuboid-per-axis grid, far beyond any current dataset
 /// (bock11 at full resolution is ~2^10 cuboids per axis).
+///
+/// ```
+/// assert_eq!(ocpd::morton::encode3(1, 0, 0), 1);
+/// assert_eq!(ocpd::morton::encode3(0, 1, 0), 2);
+/// assert_eq!(ocpd::morton::encode3(0, 0, 1), 4);
+/// assert_eq!(ocpd::morton::encode3(2, 0, 0), 8);
+/// ```
 #[inline]
 pub fn encode3(x: u64, y: u64, z: u64) -> u64 {
     debug_assert!(x < (1 << 21) && y < (1 << 21) && z < (1 << 21));
     spread3(x) | (spread3(y) << 1) | (spread3(z) << 2)
 }
 
-/// 3-d Morton decode.
+/// 3-d Morton decode — the exact inverse of [`encode3`] over its 21-bit
+/// domain.
+///
+/// ```
+/// use ocpd::morton::{encode3, decode3};
+/// for (x, y, z) in [(0, 0, 0), (7, 1, 3), (1 << 20, 5, (1 << 21) - 1)] {
+///     assert_eq!(decode3(encode3(x, y, z)), (x, y, z));
+/// }
+/// ```
 #[inline]
 pub fn decode3(m: u64) -> (u64, u64, u64) {
     (compact3(m), compact3(m >> 1), compact3(m >> 2))

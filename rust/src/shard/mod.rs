@@ -6,7 +6,19 @@
 //! of the data distribution and redirects requests to the node that
 //! stores the data." A [`ShardMap`] holds the split points; the router
 //! groups cuboid keys by owning node so each node receives one batched,
-//! Morton-ordered request.
+//! Morton-ordered request. The parallel cutout engine
+//! ([`crate::cutout`]) also uses the map to align its fan-out batches to
+//! shard boundaries, so no batch straddles two nodes.
+//!
+//! ```
+//! use ocpd::shard::ShardMap;
+//!
+//! // 16 keys over 4 nodes — Figure 4's even partition.
+//! let map = ShardMap::even(16, vec![0, 1, 2, 3]).unwrap();
+//! assert_eq!(map.node_for(5), 1);
+//! // A run crossing a boundary splits into per-node sub-runs.
+//! assert_eq!(map.route_run(2, 4), vec![(0, 2, 2), (1, 4, 2)]);
+//! ```
 
 use crate::{Error, Result};
 

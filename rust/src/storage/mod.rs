@@ -137,6 +137,13 @@ pub trait StorageEngine: Send + Sync {
     fn sync(&self) -> Result<()> {
         Ok(())
     }
+
+    /// The Morton partition behind this engine, if it is sharded — the
+    /// parallel cutout engine aligns its fan-out batches to these shard
+    /// boundaries so each worker's run lands wholly on one node.
+    fn shard_map(&self) -> Option<&crate::shard::ShardMap> {
+        None
+    }
 }
 
 /// Shared handle to any engine.

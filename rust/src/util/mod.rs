@@ -12,3 +12,23 @@ pub mod rng;
 
 pub use pool::ThreadPool;
 pub use rng::Rng;
+
+/// FNV-1a over the concatenation of `parts` — the stable, dependency-free
+/// hash shared by cluster placement and the cuboid cache's key mixing.
+///
+/// ```
+/// let a = ocpd::util::fnv1a(&[b"table", &7u64.to_le_bytes()]);
+/// let b = ocpd::util::fnv1a(&[b"table", &8u64.to_le_bytes()]);
+/// assert_ne!(a, b);
+/// assert_eq!(a, ocpd::util::fnv1a(&[b"table", &7u64.to_le_bytes()]));
+/// ```
+pub fn fnv1a(parts: &[&[u8]]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for part in parts {
+        for &b in *part {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
+}

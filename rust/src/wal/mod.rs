@@ -25,6 +25,22 @@
 //! * **Recovery** — [`Wal::open`] replays whatever segments the log
 //!   engine holds, truncating a torn tail frame, and rebuilds the
 //!   overlay, so a crash loses nothing that was group-committed.
+//!
+//! ```
+//! use std::sync::Arc;
+//! use ocpd::storage::{Engine, MemStore};
+//! use ocpd::wal::{Wal, WalConfig};
+//!
+//! let log: Engine = Arc::new(MemStore::new());
+//! let dest: Engine = Arc::new(MemStore::new());
+//! let cfg = WalConfig { background_flush: false, ..WalConfig::default() };
+//! let wal = Wal::open("demo", log, Arc::clone(&dest), cfg).unwrap();
+//! wal.append(vec![("demo/cub".into(), 7, Some(vec![1, 2, 3]))]).unwrap();
+//! assert_eq!(wal.depth(), 1); // absorbed by the log, not yet drained
+//! assert!(dest.get("demo/cub", 7).unwrap().is_none());
+//! wal.flush_now().unwrap(); // drain into the database node
+//! assert!(dest.get("demo/cub", 7).unwrap().is_some());
+//! ```
 
 pub mod engine;
 pub mod record;
@@ -166,6 +182,11 @@ pub struct Wal {
     overlay: RwLock<OverlayMap>,
     /// Serializes drains (background flusher vs. explicit flush).
     flush_lock: Mutex<()>,
+    /// Called with `(table, key)` for every record the flusher applies
+    /// to the destination engine — the cuboid cache invalidates here so
+    /// a drain can never leave a stale cached value in front of the
+    /// database node.
+    on_apply: RwLock<Option<Arc<dyn Fn(&str, u64) + Send + Sync>>>,
     /// Append time of the oldest unflushed record (flush-lag probe).
     oldest_pending: Mutex<Option<Instant>>,
     pub metrics: WalMetrics,
@@ -256,6 +277,7 @@ impl Wal {
             commit_cv: Condvar::new(),
             overlay: RwLock::new(overlay),
             flush_lock: Mutex::new(()),
+            on_apply: RwLock::new(None),
             oldest_pending: Mutex::new(if replayed > 0 { Some(Instant::now()) } else { None }),
             metrics: WalMetrics::default(),
             stop: AtomicBool::new(false),
@@ -305,6 +327,17 @@ impl Wal {
     /// Unflushed records currently absorbed by the log.
     pub fn depth(&self) -> u64 {
         self.metrics.depth.get()
+    }
+
+    /// Install the flush-apply hook: called with `(table, key)` for
+    /// every record a drain applies to the destination engine. The
+    /// cluster points this at the project's [`CuboidCache`] so
+    /// flush-side invalidation keeps read-your-writes intact for any
+    /// reader of the database node.
+    ///
+    /// [`CuboidCache`]: crate::chunkstore::CuboidCache
+    pub fn set_on_apply(&self, hook: Option<Arc<dyn Fn(&str, u64) + Send + Sync>>) {
+        *self.on_apply.write().unwrap() = hook;
     }
 
     // ------------------------------------------------------------------
@@ -593,6 +626,7 @@ impl Wal {
         let mut items: Vec<(String, BTreeMap<u64, WalRecord>)> = by_table.into_iter().collect();
         items.sort_by(|a, b| a.0.cmp(&b.0));
 
+        let on_apply = self.on_apply.read().unwrap().clone();
         for (table, entries) in items {
             let mut puts: Vec<(u64, Vec<u8>)> = Vec::new();
             let mut dels: Vec<u64> = Vec::new();
@@ -611,6 +645,14 @@ impl Wal {
             }
             for k in dels {
                 self.dest.delete(&table, k)?;
+            }
+            // Invalidate caches in front of the destination before the
+            // overlay entries come out, so no read window exists where a
+            // stale cached value masks the freshly-applied one.
+            if let Some(hook) = &on_apply {
+                for (key, _) in &applied {
+                    hook(&table, *key);
+                }
             }
             // Drop overlay entries this apply made redundant. A newer
             // write sitting in a later (possibly active) segment keeps

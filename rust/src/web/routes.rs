@@ -47,10 +47,12 @@ impl OcpService {
         }
         match (req.method.as_str(), segs[0]) {
             (_, "info") => self.info(),
-            // `wal` is a reserved top-level name (like `info`): the
-            // write-absorber's observability and control surface.
+            // `wal` and `cache` are reserved top-level names (like
+            // `info`): the write-absorber's and the cuboid cache's
+            // observability surfaces.
             ("GET", "wal") => self.wal_get(&segs[1..]),
             ("PUT" | "POST", "wal") => self.wal_flush(&segs[1..]),
+            ("GET", "cache") => self.cache_get(&segs[1..]),
             ("GET", token) => self.get(token, &segs[1..]),
             ("PUT" | "POST", token) => self.put(token, &segs[1..], &req.body),
             _ => Ok(Response::error(405, "method not allowed")),
@@ -101,6 +103,39 @@ impl OcpService {
                 Ok(Response::text(format!("flushed={n}")))
             }
             _ => Err(Error::BadRequest(format!("unrecognized PUT /wal/{}", rest.join("/")))),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Cache routes
+    // ------------------------------------------------------------------
+
+    /// GET /cache/status/ — one line per project's cuboid cache.
+    fn cache_get(&self, rest: &[&str]) -> Result<Response> {
+        match rest {
+            ["status"] => {
+                let mut out = String::from("cache:\n");
+                for (token, s) in self.cluster.cache_status() {
+                    out.push_str(&format!(
+                        "  {token}: entries={} bytes={}/{} shards={} hits={} misses={} \
+                         hit_rate={:.3} inserts={} evictions={} invalidations={}\n",
+                        s.entries,
+                        s.bytes,
+                        s.capacity_bytes,
+                        s.shards,
+                        s.hits,
+                        s.misses,
+                        s.hit_rate(),
+                        s.inserts,
+                        s.evictions,
+                        s.invalidations
+                    ));
+                }
+                Ok(Response::text(out))
+            }
+            _ => {
+                Err(Error::BadRequest(format!("unrecognized GET /cache/{}", rest.join("/"))))
+            }
         }
     }
 

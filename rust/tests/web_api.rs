@@ -216,6 +216,28 @@ fn wal_status_and_flush_routes() {
 }
 
 #[test]
+fn cache_status_route_reports_per_project_caches() {
+    let f = fixture();
+    // A repeated cutout warms the image project's cuboid cache.
+    let client = OcpClient::new(&f.server.url(), "img");
+    let bx = Box3::new([0, 0, 0], [128, 128, 16]);
+    let _ = client.cutout_u8(0, bx).unwrap();
+    let _ = client.cutout_u8(0, bx).unwrap();
+    let status = ocpd::client::cache_status(&f.server.url()).unwrap();
+    assert!(status.contains("img:"), "{status}");
+    assert!(status.contains("ann:"), "{status}");
+    assert!(status.contains("hit_rate="), "{status}");
+    // The warm second read registered hits.
+    let img_line = status.lines().find(|l| l.trim_start().starts_with("img:")).unwrap();
+    assert!(!img_line.contains("hits=0 "), "{img_line}");
+    // Unknown cache sub-routes are 400; the name is reserved, so it can
+    // never be shadowed by a project token.
+    let (code, _) =
+        request("GET", &format!("{}/cache/nope/", f.server.url()), &[]).unwrap();
+    assert_eq!(code, 400);
+}
+
+#[test]
 fn parallel_http_cutouts_consistent() {
     let f = Arc::new(fixture());
     let handles: Vec<_> = (0..8)
