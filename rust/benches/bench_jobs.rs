@@ -1,0 +1,179 @@
+//! Batch compute engine throughput: propagation and synapse-detection
+//! blocks/sec at 1/2/4/8 workers — the job-engine analogue of §2's "20
+//! parallel instances" scaling claim.
+//!
+//! Synapse-detect rows need the AOT artifacts (`make artifacts`); when
+//! the runtime cannot load, those rows are skipped and noted in the
+//! output. Prints the table and rewrites `../BENCH_jobs.json` (override
+//! with `OCPD_BENCH_OUT`).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use common::*;
+use ocpd::annotation::AnnotationDb;
+use ocpd::chunkstore::CuboidStore;
+use ocpd::core::{Box3, DatasetBuilder, Project, WriteDiscipline};
+use ocpd::cutout::CutoutService;
+use ocpd::ingest::{generate, ingest_volume, SynthSpec};
+use ocpd::jobs::{JobConfig, JobManager, JobSpec, JobState, PropagateJob, SynapseDetectJob};
+use ocpd::runtime::{artifact_dir, Runtime};
+use ocpd::storage::{Engine, MemStore};
+use ocpd::vision::SynapsePipeline;
+
+const WORKER_COUNTS: [usize; 4] = [1, 2, 4, 8];
+const PROP_DIMS: [u64; 3] = [512, 256, 32];
+const SYN_DIMS: [u64; 3] = [512, 512, 16];
+
+struct Row {
+    job: &'static str,
+    workers: usize,
+    blocks: u64,
+    seconds: f64,
+}
+
+impl Row {
+    fn blocks_per_sec(&self) -> f64 {
+        self.blocks as f64 / self.seconds.max(1e-9)
+    }
+}
+
+/// Annotation database over small cuboids so propagation has plenty of
+/// blocks to schedule.
+fn labeled_db(dims: [u64; 3]) -> Arc<AnnotationDb> {
+    let ds = Arc::new(
+        DatasetBuilder::new("b", dims)
+            .levels(3)
+            .cuboids([32, 32, 8], [16, 16, 16])
+            .build(),
+    );
+    let pr = Arc::new(Project::annotation("ann", "b"));
+    let engine: Engine = Arc::new(MemStore::new());
+    let store = Arc::new(CuboidStore::new(ds, pr, Arc::clone(&engine)));
+    let db = Arc::new(AnnotationDb::new(store, engine).unwrap());
+    let labels = dense_labels(dims, 16, 7);
+    db.write_volume(0, Box3::new([0, 0, 0], dims), &labels, WriteDiscipline::Overwrite)
+        .unwrap();
+    db
+}
+
+/// Run one job to completion and return (blocks, seconds).
+fn run(spec: Arc<dyn JobSpec>, workers: usize) -> (u64, f64) {
+    let m = JobManager::new(Arc::new(MemStore::new()));
+    let t0 = Instant::now();
+    let h = m.submit(spec, JobConfig::with_workers(workers)).unwrap();
+    assert_eq!(h.wait(), JobState::Completed, "{:?}", h.status().error);
+    (h.status().completed_blocks, t0.elapsed().as_secs_f64())
+}
+
+fn main() {
+    let mut rows: Vec<Row> = Vec::new();
+    header(
+        "Batch compute engine: blocks/sec vs. workers",
+        &["job", "workers", "blocks", "seconds", "blocks/s"],
+    );
+
+    // Propagation: fresh labeled volume per worker count (each run
+    // builds the full hierarchy from scratch).
+    for &workers in &WORKER_COUNTS {
+        let db = labeled_db(PROP_DIMS);
+        let (blocks, seconds) =
+            run(Arc::new(PropagateJob::annotation(db)), workers);
+        let r = Row { job: "propagate", workers, blocks, seconds };
+        row(&[
+            r.job.to_string(),
+            r.workers.to_string(),
+            r.blocks.to_string(),
+            format!("{:.3}", r.seconds),
+            format!("{:.1}", r.blocks_per_sec()),
+        ]);
+        rows.push(r);
+    }
+
+    // Synapse detection: needs the AOT artifacts.
+    match Runtime::load_dir(artifact_dir()) {
+        Ok(rt) => {
+            let rt = Arc::new(rt);
+            let ds = Arc::new(DatasetBuilder::new("s", SYN_DIMS).levels(1).build());
+            let pr = Arc::new(Project::image("img", "s"));
+            let img = Arc::new(CutoutService::new(Arc::new(CuboidStore::new(
+                Arc::clone(&ds),
+                pr,
+                Arc::new(MemStore::new()),
+            ))));
+            let sv = generate(&SynthSpec::small(SYN_DIMS, 7));
+            ingest_volume(&img, &sv.vol, [256, 256, 16]).unwrap();
+            let region = Box3::new([0, 0, 0], SYN_DIMS);
+            for &workers in &WORKER_COUNTS {
+                // Fresh annotation target per run (no duplicate objects).
+                let apr = Arc::new(Project::annotation("syn", "s"));
+                let aeng: Engine = Arc::new(MemStore::new());
+                let astore =
+                    Arc::new(CuboidStore::new(Arc::clone(&ds), apr, Arc::clone(&aeng)));
+                let anno = Arc::new(AnnotationDb::new(astore, aeng).unwrap());
+                let pipeline = Arc::new(SynapsePipeline::new(
+                    Arc::clone(&rt),
+                    Arc::clone(&img),
+                    anno,
+                ));
+                let (blocks, seconds) =
+                    run(Arc::new(SynapseDetectJob::new(pipeline, 0, region)), workers);
+                let r = Row { job: "synapse", workers, blocks, seconds };
+                row(&[
+                    r.job.to_string(),
+                    r.workers.to_string(),
+                    r.blocks.to_string(),
+                    format!("{:.3}", r.seconds),
+                    format!("{:.1}", r.blocks_per_sec()),
+                ]);
+                rows.push(r);
+            }
+        }
+        Err(e) => {
+            println!("\n(synapse rows skipped: no runtime — {e})");
+        }
+    }
+
+    // Scaling sanity: more workers must not be slower than one worker
+    // by any large margin (lock-step scheduling bugs show up here).
+    let p1 = rows
+        .iter()
+        .find(|r| r.job == "propagate" && r.workers == 1)
+        .map(Row::blocks_per_sec)
+        .unwrap();
+    let p8 = rows
+        .iter()
+        .find(|r| r.job == "propagate" && r.workers == 8)
+        .map(Row::blocks_per_sec)
+        .unwrap();
+    println!("\npropagate 8-worker vs 1-worker: {:.1} vs {:.1} blocks/s ({:.2}x)", p8, p1, p8 / p1);
+
+    // Machine-readable results.
+    let out = std::env::var("OCPD_BENCH_OUT").unwrap_or_else(|_| "../BENCH_jobs.json".into());
+    let mut json = String::from("{\n  \"bench\": \"bench_jobs\",\n");
+    json.push_str(&format!(
+        "  \"workload\": {{\"propagate_dims\": {PROP_DIMS:?}, \"synapse_dims\": {SYN_DIMS:?}}},\n"
+    ));
+    json.push_str("  \"provenance\": \"measured by cargo bench --bench bench_jobs\",\n");
+    json.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"job\": \"{}\", \"workers\": {}, \"blocks\": {}, \"seconds\": {:.4}, \
+             \"blocks_per_sec\": {:.1}}}{}\n",
+            r.job,
+            r.workers,
+            r.blocks,
+            r.seconds,
+            r.blocks_per_sec(),
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

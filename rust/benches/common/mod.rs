@@ -2,6 +2,10 @@
 //! vendor set — each bench is a `harness = false` binary that prints the
 //! rows of the paper table/figure it regenerates).
 
+// Each bench compiles this module into its own crate and uses a subset
+// of the helpers; the unused remainder is not dead code.
+#![allow(dead_code)]
+
 use std::time::Instant;
 
 use ocpd::array::DenseVolume;

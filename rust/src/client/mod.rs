@@ -201,3 +201,46 @@ pub fn wal_flush(base_url: &str, token: Option<&str>) -> Result<String> {
     }
     Ok(String::from_utf8_lossy(&b).to_string())
 }
+
+/// Submit a batch compute job. `spec` is the submit path after `/jobs/`
+/// (e.g. `propagate/synapses_v0` or `synapse/synth/synapses_v0`);
+/// `params` is the whitespace-separated `key=value` body (`workers=N`,
+/// `job=ID` to resume, `dims=X,Y,Z` for ingest, ...). Returns the
+/// server's `id=N name=... state=...` report.
+pub fn submit_job(base_url: &str, spec: &str, params: &str) -> Result<String> {
+    let url = format!(
+        "{}/jobs/{}/",
+        base_url.trim_end_matches('/'),
+        spec.trim_matches('/')
+    );
+    let (s, b) = request("POST", &url, params.as_bytes())?;
+    if s != 200 {
+        return Err(Error::Other(format!("http {s}: {}", String::from_utf8_lossy(&b))));
+    }
+    Ok(String::from_utf8_lossy(&b).to_string())
+}
+
+/// Status of every job, or one job by id.
+pub fn job_status(base_url: &str, id: Option<u64>) -> Result<String> {
+    let base = base_url.trim_end_matches('/');
+    let url = match id {
+        Some(id) => format!("{base}/jobs/status/{id}/"),
+        None => format!("{base}/jobs/status/"),
+    };
+    let (s, b) = request("GET", &url, &[])?;
+    if s != 200 {
+        return Err(Error::Other(format!("http {s}: {}", String::from_utf8_lossy(&b))));
+    }
+    Ok(String::from_utf8_lossy(&b).to_string())
+}
+
+/// Cancel a job. The checkpoint journal survives, so resubmitting the
+/// id (`job=ID`) resumes from the last completed block.
+pub fn cancel_job(base_url: &str, id: u64) -> Result<String> {
+    let url = format!("{}/jobs/cancel/{id}/", base_url.trim_end_matches('/'));
+    let (s, b) = request("POST", &url, &[])?;
+    if s != 200 {
+        return Err(Error::Other(format!("http {s}: {}", String::from_utf8_lossy(&b))));
+    }
+    Ok(String::from_utf8_lossy(&b).to_string())
+}

@@ -41,6 +41,7 @@ use crate::annotation::AnnotationDb;
 use crate::chunkstore::{CacheConfig, CacheStatus, CuboidCache, CuboidStore};
 use crate::core::{Dataset, Project};
 use crate::cutout::CutoutService;
+use crate::jobs::JobManager;
 use crate::shard::{NodeId, ShardMap};
 use crate::storage::{migrate, DeviceProfile, Engine, MemStore, SimulatedStore};
 use crate::wal::{Wal, WalConfig, WalEngine, WalStatus};
@@ -82,6 +83,10 @@ pub struct Cluster {
     caches: RwLock<HashMap<String, Arc<CuboidCache>>>,
     /// Configuration applied to every project's cache.
     cache_cfg: CacheConfig,
+    /// The batch compute engine (the `/jobs/...` surface). Checkpoint
+    /// journals live on the first database node, so a persistent
+    /// cluster's jobs resume across restarts.
+    jobs: JobManager,
 }
 
 /// Stable FNV-1a hash for SSD placement: a hot project's log node is
@@ -113,6 +118,7 @@ impl Cluster {
                 engine: Arc::new(MemStore::new()),
             });
         }
+        let jobs = JobManager::new(Arc::clone(&nodes[0].engine));
         Arc::new(Cluster {
             nodes,
             datasets: RwLock::new(HashMap::new()),
@@ -120,6 +126,7 @@ impl Cluster {
             wals: RwLock::new(HashMap::new()),
             caches: RwLock::new(HashMap::new()),
             cache_cfg: CacheConfig::default(),
+            jobs,
         })
     }
 
@@ -153,6 +160,7 @@ impl Cluster {
                     as Engine,
             });
         }
+        let jobs = JobManager::new(Arc::clone(&nodes[0].engine));
         Ok(Arc::new(Cluster {
             nodes,
             datasets: RwLock::new(HashMap::new()),
@@ -160,6 +168,7 @@ impl Cluster {
             wals: RwLock::new(HashMap::new()),
             caches: RwLock::new(HashMap::new()),
             cache_cfg: CacheConfig::default(),
+            jobs,
         }))
     }
 
@@ -192,6 +201,7 @@ impl Cluster {
                 )) as Engine,
             });
         }
+        let jobs = JobManager::new(Arc::clone(&nodes[0].engine));
         Arc::new(Cluster {
             nodes,
             datasets: RwLock::new(HashMap::new()),
@@ -199,6 +209,7 @@ impl Cluster {
             wals: RwLock::new(HashMap::new()),
             caches: RwLock::new(HashMap::new()),
             cache_cfg: CacheConfig::default(),
+            jobs,
         })
     }
 
@@ -215,16 +226,16 @@ impl Cluster {
     // ------------------------------------------------------------------
 
     /// A token must be unclaimed and must not shadow a reserved
-    /// top-level route name (`/info/`, `/wal/...`, `/cache/...`).
-    /// Re-creating an existing hot token would be worse than confusing:
-    /// two [`Wal`]s over one chunk table would overwrite each other's
-    /// durable frames. Callers pass the held write guard so check and
-    /// insert are one atomic step.
+    /// top-level route name (`/info/`, `/wal/...`, `/cache/...`,
+    /// `/jobs/...`). Re-creating an existing hot token would be worse
+    /// than confusing: two [`Wal`]s over one chunk table would overwrite
+    /// each other's durable frames. Callers pass the held write guard so
+    /// check and insert are one atomic step.
     fn check_token_free(
         projects: &HashMap<String, ProjectHandle>,
         token: &str,
     ) -> Result<()> {
-        if token == "info" || token == "wal" || token == "cache" {
+        if token == "info" || token == "wal" || token == "cache" || token == "jobs" {
             return Err(Error::BadRequest(format!(
                 "'{token}' is a reserved name and cannot be a project token"
             )));
@@ -454,6 +465,17 @@ impl Cluster {
     }
 
     // ------------------------------------------------------------------
+    // Batch compute jobs
+    // ------------------------------------------------------------------
+
+    /// The batch compute engine: submit, inspect, and cancel jobs
+    /// (`POST /jobs/{type}`, `GET /jobs/status/`, `POST
+    /// /jobs/cancel/{id}`, `ocpd jobs`).
+    pub fn jobs(&self) -> &JobManager {
+        &self.jobs
+    }
+
+    // ------------------------------------------------------------------
     // Cuboid caches
     // ------------------------------------------------------------------
 
@@ -650,6 +672,30 @@ mod tests {
         assert!(c.create_image_project(Project::image("info", "ds")).is_err());
         assert!(c.create_annotation_project(Project::annotation("wal", "ds"), false).is_err());
         assert!(c.create_image_project(Project::image("cache", "ds")).is_err());
+        assert!(c.create_image_project(Project::image("jobs", "ds")).is_err());
+    }
+
+    #[test]
+    fn cluster_runs_a_propagate_job() {
+        use crate::jobs::{JobConfig, JobState, PropagateJob};
+        let c = cluster();
+        let db = c
+            .create_annotation_project(Project::annotation("ann", "ds"), false)
+            .unwrap();
+        let bx = Box3::new([32, 32, 4], [96, 96, 12]);
+        let mut v = DenseVolume::<u32>::zeros(bx.extent());
+        v.fill_box(Box3::new([0, 0, 0], bx.extent()), 42);
+        db.write_volume(0, bx, &v, WriteDiscipline::Overwrite).unwrap();
+        let spec = Arc::new(PropagateJob::annotation(Arc::clone(&db)));
+        let h = c.jobs().submit(spec, JobConfig::with_workers(2)).unwrap();
+        assert_eq!(h.wait(), JobState::Completed);
+        // Level 1 holds the half-scale object.
+        let out = db.cutout.read::<u32>(1, 0, 0, Box3::new([16, 16, 4], [48, 48, 12])).unwrap();
+        assert_eq!(out.count_eq(42), 32 * 32 * 8);
+        // The job is visible on the cluster's status surface.
+        let st = c.jobs().statuses();
+        assert_eq!(st.len(), 1);
+        assert!(st[0].name.starts_with("propagate/ann"));
     }
 
     #[test]

@@ -187,6 +187,32 @@ fn paint_gaussian(acc: &mut [f64], d: Vec3, c: Vec3, sigma: [f64; 3], amp: f64) 
     }
 }
 
+/// Block boxes tiling `[0, dims)` in `block`-sized steps, z-major order
+/// — the bulk-ingest unit, shared by [`ingest_volume`] and the batch
+/// job engine's [`crate::jobs::BulkIngestJob`] so both walk the exact
+/// same block sequence.
+pub fn block_boxes(dims: Vec3, block: Vec3) -> Vec<Box3> {
+    let block = [block[0].max(1), block[1].max(1), block[2].max(1)];
+    let mut out = Vec::new();
+    let mut z = 0;
+    while z < dims[2] {
+        let ze = (z + block[2]).min(dims[2]);
+        let mut y = 0;
+        while y < dims[1] {
+            let ye = (y + block[1]).min(dims[1]);
+            let mut x = 0;
+            while x < dims[0] {
+                let xe = (x + block[0]).min(dims[0]);
+                out.push(Box3::new([x, y, z], [xe, ye, ze]));
+                x = xe;
+            }
+            y = ye;
+        }
+        z = ze;
+    }
+    out
+}
+
 /// Bulk-ingest a volume into an image project in cuboid-aligned blocks —
 /// the "image data streamed from the instruments" path (§4.1). Returns
 /// bytes ingested.
@@ -195,26 +221,11 @@ pub fn ingest_volume(
     vol: &DenseVolume<u8>,
     block: Vec3,
 ) -> Result<u64> {
-    let d = vol.dims();
     let mut bytes = 0u64;
-    let mut z = 0;
-    while z < d[2] {
-        let mut y = 0;
-        let ze = (z + block[2]).min(d[2]);
-        while y < d[1] {
-            let mut x = 0;
-            let ye = (y + block[1]).min(d[1]);
-            while x < d[0] {
-                let xe = (x + block[0]).min(d[0]);
-                let bx = Box3::new([x, y, z], [xe, ye, ze]);
-                let sub = vol.extract_box(bx);
-                bytes += sub.len() as u64;
-                svc.write(0, 0, 0, bx, &sub)?;
-                x = xe;
-            }
-            y = ye;
-        }
-        z = ze;
+    for bx in block_boxes(vol.dims(), block) {
+        let sub = vol.extract_box(bx);
+        bytes += sub.len() as u64;
+        svc.write(0, 0, 0, bx, &sub)?;
     }
     Ok(bytes)
 }
@@ -263,6 +274,20 @@ mod tests {
         };
         // Adjacent sections differ by ~exposure_amp.
         assert!((mean(0) - mean(1)).abs() > 15.0, "{} vs {}", mean(0), mean(1));
+    }
+
+    #[test]
+    fn block_boxes_tile_exactly() {
+        let dims = [100u64, 64, 17];
+        let boxes = block_boxes(dims, [64, 64, 16]);
+        // Tiles cover every voxel exactly once.
+        let total: u64 = boxes.iter().map(|b| b.volume()).sum();
+        assert_eq!(total, dims[0] * dims[1] * dims[2]);
+        for w in boxes.windows(2) {
+            assert_ne!(w[0], w[1]);
+        }
+        // Degenerate block extents are clamped, not an infinite loop.
+        assert_eq!(block_boxes([4, 4, 4], [0, 0, 0]).len(), 64);
     }
 
     #[test]

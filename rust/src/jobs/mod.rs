@@ -1,0 +1,917 @@
+//! The batch compute engine: checkpointed, parallel background jobs over
+//! the cluster — the layer the paper's workloads actually ran on.
+//!
+//! §2's synapse workload ran "20 parallel instances ... in less than 3
+//! days"; §3.1 builds annotation hierarchies "as a background, batch I/O
+//! job". The seed executed both as one-shot synchronous calls on the
+//! caller's thread. This subsystem turns them into first-class *jobs*:
+//!
+//! * **Blocks** — a [`JobSpec`] partitions its work into haloed,
+//!   cuboid-aligned blocks ([`JobBlock`]), each independently executable
+//!   and idempotent (or guarded by the journal, below).
+//! * **Shard affinity** — blocks carry the node owning their first
+//!   cuboid (via the engine's [`crate::shard::ShardMap`]); the scheduler
+//!   keeps one queue per node and workers prefer "their" queue, so a
+//!   worker's cutouts stay node-local, stealing only when idle.
+//! * **Phases** — blocks carry a phase number; phases execute in
+//!   ascending order with a barrier between them, so a later phase may
+//!   consume earlier phases' output ([`PropagateJob`]'s banded pyramid
+//!   reads the level the previous band built).
+//! * **Checkpoint journal** — every completed block appends one
+//!   CRC32-framed record (reusing [`crate::wal::record`]'s framing) to a
+//!   per-job chunk table. A killed job resumes from the journal: intact
+//!   frames name the blocks already done, torn tails drop cleanly, and
+//!   the resumed run re-executes only the remainder — block outputs are
+//!   deterministic, so the final volumes are identical to an
+//!   uninterrupted run.
+//! * **Jobs as objects** — [`JobManager`] registers every job under a
+//!   numeric id with live [`JobStatus`] (state, progress, throughput,
+//!   latency percentiles, retries), surfaced at `POST /jobs/{type}`,
+//!   `GET /jobs/status/`, `POST /jobs/cancel/{id}` and `ocpd jobs`.
+//!
+//! The three shipped specs ([`specs`]) are the paper's workloads:
+//! [`PropagateJob`] (resolution-hierarchy builds, reusing each level as
+//! the next level's input), [`SynapseDetectJob`] (the §2 vision
+//! pipeline, per-block), and [`BulkIngestJob`] (chunked synthetic-EM
+//! ingest).
+
+pub mod specs;
+
+pub use specs::{BulkIngestJob, PropagateJob, SynapseDetectJob};
+
+use std::collections::{BTreeMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::time::Instant;
+
+use crate::core::Box3;
+use crate::metrics::{Counter, Gauge, Histogram};
+use crate::shard::NodeId;
+use crate::storage::Engine;
+use crate::wal::record::{decode_chunk, WalRecord};
+use crate::{Error, Result};
+
+/// Hard ceiling on worker threads per job (requests may ask for fewer;
+/// a hostile or typo'd `workers=100000` must not exhaust the host).
+pub const MAX_WORKERS: usize = 64;
+
+/// One schedulable unit of a job: a spatial block at a resolution.
+#[derive(Clone, Debug)]
+pub struct JobBlock {
+    /// Stable index within the job's plan — the checkpoint journal keys
+    /// completions by it, so [`JobSpec::plan`] must be deterministic.
+    pub index: u64,
+    /// Resolution level the block addresses.
+    pub res: u32,
+    /// The block's voxel box (already clipped to the volume).
+    pub bx: Box3,
+    /// Node owning the block's first cuboid — the scheduler's affinity
+    /// hint. `None` when the backing engine is unsharded.
+    pub shard: Option<NodeId>,
+    /// Execution phase. Phases run in ascending order with a barrier
+    /// between them: a block may read data written by any earlier
+    /// phase ([`PropagateJob`]'s banded pyramid), never its own.
+    pub phase: u32,
+}
+
+/// A batch workload: a deterministic block plan plus a per-block body.
+///
+/// `run_block` executions may be repeated after a crash (the in-flight
+/// block at kill time is not journaled), so bodies should be idempotent
+/// — all three shipped specs write voxel data, which overwrites to the
+/// same values on re-execution.
+pub trait JobSpec: Send + Sync {
+    /// Human-readable job name, e.g. `propagate/synapses_v0`.
+    fn name(&self) -> String;
+
+    /// The full block list. Must be identical across calls (and across
+    /// process restarts) for checkpoint resume to be sound.
+    fn plan(&self) -> Result<Vec<JobBlock>>;
+
+    /// Execute one block; returns an item count for the status surface
+    /// (cuboids written, synapses detected, bytes ingested).
+    fn run_block(&self, block: &JobBlock) -> Result<u64>;
+}
+
+/// Scheduling knobs for one job run.
+#[derive(Clone, Copy, Debug)]
+pub struct JobConfig {
+    /// Worker threads draining the block queues.
+    pub workers: usize,
+    /// Per-block retry budget before the job fails.
+    pub retries: u32,
+    /// Stop (as if killed) after this many block completions in this
+    /// run, leaving the journal in place — the crash-injection hook the
+    /// resume tests use. `None` runs to completion.
+    pub max_blocks: Option<u64>,
+}
+
+impl Default for JobConfig {
+    fn default() -> Self {
+        JobConfig { workers: 4, retries: 2, max_blocks: None }
+    }
+}
+
+impl JobConfig {
+    /// `workers` workers, defaults elsewhere.
+    pub fn with_workers(n: usize) -> Self {
+        JobConfig { workers: n.max(1), ..JobConfig::default() }
+    }
+}
+
+/// Lifecycle of a job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    /// Accepted, runner not yet scheduled.
+    Queued,
+    /// Workers are executing blocks.
+    Running,
+    /// Every block in the plan is journaled.
+    Completed,
+    /// A block exhausted its retries (or the journal broke); see
+    /// [`JobStatus::error`].
+    Failed,
+    /// Cancelled (or stopped by [`JobConfig::max_blocks`]); the journal
+    /// survives, so resubmitting the job id resumes it.
+    Cancelled,
+}
+
+impl JobState {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Completed => "completed",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    /// Terminal states never transition again.
+    pub fn is_terminal(self) -> bool {
+        matches!(self, JobState::Completed | JobState::Failed | JobState::Cancelled)
+    }
+}
+
+/// Per-job counters surfaced through `/jobs/status` and `ocpd jobs`.
+#[derive(Debug, Default)]
+pub struct JobMetrics {
+    /// Fresh-block throughput this run, in milli-blocks per second (a
+    /// [`Gauge`] holds integers; divide by 1000).
+    pub blocks_per_sec_milli: Gauge,
+    /// Wall latency per completed block.
+    pub block_latency: Histogram,
+    /// Block attempts retried after an error.
+    pub retries: Counter,
+}
+
+/// Point-in-time summary of one job.
+#[derive(Clone, Debug)]
+pub struct JobStatus {
+    pub id: u64,
+    pub name: String,
+    pub state: JobState,
+    pub total_blocks: u64,
+    /// Journaled blocks, including ones recovered from a prior run.
+    pub completed_blocks: u64,
+    /// Blocks already journaled when this run started.
+    pub resumed_blocks: u64,
+    /// Sum of per-block item counts (spec-defined units).
+    pub items: u64,
+    pub retries: u64,
+    /// Fresh blocks per second over this run's wall clock.
+    pub blocks_per_sec: f64,
+    pub mean_block_ms: f64,
+    pub p95_block_ms: f64,
+    pub wall_secs: f64,
+    pub error: Option<String>,
+}
+
+impl JobStatus {
+    /// One status line (the `/jobs/status` and CLI rendering).
+    pub fn line(&self) -> String {
+        let mut s = format!(
+            "{} {}: state={} blocks={}/{} resumed={} items={} retries={} \
+             blocks_per_sec={:.1} mean_block_ms={:.1} p95_block_ms={:.1} wall={:.2}s",
+            self.id,
+            self.name,
+            self.state.as_str(),
+            self.completed_blocks,
+            self.total_blocks,
+            self.resumed_blocks,
+            self.items,
+            self.retries,
+            self.blocks_per_sec,
+            self.mean_block_ms,
+            self.p95_block_ms,
+            self.wall_secs
+        );
+        if let Some(e) = &self.error {
+            s.push_str(&format!(" error={e}"));
+        }
+        s
+    }
+}
+
+struct StateCell {
+    state: JobState,
+    error: Option<String>,
+    /// Wall clock frozen at the terminal transition.
+    wall_secs: Option<f64>,
+}
+
+/// A submitted job: shared handle for status, cancel, and wait.
+pub struct JobHandle {
+    pub id: u64,
+    name: String,
+    /// Released (set to `None`) at the terminal transition so finished
+    /// jobs don't pin spec-held memory — e.g. [`BulkIngestJob`]'s
+    /// generated source volume — for the life of the registry.
+    spec: Mutex<Option<Arc<dyn JobSpec>>>,
+    cfg: JobConfig,
+    /// Engine holding the checkpoint journal chunk table.
+    journal: Engine,
+    cancel: AtomicBool,
+    state: Mutex<StateCell>,
+    state_cv: Condvar,
+    total: AtomicU64,
+    completed: AtomicU64,
+    resumed: AtomicU64,
+    items: AtomicU64,
+    started: Instant,
+    pub metrics: JobMetrics,
+}
+
+impl JobHandle {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Storage table holding this job's checkpoint journal. `jobs` is a
+    /// reserved token, so the prefix can never collide with a project.
+    fn journal_table(&self) -> String {
+        format!("jobs/{}/journal", self.id)
+    }
+
+    /// Request cancellation: workers stop after their current block.
+    /// The journal survives, so the job id can be resubmitted to resume.
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::Relaxed);
+    }
+
+    /// True once [`JobHandle::cancel`] has been requested (the job may
+    /// still be winding down its in-flight blocks).
+    pub fn cancel_requested(&self) -> bool {
+        self.cancel.load(Ordering::Relaxed)
+    }
+
+    pub fn state(&self) -> JobState {
+        self.state.lock().unwrap().state
+    }
+
+    /// Block until the job reaches a terminal state.
+    pub fn wait(&self) -> JobState {
+        let mut st = self.state.lock().unwrap();
+        while !st.state.is_terminal() {
+            st = self.state_cv.wait(st).unwrap();
+        }
+        st.state
+    }
+
+    /// Like [`JobHandle::wait`], but gives up after `dur` and returns
+    /// whatever state the job is in then.
+    pub fn wait_terminal_for(&self, dur: std::time::Duration) -> JobState {
+        let deadline = Instant::now() + dur;
+        let mut st = self.state.lock().unwrap();
+        while !st.state.is_terminal() {
+            let now = Instant::now();
+            if now >= deadline {
+                return st.state;
+            }
+            let (guard, _) = self.state_cv.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+        st.state
+    }
+
+    fn set_state(&self, state: JobState, error: Option<String>) {
+        let mut st = self.state.lock().unwrap();
+        st.state = state;
+        if error.is_some() {
+            st.error = error;
+        }
+        if state.is_terminal() && st.wall_secs.is_none() {
+            st.wall_secs = Some(self.started.elapsed().as_secs_f64());
+        }
+        drop(st);
+        self.state_cv.notify_all();
+    }
+
+    pub fn status(&self) -> JobStatus {
+        let (state, error, wall) = {
+            let st = self.state.lock().unwrap();
+            (st.state, st.error.clone(), st.wall_secs)
+        };
+        let wall = wall.unwrap_or_else(|| self.started.elapsed().as_secs_f64());
+        let completed = self.completed.load(Ordering::Relaxed);
+        let resumed = self.resumed.load(Ordering::Relaxed);
+        JobStatus {
+            id: self.id,
+            name: self.name.clone(),
+            state,
+            total_blocks: self.total.load(Ordering::Relaxed),
+            completed_blocks: completed,
+            resumed_blocks: resumed,
+            items: self.items.load(Ordering::Relaxed),
+            retries: self.metrics.retries.get(),
+            blocks_per_sec: completed.saturating_sub(resumed) as f64 / wall.max(1e-9),
+            mean_block_ms: self.metrics.block_latency.mean_us() / 1e3,
+            p95_block_ms: self.metrics.block_latency.percentile_us(95.0) as f64 / 1e3,
+            wall_secs: wall,
+            error,
+        }
+    }
+}
+
+/// Pop the next block index, preferring the worker's own shard queue and
+/// stealing from the others only when it is empty.
+fn claim(queues: &Mutex<Vec<VecDeque<usize>>>, worker: usize) -> Option<usize> {
+    let mut qs = queues.lock().unwrap();
+    let n = qs.len();
+    for i in 0..n {
+        let qi = (worker + i) % n;
+        if let Some(b) = qs[qi].pop_front() {
+            return Some(b);
+        }
+    }
+    None
+}
+
+/// The job body: plan, recover the journal, drain the block queues
+/// phase by phase.
+fn run_job(handle: &JobHandle) -> (JobState, Option<String>) {
+    let Some(spec) = handle.spec.lock().unwrap().clone() else {
+        return (JobState::Failed, Some("job spec already released".into()));
+    };
+    let plan = match spec.plan() {
+        Ok(p) => p,
+        Err(e) => return (JobState::Failed, Some(format!("plan failed: {e}"))),
+    };
+    handle.total.store(plan.len() as u64, Ordering::Relaxed);
+    let table = handle.journal_table();
+
+    // Recover: every intact frame names a completed block (its value
+    // carries that block's item count); torn tails (a crash mid-append)
+    // decode to their valid prefix and the block simply re-runs.
+    let mut done: HashSet<u64> = HashSet::new();
+    let mut resumed_items = 0u64;
+    let mut next_seq = 0u64;
+    let keys = match handle.journal.keys(&table) {
+        Ok(k) => k,
+        Err(e) => return (JobState::Failed, Some(format!("journal read failed: {e}"))),
+    };
+    for k in keys {
+        next_seq = next_seq.max(k + 1);
+        match handle.journal.get(&table, k) {
+            Ok(Some(blob)) => {
+                for r in decode_chunk(&blob).records {
+                    if done.insert(r.key) {
+                        if let Some(v) = &r.value {
+                            if let Ok(b) = <[u8; 8]>::try_from(v.as_slice()) {
+                                resumed_items += u64::from_le_bytes(b);
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(None) => {}
+            Err(e) => return (JobState::Failed, Some(format!("journal read failed: {e}"))),
+        }
+    }
+    handle.items.store(resumed_items, Ordering::Relaxed);
+
+    let pending: Vec<usize> = plan
+        .iter()
+        .enumerate()
+        .filter(|(_, b)| !done.contains(&b.index))
+        .map(|(i, _)| i)
+        .collect();
+    let resumed = (plan.len() - pending.len()) as u64;
+    handle.resumed.store(resumed, Ordering::Relaxed);
+    handle.completed.store(resumed, Ordering::Relaxed);
+    if pending.is_empty() {
+        return (JobState::Completed, None);
+    }
+
+    // Group pending blocks by phase; phases run in ascending order with
+    // a barrier between them — a later phase may read what earlier
+    // phases wrote (the banded propagation pyramid relies on this).
+    let mut phases: BTreeMap<u32, Vec<usize>> = BTreeMap::new();
+    for i in pending {
+        phases.entry(plan[i].phase).or_default().push(i);
+    }
+    let seq = AtomicU64::new(next_seq);
+    let fresh = AtomicU64::new(0);
+    let error: Mutex<Option<String>> = Mutex::new(None);
+
+    for items in phases.into_values() {
+        if handle.cancel.load(Ordering::Relaxed) || error.lock().unwrap().is_some() {
+            break;
+        }
+        // One queue per shard (unsharded blocks share one); workers map
+        // onto queues round-robin and steal when theirs runs dry.
+        let mut by_shard: BTreeMap<u64, VecDeque<usize>> = BTreeMap::new();
+        for i in items {
+            let key = plan[i].shard.map(|n| n as u64).unwrap_or(u64::MAX);
+            by_shard.entry(key).or_default().push_back(i);
+        }
+        let n_phase: usize = by_shard.values().map(|q| q.len()).sum();
+        let queues = Mutex::new(by_shard.into_values().collect::<Vec<_>>());
+        let workers = handle.cfg.workers.max(1).min(n_phase).min(MAX_WORKERS);
+
+        std::thread::scope(|s| {
+            for w in 0..workers {
+                let queues = &queues;
+                let seq = &seq;
+                let fresh = &fresh;
+                let error = &error;
+                let plan = &plan;
+                let table = &table;
+                let spec = &spec;
+                s.spawn(move || loop {
+                    if handle.cancel.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let Some(bi) = claim(queues, w) else { break };
+                    let block = &plan[bi];
+                    let t0 = Instant::now();
+                    let mut attempt = 0u32;
+                    let outcome = loop {
+                        match spec.run_block(block) {
+                            Ok(n) => break Some(Ok(n)),
+                            Err(e) => {
+                                // A cancel (user, budget stop, or another
+                                // worker's failure) arriving mid-retry is a
+                                // cancellation, not this block's failure.
+                                if handle.cancel.load(Ordering::Relaxed) {
+                                    break None;
+                                }
+                                if attempt >= handle.cfg.retries {
+                                    break Some(Err(e));
+                                }
+                                attempt += 1;
+                                handle.metrics.retries.inc();
+                            }
+                        }
+                    };
+                    let Some(outcome) = outcome else { break };
+                    match outcome {
+                        Ok(items) => {
+                            // Checkpoint the completion as one CRC32 frame;
+                            // the sync makes it crash-durable before the
+                            // block counts as done.
+                            let seq_key = seq.fetch_add(1, Ordering::Relaxed);
+                            let rec = WalRecord {
+                                lsn: seq_key,
+                                table: handle.name.clone(),
+                                key: block.index,
+                                value: Some(items.to_le_bytes().to_vec()),
+                            };
+                            let mut frame = Vec::with_capacity(64);
+                            rec.encode_into(&mut frame);
+                            let put = handle
+                                .journal
+                                .put(table, seq_key, &frame)
+                                .and_then(|()| handle.journal.sync());
+                            if let Err(e) = put {
+                                let mut g = error.lock().unwrap();
+                                if g.is_none() {
+                                    *g = Some(format!("journal write failed: {e}"));
+                                }
+                                handle.cancel.store(true, Ordering::Relaxed);
+                                break;
+                            }
+                            handle.metrics.block_latency.record(t0.elapsed());
+                            handle.items.fetch_add(items, Ordering::Relaxed);
+                            let done_total = handle.completed.fetch_add(1, Ordering::Relaxed) + 1;
+                            let secs = handle.started.elapsed().as_secs_f64().max(1e-9);
+                            let rate = done_total.saturating_sub(
+                                handle.resumed.load(Ordering::Relaxed),
+                            ) as f64
+                                / secs;
+                            handle.metrics.blocks_per_sec_milli.set((rate * 1e3) as u64);
+                            let n = fresh.fetch_add(1, Ordering::Relaxed) + 1;
+                            if let Some(budget) = handle.cfg.max_blocks {
+                                if n >= budget {
+                                    handle.cancel.store(true, Ordering::Relaxed);
+                                }
+                            }
+                        }
+                        Err(e) => {
+                            let mut g = error.lock().unwrap();
+                            if g.is_none() {
+                                *g = Some(format!(
+                                    "block {} failed after {} attempts: {e}",
+                                    block.index,
+                                    attempt + 1
+                                ));
+                            }
+                            handle.cancel.store(true, Ordering::Relaxed);
+                            break;
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    let error = error.into_inner().unwrap();
+    if let Some(e) = error {
+        return (JobState::Failed, Some(e));
+    }
+    if handle.completed.load(Ordering::Relaxed) >= plan.len() as u64 {
+        (JobState::Completed, None)
+    } else {
+        (JobState::Cancelled, None)
+    }
+}
+
+/// The job registry: submits, tracks, cancels.
+///
+/// Checkpoint journals live in chunk tables `jobs/{id}/journal` on the
+/// `journal` engine (the cluster passes its first database node), so a
+/// persistent cluster's journals survive process restarts and
+/// resubmitting a job id resumes it.
+pub struct JobManager {
+    journal: Engine,
+    jobs: RwLock<BTreeMap<u64, Arc<JobHandle>>>,
+    next_id: AtomicU64,
+}
+
+impl JobManager {
+    /// A manager journaling onto `journal`. Existing journal tables
+    /// advance the id allocator so resumable ids are never reissued.
+    pub fn new(journal: Engine) -> JobManager {
+        let mut next = 1u64;
+        if let Ok(tables) = journal.tables() {
+            for t in tables {
+                if let Some(rest) = t.strip_prefix("jobs/") {
+                    if let Some((id, _)) = rest.split_once('/') {
+                        if let Ok(id) = id.parse::<u64>() {
+                            next = next.max(id + 1);
+                        }
+                    }
+                }
+            }
+        }
+        JobManager {
+            journal,
+            jobs: RwLock::new(BTreeMap::new()),
+            next_id: AtomicU64::new(next),
+        }
+    }
+
+    /// Engine holding the checkpoint journals.
+    pub fn journal_engine(&self) -> &Engine {
+        &self.journal
+    }
+
+    /// Submit a job under a fresh id.
+    pub fn submit(&self, spec: Arc<dyn JobSpec>, cfg: JobConfig) -> Result<Arc<JobHandle>> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.launch(id, spec, cfg)
+    }
+
+    /// Submit under an explicit id — the resume path: a journal left by
+    /// a killed or cancelled run of the same job picks up where it
+    /// stopped. Rejected while that id is still running.
+    pub fn submit_with_id(
+        &self,
+        id: u64,
+        spec: Arc<dyn JobSpec>,
+        cfg: JobConfig,
+    ) -> Result<Arc<JobHandle>> {
+        self.next_id.fetch_max(id + 1, Ordering::Relaxed);
+        self.launch(id, spec, cfg)
+    }
+
+    fn launch(&self, id: u64, spec: Arc<dyn JobSpec>, cfg: JobConfig) -> Result<Arc<JobHandle>> {
+        // Cancellation is asynchronous (workers finish their current
+        // block first), so a cancel-then-resume sequence would race the
+        // wind-down. Outside the registry lock, give an already-
+        // cancelled job a bounded grace period to reach terminal.
+        if let Some(existing) = self.get(id) {
+            if !existing.state().is_terminal() && existing.cancel_requested() {
+                existing.wait_terminal_for(std::time::Duration::from_secs(2));
+            }
+        }
+        // Hold the registry lock across check-and-insert so concurrent
+        // submits of one id cannot both pass the liveness check.
+        let mut jobs = self.jobs.write().unwrap();
+        if let Some(existing) = jobs.get(&id) {
+            if !existing.state().is_terminal() {
+                return Err(Error::BadRequest(format!(
+                    "job {id} is still {} (cancellation finishes in-flight blocks; \
+                     poll /jobs/status and resubmit once it reports a terminal state)",
+                    existing.state().as_str()
+                )));
+            }
+        }
+        let name = spec.name();
+        let handle = Arc::new(JobHandle {
+            id,
+            name,
+            spec: Mutex::new(Some(spec)),
+            cfg,
+            journal: Arc::clone(&self.journal),
+            cancel: AtomicBool::new(false),
+            state: Mutex::new(StateCell { state: JobState::Queued, error: None, wall_secs: None }),
+            state_cv: Condvar::new(),
+            total: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            resumed: AtomicU64::new(0),
+            items: AtomicU64::new(0),
+            started: Instant::now(),
+            metrics: JobMetrics::default(),
+        });
+        let runner = Arc::clone(&handle);
+        std::thread::Builder::new()
+            .name(format!("ocpd-job-{id}"))
+            .spawn(move || {
+                runner.set_state(JobState::Running, None);
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    run_job(&runner)
+                }));
+                let (state, error) = out
+                    .unwrap_or_else(|_| (JobState::Failed, Some("job runner panicked".into())));
+                runner.set_state(state, error);
+                // Release the spec: the registry keeps the handle (for
+                // status history), not the workload's memory.
+                *runner.spec.lock().unwrap() = None;
+            })
+            .map_err(|e| Error::Other(format!("spawn job runner: {e}")))?;
+        jobs.insert(id, Arc::clone(&handle));
+        Ok(handle)
+    }
+
+    pub fn get(&self, id: u64) -> Option<Arc<JobHandle>> {
+        self.jobs.read().unwrap().get(&id).cloned()
+    }
+
+    /// Cancel a job (workers stop after their current block).
+    pub fn cancel(&self, id: u64) -> Result<()> {
+        match self.get(id) {
+            Some(h) => {
+                h.cancel();
+                Ok(())
+            }
+            None => Err(Error::NotFound(format!("job {id}"))),
+        }
+    }
+
+    /// Status of every registered job, ascending by id.
+    pub fn statuses(&self) -> Vec<JobStatus> {
+        self.jobs.read().unwrap().values().map(|h| h.status()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::MemStore;
+    use std::time::Duration;
+
+    /// A toy spec: `n` unit blocks striped across two fake shards, each
+    /// bumping a shared counter exactly once per execution.
+    struct CountJob {
+        n: u64,
+        fail_at: Option<u64>,
+        sleep: Duration,
+        counter: Arc<AtomicU64>,
+    }
+
+    impl CountJob {
+        fn new(n: u64) -> CountJob {
+            CountJob {
+                n,
+                fail_at: None,
+                sleep: Duration::ZERO,
+                counter: Arc::new(AtomicU64::new(0)),
+            }
+        }
+    }
+
+    impl JobSpec for CountJob {
+        fn name(&self) -> String {
+            "count".into()
+        }
+
+        fn plan(&self) -> Result<Vec<JobBlock>> {
+            Ok((0..self.n)
+                .map(|i| JobBlock {
+                    index: i,
+                    res: 0,
+                    bx: Box3::new([0, 0, 0], [1, 1, 1]),
+                    shard: Some((i % 2) as NodeId),
+                    phase: 0,
+                })
+                .collect())
+        }
+
+        fn run_block(&self, block: &JobBlock) -> Result<u64> {
+            if self.fail_at == Some(block.index) {
+                return Err(Error::Other(format!("injected failure at {}", block.index)));
+            }
+            if !self.sleep.is_zero() {
+                std::thread::sleep(self.sleep);
+            }
+            self.counter.fetch_add(1, Ordering::Relaxed);
+            Ok(1)
+        }
+    }
+
+    fn manager() -> JobManager {
+        JobManager::new(Arc::new(MemStore::new()))
+    }
+
+    #[test]
+    fn job_completes_and_reports() {
+        let m = manager();
+        let spec = Arc::new(CountJob::new(16));
+        let counter = Arc::clone(&spec.counter);
+        let h = m.submit(spec, JobConfig::default()).unwrap();
+        assert_eq!(h.wait(), JobState::Completed);
+        assert_eq!(counter.load(Ordering::Relaxed), 16);
+        let st = h.status();
+        assert_eq!(st.state, JobState::Completed);
+        assert_eq!(st.total_blocks, 16);
+        assert_eq!(st.completed_blocks, 16);
+        assert_eq!(st.resumed_blocks, 0);
+        assert_eq!(st.items, 16);
+        assert_eq!(st.retries, 0);
+        assert_eq!(h.metrics.block_latency.count(), 16);
+        assert!(st.blocks_per_sec > 0.0);
+        assert!(st.line().contains("state=completed"));
+        // Registry sees it too.
+        assert_eq!(m.statuses().len(), 1);
+        assert!(m.get(h.id).is_some());
+        assert!(m.get(999).is_none());
+        assert!(m.cancel(999).is_err());
+    }
+
+    #[test]
+    fn empty_plan_is_instantly_complete() {
+        let m = manager();
+        let h = m.submit(Arc::new(CountJob::new(0)), JobConfig::default()).unwrap();
+        assert_eq!(h.wait(), JobState::Completed);
+        assert_eq!(h.status().total_blocks, 0);
+    }
+
+    #[test]
+    fn persistent_failure_fails_job_after_retries() {
+        let m = manager();
+        let spec = Arc::new(CountJob { fail_at: Some(5), ..CountJob::new(8) });
+        let cfg = JobConfig { retries: 2, workers: 2, max_blocks: None };
+        let h = m.submit(spec, cfg).unwrap();
+        assert_eq!(h.wait(), JobState::Failed);
+        let st = h.status();
+        assert!(st.error.as_deref().unwrap().contains("block 5"), "{:?}", st.error);
+        // Exactly the retry budget was spent on the poisoned block.
+        assert_eq!(st.retries, 2);
+        assert!(st.completed_blocks < 8);
+    }
+
+    #[test]
+    fn budget_stops_then_resume_runs_each_block_exactly_once() {
+        let m = manager();
+        let spec = Arc::new(CountJob::new(24));
+        let counter = Arc::clone(&spec.counter);
+        // Run 1: stop after ~4 blocks, as if killed.
+        let cfg = JobConfig { workers: 2, max_blocks: Some(4), ..JobConfig::default() };
+        let h = m.submit(Arc::clone(&spec) as Arc<dyn JobSpec>, cfg).unwrap();
+        assert_eq!(h.wait(), JobState::Cancelled);
+        let first = h.status().completed_blocks;
+        assert!(first >= 4 && first < 24, "completed {first}");
+
+        // Run 2: same id resumes from the journal and finishes the rest.
+        let h2 = m.submit_with_id(h.id, spec, JobConfig::default()).unwrap();
+        assert_eq!(h2.wait(), JobState::Completed);
+        let st = h2.status();
+        assert_eq!(st.completed_blocks, 24);
+        assert_eq!(st.resumed_blocks, first);
+        // Every block executed exactly once across both runs.
+        assert_eq!(counter.load(Ordering::Relaxed), 24);
+    }
+
+    #[test]
+    fn cancel_stops_workers_and_is_resumable() {
+        let m = manager();
+        let spec = Arc::new(CountJob { sleep: Duration::from_millis(3), ..CountJob::new(64) });
+        let h = m
+            .submit(Arc::clone(&spec) as Arc<dyn JobSpec>, JobConfig::with_workers(2))
+            .unwrap();
+        m.cancel(h.id).unwrap();
+        let state = h.wait();
+        assert!(state == JobState::Cancelled || state == JobState::Completed);
+        if state == JobState::Cancelled {
+            assert!(h.status().completed_blocks < 64);
+            // A live id cannot be double-submitted ... once terminal it can.
+            let h2 = m.submit_with_id(h.id, spec, JobConfig::default()).unwrap();
+            assert_eq!(h2.wait(), JobState::Completed);
+            assert_eq!(h2.status().completed_blocks, 64);
+        }
+    }
+
+    #[test]
+    fn running_id_cannot_be_resubmitted() {
+        let m = manager();
+        let spec = Arc::new(CountJob { sleep: Duration::from_millis(5), ..CountJob::new(64) });
+        let h = m.submit(Arc::clone(&spec) as Arc<dyn JobSpec>, JobConfig::with_workers(1)).unwrap();
+        let err = m.submit_with_id(h.id, Arc::clone(&spec) as Arc<dyn JobSpec>, JobConfig::default());
+        assert!(err.is_err(), "resubmitting a live id must be rejected");
+        h.cancel();
+        h.wait();
+    }
+
+    #[test]
+    fn torn_journal_tail_reruns_only_unjournaled_blocks() {
+        let journal: Engine = Arc::new(MemStore::new());
+        let m = JobManager::new(Arc::clone(&journal));
+        let spec = Arc::new(CountJob::new(6));
+        let counter = Arc::clone(&spec.counter);
+        // Pre-seed the journal: block 0 intact, block 1's frame torn.
+        let table = "jobs/1/journal";
+        let mut good = Vec::new();
+        WalRecord { lsn: 0, table: "count".into(), key: 0, value: Some(vec![1]) }
+            .encode_into(&mut good);
+        journal.put(table, 0, &good).unwrap();
+        let mut torn = Vec::new();
+        WalRecord { lsn: 1, table: "count".into(), key: 1, value: Some(vec![1]) }
+            .encode_into(&mut torn);
+        torn.truncate(torn.len() - 2);
+        journal.put(table, 1, &torn).unwrap();
+
+        let h = m.submit_with_id(1, spec, JobConfig::default()).unwrap();
+        assert_eq!(h.wait(), JobState::Completed);
+        let st = h.status();
+        assert_eq!(st.resumed_blocks, 1, "only the intact frame counts");
+        // Blocks 1..6 re-ran; block 0 did not.
+        assert_eq!(counter.load(Ordering::Relaxed), 5);
+    }
+
+    /// Two-phase spec recording completion order: phase 1 blocks must
+    /// never start before every phase 0 block has finished.
+    struct PhasedJob {
+        order: Arc<Mutex<Vec<u64>>>,
+    }
+
+    impl JobSpec for PhasedJob {
+        fn name(&self) -> String {
+            "phased".into()
+        }
+
+        fn plan(&self) -> Result<Vec<JobBlock>> {
+            Ok((0..12u64)
+                .map(|i| JobBlock {
+                    index: i,
+                    res: 0,
+                    bx: Box3::new([0, 0, 0], [1, 1, 1]),
+                    shard: None,
+                    phase: (i / 6) as u32,
+                })
+                .collect())
+        }
+
+        fn run_block(&self, block: &JobBlock) -> Result<u64> {
+            std::thread::sleep(Duration::from_millis(1));
+            self.order.lock().unwrap().push(block.index);
+            Ok(1)
+        }
+    }
+
+    #[test]
+    fn phases_form_a_barrier() {
+        let m = manager();
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let spec = Arc::new(PhasedJob { order: Arc::clone(&order) });
+        let h = m.submit(spec, JobConfig::with_workers(4)).unwrap();
+        assert_eq!(h.wait(), JobState::Completed);
+        let order = order.lock().unwrap();
+        assert_eq!(order.len(), 12);
+        let first_p1 = order.iter().position(|&i| i >= 6).unwrap();
+        assert!(
+            order[..first_p1].len() == 6 && order[..first_p1].iter().all(|&i| i < 6),
+            "phase 1 started before phase 0 completed: {order:?}"
+        );
+    }
+
+    #[test]
+    fn manager_id_allocation_skips_existing_journals() {
+        let journal: Engine = Arc::new(MemStore::new());
+        journal.put("jobs/7/journal", 0, b"x").unwrap();
+        let m = JobManager::new(journal);
+        let h = m.submit(Arc::new(CountJob::new(1)), JobConfig::default()).unwrap();
+        assert!(h.id > 7, "fresh ids must not collide with persisted journals");
+        h.wait();
+    }
+}

@@ -1,0 +1,447 @@
+//! The shipped [`JobSpec`]s — the paper's three batch workloads
+//! re-expressed as checkpointed, parallel jobs:
+//!
+//! * [`PropagateJob`] — the §3.1/§3.2 background hierarchy build. The
+//!   hierarchy is split into bands of up to three levels; each block
+//!   reads its band's source level **once** and derives the band's
+//!   coarser levels from the previous level *in memory*, instead of
+//!   re-reading each freshly-built level from storage per destination
+//!   level (halving the read I/O per level vs. the one-shot
+//!   [`crate::resolution::Propagator`]; outputs are bit-identical —
+//!   both compose the same per-level downsample). Bands run as ordered
+//!   job phases, so deep hierarchies stay memory-bounded.
+//! * [`SynapseDetectJob`] — the §2 synapse-finding workload, one
+//!   detector core block per job block, RAMON metadata written in
+//!   batches through the annotation project's engine (the WAL, when the
+//!   project is hot).
+//! * [`BulkIngestJob`] — the "image data streamed from the instruments"
+//!   path (§4.1): chunked, cuboid-aligned ingest of a synthetic EM
+//!   volume ([`crate::ingest::generate`]).
+
+use std::sync::{Arc, OnceLock};
+
+use crate::annotation::AnnotationDb;
+use crate::array::{DenseVolume, VoxelScalar};
+use crate::core::{Box3, Vec3};
+use crate::cutout::CutoutService;
+use crate::ingest::{block_boxes, generate, SynthSpec, SynthVolume};
+use crate::jobs::{JobBlock, JobSpec};
+use crate::morton;
+use crate::resolution::{downsample_labels_u32, downsample_mean_u8};
+use crate::shard::NodeId;
+use crate::vision::SynapsePipeline;
+use crate::Result;
+
+/// Shard-affinity hint for a region: the node owning its first cuboid,
+/// via the engine's shard map (`None` when the engine is unsharded).
+fn shard_of(svc: &CutoutService, res: u32, bx: &Box3) -> Option<NodeId> {
+    let map = svc.store().engine().shard_map()?;
+    let cshape = svc.store().cuboid_shape(res).ok()?;
+    let c = bx.cuboid_cover(cshape).lo;
+    let code = if svc.store().dataset.timesteps > 1 {
+        morton::encode4(c[0], c[1], c[2], 0)
+    } else {
+        morton::encode3(c[0], c[1], c[2])
+    };
+    Some(map.node_for(code))
+}
+
+fn gcd(a: u64, b: u64) -> u64 {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+fn lcm(a: u64, b: u64) -> u64 {
+    a / gcd(a, b) * b
+}
+
+// ----------------------------------------------------------------------
+// Propagate
+// ----------------------------------------------------------------------
+
+enum Target {
+    Image(Arc<CutoutService>),
+    Annotation(Arc<AnnotationDb>),
+}
+
+/// Levels each block derives in memory before the pyramid re-reads the
+/// previously built level from storage. Bounds per-block memory at
+/// `(cuboid << BAND_LEVELS)² × cuboid_z` voxels regardless of hierarchy
+/// depth, while still skipping every per-level re-read *within* a band.
+const BAND_LEVELS: u32 = 3;
+
+/// One group of consecutive levels built from a single source level.
+struct Band {
+    /// Level this band's blocks read (base, or the previous band's top).
+    src: u32,
+    /// Highest level this band writes (inclusive).
+    top: u32,
+    /// Block extent at the source level.
+    block: Vec3,
+}
+
+/// Resolution-hierarchy propagation as a batch job.
+///
+/// Levels are built in *bands* of [`BAND_LEVELS`]: each band's plan
+/// tiles its source level into super-blocks whose XY extents are a
+/// common multiple of every band level's cuboid extent scaled back to
+/// the source. Three consequences:
+///
+/// * every level write is cuboid-aligned and disjoint across blocks —
+///   parallel blocks never read-modify-write a shared cuboid;
+/// * each block's 2x2 downsample windows never straddle a block
+///   boundary, so its in-memory pyramid is self-contained: within a
+///   band, level `l` is computed from the block's own level `l-1`
+///   output without touching storage again;
+/// * bands run as ordered job *phases* (the engine's barrier), so a
+///   band reads the finished output of the band below it — per-block
+///   memory stays bounded on arbitrarily deep hierarchies.
+pub struct PropagateJob {
+    target: Target,
+    bands: Vec<Band>,
+}
+
+impl PropagateJob {
+    /// Propagate an image project (box-mean downsampling).
+    pub fn image(svc: Arc<CutoutService>) -> PropagateJob {
+        let bands = Self::bands(&svc);
+        PropagateJob { target: Target::Image(svc), bands }
+    }
+
+    /// Propagate an annotation project (majority-label downsampling).
+    pub fn annotation(db: Arc<AnnotationDb>) -> PropagateJob {
+        let bands = Self::bands(&db.cutout);
+        PropagateJob { target: Target::Annotation(db), bands }
+    }
+
+    fn svc(&self) -> &CutoutService {
+        match &self.target {
+            Target::Image(svc) => svc,
+            Target::Annotation(db) => &db.cutout,
+        }
+    }
+
+    /// Split the hierarchy above the base resolution into bands, each
+    /// with its source-level block extent: the LCM over the band's
+    /// levels of the cuboid extent scaled to the source (XY; Z never
+    /// scales), so block boundaries align to every band level's cuboid
+    /// grid.
+    fn bands(svc: &CutoutService) -> Vec<Band> {
+        let ds = &svc.store().dataset;
+        let base = svc.store().project.base_resolution;
+        let levels = ds.num_levels();
+        let mut out = Vec::new();
+        let mut src = base;
+        while src + 1 < levels {
+            let top = (src + BAND_LEVELS).min(levels - 1);
+            let mut ext = [1u64, 1, 1];
+            for l in src..=top {
+                let Ok(spec) = ds.level(l) else { continue };
+                let shift = l - src;
+                ext[0] = lcm(ext[0], spec.cuboid[0] << shift);
+                ext[1] = lcm(ext[1], spec.cuboid[1] << shift);
+                ext[2] = lcm(ext[2], spec.cuboid[2]);
+            }
+            out.push(Band { src, top, block: ext });
+            src = top;
+        }
+        out
+    }
+
+    fn run_block_typed<T: VoxelScalar>(
+        &self,
+        block: &JobBlock,
+        down: fn(&DenseVolume<T>) -> DenseVolume<T>,
+    ) -> Result<u64> {
+        let band = &self.bands[block.phase as usize];
+        let svc = self.svc();
+        let ds = Arc::clone(&svc.store().dataset);
+        // One storage read per block; every coarser level of the band
+        // derives from the in-memory previous level (the I/O-halving
+        // contract within a band).
+        let mut cur = svc.read::<T>(band.src, 0, 0, block.bx)?;
+        if cur.all_zero() {
+            return Ok(0); // lazy: empty space never materializes
+        }
+        let mut lo = block.bx.lo;
+        let mut written = 0u64;
+        for l in band.src + 1..=band.top {
+            cur = down(&cur);
+            lo = [lo[0] / 2, lo[1] / 2, lo[2]];
+            let level = ds.level(l)?;
+            let region = Box3::at(lo, cur.dims()).intersect(&level.bounds());
+            if region.is_empty() {
+                break;
+            }
+            let cshape = level.cuboid;
+            let cover = region.cuboid_cover(cshape);
+            for cz in cover.lo[2]..cover.hi[2] {
+                for cy in cover.lo[1]..cover.hi[1] {
+                    for cx in cover.lo[0]..cover.hi[0] {
+                        let cub = Box3::at(
+                            [cx * cshape[0], cy * cshape[1], cz * cshape[2]],
+                            cshape,
+                        )
+                        .intersect(&region);
+                        if cub.is_empty() {
+                            continue;
+                        }
+                        let local = Box3::new(
+                            [cub.lo[0] - lo[0], cub.lo[1] - lo[1], cub.lo[2] - lo[2]],
+                            [cub.hi[0] - lo[0], cub.hi[1] - lo[1], cub.hi[2] - lo[2]],
+                        );
+                        let sub = cur.extract_box(local);
+                        if sub.all_zero() {
+                            continue; // lazy at cuboid granularity
+                        }
+                        svc.write(l, 0, 0, cub, &sub)?;
+                        written += 1;
+                    }
+                }
+            }
+        }
+        Ok(written)
+    }
+}
+
+impl JobSpec for PropagateJob {
+    fn name(&self) -> String {
+        format!("propagate/{}", self.svc().store().project.token)
+    }
+
+    fn plan(&self) -> Result<Vec<JobBlock>> {
+        let svc = self.svc();
+        let ds = &svc.store().dataset;
+        let mut out = Vec::new();
+        for (phase, band) in self.bands.iter().enumerate() {
+            let dims = ds.level(band.src)?.dims;
+            for bx in block_boxes(dims, band.block) {
+                let index = out.len() as u64;
+                let shard = shard_of(svc, band.src, &bx);
+                out.push(JobBlock { index, res: band.src, bx, shard, phase: phase as u32 });
+            }
+        }
+        Ok(out)
+    }
+
+    fn run_block(&self, block: &JobBlock) -> Result<u64> {
+        match &self.target {
+            Target::Image(_) => self.run_block_typed::<u8>(block, downsample_mean_u8),
+            Target::Annotation(_) => {
+                self.run_block_typed::<u32>(block, downsample_labels_u32)
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Synapse detection
+// ----------------------------------------------------------------------
+
+/// The §2 vision workload as a job: one detector core block per job
+/// block. Each block cutouts its haloed image region, runs the AOT
+/// detector graph, extracts components, and writes labels + batched
+/// RAMON metadata through the annotation project (its WAL absorbs the
+/// random writes when the project is hot). Completed blocks are
+/// journaled, so a resumed job never re-detects (and never duplicates)
+/// a finished block's synapses; an in-block failure compensates by
+/// deleting the attempt's objects ([`SynapsePipeline::detect_block`]),
+/// so retries are clean too. Only a hard kill in the narrow window
+/// after a block's writes but before its journal frame re-runs that
+/// one block on resume — the same double-report property the paper's
+/// parallel instances have at block boundaries (§2).
+pub struct SynapseDetectJob {
+    pipeline: Arc<SynapsePipeline>,
+    res: u32,
+    region: Box3,
+}
+
+impl SynapseDetectJob {
+    pub fn new(pipeline: Arc<SynapsePipeline>, res: u32, region: Box3) -> SynapseDetectJob {
+        SynapseDetectJob { pipeline, res, region }
+    }
+}
+
+impl JobSpec for SynapseDetectJob {
+    fn name(&self) -> String {
+        format!("synapse/{}", self.pipeline.annotations.project.token)
+    }
+
+    fn plan(&self) -> Result<Vec<JobBlock>> {
+        Ok(self
+            .pipeline
+            .core_blocks(self.res, self.region)?
+            .into_iter()
+            .enumerate()
+            .map(|(i, bx)| JobBlock {
+                index: i as u64,
+                res: self.res,
+                bx,
+                shard: shard_of(&self.pipeline.image, self.res, &bx),
+                phase: 0,
+            })
+            .collect())
+    }
+
+    fn run_block(&self, block: &JobBlock) -> Result<u64> {
+        Ok(self.pipeline.detect_block(block.res, block.bx)?.len() as u64)
+    }
+}
+
+// ----------------------------------------------------------------------
+// Bulk ingest
+// ----------------------------------------------------------------------
+
+/// Chunked synthetic-EM ingest as a job (§4.1's instrument-streaming
+/// path). The volume is generated deterministically from the spec on
+/// first use — on a worker thread, not the submitting request — so a
+/// resumed job regenerates byte-identical source data and re-ingests
+/// only the blocks missing from the journal.
+pub struct BulkIngestJob {
+    svc: Arc<CutoutService>,
+    spec: SynthSpec,
+    block: Vec3,
+    vol: OnceLock<SynthVolume>,
+}
+
+impl BulkIngestJob {
+    /// `spec.dims` is clamped to the project's level-0 bounds (the
+    /// generated volume must not outsize what the dataset can hold),
+    /// and `block` is rounded up to the level-0 cuboid grid: parallel
+    /// blocks must never share a cuboid, or their read-modify-writes
+    /// would race.
+    pub fn new(svc: Arc<CutoutService>, mut spec: SynthSpec, block: Vec3) -> BulkIngestJob {
+        if let Ok(level) = svc.store().dataset.level(0) {
+            spec.dims = [
+                spec.dims[0].min(level.dims[0]).max(1),
+                spec.dims[1].min(level.dims[1]).max(1),
+                spec.dims[2].min(level.dims[2]).max(1),
+            ];
+        }
+        let cshape = svc.store().cuboid_shape(0).unwrap_or(block);
+        let block = [
+            block[0].max(1).div_ceil(cshape[0]) * cshape[0],
+            block[1].max(1).div_ceil(cshape[1]) * cshape[1],
+            block[2].max(1).div_ceil(cshape[2]) * cshape[2],
+        ];
+        BulkIngestJob { svc, spec, block, vol: OnceLock::new() }
+    }
+
+    /// The generated source volume (plus ground-truth centroids).
+    pub fn volume(&self) -> &SynthVolume {
+        self.vol.get_or_init(|| generate(&self.spec))
+    }
+}
+
+impl JobSpec for BulkIngestJob {
+    fn name(&self) -> String {
+        format!("ingest/{}", self.svc.store().project.token)
+    }
+
+    fn plan(&self) -> Result<Vec<JobBlock>> {
+        // `new()` already clamped the spec dims to the level-0 bounds.
+        Ok(block_boxes(self.spec.dims, self.block)
+            .into_iter()
+            .enumerate()
+            .map(|(i, bx)| JobBlock {
+                index: i as u64,
+                res: 0,
+                bx,
+                shard: shard_of(&self.svc, 0, &bx),
+                phase: 0,
+            })
+            .collect())
+    }
+
+    fn run_block(&self, block: &JobBlock) -> Result<u64> {
+        let sub = self.volume().vol.extract_box(block.bx);
+        let bytes = sub.len() as u64;
+        self.svc.write(0, 0, 0, block.bx, &sub)?;
+        Ok(bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunkstore::CuboidStore;
+    use crate::core::{DatasetBuilder, Project};
+    use crate::jobs::{JobConfig, JobManager};
+    use crate::storage::MemStore;
+
+    fn image_service(dims: Vec3, levels: u32) -> Arc<CutoutService> {
+        let ds = Arc::new(DatasetBuilder::new("t", dims).levels(levels).build());
+        let pr = Arc::new(Project::image("img", "t"));
+        Arc::new(CutoutService::new(Arc::new(CuboidStore::new(
+            ds,
+            pr,
+            Arc::new(MemStore::new()),
+        ))))
+    }
+
+    #[test]
+    fn propagate_bands_tile_the_hierarchy_and_align_every_level() {
+        let svc = image_service([4096, 4096, 256], 8);
+        let job = PropagateJob::image(Arc::clone(&svc));
+        let ds = &svc.store().dataset;
+        // Bands chain: first reads the base, each next reads the
+        // previous band's top, the last writes the deepest level.
+        assert!(job.bands.len() >= 2, "8 levels must span multiple bands");
+        assert_eq!(job.bands[0].src, 0);
+        assert_eq!(job.bands.last().unwrap().top, 7);
+        for w in job.bands.windows(2) {
+            assert_eq!(w[0].top, w[1].src);
+        }
+        for band in &job.bands {
+            assert!(band.top - band.src <= BAND_LEVELS, "band too deep");
+            for l in band.src..=band.top {
+                let cub = ds.level(l).unwrap().cuboid;
+                let shift = l - band.src;
+                assert_eq!(band.block[0] % (cub[0] << shift), 0, "x misaligned, level {l}");
+                assert_eq!(band.block[1] % (cub[1] << shift), 0, "y misaligned, level {l}");
+                assert_eq!(band.block[2] % cub[2], 0, "z misaligned, level {l}");
+            }
+        }
+        // Deterministic plan, stable indices, phases ascending.
+        let a = job.plan().unwrap();
+        let b = job.plan().unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.index, y.index);
+            assert_eq!(x.bx, y.bx);
+            assert_eq!(x.phase, y.phase);
+        }
+        for w in a.windows(2) {
+            assert!(w[0].phase <= w[1].phase, "plan must list phases in order");
+        }
+        assert_eq!(a.last().unwrap().phase as usize, job.bands.len() - 1);
+    }
+
+    #[test]
+    fn single_level_propagate_plans_nothing() {
+        let svc = image_service([128, 128, 16], 1);
+        let job = PropagateJob::image(svc);
+        assert!(job.plan().unwrap().is_empty());
+    }
+
+    #[test]
+    fn bulk_ingest_job_roundtrips_the_volume() {
+        let dims = [128u64, 128, 32];
+        let svc = image_service(dims, 1);
+        let spec = SynthSpec::small(dims, 11);
+        let job = Arc::new(BulkIngestJob::new(Arc::clone(&svc), spec.clone(), [64, 64, 16]));
+        let m = JobManager::new(Arc::new(MemStore::new()));
+        let h = m.submit(Arc::clone(&job) as Arc<dyn JobSpec>, JobConfig::with_workers(3)).unwrap();
+        assert_eq!(h.wait(), crate::jobs::JobState::Completed);
+        let st = h.status();
+        assert_eq!(st.items, dims[0] * dims[1] * dims[2], "every byte ingested");
+        let truth = generate(&spec);
+        let back = svc
+            .read::<u8>(0, 0, 0, Box3::new([0, 0, 0], dims))
+            .unwrap();
+        assert_eq!(back, truth.vol);
+    }
+}

@@ -16,9 +16,10 @@
 //!   Morton-partition sharding across heterogeneous node roles
 //!   ([`shard`], [`cluster`]), an SSD write-absorber — a segmented
 //!   write-ahead log with group commit, read-through overlay and
-//!   background flush to database nodes ([`wal`]) — and a RESTful HTTP
-//!   front end ([`web`]) speaking the URL grammar of the paper's
-//!   Table 1.
+//!   background flush to database nodes ([`wal`]) — a checkpointed batch
+//!   compute engine for propagation, synapse detection, and bulk ingest
+//!   ([`jobs`]), and a RESTful HTTP front end ([`web`]) speaking the URL
+//!   grammar of the paper's Table 1.
 //! * **Layer 2 (JAX, build time)** — the vision compute graphs (synapse
 //!   detector, gradient-domain color correction, hierarchy down-sampler),
 //!   lowered once to HLO text under `artifacts/`.
@@ -41,6 +42,7 @@ pub mod cluster;
 pub mod core;
 pub mod cutout;
 pub mod ingest;
+pub mod jobs;
 pub mod metrics;
 pub mod morton;
 pub mod resolution;

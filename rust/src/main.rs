@@ -23,6 +23,13 @@
 //! ocpd cache   [--url http://host:port]
 //!     Print every project's cuboid-cache status (entries, bytes, hit
 //!     rate, evictions, invalidations).
+//!
+//! ocpd jobs    [--url http://host:port] [--submit SPEC] [--workers N]
+//!              [--job ID] [--dims X,Y,Z] [--seed S] [--cancel ID]
+//!     Print every batch job's status. --submit launches a job (SPEC is
+//!     the path after /jobs/, e.g. propagate/synapses_v0 or
+//!     synapse/synth/synapses_v0 or ingest/synth); --job resumes a
+//!     checkpointed id; --cancel stops a running job.
 //! ```
 
 use std::collections::HashMap;
@@ -110,6 +117,8 @@ fn cmd_serve(flags: HashMap<String, String>) -> ocpd::Result<()> {
     println!("  GET {}/wal/status/", server.url());
     println!("  PUT {}/wal/flush/", server.url());
     println!("  GET {}/cache/status/", server.url());
+    println!("  POST {}/jobs/propagate/synapses_v0/", server.url());
+    println!("  GET {}/jobs/status/", server.url());
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
@@ -171,12 +180,34 @@ fn cmd_cache(flags: HashMap<String, String>) -> ocpd::Result<()> {
     Ok(())
 }
 
+fn cmd_jobs(flags: HashMap<String, String>) -> ocpd::Result<()> {
+    let url: String = flag(&flags, "url", "http://127.0.0.1:8642".to_string());
+    if let Some(id) = flags.get("cancel") {
+        let id = id
+            .parse()
+            .map_err(|_| ocpd::Error::BadRequest(format!("bad job id '{id}'")))?;
+        println!("{}", ocpd::client::cancel_job(&url, id)?);
+    }
+    if let Some(spec) = flags.get("submit") {
+        // Assemble the key=value body from the pass-through flags.
+        let mut params = String::new();
+        for key in ["workers", "job", "dims", "seed", "block", "res"] {
+            if let Some(v) = flags.get(key) {
+                params.push_str(&format!("{key}={v} "));
+            }
+        }
+        println!("{}", ocpd::client::submit_job(&url, spec, &params)?);
+    }
+    print!("{}", ocpd::client::job_status(&url, None)?);
+    Ok(())
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let (cmd, rest) = match args.split_first() {
         Some((c, r)) => (c.as_str(), r.to_vec()),
         None => {
-            eprintln!("usage: ocpd <serve|detect|info|wal|cache> [flags]");
+            eprintln!("usage: ocpd <serve|detect|info|wal|cache|jobs> [flags]");
             std::process::exit(2);
         }
     };
@@ -187,8 +218,9 @@ fn main() {
         "info" => cmd_info(flags),
         "wal" => cmd_wal(flags),
         "cache" => cmd_cache(flags),
+        "jobs" => cmd_jobs(flags),
         other => {
-            eprintln!("unknown command '{other}' (want serve|detect|info|wal|cache)");
+            eprintln!("unknown command '{other}' (want serve|detect|info|wal|cache|jobs)");
             std::process::exit(2);
         }
     };

@@ -290,6 +290,77 @@ mod tests {
     }
 
     #[test]
+    fn interleaved_multi_id_appends_roundtrip_prop() {
+        // The delta-varint blob must round-trip under interleaved
+        // appends across several ids: each id's retrieved list is the
+        // sorted, deduplicated union of everything appended for it, in
+        // strictly ascending (Morton) order — regardless of how appends
+        // for different ids interleave.
+        property("index_interleaved_multi_id", 60, |g| {
+            let idx = index();
+            let n_ids = 1 + g.usize_below(4) as u32;
+            let rounds = 1 + g.usize_below(6);
+            let mut expect: HashMap<u32, Vec<u64>> = HashMap::new();
+            for _ in 0..rounds {
+                let mut updates: HashMap<u32, Vec<u64>> = HashMap::new();
+                for id in 1..=n_ids {
+                    if g.chance(0.7) {
+                        let n = 1 + g.usize_below(20);
+                        let codes = g.vec_u64(n, 4096);
+                        expect.entry(id).or_default().extend(&codes);
+                        updates.insert(id, codes);
+                    }
+                }
+                idx.append_batch(0, &updates).unwrap();
+            }
+            for (id, mut codes) in expect {
+                codes.sort_unstable();
+                codes.dedup();
+                let got = idx.cuboids_of(0, id).unwrap();
+                assert_eq!(got, codes, "id {id}");
+                assert!(
+                    got.windows(2).all(|w| w[0] < w[1]),
+                    "id {id}: retrieval must stay strictly Morton-sorted"
+                );
+                // The stored blob is the compact delta coding, not the
+                // raw 8-byte-per-code array.
+                if got.len() > 16 {
+                    assert!(idx.entry_bytes(0, id).unwrap() < got.len() * 8);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn voxel_list_retrieval_stays_morton_sorted() {
+        // End to end through AnnotationDb: the per-object cuboid list
+        // feeding voxel_list is Morton-sorted, and the voxel list comes
+        // back sorted — the single sequential pass of Figure 9.
+        use crate::annotation::AnnotationDb;
+        use crate::array::DenseVolume;
+        use crate::chunkstore::CuboidStore;
+        use crate::core::{Box3, DatasetBuilder, WriteDiscipline};
+        let ds = Arc::new(DatasetBuilder::new("t", [256, 256, 32]).levels(1).build());
+        let pr = Arc::new(Project::annotation("ann", "t"));
+        let engine: crate::storage::Engine = Arc::new(MemStore::new());
+        let store = Arc::new(CuboidStore::new(ds, pr, Arc::clone(&engine)));
+        let db = AnnotationDb::new(store, engine).unwrap();
+        // Two writes of one id in distinct cuboids, out of curve order.
+        for lo in [[200u64, 200, 20], [0, 0, 0]] {
+            let bx = Box3::at(lo, [16, 16, 4]);
+            let mut v = DenseVolume::<u32>::zeros(bx.extent());
+            v.fill_box(Box3::new([0, 0, 0], bx.extent()), 7);
+            db.write_volume(0, bx, &v, WriteDiscipline::Overwrite).unwrap();
+        }
+        let codes = db.index.cuboids_of(0, 7).unwrap();
+        assert!(codes.len() >= 2);
+        assert!(codes.windows(2).all(|w| w[0] < w[1]), "index Morton-sorted");
+        let voxels = db.voxel_list(0, 7).unwrap();
+        assert_eq!(voxels.len(), 2 * 16 * 16 * 4);
+        assert!(voxels.windows(2).all(|w| w[0] < w[1]), "voxel list sorted");
+    }
+
+    #[test]
     fn append_batch_prop_union_semantics() {
         property("index_union", 100, |g| {
             let idx = index();

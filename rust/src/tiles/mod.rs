@@ -157,6 +157,7 @@ impl TileService {
         let t_lo = [region.lo[0] / ts, region.lo[1] / ts];
         let t_hi = [region.hi[0].div_ceil(ts), region.hi[1].div_ceil(ts)];
         let mut cache = self.cache.lock().unwrap();
+        let mut requested: Option<Vec<u8>> = None;
         for ty in t_lo[1]..t_hi[1].max(t_lo[1] + 1) {
             for tx in t_lo[0]..t_hi[0].max(t_lo[0] + 1) {
                 let k = TileKey { res: key.res, z: key.z, y: ty, x: tx };
@@ -180,12 +181,18 @@ impl TileService {
                         }
                     }
                 }
+                if k == key {
+                    requested = Some(tile.clone());
+                }
                 cache.put(k, tile);
             }
         }
-        // Ensure the requested tile exists even outside volume bounds.
+        // Ensure the requested tile survives its own prefetch: when the
+        // cache capacity is smaller than a prefetch block, later inserts
+        // can evict it — re-insert the real content rather than let the
+        // caller see zeros. Outside volume bounds it is genuinely zero.
         if !cache.map.contains_key(&key) {
-            cache.put(key, vec![0u8; (ts * ts) as usize]);
+            cache.put(key, requested.unwrap_or_else(|| vec![0u8; (ts * ts) as usize]));
         }
         Ok(())
     }
@@ -282,6 +289,38 @@ mod tests {
     }
 
     #[test]
+    fn miss_materializes_every_tile_in_the_covering_cuboid_region() {
+        // The prefetch contract: one miss rounds the request up to the
+        // covering cuboids ([128,128,16] at this dataset's level 0) and
+        // caches ALL tiles of that region — here 64-px tiles over a
+        // 128x128 cuboid footprint, i.e. the full 2x2 tile block.
+        let ts = TileService::new(service(), 64, 128);
+        ts.get_tile(TileKey { res: 0, z: 3, y: 1, x: 0 }).unwrap();
+        assert_eq!(ts.misses.get(), 1);
+        {
+            let cache = ts.cache.lock().unwrap();
+            for ty in 0..2u64 {
+                for tx in 0..2u64 {
+                    let k = TileKey { res: 0, z: 3, y: ty, x: tx };
+                    assert!(cache.map.contains_key(&k), "tile {k:?} not prefetched");
+                }
+            }
+            // Nothing outside the covering region (other z-sections or
+            // the neighbouring cuboid column) was speculatively built.
+            assert!(!cache.map.contains_key(&TileKey { res: 0, z: 4, y: 0, x: 0 }));
+            assert!(!cache.map.contains_key(&TileKey { res: 0, z: 3, y: 0, x: 2 }));
+        }
+        // Every tile of the region is now a hit, with no further misses.
+        for ty in 0..2u64 {
+            for tx in 0..2u64 {
+                ts.get_tile(TileKey { res: 0, z: 3, y: ty, x: tx }).unwrap();
+            }
+        }
+        assert_eq!(ts.misses.get(), 1, "prefetched tiles must not miss");
+        assert_eq!(ts.hits.get(), 4);
+    }
+
+    #[test]
     fn lru_evicts() {
         let ts = TileService::new(service(), 64, 2);
         for x in 0..4 {
@@ -289,6 +328,42 @@ mod tests {
         }
         let cache_len = ts.cache.lock().unwrap().map.len();
         assert!(cache_len <= 2);
+    }
+
+    #[test]
+    fn lru_eviction_respects_capacity_and_recency() {
+        // Capacity is respected across many prefetch-heavy misses (each
+        // miss inserts a 2x2 tile block, more than the per-put slack)...
+        let ts = TileService::new(service(), 64, 6);
+        for z in 0..8u64 {
+            for x in 0..4u64 {
+                ts.get_tile(TileKey { res: 0, z, y: 0, x }).unwrap();
+            }
+            assert!(
+                ts.cache.lock().unwrap().map.len() <= 6,
+                "capacity exceeded at z={z}"
+            );
+        }
+        // ...and the most-recently-used tile survives a miss that
+        // prefetches (and therefore evicts) a whole 4-tile block.
+        let hot = TileKey { res: 0, z: 7, y: 0, x: 3 };
+        ts.get_tile(hot).unwrap(); // touch: newest stamp
+        let hits_before = ts.hits.get();
+        ts.get_tile(TileKey { res: 0, z: 0, y: 1, x: 0 }).unwrap();
+        ts.get_tile(hot).unwrap();
+        assert!(ts.hits.get() >= hits_before + 1, "hot tile must survive eviction");
+        assert!(ts.cache.lock().unwrap().map.len() <= 6);
+    }
+
+    #[test]
+    fn tiny_cache_still_returns_real_tile_content() {
+        // Capacity 1: the prefetch block evicts everything, including
+        // the requested tile mid-prefetch; get_tile must still answer
+        // with real data, not the zero placeholder.
+        let ts = TileService::new(service(), 64, 1);
+        let tile = ts.get_tile(TileKey { res: 0, z: 3, y: 1, x: 2 }).unwrap();
+        let expect = ((128 * 7 + 64 * 13 + 3 * 31) % 251) as u8;
+        assert_eq!(tile[0], expect, "evicted-during-prefetch tile must keep its data");
     }
 
     #[test]

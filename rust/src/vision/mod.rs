@@ -107,15 +107,16 @@ impl SynapsePipeline {
         }
     }
 
-    /// Run detection over `region` at resolution `res`. The region is
-    /// tiled into detector-core-sized blocks.
-    pub fn run(&self, res: u32, region: Box3) -> Result<PipelineReport> {
+    /// The detector-core block tiling of `region` at `res` — clipped
+    /// core boxes in deterministic z-major order. This is the shared
+    /// block plan of [`SynapsePipeline::run`] and the batch job engine's
+    /// [`crate::jobs::SynapseDetectJob`], so the two execute the exact
+    /// same block set.
+    pub fn core_blocks(&self, res: u32, region: Box3) -> Result<Vec<Box3>> {
         let spec = GRAPHS[0]; // synapse_detector
         let core = [spec.output[0] as u64, spec.output[1] as u64, spec.output[2] as u64];
         let bounds = self.image.store().dataset.level(res)?.bounds();
         let region = region.intersect(&bounds);
-
-        // Enumerate core blocks.
         let mut blocks = Vec::new();
         let mut z = region.lo[2];
         while z < region.hi[2] {
@@ -123,13 +124,66 @@ impl SynapsePipeline {
             while y < region.hi[1] {
                 let mut x = region.lo[0];
                 while x < region.hi[0] {
-                    blocks.push([x, y, z]);
+                    blocks.push(Box3::new(
+                        [x, y, z],
+                        [
+                            (x + core[0]).min(region.hi[0]),
+                            (y + core[1]).min(region.hi[1]),
+                            (z + core[2]).min(region.hi[2]),
+                        ],
+                    ));
                     x += core[0];
                 }
                 y += core[1];
             }
             z += core[2];
         }
+        Ok(blocks)
+    }
+
+    /// Enrich detections with position/author metadata and write them in
+    /// `write_batch`-sized RAMON batches (§4.2's batch interface).
+    fn write_metadata(&self, dets: &[Detection]) -> Result<()> {
+        for chunk in dets.chunks(self.write_batch.max(1)) {
+            let objs: Vec<RamonObject> = chunk
+                .iter()
+                .map(|d| {
+                    let mut o = RamonObject::synapse(d.id, d.confidence, SynapseType::Unknown);
+                    o.seeds = vec![];
+                    o.position = d.centroid;
+                    o.author = "ocpd-synapse-pipeline".into();
+                    o
+                })
+                .collect();
+            self.annotations.put_objects(objs)?;
+        }
+        Ok(())
+    }
+
+    /// Detect in one core block and write labels + batched RAMON
+    /// metadata — the batch job engine's per-block unit
+    /// ([`crate::jobs::SynapseDetectJob`]). Re-execution safe: any
+    /// failure deletes the objects this attempt created before
+    /// returning, so the job engine's retries (and a checkpoint-resume
+    /// re-run of an unjournaled block) never duplicate synapses.
+    pub fn detect_block(&self, res: u32, core_box: Box3) -> Result<Vec<Detection>> {
+        let voxels = AtomicU64::new(0);
+        let dets = self.process_block(res, core_box.lo, core_box, &voxels)?;
+        if !dets.is_empty() {
+            if let Err(e) = self.write_metadata(&dets) {
+                for d in &dets {
+                    let _ = self.annotations.delete_object(res, d.id);
+                }
+                return Err(e);
+            }
+        }
+        Ok(dets)
+    }
+
+    /// Run detection over `region` at resolution `res`. The region is
+    /// tiled into detector-core-sized blocks.
+    pub fn run(&self, res: u32, region: Box3) -> Result<PipelineReport> {
+        let blocks = self.core_blocks(res, region)?;
 
         let t0 = Instant::now();
         let voxels_read = AtomicU64::new(0);
@@ -137,35 +191,14 @@ impl SynapsePipeline {
         let detections: Mutex<Vec<Detection>> = Mutex::new(Vec::new());
 
         let results = scoped_map(blocks.len(), self.workers, |i| -> Result<()> {
-            let lo = blocks[i];
-            let core_box = Box3::new(
-                lo,
-                [
-                    (lo[0] + core[0]).min(region.hi[0]),
-                    (lo[1] + core[1]).min(region.hi[1]),
-                    (lo[2] + core[2]).min(region.hi[2]),
-                ],
-            );
-            let dets = self.process_block(res, lo, core_box, &voxels_read)?;
+            let core_box = blocks[i];
+            let dets = self.process_block(res, core_box.lo, core_box, &voxels_read)?;
             if dets.is_empty() {
                 return Ok(());
             }
             // Batched writes: metadata in write_batch groups, voxels as
             // one label volume per block.
-            for chunk in dets.chunks(self.write_batch) {
-                let objs: Vec<RamonObject> = chunk
-                    .iter()
-                    .map(|d| {
-                        let mut o =
-                            RamonObject::synapse(d.id, d.confidence, SynapseType::Unknown);
-                        o.seeds = vec![];
-                        o.position = d.centroid;
-                        o.author = "ocpd-synapse-pipeline".into();
-                        o
-                    })
-                    .collect();
-                self.annotations.put_objects(objs)?;
-            }
+            self.write_metadata(&dets)?;
             voxels_labeled
                 .fetch_add(dets.iter().map(|d| d.voxels as u64).sum(), Ordering::Relaxed);
             detections.lock().unwrap().extend(dets);
@@ -270,9 +303,9 @@ impl SynapsePipeline {
         // Core voxel [v] sits at input index [v + halo].
         let core_off = halo;
 
+        // Filter components first (pure compute, nothing allocated).
         let comps = connected_components(&mask);
-        let mut dets = Vec::new();
-        let mut labels = DenseVolume::<u32>::zeros(core_ext);
+        let mut kept: Vec<(Component, f32)> = Vec::new();
         for comp in comps {
             if comp.voxels.len() < self.min_voxels || comp.voxels.len() > self.max_voxels {
                 continue;
@@ -294,27 +327,51 @@ impl SynapsePipeline {
                 .map(|&v| prob.get(v))
                 .sum::<f32>()
                 / comp.voxels.len() as f32;
-            let id = self.annotations.put_object(RamonObject::synapse(
-                0,
-                mean_p,
-                SynapseType::Unknown,
-            ))?;
-            for &v in &comp.voxels {
-                labels.set(v, id);
-            }
-            dets.push(Detection {
-                id,
-                centroid: [
-                    core_box.lo[0] + comp.centroid[0],
-                    core_box.lo[1] + comp.centroid[1],
-                    core_box.lo[2] + comp.centroid[2],
-                ],
-                voxels: comp.voxels.len(),
-                confidence: mean_p,
-            });
+            kept.push((comp, mean_p));
         }
-        if !dets.is_empty() {
-            self.annotations.write_volume(res, core_box, &labels, WriteDiscipline::Preserve)?;
+
+        // Allocate ids + write labels in a compensated section: on a
+        // partial failure, delete everything this attempt created, so a
+        // retry (or a checkpoint-resume re-execution) of the block
+        // cannot leave duplicate synapse objects behind.
+        let mut dets = Vec::new();
+        let mut labels = DenseVolume::<u32>::zeros(core_ext);
+        let attempt = (|| -> Result<()> {
+            for (comp, mean_p) in &kept {
+                let id = self.annotations.put_object(RamonObject::synapse(
+                    0,
+                    *mean_p,
+                    SynapseType::Unknown,
+                ))?;
+                for &v in &comp.voxels {
+                    labels.set(v, id);
+                }
+                dets.push(Detection {
+                    id,
+                    centroid: [
+                        core_box.lo[0] + comp.centroid[0],
+                        core_box.lo[1] + comp.centroid[1],
+                        core_box.lo[2] + comp.centroid[2],
+                    ],
+                    voxels: comp.voxels.len(),
+                    confidence: *mean_p,
+                });
+            }
+            if !dets.is_empty() {
+                self.annotations.write_volume(
+                    res,
+                    core_box,
+                    &labels,
+                    WriteDiscipline::Preserve,
+                )?;
+            }
+            Ok(())
+        })();
+        if let Err(e) = attempt {
+            for d in &dets {
+                let _ = self.annotations.delete_object(res, d.id);
+            }
+            return Err(e);
         }
         Ok(dets)
     }

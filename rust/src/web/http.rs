@@ -54,11 +54,14 @@ pub struct Response {
     pub status: u16,
     pub content_type: &'static str,
     pub body: Vec<u8>,
+    /// Methods advertised in an `Allow` header — set on 405 responses
+    /// (RFC 9110 §15.5.6: a 405 "MUST generate an Allow header").
+    pub allow: Option<&'static str>,
 }
 
 impl Response {
     pub fn ok(body: Vec<u8>, content_type: &'static str) -> Response {
-        Response { status: 200, content_type, body }
+        Response { status: 200, content_type, body, allow: None }
     }
 
     pub fn text(s: impl Into<String>) -> Response {
@@ -70,7 +73,17 @@ impl Response {
     }
 
     pub fn error(status: u16, msg: impl Into<String>) -> Response {
-        Response { status, content_type: "text/plain", body: msg.into().into_bytes() }
+        Response { status, content_type: "text/plain", body: msg.into().into_bytes(), allow: None }
+    }
+
+    /// A 405 naming the methods the route does accept.
+    pub fn method_not_allowed(allow: &'static str) -> Response {
+        Response {
+            status: 405,
+            content_type: "text/plain",
+            body: format!("method not allowed (allow: {allow})").into_bytes(),
+            allow: Some(allow),
+        }
     }
 
     fn reason(&self) -> &'static str {
@@ -340,11 +353,16 @@ fn read_request(
 }
 
 fn write_response(mut stream: &TcpStream, resp: &Response) -> Result<()> {
+    let allow = match resp.allow {
+        Some(methods) => format!("Allow: {methods}\r\n"),
+        None => String::new(),
+    };
     let head = format!(
-        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\n{}Content-Length: {}\r\nConnection: close\r\n\r\n",
         resp.status,
         resp.reason(),
         resp.content_type,
+        allow,
         resp.body.len()
     );
     stream.write_all(head.as_bytes())?;
@@ -558,6 +576,20 @@ mod tests {
         let mut payload = b"GET /hello/ HTTP/1.1\r\nX-Junk: ".to_vec();
         payload.extend(std::iter::repeat(b'a').take(80 << 10));
         assert_eq!(raw_status(s.addr(), &payload), 400);
+    }
+
+    #[test]
+    fn method_not_allowed_carries_allow_header() {
+        let s = Server::bind("127.0.0.1:0", 2, |_req| {
+            Response::method_not_allowed("GET, PUT")
+        })
+        .unwrap();
+        let mut stream = TcpStream::connect(s.addr()).unwrap();
+        stream.write_all(b"DELETE /x/ HTTP/1.1\r\n\r\n").unwrap();
+        let mut raw = String::new();
+        BufReader::new(stream).read_to_string(&mut raw).unwrap();
+        assert!(raw.starts_with("HTTP/1.1 405 Method Not Allowed"), "{raw}");
+        assert!(raw.contains("\r\nAllow: GET, PUT\r\n"), "{raw}");
     }
 
     #[test]

@@ -24,9 +24,17 @@
 //! GET /info/                                                      cluster info
 //! GET /wal/status/                                                write-log status
 //! PUT /wal/flush/  |  PUT /wal/flush/{token}/                     drain write logs
+//! GET /cache/status/                                              cuboid-cache status
+//! POST /jobs/propagate/{token}/                                   submit hierarchy build
+//! POST /jobs/synapse/{image}/{annotation}/                        submit synapse detection
+//! POST /jobs/ingest/{token}/                                      submit bulk ingest
+//! GET /jobs/status/  |  GET /jobs/status/{id}/                    job status
+//! POST /jobs/cancel/{id}/                                         cancel a job
 //! ```
 //!
-//! `info` and `wal` are reserved top-level names, not project tokens.
+//! `info`, `wal`, `cache`, and `jobs` are reserved top-level names, not
+//! project tokens; wrong-method requests to them answer `405` with an
+//! `Allow` header.
 
 pub mod http;
 pub mod ocpk;

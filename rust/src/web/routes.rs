@@ -6,17 +6,26 @@ use crate::annotation::{Predicate, PredicateOp, RegionQuery};
 use crate::array::Plane;
 use crate::cluster::Cluster;
 use crate::core::{Box3, Dtype, WriteDiscipline};
+use crate::ingest::SynthSpec;
+use crate::jobs::{BulkIngestJob, JobConfig, JobSpec, PropagateJob, SynapseDetectJob};
 use crate::runtime::Runtime;
 use crate::tiles::{TileKey, TileService};
+use crate::vision::SynapsePipeline;
 use crate::web::http::{Request, Response};
 use crate::web::ocpk;
 use crate::{Error, Result};
+
+/// Upper bound on a server-side synthetic-ingest request, in voxels.
+/// The generator materializes the whole volume (8 B/voxel accumulator
+/// plus the u8 output), so this caps the per-request allocation at
+/// ~1.2 GiB regardless of how large the registered dataset is.
+const MAX_INGEST_VOXELS: u64 = 1 << 27;
 
 /// The Web-service layer over a cluster (the paper's "application
 /// server" role).
 pub struct OcpService {
     cluster: Arc<Cluster>,
-    #[allow(dead_code)] // reserved for server-side vision endpoints
+    /// Loaded vision runtime; `POST /jobs/synapse/...` requires it.
     runtime: Option<Arc<Runtime>>,
     tiles: std::sync::Mutex<std::collections::HashMap<String, Arc<TileService>>>,
 }
@@ -47,15 +56,23 @@ impl OcpService {
         }
         match (req.method.as_str(), segs[0]) {
             (_, "info") => self.info(),
-            // `wal` and `cache` are reserved top-level names (like
-            // `info`): the write-absorber's and the cuboid cache's
-            // observability surfaces.
+            // `wal`, `cache`, and `jobs` are reserved top-level names
+            // (like `info`): the write-absorber's, the cuboid cache's,
+            // and the batch compute engine's surfaces. Wrong-method
+            // requests answer 405 + `Allow` here instead of falling
+            // through to the project handlers and emitting a confusing
+            // 400 ("unknown write discipline 'status'").
             ("GET", "wal") => self.wal_get(&segs[1..]),
             ("PUT" | "POST", "wal") => self.wal_flush(&segs[1..]),
+            (_, "wal") => Ok(Response::method_not_allowed("GET, PUT, POST")),
             ("GET", "cache") => self.cache_get(&segs[1..]),
+            (_, "cache") => Ok(Response::method_not_allowed("GET")),
+            ("GET", "jobs") => self.jobs_get(&segs[1..]),
+            ("PUT" | "POST", "jobs") => self.jobs_post(&segs[1..], &req.body),
+            (_, "jobs") => Ok(Response::method_not_allowed("GET, PUT, POST")),
             ("GET", token) => self.get(token, &segs[1..]),
             ("PUT" | "POST", token) => self.put(token, &segs[1..], &req.body),
-            _ => Ok(Response::error(405, "method not allowed")),
+            _ => Ok(Response::method_not_allowed("GET, PUT, POST")),
         }
     }
 
@@ -86,7 +103,7 @@ impl OcpService {
                 }
                 Ok(Response::text(out))
             }
-            ["flush", ..] => Ok(Response::error(405, "flush requires PUT or POST")),
+            ["flush", ..] => Ok(Response::method_not_allowed("PUT, POST")),
             _ => Err(Error::BadRequest(format!("unrecognized GET /wal/{}", rest.join("/")))),
         }
     }
@@ -137,6 +154,132 @@ impl OcpService {
                 Err(Error::BadRequest(format!("unrecognized GET /cache/{}", rest.join("/"))))
             }
         }
+    }
+
+    // ------------------------------------------------------------------
+    // Job routes (the batch compute engine)
+    // ------------------------------------------------------------------
+
+    /// GET /jobs/status/ (all jobs) or /jobs/status/{id}/ (one job).
+    fn jobs_get(&self, rest: &[&str]) -> Result<Response> {
+        match rest {
+            ["status"] => {
+                let mut out = String::from("jobs:\n");
+                for s in self.cluster.jobs().statuses() {
+                    out.push_str(&format!("  {}\n", s.line()));
+                }
+                Ok(Response::text(out))
+            }
+            ["status", id] => {
+                let id = parse_num(id)?;
+                match self.cluster.jobs().get(id) {
+                    Some(h) => Ok(Response::text(h.status().line())),
+                    None => Err(Error::NotFound(format!("job {id}"))),
+                }
+            }
+            ["cancel", ..] => Ok(Response::method_not_allowed("POST, PUT")),
+            _ => Err(Error::BadRequest(format!("unrecognized GET /jobs/{}", rest.join("/")))),
+        }
+    }
+
+    /// POST /jobs/{propagate|synapse|ingest}/... (submit) and
+    /// POST /jobs/cancel/{id}/ — body: whitespace-separated `key=value`
+    /// params (`workers=N`, `job=ID` to resume, plus per-type extras).
+    fn jobs_post(&self, rest: &[&str], body: &[u8]) -> Result<Response> {
+        let params = parse_params(body);
+        match rest {
+            ["cancel", id] => {
+                let id = parse_num(id)?;
+                self.cluster.jobs().cancel(id)?;
+                Ok(Response::text(format!("cancelled={id}")))
+            }
+            // POST /jobs/propagate/{token}/ — build the resolution
+            // hierarchy of an image or annotation project.
+            ["propagate", token] => {
+                let spec: Arc<dyn JobSpec> = match self.cluster.image(token) {
+                    Ok(svc) => Arc::new(PropagateJob::image(svc)),
+                    Err(_) => Arc::new(PropagateJob::annotation(self.cluster.annotation(token)?)),
+                };
+                self.submit(spec, &params)
+            }
+            // POST /jobs/synapse/{image}/{annotation}/ — the §2 vision
+            // workload; needs the AOT runtime.
+            ["synapse", img, ann] => {
+                let runtime = self.runtime.clone().ok_or_else(|| {
+                    Error::BadRequest(
+                        "no vision runtime loaded (start the server with artifacts)".into(),
+                    )
+                })?;
+                let image = self.cluster.image(img)?;
+                let anno = self.cluster.annotation(ann)?;
+                let res = param_num(&params, "res", 0)? as u32;
+                let region = image.store().dataset.level(res)?.bounds();
+                let pipeline = Arc::new(SynapsePipeline::new(runtime, image, anno));
+                self.submit(Arc::new(SynapseDetectJob::new(pipeline, res, region)), &params)
+            }
+            // POST /jobs/ingest/{token}/ — chunked synthetic-EM ingest
+            // (`dims=X,Y,Z` required; `seed=N` optional).
+            ["ingest", token] => {
+                let svc = self.cluster.image(token)?;
+                let dims = params
+                    .get("dims")
+                    .ok_or_else(|| Error::BadRequest("ingest needs dims=X,Y,Z".into()))?;
+                let dims = parse_triple(dims)?;
+                // Clamp to the project's level-0 bounds, then cap the
+                // total volume: the generator holds the whole volume in
+                // memory (an f64 accumulator, 8 B/voxel), so client
+                // dims must never size an arbitrary allocation — a
+                // registered dataset's bounds alone can exceed RAM.
+                let bounds = svc.store().dataset.level(0)?.dims;
+                let dims = [
+                    dims[0].min(bounds[0]).max(1),
+                    dims[1].min(bounds[1]).max(1),
+                    dims[2].min(bounds[2]).max(1),
+                ];
+                let voxels = dims[0].saturating_mul(dims[1]).saturating_mul(dims[2]);
+                if voxels > MAX_INGEST_VOXELS {
+                    return Err(Error::BadRequest(format!(
+                        "ingest volume of {voxels} voxels exceeds the \
+                         {MAX_INGEST_VOXELS}-voxel limit (ingest a sub-volume, or use \
+                         client-side uploads for full-scale data)"
+                    )));
+                }
+                let seed = param_num(&params, "seed", 2013)?;
+                let block = match params.get("block") {
+                    Some(b) => parse_triple(b)?,
+                    None => [256, 256, 16],
+                };
+                let spec = SynthSpec::small(dims, seed);
+                self.submit(Arc::new(BulkIngestJob::new(svc, spec, block)), &params)
+            }
+            ["status", ..] => Ok(Response::method_not_allowed("GET")),
+            _ => Err(Error::BadRequest(format!("unrecognized POST /jobs/{}", rest.join("/")))),
+        }
+    }
+
+    /// Launch a job (fresh id, or resume via `job=ID`) and report it.
+    fn submit(
+        &self,
+        spec: Arc<dyn JobSpec>,
+        params: &std::collections::HashMap<String, String>,
+    ) -> Result<Response> {
+        // `MAX_WORKERS` also guards inside the engine; clamping here
+        // keeps a typo'd `workers=100000` from even trying.
+        let cfg = JobConfig {
+            workers: (param_num(params, "workers", 4)? as usize)
+                .clamp(1, crate::jobs::MAX_WORKERS),
+            ..JobConfig::default()
+        };
+        let handle = match params.get("job") {
+            Some(id) => self.cluster.jobs().submit_with_id(parse_num(id)?, spec, cfg)?,
+            None => self.cluster.jobs().submit(spec, cfg)?,
+        };
+        Ok(Response::text(format!(
+            "id={} name={} state={}",
+            handle.id,
+            handle.name(),
+            handle.state().as_str()
+        )))
     }
 
     fn info(&self) -> Result<Response> {
@@ -353,6 +496,38 @@ fn parse_num(s: &str) -> Result<u64> {
     s.parse().map_err(|_| Error::BadRequest(format!("bad number '{s}'")))
 }
 
+/// Whitespace-separated `key=value` pairs (job-submission bodies).
+fn parse_params(body: &[u8]) -> std::collections::HashMap<String, String> {
+    let mut out = std::collections::HashMap::new();
+    for pair in String::from_utf8_lossy(body).split_whitespace() {
+        if let Some((k, v)) = pair.split_once('=') {
+            out.insert(k.to_string(), v.to_string());
+        }
+    }
+    out
+}
+
+/// Numeric param with a default; present-but-garbled values are 400s.
+fn param_num(
+    params: &std::collections::HashMap<String, String>,
+    key: &str,
+    default: u64,
+) -> Result<u64> {
+    match params.get(key) {
+        Some(v) => parse_num(v),
+        None => Ok(default),
+    }
+}
+
+/// `"X,Y,Z"` → `[X, Y, Z]` (job dims/block params).
+fn parse_triple(s: &str) -> Result<[u64; 3]> {
+    let v: Vec<u64> = s.split(',').map(parse_num).collect::<Result<_>>()?;
+    if v.len() != 3 {
+        return Err(Error::BadRequest(format!("bad triple '{s}' (want X,Y,Z)")));
+    }
+    Ok([v[0], v[1], v[2]])
+}
+
 fn parse_res(s: &str) -> Result<u32> {
     Ok(parse_num(s)? as u32)
 }
@@ -438,5 +613,19 @@ mod tests {
     fn box_parsing() {
         let b = parse_box("0,128", "128,256", "0,16").unwrap();
         assert_eq!(b, Box3::new([0, 128, 0], [128, 256, 16]));
+    }
+
+    #[test]
+    fn job_param_parsing() {
+        let p = parse_params(b"workers=8 dims=512,512,64\nseed=7");
+        assert_eq!(p.get("workers").unwrap(), "8");
+        assert_eq!(param_num(&p, "workers", 4).unwrap(), 8);
+        assert_eq!(param_num(&p, "absent", 4).unwrap(), 4);
+        assert_eq!(parse_triple(p.get("dims").unwrap()).unwrap(), [512, 512, 64]);
+        assert!(parse_triple("1,2").is_err());
+        assert!(parse_triple("a,b,c").is_err());
+        // Garbled present values are errors, not silent defaults.
+        let bad = parse_params(b"workers=banana");
+        assert!(param_num(&bad, "workers", 4).is_err());
     }
 }

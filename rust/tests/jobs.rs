@@ -1,0 +1,329 @@
+//! Batch compute engine integration: crash/resume fidelity and parity
+//! with the one-shot pipelines.
+//!
+//! * A `Propagate` job killed mid-run (budget-stopped, as a crash
+//!   stand-in — resume relies only on the checkpoint journal) resumes
+//!   and produces volumes byte-identical to an uninterrupted run.
+//! * `Propagate` job output is byte-identical to the one-shot
+//!   [`Propagator`] (the satellite parity contract for the
+//!   reuse-previous-level optimization).
+//! * A `SynapseDetect` job at 4 workers matches the sequential
+//!   `SynapsePipeline` detection set (requires `make artifacts`;
+//!   skipped gracefully without them).
+
+use std::sync::Arc;
+
+use ocpd::annotation::{AnnotationDb, Predicate};
+use ocpd::array::DenseVolume;
+use ocpd::chunkstore::CuboidStore;
+use ocpd::cluster::Cluster;
+use ocpd::core::{Box3, DatasetBuilder, Project, Vec3, WriteDiscipline};
+use ocpd::cutout::CutoutService;
+use ocpd::ingest::{generate, ingest_volume, SynthSpec};
+use ocpd::jobs::{JobConfig, JobManager, JobState, PropagateJob, SynapseDetectJob};
+use ocpd::resolution::Propagator;
+use ocpd::storage::{Engine, MemStore};
+use ocpd::util::Rng;
+
+fn image_service(dims: Vec3, levels: u32) -> Arc<CutoutService> {
+    let ds = Arc::new(DatasetBuilder::new("t", dims).levels(levels).build());
+    let pr = Arc::new(Project::image("img", "t"));
+    Arc::new(CutoutService::new(Arc::new(CuboidStore::new(
+        ds,
+        pr,
+        Arc::new(MemStore::new()),
+    ))))
+}
+
+/// An annotation database over small (32x32x8) cuboids so propagation
+/// plans several blocks even at test-sized volumes.
+fn anno_db(dims: Vec3, levels: u32) -> Arc<AnnotationDb> {
+    let ds = Arc::new(
+        DatasetBuilder::new("t", dims)
+            .levels(levels)
+            .cuboids([32, 32, 8], [16, 16, 16])
+            .build(),
+    );
+    let pr = Arc::new(Project::annotation("ann", "t"));
+    let engine: Engine = Arc::new(MemStore::new());
+    let store = Arc::new(CuboidStore::new(ds, pr, Arc::clone(&engine)));
+    Arc::new(AnnotationDb::new(store, engine).unwrap())
+}
+
+/// Random sparse labels: deterministic for a seed, ~25% zero.
+fn random_labels(dims: Vec3, seed: u64) -> DenseVolume<u32> {
+    let mut rng = Rng::new(seed);
+    let n = (dims[0] * dims[1] * dims[2]) as usize;
+    DenseVolume::from_vec(
+        dims,
+        (0..n)
+            .map(|_| {
+                let v = rng.next_u32() % 64;
+                if v < 16 {
+                    0
+                } else {
+                    v
+                }
+            })
+            .collect(),
+    )
+    .unwrap()
+}
+
+fn manager() -> JobManager {
+    JobManager::new(Arc::new(MemStore::new()))
+}
+
+/// Read every level above base fully and concatenate the bytes.
+fn hierarchy_bytes_u32(svc: &CutoutService) -> Vec<u8> {
+    let mut out = Vec::new();
+    let levels = svc.store().dataset.num_levels();
+    for res in 1..levels {
+        let dims = svc.store().dataset.level(res).unwrap().dims;
+        let vol = svc.read::<u32>(res, 0, 0, Box3::new([0, 0, 0], dims)).unwrap();
+        out.extend_from_slice(vol.as_bytes());
+    }
+    out
+}
+
+#[test]
+fn propagate_job_matches_one_shot_propagator_image() {
+    // Power-of-two and ragged (odd-truncating) volume shapes.
+    for dims in [[256u64, 256, 32], [200, 120, 24]] {
+        let a = image_service(dims, 3);
+        let b = image_service(dims, 3);
+        let whole = Box3::new([0, 0, 0], dims);
+        let mut rng = Rng::new(17);
+        let n = whole.volume() as usize;
+        let vol = DenseVolume::<u8>::from_vec(
+            dims,
+            (0..n).map(|_| rng.next_u32() as u8).collect(),
+        )
+        .unwrap();
+        a.write(0, 0, 0, whole, &vol).unwrap();
+        b.write(0, 0, 0, whole, &vol).unwrap();
+
+        // One-shot path on A; the batch job (4 workers) on B.
+        Propagator::new(&a).propagate_image().unwrap();
+        let h = manager()
+            .submit(Arc::new(PropagateJob::image(Arc::clone(&b))), JobConfig::with_workers(4))
+            .unwrap();
+        assert_eq!(h.wait(), JobState::Completed);
+
+        for res in 1..3u32 {
+            let d = a.store().dataset.level(res).unwrap().dims;
+            let box_ = Box3::new([0, 0, 0], d);
+            let va = a.read::<u8>(res, 0, 0, box_).unwrap();
+            let vb = b.read::<u8>(res, 0, 0, box_).unwrap();
+            assert_eq!(va.as_bytes(), vb.as_bytes(), "dims {dims:?} level {res}");
+        }
+    }
+}
+
+#[test]
+fn propagate_job_deep_hierarchy_banded_parity() {
+    // Five levels span two bands (phases): the second band reads the
+    // level the first band built, across the engine's phase barrier —
+    // and the result still matches the one-shot Propagator byte for
+    // byte.
+    let dims = [256u64, 256, 16];
+    let mk = || {
+        let ds = Arc::new(
+            DatasetBuilder::new("t", dims)
+                .levels(5)
+                .cuboids([16, 16, 8], [16, 16, 8])
+                .build(),
+        );
+        let pr = Arc::new(Project::image("img", "t"));
+        Arc::new(CutoutService::new(Arc::new(CuboidStore::new(
+            ds,
+            pr,
+            Arc::new(MemStore::new()),
+        ))))
+    };
+    let a = mk();
+    let b = mk();
+    let whole = Box3::new([0, 0, 0], dims);
+    let mut rng = Rng::new(23);
+    let n = whole.volume() as usize;
+    let vol =
+        DenseVolume::<u8>::from_vec(dims, (0..n).map(|_| rng.next_u32() as u8).collect())
+            .unwrap();
+    a.write(0, 0, 0, whole, &vol).unwrap();
+    b.write(0, 0, 0, whole, &vol).unwrap();
+    Propagator::new(&a).propagate_image().unwrap();
+    let h = manager()
+        .submit(Arc::new(PropagateJob::image(Arc::clone(&b))), JobConfig::with_workers(4))
+        .unwrap();
+    assert_eq!(h.wait(), JobState::Completed);
+    let st = h.status();
+    assert!(st.total_blocks >= 10, "want multi-band plan, got {}", st.total_blocks);
+    for res in 1..5u32 {
+        let d = a.store().dataset.level(res).unwrap().dims;
+        let box_ = Box3::new([0, 0, 0], d);
+        assert_eq!(
+            a.read::<u8>(res, 0, 0, box_).unwrap().as_bytes(),
+            b.read::<u8>(res, 0, 0, box_).unwrap().as_bytes(),
+            "level {res}"
+        );
+    }
+}
+
+#[test]
+fn propagate_job_matches_one_shot_propagator_labels() {
+    let dims = [160u64, 96, 24];
+    let a = anno_db(dims, 3);
+    let b = anno_db(dims, 3);
+    let whole = Box3::new([0, 0, 0], dims);
+    let labels = random_labels(dims, 5);
+    a.write_volume(0, whole, &labels, WriteDiscipline::Overwrite).unwrap();
+    b.write_volume(0, whole, &labels, WriteDiscipline::Overwrite).unwrap();
+
+    Propagator::new(&a.cutout).propagate_annotations().unwrap();
+    let h = manager()
+        .submit(
+            Arc::new(PropagateJob::annotation(Arc::clone(&b))),
+            JobConfig::with_workers(4),
+        )
+        .unwrap();
+    assert_eq!(h.wait(), JobState::Completed);
+    assert_eq!(hierarchy_bytes_u32(&a.cutout), hierarchy_bytes_u32(&b.cutout));
+}
+
+#[test]
+fn propagate_job_killed_midway_resumes_byte_identical() {
+    let dims = [256u64, 128, 24]; // 6 blocks with 32x32x8 cuboids
+    let whole = Box3::new([0, 0, 0], dims);
+    let labels = random_labels(dims, 9);
+
+    // Reference: an uninterrupted run.
+    let a = anno_db(dims, 3);
+    a.write_volume(0, whole, &labels, WriteDiscipline::Overwrite).unwrap();
+    let h = manager()
+        .submit(Arc::new(PropagateJob::annotation(Arc::clone(&a))), JobConfig::with_workers(2))
+        .unwrap();
+    assert_eq!(h.wait(), JobState::Completed);
+    let total = h.status().total_blocks;
+    assert!(total >= 6, "want several blocks, got {total}");
+
+    // Interrupted run: stop after 2 block completions — the engine
+    // behaves exactly as after a kill, because resume consults nothing
+    // but the checkpoint journal.
+    let b = anno_db(dims, 3);
+    b.write_volume(0, whole, &labels, WriteDiscipline::Overwrite).unwrap();
+    let m = manager();
+    let cfg = JobConfig { workers: 2, max_blocks: Some(2), ..JobConfig::default() };
+    let h1 = m
+        .submit(Arc::new(PropagateJob::annotation(Arc::clone(&b))), cfg)
+        .unwrap();
+    assert_eq!(h1.wait(), JobState::Cancelled);
+    let partial = h1.status().completed_blocks;
+    assert!(partial >= 2 && partial < total, "partial={partial} total={total}");
+
+    // Resume under the same id with a freshly-built spec (what a
+    // restarted process would construct).
+    let h2 = m
+        .submit_with_id(
+            h1.id,
+            Arc::new(PropagateJob::annotation(Arc::clone(&b))),
+            JobConfig::with_workers(2),
+        )
+        .unwrap();
+    assert_eq!(h2.wait(), JobState::Completed);
+    let st = h2.status();
+    assert_eq!(st.resumed_blocks, partial, "resume must start from the journal");
+    assert_eq!(st.completed_blocks, total);
+
+    // The contract: byte-identical hierarchy vs. the uninterrupted run.
+    assert_eq!(hierarchy_bytes_u32(&a.cutout), hierarchy_bytes_u32(&b.cutout));
+}
+
+#[test]
+fn propagate_job_resume_when_already_complete_is_a_noop() {
+    let dims = [128u64, 64, 8];
+    let db = anno_db(dims, 2);
+    let whole = Box3::new([0, 0, 0], dims);
+    db.write_volume(0, whole, &random_labels(dims, 3), WriteDiscipline::Overwrite).unwrap();
+    let m = manager();
+    let h = m
+        .submit(Arc::new(PropagateJob::annotation(Arc::clone(&db))), JobConfig::default())
+        .unwrap();
+    assert_eq!(h.wait(), JobState::Completed);
+    let before = hierarchy_bytes_u32(&db.cutout);
+    // Resubmit: every block is already journaled.
+    let h2 = m
+        .submit_with_id(h.id, Arc::new(PropagateJob::annotation(Arc::clone(&db))), JobConfig::default())
+        .unwrap();
+    assert_eq!(h2.wait(), JobState::Completed);
+    let st = h2.status();
+    assert_eq!(st.resumed_blocks, st.total_blocks);
+    assert_eq!(st.completed_blocks, st.total_blocks);
+    assert_eq!(hierarchy_bytes_u32(&db.cutout), before);
+}
+
+// ----------------------------------------------------------------------
+// Synapse detection (requires `make artifacts`; skipped without them)
+// ----------------------------------------------------------------------
+
+fn runtime() -> Option<Arc<ocpd::runtime::Runtime>> {
+    ocpd::runtime::Runtime::load_dir(ocpd::runtime::artifact_dir()).ok().map(Arc::new)
+}
+
+fn boot_pair(
+    dims: Vec3,
+    seed: u64,
+) -> (Arc<Cluster>, Arc<CutoutService>, Arc<AnnotationDb>) {
+    let cluster = Cluster::in_memory(2, 1);
+    cluster.register_dataset(DatasetBuilder::new("synth", dims).levels(1).build());
+    let img = cluster.create_image_project(Project::image("synth", "synth")).unwrap();
+    let anno = cluster
+        .create_annotation_project(Project::annotation("syn", "synth"), true)
+        .unwrap();
+    let sv = generate(&SynthSpec::small(dims, seed));
+    ingest_volume(&img, &sv.vol, [256, 256, 16]).unwrap();
+    (cluster, img, anno)
+}
+
+#[test]
+fn synapse_detect_job_at_4_workers_matches_sequential_pipeline() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    };
+    let dims = [256u64, 256, 16];
+    let region = Box3::new([0, 0, 0], dims);
+
+    // Sequential reference: the one-shot pipeline, one worker.
+    let (_ca, img_a, ann_a) = boot_pair(dims, 3);
+    let mut seq = ocpd::vision::SynapsePipeline::new(Arc::clone(&rt), img_a, ann_a);
+    seq.workers = 1;
+    let report = seq.run(0, region).unwrap();
+
+    // The batch job at 4 workers over an identical cluster.
+    let (cb, img_b, ann_b) = boot_pair(dims, 3);
+    let pipeline =
+        Arc::new(ocpd::vision::SynapsePipeline::new(rt, img_b, Arc::clone(&ann_b)));
+    let h = cb
+        .jobs()
+        .submit(
+            Arc::new(SynapseDetectJob::new(pipeline, 0, region)),
+            JobConfig::with_workers(4),
+        )
+        .unwrap();
+    assert_eq!(h.wait(), JobState::Completed);
+    let st = h.status();
+    assert_eq!(st.items as usize, report.detections.len(), "detection counts differ");
+
+    // Same detection set: compare centroid multisets through the RAMON
+    // metadata the job wrote (ids differ by assignment order).
+    let ids = ann_b.query(&[Predicate::eq("type", "synapse")]).unwrap();
+    assert_eq!(ids.len(), report.detections.len());
+    let mut got: Vec<Vec3> = ids
+        .iter()
+        .map(|&id| ann_b.get_object(id).unwrap().position)
+        .collect();
+    let mut want: Vec<Vec3> = report.detections.iter().map(|d| d.centroid).collect();
+    got.sort_unstable();
+    want.sort_unstable();
+    assert_eq!(got, want, "4-worker job must detect the sequential set");
+}

@@ -238,6 +238,146 @@ fn cache_status_route_reports_per_project_caches() {
 }
 
 #[test]
+fn reserved_tokens_reject_wrong_methods_with_405() {
+    let f = fixture();
+    // Previously these fell through to the project PUT handler and came
+    // back as a confusing 400 ("unknown write discipline 'status'").
+    let (code, _) =
+        request("PUT", &format!("{}/cache/status/", f.server.url()), &[]).unwrap();
+    assert_eq!(code, 405);
+    let (code, _) =
+        request("DELETE", &format!("{}/wal/status/", f.server.url()), &[]).unwrap();
+    assert_eq!(code, 405);
+    let (code, _) =
+        request("DELETE", &format!("{}/jobs/status/", f.server.url()), &[]).unwrap();
+    assert_eq!(code, 405);
+    // Wrong method on a sub-route of a reserved token, not just the root.
+    let (code, body) =
+        request("GET", &format!("{}/jobs/cancel/1/", f.server.url()), &[]).unwrap();
+    assert_eq!(code, 405);
+    assert!(
+        String::from_utf8_lossy(&body).contains("allow:"),
+        "405 bodies must name the allowed methods"
+    );
+    let (code, _) =
+        request("POST", &format!("{}/jobs/status/", f.server.url()), &[]).unwrap();
+    assert_eq!(code, 405);
+}
+
+#[test]
+fn job_routes_submit_status_cancel() {
+    let f = fixture();
+    let client = OcpClient::new(&f.server.url(), "ann");
+
+    // Seed the annotation project with an object to propagate.
+    let bx = Box3::new([32, 32, 4], [96, 96, 12]);
+    let mut v = DenseVolume::<u32>::zeros(bx.extent());
+    v.fill_box(Box3::new([0, 0, 0], bx.extent()), 42);
+    client.write_annotation(0, bx.lo, &v, WriteDiscipline::Overwrite).unwrap();
+
+    // Submit a propagate job over HTTP and parse its id.
+    let resp = ocpd::client::submit_job(&f.server.url(), "propagate/ann", "workers=2").unwrap();
+    assert!(resp.starts_with("id="), "{resp}");
+    let id: u64 = resp
+        .split_whitespace()
+        .next()
+        .unwrap()
+        .trim_start_matches("id=")
+        .parse()
+        .unwrap();
+
+    // Poll status until terminal.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(20);
+    loop {
+        let status = ocpd::client::job_status(&f.server.url(), Some(id)).unwrap();
+        if status.contains("state=completed") {
+            break;
+        }
+        assert!(
+            !status.contains("state=failed"),
+            "job failed: {status}"
+        );
+        assert!(std::time::Instant::now() < deadline, "job stuck: {status}");
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+
+    // The full listing mentions it too.
+    let all = ocpd::client::job_status(&f.server.url(), None).unwrap();
+    assert!(all.contains("propagate/ann"), "{all}");
+
+    // And the propagated level answers over the normal cutout route.
+    let out = client.cutout_u32(1, Box3::new([16, 16, 4], [48, 48, 12])).unwrap();
+    assert_eq!(out.count_eq(42), 32 * 32 * 8);
+
+    // Cancelling a finished job is fine; unknown ids are 404s.
+    assert!(ocpd::client::cancel_job(&f.server.url(), id).is_ok());
+    assert!(ocpd::client::cancel_job(&f.server.url(), 9999).is_err());
+    assert!(ocpd::client::job_status(&f.server.url(), Some(9999)).is_err());
+    // Unknown tokens and bad shapes are client errors.
+    let (code, _) = request(
+        "POST",
+        &format!("{}/jobs/propagate/nope/", f.server.url()),
+        &[],
+    )
+    .unwrap();
+    assert_eq!(code, 404);
+    let (code, _) =
+        request("POST", &format!("{}/jobs/frobnicate/x/", f.server.url()), &[]).unwrap();
+    assert_eq!(code, 400);
+    // Ingest without dims is a 400.
+    let (code, _) =
+        request("POST", &format!("{}/jobs/ingest/img/", f.server.url()), &[]).unwrap();
+    assert_eq!(code, 400);
+    // Synapse submit without a loaded runtime is a 400, not a crash.
+    let (code, _) = request(
+        "POST",
+        &format!("{}/jobs/synapse/img/ann/", f.server.url()),
+        &[],
+    )
+    .unwrap();
+    assert_eq!(code, 400);
+}
+
+#[test]
+fn ingest_job_over_http_fills_a_project() {
+    // A fresh cluster with an empty image project; the ingest job
+    // generates and uploads the synthetic volume server-side.
+    let dims = [128u64, 128, 16];
+    let cluster = Cluster::in_memory(1, 1);
+    cluster.register_dataset(DatasetBuilder::new("ds", dims).levels(1).build());
+    cluster.create_image_project(Project::image("fresh", "ds")).unwrap();
+    let server = ocpd::web::serve(cluster, None, "127.0.0.1:0", 4).unwrap();
+
+    let resp = ocpd::client::submit_job(
+        &server.url(),
+        "ingest/fresh",
+        "dims=128,128,16 seed=4 workers=2",
+    )
+    .unwrap();
+    let id: u64 = resp
+        .split_whitespace()
+        .next()
+        .unwrap()
+        .trim_start_matches("id=")
+        .parse()
+        .unwrap();
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(20);
+    loop {
+        let status = ocpd::client::job_status(&server.url(), Some(id)).unwrap();
+        if status.contains("state=completed") {
+            break;
+        }
+        assert!(!status.contains("state=failed"), "{status}");
+        assert!(std::time::Instant::now() < deadline, "job stuck: {status}");
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    let client = OcpClient::new(&server.url(), "fresh");
+    let truth = generate(&SynthSpec::small(dims, 4));
+    let got = client.cutout_u8(0, Box3::new([0, 0, 0], dims)).unwrap();
+    assert_eq!(got, truth.vol);
+}
+
+#[test]
 fn parallel_http_cutouts_consistent() {
     let f = Arc::new(fixture());
     let handles: Vec<_> = (0..8)
