@@ -251,27 +251,34 @@ impl CuboidStore {
         }
     }
 
-    /// Write cuboids as one batch. All-zero cuboids are *deleted* rather
-    /// than stored (lazy allocation invariant). Every written code is
-    /// invalidated in the cache *after* the engine write, so later reads
-    /// refetch through the engine (and its WAL overlay, when present).
+    /// Write cuboids as one batch. Volumes are borrowed — the write
+    /// engine's workers hand over views of freshly merged cuboids without
+    /// cloning them. All-zero cuboids are *deleted* (one `delete_batch`)
+    /// rather than stored (lazy allocation invariant). Every written code
+    /// is invalidated in the cache *after* the engine write, so later
+    /// reads refetch through the engine (and its WAL overlay, when
+    /// present).
     pub fn write_cuboids<T: VoxelScalar>(
         &self,
         res: u32,
         channel: u16,
-        items: &[(u64, DenseVolume<T>)],
+        items: &[(u64, &DenseVolume<T>)],
     ) -> Result<()> {
         if self.project.readonly {
             return Err(Error::BadRequest(format!("project '{}' is readonly", self.project.token)));
         }
         let table = self.project.cuboid_table(res, channel);
         let mut batch = Vec::with_capacity(items.len());
+        let mut dead: Vec<u64> = Vec::new();
         for (code, vol) in items {
             if vol.all_zero() {
-                self.engine.delete(&table, *code)?;
+                dead.push(*code);
             } else {
-                batch.push((*code, self.frame(vol)?));
+                batch.push((*code, self.frame(*vol)?));
             }
+        }
+        if !dead.is_empty() {
+            self.engine.delete_batch(&table, &dead)?;
         }
         if !batch.is_empty() {
             self.engine.put_batch(&table, &batch)?;
@@ -284,7 +291,7 @@ impl CuboidStore {
         Ok(())
     }
 
-    /// Write a single cuboid.
+    /// Write a single cuboid (borrowed; no volume clone).
     pub fn write_cuboid<T: VoxelScalar>(
         &self,
         res: u32,
@@ -292,7 +299,7 @@ impl CuboidStore {
         code: u64,
         vol: &DenseVolume<T>,
     ) -> Result<()> {
-        self.write_cuboids(res, channel, std::slice::from_ref(&(code, vol.clone())))
+        self.write_cuboids(res, channel, &[(code, vol)])
     }
 
     /// Morton codes of every stored cuboid at `(res, channel)`, ascending.
@@ -371,7 +378,7 @@ mod tests {
         let mut rng = Rng::new(9);
         let a = random_cuboid(&mut rng, shape, 3);
         let b = random_cuboid(&mut rng, shape, 3);
-        s.write_cuboids(1, 0, &[(10, a.clone()), (12, b.clone())]).unwrap();
+        s.write_cuboids(1, 0, &[(10, &a), (12, &b)]).unwrap();
         let got = s.read_cuboids::<u32>(1, 0, &[9, 10, 11, 12, 13]).unwrap();
         assert!(got[0].is_none());
         assert_eq!(got[1].as_ref().unwrap(), &a);

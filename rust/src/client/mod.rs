@@ -187,6 +187,28 @@ pub fn cache_status(base_url: &str) -> Result<String> {
     Ok(String::from_utf8_lossy(&b).to_string())
 }
 
+/// Status of every project's write engine (fan-out width, elided vs RMW
+/// pre-reads, merge latency).
+pub fn write_status(base_url: &str) -> Result<String> {
+    let (s, b) =
+        request("GET", &format!("{}/write/status/", base_url.trim_end_matches('/')), &[])?;
+    if s != 200 {
+        return Err(Error::Other(format!("http {s}: {}", String::from_utf8_lossy(&b))));
+    }
+    Ok(String::from_utf8_lossy(&b).to_string())
+}
+
+/// Retune every project's write fan-out width. Returns the server's
+/// `workers=N projects=K` report.
+pub fn set_write_workers(base_url: &str, workers: usize) -> Result<String> {
+    let url = format!("{}/write/workers/{workers}/", base_url.trim_end_matches('/'));
+    let (s, b) = request("PUT", &url, &[])?;
+    if s != 200 {
+        return Err(Error::Other(format!("http {s}: {}", String::from_utf8_lossy(&b))));
+    }
+    Ok(String::from_utf8_lossy(&b).to_string())
+}
+
 /// Drain write-ahead logs into their database nodes: all of them, or one
 /// project's. Returns the server's `flushed=N` report.
 pub fn wal_flush(base_url: &str, token: Option<&str>) -> Result<String> {

@@ -29,6 +29,13 @@
 //! cache`), and wires the WAL flusher's apply hook to them so draining
 //! a log into a database node invalidates any cached cuboids for the
 //! drained keys — read-your-writes holds end to end.
+//!
+//! Writes run through the **parallel write engine**
+//! ([`crate::cutout::WriteConfig`]): RMW elision for fully covered
+//! cuboids, batched pre-reads, and shard-aligned scatter commits. The
+//! cluster surfaces it at `GET /write/status/` and retunes every
+//! project's fan-out width via `PUT /write/workers/{n}/` / `ocpd
+//! write --workers N`.
 
 mod sharded;
 
@@ -40,7 +47,7 @@ use std::sync::{Arc, RwLock};
 use crate::annotation::AnnotationDb;
 use crate::chunkstore::{CacheConfig, CacheStatus, CuboidCache, CuboidStore};
 use crate::core::{Dataset, Project};
-use crate::cutout::CutoutService;
+use crate::cutout::{CutoutService, WriteConfig, WriteStatus};
 use crate::jobs::JobManager;
 use crate::shard::{NodeId, ShardMap};
 use crate::storage::{migrate, DeviceProfile, Engine, MemStore, SimulatedStore};
@@ -227,15 +234,15 @@ impl Cluster {
 
     /// A token must be unclaimed and must not shadow a reserved
     /// top-level route name (`/info/`, `/wal/...`, `/cache/...`,
-    /// `/jobs/...`). Re-creating an existing hot token would be worse
-    /// than confusing: two [`Wal`]s over one chunk table would overwrite
-    /// each other's durable frames. Callers pass the held write guard so
-    /// check and insert are one atomic step.
+    /// `/jobs/...`, `/write/...`). Re-creating an existing hot token
+    /// would be worse than confusing: two [`Wal`]s over one chunk table
+    /// would overwrite each other's durable frames. Callers pass the
+    /// held write guard so check and insert are one atomic step.
     fn check_token_free(
         projects: &HashMap<String, ProjectHandle>,
         token: &str,
     ) -> Result<()> {
-        if token == "info" || token == "wal" || token == "cache" || token == "jobs" {
+        if matches!(token, "info" | "wal" | "cache" | "jobs" | "write") {
             return Err(Error::BadRequest(format!(
                 "'{token}' is a reserved name and cannot be a project token"
             )));
@@ -498,6 +505,47 @@ impl Cluster {
         v
     }
 
+    // ------------------------------------------------------------------
+    // Write engine
+    // ------------------------------------------------------------------
+
+    /// One project's cutout service, whatever its type — the shared
+    /// write-engine handle behind the `/write/...` surface.
+    fn cutout_service(handle: &ProjectHandle) -> &CutoutService {
+        match handle {
+            ProjectHandle::Image(svc) => svc,
+            ProjectHandle::Annotation(db) => &db.cutout,
+        }
+    }
+
+    /// Status of every project's write engine, by token (the
+    /// `GET /write/status/` route): configuration plus fan-out, elided
+    /// vs RMW pre-read, and merge-latency counters.
+    pub fn write_status(&self) -> Vec<(String, WriteStatus)> {
+        let mut v: Vec<(String, WriteStatus)> = self
+            .projects
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, h)| (k.clone(), Self::cutout_service(h).write_status()))
+            .collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
+    /// Retune every project's write fan-out width — the live workers
+    /// knob (`PUT /write/workers/{n}/`, `ocpd write --workers N`).
+    /// Returns the number of projects updated.
+    pub fn set_write_workers(&self, workers: usize) -> usize {
+        let projects = self.projects.read().unwrap();
+        for h in projects.values() {
+            let svc = Self::cutout_service(h);
+            let cfg = svc.write_config();
+            svc.set_write_config(WriteConfig { workers: workers.max(1), ..cfg });
+        }
+        projects.len()
+    }
+
     /// Per-node I/O snapshots (the `ocpd info` CLI and benches).
     pub fn node_stats(&self) -> Vec<(String, crate::storage::IoSnapshot)> {
         self.nodes
@@ -673,6 +721,33 @@ mod tests {
         assert!(c.create_annotation_project(Project::annotation("wal", "ds"), false).is_err());
         assert!(c.create_image_project(Project::image("cache", "ds")).is_err());
         assert!(c.create_image_project(Project::image("jobs", "ds")).is_err());
+        assert!(c.create_image_project(Project::image("write", "ds")).is_err());
+    }
+
+    #[test]
+    fn write_engine_status_and_cluster_wide_retune() {
+        let c = cluster();
+        c.create_image_project(Project::image("img", "ds")).unwrap();
+        c.create_annotation_project(Project::annotation("ann", "ds"), true).unwrap();
+        // Both project types surface a write engine, sorted by token.
+        let st = c.write_status();
+        assert_eq!(st.len(), 2);
+        assert_eq!(st[0].0, "ann");
+        assert_eq!(st[1].0, "img");
+        // Retune applies to image and annotation services alike.
+        assert_eq!(c.set_write_workers(3), 2);
+        for (_, s) in c.write_status() {
+            assert_eq!(s.workers, 3);
+        }
+        // A cuboid-aligned ingest write records its elided reads.
+        let svc = c.image("img").unwrap();
+        let bx = Box3::new([0, 0, 0], [256, 256, 32]);
+        let mut v = DenseVolume::<u8>::zeros(bx.extent());
+        v.fill_box(bx, 9);
+        svc.write(0, 0, 0, bx, &v).unwrap();
+        let st = c.write_status();
+        assert!(st[1].1.elided_reads > 0, "aligned write must elide");
+        assert_eq!(st[1].1.rmw_reads, 0);
     }
 
     #[test]

@@ -56,6 +56,28 @@ impl StorageEngine for ShardedEngine {
         self.engines[self.map.node_for(key)].delete(table, key)
     }
 
+    fn delete_batch(&self, table: &str, keys: &[u64]) -> Result<()> {
+        // Group by node, one batched delete per node, issued concurrently
+        // when several nodes are involved (mirrors `get_batch`).
+        let mut per_node: Vec<(usize, Vec<u64>)> = Vec::new();
+        for &k in keys {
+            let node = self.map.node_for(k);
+            match per_node.iter_mut().find(|(n, _)| *n == node) {
+                Some((_, v)) => v.push(k),
+                None => per_node.push((node, vec![k])),
+            }
+        }
+        let n = per_node.len();
+        let results = scoped_map(n, n, |p| {
+            let (node, ks) = &per_node[p];
+            self.engines[*node].delete_batch(table, ks)
+        });
+        for r in results {
+            r?;
+        }
+        Ok(())
+    }
+
     fn get_batch(&self, table: &str, keys: &[u64]) -> Result<Vec<Option<Blob>>> {
         // Group by node, one batched request per node — issued
         // concurrently when several nodes are involved — then reassemble

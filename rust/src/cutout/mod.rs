@@ -21,6 +21,28 @@
 //! 5. the store consults the sharded LRU cuboid cache
 //!    ([`crate::chunkstore::CuboidCache`]) before touching the engine.
 //!
+//! The **write path is the same engine run in reverse** (the paper's
+//! write claim: annotation workloads are "directed to solid-state
+//! storage" and sustained at ingest bandwidth, §4.1):
+//!
+//! 1. cover the request box with cuboids and classify each as *fully*
+//!    or *partially* covered;
+//! 2. under an overwrite merge, fully covered cuboids **elide** their
+//!    existing-cuboid read — the stored value cannot influence the
+//!    result, so cuboid-aligned bulk ingest performs zero reads;
+//! 3. partially covered cuboids batch their pre-reads through
+//!    [`CuboidStore::read_cuboids`] (Morton-coalesced runs + cache)
+//!    instead of one point read per cuboid;
+//! 4. a [`WriteConfig`] plans shard-aligned batches and scatters
+//!    merge + commit across the scoped pool: workers own disjoint
+//!    cuboids (lock-free merge), and each worker's
+//!    `put_batch`/`delete_batch` lands wholly on one node, so a single
+//!    write fans out across the cluster like a read does.
+//!
+//! Parallel writes are byte-identical to sequential ones for every
+//! merge discipline (property-tested); `BENCH_write.json` records the
+//! writer scaling and elision effect.
+//!
 //! The in-memory assembly copy is the system's memory hot path (§5:
 //! unaligned cutouts drop throughput from 173 to 61 MB/s purely from
 //! in-memory reorganization). [`CutoutService::classify`] reports whether
@@ -30,7 +52,7 @@
 //!
 //! [`shard_map`]: crate::storage::StorageEngine::shard_map
 
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 
 use crate::array::{DenseVolume, Plane, VoxelScalar};
 use crate::chunkstore::CuboidStore;
@@ -85,6 +107,40 @@ impl ReadConfig {
     }
 }
 
+/// Tuning knobs for the parallel write engine (the mirror of
+/// [`ReadConfig`]): how wide a single `write`/`write_with` scatters its
+/// merge + commit work.
+#[derive(Clone, Copy, Debug)]
+pub struct WriteConfig {
+    /// Fan-out width: scoped worker threads per write (1 = sequential).
+    pub workers: usize,
+    /// Minimum covered-cuboid count before a write fans out.
+    pub parallel_threshold: usize,
+    /// Batch granularity: shard-aligned runs are chopped so each worker
+    /// sees about this many batches.
+    pub batches_per_worker: usize,
+}
+
+impl Default for WriteConfig {
+    fn default() -> Self {
+        let workers =
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8);
+        WriteConfig { workers, parallel_threshold: 4, batches_per_worker: 2 }
+    }
+}
+
+impl WriteConfig {
+    /// A sequential configuration (benches' baseline).
+    pub fn sequential() -> Self {
+        WriteConfig { workers: 1, ..WriteConfig::default() }
+    }
+
+    /// Fan-out width `n` with defaults elsewhere.
+    pub fn with_workers(n: usize) -> Self {
+        WriteConfig { workers: n.max(1), ..WriteConfig::default() }
+    }
+}
+
 /// Read-engine counters: how often reads fan out and how wide.
 #[derive(Debug, Default)]
 pub struct ReadMetrics {
@@ -94,6 +150,55 @@ pub struct ReadMetrics {
     pub parallel_reads: Counter,
     /// Batches per parallel read (the fan-out width distribution).
     pub fanout_width: Histogram,
+}
+
+/// Write-engine counters: fan-out, RMW elision, and merge cost.
+#[derive(Debug, Default)]
+pub struct WriteMetrics {
+    /// Writes merged and committed on the caller's thread.
+    pub sequential_writes: Counter,
+    /// Writes scattered across the worker pool.
+    pub parallel_writes: Counter,
+    /// Batches per parallel write (the fan-out width distribution).
+    pub fanout_width: Histogram,
+    /// Cuboids whose existing-contents read was **elided**: fully covered
+    /// by the request box under an overwrite merge, so the stored value
+    /// cannot influence the result. Bulk ingest never reads.
+    pub elided_reads: Counter,
+    /// Cuboids that paid a read-modify-write pre-read (partial coverage,
+    /// or a merge that depends on the existing voxels).
+    pub rmw_reads: Counter,
+    /// Per-batch merge latency (pre-read excluded; the in-memory
+    /// voxel-merge cost the scatter parallelizes).
+    pub merge_latency: Histogram,
+}
+
+/// Point-in-time view of one service's write engine — configuration plus
+/// counters (the `GET /write/status/` surface).
+#[derive(Clone, Copy, Debug)]
+pub struct WriteStatus {
+    pub workers: usize,
+    pub parallel_threshold: usize,
+    pub sequential_writes: u64,
+    pub parallel_writes: u64,
+    pub elided_reads: u64,
+    pub rmw_reads: u64,
+    pub merge_mean_us: f64,
+    pub merge_p95_us: u64,
+}
+
+/// One covered cuboid in a write plan: where it sits in the grid and
+/// how much of it the request box covers.
+struct WriteItem {
+    code: u64,
+    /// The cuboid's global box (may extend past the dataset bounds at
+    /// the volume edge).
+    cub_box: Box3,
+    /// `cub_box ∩ bx` — the region the request actually writes.
+    isect: Box3,
+    /// Fully covered under an overwrite merge: the stored value cannot
+    /// influence the result, so the pre-read is elided.
+    full: bool,
 }
 
 /// Unsynchronized writer into the output volume. Workers copy their
@@ -138,16 +243,29 @@ impl<T: VoxelScalar> RawOut<T> {
 pub struct CutoutService {
     store: Arc<CuboidStore>,
     cfg: ReadConfig,
+    /// Write-engine configuration. Behind a lock (unlike the read
+    /// config) because the `/write/workers/{n}/` route retunes live
+    /// services.
+    wcfg: RwLock<WriteConfig>,
     /// Read-engine observability (fan-out widths, parallel/sequential
     /// split); cache counters live on the store's [`CuboidCache`].
     ///
     /// [`CuboidCache`]: crate::chunkstore::CuboidCache
     pub metrics: ReadMetrics,
+    /// Write-engine observability (fan-out, elided vs RMW pre-reads,
+    /// merge latency).
+    pub write_metrics: WriteMetrics,
 }
 
 impl CutoutService {
     pub fn new(store: Arc<CuboidStore>) -> Self {
-        CutoutService { store, cfg: ReadConfig::default(), metrics: ReadMetrics::default() }
+        CutoutService {
+            store,
+            cfg: ReadConfig::default(),
+            wcfg: RwLock::new(WriteConfig::default()),
+            metrics: ReadMetrics::default(),
+            write_metrics: WriteMetrics::default(),
+        }
     }
 
     /// Override the read-engine configuration.
@@ -158,6 +276,37 @@ impl CutoutService {
 
     pub fn read_config(&self) -> ReadConfig {
         self.cfg
+    }
+
+    /// Override the write-engine configuration (builder form).
+    pub fn with_write_config(self, cfg: WriteConfig) -> Self {
+        *self.wcfg.write().unwrap() = cfg;
+        self
+    }
+
+    pub fn write_config(&self) -> WriteConfig {
+        *self.wcfg.read().unwrap()
+    }
+
+    /// Retune the write engine on a live service (the workers knob).
+    pub fn set_write_config(&self, cfg: WriteConfig) {
+        *self.wcfg.write().unwrap() = cfg;
+    }
+
+    /// Snapshot of the write engine's configuration and counters.
+    pub fn write_status(&self) -> WriteStatus {
+        let cfg = self.write_config();
+        let m = &self.write_metrics;
+        WriteStatus {
+            workers: cfg.workers,
+            parallel_threshold: cfg.parallel_threshold,
+            sequential_writes: m.sequential_writes.get(),
+            parallel_writes: m.parallel_writes.get(),
+            elided_reads: m.elided_reads.get(),
+            rmw_reads: m.rmw_reads.get(),
+            merge_mean_us: m.merge_latency.mean_us(),
+            merge_p95_us: m.merge_latency.percentile_us(95.0),
+        }
     }
 
     pub fn store(&self) -> &Arc<CuboidStore> {
@@ -295,6 +444,18 @@ impl CutoutService {
     /// 3. chop runs to at most `ceil(n / (workers × batches_per_worker))`
     ///    codes so the pool load-balances skewed runs.
     fn plan_batches(&self, codes: &[u64], workers: usize) -> Vec<(usize, usize)> {
+        self.plan_batches_with(codes, workers, self.cfg.batches_per_worker)
+    }
+
+    /// [`plan_batches`](Self::plan_batches) with an explicit batch
+    /// granularity — shared by the read and write engines, which carry
+    /// their own `batches_per_worker` knobs.
+    fn plan_batches_with(
+        &self,
+        codes: &[u64],
+        workers: usize,
+        batches_per_worker: usize,
+    ) -> Vec<(usize, usize)> {
         let map = self.store.engine().shard_map();
         let mut bounds: Vec<(usize, usize)> = Vec::new();
         let mut idx = 0usize;
@@ -312,7 +473,7 @@ impl CutoutService {
         }
         let target = codes
             .len()
-            .div_ceil(workers.max(1) * self.cfg.batches_per_worker.max(1))
+            .div_ceil(workers.max(1) * batches_per_worker.max(1))
             .max(1);
         let mut out = Vec::new();
         for (lo, hi) in bounds {
@@ -361,10 +522,14 @@ impl CutoutService {
         }
     }
 
-    /// Write `vol` into the volume at `bx` (read-modify-write on boundary
-    /// cuboids). `merge` decides the value per voxel given
-    /// `(existing, incoming)` — identity for image ingest, the write
-    /// disciplines for annotations.
+    /// Write `vol` into the volume at `bx` under a read-modify-write
+    /// merge. `merge` decides the value per voxel given
+    /// `(existing, incoming)` — the write disciplines for annotations.
+    /// Because `merge` may depend on the existing voxels, every covered
+    /// cuboid pays a pre-read, batched through
+    /// [`CuboidStore::read_cuboids`] (Morton-coalesced runs + cache);
+    /// use [`write`](Self::write) for overwrite semantics, which elides
+    /// the reads of fully covered cuboids. Fans out per [`WriteConfig`].
     pub fn write_with<T: VoxelScalar>(
         &self,
         res: u32,
@@ -372,7 +537,82 @@ impl CutoutService {
         t: u64,
         bx: Box3,
         vol: &DenseVolume<T>,
-        merge: impl Fn(T, T) -> T,
+        merge: impl Fn(T, T) -> T + Sync,
+    ) -> Result<()> {
+        self.write_impl(res, channel, t, bx, vol, &merge, false, None)
+    }
+
+    /// Plain overwrite write (image ingest path). Cuboids fully covered
+    /// by `bx` skip their existing-cuboid read entirely — cuboid-aligned
+    /// bulk ingest never reads at all. Fans out per [`WriteConfig`].
+    pub fn write<T: VoxelScalar>(
+        &self,
+        res: u32,
+        channel: u16,
+        t: u64,
+        bx: Box3,
+        vol: &DenseVolume<T>,
+    ) -> Result<()> {
+        self.write_impl(res, channel, t, bx, vol, &|_, new| new, true, None)
+    }
+
+    /// [`write`](Self::write) with an explicit fan-out width
+    /// (1 = sequential) — parity tests and benches.
+    pub fn write_with_workers<T: VoxelScalar>(
+        &self,
+        res: u32,
+        channel: u16,
+        t: u64,
+        bx: Box3,
+        vol: &DenseVolume<T>,
+        workers: usize,
+    ) -> Result<()> {
+        self.write_impl(res, channel, t, bx, vol, &|_, new| new, true, Some(workers))
+    }
+
+    /// [`write_with`](Self::write_with) with an explicit fan-out width
+    /// (1 = sequential) — parity tests and benches.
+    #[allow(clippy::too_many_arguments)]
+    pub fn write_rmw_with_workers<T: VoxelScalar>(
+        &self,
+        res: u32,
+        channel: u16,
+        t: u64,
+        bx: Box3,
+        vol: &DenseVolume<T>,
+        merge: impl Fn(T, T) -> T + Sync,
+        workers: usize,
+    ) -> Result<()> {
+        self.write_impl(res, channel, t, bx, vol, &merge, false, Some(workers))
+    }
+
+    /// The write engine. Mirrors `read_impl`:
+    ///
+    /// 1. cover `bx` with cuboids, sort by Morton code;
+    /// 2. classify each cuboid: **full** (fully covered under an
+    ///    overwrite merge — the stored value cannot influence the
+    ///    result, so the pre-read is elided) vs **partial** (pays a
+    ///    read-modify-write);
+    /// 3. plan shard-aligned batches ([`WriteConfig`]) and scatter them
+    ///    over a scoped worker pool — each worker owns disjoint cuboids,
+    ///    so merging needs no locks;
+    /// 4. each worker batch-reads its partial cuboids
+    ///    ([`CuboidStore::read_cuboids`]: coalesced runs + cache),
+    ///    merges in memory, and commits its own
+    ///    [`CuboidStore::write_cuboids`] — shard alignment means each
+    ///    commit's `put_batch`/`delete_batch` lands wholly on one node,
+    ///    so concurrent workers scatter across the node set.
+    #[allow(clippy::too_many_arguments)]
+    fn write_impl<T: VoxelScalar>(
+        &self,
+        res: u32,
+        channel: u16,
+        t: u64,
+        bx: Box3,
+        vol: &DenseVolume<T>,
+        merge: &(dyn Fn(T, T) -> T + Sync),
+        overwrite: bool,
+        workers: Option<usize>,
     ) -> Result<()> {
         if vol.dims() != bx.extent() {
             return Err(Error::BadRequest(format!(
@@ -384,56 +624,128 @@ impl CutoutService {
         self.store.dataset.check_box(res, &bx)?;
         self.store.dataset.check_timestep(t)?;
         self.store.dataset.check_channel(channel)?;
+        // One config snapshot per write: a concurrent retune can't split
+        // a single request across two configurations.
+        let wcfg = self.write_config();
+        let workers = workers.unwrap_or(wcfg.workers);
         let cshape = self.store.cuboid_shape(res)?;
         let cover = bx.cuboid_cover(cshape);
 
-        let mut batch: Vec<(u64, DenseVolume<T>)> = Vec::new();
+        let mut items: Vec<WriteItem> = Vec::with_capacity(cover.volume() as usize);
         for cz in cover.lo[2]..cover.hi[2] {
             for cy in cover.lo[1]..cover.hi[1] {
                 for cx in cover.lo[0]..cover.hi[0] {
-                    let code = self.code([cx, cy, cz], t);
-                    let cub_box = Box3::at([cx * cshape[0], cy * cshape[1], cz * cshape[2]], cshape);
+                    let cub_box =
+                        Box3::at([cx * cshape[0], cy * cshape[1], cz * cshape[2]], cshape);
                     let isect = cub_box.intersect(&bx);
                     if isect.is_empty() {
                         continue;
                     }
-                    // Existing cuboid (zeros if absent).
-                    let mut cub = self
-                        .store
-                        .read_cuboid::<T>(res, channel, code)?
-                        .unwrap_or_else(|| DenseVolume::zeros(cshape));
-                    // Merge incoming voxels.
-                    for z in isect.lo[2]..isect.hi[2] {
-                        for y in isect.lo[1]..isect.hi[1] {
-                            for x in isect.lo[0]..isect.hi[0] {
-                                let local = [x - cub_box.lo[0], y - cub_box.lo[1], z - cub_box.lo[2]];
-                                let src = [x - bx.lo[0], y - bx.lo[1], z - bx.lo[2]];
-                                let old = cub.get(local);
-                                let new = merge(old, vol.get(src));
-                                if new != old {
-                                    cub.set(local, new);
-                                }
-                            }
-                        }
-                    }
-                    batch.push((code, cub));
+                    items.push(WriteItem {
+                        code: self.code([cx, cy, cz], t),
+                        cub_box,
+                        isect,
+                        full: overwrite && isect == cub_box,
+                    });
                 }
             }
         }
-        batch.sort_by_key(|(c, _)| *c);
-        self.store.write_cuboids(res, channel, &batch)
+        items.sort_by_key(|i| i.code);
+        if items.is_empty() {
+            return Ok(());
+        }
+
+        let batches = if workers <= 1 || items.len() < wcfg.parallel_threshold {
+            Vec::new()
+        } else {
+            let codes: Vec<u64> = items.iter().map(|i| i.code).collect();
+            self.plan_batches_with(&codes, workers, wcfg.batches_per_worker)
+        };
+        if batches.len() <= 1 {
+            self.write_metrics.sequential_writes.inc();
+            return self.merge_and_commit(res, channel, &items, &bx, vol, merge);
+        }
+
+        self.write_metrics.parallel_writes.inc();
+        self.write_metrics.fanout_width.record_value(batches.len() as u64);
+        let results = scoped_map(batches.len(), workers, |b| {
+            let (lo, hi) = batches[b];
+            self.merge_and_commit(res, channel, &items[lo..hi], &bx, vol, merge)
+        });
+        for r in results {
+            r?;
+        }
+        Ok(())
     }
 
-    /// Plain overwrite write (image ingest path).
-    pub fn write<T: VoxelScalar>(
+    /// Merge one batch of covered cuboids and commit it. Pre-reads the
+    /// partial cuboids in one batched, cache-aware fetch; full cuboids
+    /// are carved straight out of the incoming volume (RMW elision).
+    fn merge_and_commit<T: VoxelScalar>(
         &self,
         res: u32,
         channel: u16,
-        t: u64,
-        bx: Box3,
+        items: &[WriteItem],
+        bx: &Box3,
         vol: &DenseVolume<T>,
+        merge: &(dyn Fn(T, T) -> T + Sync),
     ) -> Result<()> {
-        self.write_with(res, channel, t, bx, vol, |_, new| new)
+        let cshape = self.store.cuboid_shape(res)?;
+        let need: Vec<u64> = items.iter().filter(|i| !i.full).map(|i| i.code).collect();
+        self.write_metrics.elided_reads.add((items.len() - need.len()) as u64);
+        self.write_metrics.rmw_reads.add(need.len() as u64);
+        let mut existing = if need.is_empty() {
+            Vec::new()
+        } else {
+            self.store.read_cuboids::<T>(res, channel, &need)?
+        };
+
+        let t0 = std::time::Instant::now();
+        let mut out: Vec<(u64, DenseVolume<T>)> = Vec::with_capacity(items.len());
+        let mut j = 0usize; // cursor into `existing` (same order as `need`)
+        for item in items {
+            let (cub_box, isect) = (&item.cub_box, &item.isect);
+            let cub = if item.full {
+                // Elided: the merged cuboid is exactly the incoming box.
+                vol.extract_box(Box3::new(
+                    [
+                        isect.lo[0] - bx.lo[0],
+                        isect.lo[1] - bx.lo[1],
+                        isect.lo[2] - bx.lo[2],
+                    ],
+                    [
+                        isect.hi[0] - bx.lo[0],
+                        isect.hi[1] - bx.lo[1],
+                        isect.hi[2] - bx.lo[2],
+                    ],
+                ))
+            } else {
+                let mut cub = existing[j]
+                    .take()
+                    .unwrap_or_else(|| DenseVolume::zeros(cshape));
+                j += 1;
+                for z in isect.lo[2]..isect.hi[2] {
+                    for y in isect.lo[1]..isect.hi[1] {
+                        for x in isect.lo[0]..isect.hi[0] {
+                            let local =
+                                [x - cub_box.lo[0], y - cub_box.lo[1], z - cub_box.lo[2]];
+                            let src = [x - bx.lo[0], y - bx.lo[1], z - bx.lo[2]];
+                            let old = cub.get(local);
+                            let new = merge(old, vol.get(src));
+                            if new != old {
+                                cub.set(local, new);
+                            }
+                        }
+                    }
+                }
+                cub
+            };
+            out.push((item.code, cub));
+        }
+        self.write_metrics.merge_latency.record(t0.elapsed());
+
+        let refs: Vec<(u64, &DenseVolume<T>)> = out.iter().map(|(c, v)| (*c, v)).collect();
+        self.store.write_cuboids(res, channel, &refs)
     }
 
     /// Extract a 2-d plane through the volume — the projection service
@@ -465,9 +777,16 @@ impl CutoutService {
 
     /// Time series of a fixed box: one volume per timestep in
     /// `[t_lo, t_hi)` (§3.1: "queries that analyze the time history of a
-    /// smaller region"). Multi-timestep requests spend the fan-out
-    /// budget *across timesteps* (each per-t read runs sequentially), so
-    /// the engine never nests thread scopes.
+    /// smaller region").
+    ///
+    /// Nesting-avoidance contract: with two or more timesteps and
+    /// `workers > 1`, the request runs **one** `scoped_map` of width
+    /// `min(nt, workers)` — one task per timestep — and every inner
+    /// per-timestep read is forced to width 1, so thread scopes never
+    /// nest and the total width never exceeds the configured budget.
+    /// With a single timestep (or a sequential config) it degenerates to
+    /// plain [`read`](Self::read) calls, which fan out *per read* as
+    /// usual.
     pub fn read_timeseries<T: VoxelScalar>(
         &self,
         res: u32,
@@ -803,6 +1122,181 @@ mod tests {
         let b = seq.read_timeseries::<u32>(0, 0, 0, 6, bx).unwrap();
         assert_eq!(a, b);
         assert_eq!(a[3].get([0, 0, 0]), 44);
+    }
+
+    /// Apply one of the three merge disciplines the engine must keep
+    /// byte-identical across fan-out widths: overwrite (the elision
+    /// path), preserve, and an exception-style xor merge.
+    fn apply_discipline(svc: &CutoutService, d: usize, bx: Box3, patch: &DenseVolume<u32>) {
+        match d {
+            0 => svc.write(0, 0, 0, bx, patch).unwrap(),
+            1 => svc
+                .write_with(0, 0, 0, bx, patch, |old, new| if old != 0 { old } else { new })
+                .unwrap(),
+            _ => svc.write_with(0, 0, 0, bx, patch, |old, new| old ^ new).unwrap(),
+        }
+    }
+
+    #[test]
+    fn parallel_write_matches_sequential_prop() {
+        // The tentpole property: 1-worker and 8-worker writes are
+        // byte-identical across aligned, unaligned, and empty boxes for
+        // every merge discipline.
+        property("parallel_write_parity", 10, |g| {
+            let dims = [128, 128, 32];
+            let whole = Box3::new([0, 0, 0], dims);
+            let base = hash_vol(whole);
+            let (lo, hi) = g.boxed(dims, 100);
+            let unaligned = Box3::new(lo, hi);
+            let mut patch_whole = hash_vol(whole);
+            patch_whole.map_in_place(|v| v ^ 0x5a5a_5a5a);
+            for d in 0..3usize {
+                let seq = service(dims, 1).with_write_config(WriteConfig {
+                    workers: 1,
+                    parallel_threshold: 1,
+                    ..WriteConfig::default()
+                });
+                let par = service(dims, 1).with_write_config(WriteConfig {
+                    workers: 8,
+                    parallel_threshold: 1,
+                    ..WriteConfig::default()
+                });
+                let cshape = seq.store().cuboid_shape(0).unwrap();
+                let aligned = unaligned.align_outward(cshape).intersect(&whole);
+                for bx in [unaligned, aligned] {
+                    let patch = patch_whole.extract_box(bx);
+                    for svc in [&seq, &par] {
+                        // Identical seed state through the sequential path.
+                        svc.write_with_workers(0, 0, 0, whole, &base, 1).unwrap();
+                    }
+                    apply_discipline(&seq, d, bx, &patch);
+                    apply_discipline(&par, d, bx, &patch);
+                    let a = seq.read_with_workers::<u32>(0, 0, 0, whole, 1).unwrap();
+                    let b = par.read_with_workers::<u32>(0, 0, 0, whole, 1).unwrap();
+                    assert_eq!(a.as_bytes(), b.as_bytes(), "discipline {d} box {bx:?}");
+                }
+                // Empty boxes are rejected identically on both paths.
+                let empty = Box3::new(lo, lo);
+                let zvol = DenseVolume::<u32>::zeros(empty.extent());
+                assert!(seq.write(0, 0, 0, empty, &zvol).is_err());
+                assert!(par.write(0, 0, 0, empty, &zvol).is_err());
+            }
+        });
+    }
+
+    #[test]
+    fn aligned_overwrite_elides_existing_reads() {
+        // Fully covered cuboids under overwrite never read: the engine
+        // sees zero read traffic for a cuboid-aligned bulk write.
+        let svc = service([256, 256, 32], 1).with_write_config(WriteConfig {
+            workers: 4,
+            parallel_threshold: 1,
+            ..WriteConfig::default()
+        });
+        let whole = Box3::new([0, 0, 0], [256, 256, 32]);
+        let vol = hash_vol(whole);
+        svc.write(0, 0, 0, whole, &vol).unwrap();
+        let covered = whole.cuboid_cover(svc.store().cuboid_shape(0).unwrap()).volume();
+        assert_eq!(svc.write_metrics.rmw_reads.get(), 0, "aligned overwrite must not read");
+        assert_eq!(svc.write_metrics.elided_reads.get(), covered);
+        assert_eq!(svc.write_metrics.parallel_writes.get(), 1);
+        assert_eq!(svc.write_metrics.fanout_width.count(), 1);
+        let s = svc.store().engine().stats().snapshot();
+        assert_eq!(s.reads + s.run_reads + s.misses, 0, "engine saw read traffic");
+        assert_eq!(svc.read::<u32>(0, 0, 0, whole).unwrap(), vol);
+
+        // An unaligned overwrite pays RMW only on boundary cuboids.
+        let inner = Box3::new([1, 1, 1], [255, 255, 31]);
+        let patch = hash_vol(inner);
+        svc.write(0, 0, 0, inner, &patch).unwrap();
+        assert!(svc.write_metrics.rmw_reads.get() > 0, "boundary cuboids must pre-read");
+        let got = svc.read::<u32>(0, 0, 0, whole).unwrap();
+        assert_eq!(got.get([0, 0, 0]), vol.get([0, 0, 0]), "outside patch preserved");
+        assert_eq!(got.get([1, 1, 1]), patch.get([0, 0, 0]));
+
+        // A merge write (discipline) can never elide.
+        svc.write_with(0, 0, 0, whole, &vol, |old, new| if old != 0 { old } else { new })
+            .unwrap();
+        assert_eq!(svc.write_metrics.rmw_reads.get() % covered, 0); // all covered cuboids read
+    }
+
+    #[test]
+    fn concurrent_parallel_writes_and_reads_stay_cache_coherent() {
+        // A parallel writer and concurrent readers over a cached store:
+        // readers may see a torn mix ACROSS cuboids (commits are
+        // per-batch), but never a stale cuboid after its invalidation —
+        // and once the writer joins, the final round is fully visible.
+        use crate::chunkstore::{CacheConfig, CuboidCache};
+        let ds = Arc::new(DatasetBuilder::new("t", [256, 256, 32]).levels(1).build());
+        let pr = Arc::new(Project::annotation("ann", "t"));
+        let cache = Arc::new(CuboidCache::new(CacheConfig::default()));
+        let store =
+            Arc::new(CuboidStore::new(ds, pr, Arc::new(MemStore::new())).with_cache(cache));
+        let svc = CutoutService::new(store)
+            .with_read_config(ReadConfig {
+                workers: 4,
+                parallel_threshold: 1,
+                ..ReadConfig::default()
+            })
+            .with_write_config(WriteConfig {
+                workers: 4,
+                parallel_threshold: 1,
+                ..WriteConfig::default()
+            });
+        let whole = Box3::new([0, 0, 0], [256, 256, 32]);
+        const ROUNDS: u32 = 6;
+        let cshape = svc.store().cuboid_shape(0).unwrap();
+        std::thread::scope(|s| {
+            let svc = &svc;
+            let writer = s.spawn(move || {
+                for r in 1..=ROUNDS {
+                    let mut v = DenseVolume::<u32>::zeros(whole.extent());
+                    v.fill_box(Box3::new([0, 0, 0], whole.extent()), r);
+                    svc.write(0, 0, 0, whole, &v).unwrap();
+                }
+            });
+            while !writer.is_finished() {
+                let got = svc.read::<u32>(0, 0, 0, whole).unwrap();
+                // Each cuboid blob is replaced atomically, so its voxels
+                // must be uniform and within the written range.
+                for cz in 0..whole.hi[2] / cshape[2] {
+                    for cy in 0..whole.hi[1] / cshape[1] {
+                        for cx in 0..whole.hi[0] / cshape[0] {
+                            let lo = [cx * cshape[0], cy * cshape[1], cz * cshape[2]];
+                            let a = got.get(lo);
+                            let b = got.get([
+                                lo[0] + cshape[0] - 1,
+                                lo[1] + cshape[1] - 1,
+                                lo[2] + cshape[2] - 1,
+                            ]);
+                            assert_eq!(a, b, "torn cuboid at {lo:?}");
+                            assert!(a <= ROUNDS, "impossible value {a}");
+                        }
+                    }
+                }
+            }
+            writer.join().unwrap();
+        });
+        let fin = svc.read::<u32>(0, 0, 0, whole).unwrap();
+        assert_eq!(fin.count_eq(ROUNDS), whole.volume(), "stale cuboid after final write");
+    }
+
+    #[test]
+    fn write_status_snapshots_config_and_counters() {
+        let svc = service([128, 128, 16], 1).with_write_config(WriteConfig {
+            workers: 3,
+            parallel_threshold: 1,
+            ..WriteConfig::default()
+        });
+        let bx = Box3::new([0, 0, 0], [128, 128, 16]);
+        svc.write(0, 0, 0, bx, &hash_vol(bx)).unwrap();
+        let st = svc.write_status();
+        assert_eq!(st.workers, 3);
+        assert_eq!(st.sequential_writes + st.parallel_writes, 1);
+        assert_eq!(st.elided_reads, 1); // 128x128x16 = exactly one cuboid
+        // The live knob: retune and observe.
+        svc.set_write_config(WriteConfig::with_workers(5));
+        assert_eq!(svc.write_status().workers, 5);
     }
 
     #[test]

@@ -214,8 +214,10 @@ pub fn block_boxes(dims: Vec3, block: Vec3) -> Vec<Box3> {
 }
 
 /// Bulk-ingest a volume into an image project in cuboid-aligned blocks —
-/// the "image data streamed from the instruments" path (§4.1). Returns
-/// bytes ingested.
+/// the "image data streamed from the instruments" path (§4.1). Aligned
+/// blocks are fully covered overwrites, so the write engine elides every
+/// existing-cuboid read (ingest performs zero read I/O) and scatters
+/// each block's commit across the shards. Returns bytes ingested.
 pub fn ingest_volume(
     svc: &CutoutService,
     vol: &DenseVolume<u8>,

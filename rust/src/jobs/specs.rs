@@ -300,6 +300,11 @@ impl JobSpec for SynapseDetectJob {
 /// first use — on a worker thread, not the submitting request — so a
 /// resumed job regenerates byte-identical source data and re-ingests
 /// only the blocks missing from the journal.
+///
+/// Blocks are cuboid-aligned, so every block write takes the write
+/// engine's fast path: fully covered cuboids **elide** their
+/// existing-cuboid read ([`crate::cutout::WriteMetrics::elided_reads`])
+/// and the job's storage traffic is pure write I/O.
 pub struct BulkIngestJob {
     svc: Arc<CutoutService>,
     spec: SynthSpec,
@@ -443,5 +448,28 @@ mod tests {
             .read::<u8>(0, 0, 0, Box3::new([0, 0, 0], dims))
             .unwrap();
         assert_eq!(back, truth.vol);
+    }
+
+    #[test]
+    fn bulk_ingest_job_never_reads_existing_cuboids() {
+        // The write engine's RMW elision: cuboid-aligned ingest blocks
+        // are fully covered overwrites, so the whole job performs zero
+        // existing-cuboid reads — ingest bandwidth is pure write I/O.
+        let dims = [256u64, 256, 32];
+        let svc = image_service(dims, 1);
+        let job = Arc::new(BulkIngestJob::new(
+            Arc::clone(&svc),
+            SynthSpec::small(dims, 3),
+            [128, 128, 16],
+        ));
+        let m = JobManager::new(Arc::new(MemStore::new()));
+        let h = m
+            .submit(Arc::clone(&job) as Arc<dyn JobSpec>, JobConfig::with_workers(4))
+            .unwrap();
+        assert_eq!(h.wait(), crate::jobs::JobState::Completed);
+        assert_eq!(svc.write_metrics.rmw_reads.get(), 0, "aligned ingest must not read");
+        assert!(svc.write_metrics.elided_reads.get() >= 8);
+        let s = svc.store().engine().stats().snapshot();
+        assert_eq!(s.reads + s.run_reads + s.misses, 0, "engine saw read traffic");
     }
 }

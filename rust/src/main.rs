@@ -24,6 +24,11 @@
 //!     Print every project's cuboid-cache status (entries, bytes, hit
 //!     rate, evictions, invalidations).
 //!
+//! ocpd write   [--url http://host:port] [--workers N]
+//!     Print every project's write-engine status (fan-out width, elided
+//!     vs RMW pre-reads, merge latency); with --workers, retune every
+//!     project's write fan-out first.
+//!
 //! ocpd jobs    [--url http://host:port] [--submit SPEC] [--workers N]
 //!              [--job ID] [--dims X,Y,Z] [--seed S] [--cancel ID]
 //!     Print every batch job's status. --submit launches a job (SPEC is
@@ -117,6 +122,7 @@ fn cmd_serve(flags: HashMap<String, String>) -> ocpd::Result<()> {
     println!("  GET {}/wal/status/", server.url());
     println!("  PUT {}/wal/flush/", server.url());
     println!("  GET {}/cache/status/", server.url());
+    println!("  GET {}/write/status/", server.url());
     println!("  POST {}/jobs/propagate/synapses_v0/", server.url());
     println!("  GET {}/jobs/status/", server.url());
     loop {
@@ -180,6 +186,18 @@ fn cmd_cache(flags: HashMap<String, String>) -> ocpd::Result<()> {
     Ok(())
 }
 
+fn cmd_write(flags: HashMap<String, String>) -> ocpd::Result<()> {
+    let url: String = flag(&flags, "url", "http://127.0.0.1:8642".to_string());
+    if let Some(n) = flags.get("workers") {
+        let n = n
+            .parse()
+            .map_err(|_| ocpd::Error::BadRequest(format!("bad worker count '{n}'")))?;
+        println!("{}", ocpd::client::set_write_workers(&url, n)?);
+    }
+    print!("{}", ocpd::client::write_status(&url)?);
+    Ok(())
+}
+
 fn cmd_jobs(flags: HashMap<String, String>) -> ocpd::Result<()> {
     let url: String = flag(&flags, "url", "http://127.0.0.1:8642".to_string());
     if let Some(id) = flags.get("cancel") {
@@ -207,7 +225,7 @@ fn main() {
     let (cmd, rest) = match args.split_first() {
         Some((c, r)) => (c.as_str(), r.to_vec()),
         None => {
-            eprintln!("usage: ocpd <serve|detect|info|wal|cache|jobs> [flags]");
+            eprintln!("usage: ocpd <serve|detect|info|wal|cache|write|jobs> [flags]");
             std::process::exit(2);
         }
     };
@@ -218,9 +236,10 @@ fn main() {
         "info" => cmd_info(flags),
         "wal" => cmd_wal(flags),
         "cache" => cmd_cache(flags),
+        "write" => cmd_write(flags),
         "jobs" => cmd_jobs(flags),
         other => {
-            eprintln!("unknown command '{other}' (want serve|detect|info|wal|cache|jobs)");
+            eprintln!("unknown command '{other}' (want serve|detect|info|wal|cache|write|jobs)");
             std::process::exit(2);
         }
     };

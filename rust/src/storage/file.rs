@@ -205,6 +205,27 @@ impl StorageEngine for FileStore {
         Ok(())
     }
 
+    fn delete_batch(&self, table: &str, keys: &[u64]) -> Result<()> {
+        let t = self.table(table)?;
+        // One page-table pass, then one index-log append holding every
+        // tombstone (the batch analogue of `put_batch`'s single write).
+        let present: Vec<u64> = {
+            let mut pages = t.pages.write().unwrap();
+            keys.iter().copied().filter(|k| pages.remove(k).is_some()).collect()
+        };
+        if present.is_empty() {
+            return Ok(());
+        }
+        let mut idx_blob = Vec::with_capacity(present.len() * IDX_RECORD);
+        for k in present {
+            idx_blob.extend_from_slice(&k.to_le_bytes());
+            idx_blob.extend_from_slice(&0u64.to_le_bytes());
+            idx_blob.extend_from_slice(&u64::MAX.to_le_bytes());
+        }
+        t.index.lock().unwrap().write_all(&idx_blob)?;
+        Ok(())
+    }
+
     fn put_batch(&self, table: &str, items: &[(u64, Vec<u8>)]) -> Result<()> {
         let t = self.table(table)?;
         // One data-log append for the whole batch.

@@ -79,6 +79,17 @@ impl StorageEngine for MemStore {
         Ok(())
     }
 
+    fn delete_batch(&self, table: &str, keys: &[u64]) -> Result<()> {
+        // One lock acquisition for the whole batch.
+        let mut tables = self.tables.write().unwrap();
+        if let Some(t) = tables.get_mut(table) {
+            for k in keys {
+                t.remove(k);
+            }
+        }
+        Ok(())
+    }
+
     fn get_batch(&self, table: &str, keys: &[u64]) -> Result<Vec<Option<Blob>>> {
         let tables = self.tables.read().unwrap();
         let t = tables.get(table);

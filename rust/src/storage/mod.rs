@@ -107,6 +107,18 @@ pub trait StorageEngine: Send + Sync {
     /// Delete one value; no-op if absent.
     fn delete(&self, table: &str, key: u64) -> Result<()>;
 
+    /// Delete many keys in one transaction-like batch; absent keys are
+    /// no-ops. Engines override this to amortize fixed costs the way
+    /// `put_batch` does — the write engine's lazy-allocation deletes
+    /// (all-zero cuboids) would otherwise pay one positioning cost per
+    /// key. Default: loop over `delete`.
+    fn delete_batch(&self, table: &str, keys: &[u64]) -> Result<()> {
+        for &k in keys {
+            self.delete(table, k)?;
+        }
+        Ok(())
+    }
+
     /// Read many keys. Default: loop over `get`.
     fn get_batch(&self, table: &str, keys: &[u64]) -> Result<Vec<Option<Blob>>> {
         keys.iter().map(|&k| self.get(table, k)).collect()
@@ -221,6 +233,11 @@ pub(crate) mod tests {
         engine.put_batch(t, &items).unwrap();
         let run = engine.get_run(t, 10, 10).unwrap();
         assert_eq!(run.len(), 10);
+
+        // Batch delete: present and absent keys mix freely.
+        engine.delete_batch(t, &[10, 11, 12, 999]).unwrap();
+        assert_eq!(engine.get_run(t, 10, 10).unwrap().len(), 7);
+        engine.delete_batch(t, &[]).unwrap(); // empty batch is a no-op
 
         // Table list contains ours.
         assert!(engine.tables().unwrap().iter().any(|x| x == t));

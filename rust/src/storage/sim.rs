@@ -226,6 +226,17 @@ impl StorageEngine for SimulatedStore {
         self.inner.delete(table, key)
     }
 
+    fn delete_batch(&self, table: &str, keys: &[u64]) -> Result<()> {
+        if keys.is_empty() {
+            return Ok(());
+        }
+        // Like `put_batch`: one positioning cost plus streaming for the
+        // batched tombstones (512 B of metadata per key).
+        self.govern_iops();
+        self.charge(self.profile.write_cost_us(512 * keys.len() as u64));
+        self.inner.delete_batch(table, keys)
+    }
+
     fn get_batch(&self, table: &str, keys: &[u64]) -> Result<Vec<Option<Blob>>> {
         // Batch of point reads: each pays its own seek (keys may be
         // scattered); use `get_run` for contiguous runs.

@@ -64,6 +64,18 @@ impl StorageEngine for WalEngine {
         Ok(())
     }
 
+    /// N tombstones become one group-commit log append (the delete-side
+    /// twin of `put_batch`).
+    fn delete_batch(&self, table: &str, keys: &[u64]) -> Result<()> {
+        if keys.is_empty() {
+            return Ok(());
+        }
+        let muts: Vec<(String, u64, Option<Vec<u8>>)> =
+            keys.iter().map(|&k| (table.to_string(), k, None)).collect();
+        self.wal.append(muts)?;
+        Ok(())
+    }
+
     fn get_batch(&self, table: &str, keys: &[u64]) -> Result<Vec<Option<Blob>>> {
         // Resolve what the overlay can; fetch the rest in one base batch.
         let mut out: Vec<Option<Option<Blob>>> = Vec::with_capacity(keys.len());

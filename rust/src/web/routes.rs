@@ -56,12 +56,13 @@ impl OcpService {
         }
         match (req.method.as_str(), segs[0]) {
             (_, "info") => self.info(),
-            // `wal`, `cache`, and `jobs` are reserved top-level names
-            // (like `info`): the write-absorber's, the cuboid cache's,
-            // and the batch compute engine's surfaces. Wrong-method
-            // requests answer 405 + `Allow` here instead of falling
-            // through to the project handlers and emitting a confusing
-            // 400 ("unknown write discipline 'status'").
+            // `wal`, `cache`, `jobs`, and `write` are reserved top-level
+            // names (like `info`): the write-absorber's, the cuboid
+            // cache's, the batch compute engine's, and the parallel
+            // write engine's surfaces. Wrong-method requests answer 405
+            // + `Allow` here instead of falling through to the project
+            // handlers and emitting a confusing 400 ("unknown write
+            // discipline 'status'").
             ("GET", "wal") => self.wal_get(&segs[1..]),
             ("PUT" | "POST", "wal") => self.wal_flush(&segs[1..]),
             (_, "wal") => Ok(Response::method_not_allowed("GET, PUT, POST")),
@@ -70,6 +71,9 @@ impl OcpService {
             ("GET", "jobs") => self.jobs_get(&segs[1..]),
             ("PUT" | "POST", "jobs") => self.jobs_post(&segs[1..], &req.body),
             (_, "jobs") => Ok(Response::method_not_allowed("GET, PUT, POST")),
+            ("GET", "write") => self.write_get(&segs[1..]),
+            ("PUT" | "POST", "write") => self.write_set(&segs[1..]),
+            (_, "write") => Ok(Response::method_not_allowed("GET, PUT, POST")),
             ("GET", token) => self.get(token, &segs[1..]),
             ("PUT" | "POST", token) => self.put(token, &segs[1..], &req.body),
             _ => Ok(Response::method_not_allowed("GET, PUT, POST")),
@@ -152,6 +156,53 @@ impl OcpService {
             }
             _ => {
                 Err(Error::BadRequest(format!("unrecognized GET /cache/{}", rest.join("/"))))
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Write-engine routes
+    // ------------------------------------------------------------------
+
+    /// GET /write/status/ — one line per project's write engine.
+    fn write_get(&self, rest: &[&str]) -> Result<Response> {
+        match rest {
+            ["status"] => {
+                let mut out = String::from("write:\n");
+                for (token, s) in self.cluster.write_status() {
+                    out.push_str(&format!(
+                        "  {token}: workers={} threshold={} seq={} par={} \
+                         elided_reads={} rmw_reads={} merge_mean_us={:.1} merge_p95_us={}\n",
+                        s.workers,
+                        s.parallel_threshold,
+                        s.sequential_writes,
+                        s.parallel_writes,
+                        s.elided_reads,
+                        s.rmw_reads,
+                        s.merge_mean_us,
+                        s.merge_p95_us
+                    ));
+                }
+                Ok(Response::text(out))
+            }
+            ["workers", ..] => Ok(Response::method_not_allowed("PUT, POST")),
+            _ => {
+                Err(Error::BadRequest(format!("unrecognized GET /write/{}", rest.join("/"))))
+            }
+        }
+    }
+
+    /// PUT /write/workers/{n}/ — retune every project's write fan-out.
+    fn write_set(&self, rest: &[&str]) -> Result<Response> {
+        match rest {
+            ["workers", n] => {
+                let n = (parse_num(n)? as usize).clamp(1, crate::jobs::MAX_WORKERS);
+                let projects = self.cluster.set_write_workers(n);
+                Ok(Response::text(format!("workers={n} projects={projects}")))
+            }
+            ["status", ..] => Ok(Response::method_not_allowed("GET")),
+            _ => {
+                Err(Error::BadRequest(format!("unrecognized PUT /write/{}", rest.join("/"))))
             }
         }
     }

@@ -113,6 +113,61 @@ fn wal_flush_leaves_no_stale_cache_hits() {
 }
 
 #[test]
+fn sharded_cluster_parallel_writes_match_sequential() {
+    // The write engine over the full cluster stack: three database
+    // nodes, shard-aligned scatter commits, parity with the sequential
+    // path for unaligned RMW patches.
+    let dims = [512u64, 512, 32];
+    let mk = || {
+        let c = Cluster::in_memory(3, 0);
+        c.register_dataset(DatasetBuilder::new("ds", dims).levels(1).build());
+        c.create_image_project(Project::image("img", "ds")).unwrap()
+    };
+    let (seq, par) = (mk(), mk());
+    let whole = Box3::new([0, 0, 0], dims);
+    let base = hash_vol(whole);
+    seq.write_with_workers(0, 0, 0, whole, &base, 1).unwrap();
+    par.write_with_workers(0, 0, 0, whole, &base, 8).unwrap();
+    assert!(par.write_metrics.parallel_writes.get() > 0, "wide write must fan out");
+
+    let mut rng = Rng::new(7);
+    for _ in 0..6 {
+        let lo = [rng.below(400), rng.below(400), rng.below(24)];
+        let hi = [
+            lo[0] + 1 + rng.below(dims[0] - lo[0]),
+            lo[1] + 1 + rng.below(dims[1] - lo[1]),
+            lo[2] + 1 + rng.below(dims[2] - lo[2]),
+        ];
+        let bx = Box3::new(lo, hi);
+        let mut patch = hash_vol(bx);
+        patch.map_in_place(|v| v ^ 0xa5);
+        seq.write_with_workers(0, 0, 0, bx, &patch, 1).unwrap();
+        par.write_with_workers(0, 0, 0, bx, &patch, 8).unwrap();
+        let a = seq.read_with_workers::<u8>(0, 0, 0, whole, 1).unwrap();
+        let b = par.read_with_workers::<u8>(0, 0, 0, whole, 1).unwrap();
+        assert_eq!(a.as_bytes(), b.as_bytes(), "box {bx:?}");
+    }
+}
+
+#[test]
+fn parallel_writes_through_wal_keep_read_your_writes() {
+    // A hot annotation project's cutout service writes through the
+    // WalEngine: a fanned-out write group-commits per batch, reads merge
+    // the overlay, and the answer survives the flush.
+    let c = Cluster::in_memory(1, 1);
+    c.register_dataset(DatasetBuilder::new("ds", [256, 256, 32]).levels(1).build());
+    let db = c.create_annotation_project(Project::annotation("ann", "ds"), true).unwrap();
+    let bx = Box3::new([3, 5, 1], [250, 251, 31]);
+    let mut v = DenseVolume::<u32>::zeros(bx.extent());
+    v.fill_box(Box3::new([0, 0, 0], bx.extent()), 11);
+    db.cutout.write_with_workers(0, 0, 0, bx, &v, 4).unwrap();
+    assert!(c.wal("ann").unwrap().depth() > 0, "writes must land in the log");
+    assert_eq!(db.cutout.read::<u32>(0, 0, 0, bx).unwrap(), v);
+    c.flush_wal("ann").unwrap();
+    assert_eq!(db.cutout.read::<u32>(0, 0, 0, bx).unwrap(), v, "post-flush mismatch");
+}
+
+#[test]
 fn read_config_knobs_are_honored() {
     let c = Cluster::in_memory(2, 0);
     c.register_dataset(DatasetBuilder::new("ds", [256, 256, 32]).levels(1).build());

@@ -238,6 +238,44 @@ fn cache_status_route_reports_per_project_caches() {
 }
 
 #[test]
+fn write_engine_routes_report_and_retune() {
+    let f = fixture();
+    // The fixture's cuboid-aligned ingest went through the write
+    // engine: aligned blocks elide every existing-cuboid read.
+    let status = ocpd::client::write_status(&f.server.url()).unwrap();
+    assert!(status.contains("img:"), "{status}");
+    assert!(status.contains("ann:"), "{status}");
+    assert!(status.contains("elided_reads="), "{status}");
+    let img_line = status.lines().find(|l| l.trim_start().starts_with("img:")).unwrap();
+    assert!(img_line.contains("rmw_reads=0"), "{img_line}");
+
+    // Retune the fan-out width cluster-wide over HTTP.
+    let resp = ocpd::client::set_write_workers(&f.server.url(), 2).unwrap();
+    assert_eq!(resp, "workers=2 projects=2");
+    let status = ocpd::client::write_status(&f.server.url()).unwrap();
+    for line in status.lines().filter(|l| l.contains(": workers=")) {
+        assert!(line.contains("workers=2"), "{line}");
+    }
+
+    // Wrong methods 405; unknown sub-routes 400; garbled counts 400.
+    let (code, _) =
+        request("DELETE", &format!("{}/write/status/", f.server.url()), &[]).unwrap();
+    assert_eq!(code, 405);
+    let (code, _) =
+        request("GET", &format!("{}/write/workers/4/", f.server.url()), &[]).unwrap();
+    assert_eq!(code, 405);
+    let (code, _) =
+        request("PUT", &format!("{}/write/status/", f.server.url()), &[]).unwrap();
+    assert_eq!(code, 405);
+    let (code, _) =
+        request("GET", &format!("{}/write/nope/", f.server.url()), &[]).unwrap();
+    assert_eq!(code, 400);
+    let (code, _) =
+        request("PUT", &format!("{}/write/workers/banana/", f.server.url()), &[]).unwrap();
+    assert_eq!(code, 400);
+}
+
+#[test]
 fn reserved_tokens_reject_wrong_methods_with_405() {
     let f = fixture();
     // Previously these fell through to the project PUT handler and came
