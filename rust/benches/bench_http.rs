@@ -1,0 +1,298 @@
+//! Transport-tier money shot: the same small-request workload issued
+//! close-per-request (the seed's `Connection: close` behavior),
+//! keep-alive (pooled sockets), and pipelined (batched requests on one
+//! socket), at 1/4/16 concurrent clients — plus buffered vs streamed
+//! large-cutout delivery with a peak-memory proxy.
+//!
+//! * `close` — every request pays TCP connect + a server connection
+//!   thread spawn + teardown.
+//! * `keepalive` — the client pool reuses one socket per client thread.
+//! * `pipelined` — requests are written in batches of 8 before any
+//!   response is read, eliminating per-request round-trip stalls.
+//!
+//! Prints the table and rewrites `../BENCH_http.json` (override with
+//! `OCPD_BENCH_OUT`). `OCPD_BENCH_SMOKE=1` shrinks the workload for CI.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+use ocpd::cluster::Cluster;
+use ocpd::core::{DatasetBuilder, Project};
+use ocpd::ingest::{generate, ingest_volume, SynthSpec};
+use ocpd::web::http::{request, request_info, request_once};
+use ocpd::web::{serve_with, ServeOptions, Server};
+
+use common::*;
+
+const PIPELINE_BATCH: usize = 8;
+
+struct Workload {
+    requests_per_client: usize,
+    client_counts: Vec<usize>,
+    cutout_dims: [u64; 3],
+    /// Stream threshold for the streamed-cutout server (well under the
+    /// cutout's raw size so it actually streams).
+    stream_threshold: usize,
+}
+
+fn workload() -> Workload {
+    if std::env::var("OCPD_BENCH_SMOKE").is_ok() {
+        Workload {
+            requests_per_client: 40,
+            client_counts: vec![1, 4],
+            cutout_dims: [64, 64, 64],
+            stream_threshold: 128 << 10,
+        }
+    } else {
+        Workload {
+            requests_per_client: 400,
+            client_counts: vec![1, 4, 16],
+            cutout_dims: [256, 256, 256],
+            stream_threshold: 1 << 20,
+        }
+    }
+}
+
+fn boot(dims: [u64; 3], stream_threshold: usize) -> Server {
+    let cluster = Cluster::in_memory(1, 1);
+    cluster.register_dataset(DatasetBuilder::new("img", dims).levels(1).build());
+    let img = cluster.create_image_project(Project::image("img", "img")).unwrap();
+    let sv = generate(&SynthSpec::small(dims, 3));
+    ingest_volume(&img, &sv.vol, [256, 256, 16]).unwrap();
+    serve_with(
+        cluster,
+        None,
+        "127.0.0.1:0",
+        ServeOptions { stream_threshold, ..ServeOptions::default() },
+    )
+    .unwrap()
+}
+
+/// `clients` threads each issuing `n` small requests; returns seconds.
+fn hammer<F: Fn(&str) + Sync>(url: &str, clients: usize, n: usize, issue: F) -> f64 {
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..clients {
+            let issue = &issue;
+            s.spawn(move || {
+                for _ in 0..n {
+                    issue(url);
+                }
+            });
+        }
+    });
+    t0.elapsed().as_secs_f64()
+}
+
+/// One client's pipelined run: batches of `PIPELINE_BATCH` requests
+/// written before any response is read.
+fn pipelined_client(addr: std::net::SocketAddr, n: usize) {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut done = 0usize;
+    while done < n {
+        let batch = PIPELINE_BATCH.min(n - done);
+        let mut burst = String::new();
+        for _ in 0..batch {
+            burst.push_str("GET /wal/status/ HTTP/1.1\r\nHost: bench\r\n\r\n");
+        }
+        writer.write_all(burst.as_bytes()).unwrap();
+        for _ in 0..batch {
+            // Status line, headers (find content-length), body.
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.contains("200"), "{line}");
+            let mut content_length = 0usize;
+            loop {
+                let mut h = String::new();
+                reader.read_line(&mut h).unwrap();
+                let h = h.trim();
+                if h.is_empty() {
+                    break;
+                }
+                if let Some((k, v)) = h.split_once(':') {
+                    if k.eq_ignore_ascii_case("content-length") {
+                        content_length = v.trim().parse().unwrap();
+                    }
+                }
+            }
+            let mut body = vec![0u8; content_length];
+            reader.read_exact(&mut body).unwrap();
+        }
+        done += batch;
+    }
+}
+
+struct Row {
+    config: &'static str,
+    clients: usize,
+    requests: usize,
+    seconds: f64,
+}
+
+impl Row {
+    fn req_per_sec(&self) -> f64 {
+        self.requests as f64 / self.seconds.max(1e-9)
+    }
+}
+
+fn main() {
+    let w = workload();
+    let server = boot([64, 64, 16], usize::MAX);
+    let url = server.url();
+    let addr = server.addr();
+
+    let mut rows: Vec<Row> = Vec::new();
+    header(
+        "HTTP transport: small requests (GET /wal/status/)",
+        &["config", "clients", "requests", "req/s"],
+    );
+    for &clients in &w.client_counts {
+        let requests = clients * w.requests_per_client;
+        for config in ["close", "keepalive", "pipelined"] {
+            let seconds = match config {
+                "close" => hammer(&url, clients, w.requests_per_client, |u| {
+                    let (code, _) =
+                        request_once("GET", &format!("{u}/wal/status/"), &[]).unwrap();
+                    assert_eq!(code, 200);
+                }),
+                "keepalive" => hammer(&url, clients, w.requests_per_client, |u| {
+                    let (code, _) = request("GET", &format!("{u}/wal/status/"), &[]).unwrap();
+                    assert_eq!(code, 200);
+                }),
+                _ => {
+                    let t0 = Instant::now();
+                    std::thread::scope(|s| {
+                        for _ in 0..clients {
+                            s.spawn(move || pipelined_client(addr, w.requests_per_client));
+                        }
+                    });
+                    t0.elapsed().as_secs_f64()
+                }
+            };
+            rows.push(Row { config, clients, requests, seconds });
+            let r = rows.last().unwrap();
+            row(&[
+                r.config.to_string(),
+                r.clients.to_string(),
+                r.requests.to_string(),
+                format!("{:.0}", r.req_per_sec()),
+            ]);
+        }
+    }
+
+    let max_clients = *w.client_counts.last().unwrap();
+    let rps = |config: &str| {
+        rows.iter()
+            .find(|r| r.config == config && r.clients == max_clients)
+            .map(Row::req_per_sec)
+            .unwrap()
+    };
+    let keepalive_gain = rps("keepalive") / rps("close");
+    let pipeline_gain = rps("pipelined") / rps("close");
+    println!(
+        "\nkeep-alive vs close at {max_clients} clients: {:.2}x; pipelined: {:.2}x",
+        keepalive_gain, pipeline_gain
+    );
+    assert!(
+        keepalive_gain > 1.0,
+        "keep-alive must beat close-per-request at {max_clients} clients"
+    );
+    drop(server);
+
+    // Buffered vs streamed large cutout: same bytes, different peak
+    // memory. The buffered server materializes the whole encoded body;
+    // the streaming server's high-water mark is one slab chunk.
+    header(
+        "256^3-class cutout: buffered vs streamed",
+        &["mode", "seconds", "bytes", "peak proxy"],
+    );
+    let d = w.cutout_dims;
+    let path = format!("/img/ocpk/0/0,{}/0,{}/0,{}/", d[0], d[1], d[2]);
+
+    let buffered = boot(d, usize::MAX);
+    let t0 = Instant::now();
+    let info = request_info("GET", &format!("{}{path}", buffered.url()), &[]).unwrap();
+    let buffered_seconds = t0.elapsed().as_secs_f64();
+    assert_eq!(info.status, 200);
+    assert!(!info.chunked);
+    let buffered_bytes = info.body.len();
+    // Peak proxy: the whole encoded body lived in server memory at once.
+    let buffered_peak = buffered_bytes;
+    drop(buffered);
+    row(&[
+        "buffered".into(),
+        format!("{buffered_seconds:.3}"),
+        size_label(buffered_bytes as u64),
+        size_label(buffered_peak as u64),
+    ]);
+
+    let streaming = boot(d, w.stream_threshold);
+    let t0 = Instant::now();
+    let info = request_info("GET", &format!("{}{path}", streaming.url()), &[]).unwrap();
+    let streamed_seconds = t0.elapsed().as_secs_f64();
+    assert_eq!(info.status, 200);
+    assert!(info.chunked, "large cutout must stream at a 1 MiB threshold");
+    let streamed_bytes = info.body.len();
+    // Peak proxy: the server-side chunk high-water mark.
+    let streamed_peak = streaming.metrics.stream_peak_chunk.get() as usize;
+    assert!(streamed_peak > 0 && streamed_peak < buffered_peak);
+    drop(streaming);
+    row(&[
+        "streamed".into(),
+        format!("{streamed_seconds:.3}"),
+        size_label(streamed_bytes as u64),
+        size_label(streamed_peak as u64),
+    ]);
+    println!(
+        "\nstreamed peak-RSS proxy: {} vs {} buffered ({:.1}x smaller)",
+        size_label(streamed_peak as u64),
+        size_label(buffered_peak as u64),
+        buffered_peak as f64 / streamed_peak as f64
+    );
+
+    // Machine-readable results.
+    let out = std::env::var("OCPD_BENCH_OUT").unwrap_or_else(|_| "../BENCH_http.json".into());
+    let mut json = String::from("{\n  \"bench\": \"bench_http\",\n");
+    json.push_str(&format!(
+        "  \"workload\": {{\"requests_per_client\": {}, \"route\": \"/wal/status/\", \
+         \"pipeline_batch\": {PIPELINE_BATCH}, \"cutout_dims\": [{}, {}, {}]}},\n",
+        w.requests_per_client, d[0], d[1], d[2]
+    ));
+    json.push_str("  \"provenance\": \"measured by cargo bench --bench bench_http\",\n");
+    json.push_str(&format!(
+        "  \"keepalive_vs_close_at_max_clients\": {keepalive_gain:.2},\n"
+    ));
+    json.push_str(&format!(
+        "  \"pipelined_vs_close_at_max_clients\": {pipeline_gain:.2},\n"
+    ));
+    json.push_str(&format!(
+        "  \"cutout\": {{\"buffered_seconds\": {buffered_seconds:.4}, \
+         \"streamed_seconds\": {streamed_seconds:.4}, \"bytes\": {streamed_bytes}, \
+         \"buffered_peak_bytes\": {buffered_peak}, \"streamed_peak_bytes\": {streamed_peak}}},\n"
+    ));
+    json.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"config\": \"{}\", \"clients\": {}, \"requests\": {}, \
+             \"seconds\": {:.4}, \"req_per_sec\": {:.1}}}{}\n",
+            r.config,
+            r.clients,
+            r.requests,
+            r.seconds,
+            r.req_per_sec(),
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

@@ -2,6 +2,11 @@
 //! analysis script links against. Wraps the HTTP wire protocol of
 //! [`crate::web`]; the paper's clients did the same over HDF5 from
 //! "Java, C/C++, Python, Perl, php, and Matlab" (§4.2).
+//!
+//! Every call rides [`crate::web::http::request`], so connections are
+//! pooled keep-alive sockets (reused across sequential calls, retried
+//! once on staleness) and chunked (streamed) responses are reassembled
+//! transparently.
 
 use crate::annotation::RamonObject;
 use crate::array::DenseVolume;
@@ -173,6 +178,17 @@ pub fn wal_status(base_url: &str) -> Result<String> {
         request("GET", &format!("{}/wal/status/", base_url.trim_end_matches('/')), &[])?;
     if s != 200 {
         return Err(Error::Other(format!("http {s}")));
+    }
+    Ok(String::from_utf8_lossy(&b).to_string())
+}
+
+/// Transport status: request/connection counters, reuse ratio,
+/// in-flight gauge, admission rejections, per-route latency.
+pub fn http_status(base_url: &str) -> Result<String> {
+    let (s, b) =
+        request("GET", &format!("{}/http/status/", base_url.trim_end_matches('/')), &[])?;
+    if s != 200 {
+        return Err(Error::Other(format!("http {s}: {}", String::from_utf8_lossy(&b))));
     }
     Ok(String::from_utf8_lossy(&b).to_string())
 }

@@ -233,16 +233,17 @@ impl Cluster {
     // ------------------------------------------------------------------
 
     /// A token must be unclaimed and must not shadow a reserved
-    /// top-level route name (`/info/`, `/wal/...`, `/cache/...`,
-    /// `/jobs/...`, `/write/...`). Re-creating an existing hot token
-    /// would be worse than confusing: two [`Wal`]s over one chunk table
-    /// would overwrite each other's durable frames. Callers pass the
-    /// held write guard so check and insert are one atomic step.
+    /// top-level route name ([`crate::web::RESERVED`]: `/info/`,
+    /// `/http/...`, `/wal/...`, `/cache/...`, `/jobs/...`,
+    /// `/write/...`). Re-creating an existing hot token would be worse
+    /// than confusing: two [`Wal`]s over one chunk table would
+    /// overwrite each other's durable frames. Callers pass the held
+    /// write guard so check and insert are one atomic step.
     fn check_token_free(
         projects: &HashMap<String, ProjectHandle>,
         token: &str,
     ) -> Result<()> {
-        if matches!(token, "info" | "wal" | "cache" | "jobs" | "write") {
+        if crate::web::RESERVED.contains(&token) {
             return Err(Error::BadRequest(format!(
                 "'{token}' is a reserved name and cannot be a project token"
             )));
@@ -722,6 +723,12 @@ mod tests {
         assert!(c.create_image_project(Project::image("cache", "ds")).is_err());
         assert!(c.create_image_project(Project::image("jobs", "ds")).is_err());
         assert!(c.create_image_project(Project::image("write", "ds")).is_err());
+        assert!(c.create_image_project(Project::image("http", "ds")).is_err());
+        // The gate and the router share one list — every reserved route
+        // name is covered, automatically.
+        for token in crate::web::RESERVED {
+            assert!(c.create_image_project(Project::image(token, "ds")).is_err());
+        }
     }
 
     #[test]

@@ -329,6 +329,47 @@ impl CutoutService {
         Ok(if bx.is_aligned(shape) { Alignment::Aligned } else { Alignment::Unaligned })
     }
 
+    /// Partition `bx` into z-slabs for a streaming read: consecutive
+    /// boxes that tile `bx` in z-order, each targeting at most
+    /// `max_voxels` voxels. Because the dense output layout is
+    /// x-fastest, the concatenated slab payloads are byte-identical to
+    /// one whole-box read — the web tier streams them as chunks under a
+    /// single volume header.
+    ///
+    /// When the budget allows at least one whole cuboid z-layer group,
+    /// slabs are rounded to cuboid-aligned z-groups so no cuboid is
+    /// fetched by two slabs. For very wide XY extents — where even one
+    /// cuboid layer group busts the budget — slabs fall back to thinner
+    /// z-cuts (floor: a single z-layer of the request, the thinnest
+    /// contiguous unit of the output), trading bounded cuboid re-reads
+    /// (absorbed by the cuboid cache when it fits) for a hard memory
+    /// bound.
+    ///
+    /// Validates the request up front (same checks as
+    /// [`read`](Self::read)) so a caller can fail before committing to
+    /// a streamed response.
+    pub fn slab_boxes(&self, res: u32, bx: Box3, max_voxels: usize) -> Result<Vec<Box3>> {
+        self.store.dataset.check_box(res, &bx)?;
+        let cz = self.store.cuboid_shape(res)?[2].max(1);
+        let e = bx.extent();
+        let plane_voxels = (e[0] * e[1]).max(1);
+        let budget_layers = (max_voxels as u64 / plane_voxels).max(1);
+        // Whole cuboid z-groups when they fit the budget; thinner
+        // (sub-cuboid) cuts when a single group would not.
+        let layers =
+            if budget_layers >= cz { (budget_layers / cz) * cz } else { budget_layers };
+        let mut out = Vec::new();
+        let mut z = bx.lo[2];
+        while z < bx.hi[2] {
+            // Cut at global grid multiples of `layers` so every slab
+            // boundary is a cuboid boundary.
+            let next = ((z / layers + 1) * layers).min(bx.hi[2]);
+            out.push(Box3::new([bx.lo[0], bx.lo[1], z], [bx.hi[0], bx.hi[1], next]));
+            z = next;
+        }
+        Ok(out)
+    }
+
     /// Read the sub-volume `bx` at `(res, channel, timestep)`, fanning
     /// out across the worker pool per [`ReadConfig`].
     pub fn read<T: VoxelScalar>(
@@ -837,6 +878,52 @@ mod tests {
             }
         }
         v
+    }
+
+    #[test]
+    fn slab_boxes_tile_the_request_at_cuboid_boundaries() {
+        let svc = service([256, 256, 64], 1);
+        let cz = svc.store().cuboid_shape(0).unwrap()[2];
+        let bx = Box3::new([3, 5, 1], [250, 251, 63]);
+        // Budget of one cuboid z-layer's worth of voxels.
+        let plane = (bx.extent()[0] * bx.extent()[1]) as usize;
+        let slabs = svc.slab_boxes(0, bx, plane * cz as usize).unwrap();
+        assert!(slabs.len() > 1, "{slabs:?}");
+        // Slabs tile bx exactly, in z order, cutting only at cuboid
+        // boundaries (except the request's own ends).
+        assert_eq!(slabs.first().unwrap().lo, bx.lo);
+        assert_eq!(slabs.last().unwrap().hi, bx.hi);
+        for w in slabs.windows(2) {
+            assert_eq!(w[0].hi[2], w[1].lo[2]);
+            assert_eq!(w[0].hi[2] % cz, 0, "cut not on a cuboid boundary: {w:?}");
+        }
+        // Concatenated slab payloads are byte-identical to one read.
+        let vol = hash_vol(bx);
+        svc.write(0, 0, 0, bx, &vol).unwrap();
+        let whole = svc.read::<u32>(0, 0, 0, bx).unwrap();
+        let mut streamed: Vec<u8> = Vec::new();
+        for s in &slabs {
+            streamed.extend_from_slice(svc.read::<u32>(0, 0, 0, *s).unwrap().as_bytes());
+        }
+        assert_eq!(streamed, whole.as_bytes());
+        // A budget larger than the request is a single slab.
+        assert_eq!(svc.slab_boxes(0, bx, usize::MAX).unwrap(), vec![bx]);
+        // A budget below one cuboid z-group falls back to thinner cuts
+        // (hard memory bound beats cuboid alignment); payload identity
+        // still holds, and no slab exceeds the budget by more than the
+        // one-z-layer floor.
+        let tight = svc.slab_boxes(0, bx, plane * 3).unwrap();
+        assert!(tight.len() > slabs.len(), "{tight:?}");
+        let mut tight_bytes: Vec<u8> = Vec::new();
+        for s in &tight {
+            assert!(s.extent()[2] <= 3, "slab over budget: {s:?}");
+            tight_bytes.extend_from_slice(svc.read::<u32>(0, 0, 0, *s).unwrap().as_bytes());
+        }
+        assert_eq!(tight_bytes, whole.as_bytes());
+        // Out-of-bounds requests fail up front.
+        assert!(svc
+            .slab_boxes(0, Box3::new([0, 0, 0], [300, 10, 10]), 1 << 20)
+            .is_err());
     }
 
     #[test]

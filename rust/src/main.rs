@@ -24,6 +24,10 @@
 //!     Print every project's cuboid-cache status (entries, bytes, hit
 //!     rate, evictions, invalidations).
 //!
+//! ocpd http    [--url http://host:port]
+//!     Print the transport status (requests, connection-reuse ratio,
+//!     in-flight, 503 rejections, accept errors, per-route latency).
+//!
 //! ocpd write   [--url http://host:port] [--workers N]
 //!     Print every project's write-engine status (fan-out width, elided
 //!     vs RMW pre-reads, merge latency); with --workers, retune every
@@ -123,6 +127,7 @@ fn cmd_serve(flags: HashMap<String, String>) -> ocpd::Result<()> {
     println!("  PUT {}/wal/flush/", server.url());
     println!("  GET {}/cache/status/", server.url());
     println!("  GET {}/write/status/", server.url());
+    println!("  GET {}/http/status/", server.url());
     println!("  POST {}/jobs/propagate/synapses_v0/", server.url());
     println!("  GET {}/jobs/status/", server.url());
     loop {
@@ -186,6 +191,12 @@ fn cmd_cache(flags: HashMap<String, String>) -> ocpd::Result<()> {
     Ok(())
 }
 
+fn cmd_http(flags: HashMap<String, String>) -> ocpd::Result<()> {
+    let url: String = flag(&flags, "url", "http://127.0.0.1:8642".to_string());
+    print!("{}", ocpd::client::http_status(&url)?);
+    Ok(())
+}
+
 fn cmd_write(flags: HashMap<String, String>) -> ocpd::Result<()> {
     let url: String = flag(&flags, "url", "http://127.0.0.1:8642".to_string());
     if let Some(n) = flags.get("workers") {
@@ -225,7 +236,7 @@ fn main() {
     let (cmd, rest) = match args.split_first() {
         Some((c, r)) => (c.as_str(), r.to_vec()),
         None => {
-            eprintln!("usage: ocpd <serve|detect|info|wal|cache|write|jobs> [flags]");
+            eprintln!("usage: ocpd <serve|detect|info|wal|cache|write|jobs|http> [flags]");
             std::process::exit(2);
         }
     };
@@ -236,10 +247,13 @@ fn main() {
         "info" => cmd_info(flags),
         "wal" => cmd_wal(flags),
         "cache" => cmd_cache(flags),
+        "http" => cmd_http(flags),
         "write" => cmd_write(flags),
         "jobs" => cmd_jobs(flags),
         other => {
-            eprintln!("unknown command '{other}' (want serve|detect|info|wal|cache|write|jobs)");
+            eprintln!(
+                "unknown command '{other}' (want serve|detect|info|wal|cache|write|jobs|http)"
+            );
             std::process::exit(2);
         }
     };

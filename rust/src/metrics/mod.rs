@@ -44,6 +44,14 @@ impl Gauge {
         });
     }
 
+    /// Raise the gauge to `v` if it is below it — a high-water mark
+    /// (peak in-flight requests, largest streamed chunk).
+    pub fn record_max(&self, v: u64) {
+        let _ = self
+            .0
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| (cur < v).then_some(v));
+    }
+
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
     }
@@ -175,6 +183,16 @@ mod tests {
         assert_eq!(g.get(), 12);
         g.sub(100); // saturates at zero
         assert_eq!(g.get(), 0);
+    }
+
+    #[test]
+    fn gauge_high_water_mark() {
+        let g = Gauge::default();
+        g.record_max(7);
+        g.record_max(3); // below the mark: no change
+        assert_eq!(g.get(), 7);
+        g.record_max(20);
+        assert_eq!(g.get(), 20);
     }
 
     #[test]

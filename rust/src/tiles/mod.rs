@@ -16,7 +16,7 @@
 //! directory per viewing plane, §3.3).
 
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::array::Plane;
 use crate::cutout::CutoutService;
@@ -64,21 +64,23 @@ pub struct TileService {
 
 struct LruCache {
     cap: usize,
-    map: HashMap<TileKey, (u64, Vec<u8>)>, // key -> (stamp, tile)
+    // key -> (stamp, tile); tiles are Arc-shared so a cache hit answers
+    // a request without copying the 64 KiB payload.
+    map: HashMap<TileKey, (u64, Arc<Vec<u8>>)>,
     clock: u64,
 }
 
 impl LruCache {
-    fn get(&mut self, k: &TileKey) -> Option<Vec<u8>> {
+    fn get(&mut self, k: &TileKey) -> Option<Arc<Vec<u8>>> {
         self.clock += 1;
         let clock = self.clock;
         self.map.get_mut(k).map(|(stamp, v)| {
             *stamp = clock;
-            v.clone()
+            Arc::clone(v)
         })
     }
 
-    fn put(&mut self, k: TileKey, v: Vec<u8>) {
+    fn put(&mut self, k: TileKey, v: Arc<Vec<u8>>) {
         self.clock += 1;
         if self.map.len() >= self.cap && !self.map.contains_key(&k) {
             // Evict the oldest entry.
@@ -111,6 +113,13 @@ impl TileService {
     /// zero-padded at volume edges). On a cache miss the covering
     /// cuboid-aligned region is materialized and all its tiles cached.
     pub fn get_tile(&self, key: TileKey) -> Result<Vec<u8>> {
+        Ok((*self.get_tile_shared(key)?).clone())
+    }
+
+    /// [`get_tile`](Self::get_tile) without the copy: the returned
+    /// `Arc` shares the cache's buffer, so the web tier can put a
+    /// cached tile on the wire zero-copy.
+    pub fn get_tile_shared(&self, key: TileKey) -> Result<Arc<Vec<u8>>> {
         if let Some(t) = self.cache.lock().unwrap().get(&key) {
             self.hits.inc();
             return Ok(t);
@@ -157,7 +166,7 @@ impl TileService {
         let t_lo = [region.lo[0] / ts, region.lo[1] / ts];
         let t_hi = [region.hi[0].div_ceil(ts), region.hi[1].div_ceil(ts)];
         let mut cache = self.cache.lock().unwrap();
-        let mut requested: Option<Vec<u8>> = None;
+        let mut requested: Option<Arc<Vec<u8>>> = None;
         for ty in t_lo[1]..t_hi[1].max(t_lo[1] + 1) {
             for tx in t_lo[0]..t_hi[0].max(t_lo[0] + 1) {
                 let k = TileKey { res: key.res, z: key.z, y: ty, x: tx };
@@ -181,8 +190,9 @@ impl TileService {
                         }
                     }
                 }
+                let tile = Arc::new(tile);
                 if k == key {
-                    requested = Some(tile.clone());
+                    requested = Some(Arc::clone(&tile));
                 }
                 cache.put(k, tile);
             }
@@ -192,7 +202,10 @@ impl TileService {
         // can evict it — re-insert the real content rather than let the
         // caller see zeros. Outside volume bounds it is genuinely zero.
         if !cache.map.contains_key(&key) {
-            cache.put(key, requested.unwrap_or_else(|| vec![0u8; (ts * ts) as usize]));
+            cache.put(
+                key,
+                requested.unwrap_or_else(|| Arc::new(vec![0u8; (ts * ts) as usize])),
+            );
         }
         Ok(())
     }

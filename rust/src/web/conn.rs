@@ -1,0 +1,379 @@
+//! Keep-alive HTTP client: a process-wide connection pool with
+//! chunked-response decoding.
+//!
+//! Every wire client in the system — the typed [`crate::client`] layer,
+//! the CLI subcommands, the job submitters, the benches, and the test
+//! suites — funnels through [`request`], so all of them ride pooled
+//! persistent connections automatically. A socket is checked out of the
+//! pool (or freshly connected), carries one request/response exchange,
+//! and is returned for the next caller unless either side asked to
+//! close.
+//!
+//! Staleness is handled by retrying once: a pooled socket whose server
+//! closed it (idle timeout, server drain, restart) fails on write or on
+//! the first response byte — the pool discards it and repeats the
+//! exchange on a fresh connection. The retry only happens when no
+//! response byte was seen, and only for requests that started on a
+//! *pooled* socket. POSTs (job submissions — the grammar's only
+//! non-idempotent verb) never check out a pooled socket at all: a
+//! fresh connection cannot be stale, so a POST is never replayed after
+//! the server may have already processed it. GET/PUT are idempotent in
+//! this grammar, so their single retry is safe.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use crate::{Error, Result};
+
+/// Per-host cap on parked idle connections; excess sockets are closed
+/// on return rather than pooled. Sized above the widest client fan-out
+/// the benches drive (16) so every concurrent caller can park and
+/// reuse its socket.
+const MAX_IDLE_PER_HOST: usize = 32;
+
+/// Total parked connections across all hosts (the test suite talks to
+/// dozens of short-lived servers; dead sockets must not pile up).
+const MAX_IDLE_TOTAL: usize = 64;
+
+/// Idle sockets older than this are discarded at checkout — the server
+/// side times idle connections out at ~30s, so anything near that is
+/// better reconnected than raced.
+const MAX_IDLE_AGE: Duration = Duration::from_secs(20);
+
+/// Client-side socket timeout: a server that stops mid-response fails
+/// the call instead of hanging the caller.
+const CLIENT_READ_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Everything [`request_info`] learned about one exchange.
+#[derive(Debug)]
+pub struct ResponseInfo {
+    pub status: u16,
+    pub body: Vec<u8>,
+    /// Response arrived as chunked transfer-encoding (a streamed body).
+    pub chunked: bool,
+    /// Largest single chunk, in bytes (0 for `Content-Length` bodies) —
+    /// the client-visible proxy for the server's streaming granularity.
+    pub max_chunk: usize,
+    /// The exchange rode a pooled (reused) connection.
+    pub reused: bool,
+}
+
+struct IdleConn {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+    parked_at: Instant,
+}
+
+#[derive(Default)]
+struct Pool {
+    idle: Mutex<HashMap<String, Vec<IdleConn>>>,
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(Pool::default)
+}
+
+impl Pool {
+    fn checkout(&self, host: &str) -> Option<IdleConn> {
+        let mut guard = self.idle.lock().unwrap();
+        let conns = guard.get_mut(host)?;
+        while let Some(c) = conns.pop() {
+            if c.parked_at.elapsed() < MAX_IDLE_AGE {
+                return Some(c);
+            }
+            // Too old: likely already closed server-side; drop it.
+        }
+        None
+    }
+
+    fn park(&self, host: &str, conn: IdleConn) {
+        let mut guard = self.idle.lock().unwrap();
+        let total: usize = guard.values().map(Vec::len).sum();
+        if total >= MAX_IDLE_TOTAL {
+            // Evict the stalest parked socket anywhere to make room.
+            if let Some(key) = guard
+                .iter()
+                .filter(|(_, v)| !v.is_empty())
+                .min_by_key(|(_, v)| v.iter().map(|c| c.parked_at).min())
+                .map(|(k, _)| k.clone())
+            {
+                if let Some(v) = guard.get_mut(&key) {
+                    if !v.is_empty() {
+                        v.remove(0);
+                    }
+                }
+            }
+        }
+        let conns = guard.entry(host.to_string()).or_default();
+        if conns.len() < MAX_IDLE_PER_HOST {
+            conns.push(conn);
+        }
+    }
+}
+
+fn split_url(url: &str) -> Result<(&str, String)> {
+    let rest = url
+        .strip_prefix("http://")
+        .ok_or_else(|| Error::BadRequest(format!("unsupported url '{url}'")))?;
+    Ok(match rest.split_once('/') {
+        Some((h, p)) => (h, format!("/{p}")),
+        None => (rest, "/".to_string()),
+    })
+}
+
+fn connect(host: &str) -> Result<IdleConn> {
+    let stream = TcpStream::connect(host)?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(CLIENT_READ_TIMEOUT)).ok();
+    let reader = BufReader::new(stream.try_clone()?);
+    Ok(IdleConn { stream, reader, parked_at: Instant::now() })
+}
+
+/// One request/response exchange on an open connection. `Err(io)` means
+/// the socket is dead; the bool in `Ok` is "no response byte was read
+/// yet" never escapes — instead a dead-before-response socket maps to
+/// `Err` with `retryable` true.
+struct Exchange {
+    info: ResponseInfo,
+    keep: bool,
+}
+
+fn exchange(
+    conn: &mut IdleConn,
+    method: &str,
+    host: &str,
+    path: &str,
+    body: &[u8],
+    close: bool,
+) -> std::result::Result<Exchange, (bool, Error)> {
+    // retryable=true until the first response byte arrives.
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {host}\r\nContent-Length: {}\r\n{}\r\n",
+        body.len(),
+        if close { "Connection: close\r\n" } else { "" }
+    );
+    let write = (|| -> std::io::Result<()> {
+        conn.stream.write_all(head.as_bytes())?;
+        conn.stream.write_all(body)?;
+        conn.stream.flush()
+    })();
+    if let Err(e) = write {
+        return Err((true, e.into()));
+    }
+
+    let mut status_line = String::new();
+    match conn.reader.read_line(&mut status_line) {
+        Ok(0) => return Err((true, Error::Other("connection closed before response".into()))),
+        Ok(_) => {}
+        Err(e) => return Err((true, e.into())),
+    }
+    // A response byte arrived: any failure past here is NOT retryable.
+    let fatal = |e: Error| (false, e);
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| fatal(Error::Other(format!("bad status line '{status_line}'"))))?;
+
+    let mut content_length: Option<usize> = None;
+    let mut chunked = false;
+    let mut server_close = close;
+    loop {
+        let mut h = String::new();
+        match conn.reader.read_line(&mut h) {
+            Ok(0) => return Err(fatal(Error::Other("connection closed mid-headers".into()))),
+            Ok(_) => {}
+            Err(e) => return Err(fatal(e.into())),
+        }
+        let h = h.trim();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            let v = v.trim();
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.parse::<usize>().ok();
+            } else if k.eq_ignore_ascii_case("transfer-encoding") {
+                chunked = v.eq_ignore_ascii_case("chunked");
+            } else if k.eq_ignore_ascii_case("connection") && v.eq_ignore_ascii_case("close") {
+                server_close = true;
+            }
+        }
+    }
+
+    let mut body_out = Vec::new();
+    let mut max_chunk = 0usize;
+    if chunked {
+        loop {
+            let mut size_line = String::new();
+            match conn.reader.read_line(&mut size_line) {
+                Ok(0) => return Err(fatal(Error::Other("truncated chunked body".into()))),
+                Ok(_) => {}
+                Err(e) => return Err(fatal(e.into())),
+            }
+            let size = usize::from_str_radix(size_line.trim(), 16)
+                .map_err(|_| fatal(Error::Other(format!("bad chunk size '{size_line}'"))))?;
+            if size == 0 {
+                // Trailer section: read through the final blank line.
+                loop {
+                    let mut t = String::new();
+                    match conn.reader.read_line(&mut t) {
+                        Ok(0) => break,
+                        Ok(_) if t.trim().is_empty() => break,
+                        Ok(_) => {}
+                        Err(e) => return Err(fatal(e.into())),
+                    }
+                }
+                break;
+            }
+            max_chunk = max_chunk.max(size);
+            let at = body_out.len();
+            body_out.resize(at + size, 0);
+            if let Err(e) = conn.reader.read_exact(&mut body_out[at..]) {
+                return Err(fatal(e.into()));
+            }
+            let mut crlf = [0u8; 2];
+            if let Err(e) = conn.reader.read_exact(&mut crlf) {
+                return Err(fatal(e.into()));
+            }
+        }
+    } else {
+        match content_length {
+            Some(n) => {
+                body_out.resize(n, 0);
+                if let Err(e) = conn.reader.read_exact(&mut body_out) {
+                    return Err(fatal(e.into()));
+                }
+            }
+            None => {
+                // Legacy framing: body runs to EOF; connection is spent.
+                server_close = true;
+                if let Err(e) = conn.reader.read_to_end(&mut body_out) {
+                    return Err(fatal(e.into()));
+                }
+            }
+        }
+    }
+
+    Ok(Exchange {
+        info: ResponseInfo { status, body: body_out, chunked, max_chunk, reused: false },
+        keep: !server_close,
+    })
+}
+
+/// Issue `method url` with `body`, reusing a pooled keep-alive
+/// connection when one is parked for the host (retrying once on a fresh
+/// socket when the pooled one turns out stale). Returns
+/// `(status, body)`; chunked responses are reassembled transparently.
+pub fn request(method: &str, url: &str, body: &[u8]) -> Result<(u16, Vec<u8>)> {
+    let info = request_info(method, url, body)?;
+    Ok((info.status, info.body))
+}
+
+/// [`request`] with transport detail: whether the connection was
+/// reused, whether the response streamed, and the peak chunk size.
+pub fn request_info(method: &str, url: &str, body: &[u8]) -> Result<ResponseInfo> {
+    request_inner(method, url, body, false)
+}
+
+/// Close-per-request exchange on a dedicated socket (`Connection:
+/// close`), bypassing the pool — the pre-keep-alive behavior, kept for
+/// the transport benches' baseline.
+pub fn request_once(method: &str, url: &str, body: &[u8]) -> Result<(u16, Vec<u8>)> {
+    let info = request_inner(method, url, body, true)?;
+    Ok((info.status, info.body))
+}
+
+fn request_inner(method: &str, url: &str, body: &[u8], close: bool) -> Result<ResponseInfo> {
+    let (host, path) = split_url(url)?;
+    // POST is the grammar's one non-idempotent verb: always start it on
+    // a fresh socket so the stale-retry path (which replays the
+    // request) can never fire for it. The socket is still parked for
+    // reuse afterwards.
+    let reuse_ok = !close && !method.eq_ignore_ascii_case("POST");
+    let pooled = if reuse_ok { pool().checkout(host) } else { None };
+    let reused = pooled.is_some();
+    let mut conn = match pooled {
+        Some(c) => c,
+        None => connect(host)?,
+    };
+    match exchange(&mut conn, method, host, &path, body, close) {
+        Ok(Exchange { mut info, keep }) => {
+            info.reused = reused;
+            if keep && !close {
+                conn.parked_at = Instant::now();
+                pool().park(host, conn);
+            }
+            Ok(info)
+        }
+        Err((retryable, e)) => {
+            // Stale pooled socket: the server closed it between uses.
+            // One fresh-connection retry; errors there are real.
+            if retryable && reused {
+                let mut fresh = connect(host)?;
+                let Exchange { mut info, keep } =
+                    exchange(&mut fresh, method, host, &path, body, close)
+                        .map_err(|(_, e)| e)?;
+                info.reused = false;
+                if keep && !close {
+                    fresh.parked_at = Instant::now();
+                    pool().park(host, fresh);
+                }
+                return Ok(info);
+            }
+            Err(e)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::web::http::{Response, Server};
+
+    #[test]
+    fn pool_retries_once_on_stale_socket() {
+        // Server A answers, then dies; server B takes over the port?
+        // Ports are ephemeral, so instead: park a connection, drop the
+        // server, and verify the retry path surfaces a clean error
+        // (fresh connect refused) rather than a stale-socket panic.
+        let url;
+        {
+            let s = Server::bind("127.0.0.1:0", 2, |_req| Response::text("ok")).unwrap();
+            url = s.url();
+            let (code, _) = request("GET", &format!("{url}/x/"), &[]).unwrap();
+            assert_eq!(code, 200);
+            // The connection is now parked in the pool.
+        }
+        std::thread::sleep(Duration::from_millis(50));
+        // Pooled socket is dead AND the listener is gone: the retry
+        // must fail with an error, not hang or return garbage.
+        assert!(request("GET", &format!("{url}/x/"), &[]).is_err());
+    }
+
+    #[test]
+    fn stale_pooled_socket_recovers_when_server_lives() {
+        let s = Server::bind("127.0.0.1:0", 2, |_req| Response::text("ok")).unwrap();
+        let url = s.url();
+        let (code, _) = request("GET", &format!("{url}/a/"), &[]).unwrap();
+        assert_eq!(code, 200);
+        // Sabotage the parked socket by shutting it down client-side.
+        let host = url.strip_prefix("http://").unwrap().to_string();
+        if let Some(conn) = pool().checkout(&host) {
+            conn.stream.shutdown(std::net::Shutdown::Both).ok();
+            pool().park(&host, conn);
+        }
+        // Next request hits the dead socket, retries fresh, succeeds.
+        let (code, _) = request("GET", &format!("{url}/b/"), &[]).unwrap();
+        assert_eq!(code, 200);
+    }
+
+    #[test]
+    fn url_parsing_rejects_non_http() {
+        assert!(request("GET", "ftp://host/x", &[]).is_err());
+    }
+}

@@ -1,0 +1,28 @@
+//! Cuboid-cache routes.
+
+use crate::web::http::Response;
+use crate::web::router::Ctx;
+use crate::web::routes::OcpService;
+use crate::Result;
+
+/// GET /cache/status/ — one line per project's cuboid cache.
+pub(crate) fn status(svc: &OcpService, _ctx: &Ctx<'_>) -> Result<Response> {
+    let mut out = String::from("cache:\n");
+    for (token, s) in svc.cluster.cache_status() {
+        out.push_str(&format!(
+            "  {token}: entries={} bytes={}/{} shards={} hits={} misses={} \
+             hit_rate={:.3} inserts={} evictions={} invalidations={}\n",
+            s.entries,
+            s.bytes,
+            s.capacity_bytes,
+            s.shards,
+            s.hits,
+            s.misses,
+            s.hit_rate(),
+            s.inserts,
+            s.evictions,
+            s.invalidations
+        ));
+    }
+    Ok(Response::text(out))
+}

@@ -1,0 +1,128 @@
+//! Batch-compute-job routes.
+
+use std::sync::Arc;
+
+use crate::ingest::SynthSpec;
+use crate::jobs::{BulkIngestJob, JobConfig, JobSpec, PropagateJob, SynapseDetectJob};
+use crate::vision::SynapsePipeline;
+use crate::web::http::Response;
+use crate::web::router::Ctx;
+use crate::web::routes::{param_num, parse_num, parse_params, parse_triple, OcpService};
+use crate::{Error, Result};
+
+/// Upper bound on a server-side synthetic-ingest request, in voxels.
+/// The generator materializes the whole volume (8 B/voxel accumulator
+/// plus the u8 output), so this caps the per-request allocation at
+/// ~1.2 GiB regardless of how large the registered dataset is.
+const MAX_INGEST_VOXELS: u64 = 1 << 27;
+
+/// GET /jobs/status/ — every job.
+pub(crate) fn status_all(svc: &OcpService, _ctx: &Ctx<'_>) -> Result<Response> {
+    let mut out = String::from("jobs:\n");
+    for s in svc.cluster.jobs().statuses() {
+        out.push_str(&format!("  {}\n", s.line()));
+    }
+    Ok(Response::text(out))
+}
+
+/// GET /jobs/status/{id}/ — one job.
+pub(crate) fn status_one(svc: &OcpService, ctx: &Ctx<'_>) -> Result<Response> {
+    let id = parse_num(ctx.params[0])?;
+    match svc.cluster.jobs().get(id) {
+        Some(h) => Ok(Response::text(h.status().line())),
+        None => Err(Error::NotFound(format!("job {id}"))),
+    }
+}
+
+/// POST /jobs/cancel/{id}/.
+pub(crate) fn cancel(svc: &OcpService, ctx: &Ctx<'_>) -> Result<Response> {
+    let id = parse_num(ctx.params[0])?;
+    svc.cluster.jobs().cancel(id)?;
+    Ok(Response::text(format!("cancelled={id}")))
+}
+
+/// POST /jobs/propagate/{token}/ — build the resolution hierarchy of an
+/// image or annotation project.
+pub(crate) fn propagate(svc: &OcpService, ctx: &Ctx<'_>) -> Result<Response> {
+    let token = ctx.params[0];
+    let spec: Arc<dyn JobSpec> = match svc.cluster.image(token) {
+        Ok(s) => Arc::new(PropagateJob::image(s)),
+        Err(_) => Arc::new(PropagateJob::annotation(svc.cluster.annotation(token)?)),
+    };
+    submit(svc, spec, ctx.body)
+}
+
+/// POST /jobs/synapse/{image}/{annotation}/ — the §2 vision workload;
+/// needs the AOT runtime.
+pub(crate) fn synapse(svc: &OcpService, ctx: &Ctx<'_>) -> Result<Response> {
+    let (img, ann) = (ctx.params[0], ctx.params[1]);
+    let runtime = svc.runtime.clone().ok_or_else(|| {
+        Error::BadRequest("no vision runtime loaded (start the server with artifacts)".into())
+    })?;
+    let image = svc.cluster.image(img)?;
+    let anno = svc.cluster.annotation(ann)?;
+    let params = parse_params(ctx.body);
+    let res = param_num(&params, "res", 0)? as u32;
+    let region = image.store().dataset.level(res)?.bounds();
+    let pipeline = Arc::new(SynapsePipeline::new(runtime, image, anno));
+    submit(svc, Arc::new(SynapseDetectJob::new(pipeline, res, region)), ctx.body)
+}
+
+/// POST /jobs/ingest/{token}/ — chunked synthetic-EM ingest
+/// (`dims=X,Y,Z` required; `seed=N` optional).
+pub(crate) fn ingest(svc: &OcpService, ctx: &Ctx<'_>) -> Result<Response> {
+    let token = ctx.params[0];
+    let params = parse_params(ctx.body);
+    let s = svc.cluster.image(token)?;
+    let dims = params
+        .get("dims")
+        .ok_or_else(|| Error::BadRequest("ingest needs dims=X,Y,Z".into()))?;
+    let dims = parse_triple(dims)?;
+    // Clamp to the project's level-0 bounds, then cap the total volume:
+    // the generator holds the whole volume in memory (an f64
+    // accumulator, 8 B/voxel), so client dims must never size an
+    // arbitrary allocation — a registered dataset's bounds alone can
+    // exceed RAM.
+    let bounds = s.store().dataset.level(0)?.dims;
+    let dims = [
+        dims[0].min(bounds[0]).max(1),
+        dims[1].min(bounds[1]).max(1),
+        dims[2].min(bounds[2]).max(1),
+    ];
+    let voxels = dims[0].saturating_mul(dims[1]).saturating_mul(dims[2]);
+    if voxels > MAX_INGEST_VOXELS {
+        return Err(Error::BadRequest(format!(
+            "ingest volume of {voxels} voxels exceeds the \
+             {MAX_INGEST_VOXELS}-voxel limit (ingest a sub-volume, or use \
+             client-side uploads for full-scale data)"
+        )));
+    }
+    let seed = param_num(&params, "seed", 2013)?;
+    let block = match params.get("block") {
+        Some(b) => parse_triple(b)?,
+        None => [256, 256, 16],
+    };
+    let spec = SynthSpec::small(dims, seed);
+    submit(svc, Arc::new(BulkIngestJob::new(s, spec, block)), ctx.body)
+}
+
+/// Launch a job (fresh id, or resume via `job=ID`) and report it.
+fn submit(svc: &OcpService, spec: Arc<dyn JobSpec>, body: &[u8]) -> Result<Response> {
+    let params = parse_params(body);
+    // `MAX_WORKERS` also guards inside the engine; clamping here keeps
+    // a typo'd `workers=100000` from even trying.
+    let cfg = JobConfig {
+        workers: (param_num(&params, "workers", 4)? as usize).clamp(1, crate::jobs::MAX_WORKERS),
+        ..JobConfig::default()
+    };
+    let handle = match params.get("job") {
+        Some(id) => svc.cluster.jobs().submit_with_id(parse_num(id)?, spec, cfg)?,
+        None => svc.cluster.jobs().submit(spec, cfg)?,
+    };
+    Ok(Response::text(format!(
+        "id={} name={} state={}",
+        handle.id,
+        handle.name(),
+        handle.state().as_str()
+    )))
+}

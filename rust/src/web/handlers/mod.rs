@@ -1,0 +1,14 @@
+//! Route handlers, one module per subsystem surface.
+//!
+//! Each handler is a plain `fn(&OcpService, &Ctx) -> Result<Response>`
+//! registered in the routing table ([`crate::web::routes`]); the table,
+//! not the handlers, owns method sets, 405 derivation, and route
+//! naming. Handlers parse their captured segments with the helpers in
+//! [`crate::web::routes`] and talk to the cluster services directly.
+
+pub(crate) mod cache;
+pub(crate) mod jobs;
+pub(crate) mod projects;
+pub(crate) mod system;
+pub(crate) mod wal;
+pub(crate) mod write_engine;

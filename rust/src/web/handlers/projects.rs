@@ -1,0 +1,255 @@
+//! Per-project routes: cutouts, planes, tiles, RAMON metadata and
+//! object reads, volume writes.
+//!
+//! Large cutouts stream: instead of materializing the whole encoded
+//! volume, the handler emits an OCPK header followed by raw
+//! cuboid-aligned z-slabs as chunked transfer-encoding — each slab is
+//! read through the parallel read engine only when the previous one is
+//! already on the wire, so server-side peak memory is one slab, not the
+//! full volume.
+
+use std::sync::Arc;
+
+use crate::array::{DenseVolume, Plane, VoxelScalar};
+use crate::core::{Box3, Dtype, WriteDiscipline};
+use crate::cutout::CutoutService;
+use crate::tiles::TileKey;
+use crate::web::http::{BodyStream, Response};
+use crate::web::ocpk;
+use crate::web::router::Ctx;
+use crate::web::routes::{
+    parse_box, parse_num, parse_predicates, parse_range, parse_res, OcpService,
+};
+use crate::{Error, Result};
+
+/// Bounds on the voxel-data bytes per streamed slab. The target is a
+/// quarter of the service's stream threshold (so a streamed response
+/// always spans several chunks), clamped into this window and rounded
+/// up to whole cuboid-aligned z-layer groups.
+const STREAM_SLAB_MIN_BYTES: usize = 64 << 10;
+const STREAM_SLAB_MAX_BYTES: usize = 2 << 20;
+
+/// GET /{token}/ocpk/{res}/{xr}/{yr}/{zr}/ — image cutout if the token
+/// is an image project, else annotation cutout.
+pub(crate) fn cutout(svc: &OcpService, ctx: &Ctx<'_>) -> Result<Response> {
+    let token = ctx.params[0];
+    let res = parse_res(ctx.params[1])?;
+    let bx = parse_box(ctx.params[2], ctx.params[3], ctx.params[4])?;
+    if let Ok(is) = svc.cluster.image(token) {
+        let slabs = Arc::clone(&is);
+        return volume_response::<u8, _>(svc, &slabs, Dtype::U8, res, bx, move |r, b| {
+            is.read::<u8>(r, 0, 0, b)
+        });
+    }
+    let db = svc.cluster.annotation(token)?;
+    let slabs = Arc::clone(&db);
+    volume_response::<u32, _>(svc, &slabs.cutout, Dtype::U32, res, bx, move |r, b| {
+        db.cutout.read::<u32>(r, 0, 0, b)
+    })
+}
+
+/// Buffered OCPK volume under the stream threshold, chunked stream of
+/// cuboid-aligned z-slabs above it.
+fn volume_response<T, F>(
+    svc: &OcpService,
+    cs: &CutoutService,
+    dtype: Dtype,
+    res: u32,
+    bx: Box3,
+    read: F,
+) -> Result<Response>
+where
+    T: VoxelScalar,
+    F: Fn(u32, Box3) -> Result<DenseVolume<T>> + Send + 'static,
+{
+    let raw_bytes = (bx.volume() as usize).saturating_mul(T::BYTES);
+    if raw_bytes < svc.stream_threshold {
+        let vol = read(res, bx)?;
+        return Ok(Response::binary(ocpk::encode_volume(dtype, bx.lo, &vol)?));
+    }
+    // Plan (and validate) the slabs BEFORE committing to a 200 status
+    // line — a bad box fails here as a clean 400, not a mid-stream
+    // abort.
+    let slab_bytes = (svc.stream_threshold / 4).clamp(STREAM_SLAB_MIN_BYTES, STREAM_SLAB_MAX_BYTES);
+    let slabs = cs.slab_boxes(res, bx, slab_bytes / T::BYTES.max(1))?;
+    let mut header =
+        Some(ocpk::encode_volume_header(dtype, bx.lo, bx.extent(), raw_bytes as u64));
+    let metrics = svc.http.clone();
+    if let Some(m) = &metrics {
+        m.streamed_responses.inc();
+    }
+    let mut iter = slabs.into_iter();
+    let stream: BodyStream = Box::new(move || {
+        if let Some(h) = header.take() {
+            return Ok(Some(h));
+        }
+        match iter.next() {
+            Some(slab) => {
+                let bytes = volume_into_bytes(read(res, slab)?);
+                if let Some(m) = &metrics {
+                    crate::web::http::note_stream_chunk(m, bytes.len());
+                }
+                Ok(Some(bytes))
+            }
+            None => Ok(None),
+        }
+    });
+    Ok(Response::stream("application/x-ocpk", stream))
+}
+
+/// A volume's raw little-endian payload as an owned buffer. For `u8`
+/// (the large-EM streaming case) this hands back the read buffer
+/// itself — no copy; wider scalars pay one copy (a `Vec<T>` allocation
+/// cannot be retagged as `Vec<u8>` without an alignment-mismatched
+/// dealloc).
+fn volume_into_bytes<T: VoxelScalar>(vol: DenseVolume<T>) -> Vec<u8> {
+    if std::any::TypeId::of::<T>() == std::any::TypeId::of::<u8>() {
+        let mut v = std::mem::ManuallyDrop::new(vol.into_vec());
+        // Safety: T IS u8 (checked above), so pointer, length, capacity
+        // and allocation layout are already exactly a Vec<u8>'s.
+        unsafe { Vec::from_raw_parts(v.as_mut_ptr() as *mut u8, v.len(), v.capacity()) }
+    } else {
+        vol.as_bytes().to_vec()
+    }
+}
+
+/// GET /{token}/xy/{res}/{z}/{xr}/{yr}/ — plane projection.
+pub(crate) fn plane(svc: &OcpService, ctx: &Ctx<'_>) -> Result<Response> {
+    let token = ctx.params[0];
+    let res = parse_res(ctx.params[1])?;
+    let z: u64 = parse_num(ctx.params[2])?;
+    let (x0, x1) = parse_range(ctx.params[3])?;
+    let (y0, y1) = parse_range(ctx.params[4])?;
+    let s = svc.cluster.image(token)?;
+    let (w, h, data) = s.read_plane::<u8>(res, 0, 0, Plane::Xy(z), [x0, y0], [x1, y1])?;
+    let vol = DenseVolume::from_vec([w, h, 1], data)?;
+    Ok(Response::binary(ocpk::encode_volume(Dtype::U8, [x0, y0, z], &vol)?))
+}
+
+/// GET /{token}/tile/{res}/{z}/{y}_{x}.gray — stored-layout tile,
+/// served zero-copy from the tile cache.
+pub(crate) fn tile(svc: &OcpService, ctx: &Ctx<'_>) -> Result<Response> {
+    let token = ctx.params[0];
+    let res = parse_res(ctx.params[1])?;
+    let z: u64 = parse_num(ctx.params[2])?;
+    let yx = ctx.params[3];
+    let (y, x) = yx
+        .strip_suffix(".gray")
+        .and_then(|s| s.split_once('_'))
+        .ok_or_else(|| Error::BadRequest(format!("bad tile name '{yx}'")))?;
+    let key = TileKey { res, z, y: parse_num(y)?, x: parse_num(x)? };
+    let ts = svc.tile_service(token)?;
+    Ok(Response::binary_shared(ts.get_tile_shared(key)?))
+}
+
+/// GET /{token}/objects/{field}/{value}/... — predicate query.
+pub(crate) fn objects_query(svc: &OcpService, ctx: &Ctx<'_>) -> Result<Response> {
+    let db = svc.cluster.annotation(ctx.params[0])?;
+    let predicates = parse_predicates(ctx.rest)?;
+    let ids = db.query(&predicates)?;
+    Ok(Response::text(ids.iter().map(|i| i.to_string()).collect::<Vec<_>>().join(",")))
+}
+
+/// GET /{token}/region/{res}/{xr}/{yr}/{zr}/ — ids in region.
+pub(crate) fn region(svc: &OcpService, ctx: &Ctx<'_>) -> Result<Response> {
+    let db = svc.cluster.annotation(ctx.params[0])?;
+    let ids = db.objects_in_region(
+        parse_res(ctx.params[1])?,
+        parse_box(ctx.params[2], ctx.params[3], ctx.params[4])?,
+        crate::annotation::RegionQuery { include_exceptions: true },
+    )?;
+    Ok(Response::text(ids.iter().map(|i| i.to_string()).collect::<Vec<_>>().join(",")))
+}
+
+/// GET /{token}/{id}/voxels/.
+pub(crate) fn voxels(svc: &OcpService, ctx: &Ctx<'_>) -> Result<Response> {
+    let db = svc.cluster.annotation(ctx.params[0])?;
+    let voxels =
+        db.voxel_list(db.project.base_resolution, parse_num(ctx.params[1])? as u32)?;
+    Ok(Response::binary(ocpk::encode_voxels(&voxels)))
+}
+
+/// GET /{token}/{id}/boundingbox/.
+pub(crate) fn bounding_box(svc: &OcpService, ctx: &Ctx<'_>) -> Result<Response> {
+    let db = svc.cluster.annotation(ctx.params[0])?;
+    let id = parse_num(ctx.params[1])? as u32;
+    match db.bounding_box(db.project.base_resolution, id)? {
+        Some(b) => Ok(Response::text(format!(
+            "{},{}/{},{}/{},{}",
+            b.lo[0], b.hi[0], b.lo[1], b.hi[1], b.lo[2], b.hi[2]
+        ))),
+        None => Err(Error::NotFound(format!("annotation {id} has no voxels"))),
+    }
+}
+
+/// GET /{token}/{id}/cutout/ — dense object read.
+pub(crate) fn object_cutout(svc: &OcpService, ctx: &Ctx<'_>) -> Result<Response> {
+    let db = svc.cluster.annotation(ctx.params[0])?;
+    let id = parse_num(ctx.params[1])? as u32;
+    let res = db.project.base_resolution;
+    match db.dense_read(res, id, None)? {
+        Some((bx, vol)) => Ok(Response::binary(ocpk::encode_volume(Dtype::U32, bx.lo, &vol)?)),
+        None => Err(Error::NotFound(format!("annotation {id} has no voxels"))),
+    }
+}
+
+/// GET /{token}/{id}/cutout/{res}/{xr}/{yr}/{zr}/ — restricted.
+pub(crate) fn object_cutout_box(svc: &OcpService, ctx: &Ctx<'_>) -> Result<Response> {
+    let db = svc.cluster.annotation(ctx.params[0])?;
+    let id = parse_num(ctx.params[1])? as u32;
+    let bx = parse_box(ctx.params[3], ctx.params[4], ctx.params[5])?;
+    match db.dense_read(parse_res(ctx.params[2])?, id, Some(bx))? {
+        Some((bx, vol)) => Ok(Response::binary(ocpk::encode_volume(Dtype::U32, bx.lo, &vol)?)),
+        None => Err(Error::NotFound(format!("annotation {id} has no voxels"))),
+    }
+}
+
+/// GET /{token}/{id}/ or /{token}/{id1},{id2},.../ — metadata.
+pub(crate) fn metadata(svc: &OcpService, ctx: &Ctx<'_>) -> Result<Response> {
+    let db = svc.cluster.annotation(ctx.params[0])?;
+    let ids: Vec<u32> = ctx.params[1]
+        .split(',')
+        .map(|s| parse_num(s).map(|v| v as u32))
+        .collect::<Result<_>>()?;
+    let objs = db.get_objects(&ids)?;
+    let found: Vec<_> = objs.into_iter().flatten().collect();
+    if found.is_empty() {
+        return Err(Error::NotFound("no matching annotations".into()));
+    }
+    Ok(Response::binary(ocpk::encode_objects(&found)))
+}
+
+/// PUT /{token}/ramon/ — batch metadata write; server assigns ids for
+/// id=0 objects (§4.2).
+pub(crate) fn ramon_put(svc: &OcpService, ctx: &Ctx<'_>) -> Result<Response> {
+    let db = svc.cluster.annotation(ctx.params[0])?;
+    let objs = ocpk::decode_objects(ctx.body)?;
+    let ids = db.put_objects(objs)?;
+    Ok(Response::text(ids.iter().map(|i| i.to_string()).collect::<Vec<_>>().join(",")))
+}
+
+/// PUT /{token}/image/{res}/ — image ingest (OCPK u8 volume).
+pub(crate) fn image_put(svc: &OcpService, ctx: &Ctx<'_>) -> Result<Response> {
+    let s = svc.cluster.image(ctx.params[0])?;
+    let (_dt, bx, vol) = ocpk::decode_volume::<u8>(ctx.body)?;
+    s.write(parse_res(ctx.params[1])?, 0, 0, bx, &vol)?;
+    Ok(Response::text("ok"))
+}
+
+/// PUT /{token}/{discipline}/{res}/ with an OCPK volume body (frame
+/// carries its own offset).
+pub(crate) fn annotation_put(svc: &OcpService, ctx: &Ctx<'_>) -> Result<Response> {
+    let disc = ctx.params[1];
+    let discipline = WriteDiscipline::parse(disc)
+        .ok_or_else(|| Error::BadRequest(format!("unknown write discipline '{disc}'")))?;
+    let db = svc.cluster.annotation(ctx.params[0])?;
+    let (_dt, bx, vol) = ocpk::decode_volume::<u32>(ctx.body)?;
+    let outcome = db.write_volume(parse_res(ctx.params[2])?, bx, &vol, discipline)?;
+    Ok(Response::text(format!(
+        "written={} conflicted={} exceptions={} cuboids={}",
+        outcome.voxels_written,
+        outcome.voxels_conflicted,
+        outcome.exceptions_added,
+        outcome.cuboids_touched
+    )))
+}

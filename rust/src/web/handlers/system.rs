@@ -1,0 +1,49 @@
+//! Cluster-wide surfaces: the root greeting, `/info/` (projects, nodes,
+//! WAL summary, and the auto-generated route listing), and
+//! `/http/status/` (the transport metrics).
+
+use crate::web::http::Response;
+use crate::web::router::Ctx;
+use crate::web::routes::{router, OcpService};
+use crate::Result;
+
+/// GET /info/ — projects, node I/O, WAL depth, and the route table.
+pub(crate) fn info(svc: &OcpService, _ctx: &Ctx<'_>) -> Result<Response> {
+    let mut out = String::from("ocpd cluster\nprojects:\n");
+    for t in svc.cluster.tokens() {
+        out.push_str(&format!("  {t}\n"));
+    }
+    out.push_str("nodes:\n");
+    for (name, s) in svc.cluster.node_stats() {
+        out.push_str(&format!(
+            "  {name}: reads={} read_bytes={} writes={} write_bytes={}\n",
+            s.reads, s.read_bytes, s.writes, s.write_bytes
+        ));
+    }
+    let wals = svc.cluster.wal_status()?;
+    if !wals.is_empty() {
+        out.push_str("wal:\n");
+        for s in wals {
+            out.push_str(&format!(
+                "  {}: depth={} flushed={}\n",
+                s.scope, s.depth_records, s.flushed_records
+            ));
+        }
+    }
+    // The route listing derives from the same table that dispatched
+    // this request — it cannot drift from the real grammar.
+    out.push_str("routes:\n");
+    out.push_str(&router().listing());
+    Ok(Response::text(out))
+}
+
+/// GET /http/status/ — requests, reuse ratio, in-flight, admission
+/// rejections, accept errors, latency, and per-route histograms.
+pub(crate) fn http_status(svc: &OcpService, _ctx: &Ctx<'_>) -> Result<Response> {
+    match &svc.http {
+        Some(m) => Ok(Response::text(m.status_text())),
+        None => Ok(Response::text(
+            "http:\n  (no transport metrics attached; serve() wires them)\n",
+        )),
+    }
+}

@@ -1,0 +1,40 @@
+//! Write-ahead-log routes (the SSD write-absorber's surface).
+
+use crate::web::http::Response;
+use crate::web::router::Ctx;
+use crate::web::routes::OcpService;
+use crate::Result;
+
+/// GET /wal/status/ — one line per hot project's log.
+pub(crate) fn status(svc: &OcpService, _ctx: &Ctx<'_>) -> Result<Response> {
+    let statuses = svc.cluster.wal_status()?;
+    let mut out = String::from("wal:\n");
+    for s in statuses {
+        out.push_str(&format!(
+            "  {}: depth={} records ({} bytes) active_seg={} sealed={} \
+             commits={} mean_batch={:.1} flushed={} lag_ms={:.1}\n",
+            s.scope,
+            s.depth_records,
+            s.depth_bytes,
+            s.active_segment,
+            s.sealed_segments,
+            s.commit_batches,
+            s.mean_batch(),
+            s.flushed_records,
+            s.flush_lag_ms
+        ));
+    }
+    Ok(Response::text(out))
+}
+
+/// PUT /wal/flush/ — drain every hot project's log.
+pub(crate) fn flush_all(svc: &OcpService, _ctx: &Ctx<'_>) -> Result<Response> {
+    let n = svc.cluster.flush_all_wals()?;
+    Ok(Response::text(format!("flushed={n}")))
+}
+
+/// PUT /wal/flush/{token}/ — drain one project's log.
+pub(crate) fn flush_one(svc: &OcpService, ctx: &Ctx<'_>) -> Result<Response> {
+    let n = svc.cluster.flush_wal(ctx.params[0])?;
+    Ok(Response::text(format!("flushed={n}")))
+}

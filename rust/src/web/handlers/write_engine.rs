@@ -1,0 +1,33 @@
+//! Parallel-write-engine routes.
+
+use crate::web::http::Response;
+use crate::web::router::Ctx;
+use crate::web::routes::{parse_num, OcpService};
+use crate::Result;
+
+/// GET /write/status/ — one line per project's write engine.
+pub(crate) fn status(svc: &OcpService, _ctx: &Ctx<'_>) -> Result<Response> {
+    let mut out = String::from("write:\n");
+    for (token, s) in svc.cluster.write_status() {
+        out.push_str(&format!(
+            "  {token}: workers={} threshold={} seq={} par={} \
+             elided_reads={} rmw_reads={} merge_mean_us={:.1} merge_p95_us={}\n",
+            s.workers,
+            s.parallel_threshold,
+            s.sequential_writes,
+            s.parallel_writes,
+            s.elided_reads,
+            s.rmw_reads,
+            s.merge_mean_us,
+            s.merge_p95_us
+        ));
+    }
+    Ok(Response::text(out))
+}
+
+/// PUT /write/workers/{n}/ — retune every project's write fan-out.
+pub(crate) fn set_workers(svc: &OcpService, ctx: &Ctx<'_>) -> Result<Response> {
+    let n = (parse_num(ctx.params[0])? as usize).clamp(1, crate::jobs::MAX_WORKERS);
+    let projects = svc.cluster.set_write_workers(n);
+    Ok(Response::text(format!("workers={n} projects={projects}")))
+}

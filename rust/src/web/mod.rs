@@ -1,14 +1,18 @@
 //! RESTful Web services: the URL grammar of the paper's Table 1 over a
-//! minimal HTTP/1.1 server (§4.2 "Web Services").
+//! persistent-connection HTTP/1.1 server (§4.2 "Web Services").
 //!
 //! All interfaces are stateless GET/PUT requests to human-readable URLs.
 //! The interchange format is `ocpk` (a self-describing nd-array framing —
-//! the offline stand-in for the paper's HDF5, DESIGN.md §1).
+//! the offline stand-in for the paper's HDF5, DESIGN.md §1). The
+//! transport (DESIGN.md §8) is keep-alive with pipelining: clients reuse
+//! pooled sockets, and cutouts above the streaming threshold arrive as
+//! chunked transfer-encoding, slab by slab.
 //!
-//! Route grammar (Table 1 with `hdf5` → `ocpk`):
+//! Route grammar (Table 1 with `hdf5` → `ocpk`) — the authoritative,
+//! auto-generated listing is served at `GET /info/`:
 //!
 //! ```text
-//! GET /{token}/ocpk/{res}/{x0},{x1}/{y0},{y1}/{z0},{z1}/          cutout
+//! GET /{token}/ocpk/{res}/{x0},{x1}/{y0},{y1}/{z0},{z1}/          cutout (streams when large)
 //! GET /{token}/xy/{res}/{z}/{x0},{x1}/{y0},{y1}/                  plane
 //! GET /{token}/tile/{res}/{z}/{y}_{x}.gray                        tile
 //! GET /{token}/{id}/                                              RAMON metadata
@@ -19,42 +23,101 @@
 //! GET /{token}/{id1},{id2},.../                                   batch metadata
 //! GET /{token}/objects/{field}/{value}/...                        predicate query
 //! GET /{token}/objects/{field}/{geq|leq|gt|lt}/{value}/...        range predicate
-//! PUT /{token}/{overwrite|preserve|exception}/{res}/{x0},..{z1}/  write volume
+//! PUT /{token}/{overwrite|preserve|exception}/{res}/              write volume
+//! PUT /{token}/image/{res}/                                       image ingest
 //! PUT /{token}/ramon/                                             write objects
-//! GET /info/                                                      cluster info
+//! GET /info/                                                      cluster info + route listing
+//! GET /http/status/                                               transport metrics
 //! GET /wal/status/                                                write-log status
 //! PUT /wal/flush/  |  PUT /wal/flush/{token}/                     drain write logs
 //! GET /cache/status/                                              cuboid-cache status
-//! POST /jobs/propagate/{token}/                                   submit hierarchy build
-//! POST /jobs/synapse/{image}/{annotation}/                        submit synapse detection
-//! POST /jobs/ingest/{token}/                                      submit bulk ingest
+//! GET /write/status/  |  PUT /write/workers/{n}/                  write engine
+//! POST /jobs/{propagate|synapse|ingest}/...                       submit batch jobs
 //! GET /jobs/status/  |  GET /jobs/status/{id}/                    job status
 //! POST /jobs/cancel/{id}/                                         cancel a job
 //! ```
 //!
-//! `info`, `wal`, `cache`, and `jobs` are reserved top-level names, not
-//! project tokens; wrong-method requests to them answer `405` with an
-//! `Allow` header.
+//! `info`, `http`, `wal`, `cache`, `jobs`, and `write` are reserved
+//! top-level names, not project tokens; wrong-method requests anywhere
+//! in the grammar answer `405` with an auto-derived `Allow` header.
 
+pub(crate) mod conn;
+mod handlers;
 pub mod http;
 pub mod ocpk;
+mod router;
 mod routes;
 
-pub use http::{Request, Response, Server};
-pub use routes::OcpService;
+pub use http::{Body, HttpMetrics, Request, Response, Server, ServerConfig};
+pub use routes::{OcpService, DEFAULT_STREAM_THRESHOLD, RESERVED};
 
 use std::sync::Arc;
 
 use crate::cluster::Cluster;
 use crate::runtime::Runtime;
 
+/// Serving knobs beyond [`serve`]'s defaults.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOptions {
+    /// Request-body cap (413 beyond it).
+    pub max_body: usize,
+    /// Admission gate: concurrent-connection cap (503 + `Retry-After`
+    /// past it).
+    pub max_connections: usize,
+    /// Cutout responses at or above this raw size stream as chunked
+    /// transfer-encoding instead of buffering.
+    pub stream_threshold: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            max_body: http::DEFAULT_MAX_BODY,
+            max_connections: 16 * http::CONNS_PER_WORKER,
+            stream_threshold: DEFAULT_STREAM_THRESHOLD,
+        }
+    }
+}
+
 /// Build an HTTP server serving the OCP Web services for `cluster`.
+/// `workers` sizes the connection-admission gate
+/// ([`http::CONNS_PER_WORKER`] concurrent connections per worker).
 pub fn serve(
     cluster: Arc<Cluster>,
     runtime: Option<Arc<Runtime>>,
     addr: &str,
     workers: usize,
 ) -> crate::Result<Server> {
-    let svc = Arc::new(OcpService::new(cluster, runtime));
-    Server::bind(addr, workers, move |req| svc.handle(req))
+    serve_with(
+        cluster,
+        runtime,
+        addr,
+        ServeOptions {
+            max_connections: workers.max(1) * http::CONNS_PER_WORKER,
+            ..ServeOptions::default()
+        },
+    )
+}
+
+/// [`serve`] with explicit transport options. One [`HttpMetrics`] is
+/// shared between the server (which records into it) and the service
+/// (which reports it at `GET /http/status/`).
+pub fn serve_with(
+    cluster: Arc<Cluster>,
+    runtime: Option<Arc<Runtime>>,
+    addr: &str,
+    opts: ServeOptions,
+) -> crate::Result<Server> {
+    let metrics = Arc::new(HttpMetrics::default());
+    let svc = Arc::new(
+        OcpService::new(cluster, runtime)
+            .with_http_metrics(Arc::clone(&metrics))
+            .with_stream_threshold(opts.stream_threshold),
+    );
+    let cfg = ServerConfig {
+        max_body: opts.max_body,
+        max_connections: opts.max_connections,
+        ..ServerConfig::default()
+    };
+    Server::bind_with_config(addr, cfg, metrics, move |req| svc.handle(req))
 }

@@ -54,17 +54,30 @@ pub fn encode_volume<T: VoxelScalar>(
     let z = gzip::compress(raw, 6)?;
     let (flags, payload): (u8, &[u8]) =
         if z.len() < raw.len() { (FLAG_GZIP, &z) } else { (0, raw) };
+    let mut buf = volume_head(dtype, lo, vol.dims(), raw.len() as u64, flags);
+    buf.extend_from_slice(payload);
+    Ok(buf)
+}
+
+/// Encode just the frame head of an **uncompressed** volume whose
+/// `raw_len` payload bytes follow separately — the streaming path emits
+/// this as its first chunk, then raw z-slab bytes chunk by chunk, and
+/// the concatenation decodes exactly like a buffered uncompressed
+/// [`encode_volume`] frame.
+pub fn encode_volume_header(dtype: Dtype, lo: Vec3, dims: Vec3, raw_len: u64) -> Vec<u8> {
+    volume_head(dtype, lo, dims, raw_len, 0)
+}
+
+fn volume_head(dtype: Dtype, lo: Vec3, dims: Vec3, raw_len: u64, flags: u8) -> Vec<u8> {
     let mut e = header(KIND_VOLUME, dtype.tag(), flags);
     for v in lo {
         e.u64(v);
     }
-    for v in vol.dims() {
+    for v in dims {
         e.u64(v);
     }
-    e.varint(raw.len() as u64);
-    let mut buf = e.finish();
-    buf.extend_from_slice(payload);
-    Ok(buf)
+    e.varint(raw_len);
+    e.finish()
 }
 
 /// Decode a volume frame; returns `(dtype, box, raw payload bytes)`.
@@ -193,6 +206,30 @@ mod tests {
         assert!(b.len() < v32.as_bytes().len() / 4);
         let (_, _, back) = decode_volume::<u32>(&b).unwrap();
         assert_eq!(back, v32);
+    }
+
+    #[test]
+    fn streamed_header_plus_raw_slabs_decodes_like_buffered() {
+        // The streaming path's wire bytes: header chunk, then raw
+        // payload split at arbitrary boundaries. Reassembled, they must
+        // decode exactly like a buffered uncompressed frame.
+        let mut rng = Rng::new(7);
+        let dims = [8u64, 6, 10];
+        let vol = DenseVolume::<u8>::from_vec(
+            dims,
+            (0..480).map(|_| rng.next_u32() as u8).collect(),
+        )
+        .unwrap();
+        let raw = vol.as_bytes();
+        let mut wire = encode_volume_header(Dtype::U8, [4, 5, 6], dims, raw.len() as u64);
+        // Split as three "slabs" of unequal size.
+        wire.extend_from_slice(&raw[..100]);
+        wire.extend_from_slice(&raw[100..333]);
+        wire.extend_from_slice(&raw[333..]);
+        let (dt, bx, back) = decode_volume::<u8>(&wire).unwrap();
+        assert_eq!(dt, Dtype::U8);
+        assert_eq!(bx, Box3::at([4, 5, 6], dims));
+        assert_eq!(back, vol);
     }
 
     #[test]

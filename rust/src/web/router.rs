@@ -1,0 +1,304 @@
+//! Declarative request routing: a table of (methods, segment pattern,
+//! handler) replacing the hand-rolled `match` dispatch chains.
+//!
+//! Each route is one row — the URL grammar is *data*, so the `405`
+//! `Allow` sets and the route listing in `/info/` derive from the same
+//! table that dispatches, and per-route latency histograms key off the
+//! route names automatically.
+//!
+//! Matching walks the table in order (register literal-prefixed routes
+//! before parameterized ones); the first row whose pattern AND method
+//! match wins. If some row matches the path but none matches the
+//! method, the router answers `405` with an `Allow` header naming the
+//! union of the matching rows' methods (RFC 9110 §15.5.6). A path that
+//! matches nothing is [`Outcome::NoMatch`] — the service layer decides
+//! between 400 (reserved name, bad shape) and 404 semantics, preserving
+//! the original grammar's behavior exactly.
+
+use crate::web::http::Response;
+use crate::Result;
+
+/// One segment of a route pattern.
+#[derive(Clone, Copy, Debug)]
+pub enum Seg {
+    /// Exact literal (reserved top-level names, fixed verbs).
+    Lit(&'static str),
+    /// A project token: matches any single segment EXCEPT the reserved
+    /// top-level names, so `/wal/...` can never be shadowed by a
+    /// project called `wal`.
+    Token,
+    /// Any single segment, captured into `Ctx::params`.
+    Param,
+    /// Zero or more trailing segments, captured into `Ctx::rest`
+    /// (predicate queries). Must be the pattern's last element.
+    Rest,
+}
+
+/// Captures handed to a handler.
+pub struct Ctx<'a> {
+    /// `Token`/`Param` captures, in pattern order.
+    pub params: Vec<&'a str>,
+    /// Trailing segments captured by [`Seg::Rest`] (empty otherwise).
+    pub rest: &'a [&'a str],
+    /// Request body.
+    pub body: &'a [u8],
+}
+
+pub type Handler<S> = fn(&S, &Ctx<'_>) -> Result<Response>;
+
+/// One row of the routing table.
+pub struct Route<S> {
+    /// Stable label: keys per-route latency histograms and names the
+    /// route in listings.
+    pub name: &'static str,
+    /// Accepted methods (the `Allow` set when only the method differs).
+    pub methods: &'static [&'static str],
+    pub pattern: &'static [Seg],
+    pub handler: Handler<S>,
+    /// One-line human description for the `/info/` route listing.
+    pub doc: &'static str,
+}
+
+/// What dispatch concluded.
+pub enum Outcome {
+    /// A handler ran (response carries its route label).
+    Handled(Response),
+    /// Path known, method not: a ready-made 405 with its `Allow` set.
+    MethodNotAllowed(Response),
+    /// No row matched the path.
+    NoMatch,
+}
+
+pub struct Router<S> {
+    routes: Vec<Route<S>>,
+    reserved: &'static [&'static str],
+}
+
+impl<S> Router<S> {
+    pub fn new(routes: Vec<Route<S>>, reserved: &'static [&'static str]) -> Self {
+        Router { routes, reserved }
+    }
+
+    /// The reserved top-level names ([`Seg::Token`] refuses them).
+    pub fn reserved(&self) -> &'static [&'static str] {
+        self.reserved
+    }
+
+    fn matches<'a>(
+        &self,
+        pattern: &[Seg],
+        segs: &'a [&'a str],
+    ) -> Option<(Vec<&'a str>, &'a [&'a str])> {
+        let has_rest = matches!(pattern.last(), Some(Seg::Rest));
+        let fixed = if has_rest { pattern.len() - 1 } else { pattern.len() };
+        if has_rest {
+            if segs.len() < fixed {
+                return None;
+            }
+        } else if segs.len() != fixed {
+            return None;
+        }
+        let mut params = Vec::new();
+        for (seg, &s) in pattern[..fixed].iter().zip(segs) {
+            match seg {
+                Seg::Lit(l) => {
+                    if *l != s {
+                        return None;
+                    }
+                }
+                Seg::Token => {
+                    if self.reserved.contains(&s) {
+                        return None;
+                    }
+                    params.push(s);
+                }
+                Seg::Param => params.push(s),
+                Seg::Rest => unreachable!("Rest is always last"),
+            }
+        }
+        Some((params, if has_rest { &segs[fixed..] } else { &segs[..0] }))
+    }
+
+    /// Dispatch `method segs` against the table.
+    pub fn dispatch(&self, svc: &S, method: &str, segs: &[&str], body: &[u8]) -> Outcome {
+        // First row matching path AND method wins.
+        for r in &self.routes {
+            if !r.methods.contains(&method) {
+                continue;
+            }
+            if let Some((params, rest)) = self.matches(r.pattern, segs) {
+                let ctx = Ctx { params, rest, body };
+                let mut resp = match (r.handler)(svc, &ctx) {
+                    Ok(resp) => resp,
+                    Err(e) => Response::error(e.http_status(), e.to_string()),
+                };
+                resp.route = Some(r.name);
+                return Outcome::Handled(resp);
+            }
+        }
+        // Path matches under some other method → auto-derived 405.
+        let mut allow: Vec<&'static str> = Vec::new();
+        for r in &self.routes {
+            if self.matches(r.pattern, segs).is_some() {
+                for m in r.methods {
+                    if !allow.contains(m) {
+                        allow.push(m);
+                    }
+                }
+            }
+        }
+        if !allow.is_empty() {
+            allow.sort_unstable();
+            return Outcome::MethodNotAllowed(Response::method_not_allowed(allow.join(", ")));
+        }
+        Outcome::NoMatch
+    }
+
+    /// Render the table: one `METHODS PATTERN  name — doc` line per
+    /// route (the `/info/` route listing).
+    pub fn listing(&self) -> String {
+        let mut out = String::new();
+        for r in &self.routes {
+            let mut path = String::new();
+            for seg in r.pattern {
+                path.push('/');
+                match seg {
+                    Seg::Lit(l) => path.push_str(l),
+                    Seg::Token => path.push_str("{token}"),
+                    Seg::Param => path.push_str("{arg}"),
+                    Seg::Rest => path.push_str("..."),
+                }
+            }
+            path.push('/');
+            out.push_str(&format!(
+                "  {:<9} {:<46} {} — {}\n",
+                r.methods.join("|"),
+                path,
+                r.name,
+                r.doc
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Nop;
+
+    fn ok(_: &Nop, _: &Ctx<'_>) -> Result<Response> {
+        Ok(Response::text("ok"))
+    }
+
+    fn echo_params(_: &Nop, ctx: &Ctx<'_>) -> Result<Response> {
+        Ok(Response::text(ctx.params.join(",")))
+    }
+
+    fn echo_rest(_: &Nop, ctx: &Ctx<'_>) -> Result<Response> {
+        Ok(Response::text(ctx.rest.join(",")))
+    }
+
+    fn router() -> Router<Nop> {
+        Router::new(
+            vec![
+                Route {
+                    name: "status",
+                    methods: &["GET"],
+                    pattern: &[Seg::Lit("wal"), Seg::Lit("status")],
+                    handler: ok,
+                    doc: "status",
+                },
+                Route {
+                    name: "flush",
+                    methods: &["PUT", "POST"],
+                    pattern: &[Seg::Lit("wal"), Seg::Lit("flush")],
+                    handler: ok,
+                    doc: "flush",
+                },
+                Route {
+                    name: "cutout",
+                    methods: &["GET"],
+                    pattern: &[Seg::Token, Seg::Lit("ocpk"), Seg::Param],
+                    handler: echo_params,
+                    doc: "cutout",
+                },
+                Route {
+                    name: "query",
+                    methods: &["GET"],
+                    pattern: &[Seg::Token, Seg::Lit("objects"), Seg::Rest],
+                    handler: echo_rest,
+                    doc: "query",
+                },
+            ],
+            &["info", "wal"],
+        )
+    }
+
+    fn body_text(resp: Response) -> String {
+        String::from_utf8(resp.body.into_bytes().unwrap()).unwrap()
+    }
+
+    #[test]
+    fn literal_and_param_matching() {
+        let r = router();
+        let Outcome::Handled(resp) = r.dispatch(&Nop, "GET", &["wal", "status"], &[]) else {
+            panic!("expected handled");
+        };
+        assert_eq!(resp.route, Some("status"));
+
+        let Outcome::Handled(resp) = r.dispatch(&Nop, "GET", &["tok", "ocpk", "5"], &[]) else {
+            panic!("expected handled");
+        };
+        assert_eq!(body_text(resp), "tok,5");
+    }
+
+    #[test]
+    fn rest_captures_tail() {
+        let r = router();
+        let Outcome::Handled(resp) =
+            r.dispatch(&Nop, "GET", &["tok", "objects", "a", "b", "c"], &[])
+        else {
+            panic!("expected handled");
+        };
+        assert_eq!(body_text(resp), "a,b,c");
+        // Rest may be empty.
+        let Outcome::Handled(resp) = r.dispatch(&Nop, "GET", &["tok", "objects"], &[]) else {
+            panic!("expected handled");
+        };
+        assert_eq!(body_text(resp), "");
+    }
+
+    #[test]
+    fn auto_405_derives_allow_union() {
+        let r = router();
+        let Outcome::MethodNotAllowed(resp) =
+            r.dispatch(&Nop, "DELETE", &["wal", "flush"], &[])
+        else {
+            panic!("expected 405");
+        };
+        assert_eq!(resp.status, 405);
+        assert_eq!(resp.allow.as_deref(), Some("POST, PUT"));
+    }
+
+    #[test]
+    fn reserved_names_never_match_token() {
+        let r = router();
+        // "wal" as a token would match the cutout pattern; it must not.
+        assert!(matches!(
+            r.dispatch(&Nop, "GET", &["wal", "ocpk", "5"], &[]),
+            Outcome::NoMatch
+        ));
+    }
+
+    #[test]
+    fn listing_renders_every_route() {
+        let r = router();
+        let l = r.listing();
+        assert!(l.contains("GET"), "{l}");
+        assert!(l.contains("/wal/status/"), "{l}");
+        assert!(l.contains("/{token}/ocpk/{arg}/"), "{l}");
+        assert!(l.contains("PUT|POST"), "{l}");
+    }
+}

@@ -1,33 +1,47 @@
-//! Request dispatch: Table 1's URL grammar bound to the cluster services.
+//! The Web-service layer: Table 1's URL grammar bound to the cluster
+//! services through a declarative routing table.
+//!
+//! Every route is one [`Route`] row in [`route_table`]; dispatch, 405
+//! `Allow` derivation, the `/info/` route listing, and per-route
+//! latency metrics all read the same table. Handler bodies live in
+//! [`crate::web::handlers`], one module per subsystem.
 
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
-use crate::annotation::{Predicate, PredicateOp, RegionQuery};
-use crate::array::Plane;
+use crate::annotation::{Predicate, PredicateOp};
 use crate::cluster::Cluster;
-use crate::core::{Box3, Dtype, WriteDiscipline};
-use crate::ingest::SynthSpec;
-use crate::jobs::{BulkIngestJob, JobConfig, JobSpec, PropagateJob, SynapseDetectJob};
+use crate::core::Box3;
 use crate::runtime::Runtime;
-use crate::tiles::{TileKey, TileService};
-use crate::vision::SynapsePipeline;
-use crate::web::http::{Request, Response};
-use crate::web::ocpk;
+use crate::tiles::TileService;
+use crate::web::handlers::{cache, jobs, projects, system, wal, write_engine};
+use crate::web::http::{HttpMetrics, Request, Response};
+use crate::web::router::{Outcome, Route, Router, Seg};
 use crate::{Error, Result};
 
-/// Upper bound on a server-side synthetic-ingest request, in voxels.
-/// The generator materializes the whole volume (8 B/voxel accumulator
-/// plus the u8 output), so this caps the per-request allocation at
-/// ~1.2 GiB regardless of how large the registered dataset is.
-const MAX_INGEST_VOXELS: u64 = 1 << 27;
+/// Default raw-byte size at which a cutout response switches from a
+/// buffered OCPK frame to a chunked stream of cuboid-aligned z-slabs
+/// (8 MiB — a 256³ u8 cutout streams, interactive viewer tiles do not).
+pub const DEFAULT_STREAM_THRESHOLD: usize = 8 << 20;
+
+/// Reserved top-level names — never project tokens; the router's
+/// token segments refuse them so `/wal/...` can never be shadowed, and
+/// the cluster refuses to create projects under them.
+pub const RESERVED: &[&str] = &["info", "http", "wal", "cache", "jobs", "write"];
 
 /// The Web-service layer over a cluster (the paper's "application
 /// server" role).
 pub struct OcpService {
-    cluster: Arc<Cluster>,
+    pub(crate) cluster: Arc<Cluster>,
     /// Loaded vision runtime; `POST /jobs/synapse/...` requires it.
-    runtime: Option<Arc<Runtime>>,
-    tiles: std::sync::Mutex<std::collections::HashMap<String, Arc<TileService>>>,
+    pub(crate) runtime: Option<Arc<Runtime>>,
+    pub(crate) tiles: std::sync::Mutex<std::collections::HashMap<String, Arc<TileService>>>,
+    /// Transport metrics shared with the [`crate::web::http::Server`]
+    /// (the `/http/status/` surface); `None` when the service is driven
+    /// without a server (unit tests).
+    pub(crate) http: Option<Arc<HttpMetrics>>,
+    /// Cutout responses at or above this raw size stream as chunked
+    /// transfer-encoding.
+    pub(crate) stream_threshold: usize,
 }
 
 impl OcpService {
@@ -36,454 +50,48 @@ impl OcpService {
             cluster,
             runtime,
             tiles: std::sync::Mutex::new(std::collections::HashMap::new()),
+            http: None,
+            stream_threshold: DEFAULT_STREAM_THRESHOLD,
         }
     }
 
-    /// Entry point: map a request to a response, turning errors into
-    /// their HTTP status codes.
+    /// Attach the server's transport metrics so `/http/status/` can
+    /// report them (done by [`crate::web::serve`]).
+    pub fn with_http_metrics(mut self, metrics: Arc<HttpMetrics>) -> Self {
+        self.http = Some(metrics);
+        self
+    }
+
+    /// Override the buffered-vs-streamed cutout threshold (benches).
+    pub fn with_stream_threshold(mut self, bytes: usize) -> Self {
+        self.stream_threshold = bytes;
+        self
+    }
+
+    /// Entry point: map a request to a response. Routing errors become
+    /// their HTTP status codes; handlers never panic the connection.
     pub fn handle(&self, req: Request) -> Response {
-        match self.dispatch(&req) {
-            Ok(resp) => resp,
-            Err(e) => Response::error(e.http_status(), e.to_string()),
-        }
-    }
-
-    fn dispatch(&self, req: &Request) -> Result<Response> {
-        let segs: Vec<&str> =
-            req.path.split('/').filter(|s| !s.is_empty()).collect();
+        let segs: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
         if segs.is_empty() {
-            return Ok(Response::text("ocpd: Open Connectome Project data cluster"));
+            return Response::text("ocpd: Open Connectome Project data cluster");
         }
-        match (req.method.as_str(), segs[0]) {
-            (_, "info") => self.info(),
-            // `wal`, `cache`, `jobs`, and `write` are reserved top-level
-            // names (like `info`): the write-absorber's, the cuboid
-            // cache's, the batch compute engine's, and the parallel
-            // write engine's surfaces. Wrong-method requests answer 405
-            // + `Allow` here instead of falling through to the project
-            // handlers and emitting a confusing 400 ("unknown write
-            // discipline 'status'").
-            ("GET", "wal") => self.wal_get(&segs[1..]),
-            ("PUT" | "POST", "wal") => self.wal_flush(&segs[1..]),
-            (_, "wal") => Ok(Response::method_not_allowed("GET, PUT, POST")),
-            ("GET", "cache") => self.cache_get(&segs[1..]),
-            (_, "cache") => Ok(Response::method_not_allowed("GET")),
-            ("GET", "jobs") => self.jobs_get(&segs[1..]),
-            ("PUT" | "POST", "jobs") => self.jobs_post(&segs[1..], &req.body),
-            (_, "jobs") => Ok(Response::method_not_allowed("GET, PUT, POST")),
-            ("GET", "write") => self.write_get(&segs[1..]),
-            ("PUT" | "POST", "write") => self.write_set(&segs[1..]),
-            (_, "write") => Ok(Response::method_not_allowed("GET, PUT, POST")),
-            ("GET", token) => self.get(token, &segs[1..]),
-            ("PUT" | "POST", token) => self.put(token, &segs[1..], &req.body),
-            _ => Ok(Response::method_not_allowed("GET, PUT, POST")),
-        }
-    }
-
-    // ------------------------------------------------------------------
-    // WAL routes
-    // ------------------------------------------------------------------
-
-    /// GET /wal/status/ — one line per hot project's log.
-    fn wal_get(&self, rest: &[&str]) -> Result<Response> {
-        match rest {
-            ["status"] => {
-                let statuses = self.cluster.wal_status()?;
-                let mut out = String::from("wal:\n");
-                for s in statuses {
-                    out.push_str(&format!(
-                        "  {}: depth={} records ({} bytes) active_seg={} sealed={} \
-                         commits={} mean_batch={:.1} flushed={} lag_ms={:.1}\n",
-                        s.scope,
-                        s.depth_records,
-                        s.depth_bytes,
-                        s.active_segment,
-                        s.sealed_segments,
-                        s.commit_batches,
-                        s.mean_batch(),
-                        s.flushed_records,
-                        s.flush_lag_ms
-                    ));
-                }
-                Ok(Response::text(out))
-            }
-            ["flush", ..] => Ok(Response::method_not_allowed("PUT, POST")),
-            _ => Err(Error::BadRequest(format!("unrecognized GET /wal/{}", rest.join("/")))),
-        }
-    }
-
-    /// PUT /wal/flush/ (all logs) or /wal/flush/{token}/ (one log).
-    fn wal_flush(&self, rest: &[&str]) -> Result<Response> {
-        match rest {
-            ["flush"] => {
-                let n = self.cluster.flush_all_wals()?;
-                Ok(Response::text(format!("flushed={n}")))
-            }
-            ["flush", token] => {
-                let n = self.cluster.flush_wal(token)?;
-                Ok(Response::text(format!("flushed={n}")))
-            }
-            _ => Err(Error::BadRequest(format!("unrecognized PUT /wal/{}", rest.join("/")))),
-        }
-    }
-
-    // ------------------------------------------------------------------
-    // Cache routes
-    // ------------------------------------------------------------------
-
-    /// GET /cache/status/ — one line per project's cuboid cache.
-    fn cache_get(&self, rest: &[&str]) -> Result<Response> {
-        match rest {
-            ["status"] => {
-                let mut out = String::from("cache:\n");
-                for (token, s) in self.cluster.cache_status() {
-                    out.push_str(&format!(
-                        "  {token}: entries={} bytes={}/{} shards={} hits={} misses={} \
-                         hit_rate={:.3} inserts={} evictions={} invalidations={}\n",
-                        s.entries,
-                        s.bytes,
-                        s.capacity_bytes,
-                        s.shards,
-                        s.hits,
-                        s.misses,
-                        s.hit_rate(),
-                        s.inserts,
-                        s.evictions,
-                        s.invalidations
-                    ));
-                }
-                Ok(Response::text(out))
-            }
-            _ => {
-                Err(Error::BadRequest(format!("unrecognized GET /cache/{}", rest.join("/"))))
-            }
-        }
-    }
-
-    // ------------------------------------------------------------------
-    // Write-engine routes
-    // ------------------------------------------------------------------
-
-    /// GET /write/status/ — one line per project's write engine.
-    fn write_get(&self, rest: &[&str]) -> Result<Response> {
-        match rest {
-            ["status"] => {
-                let mut out = String::from("write:\n");
-                for (token, s) in self.cluster.write_status() {
-                    out.push_str(&format!(
-                        "  {token}: workers={} threshold={} seq={} par={} \
-                         elided_reads={} rmw_reads={} merge_mean_us={:.1} merge_p95_us={}\n",
-                        s.workers,
-                        s.parallel_threshold,
-                        s.sequential_writes,
-                        s.parallel_writes,
-                        s.elided_reads,
-                        s.rmw_reads,
-                        s.merge_mean_us,
-                        s.merge_p95_us
-                    ));
-                }
-                Ok(Response::text(out))
-            }
-            ["workers", ..] => Ok(Response::method_not_allowed("PUT, POST")),
-            _ => {
-                Err(Error::BadRequest(format!("unrecognized GET /write/{}", rest.join("/"))))
-            }
-        }
-    }
-
-    /// PUT /write/workers/{n}/ — retune every project's write fan-out.
-    fn write_set(&self, rest: &[&str]) -> Result<Response> {
-        match rest {
-            ["workers", n] => {
-                let n = (parse_num(n)? as usize).clamp(1, crate::jobs::MAX_WORKERS);
-                let projects = self.cluster.set_write_workers(n);
-                Ok(Response::text(format!("workers={n} projects={projects}")))
-            }
-            ["status", ..] => Ok(Response::method_not_allowed("GET")),
-            _ => {
-                Err(Error::BadRequest(format!("unrecognized PUT /write/{}", rest.join("/"))))
-            }
-        }
-    }
-
-    // ------------------------------------------------------------------
-    // Job routes (the batch compute engine)
-    // ------------------------------------------------------------------
-
-    /// GET /jobs/status/ (all jobs) or /jobs/status/{id}/ (one job).
-    fn jobs_get(&self, rest: &[&str]) -> Result<Response> {
-        match rest {
-            ["status"] => {
-                let mut out = String::from("jobs:\n");
-                for s in self.cluster.jobs().statuses() {
-                    out.push_str(&format!("  {}\n", s.line()));
-                }
-                Ok(Response::text(out))
-            }
-            ["status", id] => {
-                let id = parse_num(id)?;
-                match self.cluster.jobs().get(id) {
-                    Some(h) => Ok(Response::text(h.status().line())),
-                    None => Err(Error::NotFound(format!("job {id}"))),
-                }
-            }
-            ["cancel", ..] => Ok(Response::method_not_allowed("POST, PUT")),
-            _ => Err(Error::BadRequest(format!("unrecognized GET /jobs/{}", rest.join("/")))),
-        }
-    }
-
-    /// POST /jobs/{propagate|synapse|ingest}/... (submit) and
-    /// POST /jobs/cancel/{id}/ — body: whitespace-separated `key=value`
-    /// params (`workers=N`, `job=ID` to resume, plus per-type extras).
-    fn jobs_post(&self, rest: &[&str], body: &[u8]) -> Result<Response> {
-        let params = parse_params(body);
-        match rest {
-            ["cancel", id] => {
-                let id = parse_num(id)?;
-                self.cluster.jobs().cancel(id)?;
-                Ok(Response::text(format!("cancelled={id}")))
-            }
-            // POST /jobs/propagate/{token}/ — build the resolution
-            // hierarchy of an image or annotation project.
-            ["propagate", token] => {
-                let spec: Arc<dyn JobSpec> = match self.cluster.image(token) {
-                    Ok(svc) => Arc::new(PropagateJob::image(svc)),
-                    Err(_) => Arc::new(PropagateJob::annotation(self.cluster.annotation(token)?)),
-                };
-                self.submit(spec, &params)
-            }
-            // POST /jobs/synapse/{image}/{annotation}/ — the §2 vision
-            // workload; needs the AOT runtime.
-            ["synapse", img, ann] => {
-                let runtime = self.runtime.clone().ok_or_else(|| {
-                    Error::BadRequest(
-                        "no vision runtime loaded (start the server with artifacts)".into(),
+        match router().dispatch(self, req.method.as_str(), &segs, &req.body) {
+            Outcome::Handled(resp) | Outcome::MethodNotAllowed(resp) => resp,
+            Outcome::NoMatch => {
+                if !matches!(req.method.as_str(), "GET" | "PUT" | "POST") {
+                    // Methods outside the grammar entirely.
+                    Response::method_not_allowed("GET, POST, PUT")
+                } else {
+                    Response::error(
+                        400,
+                        format!("bad request: unrecognized {} /{}", req.method, segs.join("/")),
                     )
-                })?;
-                let image = self.cluster.image(img)?;
-                let anno = self.cluster.annotation(ann)?;
-                let res = param_num(&params, "res", 0)? as u32;
-                let region = image.store().dataset.level(res)?.bounds();
-                let pipeline = Arc::new(SynapsePipeline::new(runtime, image, anno));
-                self.submit(Arc::new(SynapseDetectJob::new(pipeline, res, region)), &params)
-            }
-            // POST /jobs/ingest/{token}/ — chunked synthetic-EM ingest
-            // (`dims=X,Y,Z` required; `seed=N` optional).
-            ["ingest", token] => {
-                let svc = self.cluster.image(token)?;
-                let dims = params
-                    .get("dims")
-                    .ok_or_else(|| Error::BadRequest("ingest needs dims=X,Y,Z".into()))?;
-                let dims = parse_triple(dims)?;
-                // Clamp to the project's level-0 bounds, then cap the
-                // total volume: the generator holds the whole volume in
-                // memory (an f64 accumulator, 8 B/voxel), so client
-                // dims must never size an arbitrary allocation — a
-                // registered dataset's bounds alone can exceed RAM.
-                let bounds = svc.store().dataset.level(0)?.dims;
-                let dims = [
-                    dims[0].min(bounds[0]).max(1),
-                    dims[1].min(bounds[1]).max(1),
-                    dims[2].min(bounds[2]).max(1),
-                ];
-                let voxels = dims[0].saturating_mul(dims[1]).saturating_mul(dims[2]);
-                if voxels > MAX_INGEST_VOXELS {
-                    return Err(Error::BadRequest(format!(
-                        "ingest volume of {voxels} voxels exceeds the \
-                         {MAX_INGEST_VOXELS}-voxel limit (ingest a sub-volume, or use \
-                         client-side uploads for full-scale data)"
-                    )));
                 }
-                let seed = param_num(&params, "seed", 2013)?;
-                let block = match params.get("block") {
-                    Some(b) => parse_triple(b)?,
-                    None => [256, 256, 16],
-                };
-                let spec = SynthSpec::small(dims, seed);
-                self.submit(Arc::new(BulkIngestJob::new(svc, spec, block)), &params)
             }
-            ["status", ..] => Ok(Response::method_not_allowed("GET")),
-            _ => Err(Error::BadRequest(format!("unrecognized POST /jobs/{}", rest.join("/")))),
         }
     }
 
-    /// Launch a job (fresh id, or resume via `job=ID`) and report it.
-    fn submit(
-        &self,
-        spec: Arc<dyn JobSpec>,
-        params: &std::collections::HashMap<String, String>,
-    ) -> Result<Response> {
-        // `MAX_WORKERS` also guards inside the engine; clamping here
-        // keeps a typo'd `workers=100000` from even trying.
-        let cfg = JobConfig {
-            workers: (param_num(params, "workers", 4)? as usize)
-                .clamp(1, crate::jobs::MAX_WORKERS),
-            ..JobConfig::default()
-        };
-        let handle = match params.get("job") {
-            Some(id) => self.cluster.jobs().submit_with_id(parse_num(id)?, spec, cfg)?,
-            None => self.cluster.jobs().submit(spec, cfg)?,
-        };
-        Ok(Response::text(format!(
-            "id={} name={} state={}",
-            handle.id,
-            handle.name(),
-            handle.state().as_str()
-        )))
-    }
-
-    fn info(&self) -> Result<Response> {
-        let mut out = String::from("ocpd cluster\nprojects:\n");
-        for t in self.cluster.tokens() {
-            out.push_str(&format!("  {t}\n"));
-        }
-        out.push_str("nodes:\n");
-        for (name, s) in self.cluster.node_stats() {
-            out.push_str(&format!(
-                "  {name}: reads={} read_bytes={} writes={} write_bytes={}\n",
-                s.reads, s.read_bytes, s.writes, s.write_bytes
-            ));
-        }
-        let wals = self.cluster.wal_status()?;
-        if !wals.is_empty() {
-            out.push_str("wal:\n");
-            for s in wals {
-                out.push_str(&format!(
-                    "  {}: depth={} flushed={}\n",
-                    s.scope, s.depth_records, s.flushed_records
-                ));
-            }
-        }
-        Ok(Response::text(out))
-    }
-
-    // ------------------------------------------------------------------
-    // GET routes
-    // ------------------------------------------------------------------
-
-    fn get(&self, token: &str, rest: &[&str]) -> Result<Response> {
-        match rest {
-            // /{token}/ocpk/{res}/{xr}/{yr}/{zr}/
-            ["ocpk", res, xr, yr, zr] => {
-                let bx = parse_box(xr, yr, zr)?;
-                let res = parse_res(res)?;
-                self.cutout(token, res, bx)
-            }
-            // /{token}/xy/{res}/{z}/{xr}/{yr}/
-            ["xy", res, z, xr, yr] => {
-                let res = parse_res(res)?;
-                let z: u64 = parse_num(z)?;
-                let (x0, x1) = parse_range(xr)?;
-                let (y0, y1) = parse_range(yr)?;
-                let svc = self.cluster.image(token)?;
-                let (w, h, data) =
-                    svc.read_plane::<u8>(res, 0, 0, Plane::Xy(z), [x0, y0], [x1, y1])?;
-                let vol = crate::array::DenseVolume::from_vec([w, h, 1], data)?;
-                Ok(Response::binary(ocpk::encode_volume(Dtype::U8, [x0, y0, z], &vol)?))
-            }
-            // /{token}/tile/{res}/{z}/{y}_{x}.gray
-            ["tile", res, z, yx] => {
-                let res = parse_res(res)?;
-                let z: u64 = parse_num(z)?;
-                let (y, x) = yx
-                    .strip_suffix(".gray")
-                    .and_then(|s| s.split_once('_'))
-                    .ok_or_else(|| Error::BadRequest(format!("bad tile name '{yx}'")))?;
-                let key = TileKey { res, z, y: parse_num(y)?, x: parse_num(x)? };
-                let ts = self.tile_service(token)?;
-                Ok(Response::binary(ts.get_tile(key)?))
-            }
-            // /{token}/objects/{field}/{value}/... predicate query
-            ["objects", preds @ ..] => {
-                let db = self.cluster.annotation(token)?;
-                let predicates = parse_predicates(preds)?;
-                let ids = db.query(&predicates)?;
-                Ok(Response::text(
-                    ids.iter().map(|i| i.to_string()).collect::<Vec<_>>().join(","),
-                ))
-            }
-            // /{token}/region/{res}/{xr}/{yr}/{zr}/ — ids in region
-            ["region", res, xr, yr, zr] => {
-                let db = self.cluster.annotation(token)?;
-                let ids = db.objects_in_region(
-                    parse_res(res)?,
-                    parse_box(xr, yr, zr)?,
-                    RegionQuery { include_exceptions: true },
-                )?;
-                Ok(Response::text(
-                    ids.iter().map(|i| i.to_string()).collect::<Vec<_>>().join(","),
-                ))
-            }
-            // /{token}/{id}/voxels/
-            [id, "voxels"] => {
-                let db = self.cluster.annotation(token)?;
-                let voxels = db.voxel_list(db.project.base_resolution, parse_num(id)? as u32)?;
-                Ok(Response::binary(ocpk::encode_voxels(&voxels)))
-            }
-            // /{token}/{id}/boundingbox/
-            [id, "boundingbox"] => {
-                let db = self.cluster.annotation(token)?;
-                match db.bounding_box(db.project.base_resolution, parse_num(id)? as u32)? {
-                    Some(b) => Ok(Response::text(format!(
-                        "{},{}/{},{}/{},{}",
-                        b.lo[0], b.hi[0], b.lo[1], b.hi[1], b.lo[2], b.hi[2]
-                    ))),
-                    None => Err(Error::NotFound(format!("annotation {id} has no voxels"))),
-                }
-            }
-            // /{token}/{id}/cutout/ — dense object read
-            [id, "cutout"] => {
-                let db = self.cluster.annotation(token)?;
-                let res = db.project.base_resolution;
-                match db.dense_read(res, parse_num(id)? as u32, None)? {
-                    Some((bx, vol)) => {
-                        Ok(Response::binary(ocpk::encode_volume(Dtype::U32, bx.lo, &vol)?))
-                    }
-                    None => Err(Error::NotFound(format!("annotation {id} has no voxels"))),
-                }
-            }
-            // /{token}/{id}/cutout/{res}/{xr}/{yr}/{zr}/ — restricted
-            [id, "cutout", res, xr, yr, zr] => {
-                let db = self.cluster.annotation(token)?;
-                let bx = parse_box(xr, yr, zr)?;
-                match db.dense_read(parse_res(res)?, parse_num(id)? as u32, Some(bx))? {
-                    Some((bx, vol)) => {
-                        Ok(Response::binary(ocpk::encode_volume(Dtype::U32, bx.lo, &vol)?))
-                    }
-                    None => Err(Error::NotFound(format!("annotation {id} has no voxels"))),
-                }
-            }
-            // /{token}/{id}/ or /{token}/{id1},{id2},.../ — metadata
-            [ids] => {
-                let db = self.cluster.annotation(token)?;
-                let ids: Vec<u32> = ids
-                    .split(',')
-                    .map(|s| parse_num(s).map(|v| v as u32))
-                    .collect::<Result<_>>()?;
-                let objs = db.get_objects(&ids)?;
-                let found: Vec<_> = objs.into_iter().flatten().collect();
-                if found.is_empty() {
-                    return Err(Error::NotFound("no matching annotations".into()));
-                }
-                Ok(Response::binary(ocpk::encode_objects(&found)))
-            }
-            _ => Err(Error::BadRequest(format!("unrecognized GET /{token}/{}", rest.join("/")))),
-        }
-    }
-
-    /// Image cutout if the token is an image project, else annotation.
-    fn cutout(&self, token: &str, res: u32, bx: Box3) -> Result<Response> {
-        if let Ok(svc) = self.cluster.image(token) {
-            let vol = svc.read::<u8>(res, 0, 0, bx)?;
-            return Ok(Response::binary(ocpk::encode_volume(Dtype::U8, bx.lo, &vol)?));
-        }
-        let db = self.cluster.annotation(token)?;
-        let vol = db.cutout.read::<u32>(res, 0, 0, bx)?;
-        Ok(Response::binary(ocpk::encode_volume(Dtype::U32, bx.lo, &vol)?))
-    }
-
-    fn tile_service(&self, token: &str) -> Result<Arc<TileService>> {
+    pub(crate) fn tile_service(&self, token: &str) -> Result<Arc<TileService>> {
         let mut guard = self.tiles.lock().unwrap();
         if let Some(t) = guard.get(token) {
             return Ok(Arc::clone(t));
@@ -493,62 +101,231 @@ impl OcpService {
         guard.insert(token.to_string(), Arc::clone(&ts));
         Ok(ts)
     }
+}
 
-    // ------------------------------------------------------------------
-    // PUT routes
-    // ------------------------------------------------------------------
+/// The routing table. Order matters only among rows that can match the
+/// same path: literal-prefixed rows come first so reserved surfaces win
+/// over project-token patterns.
+fn route_table() -> Vec<Route<OcpService>> {
+    use Seg::{Lit, Param, Rest, Token};
+    const GET: &[&str] = &["GET"];
+    const PUT_POST: &[&str] = &["PUT", "POST"];
+    vec![
+        // ---- cluster-wide surfaces -----------------------------------
+        Route {
+            name: "info",
+            methods: GET,
+            pattern: &[Lit("info")],
+            handler: system::info,
+            doc: "cluster projects, nodes, and this route listing",
+        },
+        Route {
+            name: "http-status",
+            methods: GET,
+            pattern: &[Lit("http"), Lit("status")],
+            handler: system::http_status,
+            doc: "transport metrics: reuse ratio, in-flight, per-route latency",
+        },
+        // ---- WAL (SSD write-absorber) --------------------------------
+        Route {
+            name: "wal-status",
+            methods: GET,
+            pattern: &[Lit("wal"), Lit("status")],
+            handler: wal::status,
+            doc: "per-project write-log depth and flush lag",
+        },
+        Route {
+            name: "wal-flush",
+            methods: PUT_POST,
+            pattern: &[Lit("wal"), Lit("flush")],
+            handler: wal::flush_all,
+            doc: "drain every write log",
+        },
+        Route {
+            name: "wal-flush-one",
+            methods: PUT_POST,
+            pattern: &[Lit("wal"), Lit("flush"), Param],
+            handler: wal::flush_one,
+            doc: "drain one project's write log",
+        },
+        // ---- cuboid cache --------------------------------------------
+        Route {
+            name: "cache-status",
+            methods: GET,
+            pattern: &[Lit("cache"), Lit("status")],
+            handler: cache::status,
+            doc: "per-project cuboid-cache hit rates",
+        },
+        // ---- parallel write engine -----------------------------------
+        Route {
+            name: "write-status",
+            methods: GET,
+            pattern: &[Lit("write"), Lit("status")],
+            handler: write_engine::status,
+            doc: "per-project write-engine fan-out and RMW elision",
+        },
+        Route {
+            name: "write-workers",
+            methods: PUT_POST,
+            pattern: &[Lit("write"), Lit("workers"), Param],
+            handler: write_engine::set_workers,
+            doc: "retune every project's write fan-out",
+        },
+        // ---- batch compute jobs --------------------------------------
+        Route {
+            name: "jobs-status",
+            methods: GET,
+            pattern: &[Lit("jobs"), Lit("status")],
+            handler: jobs::status_all,
+            doc: "every batch job's state",
+        },
+        Route {
+            name: "jobs-status-one",
+            methods: GET,
+            pattern: &[Lit("jobs"), Lit("status"), Param],
+            handler: jobs::status_one,
+            doc: "one batch job's state",
+        },
+        Route {
+            name: "jobs-cancel",
+            methods: PUT_POST,
+            pattern: &[Lit("jobs"), Lit("cancel"), Param],
+            handler: jobs::cancel,
+            doc: "cancel a job (checkpoint journal survives)",
+        },
+        Route {
+            name: "jobs-propagate",
+            methods: PUT_POST,
+            pattern: &[Lit("jobs"), Lit("propagate"), Param],
+            handler: jobs::propagate,
+            doc: "submit a resolution-hierarchy build",
+        },
+        Route {
+            name: "jobs-synapse",
+            methods: PUT_POST,
+            pattern: &[Lit("jobs"), Lit("synapse"), Param, Param],
+            handler: jobs::synapse,
+            doc: "submit synapse detection (needs the vision runtime)",
+        },
+        Route {
+            name: "jobs-ingest",
+            methods: PUT_POST,
+            pattern: &[Lit("jobs"), Lit("ingest"), Param],
+            handler: jobs::ingest,
+            doc: "submit a chunked synthetic-EM ingest",
+        },
+        // ---- project reads -------------------------------------------
+        Route {
+            name: "cutout",
+            methods: GET,
+            pattern: &[Token, Lit("ocpk"), Param, Param, Param, Param],
+            handler: projects::cutout,
+            doc: "volume cutout (streams above the threshold)",
+        },
+        Route {
+            name: "plane",
+            methods: GET,
+            pattern: &[Token, Lit("xy"), Param, Param, Param, Param],
+            handler: projects::plane,
+            doc: "XY plane projection",
+        },
+        Route {
+            name: "tile",
+            methods: GET,
+            pattern: &[Token, Lit("tile"), Param, Param, Param],
+            handler: projects::tile,
+            doc: "stored-layout viewer tile (zero-copy from cache)",
+        },
+        Route {
+            name: "objects-query",
+            methods: GET,
+            pattern: &[Token, Lit("objects"), Rest],
+            handler: projects::objects_query,
+            doc: "RAMON predicate query",
+        },
+        Route {
+            name: "region",
+            methods: GET,
+            pattern: &[Token, Lit("region"), Param, Param, Param, Param],
+            handler: projects::region,
+            doc: "annotation ids intersecting a region",
+        },
+        Route {
+            name: "voxels",
+            methods: GET,
+            pattern: &[Token, Param, Lit("voxels")],
+            handler: projects::voxels,
+            doc: "one object's voxel list",
+        },
+        Route {
+            name: "boundingbox",
+            methods: GET,
+            pattern: &[Token, Param, Lit("boundingbox")],
+            handler: projects::bounding_box,
+            doc: "one object's bounding box",
+        },
+        Route {
+            name: "object-cutout",
+            methods: GET,
+            pattern: &[Token, Param, Lit("cutout")],
+            handler: projects::object_cutout,
+            doc: "dense single-object read",
+        },
+        Route {
+            name: "object-cutout-box",
+            methods: GET,
+            pattern: &[Token, Param, Lit("cutout"), Param, Param, Param, Param],
+            handler: projects::object_cutout_box,
+            doc: "dense single-object read restricted to a region",
+        },
+        Route {
+            name: "metadata",
+            methods: GET,
+            pattern: &[Token, Param],
+            handler: projects::metadata,
+            doc: "RAMON metadata (single id or comma-separated batch)",
+        },
+        // ---- project writes ------------------------------------------
+        Route {
+            name: "ramon-put",
+            methods: PUT_POST,
+            pattern: &[Token, Lit("ramon")],
+            handler: projects::ramon_put,
+            doc: "batch RAMON metadata write (server assigns ids)",
+        },
+        Route {
+            name: "image-put",
+            methods: PUT_POST,
+            pattern: &[Token, Lit("image"), Param],
+            handler: projects::image_put,
+            doc: "image volume ingest (OCPK u8 frame)",
+        },
+        Route {
+            name: "annotation-put",
+            methods: PUT_POST,
+            pattern: &[Token, Param, Param],
+            handler: projects::annotation_put,
+            doc: "annotation volume write under a discipline",
+        },
+    ]
+}
 
-    fn put(&self, token: &str, rest: &[&str], body: &[u8]) -> Result<Response> {
-        match rest {
-            // PUT /{token}/ramon/ — batch metadata write; server assigns
-            // ids for id=0 objects (§4.2).
-            ["ramon"] => {
-                let db = self.cluster.annotation(token)?;
-                let objs = ocpk::decode_objects(body)?;
-                let ids = db.put_objects(objs)?;
-                Ok(Response::text(
-                    ids.iter().map(|i| i.to_string()).collect::<Vec<_>>().join(","),
-                ))
-            }
-            // PUT /{token}/image/{res}/ — image ingest (OCPK u8 volume).
-            ["image", res] => {
-                let svc = self.cluster.image(token)?;
-                let (_dt, bx, vol) = ocpk::decode_volume::<u8>(body)?;
-                svc.write(parse_res(res)?, 0, 0, bx, &vol)?;
-                Ok(Response::text("ok"))
-            }
-            // PUT /{token}/{discipline}/{res}/ with an OCPK volume body
-            // (frame carries its own offset).
-            [disc, res] => {
-                let discipline = WriteDiscipline::parse(disc).ok_or_else(|| {
-                    Error::BadRequest(format!("unknown write discipline '{disc}'"))
-                })?;
-                let db = self.cluster.annotation(token)?;
-                let (_dt, bx, vol) = ocpk::decode_volume::<u32>(body)?;
-                let outcome = db.write_volume(parse_res(res)?, bx, &vol, discipline)?;
-                Ok(Response::text(format!(
-                    "written={} conflicted={} exceptions={} cuboids={}",
-                    outcome.voxels_written,
-                    outcome.voxels_conflicted,
-                    outcome.exceptions_added,
-                    outcome.cuboids_touched
-                )))
-            }
-            _ => Err(Error::BadRequest(format!("unrecognized PUT /{token}/{}", rest.join("/")))),
-        }
-    }
+/// The process-wide router (the table is static data; build it once).
+pub(crate) fn router() -> &'static Router<OcpService> {
+    static ROUTER: OnceLock<Router<OcpService>> = OnceLock::new();
+    ROUTER.get_or_init(|| Router::new(route_table(), RESERVED))
 }
 
 // ----------------------------------------------------------------------
-// URL parsing helpers
+// URL parsing helpers (shared by the handler modules)
 // ----------------------------------------------------------------------
 
-fn parse_num(s: &str) -> Result<u64> {
+pub(crate) fn parse_num(s: &str) -> Result<u64> {
     s.parse().map_err(|_| Error::BadRequest(format!("bad number '{s}'")))
 }
 
 /// Whitespace-separated `key=value` pairs (job-submission bodies).
-fn parse_params(body: &[u8]) -> std::collections::HashMap<String, String> {
+pub(crate) fn parse_params(body: &[u8]) -> std::collections::HashMap<String, String> {
     let mut out = std::collections::HashMap::new();
     for pair in String::from_utf8_lossy(body).split_whitespace() {
         if let Some((k, v)) = pair.split_once('=') {
@@ -559,7 +336,7 @@ fn parse_params(body: &[u8]) -> std::collections::HashMap<String, String> {
 }
 
 /// Numeric param with a default; present-but-garbled values are 400s.
-fn param_num(
+pub(crate) fn param_num(
     params: &std::collections::HashMap<String, String>,
     key: &str,
     default: u64,
@@ -571,7 +348,7 @@ fn param_num(
 }
 
 /// `"X,Y,Z"` → `[X, Y, Z]` (job dims/block params).
-fn parse_triple(s: &str) -> Result<[u64; 3]> {
+pub(crate) fn parse_triple(s: &str) -> Result<[u64; 3]> {
     let v: Vec<u64> = s.split(',').map(parse_num).collect::<Result<_>>()?;
     if v.len() != 3 {
         return Err(Error::BadRequest(format!("bad triple '{s}' (want X,Y,Z)")));
@@ -579,12 +356,12 @@ fn parse_triple(s: &str) -> Result<[u64; 3]> {
     Ok([v[0], v[1], v[2]])
 }
 
-fn parse_res(s: &str) -> Result<u32> {
+pub(crate) fn parse_res(s: &str) -> Result<u32> {
     Ok(parse_num(s)? as u32)
 }
 
 /// `"lo,hi"` → half-open range.
-fn parse_range(s: &str) -> Result<(u64, u64)> {
+pub(crate) fn parse_range(s: &str) -> Result<(u64, u64)> {
     let (a, b) = s
         .split_once(',')
         .ok_or_else(|| Error::BadRequest(format!("bad range '{s}' (want lo,hi)")))?;
@@ -595,7 +372,7 @@ fn parse_range(s: &str) -> Result<(u64, u64)> {
     Ok((lo, hi))
 }
 
-fn parse_box(xr: &str, yr: &str, zr: &str) -> Result<Box3> {
+pub(crate) fn parse_box(xr: &str, yr: &str, zr: &str) -> Result<Box3> {
     let (x0, x1) = parse_range(xr)?;
     let (y0, y1) = parse_range(yr)?;
     let (z0, z1) = parse_range(zr)?;
@@ -604,7 +381,7 @@ fn parse_box(xr: &str, yr: &str, zr: &str) -> Result<Box3> {
 
 /// Predicate segments: `field/value` pairs, with `field/op/value` for
 /// range operators (§4.2: equality everywhere, inequalities on floats).
-fn parse_predicates(segs: &[&str]) -> Result<Vec<Predicate>> {
+pub(crate) fn parse_predicates(segs: &[&str]) -> Result<Vec<Predicate>> {
     let mut out = Vec::new();
     let mut i = 0;
     while i < segs.len() {
@@ -678,5 +455,19 @@ mod tests {
         // Garbled present values are errors, not silent defaults.
         let bad = parse_params(b"workers=banana");
         assert!(param_num(&bad, "workers", 4).is_err());
+    }
+
+    #[test]
+    fn route_table_is_well_formed() {
+        let r = router();
+        // Every reserved name that owns routes appears as a literal
+        // first segment; every route has methods and a doc line.
+        let listing = r.listing();
+        for reserved in ["info", "http", "wal", "cache", "jobs", "write"] {
+            assert!(listing.contains(&format!("/{reserved}")), "{reserved} missing:\n{listing}");
+        }
+        for label in ["cutout", "metadata", "ramon-put", "http-status"] {
+            assert!(listing.contains(label), "{label} missing:\n{listing}");
+        }
     }
 }
