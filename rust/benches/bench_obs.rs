@@ -1,0 +1,183 @@
+//! Observability-overhead money shot: the same warm cutout read
+//! workload with tracing off, sampled 1-in-64 (the default), and
+//! always-on — each read wrapped in a root trace exactly the way the
+//! HTTP dispatcher wraps a request. The claim under test (DESIGN.md
+//! §9): recording is cheap enough that the default sampled
+//! configuration costs < 2% cutout throughput.
+//!
+//! Prints the table and rewrites `../BENCH_obs.json` (override with
+//! `OCPD_BENCH_OUT`). `OCPD_BENCH_SMOKE=1` shrinks the workload for CI
+//! (and skips the <2% assertion — smoke timings are too noisy to gate
+//! on).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::time::Instant;
+
+use ocpd::cluster::Cluster;
+use ocpd::core::{Box3, DatasetBuilder, Project};
+use ocpd::cutout::CutoutService;
+use ocpd::ingest::{generate, ingest_volume, SynthSpec};
+use ocpd::obs::trace::{self, TraceConfig, TraceMode};
+
+use common::*;
+
+struct Workload {
+    dims: [u64; 3],
+    read_extent: [u64; 3],
+    reads: usize,
+    repeats: usize,
+}
+
+fn workload() -> Workload {
+    if std::env::var("OCPD_BENCH_SMOKE").is_ok() {
+        Workload { dims: [256, 256, 16], read_extent: [64, 64, 8], reads: 40, repeats: 3 }
+    } else {
+        Workload { dims: [512, 512, 32], read_extent: [128, 128, 16], reads: 400, repeats: 5 }
+    }
+}
+
+fn boot(dims: [u64; 3]) -> std::sync::Arc<CutoutService> {
+    let cluster = Cluster::in_memory(2, 1);
+    cluster.register_dataset(DatasetBuilder::new("img", dims).levels(1).build());
+    let img = cluster.create_image_project(Project::image("img", "img")).unwrap();
+    let sv = generate(&SynthSpec::small(dims, 11));
+    ingest_volume(&img, &sv.vol, [256, 256, 16]).unwrap();
+    img
+}
+
+fn config_for(mode: &str) -> TraceConfig {
+    TraceConfig {
+        mode: match mode {
+            "off" => TraceMode::Off,
+            "always" => TraceMode::Always,
+            _ => TraceMode::Sampled,
+        },
+        sample_every: 64,
+        slow_threshold_us: 100_000,
+        capacity: 256,
+    }
+}
+
+/// `reads` warm cutout reads, each under its own root trace (the HTTP
+/// dispatcher's shape); returns the median wall seconds over `repeats`.
+fn run(svc: &CutoutService, w: &Workload, mode: &str) -> f64 {
+    trace::tracer().configure(config_for(mode));
+    let e = w.read_extent;
+    let boxes: Vec<Box3> = (0..4)
+        .map(|i| {
+            let x0 = i * e[0];
+            Box3::new([x0, 0, 0], [x0 + e[0], e[1], e[2]])
+        })
+        .collect();
+    let timings: Vec<f64> = (0..w.repeats)
+        .map(|_| {
+            let t0 = Instant::now();
+            for i in 0..w.reads {
+                let bx = boxes[i % boxes.len()];
+                let root = trace::start_trace("bench", "cutout", &format!("bench-{i}"));
+                let out = svc.read::<u8>(0, 0, 0, bx).unwrap();
+                drop(root);
+                assert_eq!(out.len() as u64, bx.volume());
+            }
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    let mut ts = timings;
+    ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    trace::tracer().clear();
+    ts[ts.len() / 2]
+}
+
+struct Row {
+    mode: &'static str,
+    reads: usize,
+    seconds: f64,
+    bytes: u64,
+}
+
+impl Row {
+    fn reads_per_sec(&self) -> f64 {
+        self.reads as f64 / self.seconds.max(1e-9)
+    }
+    fn mbps(&self) -> f64 {
+        self.bytes as f64 / (1 << 20) as f64 / self.seconds.max(1e-9)
+    }
+}
+
+fn main() {
+    let w = workload();
+    let svc = boot(w.dims);
+    let e = w.read_extent;
+    let read_bytes = e[0] * e[1] * e[2];
+
+    // Warm the cuboid cache so rows compare tracing cost, not I/O.
+    let warm = Box3::new([0, 0, 0], [4 * e[0], e[1], e[2]]);
+    let _ = svc.read::<u8>(0, 0, 0, warm).unwrap();
+
+    header(
+        "warm cutout reads under tracing",
+        &["mode", "reads", "seconds", "reads/s", "MB/s", "overhead"],
+    );
+    let mut rows: Vec<Row> = Vec::new();
+    for mode in ["off", "sampled", "always"] {
+        let seconds = run(&svc, &w, mode);
+        rows.push(Row { mode, reads: w.reads, seconds, bytes: read_bytes * w.reads as u64 });
+        let r = rows.last().unwrap();
+        let overhead = 100.0 * (r.seconds / rows[0].seconds - 1.0);
+        row(&[
+            r.mode.to_string(),
+            r.reads.to_string(),
+            format!("{:.4}", r.seconds),
+            format!("{:.0}", r.reads_per_sec()),
+            format!("{:.1}", r.mbps()),
+            format!("{overhead:+.2}%"),
+        ]);
+    }
+    let overhead_pct =
+        |i: usize| 100.0 * (rows[i].seconds / rows[0].seconds - 1.0);
+    let sampled_overhead = overhead_pct(1);
+    let always_overhead = overhead_pct(2);
+    println!(
+        "\nsampled(1-in-64) overhead: {sampled_overhead:+.2}%; always-on: {always_overhead:+.2}%"
+    );
+    if std::env::var("OCPD_BENCH_SMOKE").is_err() {
+        assert!(
+            sampled_overhead < 2.0,
+            "default sampled tracing must cost < 2% ({sampled_overhead:.2}%)"
+        );
+    }
+
+    let out = std::env::var("OCPD_BENCH_OUT").unwrap_or_else(|_| "../BENCH_obs.json".into());
+    let mut json = String::from("{\n  \"bench\": \"bench_obs\",\n");
+    json.push_str(&format!(
+        "  \"workload\": {{\"dims\": [{}, {}, {}], \"read_extent\": [{}, {}, {}], \
+         \"reads\": {}, \"cache\": \"warm\", \"sample_every\": 64}},\n",
+        w.dims[0], w.dims[1], w.dims[2], e[0], e[1], e[2], w.reads
+    ));
+    json.push_str("  \"provenance\": \"measured by cargo bench --bench bench_obs\",\n");
+    json.push_str(&format!(
+        "  \"sampled_overhead_pct\": {sampled_overhead:.2},\n  \
+         \"always_overhead_pct\": {always_overhead:.2},\n"
+    ));
+    json.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"mode\": \"{}\", \"reads\": {}, \"seconds\": {:.4}, \
+             \"reads_per_sec\": {:.1}, \"mb_per_sec\": {:.1}, \"overhead_pct\": {:.2}}}{}\n",
+            r.mode,
+            r.reads,
+            r.seconds,
+            r.reads_per_sec(),
+            r.mbps(),
+            100.0 * (r.seconds / rows[0].seconds - 1.0),
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

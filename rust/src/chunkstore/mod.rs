@@ -170,6 +170,8 @@ impl CuboidStore {
         debug_assert!(codes.windows(2).all(|w| w[0] < w[1]), "codes must be sorted unique");
         let shape = self.cuboid_shape(res)?;
         let table = self.project.cuboid_table(res, channel);
+        let mut sp = crate::obs::trace::span("cache", "lookup");
+        sp.tag("cuboids", codes.len().to_string());
 
         // Resolve from the cache first; remember which slots are missing.
         let mut blobs: Vec<Option<Option<Blob>>> = vec![None; codes.len()];
@@ -185,6 +187,8 @@ impl CuboidStore {
             }
             None => missing_at.extend(0..codes.len()),
         }
+        sp.tag("hits", (codes.len() - missing_at.len()).to_string());
+        sp.tag("misses", missing_at.len().to_string());
 
         if !missing_at.is_empty() {
             let missing: Vec<u64> = missing_at.iter().map(|&i| codes[i]).collect();

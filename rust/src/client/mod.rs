@@ -193,6 +193,46 @@ pub fn http_status(base_url: &str) -> Result<String> {
     Ok(String::from_utf8_lossy(&b).to_string())
 }
 
+/// The unified Prometheus-text metrics exposition (`GET /metrics/`):
+/// every subsystem's counters, gauges, and histograms in one scrape.
+pub fn metrics(base_url: &str) -> Result<String> {
+    let (s, b) = request("GET", &format!("{}/metrics/", base_url.trim_end_matches('/')), &[])?;
+    if s != 200 {
+        return Err(Error::Other(format!("http {s}")));
+    }
+    Ok(String::from_utf8_lossy(&b).to_string())
+}
+
+/// Tracer status: mode, sampling, retention counters, ring occupancy.
+pub fn trace_status(base_url: &str) -> Result<String> {
+    let (s, b) =
+        request("GET", &format!("{}/trace/status/", base_url.trim_end_matches('/')), &[])?;
+    if s != 200 {
+        return Err(Error::Other(format!("http {s}: {}", String::from_utf8_lossy(&b))));
+    }
+    Ok(String::from_utf8_lossy(&b).to_string())
+}
+
+/// Sampled recent traces as indented span trees, newest first.
+pub fn trace_recent(base_url: &str) -> Result<String> {
+    let (s, b) =
+        request("GET", &format!("{}/trace/recent/", base_url.trim_end_matches('/')), &[])?;
+    if s != 200 {
+        return Err(Error::Other(format!("http {s}")));
+    }
+    Ok(String::from_utf8_lossy(&b).to_string())
+}
+
+/// Traces above the slow threshold, newest first.
+pub fn trace_slow(base_url: &str) -> Result<String> {
+    let (s, b) =
+        request("GET", &format!("{}/trace/slow/", base_url.trim_end_matches('/')), &[])?;
+    if s != 200 {
+        return Err(Error::Other(format!("http {s}")));
+    }
+    Ok(String::from_utf8_lossy(&b).to_string())
+}
+
 /// Status of every project's cuboid cache (entries, bytes, hit rate).
 pub fn cache_status(base_url: &str) -> Result<String> {
     let (s, b) =

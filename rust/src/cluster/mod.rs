@@ -49,6 +49,7 @@ use crate::chunkstore::{CacheConfig, CacheStatus, CuboidCache, CuboidStore};
 use crate::core::{Dataset, Project};
 use crate::cutout::{CutoutService, WriteConfig, WriteStatus};
 use crate::jobs::JobManager;
+use crate::obs::registry::{MetricsRegistry, Sample};
 use crate::shard::{NodeId, ShardMap};
 use crate::storage::{migrate, DeviceProfile, Engine, MemStore, SimulatedStore};
 use crate::wal::{Wal, WalConfig, WalEngine, WalStatus};
@@ -74,6 +75,7 @@ pub struct Node {
 }
 
 /// A project's runtime handle: where its pieces live.
+#[derive(Clone)]
 enum ProjectHandle {
     Image(Arc<CutoutService>),
     Annotation(Arc<AnnotationDb>),
@@ -92,8 +94,13 @@ pub struct Cluster {
     cache_cfg: CacheConfig,
     /// The batch compute engine (the `/jobs/...` surface). Checkpoint
     /// journals live on the first database node, so a persistent
-    /// cluster's jobs resume across restarts.
-    jobs: JobManager,
+    /// cluster's jobs resume across restarts. `Arc`'d so the metrics
+    /// registry's jobs collector can hold it past `&self`.
+    jobs: Arc<JobManager>,
+    /// The unified metrics registry behind `GET /metrics/`: every
+    /// project, the jobs engine, and (when a server attaches) the HTTP
+    /// transport register collectors here.
+    registry: Arc<MetricsRegistry>,
 }
 
 /// Stable FNV-1a hash for SSD placement: a hot project's log node is
@@ -125,7 +132,8 @@ impl Cluster {
                 engine: Arc::new(MemStore::new()),
             });
         }
-        let jobs = JobManager::new(Arc::clone(&nodes[0].engine));
+        let jobs = Arc::new(JobManager::new(Arc::clone(&nodes[0].engine)));
+        let registry = Self::new_registry(&jobs);
         Arc::new(Cluster {
             nodes,
             datasets: RwLock::new(HashMap::new()),
@@ -134,6 +142,7 @@ impl Cluster {
             caches: RwLock::new(HashMap::new()),
             cache_cfg: CacheConfig::default(),
             jobs,
+            registry,
         })
     }
 
@@ -167,7 +176,8 @@ impl Cluster {
                     as Engine,
             });
         }
-        let jobs = JobManager::new(Arc::clone(&nodes[0].engine));
+        let jobs = Arc::new(JobManager::new(Arc::clone(&nodes[0].engine)));
+        let registry = Self::new_registry(&jobs);
         Ok(Arc::new(Cluster {
             nodes,
             datasets: RwLock::new(HashMap::new()),
@@ -176,6 +186,7 @@ impl Cluster {
             caches: RwLock::new(HashMap::new()),
             cache_cfg: CacheConfig::default(),
             jobs,
+            registry,
         }))
     }
 
@@ -208,7 +219,8 @@ impl Cluster {
                 )) as Engine,
             });
         }
-        let jobs = JobManager::new(Arc::clone(&nodes[0].engine));
+        let jobs = Arc::new(JobManager::new(Arc::clone(&nodes[0].engine)));
+        let registry = Self::new_registry(&jobs);
         Arc::new(Cluster {
             nodes,
             datasets: RwLock::new(HashMap::new()),
@@ -217,7 +229,51 @@ impl Cluster {
             caches: RwLock::new(HashMap::new()),
             cache_cfg: CacheConfig::default(),
             jobs,
+            registry,
         })
+    }
+
+    /// Build the cluster's metrics registry with the jobs collector
+    /// pre-registered (projects and the HTTP transport register theirs
+    /// when they come up).
+    fn new_registry(jobs: &Arc<JobManager>) -> Arc<MetricsRegistry> {
+        let registry = Arc::new(MetricsRegistry::new());
+        let jm = Arc::clone(jobs);
+        registry.register("jobs", move |out| {
+            for h in jm.handles() {
+                let id = h.id.to_string();
+                let name = h.name().to_string();
+                let m = &h.metrics;
+                out.push(
+                    Sample::gauge(
+                        "ocpd_job_blocks_per_sec_milli",
+                        "Fresh-block throughput, milli-blocks per second.",
+                        m.blocks_per_sec_milli.get(),
+                    )
+                    .label("job", id.clone())
+                    .label("name", name.clone()),
+                );
+                out.push(
+                    Sample::counter(
+                        "ocpd_job_retries_total",
+                        "Block attempts retried after an error.",
+                        m.retries.get(),
+                    )
+                    .label("job", id.clone())
+                    .label("name", name.clone()),
+                );
+                out.push(
+                    Sample::histogram(
+                        "ocpd_job_block_latency_us",
+                        "Wall latency per completed block, microseconds.",
+                        m.block_latency.snapshot(),
+                    )
+                    .label("job", id)
+                    .label("name", name),
+                );
+            }
+        });
+        registry
     }
 
     pub fn nodes(&self) -> &[Node] {
@@ -297,6 +353,12 @@ impl Cluster {
                 .with_cache(Arc::clone(&cache)),
         );
         let svc = Arc::new(CutoutService::new(store));
+        self.register_project_metrics(
+            &project.token,
+            ProjectHandle::Image(Arc::clone(&svc)),
+            Arc::clone(&cache),
+            None,
+        );
         self.caches.write().unwrap().insert(project.token.clone(), cache);
         projects.insert(project.token.clone(), ProjectHandle::Image(Arc::clone(&svc)));
         Ok(svc)
@@ -345,7 +407,13 @@ impl Cluster {
             CuboidStore::new(ds, Arc::new(project.clone()), Arc::clone(&engine))
                 .with_cache(Arc::clone(&cache)),
         );
-        let db = Arc::new(AnnotationDb::new_with_wal(store, engine, wal)?);
+        let db = Arc::new(AnnotationDb::new_with_wal(store, engine, wal.clone())?);
+        self.register_project_metrics(
+            &project.token,
+            ProjectHandle::Annotation(Arc::clone(&db)),
+            Arc::clone(&cache),
+            wal,
+        );
         self.caches.write().unwrap().insert(project.token.clone(), cache);
         projects.insert(project.token.clone(), ProjectHandle::Annotation(Arc::clone(&db)));
         Ok(db)
@@ -418,11 +486,22 @@ impl Cluster {
         // rebind trivially stale-free.
         let cache = self.caches.read().unwrap().get(token).cloned();
         let mut store = CuboidStore::new(ds, project, Arc::clone(&dst_engine));
-        if let Some(cache) = cache {
+        if let Some(cache) = &cache {
             cache.clear();
-            store = store.with_cache(cache);
+            store = store.with_cache(Arc::clone(cache));
         }
         let new_db = Arc::new(AnnotationDb::new(Arc::new(store), dst_engine)?);
+        // Rebind the project's metrics collector too: the old one holds
+        // the retired service (and its WAL), which would freeze on the
+        // exposition.
+        if let Some(cache) = cache {
+            self.register_project_metrics(
+                token,
+                ProjectHandle::Annotation(Arc::clone(&new_db)),
+                cache,
+                None,
+            );
+        }
         self.projects
             .write()
             .unwrap()
@@ -481,6 +560,176 @@ impl Cluster {
     /// /jobs/cancel/{id}`, `ocpd jobs`).
     pub fn jobs(&self) -> &JobManager {
         &self.jobs
+    }
+
+    // ------------------------------------------------------------------
+    // Unified metrics
+    // ------------------------------------------------------------------
+
+    /// The unified metrics registry (the `GET /metrics/` surface).
+    pub fn registry(&self) -> &Arc<MetricsRegistry> {
+        &self.registry
+    }
+
+    /// Register (or re-register, after a migration rebinds the handle)
+    /// one project's collector: read/write-engine, cache, and — for hot
+    /// annotation projects — WAL metrics, all labeled with the token.
+    fn register_project_metrics(
+        &self,
+        token: &str,
+        handle: ProjectHandle,
+        cache: Arc<CuboidCache>,
+        wal: Option<Arc<Wal>>,
+    ) {
+        let project = token.to_string();
+        self.registry.register(format!("project/{token}"), move |out| {
+            let p = || ("project", project.clone());
+            let svc = Cluster::cutout_service(&handle);
+            let r = &svc.metrics;
+            let pair = p();
+            out.push(
+                Sample::counter(
+                    "ocpd_read_sequential_total",
+                    "Cutout reads served on the caller's thread.",
+                    r.sequential_reads.get(),
+                )
+                .label(pair.0, pair.1),
+            );
+            let pair = p();
+            out.push(
+                Sample::counter(
+                    "ocpd_read_parallel_total",
+                    "Cutout reads scattered across the worker pool.",
+                    r.parallel_reads.get(),
+                )
+                .label(pair.0, pair.1),
+            );
+            let pair = p();
+            out.push(
+                Sample::histogram(
+                    "ocpd_read_fanout_width",
+                    "Batches per parallel cutout read.",
+                    r.fanout_width.snapshot(),
+                )
+                .label(pair.0, pair.1),
+            );
+            let w = &svc.write_metrics;
+            for (name, help, v) in [
+                (
+                    "ocpd_write_sequential_total",
+                    "Writes merged and committed on the caller's thread.",
+                    w.sequential_writes.get(),
+                ),
+                (
+                    "ocpd_write_parallel_total",
+                    "Writes scattered across the worker pool.",
+                    w.parallel_writes.get(),
+                ),
+                (
+                    "ocpd_write_elided_reads_total",
+                    "Cuboid pre-reads elided by full coverage.",
+                    w.elided_reads.get(),
+                ),
+                (
+                    "ocpd_write_rmw_reads_total",
+                    "Cuboid read-modify-write pre-reads paid.",
+                    w.rmw_reads.get(),
+                ),
+            ] {
+                let pair = p();
+                out.push(Sample::counter(name, help, v).label(pair.0, pair.1));
+            }
+            let pair = p();
+            out.push(
+                Sample::histogram(
+                    "ocpd_write_merge_latency_us",
+                    "Per-batch in-memory merge latency, microseconds.",
+                    w.merge_latency.snapshot(),
+                )
+                .label(pair.0, pair.1),
+            );
+            let c = &cache.metrics;
+            for (name, help, v) in [
+                ("ocpd_cache_hits_total", "Cuboid-cache hits.", c.hits.get()),
+                ("ocpd_cache_misses_total", "Cuboid-cache misses.", c.misses.get()),
+                ("ocpd_cache_inserts_total", "Cuboid-cache inserts.", c.inserts.get()),
+                ("ocpd_cache_evictions_total", "Cuboid-cache LRU evictions.", c.evictions.get()),
+                (
+                    "ocpd_cache_invalidations_total",
+                    "Cuboid-cache invalidations (WAL flush hook).",
+                    c.invalidations.get(),
+                ),
+            ] {
+                let pair = p();
+                out.push(Sample::counter(name, help, v).label(pair.0, pair.1));
+            }
+            if let Some(wal) = &wal {
+                let m = &wal.metrics;
+                for (name, help, v) in [
+                    (
+                        "ocpd_wal_appended_records_total",
+                        "WAL records appended.",
+                        m.appended_records.get(),
+                    ),
+                    (
+                        "ocpd_wal_appended_bytes_total",
+                        "WAL framed bytes appended.",
+                        m.appended_bytes.get(),
+                    ),
+                    (
+                        "ocpd_wal_commit_batches_total",
+                        "WAL group commits.",
+                        m.commit_batches.get(),
+                    ),
+                    (
+                        "ocpd_wal_commit_records_total",
+                        "Records carried by group commits.",
+                        m.commit_records.get(),
+                    ),
+                    (
+                        "ocpd_wal_segments_sealed_total",
+                        "WAL segments sealed.",
+                        m.segments_sealed.get(),
+                    ),
+                    (
+                        "ocpd_wal_flushed_records_total",
+                        "WAL records drained to the database node.",
+                        m.flushed_records.get(),
+                    ),
+                    (
+                        "ocpd_wal_flushed_segments_total",
+                        "WAL segments drained.",
+                        m.flushed_segments.get(),
+                    ),
+                    (
+                        "ocpd_wal_truncated_chunks_total",
+                        "Torn WAL frames dropped.",
+                        m.truncated_chunks.get(),
+                    ),
+                ] {
+                    let pair = p();
+                    out.push(Sample::counter(name, help, v).label(pair.0, pair.1));
+                }
+                let pair = p();
+                out.push(
+                    Sample::gauge(
+                        "ocpd_wal_depth_records",
+                        "Unflushed records currently in the log.",
+                        m.depth.get(),
+                    )
+                    .label(pair.0, pair.1),
+                );
+                let pair = p();
+                out.push(
+                    Sample::gauge(
+                        "ocpd_wal_depth_bytes",
+                        "Unflushed framed bytes currently in the log.",
+                        m.depth_bytes.get(),
+                    )
+                    .label(pair.0, pair.1),
+                );
+            }
+        });
     }
 
     // ------------------------------------------------------------------

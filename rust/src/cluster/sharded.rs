@@ -94,6 +94,9 @@ impl StorageEngine for ShardedEngine {
         let n = per_node.len();
         let fetched = scoped_map(n, n, |p| {
             let (node, items) = &per_node[p];
+            let mut sp = crate::obs::trace::span("shard", "get_batch");
+            sp.tag("node", node.to_string());
+            sp.tag("keys", items.len().to_string());
             let ks: Vec<u64> = items.iter().map(|(_, k)| *k).collect();
             self.engines[*node].get_batch(table, &ks)
         });
@@ -116,6 +119,9 @@ impl StorageEngine for ShardedEngine {
             }
         }
         for (node, batch) in per_node {
+            let mut sp = crate::obs::trace::span("shard", "put_batch");
+            sp.tag("node", node.to_string());
+            sp.tag("keys", batch.len().to_string());
             self.engines[node].put_batch(table, &batch)?;
         }
         Ok(())
@@ -130,6 +136,9 @@ impl StorageEngine for ShardedEngine {
         let n = parts.len();
         let fetched = scoped_map(n, n, |p| {
             let (node, lo, l) = parts[p];
+            let mut sp = crate::obs::trace::span("shard", "get_run");
+            sp.tag("node", node.to_string());
+            sp.tag("len", l.to_string());
             self.engines[node].get_run(table, lo, l)
         });
         let mut out = Vec::new();

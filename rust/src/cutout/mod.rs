@@ -408,6 +408,9 @@ impl CutoutService {
         self.store.dataset.check_box(res, &bx)?;
         self.store.dataset.check_timestep(t)?;
         self.store.dataset.check_channel(channel)?;
+        let mut sp = crate::obs::trace::span("cutout", "read");
+        sp.tag("res", res.to_string());
+        sp.tag("extent", format!("{:?}", bx.extent()));
         let cshape = self.store.cuboid_shape(res)?;
         let cover = bx.cuboid_cover(cshape);
 
@@ -421,6 +424,7 @@ impl CutoutService {
             }
         }
         codes.sort_unstable();
+        sp.tag("cuboids", codes.len().to_string());
 
         let mut out = DenseVolume::<T>::zeros(bx.extent());
         if codes.is_empty() {
@@ -459,6 +463,8 @@ impl CutoutService {
         let results = scoped_map(batches.len(), workers, |b| -> Result<()> {
             let (lo, hi) = batches[b];
             let chunk = &codes[lo..hi];
+            let mut bsp = crate::obs::trace::span("cutout", format!("batch {b}"));
+            bsp.tag("cuboids", chunk.len().to_string());
             let cuboids = self.store.read_cuboids::<T>(res, channel, chunk)?;
             for (code, cub) in chunk.iter().zip(cuboids) {
                 let Some(cub) = cub else { continue };
@@ -695,6 +701,11 @@ impl CutoutService {
         if items.is_empty() {
             return Ok(());
         }
+        let mut sp = crate::obs::trace::span("cutout", "write");
+        sp.tag("res", res.to_string());
+        sp.tag("extent", format!("{:?}", bx.extent()));
+        sp.tag("cuboids", items.len().to_string());
+        sp.tag("full", items.iter().filter(|i| i.full).count().to_string());
 
         let batches = if workers <= 1 || items.len() < wcfg.parallel_threshold {
             Vec::new()
@@ -733,6 +744,9 @@ impl CutoutService {
     ) -> Result<()> {
         let cshape = self.store.cuboid_shape(res)?;
         let need: Vec<u64> = items.iter().filter(|i| !i.full).map(|i| i.code).collect();
+        let mut sp = crate::obs::trace::span("cutout", "merge_commit");
+        sp.tag("cuboids", items.len().to_string());
+        sp.tag("rmw", need.len().to_string());
         self.write_metrics.elided_reads.add((items.len() - need.len()) as u64);
         self.write_metrics.rmw_reads.add(need.len() as u64);
         let mut existing = if need.is_empty() {

@@ -350,6 +350,12 @@ fn claim(queues: &Mutex<Vec<VecDeque<usize>>>, worker: usize) -> Option<usize> {
 /// The job body: plan, recover the journal, drain the block queues
 /// phase by phase.
 fn run_job(handle: &JobHandle) -> (JobState, Option<String>) {
+    // Jobs run on detached threads with no live HTTP parent, so each
+    // run is its own trace — request id `job-<id>`, one child span per
+    // block.
+    let mut root =
+        crate::obs::trace::start_trace("job", handle.name.clone(), &format!("job-{}", handle.id));
+    root.tag("job", handle.id.to_string());
     let Some(spec) = handle.spec.lock().unwrap().clone() else {
         return (JobState::Failed, Some("job spec already released".into()));
     };
@@ -429,6 +435,7 @@ fn run_job(handle: &JobHandle) -> (JobState, Option<String>) {
         let queues = Mutex::new(by_shard.into_values().collect::<Vec<_>>());
         let workers = handle.cfg.workers.max(1).min(n_phase).min(MAX_WORKERS);
 
+        let trace_ctx = crate::obs::trace::current();
         std::thread::scope(|s| {
             for w in 0..workers {
                 let queues = &queues;
@@ -438,86 +445,97 @@ fn run_job(handle: &JobHandle) -> (JobState, Option<String>) {
                 let plan = &plan;
                 let table = &table;
                 let spec = &spec;
-                s.spawn(move || loop {
-                    if handle.cancel.load(Ordering::Relaxed) {
-                        break;
-                    }
-                    let Some(bi) = claim(queues, w) else { break };
-                    let block = &plan[bi];
-                    let t0 = Instant::now();
-                    let mut attempt = 0u32;
-                    let outcome = loop {
-                        match spec.run_block(block) {
-                            Ok(n) => break Some(Ok(n)),
-                            Err(e) => {
-                                // A cancel (user, budget stop, or another
-                                // worker's failure) arriving mid-retry is a
-                                // cancellation, not this block's failure.
-                                if handle.cancel.load(Ordering::Relaxed) {
-                                    break None;
-                                }
-                                if attempt >= handle.cfg.retries {
-                                    break Some(Err(e));
-                                }
-                                attempt += 1;
-                                handle.metrics.retries.inc();
-                            }
+                let trace_ctx = trace_ctx.clone();
+                s.spawn(move || {
+                    let _trace = crate::obs::trace::install(trace_ctx);
+                    loop {
+                        if handle.cancel.load(Ordering::Relaxed) {
+                            break;
                         }
-                    };
-                    let Some(outcome) = outcome else { break };
-                    match outcome {
-                        Ok(items) => {
-                            // Checkpoint the completion as one CRC32 frame;
-                            // the sync makes it crash-durable before the
-                            // block counts as done.
-                            let seq_key = seq.fetch_add(1, Ordering::Relaxed);
-                            let rec = WalRecord {
-                                lsn: seq_key,
-                                table: handle.name.clone(),
-                                key: block.index,
-                                value: Some(items.to_le_bytes().to_vec()),
-                            };
-                            let mut frame = Vec::with_capacity(64);
-                            rec.encode_into(&mut frame);
-                            let put = handle
-                                .journal
-                                .put(table, seq_key, &frame)
-                                .and_then(|()| handle.journal.sync());
-                            if let Err(e) = put {
+                        let Some(bi) = claim(queues, w) else { break };
+                        let block = &plan[bi];
+                        let mut sp =
+                            crate::obs::trace::span("job", format!("block {}", block.index));
+                        sp.tag("phase", block.phase.to_string());
+                        if let Some(shard) = block.shard {
+                            sp.tag("shard", shard.to_string());
+                        }
+                        let t0 = Instant::now();
+                        let mut attempt = 0u32;
+                        let outcome = loop {
+                            match spec.run_block(block) {
+                                Ok(n) => break Some(Ok(n)),
+                                Err(e) => {
+                                    // A cancel (user, budget stop, or another
+                                    // worker's failure) arriving mid-retry is a
+                                    // cancellation, not this block's failure.
+                                    if handle.cancel.load(Ordering::Relaxed) {
+                                        break None;
+                                    }
+                                    if attempt >= handle.cfg.retries {
+                                        break Some(Err(e));
+                                    }
+                                    attempt += 1;
+                                    handle.metrics.retries.inc();
+                                }
+                            }
+                        };
+                        let Some(outcome) = outcome else { break };
+                        match outcome {
+                            Ok(items) => {
+                                // Checkpoint the completion as one CRC32 frame;
+                                // the sync makes it crash-durable before the
+                                // block counts as done.
+                                let seq_key = seq.fetch_add(1, Ordering::Relaxed);
+                                let rec = WalRecord {
+                                    lsn: seq_key,
+                                    table: handle.name.clone(),
+                                    key: block.index,
+                                    value: Some(items.to_le_bytes().to_vec()),
+                                };
+                                let mut frame = Vec::with_capacity(64);
+                                rec.encode_into(&mut frame);
+                                let put = handle
+                                    .journal
+                                    .put(table, seq_key, &frame)
+                                    .and_then(|()| handle.journal.sync());
+                                if let Err(e) = put {
+                                    let mut g = error.lock().unwrap();
+                                    if g.is_none() {
+                                        *g = Some(format!("journal write failed: {e}"));
+                                    }
+                                    handle.cancel.store(true, Ordering::Relaxed);
+                                    break;
+                                }
+                                handle.metrics.block_latency.record(t0.elapsed());
+                                handle.items.fetch_add(items, Ordering::Relaxed);
+                                let done_total =
+                                    handle.completed.fetch_add(1, Ordering::Relaxed) + 1;
+                                let secs = handle.started.elapsed().as_secs_f64().max(1e-9);
+                                let rate = done_total.saturating_sub(
+                                    handle.resumed.load(Ordering::Relaxed),
+                                ) as f64
+                                    / secs;
+                                handle.metrics.blocks_per_sec_milli.set((rate * 1e3) as u64);
+                                let n = fresh.fetch_add(1, Ordering::Relaxed) + 1;
+                                if let Some(budget) = handle.cfg.max_blocks {
+                                    if n >= budget {
+                                        handle.cancel.store(true, Ordering::Relaxed);
+                                    }
+                                }
+                            }
+                            Err(e) => {
                                 let mut g = error.lock().unwrap();
                                 if g.is_none() {
-                                    *g = Some(format!("journal write failed: {e}"));
+                                    *g = Some(format!(
+                                        "block {} failed after {} attempts: {e}",
+                                        block.index,
+                                        attempt + 1
+                                    ));
                                 }
                                 handle.cancel.store(true, Ordering::Relaxed);
                                 break;
                             }
-                            handle.metrics.block_latency.record(t0.elapsed());
-                            handle.items.fetch_add(items, Ordering::Relaxed);
-                            let done_total = handle.completed.fetch_add(1, Ordering::Relaxed) + 1;
-                            let secs = handle.started.elapsed().as_secs_f64().max(1e-9);
-                            let rate = done_total.saturating_sub(
-                                handle.resumed.load(Ordering::Relaxed),
-                            ) as f64
-                                / secs;
-                            handle.metrics.blocks_per_sec_milli.set((rate * 1e3) as u64);
-                            let n = fresh.fetch_add(1, Ordering::Relaxed) + 1;
-                            if let Some(budget) = handle.cfg.max_blocks {
-                                if n >= budget {
-                                    handle.cancel.store(true, Ordering::Relaxed);
-                                }
-                            }
-                        }
-                        Err(e) => {
-                            let mut g = error.lock().unwrap();
-                            if g.is_none() {
-                                *g = Some(format!(
-                                    "block {} failed after {} attempts: {e}",
-                                    block.index,
-                                    attempt + 1
-                                ));
-                            }
-                            handle.cancel.store(true, Ordering::Relaxed);
-                            break;
                         }
                     }
                 });
@@ -574,6 +592,12 @@ impl JobManager {
     /// Engine holding the checkpoint journals.
     pub fn journal_engine(&self) -> &Engine {
         &self.journal
+    }
+
+    /// Every submitted job's handle, in id order (the metrics
+    /// registry's jobs collector reads counters straight off these).
+    pub fn handles(&self) -> Vec<Arc<JobHandle>> {
+        self.jobs.read().unwrap().values().cloned().collect()
     }
 
     /// Submit a job under a fresh id.

@@ -45,6 +45,7 @@ pub mod ingest;
 pub mod jobs;
 pub mod metrics;
 pub mod morton;
+pub mod obs;
 pub mod resolution;
 pub mod runtime;
 pub mod shard;

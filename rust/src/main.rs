@@ -39,7 +39,18 @@
 //!     the path after /jobs/, e.g. propagate/synapses_v0 or
 //!     synapse/synth/synapses_v0 or ingest/synth); --job resumes a
 //!     checkpointed id; --cancel stops a running job.
+//!
+//! ocpd metrics [--url http://host:port]
+//!     Print the unified Prometheus-text exposition (`GET /metrics/`).
+//!
+//! ocpd trace   [--url http://host:port] [--slow | --recent]
+//!     Print the tracer status; with --slow or --recent, print the
+//!     retained span trees instead.
 //! ```
+//!
+//! Data output goes to stdout; server-side events (boot progress,
+//! errors) go through the leveled [`ocpd::obs::log`] macros to stderr
+//! (`OCPD_LOG` filters them).
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -49,6 +60,7 @@ use ocpd::core::{Box3, DatasetBuilder, Project};
 use ocpd::ingest::{generate, ingest_volume, SynthSpec};
 use ocpd::runtime::{artifact_dir, Runtime};
 use ocpd::vision::{precision_recall, SynapsePipeline};
+use ocpd::{log_error, log_info};
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
     let mut flags = HashMap::new();
@@ -95,10 +107,15 @@ fn boot(
     cluster.register_dataset(DatasetBuilder::new("synth", dims).levels(3).build());
     let img = cluster.create_image_project(Project::image("synth", "synth"))?;
     cluster.create_annotation_project(Project::annotation("synapses_v0", "synth"), true)?;
-    eprintln!("generating synthetic EM volume {dims:?} (seed {seed})...");
+    log_info!(target: "serve", "generating synthetic EM volume dims={dims:?} seed={seed}");
     let sv = generate(&SynthSpec::small(dims, seed));
     ingest_volume(&img, &sv.vol, [256, 256, 16])?;
-    eprintln!("ingested {} voxels, {} planted synapses", sv.vol.len(), sv.synapses.len());
+    log_info!(
+        target: "serve",
+        "ingest complete voxels={} synapses={}",
+        sv.vol.len(),
+        sv.synapses.len()
+    );
     Ok((cluster, sv.synapses))
 }
 
@@ -117,19 +134,24 @@ fn cmd_serve(flags: HashMap<String, String>) -> ocpd::Result<()> {
     .ok()
     .map(Arc::new);
     let server = ocpd::web::serve(cluster, runtime, &addr, 16)?;
-    println!("ocpd serving at {}", server.url());
-    println!("try:");
-    println!("  GET {}/info/", server.url());
-    println!("  GET {}/synth/ocpk/0/0,128/0,128/0,16/", server.url());
-    println!("  GET {}/synth/tile/0/4/0_0.gray", server.url());
-    println!("  GET {}/synapses_v0/objects/type/synapse/confidence/geq/0.9/", server.url());
-    println!("  GET {}/wal/status/", server.url());
-    println!("  PUT {}/wal/flush/", server.url());
-    println!("  GET {}/cache/status/", server.url());
-    println!("  GET {}/write/status/", server.url());
-    println!("  GET {}/http/status/", server.url());
-    println!("  POST {}/jobs/propagate/synapses_v0/", server.url());
-    println!("  GET {}/jobs/status/", server.url());
+    log_info!(target: "serve", "ocpd serving at {}", server.url());
+    for (method, path) in [
+        ("GET", "/info/"),
+        ("GET", "/synth/ocpk/0/0,128/0,128/0,16/"),
+        ("GET", "/synth/tile/0/4/0_0.gray"),
+        ("GET", "/synapses_v0/objects/type/synapse/confidence/geq/0.9/"),
+        ("GET", "/wal/status/"),
+        ("PUT", "/wal/flush/"),
+        ("GET", "/cache/status/"),
+        ("GET", "/write/status/"),
+        ("GET", "/http/status/"),
+        ("GET", "/metrics/"),
+        ("GET", "/trace/slow/"),
+        ("POST", "/jobs/propagate/synapses_v0/"),
+        ("GET", "/jobs/status/"),
+    ] {
+        log_info!(target: "serve", "try: {method} {}{path}", server.url());
+    }
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
@@ -148,13 +170,13 @@ fn cmd_detect(flags: HashMap<String, String>) -> ocpd::Result<()> {
     let anno =
         cluster.create_annotation_project(Project::annotation("synapses_v0", "synth"), true)?;
 
-    eprintln!("generating + ingesting {dims:?}...");
+    log_info!(target: "detect", "generating + ingesting {dims:?}");
     let sv = generate(&SynthSpec::small(dims, seed));
     ingest_volume(&img, &sv.vol, [256, 256, 16])?;
 
     let mut pipeline = SynapsePipeline::new(runtime, img, anno);
     pipeline.workers = flag(&flags, "workers", 4usize);
-    eprintln!("running detector ({} workers)...", pipeline.workers);
+    log_info!(target: "detect", "running detector workers={}", pipeline.workers);
     let report = pipeline.run(0, Box3::new([0, 0, 0], dims))?;
     let (p, r, m) = precision_recall(&report.detections, &sv.synapses, 6.0);
     println!("blocks:            {}", report.blocks);
@@ -209,6 +231,25 @@ fn cmd_write(flags: HashMap<String, String>) -> ocpd::Result<()> {
     Ok(())
 }
 
+fn cmd_metrics(flags: HashMap<String, String>) -> ocpd::Result<()> {
+    let url: String = flag(&flags, "url", "http://127.0.0.1:8642".to_string());
+    print!("{}", ocpd::client::metrics(&url)?);
+    Ok(())
+}
+
+fn cmd_trace(flags: HashMap<String, String>) -> ocpd::Result<()> {
+    let url: String = flag(&flags, "url", "http://127.0.0.1:8642".to_string());
+    let body = if flags.contains_key("slow") {
+        ocpd::client::trace_slow(&url)?
+    } else if flags.contains_key("recent") {
+        ocpd::client::trace_recent(&url)?
+    } else {
+        ocpd::client::trace_status(&url)?
+    };
+    print!("{body}");
+    Ok(())
+}
+
 fn cmd_jobs(flags: HashMap<String, String>) -> ocpd::Result<()> {
     let url: String = flag(&flags, "url", "http://127.0.0.1:8642".to_string());
     if let Some(id) = flags.get("cancel") {
@@ -236,7 +277,9 @@ fn main() {
     let (cmd, rest) = match args.split_first() {
         Some((c, r)) => (c.as_str(), r.to_vec()),
         None => {
-            eprintln!("usage: ocpd <serve|detect|info|wal|cache|write|jobs|http> [flags]");
+            eprintln!(
+                "usage: ocpd <serve|detect|info|wal|cache|write|jobs|http|metrics|trace> [flags]"
+            );
             std::process::exit(2);
         }
     };
@@ -250,15 +293,18 @@ fn main() {
         "http" => cmd_http(flags),
         "write" => cmd_write(flags),
         "jobs" => cmd_jobs(flags),
+        "metrics" => cmd_metrics(flags),
+        "trace" => cmd_trace(flags),
         other => {
             eprintln!(
-                "unknown command '{other}' (want serve|detect|info|wal|cache|write|jobs|http)"
+                "unknown command '{other}' \
+                 (want serve|detect|info|wal|cache|write|jobs|http|metrics|trace)"
             );
             std::process::exit(2);
         }
     };
     if let Err(e) = result {
-        eprintln!("error: {e}");
+        log_error!("{e}");
         std::process::exit(1);
     }
 }

@@ -33,8 +33,12 @@ impl Gauge {
         self.0.store(v, Ordering::Relaxed);
     }
 
+    /// Saturating increment — the mirror of [`Gauge::sub`], so a gauge
+    /// pinned at the top of its range clamps instead of wrapping.
     pub fn add(&self, n: u64) {
-        self.0.fetch_add(n, Ordering::Relaxed);
+        let _ = self.0.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+            Some(v.saturating_add(n))
+        });
     }
 
     /// Saturating decrement.
@@ -113,20 +117,76 @@ impl Histogram {
     }
 
     /// Approximate percentile (upper edge of the bucket containing it).
+    ///
+    /// Bucket `i` holds values in `[2^i, 2^(i+1) - 1]` (bucket 0 holds
+    /// `{0, 1}`), so the true upper edge is `2^(i+1) - 1` — and `1` for
+    /// bucket 0, not the `2` an off-by-one shift would report.
     pub fn percentile_us(&self, p: f64) -> u64 {
-        let total = self.count();
-        if total == 0 {
+        self.snapshot().percentile(p)
+    }
+
+    /// One consistent pass over the buckets: count, sum, and the full
+    /// bucket array loaded once, so status handlers derive count, mean,
+    /// and any percentile from a single view instead of racing four
+    /// separate atomic loads.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let mut buckets = [0u64; 32];
+        for (b, a) in buckets.iter_mut().zip(&self.buckets) {
+            *b = a.load(Ordering::Relaxed);
+        }
+        // Derive the count from the buckets themselves so count and
+        // bucket sums agree even mid-record; `sum` stays best-effort.
+        HistogramSnapshot {
+            count: buckets.iter().sum(),
+            sum: self.sum_us.load(Ordering::Relaxed),
+            buckets,
+        }
+    }
+}
+
+/// Point-in-time view of a [`Histogram`]: the bucket array plus the
+/// totals, captured in one pass.
+#[derive(Clone, Copy, Debug)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    pub buckets: [u64; 32],
+}
+
+impl HistogramSnapshot {
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Upper edge of the bucket containing percentile `p` (see
+    /// [`Histogram::percentile_us`] for the edge semantics).
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
             return 0;
         }
-        let target = ((p / 100.0) * total as f64).ceil() as u64;
+        let target = ((p / 100.0) * self.count as f64).ceil() as u64;
         let mut seen = 0;
         for (i, b) in self.buckets.iter().enumerate() {
-            seen += b.load(Ordering::Relaxed);
+            seen += b;
             if seen >= target {
-                return 1u64 << (i + 1);
+                return if i == 0 { 1 } else { (1u64 << (i + 1)) - 1 };
             }
         }
         u64::MAX
+    }
+
+    /// Upper edge of log-bucket `i` — the `le` bound Prometheus
+    /// exposition uses for the cumulative bucket series.
+    pub fn bucket_edge(i: usize) -> u64 {
+        if i == 0 {
+            1
+        } else {
+            (1u64 << (i + 1)) - 1
+        }
     }
 }
 
@@ -186,6 +246,18 @@ mod tests {
     }
 
     #[test]
+    fn gauge_saturates_at_both_ends() {
+        let g = Gauge::default();
+        g.set(u64::MAX);
+        g.add(1); // saturates at the top instead of wrapping to 0
+        assert_eq!(g.get(), u64::MAX);
+        g.sub(1);
+        assert_eq!(g.get(), u64::MAX - 1);
+        g.add(5); // round-trips back to the boundary
+        assert_eq!(g.get(), u64::MAX);
+    }
+
+    #[test]
     fn gauge_high_water_mark() {
         let g = Gauge::default();
         g.record_max(7);
@@ -209,6 +281,34 @@ mod tests {
         assert!((h.mean_us() - 2777.5).abs() < 1.0);
         assert!(h.percentile_us(50.0) <= 256);
         assert!(h.percentile_us(100.0) >= 8192);
+    }
+
+    #[test]
+    fn percentile_reports_true_upper_edge() {
+        let h = Histogram::new();
+        h.record_value(0);
+        h.record_value(1);
+        // Both land in bucket 0, whose upper edge is 1 — not the 2 the
+        // old off-by-one shift reported.
+        assert_eq!(h.percentile_us(50.0), 1);
+        assert_eq!(h.percentile_us(100.0), 1);
+        h.record_value(100); // bucket 6: [64, 127]
+        assert_eq!(h.percentile_us(100.0), 127);
+    }
+
+    #[test]
+    fn snapshot_one_pass_view() {
+        let h = Histogram::new();
+        for us in [10u64, 100, 1000, 10_000] {
+            h.record(Duration::from_micros(us));
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 4);
+        assert!((s.mean() - 2777.5).abs() < 1.0);
+        assert_eq!(s.percentile(50.0), h.percentile_us(50.0));
+        assert_eq!(s.percentile(99.0), h.percentile_us(99.0));
+        assert_eq!(HistogramSnapshot::bucket_edge(0), 1);
+        assert_eq!(HistogramSnapshot::bucket_edge(3), 15);
     }
 
     #[test]

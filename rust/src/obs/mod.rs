@@ -1,0 +1,26 @@
+//! Observability: end-to-end request tracing, the unified metrics
+//! registry, and structured logging.
+//!
+//! The paper's evaluation (§4) attributes every millisecond of a cutout
+//! to a layer — index lookup, cuboid fetch, assembly. This module is
+//! the reproduction's analogue, three cooperating pieces:
+//!
+//! * [`trace`] — a lightweight span tracer. The web tier opens a root
+//!   span per request (honoring an inbound `X-Request-Id`, minting one
+//!   otherwise, echoing it on the response); the cutout engine, the
+//!   cuboid cache, the sharded fan-out workers, the WAL group commit,
+//!   and job blocks open child spans tagged with their layer and
+//!   shard/node. Completed traces land in bounded ring buffers with
+//!   **tail-based retention**: traces slower than a threshold are always
+//!   kept (the slow-request log), the rest are 1-in-N sampled.
+//! * [`registry`] — a [`registry::MetricsRegistry`] that the six
+//!   per-subsystem metrics structs register into, serving one
+//!   Prometheus-text-format `GET /metrics/` exposition alongside the
+//!   subsystem JSON/text routes.
+//! * [`log`] — leveled `log_*!` macros (target, key=value payloads,
+//!   request-id correlation from the active trace, `OCPD_LOG` filter)
+//!   replacing raw `println!`/`eprintln!` for server-side events.
+
+pub mod log;
+pub mod registry;
+pub mod trace;

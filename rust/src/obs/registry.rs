@@ -1,0 +1,243 @@
+//! The unified metrics registry: one Prometheus-text-format exposition
+//! (`GET /metrics/`) over every per-subsystem metrics struct.
+//!
+//! The subsystems keep their existing structs (`ReadMetrics`,
+//! `WriteMetrics`, `CacheMetrics`, `JobMetrics`, `WalMetrics`,
+//! `HttpMetrics`) and their JSON/text status routes; the registry adds
+//! a pull layer on top. Each subsystem registers a keyed **collector**
+//! — a closure capturing its `Arc`'d metrics — and a scrape runs every
+//! collector, groups the emitted samples into families, and renders
+//! Prometheus text format (version 0.0.4): one `# HELP`/`# TYPE` pair
+//! per family, counters and gauges as plain series, histograms as
+//! cumulative `_bucket{le=...}` series plus `_sum` and `_count`.
+//!
+//! Collectors are keyed so re-registering (a project re-created in
+//! tests, a server restarted on the same cluster) replaces rather than
+//! duplicates.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::Mutex;
+
+use crate::metrics::HistogramSnapshot;
+
+/// Prometheus metric families.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricKind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl MetricKind {
+    fn as_str(&self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+            MetricKind::Histogram => "histogram",
+        }
+    }
+}
+
+/// A sample's value: a scalar (counter/gauge) or a full histogram
+/// snapshot.
+#[derive(Clone, Debug)]
+pub enum Value {
+    Num(u64),
+    Hist(HistogramSnapshot),
+}
+
+/// One emitted sample: family name + kind + labels + value.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub kind: MetricKind,
+    pub labels: Vec<(&'static str, String)>,
+    pub value: Value,
+}
+
+impl Sample {
+    pub fn counter(name: &'static str, help: &'static str, v: u64) -> Sample {
+        Sample { name, help, kind: MetricKind::Counter, labels: Vec::new(), value: Value::Num(v) }
+    }
+
+    pub fn gauge(name: &'static str, help: &'static str, v: u64) -> Sample {
+        Sample { name, help, kind: MetricKind::Gauge, labels: Vec::new(), value: Value::Num(v) }
+    }
+
+    pub fn histogram(name: &'static str, help: &'static str, s: HistogramSnapshot) -> Sample {
+        Sample {
+            name,
+            help,
+            kind: MetricKind::Histogram,
+            labels: Vec::new(),
+            value: Value::Hist(s),
+        }
+    }
+
+    /// Attach a label (builder form).
+    pub fn label(mut self, key: &'static str, value: impl Into<String>) -> Sample {
+        self.labels.push((key, value.into()));
+        self
+    }
+}
+
+type Collector = Box<dyn Fn(&mut Vec<Sample>) + Send + Sync>;
+
+/// The per-cluster registry. Cheap to scrape: collectors read atomics.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    collectors: Mutex<BTreeMap<String, Collector>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register (or replace) the collector under `key`. Keys name the
+    /// source ("project/mytoken", "http", "jobs") so registration is
+    /// idempotent.
+    pub fn register(
+        &self,
+        key: impl Into<String>,
+        collector: impl Fn(&mut Vec<Sample>) + Send + Sync + 'static,
+    ) {
+        self.collectors.lock().unwrap().insert(key.into(), Box::new(collector));
+    }
+
+    /// Remove the collector under `key` (a deleted project).
+    pub fn unregister(&self, key: &str) {
+        self.collectors.lock().unwrap().remove(key);
+    }
+
+    /// Run every collector and return the raw samples.
+    pub fn gather(&self) -> Vec<Sample> {
+        let mut out = Vec::new();
+        for c in self.collectors.lock().unwrap().values() {
+            c(&mut out);
+        }
+        out
+    }
+
+    /// Render the Prometheus text exposition (the `GET /metrics/` body).
+    pub fn render(&self) -> String {
+        let samples = self.gather();
+        // Group into families, sorted by name for a stable exposition.
+        let mut families: BTreeMap<&'static str, (&'static str, MetricKind, Vec<&Sample>)> =
+            BTreeMap::new();
+        for s in &samples {
+            families.entry(s.name).or_insert((s.help, s.kind, Vec::new())).2.push(s);
+        }
+        let mut out = String::new();
+        for (name, (help, kind, series)) in families {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} {}", kind.as_str());
+            for s in series {
+                match &s.value {
+                    Value::Num(v) => {
+                        let _ = writeln!(out, "{name}{} {v}", fmt_labels(&s.labels, None));
+                    }
+                    Value::Hist(h) => render_histogram(&mut out, name, &s.labels, h),
+                }
+            }
+        }
+        out
+    }
+}
+
+/// `{k="v",...}` with an optional extra `le` pair; empty label sets
+/// render as nothing.
+fn fmt_labels(labels: &[(&'static str, String)], le: Option<&str>) -> String {
+    if labels.is_empty() && le.is_none() {
+        return String::new();
+    }
+    let mut parts: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{}\"", escape_label(v))).collect();
+    if let Some(le) = le {
+        parts.push(format!("le=\"{le}\""));
+    }
+    format!("{{{}}}", parts.join(","))
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn render_histogram(
+    out: &mut String,
+    name: &'static str,
+    labels: &[(&'static str, String)],
+    h: &HistogramSnapshot,
+) {
+    let mut cum = 0u64;
+    for (i, b) in h.buckets.iter().enumerate() {
+        cum += b;
+        // Skip interior empty buckets but always emit the first and the
+        // tail so the cumulative series stays well-formed without 32
+        // lines per histogram.
+        if *b == 0 && i != 0 && i != 31 {
+            continue;
+        }
+        let edge = HistogramSnapshot::bucket_edge(i).to_string();
+        let _ = writeln!(out, "{name}_bucket{} {cum}", fmt_labels(labels, Some(&edge)));
+    }
+    let _ = writeln!(out, "{name}_bucket{} {}", fmt_labels(labels, Some("+Inf")), h.count);
+    let _ = writeln!(out, "{name}_sum{} {}", fmt_labels(labels, None), h.sum);
+    let _ = writeln!(out, "{name}_count{} {}", fmt_labels(labels, None), h.count);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Histogram;
+    use std::time::Duration;
+
+    #[test]
+    fn render_counter_and_gauge() {
+        let r = MetricsRegistry::new();
+        r.register("a", |out| {
+            out.push(Sample::counter("ocpd_reads_total", "Reads served.", 7).label("project", "t"));
+            out.push(Sample::gauge("ocpd_depth", "Queue depth.", 3));
+        });
+        let text = r.render();
+        assert!(text.contains("# HELP ocpd_reads_total Reads served."));
+        assert!(text.contains("# TYPE ocpd_reads_total counter"));
+        assert!(text.contains("ocpd_reads_total{project=\"t\"} 7"));
+        assert!(text.contains("# TYPE ocpd_depth gauge"));
+        assert!(text.contains("ocpd_depth 3"));
+    }
+
+    #[test]
+    fn render_histogram_cumulative() {
+        let h = Histogram::new();
+        h.record(Duration::from_micros(1));
+        h.record(Duration::from_micros(100));
+        let snap = h.snapshot();
+        let r = MetricsRegistry::new();
+        r.register("h", move |out| {
+            out.push(Sample::histogram("ocpd_lat_us", "Latency.", snap));
+        });
+        let text = r.render();
+        assert!(text.contains("# TYPE ocpd_lat_us histogram"));
+        assert!(text.contains("ocpd_lat_us_bucket{le=\"1\"} 1"));
+        // Bucket 6 ([64,127]) holds the 100; cumulative = 2.
+        assert!(text.contains("ocpd_lat_us_bucket{le=\"127\"} 2"), "{text}");
+        assert!(text.contains("ocpd_lat_us_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("ocpd_lat_us_sum 101"));
+        assert!(text.contains("ocpd_lat_us_count 2"));
+    }
+
+    #[test]
+    fn register_is_idempotent_by_key() {
+        let r = MetricsRegistry::new();
+        r.register("k", |out| out.push(Sample::counter("ocpd_x_total", "X.", 1)));
+        r.register("k", |out| out.push(Sample::counter("ocpd_x_total", "X.", 2)));
+        let text = r.render();
+        assert!(text.contains("ocpd_x_total 2"));
+        assert_eq!(text.lines().filter(|l| l.starts_with("ocpd_x_total ")).count(), 1);
+        r.unregister("k");
+        assert!(r.render().is_empty());
+    }
+}

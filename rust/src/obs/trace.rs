@@ -1,0 +1,600 @@
+//! Span tracing with tail-based retention.
+//!
+//! One [`Trace`] per request (or per job run), a tree of spans under
+//! it. The tracer is a process-wide singleton so deep layers (the WAL
+//! group-commit leader, a shard fan-out worker) can attach spans
+//! without plumbing a handle through every signature: the active trace
+//! rides a thread-local stack, and [`scoped_map`] propagates it onto
+//! fork-join workers via [`current`]/[`install`].
+//!
+//! Retention is decided **after** a trace completes (tail-based): every
+//! live trace records its full span tree, and at completion a trace
+//! slower than the configured threshold always lands in the slow ring,
+//! while the rest are 1-in-N sampled into the recent ring. `Off` mode
+//! records nothing — span creation is a no-op costing one atomic load.
+//!
+//! [`scoped_map`]: crate::util::pool::scoped_map
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::metrics::Counter;
+
+/// How much the tracer records. Retention (slow ring / sampling) is
+/// decided at trace completion; the mode gates span *recording*.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceMode {
+    /// Record nothing; every tracing call is a no-op.
+    Off = 0,
+    /// Record every trace; keep slow ones always, sample the rest 1-in-N
+    /// into the recent ring (the default).
+    Sampled = 1,
+    /// Record and retain every trace.
+    Always = 2,
+}
+
+/// Tracer tuning. Built from the environment once
+/// (`OCPD_TRACE=off|sampled|always`, `OCPD_TRACE_SAMPLE_N`,
+/// `OCPD_TRACE_SLOW_US`); benches and tests override via
+/// [`Tracer::configure`].
+#[derive(Clone, Copy, Debug)]
+pub struct TraceConfig {
+    pub mode: TraceMode,
+    /// Keep 1 in this many fast traces (the slow ring is unconditional).
+    pub sample_every: u64,
+    /// Traces at least this slow always land in the slow ring.
+    pub slow_threshold_us: u64,
+    /// Capacity of each retention ring (recent and slow).
+    pub capacity: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            mode: TraceMode::Sampled,
+            sample_every: 64,
+            slow_threshold_us: 100_000,
+            capacity: 256,
+        }
+    }
+}
+
+impl TraceConfig {
+    /// The default overridden by `OCPD_TRACE*` environment variables.
+    pub fn from_env() -> Self {
+        let mut cfg = TraceConfig::default();
+        match std::env::var("OCPD_TRACE").ok().as_deref() {
+            Some("off") => cfg.mode = TraceMode::Off,
+            Some("always") => cfg.mode = TraceMode::Always,
+            Some(_) | None => {}
+        }
+        if let Some(n) = std::env::var("OCPD_TRACE_SAMPLE_N").ok().and_then(|v| v.parse().ok())
+        {
+            cfg.sample_every = std::cmp::max(n, 1);
+        }
+        if let Some(us) = std::env::var("OCPD_TRACE_SLOW_US").ok().and_then(|v| v.parse().ok())
+        {
+            cfg.slow_threshold_us = us;
+        }
+        cfg
+    }
+}
+
+/// One finished span: its position in the tree (`parent` = 0 for the
+/// root), the layer that opened it, wall-clock offsets relative to the
+/// trace start, and free-form tags.
+#[derive(Clone, Debug)]
+pub struct SpanRecord {
+    pub id: u64,
+    /// Parent span id; 0 marks the root.
+    pub parent: u64,
+    /// The subsystem that opened the span ("http", "cutout", "cache",
+    /// "shard", "wal", "job").
+    pub layer: &'static str,
+    pub name: String,
+    /// Microseconds from trace start to span start.
+    pub start_us: u64,
+    pub dur_us: u64,
+    pub tags: Vec<(&'static str, String)>,
+}
+
+/// A completed, retained trace.
+#[derive(Debug)]
+pub struct FinishedTrace {
+    pub request_id: String,
+    pub dur_us: u64,
+    /// Spans in completion order; rebuild the tree via `parent` ids.
+    pub spans: Vec<SpanRecord>,
+}
+
+/// Live trace state shared by every span guard on its path.
+#[derive(Debug)]
+pub struct TraceInner {
+    request_id: String,
+    start: Instant,
+    spans: Mutex<Vec<SpanRecord>>,
+}
+
+/// A captured (trace, active span) pair — the thread-local context at
+/// the moment of capture, installable on another thread.
+#[derive(Clone)]
+pub struct TraceCtx {
+    trace: Arc<TraceInner>,
+    span: u64,
+}
+
+thread_local! {
+    /// Stack of (trace, span id) frames; the top is the active span new
+    /// children attach to.
+    static CURRENT: RefCell<Vec<(Arc<TraceInner>, u64)>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Trace lifecycle counters, surfaced at `GET /trace/status/`.
+#[derive(Debug, Default)]
+pub struct TraceCounters {
+    pub started: Counter,
+    pub finished: Counter,
+    pub retained_slow: Counter,
+    pub retained_sampled: Counter,
+    pub dropped: Counter,
+}
+
+/// The process-wide tracer: configuration, id allocator, counters, and
+/// the two retention rings.
+pub struct Tracer {
+    mode: AtomicU8,
+    sample_every: AtomicU64,
+    slow_threshold_us: AtomicU64,
+    capacity: AtomicU64,
+    /// Span/trace id allocator (ids are process-unique, never 0).
+    seq: AtomicU64,
+    /// Completed-trace count driving the 1-in-N sampling decision.
+    completed: AtomicU64,
+    pub counters: TraceCounters,
+    recent: Mutex<VecDeque<Arc<FinishedTrace>>>,
+    slow: Mutex<VecDeque<Arc<FinishedTrace>>>,
+}
+
+impl Tracer {
+    pub fn new(cfg: TraceConfig) -> Self {
+        Tracer {
+            mode: AtomicU8::new(cfg.mode as u8),
+            sample_every: AtomicU64::new(cfg.sample_every.max(1)),
+            slow_threshold_us: AtomicU64::new(cfg.slow_threshold_us),
+            capacity: AtomicU64::new(cfg.capacity as u64),
+            seq: AtomicU64::new(1),
+            completed: AtomicU64::new(0),
+            counters: TraceCounters::default(),
+            recent: Mutex::new(VecDeque::new()),
+            slow: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    /// Replace the tuning knobs on a live tracer (benches, tests, and
+    /// an operator toggling tracing without a restart).
+    pub fn configure(&self, cfg: TraceConfig) {
+        self.mode.store(cfg.mode as u8, Ordering::Relaxed);
+        self.sample_every.store(cfg.sample_every.max(1), Ordering::Relaxed);
+        self.slow_threshold_us.store(cfg.slow_threshold_us, Ordering::Relaxed);
+        self.capacity.store(cfg.capacity as u64, Ordering::Relaxed);
+    }
+
+    pub fn config(&self) -> TraceConfig {
+        TraceConfig {
+            mode: match self.mode.load(Ordering::Relaxed) {
+                0 => TraceMode::Off,
+                2 => TraceMode::Always,
+                _ => TraceMode::Sampled,
+            },
+            sample_every: self.sample_every.load(Ordering::Relaxed),
+            slow_threshold_us: self.slow_threshold_us.load(Ordering::Relaxed),
+            capacity: self.capacity.load(Ordering::Relaxed) as usize,
+        }
+    }
+
+    fn enabled(&self) -> bool {
+        self.mode.load(Ordering::Relaxed) != TraceMode::Off as u8
+    }
+
+    pub fn next_id(&self) -> u64 {
+        self.seq.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Retained traces, newest first.
+    pub fn recent(&self) -> Vec<Arc<FinishedTrace>> {
+        self.recent.lock().unwrap().iter().rev().cloned().collect()
+    }
+
+    /// Slow traces (above threshold), newest first.
+    pub fn slow(&self) -> Vec<Arc<FinishedTrace>> {
+        self.slow.lock().unwrap().iter().rev().cloned().collect()
+    }
+
+    /// Drop all retained traces (tests and the bench harness).
+    pub fn clear(&self) {
+        self.recent.lock().unwrap().clear();
+        self.slow.lock().unwrap().clear();
+    }
+
+    fn finish(&self, inner: Arc<TraceInner>, dur_us: u64) {
+        self.counters.finished.inc();
+        let cfg = self.config();
+        let slow = dur_us >= cfg.slow_threshold_us;
+        let n = self.completed.fetch_add(1, Ordering::Relaxed);
+        let sampled = cfg.mode == TraceMode::Always || n % cfg.sample_every == 0;
+        if !slow && !sampled {
+            self.counters.dropped.inc();
+            return;
+        }
+        let spans = std::mem::take(&mut *inner.spans.lock().unwrap());
+        let done = Arc::new(FinishedTrace {
+            request_id: inner.request_id.clone(),
+            dur_us,
+            spans,
+        });
+        if slow {
+            self.counters.retained_slow.inc();
+            push_ring(&self.slow, Arc::clone(&done), cfg.capacity);
+        }
+        if sampled {
+            self.counters.retained_sampled.inc();
+            push_ring(&self.recent, done, cfg.capacity);
+        }
+    }
+
+    /// The `GET /trace/status/` body.
+    pub fn status_text(&self) -> String {
+        let cfg = self.config();
+        let c = &self.counters;
+        let mode = match cfg.mode {
+            TraceMode::Off => "off",
+            TraceMode::Sampled => "sampled",
+            TraceMode::Always => "always",
+        };
+        format!(
+            "trace:\n  mode={mode} sample_every={} slow_threshold_us={} capacity={}\n  \
+             started={} finished={} retained_slow={} retained_sampled={} dropped={}\n  \
+             rings: recent={} slow={}\n",
+            cfg.sample_every,
+            cfg.slow_threshold_us,
+            cfg.capacity,
+            c.started.get(),
+            c.finished.get(),
+            c.retained_slow.get(),
+            c.retained_sampled.get(),
+            c.dropped.get(),
+            self.recent.lock().unwrap().len(),
+            self.slow.lock().unwrap().len(),
+        )
+    }
+}
+
+fn push_ring(ring: &Mutex<VecDeque<Arc<FinishedTrace>>>, t: Arc<FinishedTrace>, cap: usize) {
+    let mut g = ring.lock().unwrap();
+    while g.len() >= cap.max(1) {
+        g.pop_front();
+    }
+    g.push_back(t);
+}
+
+/// The process-wide tracer, configured from the environment on first
+/// touch.
+pub fn tracer() -> &'static Tracer {
+    static TRACER: OnceLock<Tracer> = OnceLock::new();
+    TRACER.get_or_init(|| Tracer::new(TraceConfig::from_env()))
+}
+
+/// Open a root span and make its trace current on this thread. The
+/// guard finishes the trace (and decides retention) on drop. A no-op
+/// when tracing is off.
+pub fn start_trace(layer: &'static str, name: impl Into<String>, request_id: &str) -> TraceGuard {
+    let t = tracer();
+    if !t.enabled() {
+        return TraceGuard(None);
+    }
+    t.counters.started.inc();
+    let inner = Arc::new(TraceInner {
+        request_id: request_id.to_string(),
+        start: Instant::now(),
+        spans: Mutex::new(Vec::new()),
+    });
+    let id = t.next_id();
+    CURRENT.with(|c| c.borrow_mut().push((Arc::clone(&inner), id)));
+    TraceGuard(Some(SpanState {
+        trace: inner,
+        id,
+        parent: 0,
+        layer,
+        name: name.into(),
+        started: Instant::now(),
+        tags: Vec::new(),
+    }))
+}
+
+/// Open a child span under the thread's current trace. A no-op (one
+/// thread-local read) when no trace is active.
+pub fn span(layer: &'static str, name: impl Into<String>) -> SpanGuard {
+    let Some((trace, parent)) = CURRENT.with(|c| c.borrow().last().cloned()) else {
+        return SpanGuard(None);
+    };
+    let id = tracer().next_id();
+    CURRENT.with(|c| c.borrow_mut().push((Arc::clone(&trace), id)));
+    SpanGuard(Some(SpanState {
+        trace,
+        id,
+        parent,
+        layer,
+        name: name.into(),
+        started: Instant::now(),
+        tags: Vec::new(),
+    }))
+}
+
+/// The thread's current (trace, span) context, for handing to another
+/// thread (see [`install`]).
+pub fn current() -> Option<TraceCtx> {
+    CURRENT.with(|c| c.borrow().last().cloned()).map(|(trace, span)| TraceCtx { trace, span })
+}
+
+/// The active trace's request id, if any — log correlation and the
+/// client's outbound `X-Request-Id` propagation.
+pub fn current_request_id() -> Option<String> {
+    CURRENT.with(|c| c.borrow().last().map(|(t, _)| t.request_id.clone()))
+}
+
+/// Make a captured context current on this thread (a fork-join worker);
+/// the guard uninstalls it on drop. `None` installs nothing.
+pub fn install(ctx: Option<TraceCtx>) -> InstallGuard {
+    match ctx {
+        Some(TraceCtx { trace, span }) => {
+            CURRENT.with(|c| c.borrow_mut().push((trace, span)));
+            InstallGuard(true)
+        }
+        None => InstallGuard(false),
+    }
+}
+
+/// Uninstalls an [`install`]ed context on drop.
+pub struct InstallGuard(bool);
+
+impl Drop for InstallGuard {
+    fn drop(&mut self) {
+        if self.0 {
+            CURRENT.with(|c| {
+                c.borrow_mut().pop();
+            });
+        }
+    }
+}
+
+struct SpanState {
+    trace: Arc<TraceInner>,
+    id: u64,
+    parent: u64,
+    layer: &'static str,
+    name: String,
+    started: Instant,
+    tags: Vec<(&'static str, String)>,
+}
+
+impl SpanState {
+    fn record(self) -> Arc<TraceInner> {
+        let rec = SpanRecord {
+            id: self.id,
+            parent: self.parent,
+            layer: self.layer,
+            name: self.name,
+            start_us: self
+                .started
+                .duration_since(self.trace.start)
+                .as_micros() as u64,
+            dur_us: self.started.elapsed().as_micros() as u64,
+            tags: self.tags,
+        };
+        self.trace.spans.lock().unwrap().push(rec);
+        self.trace
+    }
+}
+
+/// Root-span guard: finishes the span *and* the trace on drop.
+pub struct TraceGuard(Option<SpanState>);
+
+impl TraceGuard {
+    pub fn tag(&mut self, key: &'static str, value: impl Into<String>) {
+        if let Some(s) = self.0.as_mut() {
+            s.tags.push((key, value.into()));
+        }
+    }
+
+    /// Whether this guard carries a live trace (false when tracing is
+    /// off).
+    pub fn is_active(&self) -> bool {
+        self.0.is_some()
+    }
+}
+
+impl Drop for TraceGuard {
+    fn drop(&mut self) {
+        if let Some(state) = self.0.take() {
+            CURRENT.with(|c| {
+                c.borrow_mut().pop();
+            });
+            let trace = state.record();
+            let dur_us = trace.start.elapsed().as_micros() as u64;
+            tracer().finish(trace, dur_us);
+        }
+    }
+}
+
+/// Child-span guard: records the span on drop.
+pub struct SpanGuard(Option<SpanState>);
+
+impl SpanGuard {
+    pub fn tag(&mut self, key: &'static str, value: impl Into<String>) {
+        if let Some(s) = self.0.as_mut() {
+            s.tags.push((key, value.into()));
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(state) = self.0.take() {
+            CURRENT.with(|c| {
+                c.borrow_mut().pop();
+            });
+            state.record();
+        }
+    }
+}
+
+/// Render retained traces as the indented text tree served by
+/// `GET /trace/recent/` and `GET /trace/slow/`.
+pub fn render_traces(traces: &[Arc<FinishedTrace>]) -> String {
+    let mut out = String::new();
+    if traces.is_empty() {
+        out.push_str("(no traces retained)\n");
+        return out;
+    }
+    for t in traces {
+        out.push_str(&format!(
+            "trace req={} dur_us={} spans={}\n",
+            t.request_id,
+            t.dur_us,
+            t.spans.len()
+        ));
+        // Rebuild the tree from parent ids; spans are stored in
+        // completion order, so sort children by start offset.
+        let roots: Vec<&SpanRecord> = t.spans.iter().filter(|s| s.parent == 0).collect();
+        for root in roots {
+            render_span(&mut out, t, root, 1);
+        }
+    }
+    out
+}
+
+fn render_span(out: &mut String, t: &FinishedTrace, s: &SpanRecord, depth: usize) {
+    out.push_str(&"  ".repeat(depth));
+    out.push_str(&format!(
+        "[{}] {} start_us={} dur_us={}",
+        s.layer, s.name, s.start_us, s.dur_us
+    ));
+    for (k, v) in &s.tags {
+        out.push_str(&format!(" {k}={v}"));
+    }
+    out.push('\n');
+    let mut children: Vec<&SpanRecord> = t.spans.iter().filter(|c| c.parent == s.id).collect();
+    children.sort_by_key(|c| c.start_us);
+    for c in children {
+        render_span(out, t, c, depth + 1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // These tests exercise standalone `Tracer` instances plus the
+    // span-guard plumbing; global-config mutation lives in the
+    // integration tests (`tests/obs_trace.rs`), which run in their own
+    // process.
+
+    #[test]
+    fn ring_retention_bounds() {
+        let t = Tracer::new(TraceConfig {
+            mode: TraceMode::Always,
+            sample_every: 1,
+            slow_threshold_us: 0,
+            capacity: 3,
+        });
+        for i in 0..10 {
+            let inner = Arc::new(TraceInner {
+                request_id: format!("r{i}"),
+                start: Instant::now(),
+                spans: Mutex::new(Vec::new()),
+            });
+            t.finish(inner, 5);
+        }
+        assert_eq!(t.slow().len(), 3);
+        assert_eq!(t.recent().len(), 3);
+        // Newest first.
+        assert_eq!(t.slow()[0].request_id, "r9");
+    }
+
+    #[test]
+    fn sampling_keeps_one_in_n() {
+        let t = Tracer::new(TraceConfig {
+            mode: TraceMode::Sampled,
+            sample_every: 4,
+            slow_threshold_us: u64::MAX,
+            capacity: 64,
+        });
+        for i in 0..16 {
+            let inner = Arc::new(TraceInner {
+                request_id: format!("r{i}"),
+                start: Instant::now(),
+                spans: Mutex::new(Vec::new()),
+            });
+            t.finish(inner, 1);
+        }
+        assert_eq!(t.recent().len(), 4);
+        assert_eq!(t.slow().len(), 0);
+        assert_eq!(t.counters.dropped.get(), 12);
+    }
+
+    #[test]
+    fn slow_always_kept() {
+        let t = Tracer::new(TraceConfig {
+            mode: TraceMode::Sampled,
+            sample_every: 1_000_000,
+            slow_threshold_us: 100,
+            capacity: 64,
+        });
+        for i in 0..8 {
+            let inner = Arc::new(TraceInner {
+                request_id: format!("r{i}"),
+                start: Instant::now(),
+                spans: Mutex::new(Vec::new()),
+            });
+            // Odd traces are slow.
+            t.finish(inner, if i % 2 == 1 { 500 } else { 5 });
+        }
+        assert_eq!(t.slow().len(), 4);
+    }
+
+    #[test]
+    fn render_tree_indents_children() {
+        let t = FinishedTrace {
+            request_id: "abc".into(),
+            dur_us: 1000,
+            spans: vec![
+                SpanRecord {
+                    id: 2,
+                    parent: 1,
+                    layer: "cutout",
+                    name: "read".into(),
+                    start_us: 10,
+                    dur_us: 900,
+                    tags: vec![("res", "0".into())],
+                },
+                SpanRecord {
+                    id: 1,
+                    parent: 0,
+                    layer: "http",
+                    name: "GET /x/".into(),
+                    start_us: 0,
+                    dur_us: 1000,
+                    tags: vec![],
+                },
+            ],
+        };
+        let s = render_traces(&[Arc::new(t)]);
+        assert!(s.contains("trace req=abc"));
+        assert!(s.contains("  [http] GET /x/"));
+        assert!(s.contains("    [cutout] read"), "{s}");
+        assert!(s.contains("res=0"));
+    }
+}

@@ -111,21 +111,28 @@ where
     let next = AtomicUsize::new(0);
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
     let slots = out.as_mut_ptr() as usize;
+    // Carry the caller's trace context onto the workers so spans opened
+    // inside `f` attach to the request's trace, not nowhere.
+    let trace_ctx = crate::obs::trace::current();
     std::thread::scope(|s| {
         for _ in 0..par {
             let next = &next;
             let f = &f;
-            s.spawn(move || loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let v = f(i);
-                // Each index is claimed exactly once, so the write is
-                // exclusive; Vec storage outlives the scope.
-                unsafe {
-                    let base = slots as *mut Option<T>;
-                    *base.add(i) = Some(v);
+            let trace_ctx = trace_ctx.clone();
+            s.spawn(move || {
+                let _trace = crate::obs::trace::install(trace_ctx);
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let v = f(i);
+                    // Each index is claimed exactly once, so the write
+                    // is exclusive; Vec storage outlives the scope.
+                    unsafe {
+                        let base = slots as *mut Option<T>;
+                        *base.add(i) = Some(v);
+                    }
                 }
             });
         }

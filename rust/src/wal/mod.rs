@@ -353,6 +353,8 @@ impl Wal {
             return Ok(0);
         }
         let n = muts.len() as u64;
+        let mut sp = crate::obs::trace::span("wal", "append");
+        sp.tag("records", n.to_string());
         let my_last;
         let mut recs: Vec<WalRecord> = Vec::with_capacity(muts.len());
         {
@@ -430,6 +432,7 @@ impl Wal {
             // Become the group-commit leader.
             st.committing = true;
             drop(st);
+            let mut sp = crate::obs::trace::span("wal", "group_commit");
             if !self.cfg.group_window.is_zero() {
                 std::thread::sleep(self.cfg.group_window);
             }
@@ -442,6 +445,7 @@ impl Wal {
                 st.next_chunk += 1;
                 (batch, records, last, key)
             };
+            sp.tag("batch_records", batch_records.to_string());
             if batch.is_empty() {
                 st = self.state.lock().unwrap();
                 st.committing = false;

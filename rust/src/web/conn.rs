@@ -59,6 +59,9 @@ pub struct ResponseInfo {
     pub max_chunk: usize,
     /// The exchange rode a pooled (reused) connection.
     pub reused: bool,
+    /// The server's `X-Request-Id` echo — names the request's trace on
+    /// the server's `/trace/*` surface (DESIGN.md §9).
+    pub request_id: Option<String>,
 }
 
 struct IdleConn {
@@ -151,8 +154,14 @@ fn exchange(
     close: bool,
 ) -> std::result::Result<Exchange, (bool, Error)> {
     // retryable=true until the first response byte arrives.
+    // Propagate the caller's trace context: a client call made inside a
+    // traced request (or job) stamps its request id on the outbound
+    // exchange, so server-side traces correlate across hops.
+    let req_id = crate::obs::trace::current_request_id()
+        .map(|id| format!("X-Request-Id: {id}\r\n"))
+        .unwrap_or_default();
     let head = format!(
-        "{method} {path} HTTP/1.1\r\nHost: {host}\r\nContent-Length: {}\r\n{}\r\n",
+        "{method} {path} HTTP/1.1\r\nHost: {host}\r\nContent-Length: {}\r\n{req_id}{}\r\n",
         body.len(),
         if close { "Connection: close\r\n" } else { "" }
     );
@@ -182,6 +191,7 @@ fn exchange(
     let mut content_length: Option<usize> = None;
     let mut chunked = false;
     let mut server_close = close;
+    let mut request_id: Option<String> = None;
     loop {
         let mut h = String::new();
         match conn.reader.read_line(&mut h) {
@@ -201,6 +211,8 @@ fn exchange(
                 chunked = v.eq_ignore_ascii_case("chunked");
             } else if k.eq_ignore_ascii_case("connection") && v.eq_ignore_ascii_case("close") {
                 server_close = true;
+            } else if k.eq_ignore_ascii_case("x-request-id") && !v.is_empty() {
+                request_id = Some(v.to_string());
             }
         }
     }
@@ -260,7 +272,14 @@ fn exchange(
     }
 
     Ok(Exchange {
-        info: ResponseInfo { status, body: body_out, chunked, max_chunk, reused: false },
+        info: ResponseInfo {
+            status,
+            body: body_out,
+            chunked,
+            max_chunk,
+            reused: false,
+            request_id,
+        },
         keep: !server_close,
     })
 }

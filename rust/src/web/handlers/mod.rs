@@ -8,6 +8,7 @@
 
 pub(crate) mod cache;
 pub(crate) mod jobs;
+pub(crate) mod obs;
 pub(crate) mod projects;
 pub(crate) mod system;
 pub(crate) mod wal;

@@ -1,0 +1,30 @@
+//! Observability surfaces: the unified `/metrics/` exposition and the
+//! `/trace/*` span-tree views.
+
+use crate::obs::trace::{render_traces, tracer};
+use crate::web::http::Response;
+use crate::web::router::Ctx;
+use crate::web::routes::OcpService;
+use crate::Result;
+
+/// GET /metrics/ — every registered subsystem's counters, gauges, and
+/// histograms in Prometheus text format (version 0.0.4).
+pub(crate) fn metrics(svc: &OcpService, _ctx: &Ctx<'_>) -> Result<Response> {
+    let body = svc.cluster.registry().render();
+    Ok(Response::ok(body.into_bytes(), "text/plain; version=0.0.4"))
+}
+
+/// GET /trace/status/ — tracer configuration and retention counters.
+pub(crate) fn trace_status(_svc: &OcpService, _ctx: &Ctx<'_>) -> Result<Response> {
+    Ok(Response::text(tracer().status_text()))
+}
+
+/// GET /trace/recent/ — sampled recent traces, newest first.
+pub(crate) fn trace_recent(_svc: &OcpService, _ctx: &Ctx<'_>) -> Result<Response> {
+    Ok(Response::text(render_traces(&tracer().recent())))
+}
+
+/// GET /trace/slow/ — traces above the slow threshold, newest first.
+pub(crate) fn trace_slow(_svc: &OcpService, _ctx: &Ctx<'_>) -> Result<Response> {
+    Ok(Response::text(render_traces(&tracer().slow())))
+}

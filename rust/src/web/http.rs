@@ -91,6 +91,9 @@ pub struct Request {
     /// Path, percent-decoding not needed for our grammar.
     pub path: String,
     pub body: Vec<u8>,
+    /// Inbound `X-Request-Id`, if the client sent one; the service tier
+    /// mints an id otherwise and echoes it on the response either way.
+    pub request_id: Option<String>,
     /// Whether the connection may serve another request after this one
     /// (HTTP/1.1 default, overridden by `Connection: close` or an
     /// HTTP/1.0 request line).
@@ -175,11 +178,22 @@ pub struct Response {
     /// Route label assigned by the router — keys the per-route latency
     /// histograms in [`HttpMetrics`].
     pub route: Option<&'static str>,
+    /// Request id echoed as an `X-Request-Id` response header — set by
+    /// the service tier from the inbound header (or minted there).
+    pub request_id: Option<String>,
 }
 
 impl Response {
     fn with_body(status: u16, content_type: &'static str, body: Body) -> Response {
-        Response { status, content_type, body, allow: None, retry_after: None, route: None }
+        Response {
+            status,
+            content_type,
+            body,
+            allow: None,
+            retry_after: None,
+            route: None,
+            request_id: None,
+        }
     }
 
     pub fn ok(body: Vec<u8>, content_type: &'static str) -> Response {
@@ -219,6 +233,7 @@ impl Response {
             allow: Some(allow),
             retry_after: None,
             route: None,
+            request_id: None,
         }
     }
 
@@ -231,6 +246,7 @@ impl Response {
             allow: None,
             retry_after: Some(RETRY_AFTER_SECS),
             route: None,
+            request_id: None,
         }
     }
 
@@ -296,6 +312,16 @@ impl HttpMetrics {
     pub fn route_latency(&self, route: &'static str) -> Arc<Histogram> {
         let mut guard = self.per_route.lock().unwrap();
         Arc::clone(guard.entry(route).or_insert_with(|| Arc::new(Histogram::new())))
+    }
+
+    /// Every route's latency histogram, sorted by name (the unified
+    /// registry's per-route exposition).
+    pub fn route_histograms(&self) -> Vec<(&'static str, Arc<Histogram>)> {
+        let guard = self.per_route.lock().unwrap();
+        let mut rows: Vec<_> =
+            guard.iter().map(|(name, h)| (*name, Arc::clone(h))).collect();
+        rows.sort_by_key(|r| r.0);
+        rows
     }
 
     /// Snapshot of every route's (name, count, mean µs, p95 µs), sorted
@@ -824,6 +850,7 @@ fn read_request(
     let mut content_length: Option<usize> = None;
     let mut connection_close = http10;
     let mut connection_keep = false;
+    let mut request_id: Option<String> = None;
     loop {
         let mut h = String::new();
         match read_line_bounded(&mut head, &mut h, deadline) {
@@ -870,6 +897,17 @@ fn read_request(
                         connection_keep = true;
                     }
                 }
+            } else if k.eq_ignore_ascii_case("x-request-id") && !v.is_empty() {
+                // Cap and sanitize: the id is echoed in a response
+                // header and rendered in trace/log output.
+                let id: String = v
+                    .chars()
+                    .take(64)
+                    .filter(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.'))
+                    .collect();
+                if !id.is_empty() {
+                    request_id = Some(id);
+                }
             }
         }
     }
@@ -897,7 +935,7 @@ fn read_request(
         }
     }
     let keep_alive = !connection_close || (http10 && connection_keep);
-    Ok(Request { method, path, body, keep_alive, http10 })
+    Ok(Request { method, path, body, request_id, keep_alive, http10 })
 }
 
 /// [`write_response_v`] with chunked framing allowed (HTTP/1.1 peers).
@@ -925,6 +963,9 @@ fn write_response_v(
     }
     if let Some(secs) = resp.retry_after {
         head.push_str(&format!("Retry-After: {secs}\r\n"));
+    }
+    if let Some(id) = &resp.request_id {
+        head.push_str(&format!("X-Request-Id: {id}\r\n"));
     }
     let conn = if keep { "keep-alive" } else { "close" };
     match resp.body {

@@ -35,11 +35,17 @@
 //! POST /jobs/{propagate|synapse|ingest}/...                       submit batch jobs
 //! GET /jobs/status/  |  GET /jobs/status/{id}/                    job status
 //! POST /jobs/cancel/{id}/                                         cancel a job
+//! GET /metrics/                                                   unified Prometheus exposition
+//! GET /trace/status/                                              tracer config + retention
+//! GET /trace/recent/  |  GET /trace/slow/                         retained span trees
 //! ```
 //!
-//! `info`, `http`, `wal`, `cache`, `jobs`, and `write` are reserved
-//! top-level names, not project tokens; wrong-method requests anywhere
-//! in the grammar answer `405` with an auto-derived `Allow` header.
+//! `info`, `http`, `wal`, `cache`, `jobs`, `write`, `metrics`, and
+//! `trace` are reserved top-level names, not project tokens;
+//! wrong-method requests anywhere in the grammar answer `405` with an
+//! auto-derived `Allow` header. Every response carries an
+//! `X-Request-Id` header (echoing the request's, if sent) naming the
+//! request's trace (DESIGN.md §9).
 
 pub(crate) mod conn;
 mod handlers;
@@ -109,6 +115,7 @@ pub fn serve_with(
     opts: ServeOptions,
 ) -> crate::Result<Server> {
     let metrics = Arc::new(HttpMetrics::default());
+    register_http_metrics(cluster.registry(), &metrics);
     let svc = Arc::new(
         OcpService::new(cluster, runtime)
             .with_http_metrics(Arc::clone(&metrics))
@@ -120,4 +127,59 @@ pub fn serve_with(
         ..ServerConfig::default()
     };
     Server::bind_with_config(addr, cfg, metrics, move |req| svc.handle(req))
+}
+
+/// Register the transport's collector into the cluster's unified
+/// registry (the `ocpd_http_*` family on `GET /metrics/`).
+fn register_http_metrics(
+    registry: &Arc<crate::obs::registry::MetricsRegistry>,
+    metrics: &Arc<HttpMetrics>,
+) {
+    use crate::obs::registry::Sample;
+    let m = Arc::clone(metrics);
+    registry.register("http", move |out| {
+        for (name, help, v) in [
+            ("ocpd_http_requests_total", "Requests answered.", m.requests.get()),
+            ("ocpd_http_connections_total", "Connections admitted.", m.connections.get()),
+            (
+                "ocpd_http_rejected_total",
+                "Connections rejected by the admission gate.",
+                m.rejected.get(),
+            ),
+            ("ocpd_http_accept_errors_total", "Accept-loop errors.", m.accept_errors.get()),
+            (
+                "ocpd_http_streamed_responses_total",
+                "Responses streamed as chunked transfer-encoding.",
+                m.streamed_responses.get(),
+            ),
+        ] {
+            out.push(Sample::counter(name, help, v));
+        }
+        for (name, help, v) in [
+            ("ocpd_http_active_connections", "Live connections.", m.active_connections.get()),
+            ("ocpd_http_in_flight", "Requests currently in flight.", m.in_flight.get()),
+            (
+                "ocpd_http_stream_peak_chunk_bytes",
+                "High-water mark of one streamed chunk.",
+                m.stream_peak_chunk.get(),
+            ),
+        ] {
+            out.push(Sample::gauge(name, help, v));
+        }
+        out.push(Sample::histogram(
+            "ocpd_http_request_latency_us",
+            "Per-request wall time (parse + handle + write), microseconds.",
+            m.latency.snapshot(),
+        ));
+        for (route, hist) in m.route_histograms() {
+            out.push(
+                Sample::histogram(
+                    "ocpd_http_route_latency_us",
+                    "Per-route request latency, microseconds.",
+                    hist.snapshot(),
+                )
+                .label("route", route),
+            );
+        }
+    });
 }

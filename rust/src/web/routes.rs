@@ -13,7 +13,7 @@ use crate::cluster::Cluster;
 use crate::core::Box3;
 use crate::runtime::Runtime;
 use crate::tiles::TileService;
-use crate::web::handlers::{cache, jobs, projects, system, wal, write_engine};
+use crate::web::handlers::{cache, jobs, obs, projects, system, wal, write_engine};
 use crate::web::http::{HttpMetrics, Request, Response};
 use crate::web::router::{Outcome, Route, Router, Seg};
 use crate::{Error, Result};
@@ -26,7 +26,8 @@ pub const DEFAULT_STREAM_THRESHOLD: usize = 8 << 20;
 /// Reserved top-level names — never project tokens; the router's
 /// token segments refuse them so `/wal/...` can never be shadowed, and
 /// the cluster refuses to create projects under them.
-pub const RESERVED: &[&str] = &["info", "http", "wal", "cache", "jobs", "write"];
+pub const RESERVED: &[&str] =
+    &["info", "http", "wal", "cache", "jobs", "write", "metrics", "trace"];
 
 /// The Web-service layer over a cluster (the paper's "application
 /// server" role).
@@ -70,25 +71,47 @@ impl OcpService {
 
     /// Entry point: map a request to a response. Routing errors become
     /// their HTTP status codes; handlers never panic the connection.
+    ///
+    /// Every request gets a request id — the inbound `X-Request-Id` if
+    /// the client sent one, a minted one otherwise — echoed on the
+    /// response and naming the request's trace (root span opened here;
+    /// the layers below attach children through the thread-local
+    /// context).
     pub fn handle(&self, req: Request) -> Response {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static REQ_SEQ: AtomicU64 = AtomicU64::new(1);
+        let request_id = req
+            .request_id
+            .clone()
+            .unwrap_or_else(|| format!("req-{:06x}", REQ_SEQ.fetch_add(1, Ordering::Relaxed)));
+        let name = format!("{} {}", req.method, req.path);
+        let mut root = crate::obs::trace::start_trace("http", name, &request_id);
+        root.tag("method", req.method.clone());
         let segs: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
-        if segs.is_empty() {
-            return Response::text("ocpd: Open Connectome Project data cluster");
-        }
-        match router().dispatch(self, req.method.as_str(), &segs, &req.body) {
-            Outcome::Handled(resp) | Outcome::MethodNotAllowed(resp) => resp,
-            Outcome::NoMatch => {
-                if !matches!(req.method.as_str(), "GET" | "PUT" | "POST") {
-                    // Methods outside the grammar entirely.
-                    Response::method_not_allowed("GET, POST, PUT")
-                } else {
-                    Response::error(
-                        400,
-                        format!("bad request: unrecognized {} /{}", req.method, segs.join("/")),
-                    )
+        let mut resp = if segs.is_empty() {
+            Response::text("ocpd: Open Connectome Project data cluster")
+        } else {
+            match router().dispatch(self, req.method.as_str(), &segs, &req.body) {
+                Outcome::Handled(resp) | Outcome::MethodNotAllowed(resp) => resp,
+                Outcome::NoMatch => {
+                    if !matches!(req.method.as_str(), "GET" | "PUT" | "POST") {
+                        // Methods outside the grammar entirely.
+                        Response::method_not_allowed("GET, POST, PUT")
+                    } else {
+                        Response::error(
+                            400,
+                            format!("bad request: unrecognized {} /{}", req.method, segs.join("/")),
+                        )
+                    }
                 }
             }
+        };
+        if let Some(route) = resp.route {
+            root.tag("route", route);
         }
+        root.tag("status", resp.status.to_string());
+        resp.request_id = Some(request_id);
+        resp
     }
 
     pub(crate) fn tile_service(&self, token: &str) -> Result<Arc<TileService>> {
@@ -125,6 +148,35 @@ fn route_table() -> Vec<Route<OcpService>> {
             pattern: &[Lit("http"), Lit("status")],
             handler: system::http_status,
             doc: "transport metrics: reuse ratio, in-flight, per-route latency",
+        },
+        // ---- observability -------------------------------------------
+        Route {
+            name: "metrics",
+            methods: GET,
+            pattern: &[Lit("metrics")],
+            handler: obs::metrics,
+            doc: "unified Prometheus-text exposition of every subsystem's metrics",
+        },
+        Route {
+            name: "trace-status",
+            methods: GET,
+            pattern: &[Lit("trace"), Lit("status")],
+            handler: obs::trace_status,
+            doc: "tracer config, retention counters, and ring occupancy",
+        },
+        Route {
+            name: "trace-recent",
+            methods: GET,
+            pattern: &[Lit("trace"), Lit("recent")],
+            handler: obs::trace_recent,
+            doc: "sampled recent traces as span trees",
+        },
+        Route {
+            name: "trace-slow",
+            methods: GET,
+            pattern: &[Lit("trace"), Lit("slow")],
+            handler: obs::trace_slow,
+            doc: "slow traces (above the threshold) as span trees",
         },
         // ---- WAL (SSD write-absorber) --------------------------------
         Route {
@@ -463,10 +515,10 @@ mod tests {
         // Every reserved name that owns routes appears as a literal
         // first segment; every route has methods and a doc line.
         let listing = r.listing();
-        for reserved in ["info", "http", "wal", "cache", "jobs", "write"] {
+        for reserved in ["info", "http", "wal", "cache", "jobs", "write", "metrics", "trace"] {
             assert!(listing.contains(&format!("/{reserved}")), "{reserved} missing:\n{listing}");
         }
-        for label in ["cutout", "metadata", "ramon-put", "http-status"] {
+        for label in ["cutout", "metadata", "ramon-put", "http-status", "trace-slow"] {
             assert!(listing.contains(label), "{label} missing:\n{listing}");
         }
     }

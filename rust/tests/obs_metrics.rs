@@ -1,0 +1,160 @@
+//! Unified metrics exposition (DESIGN.md §9): one `GET /metrics/`
+//! scrape carries every subsystem's counters, gauges, and histograms in
+//! well-formed Prometheus text format.
+
+use ocpd::array::DenseVolume;
+use ocpd::client::OcpClient;
+use ocpd::cluster::Cluster;
+use ocpd::core::{Box3, DatasetBuilder, Project, WriteDiscipline};
+use ocpd::ingest::{generate, ingest_volume, SynthSpec};
+use ocpd::web::Server;
+
+/// Boot a sharded cluster with an image project and a hot annotation
+/// project, then drive every subsystem once: cutout reads (cold + warm
+/// for cache hits), an annotation write (write engine + WAL), a WAL
+/// flush, and a propagate job.
+fn exercised_fixture() -> Server {
+    let dims = [256u64, 256, 32];
+    let cluster = Cluster::in_memory(2, 1);
+    cluster.register_dataset(DatasetBuilder::new("img", dims).levels(2).build());
+    let img = cluster.create_image_project(Project::image("img", "img")).unwrap();
+    cluster.create_annotation_project(Project::annotation("ann", "img"), true).unwrap();
+    let sv = generate(&SynthSpec::small(dims, 3));
+    ingest_volume(&img, &sv.vol, [256, 256, 16]).unwrap();
+    let server = ocpd::web::serve(cluster, None, "127.0.0.1:0", 8).unwrap();
+
+    let client = OcpClient::new(&server.url(), "img");
+    let bx = Box3::new([0, 0, 0], [128, 128, 16]);
+    let _ = client.cutout_u8(0, bx).unwrap();
+    let _ = client.cutout_u8(0, bx).unwrap();
+
+    let ann = OcpClient::new(&server.url(), "ann");
+    let wbx = Box3::new([32, 32, 4], [96, 96, 12]);
+    let mut v = DenseVolume::<u32>::zeros(wbx.extent());
+    v.fill_box(Box3::new([0, 0, 0], wbx.extent()), 42);
+    ann.write_annotation(0, wbx.lo, &v, WriteDiscipline::Overwrite).unwrap();
+    ocpd::client::wal_flush(&server.url(), None).unwrap();
+
+    let resp = ocpd::client::submit_job(&server.url(), "propagate/ann", "workers=2").unwrap();
+    let id: u64 =
+        resp.split_whitespace().next().unwrap().trim_start_matches("id=").parse().unwrap();
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(20);
+    loop {
+        let status = ocpd::client::job_status(&server.url(), Some(id)).unwrap();
+        if status.contains("state=completed") {
+            break;
+        }
+        assert!(!status.contains("state=failed"), "{status}");
+        assert!(std::time::Instant::now() < deadline, "job stuck: {status}");
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    server
+}
+
+/// Strip the `{labels}` part of a sample line, returning (name, value).
+fn split_sample(line: &str) -> (&str, &str) {
+    let (series, value) = line.rsplit_once(' ').unwrap_or_else(|| panic!("bad line: {line}"));
+    let name = series.split('{').next().unwrap();
+    (name, value)
+}
+
+#[test]
+fn one_scrape_carries_every_subsystem() {
+    let server = exercised_fixture();
+    let text = ocpd::client::metrics(&server.url()).unwrap();
+
+    // Well-formed exposition: every line is HELP, TYPE, or a sample;
+    // each family announces exactly one TYPE before its samples; all
+    // values parse as finite numbers.
+    let mut typed = std::collections::HashMap::new();
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let (family, kind) = rest.split_once(' ').unwrap();
+            assert!(
+                matches!(kind, "counter" | "gauge" | "histogram"),
+                "unknown kind: {line}"
+            );
+            let prev = typed.insert(family.to_string(), kind.to_string());
+            assert!(prev.is_none(), "duplicate TYPE for {family}");
+        } else if let Some(rest) = line.strip_prefix("# HELP ") {
+            assert!(rest.contains(' '), "HELP without text: {line}");
+        } else {
+            let (name, value) = split_sample(line);
+            let v: f64 = value.parse().unwrap_or_else(|_| panic!("bad value: {line}"));
+            assert!(v.is_finite(), "non-finite value: {line}");
+            // A sample's family is its name minus histogram suffixes.
+            let family = name
+                .strip_suffix("_bucket")
+                .or_else(|| name.strip_suffix("_sum"))
+                .or_else(|| name.strip_suffix("_count"))
+                .unwrap_or(name);
+            assert!(
+                typed.contains_key(family) || typed.contains_key(name),
+                "sample before TYPE: {line}"
+            );
+        }
+    }
+
+    // Every subsystem surfaced in the one scrape, labeled by project
+    // where per-project (read/write/cache/wal).
+    for family in [
+        "ocpd_read_sequential_total",
+        "ocpd_read_parallel_total",
+        "ocpd_write_parallel_total",
+        "ocpd_write_elided_reads_total",
+        "ocpd_write_merge_latency_us",
+        "ocpd_cache_hits_total",
+        "ocpd_cache_misses_total",
+        "ocpd_wal_appended_records_total",
+        "ocpd_wal_depth_records",
+        "ocpd_job_retries_total",
+        "ocpd_job_block_latency_us",
+        "ocpd_http_requests_total",
+        "ocpd_http_request_latency_us",
+        "ocpd_http_route_latency_us",
+        "ocpd_http_in_flight",
+    ] {
+        assert!(typed.contains_key(family), "missing family {family}:\n{text}");
+    }
+    assert!(text.contains("project=\"img\""), "{text}");
+    assert!(text.contains("project=\"ann\""), "{text}");
+
+    // The warmed cache registered hits; the transport counted requests;
+    // the histogram families carry cumulative buckets.
+    let hit_line = text
+        .lines()
+        .find(|l| l.starts_with("ocpd_cache_hits_total") && l.contains("project=\"img\""))
+        .unwrap();
+    assert_ne!(split_sample(hit_line).1, "0", "{hit_line}");
+    let req_line =
+        text.lines().find(|l| l.starts_with("ocpd_http_requests_total")).unwrap();
+    assert!(split_sample(req_line).1.parse::<u64>().unwrap() > 0, "{req_line}");
+    assert!(text.contains("ocpd_http_request_latency_us_bucket{le=\"+Inf\"}"), "{text}");
+    assert!(text.contains("ocpd_http_request_latency_us_count"), "{text}");
+}
+
+#[test]
+fn scrape_is_idempotent_and_stable() {
+    let server = exercised_fixture();
+    let a = ocpd::client::metrics(&server.url()).unwrap();
+    let b = ocpd::client::metrics(&server.url()).unwrap();
+    // Family sets are identical between scrapes (values may advance —
+    // the scrape itself is an HTTP request).
+    let families = |t: &str| {
+        t.lines()
+            .filter_map(|l| l.strip_prefix("# TYPE ").map(str::to_string))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(families(&a), families(&b));
+    // Content type is the Prometheus text version.
+    let info = ocpd::web::http::request_info(
+        "GET",
+        &format!("{}/metrics/", server.url()),
+        &[],
+    )
+    .unwrap();
+    assert_eq!(info.status, 200);
+}

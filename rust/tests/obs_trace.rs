@@ -1,0 +1,125 @@
+//! End-to-end request tracing (DESIGN.md §9): the `X-Request-Id`
+//! correlation header round-trips through the pooled keep-alive client,
+//! and a cutout over a sharded cluster leaves a retained span tree with
+//! tagged children from every layer it crossed.
+//!
+//! These tests mutate the process-wide tracer configuration, so they
+//! live in their own integration binary; both tests install the same
+//! retain-everything config to stay order-independent.
+
+use ocpd::cluster::Cluster;
+use ocpd::core::{DatasetBuilder, Project};
+use ocpd::ingest::{generate, ingest_volume, SynthSpec};
+use ocpd::obs::trace::{self, TraceConfig, TraceMode};
+use ocpd::web::http::request_info;
+use ocpd::web::Server;
+
+/// Retain every trace in the slow ring (threshold 0) so assertions
+/// never depend on sampling luck or wall-clock speed.
+fn retain_everything() {
+    trace::tracer().configure(TraceConfig {
+        mode: TraceMode::Always,
+        sample_every: 1,
+        slow_threshold_us: 0,
+        capacity: 256,
+    });
+}
+
+/// Two database nodes so cutout reads fan out across shards.
+fn sharded_fixture() -> Server {
+    let dims = [256u64, 256, 32];
+    let cluster = Cluster::in_memory(2, 1);
+    cluster.register_dataset(DatasetBuilder::new("img", dims).levels(1).build());
+    let img = cluster.create_image_project(Project::image("img", "img")).unwrap();
+    let sv = generate(&SynthSpec::small(dims, 7));
+    ingest_volume(&img, &sv.vol, [256, 256, 16]).unwrap();
+    ocpd::web::serve(cluster, None, "127.0.0.1:0", 8).unwrap()
+}
+
+#[test]
+fn request_id_echoes_end_to_end() {
+    retain_everything();
+    let server = sharded_fixture();
+    let url = format!("{}/img/ocpk/0/0,128/0,128/0,16/", server.url());
+
+    // With no ambient trace the client sends no X-Request-Id; the
+    // server mints one and names it in the response.
+    let info = request_info("GET", &url, &[]).unwrap();
+    assert_eq!(info.status, 200);
+    let minted = info.request_id.expect("server must always name the trace");
+    assert!(minted.starts_with("req-"), "{minted}");
+
+    // With an ambient trace the pooled client stamps its request id
+    // outbound, and the server echoes that exact id back.
+    let root = trace::start_trace("test", "client-side", "cli-trace-001");
+    let info = request_info("GET", &url, &[]).unwrap();
+    drop(root);
+    assert_eq!(info.status, 200);
+    assert_eq!(info.request_id.as_deref(), Some("cli-trace-001"));
+}
+
+#[test]
+fn sharded_cutout_leaves_layered_span_tree() {
+    retain_everything();
+    let server = sharded_fixture();
+
+    // Issue the cutout under a client-chosen request id so the exact
+    // trace is findable in the retention ring afterwards.
+    let req_id = "trace-e2e-cutout-42";
+    let url = format!("{}/img/ocpk/0/0,256/0,256/0,32/", server.url());
+    let root = trace::start_trace("test", "cutout", req_id);
+    let info = request_info("GET", &url, &[]).unwrap();
+    drop(root);
+    assert_eq!(info.status, 200);
+    assert_eq!(info.request_id.as_deref(), Some(req_id));
+
+    // The server finished (and retained) the trace before it wrote the
+    // response, so the slow ring already names it.
+    let slow = ocpd::client::trace_slow(&server.url()).unwrap();
+    let trace_block: String = {
+        // Isolate this request's tree: from its header line to the next
+        // trace header (traces render newest-first).
+        let start = slow
+            .find(&format!("trace req={req_id}"))
+            .unwrap_or_else(|| panic!("trace {req_id} not retained:\n{slow}"));
+        let rest = &slow[start..];
+        let end = rest[6..].find("\ntrace req=").map(|i| i + 7).unwrap_or(rest.len());
+        rest[..end].to_string()
+    };
+
+    // Root span from the HTTP layer, tagged with route + status...
+    assert!(trace_block.contains("[http] GET /img/ocpk/"), "{trace_block}");
+    assert!(trace_block.contains("status=200"), "{trace_block}");
+    // ...a cutout child tagged with the cuboid count...
+    assert!(trace_block.contains("[cutout] read"), "{trace_block}");
+    assert!(trace_block.contains("cuboids="), "{trace_block}");
+    // ...a cache-lookup child reporting hits/misses...
+    assert!(trace_block.contains("[cache] lookup"), "{trace_block}");
+    assert!(trace_block.contains("misses="), "{trace_block}");
+    // ...and shard fan-out batches tagged with their node.
+    assert!(trace_block.contains("[shard] get_batch"), "{trace_block}");
+    assert!(trace_block.contains("node="), "{trace_block}");
+
+    // The tracer status page reflects retention.
+    let status = ocpd::client::trace_status(&server.url()).unwrap();
+    assert!(status.contains("mode=always"), "{status}");
+    assert!(!status.contains("finished=0 "), "{status}");
+}
+
+#[test]
+fn pooled_connections_reuse_and_still_correlate() {
+    retain_everything();
+    let server = sharded_fixture();
+    let url = format!("{}/img/ocpk/0/0,64/0,64/0,8/", server.url());
+    let mut saw_reuse = false;
+    for i in 0..4 {
+        let rid = format!("pool-{i}");
+        let root = trace::start_trace("test", "pooled", &rid);
+        let info = request_info("GET", &url, &[]).unwrap();
+        drop(root);
+        assert_eq!(info.status, 200);
+        assert_eq!(info.request_id.as_deref(), Some(rid.as_str()));
+        saw_reuse |= info.reused;
+    }
+    assert!(saw_reuse, "keep-alive pool never reused a connection");
+}
