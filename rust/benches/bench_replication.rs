@@ -1,0 +1,161 @@
+//! Replication money shot: what does shipping every mutation round to
+//! followers cost, and how fast is a failover? The same group-committed
+//! put workload runs against a replica set at 1 (the seed's
+//! unreplicated layout), 2, and 3 copies, then a 3-way set is promoted
+//! repeatedly to measure time-to-promote (the unavailability window a
+//! dead leader causes beyond its lease).
+//!
+//! Prints the table and rewrites `../BENCH_replication.json` (override
+//! with `OCPD_BENCH_OUT`). `OCPD_BENCH_SMOKE=1` shrinks the workload
+//! for CI.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use ocpd::cluster::{ReplicaSet, ReplicationConfig};
+use ocpd::storage::{Engine, MemStore};
+
+use common::*;
+
+struct Workload {
+    rounds: usize,
+    batch: usize,
+    value_bytes: usize,
+    repeats: usize,
+}
+
+fn workload() -> Workload {
+    if std::env::var("OCPD_BENCH_SMOKE").is_ok() {
+        Workload { rounds: 60, batch: 16, value_bytes: 1024, repeats: 3 }
+    } else {
+        Workload { rounds: 400, batch: 32, value_bytes: 4096, repeats: 5 }
+    }
+}
+
+fn build_set(replicas: usize) -> Arc<ReplicaSet> {
+    let members: Vec<(usize, Engine)> =
+        (0..replicas).map(|i| (i, Arc::new(MemStore::new()) as Engine)).collect();
+    ReplicaSet::new("bench", 0, (0, u64::MAX), members, ReplicationConfig::default()).unwrap()
+}
+
+/// The put batches, framed once outside the timed region.
+fn batches(w: &Workload) -> Vec<Vec<(u64, Vec<u8>)>> {
+    (0..w.rounds)
+        .map(|r| {
+            (0..w.batch)
+                .map(|j| (((r * w.batch + j) % 4096) as u64, vec![0xAB; w.value_bytes]))
+                .collect()
+        })
+        .collect()
+}
+
+/// Median wall seconds to push the whole workload through one set.
+fn run_puts(set: &ReplicaSet, rounds: &[Vec<(u64, Vec<u8>)>], repeats: usize) -> f64 {
+    median_time(repeats, || {
+        let epoch = set.epoch();
+        for b in rounds {
+            set.put_batch(epoch, "bench/data", b).unwrap();
+        }
+    })
+}
+
+/// Median promote latency (µs) on a written-to 3-way set; the demoted
+/// leader is caught back up between promotions so every round has a
+/// full candidate pool.
+fn promote_latency_us(w: &Workload) -> f64 {
+    let set = build_set(3);
+    let rounds = batches(w);
+    let mut ts: Vec<f64> = Vec::new();
+    for _ in 0..w.repeats.max(3) {
+        let epoch = set.epoch();
+        for b in rounds.iter().take(8) {
+            set.put_batch(epoch, "bench/data", b).unwrap();
+        }
+        let t0 = Instant::now();
+        set.promote().unwrap();
+        ts.push(t0.elapsed().as_secs_f64() * 1e6);
+        set.catch_up();
+    }
+    ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ts[ts.len() / 2]
+}
+
+struct Row {
+    replicas: usize,
+    seconds: f64,
+    records: u64,
+    bytes: u64,
+}
+
+impl Row {
+    fn records_per_sec(&self) -> f64 {
+        self.records as f64 / self.seconds.max(1e-9)
+    }
+    fn mbps(&self) -> f64 {
+        self.bytes as f64 / (1 << 20) as f64 / self.seconds.max(1e-9)
+    }
+}
+
+fn main() {
+    let w = workload();
+    let rounds = batches(&w);
+    let records = (w.rounds * w.batch) as u64;
+    let bytes = records * w.value_bytes as u64;
+
+    header(
+        "replicated put throughput (group-committed rounds)",
+        &["replicas", "records", "seconds", "records/s", "MB/s", "overhead"],
+    );
+    let mut rows: Vec<Row> = Vec::new();
+    for replicas in [1usize, 2, 3] {
+        let set = build_set(replicas);
+        let seconds = run_puts(&set, &rounds, w.repeats);
+        rows.push(Row { replicas, seconds, records, bytes });
+        let r = rows.last().unwrap();
+        let overhead = 100.0 * (r.seconds / rows[0].seconds - 1.0);
+        row(&[
+            r.replicas.to_string(),
+            r.records.to_string(),
+            format!("{:.4}", r.seconds),
+            format!("{:.0}", r.records_per_sec()),
+            format!("{:.1}", r.mbps()),
+            format!("{overhead:+.2}%"),
+        ]);
+    }
+
+    let promote_us = promote_latency_us(&w);
+    println!("\ntime-to-promote (3-way set, median): {promote_us:.0} µs");
+
+    let out =
+        std::env::var("OCPD_BENCH_OUT").unwrap_or_else(|_| "../BENCH_replication.json".into());
+    let mut json = String::from("{\n  \"bench\": \"bench_replication\",\n");
+    json.push_str(&format!(
+        "  \"workload\": {{\"rounds\": {}, \"batch\": {}, \"value_bytes\": {}, \
+         \"repeats\": {}}},\n",
+        w.rounds, w.batch, w.value_bytes, w.repeats
+    ));
+    json.push_str("  \"provenance\": \"measured by cargo bench --bench bench_replication\",\n");
+    json.push_str(&format!("  \"promote_latency_us\": {promote_us:.1},\n"));
+    json.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"replicas\": {}, \"records\": {}, \"seconds\": {:.4}, \
+             \"records_per_sec\": {:.1}, \"mb_per_sec\": {:.1}, \"overhead_pct\": {:.2}}}{}\n",
+            r.replicas,
+            r.records,
+            r.seconds,
+            r.records_per_sec(),
+            r.mbps(),
+            100.0 * (r.seconds / rows[0].seconds - 1.0),
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

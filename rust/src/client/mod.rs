@@ -280,6 +280,28 @@ pub fn wal_flush(base_url: &str, token: Option<&str>) -> Result<String> {
     Ok(String::from_utf8_lossy(&b).to_string())
 }
 
+/// Cluster health: node liveness, replica-set epochs/leaders/lag, and
+/// failover counters (`GET /cluster/status/`).
+pub fn cluster_status(base_url: &str) -> Result<String> {
+    let (s, b) =
+        request("GET", &format!("{}/cluster/status/", base_url.trim_end_matches('/')), &[])?;
+    if s != 200 {
+        return Err(Error::Other(format!("http {s}: {}", String::from_utf8_lossy(&b))));
+    }
+    Ok(String::from_utf8_lossy(&b).to_string())
+}
+
+/// Force a leader promotion on one project shard. Returns the server's
+/// `promoted: ...` report.
+pub fn cluster_failover(base_url: &str, token: &str, shard: usize) -> Result<String> {
+    let url = format!("{}/cluster/failover/{token}/{shard}/", base_url.trim_end_matches('/'));
+    let (s, b) = request("POST", &url, &[])?;
+    if s != 200 {
+        return Err(Error::Other(format!("http {s}: {}", String::from_utf8_lossy(&b))));
+    }
+    Ok(String::from_utf8_lossy(&b).to_string())
+}
+
 /// Submit a batch compute job. `spec` is the submit path after `/jobs/`
 /// (e.g. `propagate/synapses_v0` or `synapse/synth/synapses_v0`);
 /// `params` is the whitespace-separated `key=value` body (`workers=N`,

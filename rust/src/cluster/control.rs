@@ -1,0 +1,345 @@
+//! The cluster control plane: node registry, lease-based failure
+//! detection, and failover promotion (DESIGN.md §10).
+//!
+//! One [`ControlPlane`] per [`super::Cluster`] tracks every storage node
+//! and every project's replica sets. Each [`ControlPlane::tick`]:
+//!
+//! 1. probes every registered node and records liveness;
+//! 2. catches dead-marked followers back up (retained-chunk replay or
+//!    full resync, see [`ReplicaSet::catch_up`]);
+//! 3. probes each multi-member set's leader — a live leader renews its
+//!    lease; a dead one whose lease has expired gets the most-caught-up
+//!    follower promoted in its place.
+//!
+//! Ticks run either explicitly (the deterministic test harness calls
+//! `tick()` by hand with `lease = ZERO`) or from a background monitor
+//! thread holding only a weak reference, the same lifecycle idiom as the
+//! WAL flusher.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, RwLock, Weak};
+use std::time::Duration;
+
+use crate::metrics::Counter;
+use crate::shard::NodeId;
+use crate::storage::Engine;
+use crate::{Error, Result};
+
+use super::replica::{PromotionReport, ReplicaSet};
+
+struct RegisteredNode {
+    id: NodeId,
+    name: String,
+    role: &'static str,
+    engine: Engine,
+    alive: AtomicBool,
+}
+
+/// Liveness snapshot of one node.
+#[derive(Clone, Debug)]
+pub struct NodeHealth {
+    pub id: NodeId,
+    pub name: String,
+    pub role: &'static str,
+    pub alive: bool,
+}
+
+/// Node registry + failure detector + promoter for one cluster.
+pub struct ControlPlane {
+    nodes: Vec<RegisteredNode>,
+    /// `(project token, set)` for every replicated shard in the cluster.
+    sets: RwLock<Vec<(String, Arc<ReplicaSet>)>>,
+    /// Failovers performed by this control plane (all projects).
+    pub promotions: Counter,
+    /// Ticks executed (probe rounds), for status/metrics.
+    pub ticks: Counter,
+    stop: AtomicBool,
+    monitor: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl ControlPlane {
+    /// Build the registry from the cluster's nodes.
+    pub fn new(nodes: Vec<(NodeId, String, &'static str, Engine)>) -> Arc<Self> {
+        Arc::new(ControlPlane {
+            nodes: nodes
+                .into_iter()
+                .map(|(id, name, role, engine)| RegisteredNode {
+                    id,
+                    name,
+                    role,
+                    engine,
+                    alive: AtomicBool::new(true),
+                })
+                .collect(),
+            sets: RwLock::new(Vec::new()),
+            promotions: Counter::default(),
+            ticks: Counter::default(),
+            stop: AtomicBool::new(false),
+            monitor: Mutex::new(None),
+        })
+    }
+
+    /// Track a project's replica sets (called at project creation).
+    pub fn register_sets(&self, token: &str, sets: &[Arc<ReplicaSet>]) {
+        let mut g = self.sets.write().unwrap();
+        for s in sets {
+            g.push((token.to_string(), Arc::clone(s)));
+        }
+    }
+
+    /// The replica sets registered for `token`, in shard order.
+    pub fn sets_for(&self, token: &str) -> Vec<Arc<ReplicaSet>> {
+        let mut out: Vec<Arc<ReplicaSet>> = self
+            .sets
+            .read()
+            .unwrap()
+            .iter()
+            .filter(|(t, _)| t == token)
+            .map(|(_, s)| Arc::clone(s))
+            .collect();
+        out.sort_by_key(|s| s.shard());
+        out
+    }
+
+    /// Every registered set as `(token, set)` pairs.
+    pub fn all_sets(&self) -> Vec<(String, Arc<ReplicaSet>)> {
+        self.sets.read().unwrap().clone()
+    }
+
+    /// Manually promote one shard of one project (the
+    /// `/cluster/failover/` handler). Fails when the project has no
+    /// replicas or no live follower.
+    pub fn failover(&self, token: &str, shard: usize) -> Result<PromotionReport> {
+        let sets = self.sets_for(token);
+        let set = sets
+            .iter()
+            .find(|s| s.shard() == shard)
+            .ok_or_else(|| Error::NotFound(format!("no replica set for {token} shard {shard}")))?;
+        let report = set.promote()?;
+        self.promotions.inc();
+        Ok(report)
+    }
+
+    /// One probe/repair/promote round. Returns the promotions performed.
+    pub fn tick(&self) -> Vec<PromotionReport> {
+        self.ticks.inc();
+        for n in &self.nodes {
+            let ok = n.engine.get("cluster/health", 0).is_ok();
+            n.alive.store(ok, Ordering::Release);
+        }
+        let mut out = Vec::new();
+        for (_, set) in self.all_sets() {
+            set.catch_up();
+            if set.num_members() < 2 {
+                continue;
+            }
+            if set.probe_leader() {
+                continue; // live leader renewed its lease
+            }
+            if !set.lease_expired() {
+                continue; // dead-looking, but still within its grace period
+            }
+            if let Ok(report) = set.promote() {
+                self.promotions.inc();
+                out.push(report);
+            }
+        }
+        out
+    }
+
+    /// Spawn the background monitor: `tick()` every `interval` until the
+    /// cluster (the owning `Arc`) is dropped or `shutdown` is called.
+    pub fn start_monitor(self: &Arc<Self>, interval: Duration) {
+        let weak: Weak<ControlPlane> = Arc::downgrade(self);
+        let handle = std::thread::Builder::new()
+            .name("ocpd-cluster-monitor".into())
+            .spawn(move || loop {
+                std::thread::sleep(interval);
+                let Some(cp) = weak.upgrade() else { break };
+                if cp.stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let _ = cp.tick();
+            })
+            .expect("spawn cluster monitor");
+        *self.monitor.lock().unwrap() = Some(handle);
+    }
+
+    /// Stop the monitor thread (idempotent). Never joins from within the
+    /// monitor itself — same self-join guard as the WAL flusher.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.monitor.lock().unwrap().take() {
+            if std::thread::current().id() != h.thread().id() {
+                let _ = h.join();
+            }
+        }
+    }
+
+    /// Per-node liveness, from the most recent tick (nodes start alive).
+    pub fn node_health(&self) -> Vec<NodeHealth> {
+        self.nodes
+            .iter()
+            .map(|n| NodeHealth {
+                id: n.id,
+                name: n.name.clone(),
+                role: n.role,
+                alive: n.alive.load(Ordering::Acquire),
+            })
+            .collect()
+    }
+
+    /// Human-readable cluster view — the `/cluster/status/` body.
+    pub fn status_text(&self) -> String {
+        let mut out = String::from("cluster:\n  nodes:\n");
+        for n in self.node_health() {
+            out.push_str(&format!(
+                "    {}: id={} role={} alive={}\n",
+                n.name, n.id, n.role, n.alive
+            ));
+        }
+        let sets = self.all_sets();
+        out.push_str(&format!(
+            "  control: ticks={} promotions={} replica_sets={}\n",
+            self.ticks.get(),
+            self.promotions.get(),
+            sets.len()
+        ));
+        let mut by_token: Vec<(String, Vec<Arc<ReplicaSet>>)> = Vec::new();
+        for (token, set) in sets {
+            match by_token.iter_mut().find(|(t, _)| *t == token) {
+                Some((_, v)) => v.push(set),
+                None => by_token.push((token, vec![set])),
+            }
+        }
+        for (token, mut project_sets) in by_token {
+            project_sets.sort_by_key(|s| s.shard());
+            out.push_str(&format!("  project {token}:\n"));
+            for set in project_sets {
+                let st = set.status();
+                let members: Vec<String> = st
+                    .replicas
+                    .iter()
+                    .map(|r| {
+                        format!(
+                            "node{}:lsn={}{}{}",
+                            r.node,
+                            r.applied_lsn,
+                            if r.is_leader { ":leader" } else { "" },
+                            if r.alive { "" } else { ":dead" }
+                        )
+                    })
+                    .collect();
+                out.push_str(&format!(
+                    "    shard {}: epoch={} leader=node{} lag={} failovers={} fenced={} \
+                     ships={} ship_errors={} [{}]\n",
+                    st.shard,
+                    st.epoch,
+                    st.leader,
+                    st.max_lag(),
+                    st.failovers,
+                    st.fenced,
+                    st.ships,
+                    st.ship_errors,
+                    members.join(", ")
+                ));
+            }
+        }
+        out
+    }
+}
+
+impl Drop for ControlPlane {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::replica::ReplicationConfig;
+    use crate::storage::{MemStore, SimulatedStore};
+
+    fn faulty_nodes(n: usize) -> Vec<(NodeId, String, &'static str, Engine)> {
+        (0..n)
+            .map(|i| {
+                let inner: Engine = Arc::new(MemStore::new());
+                let e: Engine = Arc::new(SimulatedStore::instant(inner, i as u64));
+                (i, format!("db{i}"), "database", e)
+            })
+            .collect()
+    }
+
+    fn replicated_set(nodes: &[(NodeId, String, &'static str, Engine)]) -> Arc<ReplicaSet> {
+        let members: Vec<(NodeId, Engine)> =
+            nodes.iter().map(|(id, _, _, e)| (*id, Arc::clone(e))).collect();
+        let cfg = ReplicationConfig { lease: Duration::ZERO, ..ReplicationConfig::default() };
+        ReplicaSet::new("p", 0, (0, u64::MAX), members, cfg).unwrap()
+    }
+
+    #[test]
+    fn tick_promotes_past_expired_lease_and_tracks_health() {
+        let nodes = faulty_nodes(3);
+        let set = replicated_set(&nodes);
+        let cp = ControlPlane::new(nodes.clone());
+        cp.register_sets("p", &[Arc::clone(&set)]);
+        set.apply(0, "p/t", &[(1, Some(b"v".to_vec()))]).unwrap();
+        assert!(cp.tick().is_empty(), "healthy leader must not be demoted");
+
+        nodes[0].3.fault_injector().unwrap().crash();
+        let reports = cp.tick();
+        assert_eq!(reports.len(), 1);
+        assert_eq!(reports[0].from, 0);
+        assert_eq!(cp.promotions.get(), 1);
+        let health = cp.node_health();
+        assert!(!health[0].alive);
+        assert!(health[1].alive && health[2].alive);
+        // Reads against the new epoch see the acked write.
+        let e = set.epoch();
+        assert_eq!(**set.get(e, "p/t", 1).unwrap().unwrap(), *b"v");
+        // Status text names the new leader and the dead node.
+        let txt = cp.status_text();
+        assert!(txt.contains("db0: id=0 role=database alive=false"), "{txt}");
+        assert!(txt.contains("epoch=1"), "{txt}");
+    }
+
+    #[test]
+    fn tick_revives_followers_and_manual_failover_routes_by_token() {
+        let nodes = faulty_nodes(2);
+        let set = replicated_set(&nodes);
+        let cp = ControlPlane::new(nodes.clone());
+        cp.register_sets("p", &[Arc::clone(&set)]);
+        set.apply(0, "p/t", &[(1, Some(b"a".to_vec()))]).unwrap();
+        nodes[1].3.fault_injector().unwrap().crash();
+        assert!(set.apply(0, "p/t", &[(2, Some(b"b".to_vec()))]).is_err());
+        nodes[1].3.fault_injector().unwrap().revive();
+        cp.tick();
+        assert_eq!(set.status().max_lag(), 0, "tick must catch the follower up");
+
+        assert!(cp.failover("nope", 0).is_err());
+        assert!(cp.failover("p", 9).is_err());
+        let r = cp.failover("p", 0).unwrap();
+        assert_eq!(r.to, 1);
+        assert_eq!(cp.sets_for("p").len(), 1);
+    }
+
+    #[test]
+    fn monitor_thread_promotes_without_explicit_ticks() {
+        let nodes = faulty_nodes(2);
+        let set = replicated_set(&nodes);
+        let cp = ControlPlane::new(nodes.clone());
+        cp.register_sets("p", &[Arc::clone(&set)]);
+        set.apply(0, "p/t", &[(7, Some(b"v".to_vec()))]).unwrap();
+        cp.start_monitor(Duration::from_millis(5));
+        nodes[0].3.fault_injector().unwrap().crash();
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while set.epoch() == 0 && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        cp.shutdown();
+        assert!(set.epoch() >= 1, "monitor should have promoted");
+        let e = set.epoch();
+        assert_eq!(**set.get(e, "p/t", 7).unwrap().unwrap(), *b"v");
+    }
+}

@@ -36,13 +36,29 @@
 //! cluster surfaces it at `GET /write/status/` and retunes every
 //! project's fan-out width via `PUT /write/workers/{n}/` / `ocpd
 //! write --workers N`.
+//!
+//! When built with [`ClusterConfig::replicas`] > 1, every image shard
+//! becomes a **replica set** ([`replica::ReplicaSet`]): the leader's
+//! mutation rounds are framed as CRC32 WAL chunks and shipped to
+//! followers, and a small **control plane** ([`control::ControlPlane`])
+//! probes nodes, renews leader leases, and promotes the most-caught-up
+//! follower when a leader dies — bumping the shard's epoch so stale
+//! readers are fenced (DESIGN.md §10). The surface is
+//! `GET /cluster/status/` / `ocpd cluster`.
 
+pub mod control;
+pub mod replica;
 mod sharded;
 
+pub use control::{ControlPlane, NodeHealth};
+pub use replica::{
+    PromotionReport, ReplicaSet, ReplicaSetStatus, ReplicaStatus, ReplicationConfig,
+};
 pub use sharded::ShardedEngine;
 
 use std::collections::HashMap;
 use std::sync::{Arc, RwLock};
+use std::time::Duration;
 
 use crate::annotation::AnnotationDb;
 use crate::chunkstore::{CacheConfig, CacheStatus, CuboidCache, CuboidStore};
@@ -51,7 +67,7 @@ use crate::cutout::{CutoutService, WriteConfig, WriteStatus};
 use crate::jobs::JobManager;
 use crate::obs::registry::{MetricsRegistry, Sample};
 use crate::shard::{NodeId, ShardMap};
-use crate::storage::{migrate, DeviceProfile, Engine, MemStore, SimulatedStore};
+use crate::storage::{migrate, DeviceProfile, Engine, FaultInjector, MemStore, SimulatedStore};
 use crate::wal::{Wal, WalConfig, WalEngine, WalStatus};
 use crate::{Error, Result};
 
@@ -101,6 +117,55 @@ pub struct Cluster {
     /// project, the jobs engine, and (when a server attaches) the HTTP
     /// transport register collectors here.
     registry: Arc<MetricsRegistry>,
+    /// Node registry, leases, and failover promotion (the
+    /// `/cluster/status/` surface). Present even for unreplicated
+    /// clusters — it then just reports node health.
+    control: Arc<ControlPlane>,
+    /// The topology knobs this cluster was built with.
+    cfg: ClusterConfig,
+}
+
+/// Topology and replication knobs for [`Cluster::with_config`].
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Database (cutout) nodes; clamped to at least 1.
+    pub n_database: usize,
+    /// SSD write-absorber nodes.
+    pub n_ssd: usize,
+    /// Copies per image shard (1 = the seed's unreplicated layout).
+    pub replicas: usize,
+    /// Follower acks required per write ([`ReplicationConfig::min_acks`]).
+    pub min_acks: usize,
+    /// Follower-read staleness bound, records
+    /// ([`ReplicationConfig::staleness_bound`]).
+    pub staleness_bound: Option<u64>,
+    /// Leader lease ([`ReplicationConfig::lease`]); `Duration::ZERO`
+    /// promotes on the first failed probe.
+    pub lease: Duration,
+    /// Run the background failure-detector thread.
+    pub monitor: bool,
+    /// Probe cadence of the monitor thread.
+    pub monitor_interval: Duration,
+    /// Wrap every node in a zero-latency [`SimulatedStore`] with
+    /// deterministic fault hooks seeded from `seed + node_id` — the
+    /// fault-injection test harness configuration.
+    pub fault_seed: Option<u64>,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            n_database: 2,
+            n_ssd: 1,
+            replicas: 1,
+            min_acks: usize::MAX,
+            staleness_bound: None,
+            lease: Duration::from_millis(500),
+            monitor: false,
+            monitor_interval: Duration::from_millis(50),
+            fault_seed: None,
+        }
+    }
 }
 
 /// Stable FNV-1a hash for SSD placement: a hot project's log node is
@@ -115,25 +180,46 @@ impl Cluster {
     /// A cluster whose nodes are plain in-memory engines (unit tests,
     /// "in cache" bench configurations).
     pub fn in_memory(n_database: usize, n_ssd: usize) -> Arc<Cluster> {
-        let mut nodes = Vec::new();
-        for i in 0..n_database.max(1) {
-            nodes.push(Node {
-                id: nodes.len(),
-                name: format!("db{i}"),
-                role: NodeRole::Database,
-                engine: Arc::new(MemStore::new()),
-            });
+        Self::with_config(ClusterConfig { n_database, n_ssd, ..ClusterConfig::default() })
+    }
+
+    /// An in-memory cluster with explicit topology/replication knobs —
+    /// the entry point of the failover test harness.
+    pub fn with_config(cfg: ClusterConfig) -> Arc<Cluster> {
+        let mut nodes: Vec<Node> = Vec::new();
+        let add = |nodes: &mut Vec<Node>, name: String, role: NodeRole| {
+            let id = nodes.len();
+            let mem: Engine = Arc::new(MemStore::new());
+            let engine: Engine = match cfg.fault_seed {
+                Some(seed) => Arc::new(SimulatedStore::instant(mem, seed + id as u64)),
+                None => mem,
+            };
+            nodes.push(Node { id, name, role, engine });
+        };
+        for i in 0..cfg.n_database.max(1) {
+            add(&mut nodes, format!("db{i}"), NodeRole::Database);
         }
-        for i in 0..n_ssd {
-            nodes.push(Node {
-                id: nodes.len(),
-                name: format!("ssd{i}"),
-                role: NodeRole::Ssd,
-                engine: Arc::new(MemStore::new()),
-            });
+        for i in 0..cfg.n_ssd {
+            add(&mut nodes, format!("ssd{i}"), NodeRole::Ssd);
         }
+        Self::assemble(nodes, cfg)
+    }
+
+    /// Shared tail of every constructor: jobs engine, metrics registry,
+    /// and the control plane (started when the config asks for the
+    /// monitor thread).
+    fn assemble(nodes: Vec<Node>, cfg: ClusterConfig) -> Arc<Cluster> {
         let jobs = Arc::new(JobManager::new(Arc::clone(&nodes[0].engine)));
         let registry = Self::new_registry(&jobs);
+        let control = ControlPlane::new(
+            nodes
+                .iter()
+                .map(|n| (n.id, n.name.clone(), Self::role_name(n.role), Arc::clone(&n.engine)))
+                .collect(),
+        );
+        if cfg.monitor {
+            control.start_monitor(cfg.monitor_interval);
+        }
         Arc::new(Cluster {
             nodes,
             datasets: RwLock::new(HashMap::new()),
@@ -143,7 +229,17 @@ impl Cluster {
             cache_cfg: CacheConfig::default(),
             jobs,
             registry,
+            control,
+            cfg,
         })
+    }
+
+    fn role_name(role: NodeRole) -> &'static str {
+        match role {
+            NodeRole::Database => "database",
+            NodeRole::Ssd => "ssd",
+            NodeRole::FileServer => "file",
+        }
     }
 
     /// A durable cluster: every node is a [`crate::storage::FileStore`]
@@ -176,18 +272,10 @@ impl Cluster {
                     as Engine,
             });
         }
-        let jobs = Arc::new(JobManager::new(Arc::clone(&nodes[0].engine)));
-        let registry = Self::new_registry(&jobs);
-        Ok(Arc::new(Cluster {
+        Ok(Self::assemble(
             nodes,
-            datasets: RwLock::new(HashMap::new()),
-            projects: RwLock::new(HashMap::new()),
-            wals: RwLock::new(HashMap::new()),
-            caches: RwLock::new(HashMap::new()),
-            cache_cfg: CacheConfig::default(),
-            jobs,
-            registry,
-        }))
+            ClusterConfig { n_database, n_ssd, ..ClusterConfig::default() },
+        ))
     }
 
     /// A cluster with simulated device economics: database nodes behind
@@ -219,18 +307,7 @@ impl Cluster {
                 )) as Engine,
             });
         }
-        let jobs = Arc::new(JobManager::new(Arc::clone(&nodes[0].engine)));
-        let registry = Self::new_registry(&jobs);
-        Arc::new(Cluster {
-            nodes,
-            datasets: RwLock::new(HashMap::new()),
-            projects: RwLock::new(HashMap::new()),
-            wals: RwLock::new(HashMap::new()),
-            caches: RwLock::new(HashMap::new()),
-            cache_cfg: CacheConfig::default(),
-            jobs,
-            registry,
-        })
+        Self::assemble(nodes, ClusterConfig { n_database, n_ssd, ..ClusterConfig::default() })
     }
 
     /// Build the cluster's metrics registry with the jobs collector
@@ -344,10 +421,47 @@ impl Cluster {
         let g = ds.level(0)?.grid();
         let total_keys = (g[0].max(g[1]).max(g[2]).next_power_of_two()).pow(3);
         let map = ShardMap::even(total_keys, db_nodes.clone())?;
-        let engines: Vec<Engine> =
-            self.nodes.iter().map(|n| Arc::clone(&n.engine)).collect();
-        let engine: Engine = Arc::new(ShardedEngine::new(map, engines));
         let cache = Arc::new(CuboidCache::new(self.cache_cfg));
+        let replicas = self.cfg.replicas.min(db_nodes.len());
+        let engine: Engine = if replicas > 1 {
+            // Replica sets: shard i's leader is its map node; followers
+            // are the next `replicas - 1` database nodes, round-robin.
+            let rcfg = ReplicationConfig {
+                min_acks: self.cfg.min_acks,
+                staleness_bound: self.cfg.staleness_bound,
+                lease: self.cfg.lease,
+                ..ReplicationConfig::default()
+            };
+            let mut sets = Vec::with_capacity(map.num_shards());
+            for (shard, &leader) in map.nodes().iter().enumerate() {
+                let li = db_nodes.iter().position(|&n| n == leader).unwrap_or(0);
+                let members: Vec<(NodeId, Engine)> = (0..replicas)
+                    .map(|j| {
+                        let node = db_nodes[(li + j) % db_nodes.len()];
+                        (node, Arc::clone(&self.nodes[node].engine))
+                    })
+                    .collect();
+                let set = ReplicaSet::new(
+                    &project.token,
+                    shard,
+                    map.shard_range(shard),
+                    members,
+                    rcfg.clone(),
+                )?;
+                // A promotion may strand cuboids cached under the old
+                // leader's view; clear rather than chase them.
+                let hook_cache = Arc::clone(&cache);
+                set.set_on_promote(Some(Arc::new(move |_epoch| hook_cache.clear())));
+                sets.push(set);
+            }
+            self.control.register_sets(&project.token, &sets);
+            self.register_replication_metrics(&project.token, &sets);
+            Arc::new(ShardedEngine::replicated(map, sets)?) as Engine
+        } else {
+            let engines: Vec<Engine> =
+                self.nodes.iter().map(|n| Arc::clone(&n.engine)).collect();
+            Arc::new(ShardedEngine::new(map, engines)) as Engine
+        };
         let store = Arc::new(
             CuboidStore::new(ds, Arc::new(project.clone()), engine)
                 .with_cache(Arc::clone(&cache)),
@@ -388,6 +502,12 @@ impl Cluster {
             let i = placement_hash(&project.token) as usize % ssd.len();
             let log = Arc::clone(&self.nodes[ssd[i]].engine);
             let wal = Wal::open(&project.token, log, dest, WalConfig::default())?;
+            // Mirror the durable log onto other SSD nodes so a dead log
+            // node doesn't take unflushed frames with it.
+            for j in 1..self.cfg.replicas.min(ssd.len()) {
+                let node = ssd[(i + j) % ssd.len()];
+                wal.add_follower(Arc::clone(&self.nodes[node].engine))?;
+            }
             self.wals.write().unwrap().insert(project.token.clone(), Arc::clone(&wal));
             (Arc::new(WalEngine::new(Arc::clone(&wal))) as Engine, Some(wal))
         } else {
@@ -552,6 +672,35 @@ impl Cluster {
     }
 
     // ------------------------------------------------------------------
+    // Replication control plane
+    // ------------------------------------------------------------------
+
+    /// The control plane: node health, replica-set registry, leases,
+    /// and failover promotion.
+    pub fn control(&self) -> &Arc<ControlPlane> {
+        &self.control
+    }
+
+    /// Human-readable cluster health (the `GET /cluster/status/` route
+    /// and `ocpd cluster`).
+    pub fn cluster_status(&self) -> String {
+        self.control.status_text()
+    }
+
+    /// Force a leader promotion on one project shard (`POST
+    /// /cluster/failover/{token}/{shard}/`).
+    pub fn failover(&self, token: &str, shard: usize) -> Result<PromotionReport> {
+        self.control.failover(token, shard)
+    }
+
+    /// Deterministic fault hooks of one node, when the cluster was
+    /// built with [`ClusterConfig::fault_seed`] — the kill-a-replica
+    /// test harness.
+    pub fn fault(&self, node: NodeId) -> Option<&FaultInjector> {
+        self.nodes.get(node)?.engine.fault_injector()
+    }
+
+    // ------------------------------------------------------------------
     // Batch compute jobs
     // ------------------------------------------------------------------
 
@@ -706,6 +855,16 @@ impl Cluster {
                         "Torn WAL frames dropped.",
                         m.truncated_chunks.get(),
                     ),
+                    (
+                        "ocpd_wal_shipped_chunks_total",
+                        "WAL chunks mirrored to follower logs.",
+                        m.shipped_chunks.get(),
+                    ),
+                    (
+                        "ocpd_wal_ship_errors_total",
+                        "Failed WAL chunk ships (follower marked lagging).",
+                        m.ship_errors.get(),
+                    ),
                 ] {
                     let pair = p();
                     out.push(Sample::counter(name, help, v).label(pair.0, pair.1));
@@ -728,6 +887,47 @@ impl Cluster {
                     )
                     .label(pair.0, pair.1),
                 );
+            }
+        });
+    }
+
+    /// Register one replicated project's replica-set collector: epoch,
+    /// lag, failover, and ship counters per shard.
+    fn register_replication_metrics(&self, token: &str, sets: &[Arc<ReplicaSet>]) {
+        let project = token.to_string();
+        let sets: Vec<Arc<ReplicaSet>> = sets.to_vec();
+        self.registry.register(format!("replication/{token}"), move |out| {
+            for set in &sets {
+                let st = set.status();
+                let shard = st.shard.to_string();
+                let labeled = |s: Sample| {
+                    s.label("project", project.clone()).label("shard", shard.clone())
+                };
+                out.push(labeled(Sample::gauge(
+                    "ocpd_replication_epoch",
+                    "Current epoch of the shard's replica set.",
+                    st.epoch,
+                )));
+                out.push(labeled(Sample::gauge(
+                    "ocpd_replication_lag_records",
+                    "Leader-to-slowest-replica lag, records.",
+                    st.max_lag(),
+                )));
+                out.push(labeled(Sample::counter(
+                    "ocpd_failovers_total",
+                    "Leader promotions on this shard.",
+                    st.failovers,
+                )));
+                out.push(labeled(Sample::counter(
+                    "ocpd_replication_ships_total",
+                    "Replication chunks shipped to followers.",
+                    st.ships,
+                )));
+                out.push(labeled(Sample::counter(
+                    "ocpd_replication_ship_errors_total",
+                    "Failed follower ships (follower marked dead).",
+                    st.ship_errors,
+                )));
             }
         });
     }
@@ -1078,6 +1278,39 @@ mod tests {
             "flush must invalidate drained keys"
         );
         assert_eq!(db.cutout.read::<u32>(0, 0, 0, bx).unwrap(), v, "post-flush read fresh");
+    }
+
+    #[test]
+    fn replicated_cluster_promotes_past_dead_leader() {
+        let c = Cluster::with_config(ClusterConfig {
+            n_database: 3,
+            n_ssd: 1,
+            replicas: 2,
+            lease: Duration::ZERO,
+            fault_seed: Some(7),
+            ..ClusterConfig::default()
+        });
+        c.register_dataset(DatasetBuilder::new("ds", [256, 256, 32]).levels(2).build());
+        let svc = c.create_image_project(Project::image("img", "ds")).unwrap();
+        let whole = Box3::new([0, 0, 0], [256, 256, 32]);
+        let mut v = DenseVolume::<u8>::zeros(whole.extent());
+        v.fill_box(whole, 7);
+        svc.write(0, 0, 0, whole, &v).unwrap();
+        // Kill shard 0's leader; one control-plane tick promotes.
+        let sets = c.control().sets_for("img");
+        assert!(sets.iter().all(|s| s.num_members() == 2), "every shard replicated");
+        let victim = sets[0].leader_node();
+        c.fault(victim).unwrap().crash();
+        let promoted = c.control().tick();
+        assert!(promoted.iter().any(|r| r.from == victim), "dead leader not promoted away");
+        assert_ne!(sets[0].leader_node(), victim);
+        // Every acked write still reads back, through the new leader.
+        assert_eq!(svc.read::<u8>(0, 0, 0, whole).unwrap(), v);
+        // The status surface names the project; bad failover targets error.
+        let status = c.cluster_status();
+        assert!(status.contains("project img"), "{status}");
+        assert!(c.failover("nope", 0).is_err());
+        assert!(c.fault(victim).is_some());
     }
 
     #[test]

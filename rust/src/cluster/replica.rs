@@ -1,0 +1,887 @@
+//! Replica sets: leader + N followers per shard, shipping the WAL's
+//! CRC32-framed records as the replication log (DESIGN.md §10).
+//!
+//! Every mutation round on a shard is framed exactly like a WAL
+//! group-commit chunk ([`crate::wal::record::WalRecord`]): the leader
+//! applies it, ships the framed chunk to each live follower (which
+//! decodes and applies it whole, in LSN order), and acknowledges the
+//! write only once `min_acks` followers have it. A bounded ring of
+//! recent chunks lets a briefly-dead follower replay its way back;
+//! anything older falls back to a key-range-scoped full resync.
+//!
+//! Failure handling is epoch-fenced: promotion bumps the set's epoch
+//! under the same lock that serializes shipping, so a routed operation
+//! carrying a stale epoch gets [`Error::Fenced`] instead of touching a
+//! demoted leader — the same generation-counter protocol the cuboid
+//! cache uses against stale inserts.
+
+use std::collections::{BTreeMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+use crate::metrics::Counter;
+use crate::obs::trace;
+use crate::shard::NodeId;
+use crate::storage::{Blob, Engine};
+use crate::wal::record::{decode_chunk, WalRecord};
+use crate::{Error, Result};
+
+/// Durability and freshness knobs for one replica set.
+#[derive(Clone, Debug)]
+pub struct ReplicationConfig {
+    /// Follower acknowledgements required before a write is acked
+    /// (clamped to the follower count; the default `usize::MAX` means
+    /// "every follower that is currently alive").
+    pub min_acks: usize,
+    /// Permit follower reads lagging the leader by at most this many
+    /// records; `None` routes every read to the leader.
+    pub staleness_bound: Option<u64>,
+    /// Grace period after the last successful leader contact before the
+    /// control plane may promote. `Duration::ZERO` promotes on the first
+    /// failed probe — the deterministic-test setting.
+    pub lease: Duration,
+    /// Recent chunks retained for follower catch-up; beyond this the
+    /// follower takes a full resync.
+    pub retain_chunks: usize,
+}
+
+impl Default for ReplicationConfig {
+    fn default() -> Self {
+        ReplicationConfig {
+            min_acks: usize::MAX,
+            staleness_bound: None,
+            lease: Duration::from_millis(500),
+            retain_chunks: 64,
+        }
+    }
+}
+
+/// One copy of the shard: a node, its engine, and how far it has applied.
+struct Replica {
+    node: NodeId,
+    engine: Engine,
+    applied_lsn: AtomicU64,
+    alive: AtomicBool,
+}
+
+/// Replication counters, shared with the metrics registry.
+#[derive(Debug, Default)]
+pub struct ReplicaMetrics {
+    /// Chunks successfully applied on a follower.
+    pub ships: Counter,
+    /// Failed follower applies (the follower is marked dead).
+    pub ship_errors: Counter,
+    /// Leadership changes on this set.
+    pub failovers: Counter,
+    /// Operations refused with a stale epoch.
+    pub fenced: Counter,
+    /// Followers replayed back to currency from the retained ring.
+    pub catch_ups: Counter,
+    /// Followers rebuilt by full key-range resync.
+    pub resyncs: Counter,
+    /// Reads served by a follower within the staleness bound.
+    pub follower_reads: Counter,
+}
+
+/// A framed mutation round kept for follower catch-up.
+struct Retained {
+    first_lsn: u64,
+    last_lsn: u64,
+    chunk: Vec<u8>,
+}
+
+/// What a promotion did — surfaced by `/cluster/status/` and the tests.
+#[derive(Clone, Debug)]
+pub struct PromotionReport {
+    pub shard: usize,
+    pub from: NodeId,
+    pub to: NodeId,
+    /// The epoch after the bump; readers holding anything older are fenced.
+    pub epoch: u64,
+    /// Records the old leader had that the new one does not (unacked
+    /// writes that died with it).
+    pub lost_lsns: u64,
+}
+
+/// Point-in-time view of one replica.
+#[derive(Clone, Debug)]
+pub struct ReplicaStatus {
+    pub node: NodeId,
+    pub applied_lsn: u64,
+    pub alive: bool,
+    pub is_leader: bool,
+    /// Records behind the leader.
+    pub lag: u64,
+}
+
+/// Point-in-time view of one replica set.
+#[derive(Clone, Debug)]
+pub struct ReplicaSetStatus {
+    pub shard: usize,
+    pub epoch: u64,
+    pub leader: NodeId,
+    pub next_lsn: u64,
+    pub replicas: Vec<ReplicaStatus>,
+    pub retained_chunks: usize,
+    pub failovers: u64,
+    pub fenced: u64,
+    pub ships: u64,
+    pub ship_errors: u64,
+}
+
+impl ReplicaSetStatus {
+    /// Worst follower lag, in records.
+    pub fn max_lag(&self) -> u64 {
+        self.replicas.iter().map(|r| r.lag).max().unwrap_or(0)
+    }
+}
+
+/// Borrowed view of one mutation round, in each of the three shapes the
+/// storage trait produces — lets the solo fast path and the leader apply
+/// run straight off the caller's slices with no intermediate copies.
+enum MutRef<'a> {
+    Puts(&'a [(u64, Vec<u8>)]),
+    Deletes(&'a [u64]),
+    Mixed(&'a [(u64, Option<Vec<u8>>)]),
+}
+
+impl MutRef<'_> {
+    fn len(&self) -> usize {
+        match self {
+            MutRef::Puts(v) => v.len(),
+            MutRef::Deletes(v) => v.len(),
+            MutRef::Mixed(v) => v.len(),
+        }
+    }
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Frame the round as CRC32 WAL records starting at `first_lsn` —
+    /// the chunk shipped to followers and retained for catch-up.
+    fn frame(&self, table: &str, first_lsn: u64) -> Vec<u8> {
+        let mut chunk = Vec::new();
+        let mut lsn = first_lsn;
+        let mut push = |key: u64, value: Option<Vec<u8>>| {
+            WalRecord { lsn, table: table.to_string(), key, value }.encode_into(&mut chunk);
+            lsn += 1;
+        };
+        match self {
+            MutRef::Puts(items) => {
+                for (k, v) in *items {
+                    push(*k, Some(v.clone()));
+                }
+            }
+            MutRef::Deletes(keys) => {
+                for &k in *keys {
+                    push(k, None);
+                }
+            }
+            MutRef::Mixed(muts) => {
+                for (k, v) in *muts {
+                    push(*k, v.clone());
+                }
+            }
+        }
+        chunk
+    }
+
+    /// Apply the round directly to one engine.
+    fn apply_to(&self, engine: &Engine, table: &str) -> Result<()> {
+        match self {
+            MutRef::Puts(items) => engine.put_batch(table, items),
+            MutRef::Deletes(keys) => engine.delete_batch(table, keys),
+            MutRef::Mixed(muts) => ReplicaSet::apply_grouped(engine, table, muts),
+        }
+    }
+}
+
+/// Leader + followers for one shard of one project.
+///
+/// All mutation, shipping, catch-up, and promotion serialize on one
+/// internal lock, so followers observe whole rounds in order and a
+/// promotion can never interleave with a half-shipped write.
+pub struct ReplicaSet {
+    scope: String,
+    shard: usize,
+    /// Key range `[lo, hi)` this shard owns (`hi == u64::MAX` open-ended)
+    /// — bounds full resyncs so shared node engines don't bleed other
+    /// shards' data across replicas.
+    range: (u64, u64),
+    members: Vec<Replica>,
+    leader: AtomicUsize,
+    epoch: AtomicU64,
+    next_lsn: AtomicU64,
+    ship_lock: Mutex<()>,
+    retained: Mutex<VecDeque<Retained>>,
+    lease_expiry: Mutex<Instant>,
+    cfg: ReplicationConfig,
+    on_promote: RwLock<Option<Arc<dyn Fn(u64) + Send + Sync>>>,
+    read_rr: AtomicUsize,
+    pub metrics: Arc<ReplicaMetrics>,
+}
+
+impl ReplicaSet {
+    /// Build a set whose leader is `members[0]`. `scope` is the project
+    /// token (resyncs only touch `scope/...` tables); `range` the key
+    /// span this shard owns.
+    pub fn new(
+        scope: &str,
+        shard: usize,
+        range: (u64, u64),
+        members: Vec<(NodeId, Engine)>,
+        cfg: ReplicationConfig,
+    ) -> Result<Arc<Self>> {
+        if members.is_empty() {
+            return Err(Error::Cluster("replica set needs >= 1 member".into()));
+        }
+        let members = members
+            .into_iter()
+            .map(|(node, engine)| Replica {
+                node,
+                engine,
+                applied_lsn: AtomicU64::new(0),
+                alive: AtomicBool::new(true),
+            })
+            .collect();
+        let lease = cfg.lease;
+        Ok(Arc::new(ReplicaSet {
+            scope: scope.to_string(),
+            shard,
+            range,
+            members,
+            leader: AtomicUsize::new(0),
+            epoch: AtomicU64::new(0),
+            next_lsn: AtomicU64::new(1),
+            ship_lock: Mutex::new(()),
+            retained: Mutex::new(VecDeque::new()),
+            lease_expiry: Mutex::new(Instant::now() + lease),
+            cfg,
+            on_promote: RwLock::new(None),
+            read_rr: AtomicUsize::new(0),
+            metrics: Arc::new(ReplicaMetrics::default()),
+        }))
+    }
+
+    /// An unreplicated (single-member) set — the seed topology. Framing
+    /// and shipping are skipped entirely on the write path.
+    pub fn solo(shard: usize, node: NodeId, engine: Engine) -> Arc<Self> {
+        Self::new("", shard, (0, u64::MAX), vec![(node, engine)], ReplicationConfig::default())
+            .expect("one member is always valid")
+    }
+
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// Current shard-map epoch; bumped by every promotion.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    pub fn num_members(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn leader_node(&self) -> NodeId {
+        self.members[self.leader_idx()].node
+    }
+
+    /// Run `hook(new_epoch)` after every promotion (the cluster fences
+    /// the project's cuboid cache here).
+    pub fn set_on_promote(&self, hook: Option<Arc<dyn Fn(u64) + Send + Sync>>) {
+        *self.on_promote.write().unwrap() = hook;
+    }
+
+    fn leader_idx(&self) -> usize {
+        self.leader.load(Ordering::Acquire)
+    }
+
+    /// Refuse the operation if `held` is not the current epoch.
+    fn fence(&self, held: u64) -> Result<()> {
+        let current = self.epoch.load(Ordering::Acquire);
+        if held != current {
+            self.metrics.fenced.inc();
+            return Err(Error::Fenced { held, current });
+        }
+        Ok(())
+    }
+
+    fn renew_lease(&self) {
+        *self.lease_expiry.lock().unwrap() = Instant::now() + self.cfg.lease;
+    }
+
+    /// True once the leader's grace period has run out.
+    pub fn lease_expired(&self) -> bool {
+        Instant::now() >= *self.lease_expiry.lock().unwrap()
+    }
+
+    /// Cheap liveness check: any read the engine can answer.
+    fn probe(engine: &Engine) -> bool {
+        engine.get("cluster/health", 0).is_ok()
+    }
+
+    /// Probe the current leader; a successful probe renews its lease.
+    pub fn probe_leader(&self) -> bool {
+        let idx = self.leader_idx();
+        let ok = Self::probe(&self.members[idx].engine);
+        if ok {
+            self.members[idx].alive.store(true, Ordering::Release);
+            self.renew_lease();
+        }
+        ok
+    }
+
+    /// Replicate a batch of puts. Equivalent to [`ReplicaSet::apply`]
+    /// with all-`Some` values, without the intermediate copies (this is
+    /// the cutout write path's shape).
+    pub fn put_batch(&self, held: u64, table: &str, items: &[(u64, Vec<u8>)]) -> Result<()> {
+        self.mutate(held, table, MutRef::Puts(items))
+    }
+
+    /// Replicate a batch of deletes (absent keys are no-ops).
+    pub fn delete_batch(&self, held: u64, table: &str, keys: &[u64]) -> Result<()> {
+        self.mutate(held, table, MutRef::Deletes(keys))
+    }
+
+    /// Apply one mixed mutation round (`value: None` deletes).
+    pub fn apply(&self, held: u64, table: &str, muts: &[(u64, Option<Vec<u8>>)]) -> Result<()> {
+        self.mutate(held, table, MutRef::Mixed(muts))
+    }
+
+    /// The write path shared by every mutation shape: leader first, then
+    /// ship the framed chunk to every live follower. An error means the
+    /// round is *unacknowledged* — on a leader failure the followers
+    /// never saw it (fully absent); on an under-replication failure it
+    /// is applied but the caller must treat it as unacked.
+    fn mutate(&self, held: u64, table: &str, muts: MutRef<'_>) -> Result<()> {
+        if muts.is_empty() {
+            return Ok(());
+        }
+        self.fence(held)?;
+        if self.members.len() == 1 {
+            // Solo fast path: no framing, no shipping — seed behavior.
+            return muts.apply_to(&self.members[self.leader_idx()].engine, table);
+        }
+        let _g = self.ship_lock.lock().unwrap();
+        // Promotion bumps the epoch under this same lock — check again.
+        self.fence(held)?;
+        let leader_idx = self.leader_idx();
+
+        // Frame the round once: the same CRC32 frames the WAL commits.
+        let first_lsn = self.next_lsn.load(Ordering::Relaxed);
+        let last_lsn = first_lsn + muts.len() as u64 - 1;
+        let chunk = muts.frame(table, first_lsn);
+
+        // Leader applies first; if it is down the round dies here and no
+        // follower ever sees it.
+        let leader = &self.members[leader_idx];
+        if let Err(e) = muts.apply_to(&leader.engine, table) {
+            if matches!(e, Error::NodeDown(_)) {
+                leader.alive.store(false, Ordering::Release);
+            }
+            return Err(e);
+        }
+        self.next_lsn.store(last_lsn + 1, Ordering::Relaxed);
+        leader.applied_lsn.store(last_lsn, Ordering::Release);
+        self.renew_lease();
+
+        // Ship to followers, in member order; a failed apply marks the
+        // follower dead until the control plane catches it back up.
+        let mut live = 0usize;
+        let mut acks = 0usize;
+        for (i, m) in self.members.iter().enumerate() {
+            if i == leader_idx {
+                continue;
+            }
+            if !m.alive.load(Ordering::Acquire) {
+                continue;
+            }
+            live += 1;
+            match Self::apply_chunk(&m.engine, &chunk) {
+                Ok(applied) => {
+                    m.applied_lsn.store(applied, Ordering::Release);
+                    acks += 1;
+                    self.metrics.ships.inc();
+                }
+                Err(_) => {
+                    m.alive.store(false, Ordering::Release);
+                    self.metrics.ship_errors.inc();
+                }
+            }
+        }
+        self.retain(first_lsn, last_lsn, chunk);
+        // Default `min_acks` (usize::MAX) means "every live follower";
+        // an explicit value is a hard floor that dead followers do not
+        // excuse — degraded durability surfaces as an error.
+        let required = if self.cfg.min_acks == usize::MAX {
+            live
+        } else {
+            self.cfg.min_acks.min(self.members.len() - 1)
+        };
+        if acks < required {
+            return Err(Error::Cluster(format!(
+                "shard {}: write under-replicated ({acks}/{required} follower acks)",
+                self.shard
+            )));
+        }
+        Ok(())
+    }
+
+    /// Apply a round directly to one engine, grouping puts and deletes
+    /// into the engine's batch calls.
+    fn apply_grouped(engine: &Engine, table: &str, muts: &[(u64, Option<Vec<u8>>)]) -> Result<()> {
+        let mut puts: Vec<(u64, Vec<u8>)> = Vec::new();
+        let mut dels: Vec<u64> = Vec::new();
+        for (key, value) in muts {
+            match value {
+                Some(v) => puts.push((*key, v.clone())),
+                None => dels.push(*key),
+            }
+        }
+        if !puts.is_empty() {
+            engine.put_batch(table, &puts)?;
+        }
+        if !dels.is_empty() {
+            engine.delete_batch(table, &dels)?;
+        }
+        Ok(())
+    }
+
+    /// Decode a framed chunk and apply it whole to a follower engine.
+    /// Returns the highest LSN applied.
+    fn apply_chunk(engine: &Engine, chunk: &[u8]) -> Result<u64> {
+        let d = decode_chunk(chunk);
+        if !d.clean {
+            return Err(Error::Codec("torn replication chunk".into()));
+        }
+        let mut last = 0u64;
+        let mut by_table: BTreeMap<String, Vec<(u64, Option<Vec<u8>>)>> = BTreeMap::new();
+        for r in d.records {
+            last = last.max(r.lsn);
+            by_table.entry(r.table).or_default().push((r.key, r.value));
+        }
+        for (table, muts) in by_table {
+            Self::apply_grouped(engine, &table, &muts)?;
+        }
+        Ok(last)
+    }
+
+    fn retain(&self, first_lsn: u64, last_lsn: u64, chunk: Vec<u8>) {
+        let mut r = self.retained.lock().unwrap();
+        r.push_back(Retained { first_lsn, last_lsn, chunk });
+        while r.len() > self.cfg.retain_chunks.max(1) {
+            r.pop_front();
+        }
+    }
+
+    /// Pick the replica to serve a read: the leader unless a staleness
+    /// bound admits followers, in which case round-robin over every
+    /// in-bound live replica. Returns `(index, served_by_follower)`.
+    fn read_replica(&self) -> (usize, bool) {
+        let leader = self.leader_idx();
+        let Some(bound) = self.cfg.staleness_bound else {
+            return (leader, false);
+        };
+        if self.members.len() == 1 {
+            return (leader, false);
+        }
+        let head = self.members[leader].applied_lsn.load(Ordering::Acquire);
+        let candidates: Vec<usize> = self
+            .members
+            .iter()
+            .enumerate()
+            .filter(|(_, m)| {
+                m.alive.load(Ordering::Acquire)
+                    && head.saturating_sub(m.applied_lsn.load(Ordering::Acquire)) <= bound
+            })
+            .map(|(i, _)| i)
+            .collect();
+        if candidates.is_empty() {
+            return (leader, false);
+        }
+        let pick = candidates[self.read_rr.fetch_add(1, Ordering::Relaxed) % candidates.len()];
+        (pick, pick != leader)
+    }
+
+    fn reader(&self) -> &Engine {
+        let (idx, follower) = self.read_replica();
+        if follower {
+            self.metrics.follower_reads.inc();
+        }
+        &self.members[idx].engine
+    }
+
+    pub fn get(&self, held: u64, table: &str, key: u64) -> Result<Option<Blob>> {
+        self.fence(held)?;
+        self.reader().get(table, key)
+    }
+
+    pub fn get_batch(&self, held: u64, table: &str, keys: &[u64]) -> Result<Vec<Option<Blob>>> {
+        self.fence(held)?;
+        self.reader().get_batch(table, keys)
+    }
+
+    pub fn get_run(&self, held: u64, table: &str, start: u64, len: u64) -> Result<Vec<(u64, Blob)>> {
+        self.fence(held)?;
+        self.reader().get_run(table, start, len)
+    }
+
+    pub fn keys(&self, held: u64, table: &str) -> Result<Vec<u64>> {
+        self.fence(held)?;
+        self.reader().keys(table)
+    }
+
+    pub fn tables(&self, held: u64) -> Result<Vec<String>> {
+        self.fence(held)?;
+        self.reader().tables()
+    }
+
+    pub fn sync(&self) -> Result<()> {
+        let idx = self.leader_idx();
+        self.members[idx].engine.sync()
+    }
+
+    /// Promote the most-caught-up live follower to leader, bumping the
+    /// epoch so operations routed with the old shard-map view are fenced.
+    /// The old leader is marked dead; if it comes back it rejoins as a
+    /// follower via catch-up (divergent unacked writes are resynced away).
+    pub fn promote(&self) -> Result<PromotionReport> {
+        let _g = self.ship_lock.lock().unwrap();
+        let old = self.leader_idx();
+        let mut best: Option<usize> = None;
+        for (i, m) in self.members.iter().enumerate() {
+            if i == old {
+                continue;
+            }
+            if !Self::probe(&m.engine) {
+                m.alive.store(false, Ordering::Release);
+                continue;
+            }
+            // A probe-ok member is a candidate, but a dead-marked one is
+            // NOT flipped alive here — it may have a replication gap that
+            // only `catch_up` can close. Only the member we actually
+            // promote becomes authoritative (its copy defines the head).
+            let lsn = m.applied_lsn.load(Ordering::Acquire);
+            let better = match best {
+                None => true,
+                Some(b) => lsn > self.members[b].applied_lsn.load(Ordering::Acquire),
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        let Some(new) = best else {
+            return Err(Error::Cluster(format!(
+                "shard {}: no live follower to promote",
+                self.shard
+            )));
+        };
+        let mut sp = trace::span("cluster", "promote");
+        self.members[old].alive.store(false, Ordering::Release);
+        self.members[new].alive.store(true, Ordering::Release);
+        self.leader.store(new, Ordering::Release);
+        let epoch = self.epoch.fetch_add(1, Ordering::AcqRel) + 1;
+        let new_lsn = self.members[new].applied_lsn.load(Ordering::Acquire);
+        let lost = self.next_lsn.load(Ordering::Relaxed).saturating_sub(1).saturating_sub(new_lsn);
+        // The new leader's applied LSN is the head now; unacked rounds
+        // beyond it are gone, so LSN assignment resumes right after it.
+        self.next_lsn.store(new_lsn + 1, Ordering::Relaxed);
+        self.metrics.failovers.inc();
+        self.renew_lease();
+        sp.tag("shard", self.shard.to_string());
+        sp.tag("from_node", self.members[old].node.to_string());
+        sp.tag("to_node", self.members[new].node.to_string());
+        sp.tag("epoch", epoch.to_string());
+        let hook = self.on_promote.read().unwrap().clone();
+        if let Some(h) = hook {
+            h(epoch);
+        }
+        Ok(PromotionReport {
+            shard: self.shard,
+            from: self.members[old].node,
+            to: self.members[new].node,
+            epoch,
+            lost_lsns: lost,
+        })
+    }
+
+    /// Bring dead-marked followers whose nodes answer probes back into
+    /// the set: replay retained chunks when they cover the gap, else a
+    /// key-range-scoped full resync from the leader. Divergent followers
+    /// (a demoted leader carrying unacked writes) are always resynced.
+    pub fn catch_up(&self) {
+        let leader_idx = self.leader_idx();
+        let any_dead = self
+            .members
+            .iter()
+            .enumerate()
+            .any(|(i, m)| i != leader_idx && !m.alive.load(Ordering::Acquire));
+        if !any_dead {
+            return;
+        }
+        let _g = self.ship_lock.lock().unwrap();
+        let leader_idx = self.leader_idx();
+        let head = self.members[leader_idx].applied_lsn.load(Ordering::Acquire);
+        for (i, m) in self.members.iter().enumerate() {
+            if i == leader_idx || m.alive.load(Ordering::Acquire) {
+                continue;
+            }
+            if !Self::probe(&m.engine) {
+                continue;
+            }
+            let from = m.applied_lsn.load(Ordering::Acquire);
+            let diverged = from > head;
+            let covered = {
+                let r = self.retained.lock().unwrap();
+                from >= head || r.front().is_some_and(|c| c.first_lsn <= from + 1)
+            };
+            let ok = if !diverged && covered {
+                self.replay_retained(m, from)
+            } else {
+                self.resync(&self.members[leader_idx].engine, m).is_ok()
+            };
+            if ok {
+                m.applied_lsn.store(head, Ordering::Release);
+                m.alive.store(true, Ordering::Release);
+            }
+        }
+    }
+
+    /// Replay retained chunks past `from` onto a follower.
+    fn replay_retained(&self, m: &Replica, from: u64) -> bool {
+        let r = self.retained.lock().unwrap();
+        for c in r.iter() {
+            if c.last_lsn <= from {
+                continue;
+            }
+            if Self::apply_chunk(&m.engine, &c.chunk).is_err() {
+                return false;
+            }
+        }
+        self.metrics.catch_ups.inc();
+        true
+    }
+
+    /// Rebuild a follower's copy of this shard from the leader: copy
+    /// every in-range key of every in-scope table, delete in-range keys
+    /// the leader no longer holds.
+    fn resync(&self, leader: &Engine, m: &Replica) -> Result<()> {
+        let (lo, hi) = self.range;
+        let in_range = |k: u64| k >= lo && (k < hi || hi == u64::MAX);
+        let prefix = format!("{}/", self.scope);
+        for table in leader.tables()? {
+            if !self.scope.is_empty() && !table.starts_with(&prefix) {
+                continue;
+            }
+            let keep: Vec<u64> = leader.keys(&table)?.into_iter().filter(|&k| in_range(k)).collect();
+            let keep_set: HashSet<u64> = keep.iter().copied().collect();
+            let stale: Vec<u64> = m
+                .engine
+                .keys(&table)
+                .unwrap_or_default()
+                .into_iter()
+                .filter(|&k| in_range(k) && !keep_set.contains(&k))
+                .collect();
+            if !stale.is_empty() {
+                m.engine.delete_batch(&table, &stale)?;
+            }
+            let mut batch: Vec<(u64, Vec<u8>)> = Vec::new();
+            for k in keep {
+                if let Some(v) = leader.get(&table, k)? {
+                    batch.push((k, (*v).clone()));
+                }
+                if batch.len() >= 256 {
+                    m.engine.put_batch(&table, &batch)?;
+                    batch.clear();
+                }
+            }
+            if !batch.is_empty() {
+                m.engine.put_batch(&table, &batch)?;
+            }
+        }
+        self.metrics.resyncs.inc();
+        Ok(())
+    }
+
+    pub fn status(&self) -> ReplicaSetStatus {
+        let leader_idx = self.leader_idx();
+        let head = self.members[leader_idx].applied_lsn.load(Ordering::Acquire);
+        let replicas = self
+            .members
+            .iter()
+            .enumerate()
+            .map(|(i, m)| {
+                let applied = m.applied_lsn.load(Ordering::Acquire);
+                ReplicaStatus {
+                    node: m.node,
+                    applied_lsn: applied,
+                    alive: m.alive.load(Ordering::Acquire),
+                    is_leader: i == leader_idx,
+                    lag: head.saturating_sub(applied),
+                }
+            })
+            .collect();
+        ReplicaSetStatus {
+            shard: self.shard,
+            epoch: self.epoch(),
+            leader: self.members[leader_idx].node,
+            next_lsn: self.next_lsn.load(Ordering::Relaxed),
+            replicas,
+            retained_chunks: self.retained.lock().unwrap().len(),
+            failovers: self.metrics.failovers.get(),
+            fenced: self.metrics.fenced.get(),
+            ships: self.metrics.ships.get(),
+            ship_errors: self.metrics.ship_errors.get(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::{MemStore, SimulatedStore};
+
+    fn engines(n: usize) -> Vec<(NodeId, Engine)> {
+        (0..n).map(|i| (i, Arc::new(MemStore::new()) as Engine)).collect()
+    }
+
+    fn faulty(n: usize, seed: u64) -> Vec<(NodeId, Engine)> {
+        (0..n)
+            .map(|i| {
+                let inner: Engine = Arc::new(MemStore::new());
+                (i, Arc::new(SimulatedStore::instant(inner, seed + i as u64)) as Engine)
+            })
+            .collect()
+    }
+
+    fn set(members: Vec<(NodeId, Engine)>) -> Arc<ReplicaSet> {
+        ReplicaSet::new("p", 0, (0, u64::MAX), members, ReplicationConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn writes_replicate_to_all_followers() {
+        let members = engines(3);
+        let copies: Vec<Engine> = members.iter().map(|(_, e)| Arc::clone(e)).collect();
+        let s = set(members);
+        s.apply(0, "p/t", &[(1, Some(b"a".to_vec())), (2, Some(b"b".to_vec()))]).unwrap();
+        s.apply(0, "p/t", &[(1, None)]).unwrap();
+        for e in &copies {
+            assert!(e.get("p/t", 1).unwrap().is_none());
+            assert_eq!(**e.get("p/t", 2).unwrap().unwrap(), *b"b");
+        }
+        let st = s.status();
+        assert_eq!(st.max_lag(), 0);
+        assert_eq!(st.ships, 4); // 2 rounds x 2 followers
+    }
+
+    #[test]
+    fn stale_epoch_is_fenced_and_reports_current() {
+        let s = set(engines(2));
+        s.apply(0, "p/t", &[(1, Some(b"v".to_vec()))]).unwrap();
+        let r = s.promote().unwrap();
+        assert_eq!(r.epoch, 1);
+        match s.get(0, "p/t", 1) {
+            Err(Error::Fenced { held: 0, current: 1 }) => {}
+            other => panic!("expected fence, got {other:?}"),
+        }
+        assert_eq!(**s.get(1, "p/t", 1).unwrap().unwrap(), *b"v");
+        assert!(s.metrics.fenced.get() >= 1);
+    }
+
+    #[test]
+    fn promotion_picks_most_caught_up_follower() {
+        let members = faulty(3, 9);
+        let injectors: Vec<Engine> = members.iter().map(|(_, e)| Arc::clone(e)).collect();
+        let s = set(members);
+        s.apply(0, "p/t", &[(1, Some(b"a".to_vec()))]).unwrap();
+        // Kill follower 2, write again: only follower 1 keeps up.
+        injectors[2].fault_injector().unwrap().crash();
+        let _ = s.apply(0, "p/t", &[(2, Some(b"b".to_vec()))]);
+        injectors[2].fault_injector().unwrap().revive();
+        // Now kill the leader; promotion must pick node 1, not node 2.
+        injectors[0].fault_injector().unwrap().crash();
+        let r = s.promote().unwrap();
+        assert_eq!(r.from, 0);
+        assert_eq!(r.to, 1);
+        assert_eq!(**s.get(r.epoch, "p/t", 2).unwrap().unwrap(), *b"b");
+    }
+
+    #[test]
+    fn dead_follower_catches_up_from_retained_ring() {
+        let members = faulty(2, 3);
+        let injectors: Vec<Engine> = members.iter().map(|(_, e)| Arc::clone(e)).collect();
+        let s = set(members);
+        s.apply(0, "p/t", &[(1, Some(b"a".to_vec()))]).unwrap();
+        injectors[1].fault_injector().unwrap().crash();
+        // Follower down: the write applies on the leader but is unacked.
+        assert!(s.apply(0, "p/t", &[(2, Some(b"b".to_vec()))]).is_err());
+        assert!(!s.status().replicas[1].alive);
+        injectors[1].fault_injector().unwrap().revive();
+        s.catch_up();
+        let st = s.status();
+        assert!(st.replicas[1].alive);
+        assert_eq!(st.max_lag(), 0);
+        assert!(s.metrics.catch_ups.get() >= 1);
+        // And the follower really holds the missed round.
+        assert_eq!(**injectors[1].get("p/t", 2).unwrap().unwrap(), *b"b");
+    }
+
+    #[test]
+    fn follower_past_retention_takes_full_resync() {
+        let members = faulty(2, 5);
+        let injectors: Vec<Engine> = members.iter().map(|(_, e)| Arc::clone(e)).collect();
+        let cfg = ReplicationConfig { retain_chunks: 2, ..ReplicationConfig::default() };
+        let s = ReplicaSet::new("p", 0, (0, u64::MAX), members, cfg).unwrap();
+        s.apply(0, "p/t", &[(1, Some(b"a".to_vec()))]).unwrap();
+        injectors[1].fault_injector().unwrap().crash();
+        for k in 2..10u64 {
+            let _ = s.apply(0, "p/t", &[(k, Some(vec![k as u8]))]);
+        }
+        injectors[1].fault_injector().unwrap().revive();
+        s.catch_up();
+        assert!(s.metrics.resyncs.get() >= 1);
+        for k in 1..10u64 {
+            assert!(injectors[1].get("p/t", k).unwrap().is_some(), "key {k} missing after resync");
+        }
+    }
+
+    #[test]
+    fn resync_stays_inside_shard_range_and_scope() {
+        let members = engines(2);
+        let leader = Arc::clone(&members[0].1);
+        let follower = Arc::clone(&members[1].1);
+        // Out-of-range and out-of-scope data on both nodes (other shards /
+        // projects sharing the engines) must survive resync untouched.
+        leader.put("p/t", 500, b"other-shard").unwrap();
+        follower.put("q/t", 5, b"other-project").unwrap();
+        follower.put("p/t", 7, b"stale").unwrap();
+        let cfg = ReplicationConfig { retain_chunks: 1, ..ReplicationConfig::default() };
+        let s = ReplicaSet::new("p", 0, (0, 100), members, cfg).unwrap();
+        s.apply(0, "p/t", &[(3, Some(b"live".to_vec()))]).unwrap();
+        // Force the resync path: mark the follower dead and overrun the ring.
+        s.members[1].alive.store(false, Ordering::Release);
+        s.members[1].applied_lsn.store(0, Ordering::Release);
+        let _ = s.apply(0, "p/t", &[(4, Some(b"x".to_vec()))]);
+        let _ = s.apply(0, "p/t", &[(5, Some(b"y".to_vec()))]);
+        s.catch_up();
+        assert_eq!(**follower.get("p/t", 3).unwrap().unwrap(), *b"live");
+        assert!(follower.get("p/t", 7).unwrap().is_none(), "stale in-range key must go");
+        assert_eq!(**follower.get("q/t", 5).unwrap().unwrap(), *b"other-project");
+        assert!(follower.get("p/t", 500).unwrap().is_none(), "out-of-range key must not copy");
+        assert_eq!(**leader.get("p/t", 500).unwrap().unwrap(), *b"other-shard");
+    }
+
+    #[test]
+    fn no_live_follower_means_no_promotion() {
+        let members = faulty(2, 1);
+        let injectors: Vec<Engine> = members.iter().map(|(_, e)| Arc::clone(e)).collect();
+        let s = set(members);
+        injectors[1].fault_injector().unwrap().crash();
+        assert!(s.promote().is_err());
+        let solo = ReplicaSet::solo(0, 0, Arc::new(MemStore::new()));
+        assert!(solo.promote().is_err());
+    }
+}

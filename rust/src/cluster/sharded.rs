@@ -1,34 +1,122 @@
 //! [`ShardedEngine`]: application-level sharding as a storage engine.
 //!
-//! Wraps the full node engine list plus a [`ShardMap`]; every operation
-//! routes by Morton key to the owning node. Contiguous-run reads split at
-//! shard boundaries ([`ShardMap::route_run`]) so each node still serves
-//! its fragment as one streaming I/O — and multi-node reads (`get_run`,
-//! `get_batch`) issue their per-node requests *concurrently* on scoped
-//! threads, so a single cutout fans out across the node set the way the
-//! paper's requests fan out across disk arrays (§4.1).
+//! Routes every operation by Morton key to the owning shard's
+//! [`ReplicaSet`]. Contiguous-run reads split at shard boundaries
+//! ([`ShardMap::route_run`]) so each node still serves its fragment as
+//! one streaming I/O — and multi-shard reads (`get_run`, `get_batch`)
+//! issue their per-shard requests *concurrently* on scoped threads, so a
+//! single cutout fans out across the node set the way the paper's
+//! requests fan out across disk arrays (§4.1).
+//!
+//! The engine holds a *view* of each shard's epoch. Routed operations
+//! carry it; when a failover bumps a shard's epoch the set answers
+//! [`Error::Fenced`], and the engine refreshes its view and retries the
+//! operation once against the new leader — callers above (`CuboidStore`,
+//! the write engine) never see the fence.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::metrics::Counter;
 use crate::shard::ShardMap;
 use crate::storage::{Blob, Engine, IoStats, StorageEngine};
 use crate::util::pool::scoped_map;
-use crate::Result;
+use crate::{Error, Result};
 
-/// Routes keys across per-node engines by Morton partition.
+use super::replica::ReplicaSet;
+
+/// Routes keys across per-shard replica sets by Morton partition.
 pub struct ShardedEngine {
     map: ShardMap,
-    /// Indexed by NodeId (the cluster's full node list; only nodes named
-    /// in the map are used).
-    engines: Vec<Engine>,
+    /// One set per shard, in shard order.
+    sets: Vec<Arc<ReplicaSet>>,
+    /// This engine's view of each shard's epoch (refreshed on fence).
+    epochs: Vec<AtomicU64>,
+    /// Operations that were fenced by a failover and transparently
+    /// re-routed to the new leader.
+    pub fence_retries: Counter,
     stats: IoStats,
 }
 
 impl ShardedEngine {
+    /// The seed topology: one unreplicated copy per shard. `engines` is
+    /// indexed by `NodeId` (the cluster's full node list; only nodes
+    /// named in the map are used).
     pub fn new(map: ShardMap, engines: Vec<Engine>) -> Self {
-        ShardedEngine { map, engines, stats: IoStats::default() }
+        let sets = map
+            .nodes()
+            .iter()
+            .enumerate()
+            .map(|(shard, &node)| ReplicaSet::solo(shard, node, Arc::clone(&engines[node])))
+            .collect();
+        Self::from_sets(map, sets).expect("solo sets match the map by construction")
+    }
+
+    /// A replicated topology: one [`ReplicaSet`] per shard, in shard
+    /// order (`map.nodes()[i]` names shard `i`'s initial leader).
+    pub fn replicated(map: ShardMap, sets: Vec<Arc<ReplicaSet>>) -> Result<Self> {
+        if sets.len() != map.num_shards() {
+            return Err(Error::Cluster(format!(
+                "{} shards need {} replica sets, got {}",
+                map.num_shards(),
+                map.num_shards(),
+                sets.len()
+            )));
+        }
+        Self::from_sets(map, sets)
+    }
+
+    fn from_sets(map: ShardMap, sets: Vec<Arc<ReplicaSet>>) -> Result<Self> {
+        let epochs = sets.iter().map(|s| AtomicU64::new(s.epoch())).collect();
+        Ok(ShardedEngine {
+            map,
+            sets,
+            epochs,
+            fence_retries: Counter::default(),
+            stats: IoStats::default(),
+        })
     }
 
     pub fn map(&self) -> &ShardMap {
         &self.map
+    }
+
+    /// The per-shard replica sets, in shard order.
+    pub fn sets(&self) -> &[Arc<ReplicaSet>] {
+        &self.sets
+    }
+
+    /// Run `f(set, epoch)` against one shard with this engine's epoch
+    /// view; on an epoch fence (a failover happened since the view was
+    /// taken) refresh the view and retry once against the new leader.
+    fn with_set<T>(&self, shard: usize, f: impl Fn(&ReplicaSet, u64) -> Result<T>) -> Result<T> {
+        let set = &self.sets[shard];
+        let held = self.epochs[shard].load(Ordering::Acquire);
+        match f(set, held) {
+            Err(Error::Fenced { current, .. }) => {
+                self.fence_retries.inc();
+                self.epochs[shard].store(current, Ordering::Release);
+                f(set, current)
+            }
+            r => r,
+        }
+    }
+
+    /// Group keys by owning shard, preserving arrival order within each
+    /// group; items carry their original index for reassembly.
+    fn by_shard<T: Copy>(
+        &self,
+        keys: impl Iterator<Item = (T, u64)>,
+    ) -> Vec<(usize, Vec<(T, u64)>)> {
+        let mut per_shard: Vec<(usize, Vec<(T, u64)>)> = Vec::new();
+        for (tag, k) in keys {
+            let shard = self.map.shard_for(k);
+            match per_shard.iter_mut().find(|(s, _)| *s == shard) {
+                Some((_, v)) => v.push((tag, k)),
+                None => per_shard.push((shard, vec![(tag, k)])),
+            }
+        }
+        per_shard
     }
 }
 
@@ -38,7 +126,8 @@ impl StorageEngine for ShardedEngine {
     }
 
     fn get(&self, table: &str, key: u64) -> Result<Option<Blob>> {
-        let v = self.engines[self.map.node_for(key)].get(table, key)?;
+        let shard = self.map.shard_for(key);
+        let v = self.with_set(shard, |set, e| set.get(e, table, key))?;
         if let Some(v) = &v {
             self.stats.record_read(v.len());
         } else {
@@ -49,28 +138,29 @@ impl StorageEngine for ShardedEngine {
 
     fn put(&self, table: &str, key: u64, value: &[u8]) -> Result<()> {
         self.stats.record_write(value.len());
-        self.engines[self.map.node_for(key)].put(table, key, value)
+        let shard = self.map.shard_for(key);
+        let item = [(key, value.to_vec())];
+        self.with_set(shard, |set, e| set.put_batch(e, table, &item))
     }
 
     fn delete(&self, table: &str, key: u64) -> Result<()> {
-        self.engines[self.map.node_for(key)].delete(table, key)
+        let shard = self.map.shard_for(key);
+        self.with_set(shard, |set, e| set.delete_batch(e, table, &[key]))
     }
 
     fn delete_batch(&self, table: &str, keys: &[u64]) -> Result<()> {
-        // Group by node, one batched delete per node, issued concurrently
-        // when several nodes are involved (mirrors `get_batch`).
-        let mut per_node: Vec<(usize, Vec<u64>)> = Vec::new();
-        for &k in keys {
-            let node = self.map.node_for(k);
-            match per_node.iter_mut().find(|(n, _)| *n == node) {
-                Some((_, v)) => v.push(k),
-                None => per_node.push((node, vec![k])),
-            }
-        }
-        let n = per_node.len();
+        // Group by shard, one batched delete per shard, issued
+        // concurrently when several shards are involved (mirrors
+        // `get_batch`).
+        let per_shard = self.by_shard(keys.iter().map(|&k| ((), k)));
+        let n = per_shard.len();
         let results = scoped_map(n, n, |p| {
-            let (node, ks) = &per_node[p];
-            self.engines[*node].delete_batch(table, ks)
+            let (shard, items) = &per_shard[p];
+            let mut sp = crate::obs::trace::span("shard", "delete_batch");
+            sp.tag("shard", shard.to_string());
+            sp.tag("keys", items.len().to_string());
+            let ks: Vec<u64> = items.iter().map(|(_, k)| *k).collect();
+            self.with_set(*shard, |set, e| set.delete_batch(e, table, &ks))
         });
         for r in results {
             r?;
@@ -79,28 +169,21 @@ impl StorageEngine for ShardedEngine {
     }
 
     fn get_batch(&self, table: &str, keys: &[u64]) -> Result<Vec<Option<Blob>>> {
-        // Group by node, one batched request per node — issued
-        // concurrently when several nodes are involved — then reassemble
-        // in request order.
+        // Group by shard, one batched request per shard — issued
+        // concurrently when several shards are involved — then
+        // reassemble in request order.
         let mut out = vec![None; keys.len()];
-        let mut per_node: Vec<(usize, Vec<(usize, u64)>)> = Vec::new();
-        for (i, &k) in keys.iter().enumerate() {
-            let node = self.map.node_for(k);
-            match per_node.iter_mut().find(|(n, _)| *n == node) {
-                Some((_, v)) => v.push((i, k)),
-                None => per_node.push((node, vec![(i, k)])),
-            }
-        }
-        let n = per_node.len();
+        let per_shard = self.by_shard(keys.iter().copied().enumerate());
+        let n = per_shard.len();
         let fetched = scoped_map(n, n, |p| {
-            let (node, items) = &per_node[p];
+            let (shard, items) = &per_shard[p];
             let mut sp = crate::obs::trace::span("shard", "get_batch");
-            sp.tag("node", node.to_string());
+            sp.tag("shard", shard.to_string());
             sp.tag("keys", items.len().to_string());
             let ks: Vec<u64> = items.iter().map(|(_, k)| *k).collect();
-            self.engines[*node].get_batch(table, &ks)
+            self.with_set(*shard, |set, e| set.get_batch(e, table, &ks))
         });
-        for ((_, items), vs) in per_node.iter().zip(fetched) {
+        for ((_, items), vs) in per_shard.iter().zip(fetched) {
             for ((i, _), v) in items.iter().zip(vs?) {
                 out[*i] = v;
             }
@@ -109,37 +192,38 @@ impl StorageEngine for ShardedEngine {
     }
 
     fn put_batch(&self, table: &str, items: &[(u64, Vec<u8>)]) -> Result<()> {
-        let mut per_node: Vec<(usize, Vec<(u64, Vec<u8>)>)> = Vec::new();
+        let mut per_shard: Vec<(usize, Vec<(u64, Vec<u8>)>)> = Vec::new();
         for (k, v) in items {
             self.stats.record_write(v.len());
-            let node = self.map.node_for(*k);
-            match per_node.iter_mut().find(|(n, _)| *n == node) {
+            let shard = self.map.shard_for(*k);
+            match per_shard.iter_mut().find(|(s, _)| *s == shard) {
                 Some((_, batch)) => batch.push((*k, v.clone())),
-                None => per_node.push((node, vec![(*k, v.clone())])),
+                None => per_shard.push((shard, vec![(*k, v.clone())])),
             }
         }
-        for (node, batch) in per_node {
+        for (shard, batch) in per_shard {
             let mut sp = crate::obs::trace::span("shard", "put_batch");
-            sp.tag("node", node.to_string());
+            sp.tag("shard", shard.to_string());
             sp.tag("keys", batch.len().to_string());
-            self.engines[node].put_batch(table, &batch)?;
+            self.with_set(shard, |set, e| set.put_batch(e, table, &batch))?;
         }
         Ok(())
     }
 
     fn get_run(&self, table: &str, start: u64, len: u64) -> Result<Vec<(u64, Blob)>> {
         self.stats.record_run_read();
-        // A run that straddles shard boundaries reads each node's
+        // A run that straddles shard boundaries reads each shard's
         // fragment concurrently; per-shard sub-runs are disjoint and
         // ascending, so concatenation preserves key order.
         let parts = self.map.route_run(start, len);
         let n = parts.len();
         let fetched = scoped_map(n, n, |p| {
-            let (node, lo, l) = parts[p];
+            let (_, lo, l) = parts[p];
+            let shard = self.map.shard_for(lo);
             let mut sp = crate::obs::trace::span("shard", "get_run");
-            sp.tag("node", node.to_string());
+            sp.tag("shard", shard.to_string());
             sp.tag("len", l.to_string());
-            self.engines[node].get_run(table, lo, l)
+            self.with_set(shard, |set, e| set.get_run(e, table, lo, l))
         });
         let mut out = Vec::new();
         for part in fetched {
@@ -149,30 +233,21 @@ impl StorageEngine for ShardedEngine {
     }
 
     fn keys(&self, table: &str) -> Result<Vec<u64>> {
+        // Shards own disjoint ascending key ranges, so per-shard keys
+        // (filtered to the shard's own range — replica sets of different
+        // shards may share node engines) concatenate already sorted.
         let mut all = Vec::new();
-        // Each node holds a disjoint key range; collect and sort.
-        let mut seen = std::collections::HashSet::new();
-        for &node in self.map.nodes() {
-            if seen.insert(node) {
-                all.extend(self.engines[node].keys(table)?);
-            }
+        for (shard, _) in self.sets.iter().enumerate() {
+            let ks = self.with_set(shard, |set, e| set.keys(e, table))?;
+            all.extend(ks.into_iter().filter(|&k| self.map.shard_for(k) == shard));
         }
-        all.sort_unstable();
-        all
-            .windows(2)
-            .all(|w| w[0] < w[1])
-            .then_some(())
-            .ok_or_else(|| crate::Error::Storage("duplicate keys across shards".into()))?;
         Ok(all)
     }
 
     fn tables(&self) -> Result<Vec<String>> {
         let mut names = Vec::new();
-        let mut seen = std::collections::HashSet::new();
-        for &node in self.map.nodes() {
-            if seen.insert(node) {
-                names.extend(self.engines[node].tables()?);
-            }
+        for (shard, _) in self.sets.iter().enumerate() {
+            names.extend(self.with_set(shard, |set, e| set.tables(e))?);
         }
         names.sort();
         names.dedup();
@@ -184,8 +259,8 @@ impl StorageEngine for ShardedEngine {
     }
 
     fn sync(&self) -> Result<()> {
-        for e in &self.engines {
-            e.sync()?;
+        for set in &self.sets {
+            set.sync()?;
         }
         Ok(())
     }
@@ -198,6 +273,8 @@ impl StorageEngine for ShardedEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::replica::ReplicationConfig;
+    use crate::shard::NodeId;
     use crate::storage::MemStore;
     use std::sync::Arc;
 
@@ -208,9 +285,42 @@ mod tests {
         (ShardedEngine::new(map, engines), mems)
     }
 
+    /// `n` shards over `n` nodes, every shard replicated on all nodes
+    /// (leader = its map node, followers = the rest, round-robin).
+    fn replicated(n: usize, total: u64, replicas: usize) -> (ShardedEngine, Vec<Engine>) {
+        let engines: Vec<Engine> = (0..n).map(|_| Arc::new(MemStore::new()) as Engine).collect();
+        let map = ShardMap::even(total, (0..n).collect()).unwrap();
+        let sets = (0..n)
+            .map(|shard| {
+                let members: Vec<(NodeId, Engine)> = (0..replicas.min(n))
+                    .map(|j| {
+                        let node = (shard + j) % n;
+                        (node, Arc::clone(&engines[node]))
+                    })
+                    .collect();
+                ReplicaSet::new(
+                    "t",
+                    shard,
+                    map.shard_range(shard),
+                    members,
+                    ReplicationConfig::default(),
+                )
+                .unwrap()
+            })
+            .collect();
+        (ShardedEngine::replicated(map, sets).unwrap(), engines)
+    }
+
     #[test]
     fn conformance() {
         let (s, _) = sharded(3, 1 << 20);
+        crate::storage::tests::conformance(&s);
+    }
+
+    #[test]
+    fn replicated_conformance() {
+        // The full engine contract holds with every shard on 2 copies.
+        let (s, _) = replicated(3, 1 << 20, 2);
         crate::storage::tests::conformance(&s);
     }
 
@@ -252,5 +362,34 @@ mod tests {
         for (k, v) in keys.iter().zip(got) {
             assert_eq!(*v.unwrap(), vec![*k as u8]);
         }
+    }
+
+    #[test]
+    fn keys_stay_deduped_when_replicas_share_nodes() {
+        // 2 shards x 2 replicas over 2 nodes: every node engine holds
+        // both shards' data; keys() must report each key exactly once.
+        let (s, _) = replicated(2, 100, 2);
+        let items: Vec<(u64, Vec<u8>)> = (0..100).map(|k| (k, vec![k as u8])).collect();
+        s.put_batch("t/a", &items).unwrap();
+        assert_eq!(s.keys("t/a").unwrap(), (0..100).collect::<Vec<u64>>());
+        let run = s.get_run("t/a", 0, 100).unwrap();
+        assert_eq!(run.len(), 100);
+    }
+
+    #[test]
+    fn fenced_ops_retry_transparently_after_failover() {
+        let (s, _) = replicated(2, 100, 2);
+        s.put("t/a", 10, b"before").unwrap();
+        // Fail shard 0 over; the engine's epoch view is now stale.
+        let report = s.sets()[0].promote().unwrap();
+        assert_eq!(report.epoch, 1);
+        // The next routed ops fence internally, refresh, and succeed.
+        assert_eq!(**s.get("t/a", 10).unwrap().unwrap(), *b"before");
+        s.put("t/a", 11, b"after").unwrap();
+        assert_eq!(**s.get("t/a", 11).unwrap().unwrap(), *b"after");
+        assert!(s.fence_retries.get() >= 1, "retry counter should have moved");
+        // Shard 1 was untouched: no fence on its path.
+        s.put("t/a", 60, b"s1").unwrap();
+        assert_eq!(**s.get("t/a", 60).unwrap().unwrap(), *b"s1");
     }
 }

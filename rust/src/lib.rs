@@ -80,6 +80,15 @@ pub enum Error {
     Xla(String),
     #[error("cluster error: {0}")]
     Cluster(String),
+    /// A routed operation carried a stale shard-map epoch: the shard's
+    /// leadership changed (failover) after the caller cached its view.
+    /// Callers refresh the epoch and retry against the new leader.
+    #[error("epoch fence: held {held}, current {current}")]
+    Fenced { held: u64, current: u64 },
+    /// The target storage node is down (crashed or unreachable), as
+    /// opposed to a transient per-operation failure.
+    #[error("node down: {0}")]
+    NodeDown(String),
     #[error("{0}")]
     Other(String),
 }
@@ -96,6 +105,8 @@ impl Error {
         match self {
             Error::BadRequest(_) => 400,
             Error::NotFound(_) => 404,
+            Error::Fenced { .. } => 409,
+            Error::NodeDown(_) => 503,
             _ => 500,
         }
     }

@@ -3,8 +3,8 @@
 //! Subcommands (hand-rolled parser; no clap in the offline vendor set):
 //!
 //! ```text
-//! ocpd serve   [--addr 127.0.0.1:8642] [--db N] [--ssd N] [--dims X,Y,Z]
-//!              [--seed S] [--artifacts DIR]
+//! ocpd serve   [--addr 127.0.0.1:8642] [--db N] [--ssd N] [--replicas R]
+//!              [--dims X,Y,Z] [--seed S] [--artifacts DIR]
 //!     Boot a cluster with a synthetic EM dataset, start the Web services,
 //!     print example URLs, serve until killed.
 //!
@@ -39,6 +39,11 @@
 //!     the path after /jobs/, e.g. propagate/synapses_v0 or
 //!     synapse/synth/synapses_v0 or ingest/synth); --job resumes a
 //!     checkpointed id; --cancel stops a running job.
+//!
+//! ocpd cluster [--url http://host:port] [--failover TOKEN/SHARD]
+//!     Print the replication control plane (node health, replica-set
+//!     epochs/leaders/lag, failover counters); with --failover, force a
+//!     leader promotion on one project shard first.
 //!
 //! ocpd metrics [--url http://host:port]
 //!     Print the unified Prometheus-text exposition (`GET /metrics/`).
@@ -102,8 +107,15 @@ fn boot(
     seed: u64,
     n_db: usize,
     n_ssd: usize,
+    replicas: usize,
 ) -> ocpd::Result<(Arc<Cluster>, Vec<[u64; 3]>)> {
-    let cluster = Cluster::in_memory(n_db, n_ssd);
+    let cluster = Cluster::with_config(ocpd::cluster::ClusterConfig {
+        n_database: n_db,
+        n_ssd,
+        replicas,
+        monitor: replicas > 1,
+        ..ocpd::cluster::ClusterConfig::default()
+    });
     cluster.register_dataset(DatasetBuilder::new("synth", dims).levels(3).build());
     let img = cluster.create_image_project(Project::image("synth", "synth"))?;
     cluster.create_annotation_project(Project::annotation("synapses_v0", "synth"), true)?;
@@ -127,6 +139,7 @@ fn cmd_serve(flags: HashMap<String, String>) -> ocpd::Result<()> {
         flag(&flags, "seed", 2013),
         flag(&flags, "db", 2usize),
         flag(&flags, "ssd", 1usize),
+        flag(&flags, "replicas", 1usize),
     )?;
     let runtime = Runtime::load_dir(
         flags.get("artifacts").map(std::path::PathBuf::from).unwrap_or_else(artifact_dir),
@@ -145,6 +158,7 @@ fn cmd_serve(flags: HashMap<String, String>) -> ocpd::Result<()> {
         ("GET", "/cache/status/"),
         ("GET", "/write/status/"),
         ("GET", "/http/status/"),
+        ("GET", "/cluster/status/"),
         ("GET", "/metrics/"),
         ("GET", "/trace/slow/"),
         ("POST", "/jobs/propagate/synapses_v0/"),
@@ -231,6 +245,20 @@ fn cmd_write(flags: HashMap<String, String>) -> ocpd::Result<()> {
     Ok(())
 }
 
+fn cmd_cluster(flags: HashMap<String, String>) -> ocpd::Result<()> {
+    let url: String = flag(&flags, "url", "http://127.0.0.1:8642".to_string());
+    if let Some(spec) = flags.get("failover") {
+        let parsed =
+            spec.split_once('/').and_then(|(t, s)| s.parse::<usize>().ok().map(|n| (t, n)));
+        let (token, shard) = parsed.ok_or_else(|| {
+            ocpd::Error::BadRequest(format!("bad failover spec '{spec}' (want TOKEN/SHARD)"))
+        })?;
+        println!("{}", ocpd::client::cluster_failover(&url, token, shard)?);
+    }
+    print!("{}", ocpd::client::cluster_status(&url)?);
+    Ok(())
+}
+
 fn cmd_metrics(flags: HashMap<String, String>) -> ocpd::Result<()> {
     let url: String = flag(&flags, "url", "http://127.0.0.1:8642".to_string());
     print!("{}", ocpd::client::metrics(&url)?);
@@ -278,7 +306,8 @@ fn main() {
         Some((c, r)) => (c.as_str(), r.to_vec()),
         None => {
             eprintln!(
-                "usage: ocpd <serve|detect|info|wal|cache|write|jobs|http|metrics|trace> [flags]"
+                "usage: ocpd <serve|detect|info|wal|cache|write|jobs|http|cluster|metrics|trace> \
+                 [flags]"
             );
             std::process::exit(2);
         }
@@ -293,12 +322,13 @@ fn main() {
         "http" => cmd_http(flags),
         "write" => cmd_write(flags),
         "jobs" => cmd_jobs(flags),
+        "cluster" => cmd_cluster(flags),
         "metrics" => cmd_metrics(flags),
         "trace" => cmd_trace(flags),
         other => {
             eprintln!(
                 "unknown command '{other}' \
-                 (want serve|detect|info|wal|cache|write|jobs|http|metrics|trace)"
+                 (want serve|detect|info|wal|cache|write|jobs|http|cluster|metrics|trace)"
             );
             std::process::exit(2);
         }

@@ -78,10 +78,27 @@ impl ShardMap {
         &self.nodes
     }
 
+    /// The shard index owning `key` (binary search over split points).
+    /// Unlike [`ShardMap::node_for`], this identifies the *partition*,
+    /// not its home node — the replication layer routes by shard index
+    /// because a shard's leader node changes on failover while the
+    /// partition itself is stable.
+    pub fn shard_for(&self, key: u64) -> usize {
+        self.splits.partition_point(|&s| s <= key)
+    }
+
+    /// The key range `[lo, hi)` owned by shard `shard`; the last shard's
+    /// `hi` is `u64::MAX` (open-ended — the curve key `u64::MAX` itself
+    /// is unreachable for any real dataset).
+    pub fn shard_range(&self, shard: usize) -> (u64, u64) {
+        let lo = if shard == 0 { 0 } else { self.splits[shard - 1] };
+        let hi = self.splits.get(shard).copied().unwrap_or(u64::MAX);
+        (lo, hi)
+    }
+
     /// The node owning `key` (binary search over split points).
     pub fn node_for(&self, key: u64) -> NodeId {
-        let shard = self.splits.partition_point(|&s| s <= key);
-        self.nodes[shard]
+        self.nodes[self.shard_for(key)]
     }
 
     /// Group sorted `keys` by owning node, preserving order within each
@@ -240,6 +257,31 @@ mod tests {
                 cur = lo + l;
             }
             assert_eq!(cur, start + len);
+        });
+    }
+
+    #[test]
+    fn shard_for_and_range_agree() {
+        property("shard_range_consistent", 200, |g| {
+            let n = 1 + g.usize_below(6);
+            let total = n as u64 + g.u64_below(10_000);
+            let m = ShardMap::even(total, (0..n).collect()).unwrap();
+            for _ in 0..32 {
+                let k = g.u64_below(total);
+                let s = m.shard_for(k);
+                assert_eq!(m.nodes()[s], m.node_for(k));
+                let (lo, hi) = m.shard_range(s);
+                assert!(lo <= k && (k < hi || hi == u64::MAX));
+            }
+            // Ranges tile the space in order.
+            let mut cur = 0u64;
+            for s in 0..m.num_shards() {
+                let (lo, hi) = m.shard_range(s);
+                assert_eq!(lo, cur);
+                assert!(hi > lo);
+                cur = hi;
+            }
+            assert_eq!(cur, u64::MAX);
         });
     }
 

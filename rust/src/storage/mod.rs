@@ -22,7 +22,7 @@ pub mod sim;
 
 pub use file::FileStore;
 pub use mem::MemStore;
-pub use sim::{DeviceProfile, SimulatedStore};
+pub use sim::{DeviceProfile, FaultInjector, SimulatedStore};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -154,6 +154,14 @@ pub trait StorageEngine: Send + Sync {
     /// parallel cutout engine aligns its fan-out batches to these shard
     /// boundaries so each worker's run lands wholly on one node.
     fn shard_map(&self) -> Option<&crate::shard::ShardMap> {
+        None
+    }
+
+    /// Deterministic fault hooks, when the engine has them (the simulated
+    /// store's crash / transient-error controls). `None` for real engines;
+    /// the failover test harness uses this to kill nodes without
+    /// downcasting through the `Engine` trait object.
+    fn fault_injector(&self) -> Option<&FaultInjector> {
         None
     }
 }

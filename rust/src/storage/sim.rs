@@ -19,13 +19,20 @@
 //! `time_scale` shrinks all charged latencies by a constant factor so the
 //! benches finish quickly; every reported throughput is scaled back up by
 //! the caller (the *ratios* between configurations are scale-invariant).
+//!
+//! The store also carries a [`FaultInjector`]: deterministic crash and
+//! transient-error hooks that make node death a reproducible test input
+//! instead of a prayer (DESIGN.md §10). Faults are checked *before* the
+//! inner engine is touched, so an injected failure never half-applies a
+//! batch.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::storage::{Blob, Engine, IoStats, StorageEngine};
-use crate::Result;
+use crate::util::Rng;
+use crate::{Error, Result};
 
 /// Cost model for one device class.
 #[derive(Clone, Copy, Debug)]
@@ -77,6 +84,22 @@ impl DeviceProfile {
         }
     }
 
+    /// A zero-cost profile for fault-injection tests: no seeks, effectively
+    /// infinite bandwidth, no IOPS cap. Wrapping a [`super::MemStore`] in
+    /// `instant` buys the fault hooks without paying simulated latency, so
+    /// failover tests run in microseconds.
+    pub fn instant() -> Self {
+        DeviceProfile {
+            name: "instant",
+            read_seek_us: 0.0,
+            write_seek_us: 0.0,
+            read_mbps: 1e12,
+            write_mbps: 1e12,
+            iops: 0.0,
+            parallelism: 1 << 16,
+        }
+    }
+
     /// Cost in microseconds of a random read of `bytes`.
     fn read_cost_us(&self, bytes: u64) -> f64 {
         self.read_seek_us + bytes as f64 / self.read_mbps
@@ -115,6 +138,115 @@ impl Semaphore {
     }
 }
 
+/// Deterministic fault hooks for a simulated node.
+///
+/// Three failure shapes, all reproducible from a seed:
+///
+/// * `crash()` / `revive()` — the node is down: every operation returns
+///   [`Error::NodeDown`] until revived (kill-a-replica tests);
+/// * `fail_next(n)` — exactly the next `n` operations fail with a
+///   transient [`Error::Storage`] (targeted mid-write faults);
+/// * `set_error_rate(p)` — each operation independently fails with
+///   probability `p`, drawn from an RNG seeded at construction, so two
+///   runs with the same seed and operation sequence fire the same faults.
+///
+/// Every fired transient fault records the operation sequence number at
+/// which it fired ([`FaultInjector::fired`]); tests compare these logs
+/// across runs to prove a scenario is reproducible from its seed.
+pub struct FaultInjector {
+    seed: u64,
+    crashed: AtomicBool,
+    fail_next: AtomicU64,
+    rate: Mutex<Option<(f64, Rng)>>,
+    op_seq: AtomicU64,
+    fired: Mutex<Vec<u64>>,
+}
+
+impl FaultInjector {
+    pub fn new(seed: u64) -> Self {
+        FaultInjector {
+            seed,
+            crashed: AtomicBool::new(false),
+            fail_next: AtomicU64::new(0),
+            rate: Mutex::new(None),
+            op_seq: AtomicU64::new(0),
+            fired: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Kill the node: every subsequent operation fails with
+    /// [`Error::NodeDown`] until [`FaultInjector::revive`].
+    pub fn crash(&self) {
+        self.crashed.store(true, Ordering::Release);
+    }
+
+    /// Bring a crashed node back. Its contents are whatever they were at
+    /// the crash — catch-up is the replication layer's job.
+    pub fn revive(&self) {
+        self.crashed.store(false, Ordering::Release);
+    }
+
+    pub fn is_crashed(&self) -> bool {
+        self.crashed.load(Ordering::Acquire)
+    }
+
+    /// Fail exactly the next `n` operations with a transient error.
+    pub fn fail_next(&self, n: u64) {
+        self.fail_next.store(n, Ordering::Release);
+    }
+
+    /// Fail each subsequent operation with probability `p`, drawn from
+    /// the injector's seeded RNG. `0.0` disables the rate.
+    pub fn set_error_rate(&self, p: f64) {
+        let mut g = self.rate.lock().unwrap();
+        *g = if p > 0.0 { Some((p, Rng::new(self.seed))) } else { None };
+    }
+
+    /// Operation sequence numbers at which transient faults fired — the
+    /// determinism probe: same seed + same op sequence = same log.
+    pub fn fired(&self) -> Vec<u64> {
+        self.fired.lock().unwrap().clone()
+    }
+
+    /// Total operations checked so far (crashed ops included).
+    pub fn ops_checked(&self) -> u64 {
+        self.op_seq.load(Ordering::Relaxed)
+    }
+
+    /// Gate one operation. Called by [`SimulatedStore`] before the inner
+    /// engine is touched, so a fault never half-applies a batch.
+    pub fn check(&self, op: &'static str) -> Result<()> {
+        let seq = self.op_seq.fetch_add(1, Ordering::Relaxed);
+        if self.crashed.load(Ordering::Acquire) {
+            return Err(Error::NodeDown(format!("simulated node crash ({op})")));
+        }
+        let mut cur = self.fail_next.load(Ordering::Relaxed);
+        while cur > 0 {
+            match self.fail_next.compare_exchange_weak(
+                cur,
+                cur - 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => {
+                    self.fired.lock().unwrap().push(seq);
+                    return Err(Error::Storage(format!("injected transient fault ({op})")));
+                }
+                Err(actual) => cur = actual,
+            }
+        }
+        let mut g = self.rate.lock().unwrap();
+        if let Some((p, rng)) = g.as_mut() {
+            if rng.chance(*p) {
+                drop(g);
+                self.fired.lock().unwrap().push(seq);
+                return Err(Error::Storage(format!("injected transient fault ({op})")));
+            }
+        }
+        Ok(())
+    }
+}
+
 /// An engine wrapper charging wall-clock time per the device profile.
 pub struct SimulatedStore {
     inner: Engine,
@@ -126,10 +258,17 @@ pub struct SimulatedStore {
     epoch: Instant,
     /// Total charged device time, ns (observability for benches).
     charged_ns: AtomicU64,
+    faults: FaultInjector,
 }
 
 impl SimulatedStore {
     pub fn new(inner: Engine, profile: DeviceProfile, time_scale: f64) -> Self {
+        Self::with_faults(inner, profile, time_scale, 0)
+    }
+
+    /// Like [`SimulatedStore::new`], with the fault injector's RNG seeded
+    /// at `seed` (faults stay inert until armed via [`SimulatedStore::faults`]).
+    pub fn with_faults(inner: Engine, profile: DeviceProfile, time_scale: f64, seed: u64) -> Self {
         SimulatedStore {
             sem: Semaphore::new(profile.parallelism.max(1)),
             inner,
@@ -138,11 +277,23 @@ impl SimulatedStore {
             next_slot_ns: AtomicU64::new(0),
             epoch: Instant::now(),
             charged_ns: AtomicU64::new(0),
+            faults: FaultInjector::new(seed),
         }
+    }
+
+    /// A zero-latency store with fault hooks: [`DeviceProfile::instant`]
+    /// over `inner`. The failover test harness's standard node.
+    pub fn instant(inner: Engine, seed: u64) -> Self {
+        Self::with_faults(inner, DeviceProfile::instant(), 1.0, seed)
     }
 
     pub fn profile(&self) -> &DeviceProfile {
         &self.profile
+    }
+
+    /// The node's deterministic fault hooks.
+    pub fn faults(&self) -> &FaultInjector {
+        &self.faults
     }
 
     /// Total device-time charged so far, in (unscaled) microseconds.
@@ -207,6 +358,7 @@ impl StorageEngine for SimulatedStore {
     }
 
     fn get(&self, table: &str, key: u64) -> Result<Option<Blob>> {
+        self.faults.check("get")?;
         let v = self.inner.get(table, key)?;
         self.govern_iops();
         let bytes = v.as_ref().map(|v| v.len() as u64).unwrap_or(512);
@@ -215,12 +367,14 @@ impl StorageEngine for SimulatedStore {
     }
 
     fn put(&self, table: &str, key: u64, value: &[u8]) -> Result<()> {
+        self.faults.check("put")?;
         self.govern_iops();
         self.charge(self.profile.write_cost_us(value.len() as u64));
         self.inner.put(table, key, value)
     }
 
     fn delete(&self, table: &str, key: u64) -> Result<()> {
+        self.faults.check("delete")?;
         self.govern_iops();
         self.charge(self.profile.write_cost_us(512));
         self.inner.delete(table, key)
@@ -230,6 +384,7 @@ impl StorageEngine for SimulatedStore {
         if keys.is_empty() {
             return Ok(());
         }
+        self.faults.check("delete_batch")?;
         // Like `put_batch`: one positioning cost plus streaming for the
         // batched tombstones (512 B of metadata per key).
         self.govern_iops();
@@ -240,6 +395,7 @@ impl StorageEngine for SimulatedStore {
     fn get_batch(&self, table: &str, keys: &[u64]) -> Result<Vec<Option<Blob>>> {
         // Batch of point reads: each pays its own seek (keys may be
         // scattered); use `get_run` for contiguous runs.
+        self.faults.check("get_batch")?;
         let vs = self.inner.get_batch(table, keys)?;
         for v in &vs {
             self.govern_iops();
@@ -252,6 +408,7 @@ impl StorageEngine for SimulatedStore {
     fn put_batch(&self, table: &str, items: &[(u64, Vec<u8>)]) -> Result<()> {
         // One positioning cost + streaming for the whole batch: batching
         // amortizes fixed costs (§4.2 "Batch Interfaces").
+        self.faults.check("put_batch")?;
         let total: u64 = items.iter().map(|(_, v)| v.len() as u64).sum();
         self.govern_iops();
         self.charge(self.profile.write_cost_us(total));
@@ -261,6 +418,7 @@ impl StorageEngine for SimulatedStore {
     fn get_run(&self, table: &str, start: u64, len: u64) -> Result<Vec<(u64, Blob)>> {
         // THE Morton payoff: one seek + stream for the whole contiguous
         // run, regardless of how many cuboids it contains.
+        self.faults.check("get_run")?;
         let vs = self.inner.get_run(table, start, len)?;
         let total: u64 = vs.iter().map(|(_, v)| v.len() as u64).sum();
         self.govern_iops();
@@ -269,10 +427,12 @@ impl StorageEngine for SimulatedStore {
     }
 
     fn keys(&self, table: &str) -> Result<Vec<u64>> {
+        self.faults.check("keys")?;
         self.inner.keys(table)
     }
 
     fn tables(&self) -> Result<Vec<String>> {
+        self.faults.check("tables")?;
         self.inner.tables()
     }
 
@@ -281,7 +441,12 @@ impl StorageEngine for SimulatedStore {
     }
 
     fn sync(&self) -> Result<()> {
+        self.faults.check("sync")?;
         self.inner.sync()
+    }
+
+    fn fault_injector(&self) -> Option<&FaultInjector> {
+        Some(&self.faults)
     }
 }
 
@@ -364,5 +529,74 @@ mod tests {
         let us = s.charged_us();
         // One random write: ~16ms seek-equivalent at device scale.
         assert!(us > 10_000.0 && us < 30_000.0, "charged {us}");
+    }
+
+    fn instant(seed: u64) -> SimulatedStore {
+        SimulatedStore::instant(Arc::new(MemStore::new()), seed)
+    }
+
+    #[test]
+    fn crash_downs_every_op_until_revive() {
+        let s = instant(1);
+        s.put("t", 1, b"v").unwrap();
+        s.faults().crash();
+        assert!(s.faults().is_crashed());
+        assert!(matches!(s.get("t", 1), Err(Error::NodeDown(_))));
+        assert!(matches!(s.put("t", 2, b"w"), Err(Error::NodeDown(_))));
+        assert!(matches!(s.keys("t"), Err(Error::NodeDown(_))));
+        assert!(matches!(s.sync(), Err(Error::NodeDown(_))));
+        s.faults().revive();
+        // Contents from before the crash survive; the failed put is absent.
+        assert_eq!(s.get("t", 1).unwrap().as_deref().map(|v| &v[..]), Some(&b"v"[..]));
+        assert!(s.get("t", 2).unwrap().is_none());
+    }
+
+    #[test]
+    fn fail_next_fails_exactly_n_ops() {
+        let s = instant(2);
+        s.faults().fail_next(2);
+        assert!(matches!(s.put("t", 0, b"a"), Err(Error::Storage(_))));
+        assert!(matches!(s.get("t", 0), Err(Error::Storage(_))));
+        // Third op sails through, and the failed put never half-applied.
+        assert!(s.get("t", 0).unwrap().is_none());
+        s.put("t", 0, b"a").unwrap();
+        assert!(s.get("t", 0).unwrap().is_some());
+        assert_eq!(s.faults().fired(), vec![0, 1]);
+    }
+
+    #[test]
+    fn error_rate_is_deterministic_from_seed() {
+        let run = |seed: u64| {
+            let s = instant(seed);
+            s.faults().set_error_rate(0.3);
+            let mut outcomes = Vec::new();
+            for k in 0..200u64 {
+                outcomes.push(s.put("t", k, b"x").is_ok());
+            }
+            (outcomes, s.faults().fired())
+        };
+        let (a, fa) = run(42);
+        let (b, fb) = run(42);
+        assert_eq!(a, b, "same seed must fail the same ops");
+        assert_eq!(fa, fb);
+        assert!(!fa.is_empty(), "0.3 over 200 ops should fire");
+        let (c, _) = run(43);
+        assert_ne!(a, c, "different seed should fault differently");
+        // Disarming stops the faults.
+        let s = instant(42);
+        s.faults().set_error_rate(0.9);
+        s.faults().set_error_rate(0.0);
+        for k in 0..50u64 {
+            s.put("t", k, b"x").unwrap();
+        }
+    }
+
+    #[test]
+    fn fault_injector_reachable_through_engine_trait() {
+        let s: Engine = Arc::new(instant(7));
+        s.fault_injector().unwrap().crash();
+        assert!(matches!(s.get("t", 0), Err(Error::NodeDown(_))));
+        let m: Engine = Arc::new(MemStore::new());
+        assert!(m.fault_injector().is_none());
     }
 }

@@ -111,6 +111,10 @@ pub struct WalMetrics {
     pub flushed_segments: Counter,
     /// Torn frames dropped during recovery or drain.
     pub truncated_chunks: Counter,
+    /// Chunks mirrored to follower log engines.
+    pub shipped_chunks: Counter,
+    /// Failed follower ships (the follower is marked lagging).
+    pub ship_errors: Counter,
     /// Unflushed records currently in the log (log depth).
     pub depth: Gauge,
     /// Unflushed framed bytes currently in the log.
@@ -132,6 +136,11 @@ pub struct WalStatus {
     pub durable_lsn: u64,
     /// Age of the oldest unflushed record (approximate).
     pub flush_lag_ms: f64,
+    /// Follower log engines mirroring this log.
+    pub replicas: usize,
+    /// Followers currently marked lagging (missed a ship).
+    pub replicas_lagging: usize,
+    pub shipped_chunks: u64,
 }
 
 impl WalStatus {
@@ -168,12 +177,24 @@ struct WalState {
     active_bytes: u64,
 }
 
+/// A follower mirror of the log: an SSD-class engine on another node
+/// that receives every committed chunk, so a dead log node doesn't take
+/// group-committed frames with it.
+struct WalFollower {
+    engine: Engine,
+    /// Set when a ship fails; the follower is skipped until
+    /// [`Wal::ship_backlog`] re-mirrors the whole log.
+    lagging: AtomicBool,
+}
+
 /// One project's write-ahead log: SSD-resident segments + overlay +
 /// flusher. Cheap to share (`Arc`); all methods take `&self`.
 pub struct Wal {
     scope: String,
     log: Engine,
     dest: Engine,
+    /// Follower mirrors (chunk-level log shipping).
+    followers: RwLock<Vec<WalFollower>>,
     cfg: WalConfig,
     chunk_table: String,
     meta_table: String,
@@ -260,6 +281,7 @@ impl Wal {
             scope: scope.to_string(),
             log,
             dest,
+            followers: RwLock::new(Vec::new()),
             cfg,
             chunk_table,
             meta_table,
@@ -303,6 +325,8 @@ impl Wal {
                     // Sealed segments only; the active segment keeps
                     // absorbing until it seals or someone flushes.
                     let _ = wal.drain_sealed();
+                    // Heal any follower that missed a ship.
+                    let _ = wal.ship_backlog();
                 })
                 .map_err(|e| Error::Other(format!("spawn wal flusher: {e}")))?;
             *wal.flusher.lock().unwrap() = Some(handle);
@@ -458,6 +482,12 @@ impl Wal {
                 .log
                 .put(&self.chunk_table, chunk_key, &batch)
                 .and_then(|()| self.log.sync());
+            if res.is_ok() {
+                // Ship the committed chunk to follower mirrors before
+                // acking — still outside the state lock, so shipping
+                // never serializes against appends.
+                self.ship(&self.chunk_table, chunk_key, &batch, true);
+            }
             st = self.state.lock().unwrap();
             st.committing = false;
             match res {
@@ -501,10 +531,107 @@ impl Wal {
         st.active_bytes = 0;
         let mut e = Enc::new();
         e.u32(META_VERSION).u64(st.active_seg);
-        self.log.put(&self.meta_table, 0, &e.finish())?;
+        let meta = e.finish();
+        self.log.put(&self.meta_table, 0, &meta)?;
         self.log.sync()?;
+        self.ship(&self.meta_table, 0, &meta, false);
         self.metrics.segments_sealed.inc();
         Ok(())
+    }
+
+    /// Mirror one log blob to every follower that is keeping up. A
+    /// failed ship marks the follower lagging — it is skipped until
+    /// [`Wal::ship_backlog`] re-mirrors the whole log.
+    fn ship(&self, table: &str, key: u64, blob: &[u8], count: bool) {
+        let followers = self.followers.read().unwrap();
+        for f in followers.iter() {
+            if f.lagging.load(Ordering::Relaxed) {
+                continue;
+            }
+            match f.engine.put(table, key, blob).and_then(|()| f.engine.sync()) {
+                Ok(()) => {
+                    if count {
+                        self.metrics.shipped_chunks.inc();
+                    }
+                }
+                Err(_) => {
+                    f.lagging.store(true, Ordering::Relaxed);
+                    self.metrics.ship_errors.inc();
+                }
+            }
+        }
+    }
+
+    /// Register a follower log engine and seed it with the current log
+    /// contents. Every subsequent group commit ships its chunk to the
+    /// follower, so a [`Wal::open`] against the follower engine rebuilds
+    /// the same overlay — group-committed frames survive the log node.
+    pub fn add_follower(&self, engine: Engine) -> Result<()> {
+        let _g = self.flush_lock.lock().unwrap();
+        // Register before seeding: a commit racing the copy ships
+        // normally, and both writes are idempotent puts of identical
+        // bytes. The flush lock keeps drains from truncating chunks out
+        // from under the copy.
+        self.followers.write().unwrap().push(WalFollower {
+            engine: Arc::clone(&engine),
+            lagging: AtomicBool::new(false),
+        });
+        if let Err(e) = self.copy_log_to(&engine) {
+            if let Some(f) = self.followers.read().unwrap().last() {
+                f.lagging.store(true, Ordering::Relaxed);
+            }
+            return Err(e);
+        }
+        Ok(())
+    }
+
+    /// Re-mirror the whole log onto any follower marked lagging (after
+    /// a crash + revive). Returns followers healed. The flag clears
+    /// before the copy so chunks committed during it ship normally;
+    /// idempotent puts make the overlap safe.
+    pub fn ship_backlog(&self) -> Result<u64> {
+        if !self.followers.read().unwrap().iter().any(|f| f.lagging.load(Ordering::Relaxed)) {
+            return Ok(0);
+        }
+        let _g = self.flush_lock.lock().unwrap();
+        let mut healed = 0u64;
+        let n = self.followers.read().unwrap().len();
+        for i in 0..n {
+            let (engine, was_lagging) = {
+                let fs = self.followers.read().unwrap();
+                (Arc::clone(&fs[i].engine), fs[i].lagging.load(Ordering::Relaxed))
+            };
+            if !was_lagging {
+                continue;
+            }
+            self.followers.read().unwrap()[i].lagging.store(false, Ordering::Relaxed);
+            if let Err(e) = self.copy_log_to(&engine) {
+                self.followers.read().unwrap()[i].lagging.store(true, Ordering::Relaxed);
+                return Err(e);
+            }
+            healed += 1;
+        }
+        Ok(healed)
+    }
+
+    /// Mirror meta + every chunk currently in the log onto `engine`,
+    /// deleting stale follower chunks (segments drained while it was
+    /// down).
+    fn copy_log_to(&self, engine: &Engine) -> Result<()> {
+        let have = engine.keys(&self.chunk_table)?;
+        let want = self.log.keys(&self.chunk_table)?;
+        let want_set: BTreeSet<u64> = want.iter().copied().collect();
+        let stale: Vec<u64> = have.into_iter().filter(|k| !want_set.contains(k)).collect();
+        engine.delete_batch(&self.chunk_table, &stale)?;
+        for k in want {
+            if let Some(b) = self.log.get(&self.chunk_table, k)? {
+                engine.put(&self.chunk_table, k, &b)?;
+            }
+        }
+        if let Some(m) = self.log.get(&self.meta_table, 0)? {
+            engine.put(&self.meta_table, 0, &m)?;
+        }
+        engine.sync()
     }
 
     // ------------------------------------------------------------------
@@ -681,6 +808,22 @@ impl Wal {
             self.log.delete(&self.chunk_table, k)?;
         }
         self.log.sync()?;
+        // Truncate follower mirrors too; a failure just marks the
+        // follower lagging (ship_backlog re-mirrors it later).
+        {
+            let followers = self.followers.read().unwrap();
+            for f in followers.iter() {
+                if f.lagging.load(Ordering::Relaxed) {
+                    continue;
+                }
+                if f.engine.delete_batch(&self.chunk_table, keys).is_err()
+                    || f.engine.sync().is_err()
+                {
+                    f.lagging.store(true, Ordering::Relaxed);
+                    self.metrics.ship_errors.inc();
+                }
+            }
+        }
         self.metrics.flushed_records.add(n_records);
         self.metrics.flushed_segments.inc();
         self.metrics.depth.sub(n_records);
@@ -724,6 +867,10 @@ impl Wal {
             .unwrap()
             .map(|t| t.elapsed().as_secs_f64() * 1e3)
             .unwrap_or(0.0);
+        let (replicas, replicas_lagging) = {
+            let fs = self.followers.read().unwrap();
+            (fs.len(), fs.iter().filter(|f| f.lagging.load(Ordering::Relaxed)).count())
+        };
         Ok(WalStatus {
             scope: self.scope.clone(),
             depth_records: self.metrics.depth.get(),
@@ -736,6 +883,9 @@ impl Wal {
             flushed_records: self.metrics.flushed_records.get(),
             durable_lsn: durable,
             flush_lag_ms: if self.metrics.depth.get() == 0 { 0.0 } else { lag_ms },
+            replicas,
+            replicas_lagging,
+            shipped_chunks: self.metrics.shipped_chunks.get(),
         })
     }
 }
@@ -931,6 +1081,55 @@ mod tests {
         // Nothing lost.
         wal.flush_now().unwrap();
         assert_eq!(wal.dest().keys("tbl").unwrap().len(), 40);
+    }
+
+    #[test]
+    fn follower_mirrors_log_and_recovers_the_overlay() {
+        let (wal, _log, dest) = mem_wal(quiet_cfg());
+        let follower: Engine = Arc::new(MemStore::new());
+        wal.add_follower(Arc::clone(&follower)).unwrap();
+        wal.append(vec![put("tbl", 1, b"one"), put("tbl", 2, b"two")]).unwrap();
+        assert!(wal.metrics.shipped_chunks.get() >= 1, "commit must ship");
+        // Open the follower's mirror as its own log: same overlay — the
+        // promoted log node resumes exactly where the dead one stopped.
+        let dest2: Engine = Arc::new(MemStore::new());
+        let recovered =
+            Wal::open("t", Arc::clone(&follower), Arc::clone(&dest2), quiet_cfg()).unwrap();
+        assert_eq!(**recovered.overlay_get("tbl", 1).unwrap().unwrap(), *b"one");
+        assert_eq!(**recovered.overlay_get("tbl", 2).unwrap().unwrap(), *b"two");
+        // Drain truncates the mirror too.
+        wal.flush_now().unwrap();
+        assert!(follower.keys("t/wal/log").unwrap().is_empty(), "mirror not truncated");
+        assert!(dest.get("tbl", 1).unwrap().is_some());
+        let st = wal.status().unwrap();
+        assert_eq!(st.replicas, 1);
+        assert_eq!(st.replicas_lagging, 0);
+    }
+
+    #[test]
+    fn lagging_follower_heals_via_ship_backlog() {
+        let (wal, _log, _dest) = mem_wal(quiet_cfg());
+        let follower = Arc::new(SimulatedStore::instant(Arc::new(MemStore::new()), 1));
+        wal.add_follower(Arc::clone(&follower) as Engine).unwrap();
+        wal.append(vec![put("tbl", 1, b"one")]).unwrap();
+        follower.faults().crash();
+        wal.append(vec![put("tbl", 2, b"two")]).unwrap();
+        assert!(wal.metrics.ship_errors.get() >= 1, "crashed follower must miss the ship");
+        assert_eq!(wal.status().unwrap().replicas_lagging, 1);
+        // Later commits skip the lagging follower entirely.
+        let errs = wal.metrics.ship_errors.get();
+        wal.append(vec![put("tbl", 3, b"three")]).unwrap();
+        assert_eq!(wal.metrics.ship_errors.get(), errs);
+        // Revive + backlog ship: the mirror has all three records again.
+        follower.faults().revive();
+        assert_eq!(wal.ship_backlog().unwrap(), 1);
+        assert_eq!(wal.ship_backlog().unwrap(), 0, "healed follower needs nothing");
+        assert_eq!(wal.status().unwrap().replicas_lagging, 0);
+        let dest2: Engine = Arc::new(MemStore::new());
+        let recovered = Wal::open("t", follower, dest2, quiet_cfg()).unwrap();
+        for (k, v) in [(1u64, b"one".as_ref()), (2, b"two"), (3, b"three")] {
+            assert_eq!(**recovered.overlay_get("tbl", k).unwrap().unwrap(), *v, "key {k}");
+        }
     }
 
     #[test]

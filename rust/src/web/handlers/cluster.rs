@@ -1,0 +1,25 @@
+//! Replication control-plane routes (node health, replica sets,
+//! manual failover).
+
+use crate::web::http::Response;
+use crate::web::router::Ctx;
+use crate::web::routes::{parse_num, OcpService};
+use crate::Result;
+
+/// GET /cluster/status/ — node health, control-plane counters, and
+/// every project's replica sets (epoch, leader, lag, failovers).
+pub(crate) fn status(svc: &OcpService, _ctx: &Ctx<'_>) -> Result<Response> {
+    Ok(Response::text(svc.cluster.cluster_status()))
+}
+
+/// POST /cluster/failover/{token}/{shard}/ — force a leader promotion
+/// on one project shard (operator-driven failover drill).
+pub(crate) fn failover(svc: &OcpService, ctx: &Ctx<'_>) -> Result<Response> {
+    let token = ctx.params[0];
+    let shard = parse_num(ctx.params[1])? as usize;
+    let r = svc.cluster.failover(token, shard)?;
+    Ok(Response::text(format!(
+        "promoted: project={token} shard={} from=node{} to=node{} epoch={} lost_lsns={}\n",
+        r.shard, r.from, r.to, r.epoch, r.lost_lsns
+    )))
+}

@@ -7,6 +7,7 @@
 //! [`crate::web::routes`] and talk to the cluster services directly.
 
 pub(crate) mod cache;
+pub(crate) mod cluster;
 pub(crate) mod jobs;
 pub(crate) mod obs;
 pub(crate) mod projects;

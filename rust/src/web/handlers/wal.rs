@@ -12,7 +12,8 @@ pub(crate) fn status(svc: &OcpService, _ctx: &Ctx<'_>) -> Result<Response> {
     for s in statuses {
         out.push_str(&format!(
             "  {}: depth={} records ({} bytes) active_seg={} sealed={} \
-             commits={} mean_batch={:.1} flushed={} lag_ms={:.1}\n",
+             commits={} mean_batch={:.1} flushed={} lag_ms={:.1} \
+             replicas={} lagging={} shipped={}\n",
             s.scope,
             s.depth_records,
             s.depth_bytes,
@@ -21,7 +22,10 @@ pub(crate) fn status(svc: &OcpService, _ctx: &Ctx<'_>) -> Result<Response> {
             s.commit_batches,
             s.mean_batch(),
             s.flushed_records,
-            s.flush_lag_ms
+            s.flush_lag_ms,
+            s.replicas,
+            s.replicas_lagging,
+            s.shipped_chunks
         ));
     }
     Ok(Response::text(out))

@@ -13,7 +13,7 @@ use crate::cluster::Cluster;
 use crate::core::Box3;
 use crate::runtime::Runtime;
 use crate::tiles::TileService;
-use crate::web::handlers::{cache, jobs, obs, projects, system, wal, write_engine};
+use crate::web::handlers::{cache, cluster, jobs, obs, projects, system, wal, write_engine};
 use crate::web::http::{HttpMetrics, Request, Response};
 use crate::web::router::{Outcome, Route, Router, Seg};
 use crate::{Error, Result};
@@ -27,7 +27,7 @@ pub const DEFAULT_STREAM_THRESHOLD: usize = 8 << 20;
 /// token segments refuse them so `/wal/...` can never be shadowed, and
 /// the cluster refuses to create projects under them.
 pub const RESERVED: &[&str] =
-    &["info", "http", "wal", "cache", "jobs", "write", "metrics", "trace"];
+    &["info", "http", "wal", "cache", "jobs", "write", "metrics", "trace", "cluster"];
 
 /// The Web-service layer over a cluster (the paper's "application
 /// server" role).
@@ -199,6 +199,21 @@ fn route_table() -> Vec<Route<OcpService>> {
             pattern: &[Lit("wal"), Lit("flush"), Param],
             handler: wal::flush_one,
             doc: "drain one project's write log",
+        },
+        // ---- replication control plane -------------------------------
+        Route {
+            name: "cluster-status",
+            methods: GET,
+            pattern: &[Lit("cluster"), Lit("status")],
+            handler: cluster::status,
+            doc: "node health, replica-set epochs/lag, failover counters",
+        },
+        Route {
+            name: "cluster-failover",
+            methods: PUT_POST,
+            pattern: &[Lit("cluster"), Lit("failover"), Param, Param],
+            handler: cluster::failover,
+            doc: "force a leader promotion on one project shard",
         },
         // ---- cuboid cache --------------------------------------------
         Route {
@@ -515,7 +530,9 @@ mod tests {
         // Every reserved name that owns routes appears as a literal
         // first segment; every route has methods and a doc line.
         let listing = r.listing();
-        for reserved in ["info", "http", "wal", "cache", "jobs", "write", "metrics", "trace"] {
+        for reserved in
+            ["info", "http", "wal", "cache", "jobs", "write", "metrics", "trace", "cluster"]
+        {
             assert!(listing.contains(&format!("/{reserved}")), "{reserved} missing:\n{listing}");
         }
         for label in ["cutout", "metadata", "ramon-put", "http-status", "trace-slow"] {
