@@ -19,11 +19,12 @@ pub mod cache;
 
 pub use cache::{CacheConfig, CacheMetrics, CacheStatus, CuboidCache};
 
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 use crate::array::{DenseVolume, VoxelScalar};
 use crate::core::{Dataset, Project, Vec3};
 use crate::morton;
+use crate::obs::heat::HeatTracker;
 use crate::storage::{Blob, Engine};
 use crate::util::{codec, gzip};
 use crate::{Error, Result};
@@ -54,13 +55,17 @@ pub struct CuboidStore {
     engine: Engine,
     codec: Codec,
     cache: Option<Arc<CuboidCache>>,
+    /// Workload heat map (DESIGN.md §11): every keyed read/write below
+    /// — cache hits included — is recorded here when the cluster
+    /// attaches a tracker. Set once; reads are lock-free.
+    heat: OnceLock<Arc<HeatTracker>>,
 }
 
 impl CuboidStore {
     pub fn new(dataset: Arc<Dataset>, project: Arc<Project>, engine: Engine) -> Self {
         let codec =
             if project.gzip_level == 0 { Codec::Raw } else { Codec::Gzip(project.gzip_level) };
-        CuboidStore { dataset, project, engine, codec, cache: None }
+        CuboidStore { dataset, project, engine, codec, cache: None, heat: OnceLock::new() }
     }
 
     /// Override the value codec (ablation bench: gzip vs RLE vs raw).
@@ -78,6 +83,17 @@ impl CuboidStore {
     /// The attached cuboid cache, if any.
     pub fn cache(&self) -> Option<&Arc<CuboidCache>> {
         self.cache.as_ref()
+    }
+
+    /// Attach the project's heat tracker. Idempotent: only the first
+    /// attach wins (the cluster attaches exactly one per project).
+    pub fn set_heat(&self, heat: Arc<HeatTracker>) {
+        let _ = self.heat.set(heat);
+    }
+
+    /// The attached heat tracker, if any.
+    pub fn heat(&self) -> Option<&Arc<HeatTracker>> {
+        self.heat.get()
     }
 
     pub fn engine(&self) -> &Engine {
@@ -216,6 +232,16 @@ impl CuboidStore {
             }
         }
 
+        if let Some(heat) = self.heat.get() {
+            for (code, slot) in codes.iter().zip(&blobs) {
+                let bytes = match slot {
+                    Some(Some(v)) => v.len() as u64,
+                    _ => 0,
+                };
+                heat.record_read(*code, bytes);
+            }
+        }
+
         blobs
             .into_iter()
             .map(|slot| match slot.expect("all slots resolved") {
@@ -234,8 +260,14 @@ impl CuboidStore {
     ) -> Result<Option<DenseVolume<T>>> {
         let shape = self.cuboid_shape(res)?;
         let table = self.project.cuboid_table(res, channel);
+        let note = |blob: &Option<Blob>| {
+            if let Some(heat) = self.heat.get() {
+                heat.record_read(code, blob.as_ref().map_or(0, |v| v.len() as u64));
+            }
+        };
         if let Some(cache) = &self.cache {
             if let Some(hit) = cache.get(&table, code) {
+                note(&hit);
                 return match hit {
                     Some(v) => Ok(Some(self.unframe(shape, &v)?)),
                     None => Ok(None),
@@ -244,12 +276,15 @@ impl CuboidStore {
             let epoch = cache.epoch(&table, code);
             let v = self.engine.get(&table, code)?;
             cache.insert_if(&table, code, v.clone(), epoch);
+            note(&v);
             return match v {
                 Some(v) => Ok(Some(self.unframe(shape, &v)?)),
                 None => Ok(None),
             };
         }
-        match self.engine.get(&table, code)? {
+        let v = self.engine.get(&table, code)?;
+        note(&v);
+        match v {
             Some(v) => Ok(Some(self.unframe(shape, &v)?)),
             None => Ok(None),
         }
@@ -286,6 +321,14 @@ impl CuboidStore {
         }
         if !batch.is_empty() {
             self.engine.put_batch(&table, &batch)?;
+        }
+        if let Some(heat) = self.heat.get() {
+            for (code, bytes) in &batch {
+                heat.record_write(*code, bytes.len() as u64);
+            }
+            for code in &dead {
+                heat.record_write(*code, 0);
+            }
         }
         if let Some(cache) = &self.cache {
             for (code, _) in items {

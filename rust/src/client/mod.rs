@@ -280,6 +280,37 @@ pub fn wal_flush(base_url: &str, token: Option<&str>) -> Result<String> {
     Ok(String::from_utf8_lossy(&b).to_string())
 }
 
+/// Shard heat ranking and top hot key ranges (`GET /heat/status/`).
+pub fn heat_status(base_url: &str) -> Result<String> {
+    let (s, b) =
+        request("GET", &format!("{}/heat/status/", base_url.trim_end_matches('/')), &[])?;
+    if s != 200 {
+        return Err(Error::Other(format!("http {s}: {}", String::from_utf8_lossy(&b))));
+    }
+    Ok(String::from_utf8_lossy(&b).to_string())
+}
+
+/// Per-tenant request/byte/worker-second ledgers (`GET /account/status/`).
+pub fn account_status(base_url: &str) -> Result<String> {
+    let (s, b) =
+        request("GET", &format!("{}/account/status/", base_url.trim_end_matches('/')), &[])?;
+    if s != 200 {
+        return Err(Error::Other(format!("http {s}: {}", String::from_utf8_lossy(&b))));
+    }
+    Ok(String::from_utf8_lossy(&b).to_string())
+}
+
+/// Latency-objective attainment and error-budget burn per route class
+/// (`GET /slo/status/`).
+pub fn slo_status(base_url: &str) -> Result<String> {
+    let (s, b) =
+        request("GET", &format!("{}/slo/status/", base_url.trim_end_matches('/')), &[])?;
+    if s != 200 {
+        return Err(Error::Other(format!("http {s}: {}", String::from_utf8_lossy(&b))));
+    }
+    Ok(String::from_utf8_lossy(&b).to_string())
+}
+
 /// Cluster health: node liveness, replica-set epochs/leaders/lag, and
 /// failover counters (`GET /cluster/status/`).
 pub fn cluster_status(base_url: &str) -> Result<String> {

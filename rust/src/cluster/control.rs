@@ -87,6 +87,12 @@ impl ControlPlane {
         }
     }
 
+    /// Forget a project's replica sets (called when a project is
+    /// dropped, so the monitor stops probing retired shards).
+    pub fn unregister_sets(&self, token: &str) {
+        self.sets.write().unwrap().retain(|(t, _)| t != token);
+    }
+
     /// The replica sets registered for `token`, in shard order.
     pub fn sets_for(&self, token: &str) -> Vec<Arc<ReplicaSet>> {
         let mut out: Vec<Arc<ReplicaSet>> = self

@@ -65,6 +65,8 @@ use crate::chunkstore::{CacheConfig, CacheStatus, CuboidCache, CuboidStore};
 use crate::core::{Dataset, Project};
 use crate::cutout::{CutoutService, WriteConfig, WriteStatus};
 use crate::jobs::JobManager;
+use crate::obs::account::{Accountant, LedgerSnapshot};
+use crate::obs::heat::{HeatSnapshot, HeatTracker};
 use crate::obs::registry::{MetricsRegistry, Sample};
 use crate::shard::{NodeId, ShardMap};
 use crate::storage::{migrate, DeviceProfile, Engine, FaultInjector, MemStore, SimulatedStore};
@@ -106,6 +108,13 @@ pub struct Cluster {
     wals: RwLock<HashMap<String, Arc<Wal>>>,
     /// Cuboid caches, by project token (the `/cache/status` surface).
     caches: RwLock<HashMap<String, Arc<CuboidCache>>>,
+    /// Workload heat maps, by project token (the `/heat/status/`
+    /// surface, DESIGN.md §11). The tracker is shared with the
+    /// project's [`CuboidStore`]; a migrate rebinds the store but keeps
+    /// the same tracker, so heat history survives the move.
+    heats: RwLock<HashMap<String, Arc<HeatTracker>>>,
+    /// Per-project tenant ledgers (the `/account/status/` surface).
+    accountant: Arc<Accountant>,
     /// Configuration applied to every project's cache.
     cache_cfg: CacheConfig,
     /// The batch compute engine (the `/jobs/...` surface). Checkpoint
@@ -211,6 +220,8 @@ impl Cluster {
     fn assemble(nodes: Vec<Node>, cfg: ClusterConfig) -> Arc<Cluster> {
         let jobs = Arc::new(JobManager::new(Arc::clone(&nodes[0].engine)));
         let registry = Self::new_registry(&jobs);
+        let accountant = Arc::new(Accountant::new());
+        jobs.set_accountant(Arc::clone(&accountant));
         let control = ControlPlane::new(
             nodes
                 .iter()
@@ -220,18 +231,70 @@ impl Cluster {
         if cfg.monitor {
             control.start_monitor(cfg.monitor_interval);
         }
-        Arc::new(Cluster {
+        let cluster = Arc::new(Cluster {
             nodes,
             datasets: RwLock::new(HashMap::new()),
             projects: RwLock::new(HashMap::new()),
             wals: RwLock::new(HashMap::new()),
             caches: RwLock::new(HashMap::new()),
+            heats: RwLock::new(HashMap::new()),
+            accountant,
             cache_cfg: CacheConfig::default(),
             jobs,
             registry,
             control,
             cfg,
-        })
+        });
+        Self::register_account_metrics(&cluster);
+        cluster
+    }
+
+    /// Register the tenant-accounting collector (`ocpd_account_*`,
+    /// labeled by project). Captures a `Weak` — the registry lives
+    /// inside the cluster, so a strong capture would leak the cluster.
+    fn register_account_metrics(cluster: &Arc<Cluster>) {
+        let weak = Arc::downgrade(cluster);
+        cluster.registry.register("account", move |out| {
+            let Some(cluster) = weak.upgrade() else { return };
+            for (token, s) in cluster.accountant.snapshot() {
+                for (name, help, v) in [
+                    ("ocpd_account_requests_total", "Requests attributed to the project.", s.requests),
+                    ("ocpd_account_bytes_in_total", "Request body bytes received.", s.bytes_in),
+                    ("ocpd_account_bytes_out_total", "Response body bytes sent.", s.bytes_out),
+                    (
+                        "ocpd_account_read_worker_us_total",
+                        "Busy microseconds in the cutout read pool.",
+                        s.read_worker_us,
+                    ),
+                    (
+                        "ocpd_account_write_worker_us_total",
+                        "Busy microseconds in the write pool.",
+                        s.write_worker_us,
+                    ),
+                    (
+                        "ocpd_account_job_worker_us_total",
+                        "Busy microseconds executing job blocks.",
+                        s.job_worker_us,
+                    ),
+                ] {
+                    out.push(Sample::counter(name, help, v).label("project", token.clone()));
+                }
+                let cache_bytes = cluster
+                    .caches
+                    .read()
+                    .unwrap()
+                    .get(&token)
+                    .map_or(0, |c| c.status().bytes);
+                out.push(
+                    Sample::gauge(
+                        "ocpd_account_cache_bytes",
+                        "Cuboid-cache bytes currently held by the project.",
+                        cache_bytes,
+                    )
+                    .label("project", token),
+                );
+            }
+        });
     }
 
     fn role_name(role: NodeRole) -> &'static str {
@@ -421,6 +484,7 @@ impl Cluster {
         let g = ds.level(0)?.grid();
         let total_keys = (g[0].max(g[1]).max(g[2]).next_power_of_two()).pow(3);
         let map = ShardMap::even(total_keys, db_nodes.clone())?;
+        let heat = Arc::new(HeatTracker::new(total_keys, Arc::new(map.clone())));
         let cache = Arc::new(CuboidCache::new(self.cache_cfg));
         let replicas = self.cfg.replicas.min(db_nodes.len());
         let engine: Engine = if replicas > 1 {
@@ -466,13 +530,17 @@ impl Cluster {
             CuboidStore::new(ds, Arc::new(project.clone()), engine)
                 .with_cache(Arc::clone(&cache)),
         );
+        store.set_heat(Arc::clone(&heat));
         let svc = Arc::new(CutoutService::new(store));
+        svc.set_ledger(self.accountant.ledger(&project.token));
         self.register_project_metrics(
             &project.token,
             ProjectHandle::Image(Arc::clone(&svc)),
             Arc::clone(&cache),
             None,
         );
+        self.register_heat_metrics(&project.token, &heat);
+        self.heats.write().unwrap().insert(project.token.clone(), heat);
         self.caches.write().unwrap().insert(project.token.clone(), cache);
         projects.insert(project.token.clone(), ProjectHandle::Image(Arc::clone(&svc)));
         Ok(svc)
@@ -514,26 +582,42 @@ impl Cluster {
             (dest, None)
         };
         let cache = Arc::new(CuboidCache::new(self.cache_cfg));
+        // Annotation projects live on one node, but the heat map still
+        // buckets their Morton space so a future splitter has evidence.
+        let g = ds.level(0)?.grid();
+        let total_keys = (g[0].max(g[1]).max(g[2]).next_power_of_two()).pow(3);
+        let heat =
+            Arc::new(HeatTracker::new(total_keys, Arc::new(ShardMap::single(dbs[0]))));
         if let Some(wal) = &wal {
             // Flush-side invalidation: when the flusher drains a record
             // into the database node, any cached cuboid for that key is
-            // dropped before the overlay entry disappears.
+            // dropped before the overlay entry disappears. The drain also
+            // counts as write traffic on the key's heat bucket (zero
+            // bytes: the payload was already charged at append time).
             let hook_cache = Arc::clone(&cache);
+            let hook_heat = Arc::clone(&heat);
             let hook: Arc<dyn Fn(&str, u64) + Send + Sync> =
-                Arc::new(move |table: &str, key: u64| hook_cache.invalidate(table, key));
+                Arc::new(move |table: &str, key: u64| {
+                    hook_cache.invalidate(table, key);
+                    hook_heat.record_write(key, 0);
+                });
             wal.set_on_apply(Some(hook));
         }
         let store = Arc::new(
             CuboidStore::new(ds, Arc::new(project.clone()), Arc::clone(&engine))
                 .with_cache(Arc::clone(&cache)),
         );
+        store.set_heat(Arc::clone(&heat));
         let db = Arc::new(AnnotationDb::new_with_wal(store, engine, wal.clone())?);
+        db.cutout.set_ledger(self.accountant.ledger(&project.token));
         self.register_project_metrics(
             &project.token,
             ProjectHandle::Annotation(Arc::clone(&db)),
             Arc::clone(&cache),
             wal,
         );
+        self.register_heat_metrics(&project.token, &heat);
+        self.heats.write().unwrap().insert(project.token.clone(), heat);
         self.caches.write().unwrap().insert(project.token.clone(), cache);
         projects.insert(project.token.clone(), ProjectHandle::Annotation(Arc::clone(&db)));
         Ok(db)
@@ -610,7 +694,16 @@ impl Cluster {
             cache.clear();
             store = store.with_cache(Arc::clone(cache));
         }
-        let new_db = Arc::new(AnnotationDb::new(Arc::new(store), dst_engine)?);
+        let store = Arc::new(store);
+        // The heat map and ledger survive the move: access history is a
+        // property of the data, not of which node currently holds it.
+        if let Some(heat) = self.heats.read().unwrap().get(token) {
+            store.set_heat(Arc::clone(heat));
+        }
+        let new_db = Arc::new(AnnotationDb::new(store, dst_engine)?);
+        if let Some(ledger) = self.accountant.get(token) {
+            new_db.cutout.set_ledger(ledger);
+        }
         // Rebind the project's metrics collector too: the old one holds
         // the retired service (and its WAL), which would freeze on the
         // exposition.
@@ -994,6 +1087,123 @@ impl Cluster {
             svc.set_write_config(WriteConfig { workers: workers.max(1), ..cfg });
         }
         projects.len()
+    }
+
+    // ------------------------------------------------------------------
+    // Workload telemetry: heat maps and tenant accounting
+    // ------------------------------------------------------------------
+
+    /// One project's heat tracker, if the project exists.
+    pub fn heat(&self, token: &str) -> Option<Arc<HeatTracker>> {
+        self.heats.read().unwrap().get(token).cloned()
+    }
+
+    /// Folded heat snapshots of every project, by token (the
+    /// `GET /heat/status/` route and `ocpd heat`).
+    pub fn heat_status(&self) -> Vec<(String, HeatSnapshot)> {
+        let heats: Vec<(String, Arc<HeatTracker>)> = {
+            let guard = self.heats.read().unwrap();
+            guard.iter().map(|(k, h)| (k.clone(), Arc::clone(h))).collect()
+        };
+        let mut v: Vec<(String, HeatSnapshot)> =
+            heats.into_iter().map(|(k, h)| (k, h.snapshot())).collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
+    /// The per-tenant accountant (admission-side request recording).
+    pub fn accountant(&self) -> &Arc<Accountant> {
+        &self.accountant
+    }
+
+    /// Ledger snapshots of every project, by token (the
+    /// `GET /account/status/` route).
+    pub fn account_status(&self) -> Vec<(String, LedgerSnapshot)> {
+        self.accountant.snapshot()
+    }
+
+    /// Whether a project with this token exists (the admission-side
+    /// guard that keeps unknown tokens from minting ledgers).
+    pub fn has_project(&self, token: &str) -> bool {
+        self.projects.read().unwrap().contains_key(token)
+    }
+
+    /// Register one project's heat collector: per-shard decayed scores
+    /// plus the project total, all rounded to integral byte-equivalents.
+    fn register_heat_metrics(&self, token: &str, heat: &Arc<HeatTracker>) {
+        let project = token.to_string();
+        let heat = Arc::clone(heat);
+        self.registry.register(format!("heat/{token}"), move |out| {
+            let snap = heat.snapshot();
+            for sh in &snap.shards {
+                let shard = sh.shard.to_string();
+                let labeled = |s: Sample| {
+                    s.label("project", project.clone()).label("shard", shard.clone())
+                };
+                for (name, help, v) in [
+                    (
+                        "ocpd_heat_shard_score",
+                        "Decayed shard heat score, byte-equivalents.",
+                        sh.score,
+                    ),
+                    (
+                        "ocpd_heat_shard_read_bytes",
+                        "Decayed read bytes attributed to the shard.",
+                        sh.read_bytes,
+                    ),
+                    (
+                        "ocpd_heat_shard_write_bytes",
+                        "Decayed write bytes attributed to the shard.",
+                        sh.write_bytes,
+                    ),
+                    (
+                        "ocpd_heat_shard_ops",
+                        "Decayed read+write ops attributed to the shard.",
+                        sh.read_ops + sh.write_ops,
+                    ),
+                ] {
+                    out.push(labeled(Sample::gauge(name, help, v.round() as u64)));
+                }
+            }
+            out.push(
+                Sample::gauge(
+                    "ocpd_heat_total_score",
+                    "Decayed whole-project heat score, byte-equivalents.",
+                    snap.total_score.round() as u64,
+                )
+                .label("project", project.clone()),
+            );
+        });
+    }
+
+    /// Remove a project and every resource keyed by its token: WAL
+    /// (flushed and retired first), cache, heat map, ledger, and all
+    /// metrics collectors. A dropped project must vanish from
+    /// `/metrics/` — stale collectors would freeze the exposition on
+    /// retired handles.
+    pub fn drop_project(&self, token: &str) -> Result<()> {
+        // Take the write lock for check-and-remove so a racing create
+        // of the same token can't interleave.
+        let handle = self.projects.write().unwrap().remove(token);
+        if handle.is_none() {
+            return Err(Error::NotFound(format!("project '{token}'")));
+        }
+        if let Some(wal) = self.wals.write().unwrap().remove(token) {
+            // Drain before retiring so nothing durable is stranded in
+            // the log; a straggler append racing the shutdown gets an
+            // error from the retired WAL rather than silent loss.
+            wal.flush_now()?;
+            wal.shutdown();
+            wal.flush_now()?;
+        }
+        self.caches.write().unwrap().remove(token);
+        self.heats.write().unwrap().remove(token);
+        self.accountant.remove(token);
+        self.control.unregister_sets(token);
+        self.registry.unregister(&format!("project/{token}"));
+        self.registry.unregister(&format!("replication/{token}"));
+        self.registry.unregister(&format!("heat/{token}"));
+        Ok(())
     }
 
     /// Per-node I/O snapshots (the `ocpd info` CLI and benches).

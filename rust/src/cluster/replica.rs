@@ -390,6 +390,7 @@ impl ReplicaSet {
 
         // Ship to followers, in member order; a failed apply marks the
         // follower dead until the control plane catches it back up.
+        let mut sp = trace::span("cluster", "ship");
         let mut live = 0usize;
         let mut acks = 0usize;
         for (i, m) in self.members.iter().enumerate() {
@@ -412,6 +413,10 @@ impl ReplicaSet {
                 }
             }
         }
+        sp.tag("shard", self.shard.to_string());
+        sp.tag("records", muts.len().to_string());
+        sp.tag("acks", format!("{acks}/{live}"));
+        drop(sp);
         self.retain(first_lsn, last_lsn, chunk);
         // Default `min_acks` (usize::MAX) means "every live follower";
         // an explicit value is a hard floor that dead followers do not
@@ -623,8 +628,10 @@ impl ReplicaSet {
             return;
         }
         let _g = self.ship_lock.lock().unwrap();
+        let mut sp = trace::span("cluster", "catch_up");
         let leader_idx = self.leader_idx();
         let head = self.members[leader_idx].applied_lsn.load(Ordering::Acquire);
+        let mut recovered = 0usize;
         for (i, m) in self.members.iter().enumerate() {
             if i == leader_idx || m.alive.load(Ordering::Acquire) {
                 continue;
@@ -646,8 +653,11 @@ impl ReplicaSet {
             if ok {
                 m.applied_lsn.store(head, Ordering::Release);
                 m.alive.store(true, Ordering::Release);
+                recovered += 1;
             }
         }
+        sp.tag("shard", self.shard.to_string());
+        sp.tag("recovered", recovered.to_string());
     }
 
     /// Replay retained chunks past `from` onto a follower.
@@ -669,6 +679,9 @@ impl ReplicaSet {
     /// every in-range key of every in-scope table, delete in-range keys
     /// the leader no longer holds.
     fn resync(&self, leader: &Engine, m: &Replica) -> Result<()> {
+        let mut sp = trace::span("cluster", "resync");
+        sp.tag("shard", self.shard.to_string());
+        sp.tag("node", m.node.to_string());
         let (lo, hi) = self.range;
         let in_range = |k: u64| k >= lo && (k < hi || hi == u64::MAX);
         let prefix = format!("{}/", self.scope);

@@ -52,13 +52,15 @@
 //!
 //! [`shard_map`]: crate::storage::StorageEngine::shard_map
 
-use std::sync::{Arc, RwLock};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock, RwLock};
 
 use crate::array::{DenseVolume, Plane, VoxelScalar};
 use crate::chunkstore::CuboidStore;
 use crate::core::{Box3, Vec3};
 use crate::metrics::{Counter, Histogram};
 use crate::morton;
+use crate::obs::account::Ledger;
 use crate::util::pool::scoped_map;
 use crate::{Error, Result};
 
@@ -255,6 +257,10 @@ pub struct CutoutService {
     /// Write-engine observability (fan-out, elided vs RMW pre-reads,
     /// merge latency).
     pub write_metrics: WriteMetrics,
+    /// The project's tenant ledger (DESIGN.md §11): the read and write
+    /// engines charge their workers' busy time here when the cluster
+    /// attaches one. Set once; reads are lock-free.
+    ledger: OnceLock<Arc<Ledger>>,
 }
 
 impl CutoutService {
@@ -265,7 +271,19 @@ impl CutoutService {
             wcfg: RwLock::new(WriteConfig::default()),
             metrics: ReadMetrics::default(),
             write_metrics: WriteMetrics::default(),
+            ledger: OnceLock::new(),
         }
+    }
+
+    /// Attach the project's resource ledger. Idempotent: the first
+    /// attach wins.
+    pub fn set_ledger(&self, ledger: Arc<Ledger>) {
+        let _ = self.ledger.set(ledger);
+    }
+
+    /// The attached ledger, if any.
+    pub fn ledger(&self) -> Option<&Arc<Ledger>> {
+        self.ledger.get()
     }
 
     /// Override the read-engine configuration.
@@ -444,11 +462,15 @@ impl CutoutService {
             if record {
                 self.metrics.sequential_reads.inc();
             }
+            let t0 = std::time::Instant::now();
             let cuboids = self.store.read_cuboids::<T>(res, channel, &codes)?;
             for (code, cub) in codes.iter().zip(cuboids) {
                 let Some(cub) = cub else { continue }; // lazy: absent = zeros
                 let Some((src, dst)) = self.placement(*code, cshape, &bx) else { continue };
                 out.copy_box_from(&cub, src, dst);
+            }
+            if let Some(l) = self.ledger.get() {
+                l.add_read_worker_us(t0.elapsed().as_micros() as u64);
             }
             return Ok(out);
         }
@@ -460,23 +482,34 @@ impl CutoutService {
             self.metrics.fanout_width.record_value(batches.len() as u64);
         }
         let raw = RawOut::<T> { ptr: out.as_mut_slice().as_mut_ptr(), dims: bx.extent() };
+        // Summed per-batch busy time — the tenant's worker-seconds bill
+        // is what the pool actually spent, not the request's wall time.
+        let busy_us = AtomicU64::new(0);
         let results = scoped_map(batches.len(), workers, |b| -> Result<()> {
-            let (lo, hi) = batches[b];
-            let chunk = &codes[lo..hi];
-            let mut bsp = crate::obs::trace::span("cutout", format!("batch {b}"));
-            bsp.tag("cuboids", chunk.len().to_string());
-            let cuboids = self.store.read_cuboids::<T>(res, channel, chunk)?;
-            for (code, cub) in chunk.iter().zip(cuboids) {
-                let Some(cub) = cub else { continue };
-                let Some((src, dst)) = self.placement(*code, cshape, &bx) else { continue };
-                // Safety: batches partition the code set, and distinct
-                // cuboids map to disjoint regions of the output.
-                unsafe { raw.copy_box_from(&cub, src, dst) };
-            }
-            Ok(())
+            let t0 = std::time::Instant::now();
+            let r = (|| -> Result<()> {
+                let (lo, hi) = batches[b];
+                let chunk = &codes[lo..hi];
+                let mut bsp = crate::obs::trace::span("cutout", format!("batch {b}"));
+                bsp.tag("cuboids", chunk.len().to_string());
+                let cuboids = self.store.read_cuboids::<T>(res, channel, chunk)?;
+                for (code, cub) in chunk.iter().zip(cuboids) {
+                    let Some(cub) = cub else { continue };
+                    let Some((src, dst)) = self.placement(*code, cshape, &bx) else { continue };
+                    // Safety: batches partition the code set, and distinct
+                    // cuboids map to disjoint regions of the output.
+                    unsafe { raw.copy_box_from(&cub, src, dst) };
+                }
+                Ok(())
+            })();
+            busy_us.fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+            r
         });
         for r in results {
             r?;
+        }
+        if let Some(l) = self.ledger.get() {
+            l.add_read_worker_us(busy_us.load(Ordering::Relaxed));
         }
         Ok(out)
     }
@@ -715,17 +748,29 @@ impl CutoutService {
         };
         if batches.len() <= 1 {
             self.write_metrics.sequential_writes.inc();
-            return self.merge_and_commit(res, channel, &items, &bx, vol, merge);
+            let t0 = std::time::Instant::now();
+            let r = self.merge_and_commit(res, channel, &items, &bx, vol, merge);
+            if let Some(l) = self.ledger.get() {
+                l.add_write_worker_us(t0.elapsed().as_micros() as u64);
+            }
+            return r;
         }
 
         self.write_metrics.parallel_writes.inc();
         self.write_metrics.fanout_width.record_value(batches.len() as u64);
+        let busy_us = AtomicU64::new(0);
         let results = scoped_map(batches.len(), workers, |b| {
+            let t0 = std::time::Instant::now();
             let (lo, hi) = batches[b];
-            self.merge_and_commit(res, channel, &items[lo..hi], &bx, vol, merge)
+            let r = self.merge_and_commit(res, channel, &items[lo..hi], &bx, vol, merge);
+            busy_us.fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+            r
         });
         for r in results {
             r?;
+        }
+        if let Some(l) = self.ledger.get() {
+            l.add_write_worker_us(busy_us.load(Ordering::Relaxed));
         }
         Ok(())
     }

@@ -84,6 +84,12 @@ pub trait JobSpec: Send + Sync {
     /// Human-readable job name, e.g. `propagate/synapses_v0`.
     fn name(&self) -> String;
 
+    /// Project token this job's work is billed to (tenant accounting,
+    /// DESIGN.md §11). `None` — the default — leaves the job unbilled.
+    fn project(&self) -> Option<String> {
+        None
+    }
+
     /// The full block list. Must be identical across calls (and across
     /// process restarts) for checkpoint resume to be sound.
     fn plan(&self) -> Result<Vec<JobBlock>>;
@@ -240,6 +246,9 @@ pub struct JobHandle {
     items: AtomicU64,
     started: Instant,
     pub metrics: JobMetrics,
+    /// Tenant ledger the workers bill block time to (resolved from the
+    /// manager's accountant and the spec's project at submit).
+    ledger: Option<Arc<crate::obs::account::Ledger>>,
 }
 
 impl JobHandle {
@@ -508,6 +517,9 @@ fn run_job(handle: &JobHandle) -> (JobState, Option<String>) {
                                     break;
                                 }
                                 handle.metrics.block_latency.record(t0.elapsed());
+                                if let Some(ledger) = &handle.ledger {
+                                    ledger.add_job_worker_us(t0.elapsed().as_micros() as u64);
+                                }
                                 handle.items.fetch_add(items, Ordering::Relaxed);
                                 let done_total =
                                     handle.completed.fetch_add(1, Ordering::Relaxed) + 1;
@@ -564,6 +576,9 @@ pub struct JobManager {
     journal: Engine,
     jobs: RwLock<BTreeMap<u64, Arc<JobHandle>>>,
     next_id: AtomicU64,
+    /// Tenant accountant (set by the cluster): jobs whose spec names a
+    /// project bill their block time to that project's ledger.
+    accountant: RwLock<Option<Arc<crate::obs::account::Accountant>>>,
 }
 
 impl JobManager {
@@ -586,7 +601,15 @@ impl JobManager {
             journal,
             jobs: RwLock::new(BTreeMap::new()),
             next_id: AtomicU64::new(next),
+            accountant: RwLock::new(None),
         }
+    }
+
+    /// Point job billing at the cluster's tenant accountant. Jobs
+    /// submitted afterwards bill block time per their spec's
+    /// [`JobSpec::project`].
+    pub fn set_accountant(&self, accountant: Arc<crate::obs::account::Accountant>) {
+        *self.accountant.write().unwrap() = Some(accountant);
     }
 
     /// Engine holding the checkpoint journals.
@@ -642,6 +665,12 @@ impl JobManager {
             }
         }
         let name = spec.name();
+        let ledger = self
+            .accountant
+            .read()
+            .unwrap()
+            .as_ref()
+            .and_then(|a| spec.project().map(|p| a.ledger(&p)));
         let handle = Arc::new(JobHandle {
             id,
             name,
@@ -657,6 +686,7 @@ impl JobManager {
             items: AtomicU64::new(0),
             started: Instant::now(),
             metrics: JobMetrics::default(),
+            ledger,
         });
         let runner = Arc::clone(&handle);
         std::thread::Builder::new()

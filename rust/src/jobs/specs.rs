@@ -212,6 +212,10 @@ impl JobSpec for PropagateJob {
         format!("propagate/{}", self.svc().store().project.token)
     }
 
+    fn project(&self) -> Option<String> {
+        Some(self.svc().store().project.token.clone())
+    }
+
     fn plan(&self) -> Result<Vec<JobBlock>> {
         let svc = self.svc();
         let ds = &svc.store().dataset;
@@ -268,6 +272,10 @@ impl SynapseDetectJob {
 impl JobSpec for SynapseDetectJob {
     fn name(&self) -> String {
         format!("synapse/{}", self.pipeline.annotations.project.token)
+    }
+
+    fn project(&self) -> Option<String> {
+        Some(self.pipeline.annotations.project.token.clone())
     }
 
     fn plan(&self) -> Result<Vec<JobBlock>> {
@@ -344,6 +352,10 @@ impl BulkIngestJob {
 impl JobSpec for BulkIngestJob {
     fn name(&self) -> String {
         format!("ingest/{}", self.svc.store().project.token)
+    }
+
+    fn project(&self) -> Option<String> {
+        Some(self.svc.store().project.token.clone())
     }
 
     fn plan(&self) -> Result<Vec<JobBlock>> {

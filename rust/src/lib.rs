@@ -43,6 +43,7 @@ pub mod core;
 pub mod cutout;
 pub mod ingest;
 pub mod jobs;
+pub mod loadgen;
 pub mod metrics;
 pub mod morton;
 pub mod obs;

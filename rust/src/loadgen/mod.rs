@@ -1,0 +1,576 @@
+//! Open-loop load generator (`ocpd loadgen`): drive a live server with
+//! a mixed, skewable workload at a fixed arrival rate and measure
+//! latency without coordinated omission.
+//!
+//! **Open loop**: arrivals are scheduled on a fixed timetable
+//! (`i / rate` seconds after start) *before* any response comes back,
+//! and each request's latency is measured from its *scheduled* start —
+//! so a stalled server inflates the recorded tail instead of silently
+//! slowing the offered load, the classic closed-loop measurement bug.
+//! Workers claim arrivals from a shared counter; when all workers are
+//! busy, late arrivals accumulate queueing delay that the histogram
+//! keeps.
+//!
+//! Scenarios model the paper's traffic classes: interactive cutout
+//! reads and tile zooms, annotation writes through the SSD
+//! write-absorber, and job-status polls. The `hotspot` knob skews
+//! spatial scenarios onto the volume's origin corner, which is what
+//! lights up one shard in the heat map (`GET /heat/status/`) — the
+//! skewed-workload integration test drives exactly that.
+//!
+//! All requests ride the pooled keep-alive client
+//! ([`crate::web::http::request`]); 429/503 answers and transport
+//! errors are counted per scenario, never silently retried.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+use crate::array::DenseVolume;
+use crate::core::Dtype;
+use crate::metrics::{Counter, Histogram};
+use crate::util::Rng;
+use crate::web::http::request;
+use crate::web::ocpk;
+use crate::{Error, Result};
+
+/// The workload scenarios.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scenario {
+    /// `GET /{token}/ocpk/0/...` — interactive volume read.
+    CutoutRead,
+    /// `GET /{token}/tile/0/...` — viewer tile fetch.
+    TileZoom,
+    /// `PUT /{ann}/overwrite/0/` — annotation volume write.
+    AnnotationWrite,
+    /// `GET /jobs/status/` — cheap status poll.
+    JobPoll,
+}
+
+impl Scenario {
+    pub fn name(self) -> &'static str {
+        match self {
+            Scenario::CutoutRead => "cutout_read",
+            Scenario::TileZoom => "tile_zoom",
+            Scenario::AnnotationWrite => "annotation_write",
+            Scenario::JobPoll => "job_poll",
+        }
+    }
+}
+
+const SCENARIOS: [Scenario; 4] =
+    [Scenario::CutoutRead, Scenario::TileZoom, Scenario::AnnotationWrite, Scenario::JobPoll];
+
+/// Relative scenario weights (zero disables a scenario).
+#[derive(Clone, Copy, Debug)]
+pub struct ScenarioMix {
+    pub cutout: u32,
+    pub tile: u32,
+    pub write: u32,
+    pub poll: u32,
+}
+
+impl Default for ScenarioMix {
+    /// Read-heavy interactive traffic with a write and poll trickle —
+    /// the shape §4.2's visualization workload takes.
+    fn default() -> Self {
+        ScenarioMix { cutout: 6, tile: 2, write: 1, poll: 1 }
+    }
+}
+
+impl ScenarioMix {
+    fn weight(&self, s: Scenario) -> u32 {
+        match s {
+            Scenario::CutoutRead => self.cutout,
+            Scenario::TileZoom => self.tile,
+            Scenario::AnnotationWrite => self.write,
+            Scenario::JobPoll => self.poll,
+        }
+    }
+}
+
+/// One load-generation run.
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// Server base URL, e.g. `http://127.0.0.1:8642`.
+    pub base_url: String,
+    /// Image project token for cutout/tile scenarios.
+    pub image_token: String,
+    /// Annotation project token for write scenarios; `None` disables
+    /// writes regardless of the mix weight.
+    pub annotation_token: Option<String>,
+    /// Level-0 dims of the image project (bounds request boxes).
+    pub dims: [u64; 3],
+    /// Target arrival rate, requests/second.
+    pub rate: f64,
+    /// Run length.
+    pub duration: Duration,
+    /// Worker threads issuing requests.
+    pub concurrency: usize,
+    /// RNG seed; every arrival derives its own generator from it, so a
+    /// run is reproducible independent of worker scheduling.
+    pub seed: u64,
+    /// Probability that a spatial scenario targets the origin-corner
+    /// hot region instead of a uniformly random box.
+    pub hotspot: f64,
+    /// Cutout read extent (clamped to `dims`).
+    pub read_extent: [u64; 3],
+    pub mix: ScenarioMix,
+}
+
+impl LoadgenConfig {
+    pub fn new(base_url: &str, image_token: &str) -> Self {
+        LoadgenConfig {
+            base_url: base_url.trim_end_matches('/').to_string(),
+            image_token: image_token.to_string(),
+            annotation_token: None,
+            dims: [256, 256, 32],
+            rate: 100.0,
+            duration: Duration::from_secs(5),
+            concurrency: 4,
+            seed: 1,
+            hotspot: 0.0,
+            read_extent: [64, 64, 8],
+            mix: ScenarioMix::default(),
+        }
+    }
+}
+
+/// Latency and outcome counters for one scenario.
+#[derive(Default)]
+struct Stats {
+    hist: Histogram,
+    ok: Counter,
+    http_429: Counter,
+    http_503: Counter,
+    /// Non-2xx answers other than 429/503.
+    http_errors: Counter,
+    /// Connect/read/write failures — the request never got an answer.
+    transport_errors: Counter,
+}
+
+impl Stats {
+    fn record(&self, latency: Duration, outcome: &Result<(u16, Vec<u8>)>) {
+        self.hist.record(latency);
+        match outcome {
+            Ok((200, _)) => self.ok.inc(),
+            Ok((429, _)) => self.http_429.inc(),
+            Ok((503, _)) => self.http_503.inc(),
+            Ok(_) => self.http_errors.inc(),
+            Err(_) => self.transport_errors.inc(),
+        }
+    }
+
+    fn row(&self, scenario: &str) -> ScenarioRow {
+        let snap = self.hist.snapshot();
+        ScenarioRow {
+            scenario: scenario.to_string(),
+            requests: snap.count,
+            ok: self.ok.get(),
+            http_429: self.http_429.get(),
+            http_503: self.http_503.get(),
+            http_errors: self.http_errors.get(),
+            transport_errors: self.transport_errors.get(),
+            mean_us: snap.mean(),
+            p50_us: snap.percentile(50.0),
+            p95_us: snap.percentile(95.0),
+            p99_us: snap.percentile(99.0),
+            p999_us: snap.percentile(99.9),
+        }
+    }
+}
+
+/// One row of the report: a scenario's outcome counts and latency
+/// percentiles (µs, log2-bucket upper edges).
+#[derive(Clone, Debug)]
+pub struct ScenarioRow {
+    pub scenario: String,
+    pub requests: u64,
+    pub ok: u64,
+    pub http_429: u64,
+    pub http_503: u64,
+    pub http_errors: u64,
+    pub transport_errors: u64,
+    pub mean_us: f64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub p999_us: u64,
+}
+
+impl ScenarioRow {
+    /// Render as a JSON object (the `rows` entries of
+    /// `BENCH_loadgen.json`).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"scenario\": \"{}\", \"requests\": {}, \"ok\": {}, \"http_429\": {}, \
+             \"http_503\": {}, \"http_errors\": {}, \"transport_errors\": {}, \
+             \"mean_us\": {:.1}, \"p50_us\": {}, \"p95_us\": {}, \"p99_us\": {}, \
+             \"p999_us\": {}}}",
+            self.scenario,
+            self.requests,
+            self.ok,
+            self.http_429,
+            self.http_503,
+            self.http_errors,
+            self.transport_errors,
+            self.mean_us,
+            self.p50_us,
+            self.p95_us,
+            self.p99_us,
+            self.p999_us
+        )
+    }
+}
+
+/// The result of one run at one concurrency level.
+#[derive(Clone, Debug)]
+pub struct LoadgenReport {
+    pub concurrency: usize,
+    pub target_rps: f64,
+    /// Requests actually issued over the wall time.
+    pub achieved_rps: f64,
+    pub wall_seconds: f64,
+    /// `overall` first, then one row per scenario that saw traffic.
+    pub rows: Vec<ScenarioRow>,
+}
+
+impl LoadgenReport {
+    /// The `overall` row (always present).
+    pub fn overall(&self) -> &ScenarioRow {
+        &self.rows[0]
+    }
+
+    /// Human-readable rendering for the CLI.
+    pub fn render_text(&self) -> String {
+        let mut out = format!(
+            "loadgen: concurrency={} target={:.0}/s achieved={:.1}/s wall={:.2}s\n",
+            self.concurrency, self.target_rps, self.achieved_rps, self.wall_seconds
+        );
+        for r in &self.rows {
+            out.push_str(&format!(
+                "  {}: n={} ok={} 429={} 503={} http_err={} transport_err={} \
+                 p50={}us p95={}us p99={}us p999={}us\n",
+                r.scenario,
+                r.requests,
+                r.ok,
+                r.http_429,
+                r.http_503,
+                r.http_errors,
+                r.transport_errors,
+                r.p50_us,
+                r.p95_us,
+                r.p99_us,
+                r.p999_us
+            ));
+        }
+        out
+    }
+
+    /// Render as a JSON object (one entry of the report's `runs`).
+    pub fn to_json(&self) -> String {
+        let rows: Vec<String> = self.rows.iter().map(|r| format!("      {}", r.to_json())).collect();
+        format!(
+            "{{\"concurrency\": {}, \"target_rps\": {:.1}, \"achieved_rps\": {:.1}, \
+             \"wall_seconds\": {:.3}, \"rows\": [\n{}\n    ]}}",
+            self.concurrency,
+            self.target_rps,
+            self.achieved_rps,
+            self.wall_seconds,
+            rows.join(",\n")
+        )
+    }
+}
+
+/// Render a full `BENCH_loadgen.json` document from runs at several
+/// concurrency levels.
+pub fn render_report_json(cfg: &LoadgenConfig, runs: &[LoadgenReport], provenance: &str) -> String {
+    let mut json = String::from("{\n  \"bench\": \"loadgen\",\n");
+    json.push_str(&format!(
+        "  \"workload\": {{\"rate_rps\": {:.1}, \"duration_s\": {:.1}, \"seed\": {}, \
+         \"hotspot\": {:.2}, \"dims\": [{}, {}, {}], \
+         \"mix\": {{\"cutout\": {}, \"tile\": {}, \"write\": {}, \"poll\": {}}}}},\n",
+        cfg.rate,
+        cfg.duration.as_secs_f64(),
+        cfg.seed,
+        cfg.hotspot,
+        cfg.dims[0],
+        cfg.dims[1],
+        cfg.dims[2],
+        cfg.mix.cutout,
+        cfg.mix.tile,
+        cfg.mix.write,
+        cfg.mix.poll
+    ));
+    json.push_str(&format!("  \"provenance\": \"{provenance}\",\n"));
+    json.push_str("  \"runs\": [\n");
+    let entries: Vec<String> = runs.iter().map(|r| format!("    {}", r.to_json())).collect();
+    json.push_str(&entries.join(",\n"));
+    json.push_str("\n  ]\n}\n");
+    json
+}
+
+/// Pick the arrival's scenario from the weighted mix (writes are
+/// skipped when no annotation token is configured).
+fn pick_scenario(cfg: &LoadgenConfig, rng: &mut Rng) -> Scenario {
+    let weight = |s: Scenario| {
+        if s == Scenario::AnnotationWrite && cfg.annotation_token.is_none() {
+            0
+        } else {
+            cfg.mix.weight(s)
+        }
+    };
+    let total: u64 = SCENARIOS.iter().map(|&s| weight(s) as u64).sum();
+    if total == 0 {
+        return Scenario::JobPoll;
+    }
+    let mut pick = rng.below(total);
+    for &s in &SCENARIOS {
+        let w = weight(s) as u64;
+        if pick < w {
+            return s;
+        }
+        pick -= w;
+    }
+    Scenario::JobPoll
+}
+
+/// A request box: the origin-corner hot region with probability
+/// `hotspot`, a uniformly random in-bounds box otherwise.
+fn pick_box(cfg: &LoadgenConfig, rng: &mut Rng, extent: [u64; 3]) -> ([u64; 3], [u64; 3]) {
+    let ext = [
+        extent[0].clamp(1, cfg.dims[0]),
+        extent[1].clamp(1, cfg.dims[1]),
+        extent[2].clamp(1, cfg.dims[2]),
+    ];
+    let mut lo = [0u64; 3];
+    if !rng.chance(cfg.hotspot) {
+        for a in 0..3 {
+            lo[a] = rng.below(cfg.dims[a] - ext[a] + 1);
+        }
+    }
+    (lo, [lo[0] + ext[0], lo[1] + ext[1], lo[2] + ext[2]])
+}
+
+/// Issue one arrival's request. Returns the raw transport outcome.
+fn issue(cfg: &LoadgenConfig, scenario: Scenario, rng: &mut Rng) -> Result<(u16, Vec<u8>)> {
+    let base = &cfg.base_url;
+    match scenario {
+        Scenario::CutoutRead => {
+            let (lo, hi) = pick_box(cfg, rng, cfg.read_extent);
+            request(
+                "GET",
+                &format!(
+                    "{base}/{}/ocpk/0/{},{}/{},{}/{},{}/",
+                    cfg.image_token, lo[0], hi[0], lo[1], hi[1], lo[2], hi[2]
+                ),
+                &[],
+            )
+        }
+        Scenario::TileZoom => {
+            // Tiles are 256² in x/y; pick an in-bounds tile coordinate
+            // and a z slice, hot-corner-skewed like cutouts.
+            let (lo, _) = pick_box(cfg, rng, [1, 1, 1]);
+            request(
+                "GET",
+                &format!(
+                    "{base}/{}/tile/0/{}/{}_{}.gray",
+                    cfg.image_token,
+                    lo[2],
+                    lo[1] / 256,
+                    lo[0] / 256
+                ),
+                &[],
+            )
+        }
+        Scenario::AnnotationWrite => {
+            let token = cfg.annotation_token.as_deref().unwrap_or(&cfg.image_token);
+            let (lo, hi) = pick_box(cfg, rng, [16, 16, 4]);
+            let ext = [hi[0] - lo[0], hi[1] - lo[1], hi[2] - lo[2]];
+            let mut vol = DenseVolume::<u32>::zeros(ext);
+            vol.fill_box(
+                crate::core::Box3::new([0, 0, 0], ext),
+                1 + rng.below(1 << 20) as u32,
+            );
+            let body = ocpk::encode_volume(Dtype::U32, lo, &vol)?;
+            request("PUT", &format!("{base}/{token}/overwrite/0/"), &body)
+        }
+        Scenario::JobPoll => request("GET", &format!("{base}/jobs/status/"), &[]),
+    }
+}
+
+/// Run one open-loop load generation at `cfg.concurrency` workers.
+///
+/// Fails only on setup errors (zero rate/duration); per-request
+/// failures are counted, not raised.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
+    if cfg.rate <= 0.0 {
+        return Err(Error::BadRequest("loadgen rate must be positive".into()));
+    }
+    let total = (cfg.rate * cfg.duration.as_secs_f64()).ceil() as usize;
+    if total == 0 {
+        return Err(Error::BadRequest("loadgen duration too short for one arrival".into()));
+    }
+    let interval = Duration::from_secs_f64(1.0 / cfg.rate);
+    let stats: Vec<Stats> = (0..SCENARIOS.len()).map(|_| Stats::default()).collect();
+    let overall = Stats::default();
+    let next = AtomicUsize::new(0);
+    let start = Instant::now();
+    std::thread::scope(|scope| {
+        for _ in 0..cfg.concurrency.max(1) {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= total {
+                    return;
+                }
+                // The open-loop schedule: arrival i is due at i/rate
+                // seconds, regardless of how prior requests fared.
+                let due = start + interval.mul_f64(i as f64);
+                let now = Instant::now();
+                if due > now {
+                    std::thread::sleep(due - now);
+                }
+                // Per-arrival RNG: reproducible independent of which
+                // worker claims the arrival.
+                let mut rng =
+                    Rng::new(cfg.seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                let scenario = pick_scenario(cfg, &mut rng);
+                let outcome = issue(cfg, scenario, &mut rng);
+                // Latency from the *scheduled* start: queueing delay
+                // behind saturated workers stays in the tail.
+                let latency = Instant::now().saturating_duration_since(due);
+                let idx = SCENARIOS.iter().position(|&s| s == scenario).unwrap_or(0);
+                stats[idx].record(latency, &outcome);
+                overall.record(latency, &outcome);
+            });
+        }
+    });
+    let wall = start.elapsed().as_secs_f64();
+    let mut rows = vec![overall.row("overall")];
+    for (i, &s) in SCENARIOS.iter().enumerate() {
+        let row = stats[i].row(s.name());
+        if row.requests > 0 {
+            rows.push(row);
+        }
+    }
+    Ok(LoadgenReport {
+        concurrency: cfg.concurrency.max(1),
+        target_rps: cfg.rate,
+        achieved_rps: total as f64 / wall.max(1e-9),
+        wall_seconds: wall,
+        rows,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> LoadgenConfig {
+        LoadgenConfig::new("http://127.0.0.1:1", "img")
+    }
+
+    #[test]
+    fn mix_honors_zero_weights_and_missing_annotation_token() {
+        let mut c = cfg();
+        c.mix = ScenarioMix { cutout: 0, tile: 0, write: 5, poll: 0 };
+        // No annotation token: the only weighted scenario is disabled,
+        // so the picker falls back to the poll scenario.
+        let mut rng = Rng::new(7);
+        for _ in 0..32 {
+            assert_eq!(pick_scenario(&c, &mut rng), Scenario::JobPoll);
+        }
+        c.annotation_token = Some("ann".into());
+        for _ in 0..32 {
+            assert_eq!(pick_scenario(&c, &mut rng), Scenario::AnnotationWrite);
+        }
+    }
+
+    #[test]
+    fn hotspot_pins_boxes_to_the_origin_corner() {
+        let mut c = cfg();
+        c.hotspot = 1.0;
+        let mut rng = Rng::new(3);
+        for _ in 0..64 {
+            let (lo, hi) = pick_box(&c, &mut rng, [64, 64, 8]);
+            assert_eq!(lo, [0, 0, 0]);
+            assert_eq!(hi, [64, 64, 8]);
+        }
+        // hotspot=0 spreads: at least one box away from the origin.
+        c.hotspot = 0.0;
+        let spread = (0..64).any(|_| pick_box(&c, &mut rng, [64, 64, 8]).0 != [0, 0, 0]);
+        assert!(spread, "uniform boxes never left the origin");
+    }
+
+    #[test]
+    fn boxes_stay_in_bounds_and_extents_clamp() {
+        let mut c = cfg();
+        c.dims = [100, 50, 10];
+        let mut rng = Rng::new(11);
+        for _ in 0..256 {
+            let (lo, hi) = pick_box(&c, &mut rng, [64, 64, 64]);
+            for a in 0..3 {
+                assert!(lo[a] < hi[a]);
+                assert!(hi[a] <= c.dims[a], "box {lo:?}..{hi:?} outside {:?}", c.dims);
+            }
+        }
+    }
+
+    #[test]
+    fn report_json_is_well_formed() {
+        let report = LoadgenReport {
+            concurrency: 4,
+            target_rps: 100.0,
+            achieved_rps: 99.5,
+            wall_seconds: 5.02,
+            rows: vec![ScenarioRow {
+                scenario: "overall".into(),
+                requests: 500,
+                ok: 498,
+                http_429: 0,
+                http_503: 2,
+                http_errors: 0,
+                transport_errors: 0,
+                mean_us: 1234.5,
+                p50_us: 1023,
+                p95_us: 4095,
+                p99_us: 8191,
+                p999_us: 16383,
+            }],
+        };
+        let json = render_report_json(&cfg(), &[report], "unit test");
+        assert!(json.contains("\"bench\": \"loadgen\""));
+        assert!(json.contains("\"runs\": ["));
+        assert!(json.contains("\"scenario\": \"overall\""));
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+    }
+
+    #[test]
+    fn run_rejects_degenerate_configs() {
+        let mut c = cfg();
+        c.rate = 0.0;
+        assert!(run(&c).is_err());
+        let mut c = cfg();
+        c.rate = 10.0;
+        c.duration = Duration::ZERO;
+        assert!(run(&c).is_err());
+    }
+
+    #[test]
+    fn open_loop_counts_every_arrival_even_against_a_dead_server() {
+        // Port 1 refuses connections: every request is a transport
+        // error, but the open-loop schedule still issues all of them.
+        let mut c = cfg();
+        c.rate = 200.0;
+        c.duration = Duration::from_millis(100);
+        c.concurrency = 4;
+        c.hotspot = 0.5;
+        let report = run(&c).expect("run completes");
+        let overall = report.overall();
+        assert_eq!(overall.requests, 20);
+        assert_eq!(overall.transport_errors, 20);
+        assert_eq!(overall.ok, 0);
+        // Scenario rows partition the overall count.
+        let scenario_sum: u64 = report.rows[1..].iter().map(|r| r.requests).sum();
+        assert_eq!(scenario_sum, overall.requests);
+    }
+}

@@ -51,6 +51,21 @@
 //! ocpd trace   [--url http://host:port] [--slow | --recent]
 //!     Print the tracer status; with --slow or --recent, print the
 //!     retained span trees instead.
+//!
+//! ocpd heat    [--url http://host:port] [--account] [--slo]
+//!     Print every project's shard heat ranking and top hot key ranges;
+//!     with --account the per-tenant ledgers, with --slo the
+//!     latency-objective attainment, instead.
+//!
+//! ocpd loadgen [--url http://host:port] [--token T] [--annotation T]
+//!              [--rate R] [--duration S] [--concurrency N[,N...]]
+//!              [--hotspot P] [--seed S] [--dims X,Y,Z]
+//!              [--mix C,T,W,P] [--out FILE]
+//!     Open-loop load generator: drive a mixed workload (cutout reads,
+//!     tile zooms, annotation writes, job polls) at a fixed arrival
+//!     rate, print latency percentiles and 429/503/error counts per
+//!     scenario, and — with --out — write the BENCH_loadgen.json
+//!     report (one run per comma-separated concurrency level).
 //! ```
 //!
 //! Data output goes to stdout; server-side events (boot progress,
@@ -161,6 +176,9 @@ fn cmd_serve(flags: HashMap<String, String>) -> ocpd::Result<()> {
         ("GET", "/cluster/status/"),
         ("GET", "/metrics/"),
         ("GET", "/trace/slow/"),
+        ("GET", "/heat/status/"),
+        ("GET", "/account/status/"),
+        ("GET", "/slo/status/"),
         ("POST", "/jobs/propagate/synapses_v0/"),
         ("GET", "/jobs/status/"),
     ] {
@@ -278,6 +296,66 @@ fn cmd_trace(flags: HashMap<String, String>) -> ocpd::Result<()> {
     Ok(())
 }
 
+fn cmd_heat(flags: HashMap<String, String>) -> ocpd::Result<()> {
+    let url: String = flag(&flags, "url", "http://127.0.0.1:8642".to_string());
+    let body = if flags.contains_key("account") {
+        ocpd::client::account_status(&url)?
+    } else if flags.contains_key("slo") {
+        ocpd::client::slo_status(&url)?
+    } else {
+        ocpd::client::heat_status(&url)?
+    };
+    print!("{body}");
+    Ok(())
+}
+
+fn cmd_loadgen(flags: HashMap<String, String>) -> ocpd::Result<()> {
+    let url: String = flag(&flags, "url", "http://127.0.0.1:8642".to_string());
+    let token: String = flag(&flags, "token", "synth".to_string());
+    let mut cfg = ocpd::loadgen::LoadgenConfig::new(&url, &token);
+    cfg.annotation_token = flags.get("annotation").cloned();
+    cfg.dims = parse_dims(&flags, cfg.dims);
+    cfg.rate = flag(&flags, "rate", cfg.rate);
+    cfg.duration = std::time::Duration::from_secs_f64(flag(&flags, "duration", 5.0));
+    cfg.seed = flag(&flags, "seed", cfg.seed);
+    cfg.hotspot = flag(&flags, "hotspot", cfg.hotspot);
+    if let Some(mix) = flags.get("mix") {
+        let v: Vec<u32> = mix.split(',').filter_map(|p| p.parse().ok()).collect();
+        if v.len() != 4 {
+            return Err(ocpd::Error::BadRequest(format!(
+                "bad mix '{mix}' (want CUTOUT,TILE,WRITE,POLL weights)"
+            )));
+        }
+        cfg.mix =
+            ocpd::loadgen::ScenarioMix { cutout: v[0], tile: v[1], write: v[2], poll: v[3] };
+    }
+    let levels: Vec<usize> = flags
+        .get("concurrency")
+        .map(|s| s.split(',').filter_map(|p| p.parse().ok()).collect())
+        .unwrap_or_else(|| vec![cfg.concurrency]);
+    if levels.is_empty() {
+        return Err(ocpd::Error::BadRequest("bad concurrency list".into()));
+    }
+    let mut runs = Vec::new();
+    for c in levels {
+        cfg.concurrency = c;
+        let report = ocpd::loadgen::run(&cfg)?;
+        print!("{}", report.render_text());
+        runs.push(report);
+    }
+    if let Some(out) = flags.get("out") {
+        let json = ocpd::loadgen::render_report_json(
+            &cfg,
+            &runs,
+            "measured by ocpd loadgen against a live server",
+        );
+        std::fs::write(out, json)
+            .map_err(|e| ocpd::Error::Other(format!("writing {out}: {e}")))?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
 fn cmd_jobs(flags: HashMap<String, String>) -> ocpd::Result<()> {
     let url: String = flag(&flags, "url", "http://127.0.0.1:8642".to_string());
     if let Some(id) = flags.get("cancel") {
@@ -306,8 +384,8 @@ fn main() {
         Some((c, r)) => (c.as_str(), r.to_vec()),
         None => {
             eprintln!(
-                "usage: ocpd <serve|detect|info|wal|cache|write|jobs|http|cluster|metrics|trace> \
-                 [flags]"
+                "usage: ocpd <serve|detect|info|wal|cache|write|jobs|http|cluster|metrics|trace\
+                 |heat|loadgen> [flags]"
             );
             std::process::exit(2);
         }
@@ -325,10 +403,13 @@ fn main() {
         "cluster" => cmd_cluster(flags),
         "metrics" => cmd_metrics(flags),
         "trace" => cmd_trace(flags),
+        "heat" => cmd_heat(flags),
+        "loadgen" => cmd_loadgen(flags),
         other => {
             eprintln!(
                 "unknown command '{other}' \
-                 (want serve|detect|info|wal|cache|write|jobs|http|cluster|metrics|trace)"
+                 (want serve|detect|info|wal|cache|write|jobs|http|cluster|metrics|trace\
+                 |heat|loadgen)"
             );
             std::process::exit(2);
         }

@@ -312,6 +312,35 @@ mod tests {
     }
 
     #[test]
+    fn prop_percentile_matches_sorted_reference() {
+        use crate::util::prop::property;
+        // percentile(p) must report the upper edge of the bucket
+        // holding the ceil(p% · n)-th smallest recorded value — checked
+        // against a sorted reference over random value sets.
+        property("percentile_vs_sorted_reference", 200, |g| {
+            let n = 1 + g.usize_below(256);
+            let values = g.vec_u64(n, 1 << 24);
+            let h = Histogram::new();
+            for &v in &values {
+                h.record_value(v);
+            }
+            let mut sorted = values;
+            sorted.sort_unstable();
+            for p in [1.0, 10.0, 50.0, 90.0, 95.0, 99.0, 99.9, 100.0] {
+                let target = ((p / 100.0) * n as f64).ceil().max(1.0) as usize;
+                let reference = sorted[target.min(n) - 1];
+                let expected =
+                    HistogramSnapshot::bucket_edge(Histogram::bucket_of(reference.max(1)));
+                assert_eq!(
+                    h.percentile_us(p),
+                    expected,
+                    "p={p} n={n} reference={reference}"
+                );
+            }
+        });
+    }
+
+    #[test]
     fn stopwatch_rates() {
         let sw = Stopwatch::new();
         std::thread::sleep(Duration::from_millis(10));

@@ -1,0 +1,174 @@
+//! Per-project resource accounting: the tenant ledgers that multi-
+//! tenant QoS (quotas, fair scheduling — ROADMAP item 2) will enforce
+//! against.
+//!
+//! An [`Accountant`] holds one [`Ledger`] per project token. Feeds:
+//!
+//! * **request admission** — the web tier attributes every request
+//!   whose first path segment is a live project token: request count
+//!   plus body bytes in and response bytes out;
+//! * **worker pools** — the cutout read and write engines record each
+//!   worker's busy time (summed across the fan-out, not wall time), and
+//!   the jobs engine records per-block execution time, so
+//!   `worker-seconds` reflects what the pools actually spent per
+//!   tenant;
+//! * **cache residency** — the cluster reports each project's cuboid
+//!   cache bytes held at scrape time (a gauge, not a counter).
+//!
+//! All counters are lock-free atomics; the ledger map takes a write
+//! lock only when a new token first appears.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// Monotonic per-project resource counters.
+#[derive(Default)]
+pub struct Ledger {
+    requests: AtomicU64,
+    bytes_in: AtomicU64,
+    bytes_out: AtomicU64,
+    read_worker_us: AtomicU64,
+    write_worker_us: AtomicU64,
+    job_worker_us: AtomicU64,
+}
+
+impl Ledger {
+    /// One admitted request with `bytes_in` of body and `bytes_out` of
+    /// response payload.
+    pub fn record_request(&self, bytes_in: u64, bytes_out: u64) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.bytes_in.fetch_add(bytes_in, Ordering::Relaxed);
+        self.bytes_out.fetch_add(bytes_out, Ordering::Relaxed);
+    }
+
+    /// Busy microseconds spent in the cutout read pool.
+    pub fn add_read_worker_us(&self, us: u64) {
+        self.read_worker_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    /// Busy microseconds spent in the write pool.
+    pub fn add_write_worker_us(&self, us: u64) {
+        self.write_worker_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    /// Busy microseconds spent executing job blocks.
+    pub fn add_job_worker_us(&self, us: u64) {
+        self.job_worker_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    /// A point-in-time copy of the counters.
+    pub fn snapshot(&self) -> LedgerSnapshot {
+        LedgerSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            bytes_in: self.bytes_in.load(Ordering::Relaxed),
+            bytes_out: self.bytes_out.load(Ordering::Relaxed),
+            read_worker_us: self.read_worker_us.load(Ordering::Relaxed),
+            write_worker_us: self.write_worker_us.load(Ordering::Relaxed),
+            job_worker_us: self.job_worker_us.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Copied counter values of one [`Ledger`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LedgerSnapshot {
+    pub requests: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    pub read_worker_us: u64,
+    pub write_worker_us: u64,
+    pub job_worker_us: u64,
+}
+
+/// The ledger map: one [`Ledger`] per project token, created on first
+/// touch.
+#[derive(Default)]
+pub struct Accountant {
+    ledgers: RwLock<HashMap<String, Arc<Ledger>>>,
+}
+
+impl Accountant {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The ledger for `token`, creating it on first use.
+    pub fn ledger(&self, token: &str) -> Arc<Ledger> {
+        if let Some(l) = self.ledgers.read().unwrap().get(token) {
+            return Arc::clone(l);
+        }
+        let mut w = self.ledgers.write().unwrap();
+        Arc::clone(w.entry(token.to_string()).or_default())
+    }
+
+    /// The ledger for `token` if one exists (read-only surfaces).
+    pub fn get(&self, token: &str) -> Option<Arc<Ledger>> {
+        self.ledgers.read().unwrap().get(token).cloned()
+    }
+
+    /// Drop `token`'s ledger (project deletion).
+    pub fn remove(&self, token: &str) {
+        self.ledgers.write().unwrap().remove(token);
+    }
+
+    /// All ledgers, token-sorted, snapshotted.
+    pub fn snapshot(&self) -> Vec<(String, LedgerSnapshot)> {
+        let mut out: Vec<(String, LedgerSnapshot)> = self
+            .ledgers
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.snapshot()))
+            .collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_counts_accumulate() {
+        let a = Accountant::new();
+        let l = a.ledger("img");
+        l.record_request(100, 4096);
+        l.record_request(0, 512);
+        l.add_read_worker_us(250);
+        l.add_write_worker_us(40);
+        l.add_job_worker_us(9);
+        let s = a.ledger("img").snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.bytes_in, 100);
+        assert_eq!(s.bytes_out, 4608);
+        assert_eq!(s.read_worker_us, 250);
+        assert_eq!(s.write_worker_us, 40);
+        assert_eq!(s.job_worker_us, 9);
+    }
+
+    #[test]
+    fn ledgers_are_per_token_and_removable() {
+        let a = Accountant::new();
+        a.ledger("a").record_request(1, 1);
+        a.ledger("b").record_request(2, 2);
+        let snap = a.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].0, "a");
+        assert_eq!(snap[1].1.bytes_in, 2);
+        a.remove("a");
+        assert!(a.get("a").is_none());
+        assert_eq!(a.snapshot().len(), 1);
+    }
+
+    #[test]
+    fn same_token_shares_one_ledger() {
+        let a = Accountant::new();
+        let l1 = a.ledger("x");
+        let l2 = a.ledger("x");
+        l1.record_request(0, 0);
+        l2.record_request(0, 0);
+        assert_eq!(a.ledger("x").snapshot().requests, 2);
+    }
+}

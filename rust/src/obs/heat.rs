@@ -1,0 +1,394 @@
+//! Shard heat maps: decaying access counters over the Morton key-space.
+//!
+//! Every keyed access — cutout reads and writes (cache hits included,
+//! since [`crate::chunkstore::CuboidStore`] records before consulting
+//! the cache), tile-cache hits, WAL flush applies, job blocks — lands
+//! in a [`HeatTracker`] bucketed over the project's Morton key range.
+//! Buckets decay under an exponentially weighted moving average with a
+//! configurable half-life, so the map answers "what is hot *now*", not
+//! "what was ever touched".
+//!
+//! The bucket grid is strictly finer than (or equal to) the shard grid,
+//! so two derived views come for free at snapshot time:
+//!
+//! * **per-shard heat** — buckets grouped through
+//!   [`crate::shard::ShardMap::shard_for`], the ranking behind
+//!   `GET /heat/status/` and the `ocpd_heat_*` metric families;
+//! * **hot split keys** — [`HeatTracker::hot_split_key`] walks a
+//!   shard's buckets to the key where cumulative heat halves, which is
+//!   exactly the cut a future dynamic shard splitter (ROADMAP item 1)
+//!   needs.
+//!
+//! Recording is lock-free: accesses add to per-bucket atomic *pending*
+//! counters; a snapshot folds pending deltas into the `f64` EWMA state
+//! under a mutex, applying `0.5^(dt / half_life)` decay for the elapsed
+//! interval. The fold takes an explicit elapsed duration internally, so
+//! tests drive decay deterministically via [`HeatTracker::fold_after`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::shard::ShardMap;
+
+/// Weight of one access op in the heat score, in byte-equivalents.
+/// Metadata-sized ops (WAL applies, RAMON lookups) move the needle
+/// without having to lie about their byte volume.
+const OP_WEIGHT: u64 = 1024;
+
+/// Default bucket count over the key-space (clamped to `total_keys`).
+pub const DEFAULT_BUCKETS: usize = 64;
+
+/// Default EWMA half-life.
+pub const DEFAULT_HALF_LIFE: Duration = Duration::from_secs(60);
+
+/// Lock-free pending deltas for one key-range bucket.
+#[derive(Default)]
+struct Pending {
+    read_ops: AtomicU64,
+    read_bytes: AtomicU64,
+    write_ops: AtomicU64,
+    write_bytes: AtomicU64,
+}
+
+/// Decayed EWMA state for one bucket (guarded by the fold mutex).
+#[derive(Clone, Copy, Default)]
+struct Ewma {
+    read_ops: f64,
+    read_bytes: f64,
+    write_ops: f64,
+    write_bytes: f64,
+}
+
+impl Ewma {
+    fn score(&self) -> f64 {
+        self.read_bytes
+            + self.write_bytes
+            + OP_WEIGHT as f64 * (self.read_ops + self.write_ops)
+    }
+}
+
+struct FoldState {
+    buckets: Vec<Ewma>,
+    last_fold: Instant,
+}
+
+/// One bucket of the folded heat map.
+#[derive(Clone, Debug)]
+pub struct BucketHeat {
+    /// Key range `[lo, hi)` this bucket covers.
+    pub lo: u64,
+    pub hi: u64,
+    pub read_ops: f64,
+    pub read_bytes: f64,
+    pub write_ops: f64,
+    pub write_bytes: f64,
+    /// `bytes + OP_WEIGHT × ops`, decayed.
+    pub score: f64,
+}
+
+/// One shard's aggregated heat (buckets grouped by the shard map).
+#[derive(Clone, Debug)]
+pub struct ShardHeat {
+    pub shard: usize,
+    /// Key range `[lo, hi)` of the shard.
+    pub lo: u64,
+    pub hi: u64,
+    pub read_ops: f64,
+    pub read_bytes: f64,
+    pub write_ops: f64,
+    pub write_bytes: f64,
+    pub score: f64,
+}
+
+/// A folded view of the heat map: per-shard ranking plus the raw
+/// bucket grid.
+#[derive(Clone, Debug)]
+pub struct HeatSnapshot {
+    /// Shards sorted hottest-first.
+    pub shards: Vec<ShardHeat>,
+    /// All buckets in key order (including cold ones).
+    pub buckets: Vec<BucketHeat>,
+    /// Sum of all bucket scores.
+    pub total_score: f64,
+}
+
+impl HeatSnapshot {
+    /// The `k` hottest non-cold buckets, hottest first — the "top-K hot
+    /// key ranges" view of `GET /heat/status/`.
+    pub fn top_buckets(&self, k: usize) -> Vec<BucketHeat> {
+        let mut hot: Vec<BucketHeat> =
+            self.buckets.iter().filter(|b| b.score > 0.0).cloned().collect();
+        hot.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap_or(std::cmp::Ordering::Equal));
+        hot.truncate(k);
+        hot
+    }
+}
+
+/// Per-project decaying heat map over the Morton key-space.
+pub struct HeatTracker {
+    total_keys: u64,
+    bucket_width: u64,
+    pending: Vec<Pending>,
+    state: Mutex<FoldState>,
+    half_life: Duration,
+    /// Shard key ranges `[lo, hi)`, ascending; one entry covering
+    /// everything for unsharded (annotation) projects.
+    shards: Arc<ShardMap>,
+}
+
+impl HeatTracker {
+    /// A tracker over `[0, total_keys)` grouped by `shards`, with the
+    /// default bucket grid and half-life.
+    pub fn new(total_keys: u64, shards: Arc<ShardMap>) -> Self {
+        Self::with_config(total_keys, shards, DEFAULT_BUCKETS, DEFAULT_HALF_LIFE)
+    }
+
+    /// Explicit bucket count and half-life (tests, tuning).
+    pub fn with_config(
+        total_keys: u64,
+        shards: Arc<ShardMap>,
+        buckets: usize,
+        half_life: Duration,
+    ) -> Self {
+        let total_keys = total_keys.max(1);
+        let n = (buckets.max(1) as u64).min(total_keys) as usize;
+        let bucket_width = total_keys.div_ceil(n as u64).max(1);
+        let mut pending = Vec::with_capacity(n);
+        pending.resize_with(n, Pending::default);
+        HeatTracker {
+            total_keys,
+            bucket_width,
+            pending,
+            state: Mutex::new(FoldState {
+                buckets: vec![Ewma::default(); n],
+                last_fold: Instant::now(),
+            }),
+            half_life,
+            shards,
+        }
+    }
+
+    /// Total key-space size this tracker covers.
+    pub fn total_keys(&self) -> u64 {
+        self.total_keys
+    }
+
+    fn bucket_of(&self, key: u64) -> usize {
+        ((key / self.bucket_width) as usize).min(self.pending.len() - 1)
+    }
+
+    /// Record one read of `bytes` at Morton `key`. Lock-free.
+    pub fn record_read(&self, key: u64, bytes: u64) {
+        let b = &self.pending[self.bucket_of(key)];
+        b.read_ops.fetch_add(1, Ordering::Relaxed);
+        b.read_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Record one write of `bytes` at Morton `key`. Lock-free.
+    pub fn record_write(&self, key: u64, bytes: u64) {
+        let b = &self.pending[self.bucket_of(key)];
+        b.write_ops.fetch_add(1, Ordering::Relaxed);
+        b.write_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Fold pending deltas into the EWMA state, decaying the existing
+    /// state by `0.5^(elapsed / half_life)`.
+    fn fold(&self, elapsed: Duration) {
+        let mut st = self.state.lock().unwrap();
+        let factor = if self.half_life.is_zero() {
+            0.0
+        } else {
+            0.5f64.powf(elapsed.as_secs_f64() / self.half_life.as_secs_f64())
+        };
+        for (ewma, pend) in st.buckets.iter_mut().zip(&self.pending) {
+            ewma.read_ops = ewma.read_ops * factor + pend.read_ops.swap(0, Ordering::Relaxed) as f64;
+            ewma.read_bytes =
+                ewma.read_bytes * factor + pend.read_bytes.swap(0, Ordering::Relaxed) as f64;
+            ewma.write_ops =
+                ewma.write_ops * factor + pend.write_ops.swap(0, Ordering::Relaxed) as f64;
+            ewma.write_bytes =
+                ewma.write_bytes * factor + pend.write_bytes.swap(0, Ordering::Relaxed) as f64;
+        }
+        st.last_fold = Instant::now();
+    }
+
+    /// Deterministic fold: pretend `elapsed` wall time passed since the
+    /// last fold. The decay test harness entry point.
+    pub fn fold_after(&self, elapsed: Duration) {
+        self.fold(elapsed);
+    }
+
+    /// Fold with real elapsed time and return the folded view.
+    pub fn snapshot(&self) -> HeatSnapshot {
+        let elapsed = { self.state.lock().unwrap().last_fold.elapsed() };
+        self.fold(elapsed);
+        self.snapshot_folded()
+    }
+
+    /// The folded view without a new fold (used right after
+    /// [`fold_after`](Self::fold_after) in tests).
+    pub fn snapshot_folded(&self) -> HeatSnapshot {
+        let st = self.state.lock().unwrap();
+        let mut buckets = Vec::with_capacity(st.buckets.len());
+        for (i, e) in st.buckets.iter().enumerate() {
+            let lo = i as u64 * self.bucket_width;
+            buckets.push(BucketHeat {
+                lo,
+                hi: (lo + self.bucket_width).min(self.total_keys),
+                read_ops: e.read_ops,
+                read_bytes: e.read_bytes,
+                write_ops: e.write_ops,
+                write_bytes: e.write_bytes,
+                score: e.score(),
+            });
+        }
+        let mut shards: Vec<ShardHeat> = (0..self.shards.num_shards())
+            .map(|s| {
+                let (lo, hi) = self.shards.shard_range(s);
+                ShardHeat {
+                    shard: s,
+                    lo,
+                    hi,
+                    read_ops: 0.0,
+                    read_bytes: 0.0,
+                    write_ops: 0.0,
+                    write_bytes: 0.0,
+                    score: 0.0,
+                }
+            })
+            .collect();
+        for b in &buckets {
+            // Buckets never straddle shards when the bucket grid is
+            // finer; attribute by the bucket's low key either way.
+            let s = self.shards.shard_for(b.lo.min(self.total_keys - 1));
+            if let Some(sh) = shards.get_mut(s) {
+                sh.read_ops += b.read_ops;
+                sh.read_bytes += b.read_bytes;
+                sh.write_ops += b.write_ops;
+                sh.write_bytes += b.write_bytes;
+                sh.score += b.score;
+            }
+        }
+        let total_score = buckets.iter().map(|b| b.score).sum();
+        shards.sort_by(|a, b| {
+            b.score.partial_cmp(&a.score).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        HeatSnapshot { shards, buckets, total_score }
+    }
+
+    /// The key within shard `shard` where cumulative heat reaches half
+    /// of the shard's total — the split point a dynamic shard splitter
+    /// would cut at. `None` when the shard is cold (no heat to split).
+    pub fn hot_split_key(&self, shard: usize) -> Option<u64> {
+        let snap = self.snapshot();
+        let (lo, hi) = self.shards.shard_range(shard);
+        let in_shard: Vec<&BucketHeat> =
+            snap.buckets.iter().filter(|b| b.lo >= lo && b.lo < hi).collect();
+        let total: f64 = in_shard.iter().map(|b| b.score).sum();
+        if total <= 0.0 {
+            return None;
+        }
+        let mut acc = 0.0;
+        for b in &in_shard {
+            acc += b.score;
+            if acc >= total / 2.0 {
+                // Cut *after* the bucket that crosses the midpoint, but
+                // never at the shard boundary itself.
+                return Some(b.hi.min(hi.saturating_sub(1)).max(lo + 1));
+            }
+        }
+        Some(hi.saturating_sub(1).max(lo + 1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tracker(total: u64, nodes: usize, buckets: usize) -> HeatTracker {
+        let map = Arc::new(
+            ShardMap::even(total, (0..nodes).collect()).expect("even shard map"),
+        );
+        HeatTracker::with_config(total, map, buckets, Duration::from_secs(60))
+    }
+
+    #[test]
+    fn records_land_in_the_right_bucket_and_shard() {
+        let t = tracker(1024, 2, 8); // 2 shards of 512 keys, 8 buckets of 128
+        t.record_read(0, 1000);
+        t.record_write(1023, 500);
+        t.fold_after(Duration::ZERO);
+        let snap = t.snapshot_folded();
+        assert_eq!(snap.buckets.len(), 8);
+        assert_eq!(snap.buckets[0].read_bytes, 1000.0);
+        assert_eq!(snap.buckets[7].write_bytes, 500.0);
+        // Shard ranking: shard 0 got 1000 bytes + 1 op, shard 1 got 500 + 1.
+        assert_eq!(snap.shards[0].shard, 0);
+        assert!(snap.shards[0].score > snap.shards[1].score);
+        assert_eq!(snap.total_score, snap.shards.iter().map(|s| s.score).sum::<f64>());
+    }
+
+    #[test]
+    fn ewma_decays_by_half_life() {
+        let t = tracker(256, 1, 4);
+        t.record_read(0, 1 << 20);
+        t.fold_after(Duration::ZERO); // fold the pending in, no decay
+        let before = t.snapshot_folded().total_score;
+        t.fold_after(Duration::from_secs(60)); // exactly one half-life
+        let after = t.snapshot_folded().total_score;
+        assert!((after - before / 2.0).abs() < 1e-6, "{after} != {before}/2");
+        // A second half-life quarters the original.
+        t.fold_after(Duration::from_secs(60));
+        let quarter = t.snapshot_folded().total_score;
+        assert!((quarter - before / 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fresh_traffic_dominates_decayed_history() {
+        let t = tracker(1024, 2, 8);
+        // Old heat on shard 1's half of the key-space…
+        t.record_read(700, 1 << 20);
+        t.fold_after(Duration::ZERO);
+        // …ten half-lives later, light traffic on shard 0 wins.
+        t.record_read(10, 4096);
+        t.fold_after(Duration::from_secs(600));
+        let snap = t.snapshot_folded();
+        assert_eq!(snap.shards[0].shard, 0, "fresh traffic should rank first");
+    }
+
+    #[test]
+    fn top_buckets_are_sorted_and_skip_cold() {
+        let t = tracker(1024, 1, 8);
+        t.record_read(0, 10);
+        t.record_read(500, 10_000);
+        t.fold_after(Duration::ZERO);
+        let top = t.snapshot_folded().top_buckets(10);
+        assert_eq!(top.len(), 2, "cold buckets must not appear");
+        assert!(top[0].score > top[1].score);
+        assert!(top[0].lo <= 500 && 500 < top[0].hi);
+    }
+
+    #[test]
+    fn hot_split_key_lands_at_the_heat_median() {
+        let t = tracker(1024, 1, 8); // one shard, buckets of 128
+        // All heat in the last bucket: the split must land near it.
+        t.record_read(1000, 1 << 20);
+        t.fold_after(Duration::ZERO);
+        let split = t.hot_split_key(0).expect("hot shard splits");
+        assert!(split > 896, "split {split} should isolate the hot tail bucket");
+        // Cold shard has nothing to split.
+        let cold = tracker(1024, 1, 8);
+        assert_eq!(cold.hot_split_key(0), None);
+    }
+
+    #[test]
+    fn tiny_keyspaces_clamp_the_bucket_grid() {
+        let t = tracker(4, 1, 64);
+        t.record_read(3, 7);
+        t.fold_after(Duration::ZERO);
+        let snap = t.snapshot_folded();
+        assert_eq!(snap.buckets.len(), 4);
+        assert_eq!(snap.buckets[3].read_bytes, 7.0);
+    }
+}

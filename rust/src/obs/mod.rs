@@ -21,6 +21,21 @@
 //!   request-id correlation from the active trace, `OCPD_LOG` filter)
 //!   replacing raw `println!`/`eprintln!` for server-side events.
 
+//! PR 8 adds the *workload* telemetry tier on top (DESIGN.md §11):
+//!
+//! * [`heat`] — per-project decaying access counters bucketed over the
+//!   Morton key-space, aggregated per shard (the load signal a dynamic
+//!   shard splitter needs);
+//! * [`account`] — per-project/tenant resource ledgers (requests,
+//!   bytes, worker-seconds) that quotas and fair scheduling will
+//!   enforce against;
+//! * [`slo`] — latency objectives per route class, with attainment and
+//!   error-budget burn computed from the transport's per-route
+//!   histograms.
+
+pub mod account;
+pub mod heat;
 pub mod log;
 pub mod registry;
+pub mod slo;
 pub mod trace;

@@ -1,0 +1,291 @@
+//! Latency SLOs per route class: attainment and error-budget burn,
+//! computed from the transport's per-route latency histograms.
+//!
+//! Routes fall into three classes with distinct objectives:
+//!
+//! * **interactive** — cutouts, planes, tiles, RAMON reads: the
+//!   visualization path, where a human is waiting;
+//! * **bulk** — volume writes, image ingest, job submission, WAL
+//!   drains: throughput-bound, latency-tolerant;
+//! * **status** — info/status/metrics polls: cheap and frequent.
+//!
+//! Each class declares a latency threshold and an objective (the
+//! fraction of requests that must finish under the threshold).
+//! Thresholds sit exactly on log2 histogram bucket edges
+//! ([`crate::metrics::HistogramSnapshot::bucket_edge`]), so attainment
+//! is computed exactly from bucket counts — no interpolation.
+//!
+//! **Error-budget burn** is the ratio of observed over-threshold
+//! requests to the number the objective allows: burn `< 1000` milli
+//! means budget remains, `≥ 1000` means the objective is currently
+//! missed (and [`evaluate`] emits a structured-log warning). The
+//! families render as `ocpd_slo_*` on `GET /metrics/`.
+
+use std::sync::Arc;
+
+use crate::log_warn;
+use crate::metrics::Histogram;
+
+/// The three route classes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouteClass {
+    Interactive,
+    Bulk,
+    Status,
+}
+
+impl RouteClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            RouteClass::Interactive => "interactive",
+            RouteClass::Bulk => "bulk",
+            RouteClass::Status => "status",
+        }
+    }
+}
+
+/// A latency objective for one route class.
+#[derive(Clone, Copy, Debug)]
+pub struct Objective {
+    pub class: RouteClass,
+    /// Latency threshold, µs. Sits on a log2 bucket edge (`2^k − 1`) so
+    /// bucket counts split exactly at it.
+    pub threshold_us: u64,
+    /// Required under-threshold fraction, in milli (990 = 99.0%).
+    pub objective_milli: u64,
+}
+
+/// The declared objectives: interactive p99 < ~131 ms, bulk p99 <
+/// ~4.2 s, status p99.5 < ~33 ms.
+pub const OBJECTIVES: [Objective; 3] = [
+    Objective {
+        class: RouteClass::Interactive,
+        threshold_us: (1 << 17) - 1, // 131071 µs ≈ 131 ms
+        objective_milli: 990,
+    },
+    Objective {
+        class: RouteClass::Bulk,
+        threshold_us: (1 << 22) - 1, // ≈ 4.2 s
+        objective_milli: 990,
+    },
+    Objective {
+        class: RouteClass::Status,
+        threshold_us: (1 << 15) - 1, // 32767 µs ≈ 33 ms
+        objective_milli: 995,
+    },
+];
+
+/// Which class a route (by its router name) belongs to.
+pub fn class_of_route(route: &str) -> RouteClass {
+    match route {
+        // Reads a human is waiting on.
+        "cutout" | "plane" | "tile" | "objects-query" | "region" | "voxels"
+        | "boundingbox" | "object-cutout" | "object-cutout-box" | "metadata" => {
+            RouteClass::Interactive
+        }
+        // Ingest and batch-work submission.
+        "ramon-put" | "image-put" | "annotation-put" | "jobs-propagate" | "jobs-synapse"
+        | "jobs-ingest" | "wal-flush" | "wal-flush-one" | "cluster-failover"
+        | "write-workers" => RouteClass::Bulk,
+        // Everything else polls state.
+        _ => RouteClass::Status,
+    }
+}
+
+/// Attainment and burn for one class.
+#[derive(Clone, Copy, Debug)]
+pub struct ClassReport {
+    pub class: RouteClass,
+    pub threshold_us: u64,
+    pub objective_milli: u64,
+    /// Requests observed in this class.
+    pub total: u64,
+    /// Requests that finished under the threshold.
+    pub within: u64,
+    /// `within / total`, milli. 1000 when no traffic.
+    pub attainment_milli: u64,
+    /// Error-budget burn, milli: observed misses over allowed misses.
+    /// 0 when no traffic; ≥ 1000 means the objective is missed.
+    pub burn_milli: u64,
+}
+
+/// The full SLO evaluation across classes.
+#[derive(Clone, Debug)]
+pub struct SloReport {
+    pub classes: Vec<ClassReport>,
+}
+
+impl SloReport {
+    /// Human-readable rendering (the `GET /slo/status/` body).
+    pub fn render_text(&self) -> String {
+        let mut out = String::from("slo:\n");
+        for c in &self.classes {
+            out.push_str(&format!(
+                "  {}: threshold={}us objective={}.{}% total={} within={} \
+                 attainment={}.{}% budget_burn={}.{:03}x\n",
+                c.class.name(),
+                c.threshold_us,
+                c.objective_milli / 10,
+                c.objective_milli % 10,
+                c.total,
+                c.within,
+                c.attainment_milli / 10,
+                c.attainment_milli % 10,
+                c.burn_milli / 1000,
+                c.burn_milli % 1000,
+            ));
+        }
+        out
+    }
+}
+
+/// How many of `h`'s recorded values are `≤ threshold_us`. Exact when
+/// the threshold is a bucket upper edge, which [`OBJECTIVES`] are.
+fn count_within(h: &Histogram, threshold_us: u64) -> (u64, u64) {
+    let snap = h.snapshot();
+    let mut within = 0u64;
+    for (i, &c) in snap.buckets.iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        if crate::metrics::HistogramSnapshot::bucket_edge(i) <= threshold_us {
+            within += c;
+        }
+    }
+    (within, snap.count)
+}
+
+/// Evaluate the objectives against the transport's per-route
+/// histograms. Emits a `log_warn!` per class whose error budget is
+/// exhausted (burn ≥ 1000 milli).
+pub fn evaluate(route_hists: &[(&'static str, Arc<Histogram>)]) -> SloReport {
+    let mut classes = Vec::with_capacity(OBJECTIVES.len());
+    for obj in OBJECTIVES {
+        let mut total = 0u64;
+        let mut within = 0u64;
+        for (route, hist) in route_hists {
+            if class_of_route(route) != obj.class {
+                continue;
+            }
+            let (w, t) = count_within(hist, obj.threshold_us);
+            within += w;
+            total += t;
+        }
+        let attainment_milli =
+            if total == 0 { 1000 } else { within.saturating_mul(1000) / total };
+        let burn_milli = if total == 0 {
+            0
+        } else {
+            let missed = (total - within) as f64;
+            // Allowed misses under the objective; floor at a fraction of
+            // one request so low-traffic classes still report burn.
+            let allowed =
+                (total as f64 * (1000 - obj.objective_milli) as f64 / 1000.0).max(1e-9);
+            ((missed / allowed) * 1000.0).round().min(u64::MAX as f64) as u64
+        };
+        if burn_milli >= 1000 {
+            log_warn!(
+                target: "slo",
+                "error budget exhausted class={} attainment_milli={} burn_milli={} total={}",
+                obj.class.name(),
+                attainment_milli,
+                burn_milli,
+                total
+            );
+        }
+        classes.push(ClassReport {
+            class: obj.class,
+            threshold_us: obj.threshold_us,
+            objective_milli: obj.objective_milli,
+            total,
+            within,
+            attainment_milli,
+            burn_milli,
+        });
+    }
+    SloReport { classes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn hist_with(values_us: &[u64]) -> Arc<Histogram> {
+        let h = Histogram::new();
+        for &v in values_us {
+            h.record(Duration::from_micros(v));
+        }
+        Arc::new(h)
+    }
+
+    #[test]
+    fn route_classes_cover_the_route_table() {
+        assert_eq!(class_of_route("cutout"), RouteClass::Interactive);
+        assert_eq!(class_of_route("tile"), RouteClass::Interactive);
+        assert_eq!(class_of_route("image-put"), RouteClass::Bulk);
+        assert_eq!(class_of_route("jobs-ingest"), RouteClass::Bulk);
+        assert_eq!(class_of_route("jobs-status"), RouteClass::Status);
+        assert_eq!(class_of_route("metrics"), RouteClass::Status);
+        assert_eq!(class_of_route("never-heard-of-it"), RouteClass::Status);
+    }
+
+    #[test]
+    fn attainment_counts_under_threshold_exactly() {
+        // 9 fast (1 ms) + 1 slow (1 s) interactive requests: 90.0%.
+        let mut fast: Vec<u64> = vec![1_000; 9];
+        fast.push(1_000_000);
+        let report = evaluate(&[("cutout", hist_with(&fast))]);
+        let c = report
+            .classes
+            .iter()
+            .find(|c| c.class == RouteClass::Interactive)
+            .unwrap();
+        assert_eq!(c.total, 10);
+        assert_eq!(c.within, 9);
+        assert_eq!(c.attainment_milli, 900);
+        // Objective allows 1% of 10 = 0.1 requests; 1 miss burns 10x.
+        assert_eq!(c.burn_milli, 10_000);
+    }
+
+    #[test]
+    fn perfect_traffic_burns_nothing() {
+        let report = evaluate(&[("tile", hist_with(&[500, 900, 2_000]))]);
+        let c = report
+            .classes
+            .iter()
+            .find(|c| c.class == RouteClass::Interactive)
+            .unwrap();
+        assert_eq!(c.attainment_milli, 1000);
+        assert_eq!(c.burn_milli, 0);
+    }
+
+    #[test]
+    fn no_traffic_reports_full_attainment() {
+        let report = evaluate(&[]);
+        for c in &report.classes {
+            assert_eq!(c.attainment_milli, 1000);
+            assert_eq!(c.burn_milli, 0);
+            assert_eq!(c.total, 0);
+        }
+    }
+
+    #[test]
+    fn classes_do_not_bleed_into_each_other() {
+        // A glacial bulk ingest must not hurt interactive attainment.
+        let report = evaluate(&[
+            ("cutout", hist_with(&[1_000, 2_000])),
+            ("image-put", hist_with(&[10_000_000])),
+        ]);
+        let inter = report
+            .classes
+            .iter()
+            .find(|c| c.class == RouteClass::Interactive)
+            .unwrap();
+        let bulk =
+            report.classes.iter().find(|c| c.class == RouteClass::Bulk).unwrap();
+        assert_eq!(inter.attainment_milli, 1000);
+        assert_eq!(bulk.within, 0);
+        assert!(bulk.burn_milli >= 1000);
+    }
+}

@@ -122,6 +122,19 @@ impl TileService {
     pub fn get_tile_shared(&self, key: TileKey) -> Result<Arc<Vec<u8>>> {
         if let Some(t) = self.cache.lock().unwrap().get(&key) {
             self.hits.inc();
+            // A tile-cache hit never reaches the cuboid store, so feed
+            // the heat map here — heat must see the access either way
+            // (DESIGN.md §11). Attribute it to the covering cuboid.
+            if let Some(heat) = self.svc.store().heat() {
+                if let Ok(cshape) = self.svc.store().cuboid_shape(key.res) {
+                    let code = crate::morton::encode3(
+                        key.x * self.tile_size / cshape[0].max(1),
+                        key.y * self.tile_size / cshape[1].max(1),
+                        key.z / cshape[2].max(1),
+                    );
+                    heat.record_read(code, t.len() as u64);
+                }
+            }
             return Ok(t);
         }
         self.misses.inc();

@@ -12,5 +12,6 @@ pub(crate) mod jobs;
 pub(crate) mod obs;
 pub(crate) mod projects;
 pub(crate) mod system;
+pub(crate) mod telemetry;
 pub(crate) mod wal;
 pub(crate) mod write_engine;

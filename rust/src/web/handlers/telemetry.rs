@@ -1,0 +1,61 @@
+//! Workload-telemetry routes: shard heat maps, tenant ledgers, and
+//! SLO attainment.
+
+use crate::web::http::Response;
+use crate::web::router::Ctx;
+use crate::web::routes::OcpService;
+use crate::Result;
+
+/// Hot key ranges listed per project on `GET /heat/status/`.
+const TOP_K: usize = 5;
+
+/// GET /heat/status/ — per-project shard ranking (hottest first) plus
+/// the top-K hot key ranges, from the decayed EWMA heat map.
+pub(crate) fn heat_status(svc: &OcpService, _ctx: &Ctx<'_>) -> Result<Response> {
+    let mut out = String::from("heat:\n");
+    for (token, snap) in svc.cluster.heat_status() {
+        out.push_str(&format!("  {token}: total_score={:.0}\n", snap.total_score));
+        for sh in &snap.shards {
+            out.push_str(&format!(
+                "    shard {} [{},{}): score={:.0} read_bytes={:.0} write_bytes={:.0} \
+                 read_ops={:.1} write_ops={:.1}\n",
+                sh.shard, sh.lo, sh.hi, sh.score, sh.read_bytes, sh.write_bytes, sh.read_ops,
+                sh.write_ops
+            ));
+        }
+        for b in snap.top_buckets(TOP_K) {
+            out.push_str(&format!(
+                "    hot [{},{}): score={:.0} read_bytes={:.0} write_bytes={:.0}\n",
+                b.lo, b.hi, b.score, b.read_bytes, b.write_bytes
+            ));
+        }
+    }
+    Ok(Response::text(out))
+}
+
+/// GET /account/status/ — one ledger line per project: requests,
+/// bytes in/out, and busy worker-microseconds per pool.
+pub(crate) fn account_status(svc: &OcpService, _ctx: &Ctx<'_>) -> Result<Response> {
+    let mut out = String::from("account:\n");
+    for (token, s) in svc.cluster.account_status() {
+        out.push_str(&format!(
+            "  {token}: requests={} bytes_in={} bytes_out={} read_worker_us={} \
+             write_worker_us={} job_worker_us={}\n",
+            s.requests, s.bytes_in, s.bytes_out, s.read_worker_us, s.write_worker_us,
+            s.job_worker_us
+        ));
+    }
+    Ok(Response::text(out))
+}
+
+/// GET /slo/status/ — latency-objective attainment and error-budget
+/// burn per route class, from the transport's per-route histograms.
+pub(crate) fn slo_status(svc: &OcpService, _ctx: &Ctx<'_>) -> Result<Response> {
+    match &svc.http {
+        Some(m) => {
+            let report = crate::obs::slo::evaluate(&m.route_histograms());
+            Ok(Response::text(report.render_text()))
+        }
+        None => Ok(Response::text("slo: no transport metrics (service driven without a server)\n")),
+    }
+}

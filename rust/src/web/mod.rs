@@ -38,10 +38,14 @@
 //! GET /metrics/                                                   unified Prometheus exposition
 //! GET /trace/status/                                              tracer config + retention
 //! GET /trace/recent/  |  GET /trace/slow/                         retained span trees
+//! GET /heat/status/                                               shard heat ranking + hot ranges
+//! GET /account/status/                                            per-tenant ledgers
+//! GET /slo/status/                                                latency-objective attainment
 //! ```
 //!
-//! `info`, `http`, `wal`, `cache`, `jobs`, `write`, `metrics`, and
-//! `trace` are reserved top-level names, not project tokens;
+//! `info`, `http`, `wal`, `cache`, `jobs`, `write`, `metrics`,
+//! `trace`, `cluster`, `heat`, `account`, and `slo` are reserved
+//! top-level names, not project tokens;
 //! wrong-method requests anywhere in the grammar answer `405` with an
 //! auto-derived `Allow` header. Every response carries an
 //! `X-Request-Id` header (echoing the request's, if sent) naming the
@@ -180,6 +184,38 @@ fn register_http_metrics(
                 )
                 .label("route", route),
             );
+        }
+    });
+    let m = Arc::clone(metrics);
+    registry.register("slo", move |out| {
+        for c in crate::obs::slo::evaluate(&m.route_histograms()).classes {
+            let labeled =
+                |s: Sample| s.label("class", c.class.name().to_string());
+            out.push(labeled(Sample::counter(
+                "ocpd_slo_requests_total",
+                "Requests observed in the class.",
+                c.total,
+            )));
+            out.push(labeled(Sample::counter(
+                "ocpd_slo_within_total",
+                "Requests that finished under the class threshold.",
+                c.within,
+            )));
+            out.push(labeled(Sample::gauge(
+                "ocpd_slo_threshold_us",
+                "Latency threshold of the class, microseconds.",
+                c.threshold_us,
+            )));
+            out.push(labeled(Sample::gauge(
+                "ocpd_slo_attainment_milli",
+                "Under-threshold fraction, milli (1000 = 100%).",
+                c.attainment_milli,
+            )));
+            out.push(labeled(Sample::gauge(
+                "ocpd_slo_burn_milli",
+                "Error-budget burn, milli (>= 1000 = objective missed).",
+                c.burn_milli,
+            )));
         }
     });
 }

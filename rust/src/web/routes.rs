@@ -13,7 +13,7 @@ use crate::cluster::Cluster;
 use crate::core::Box3;
 use crate::runtime::Runtime;
 use crate::tiles::TileService;
-use crate::web::handlers::{cache, cluster, jobs, obs, projects, system, wal, write_engine};
+use crate::web::handlers::{cache, cluster, jobs, obs, projects, system, telemetry, wal, write_engine};
 use crate::web::http::{HttpMetrics, Request, Response};
 use crate::web::router::{Outcome, Route, Router, Seg};
 use crate::{Error, Result};
@@ -26,8 +26,10 @@ pub const DEFAULT_STREAM_THRESHOLD: usize = 8 << 20;
 /// Reserved top-level names — never project tokens; the router's
 /// token segments refuse them so `/wal/...` can never be shadowed, and
 /// the cluster refuses to create projects under them.
-pub const RESERVED: &[&str] =
-    &["info", "http", "wal", "cache", "jobs", "write", "metrics", "trace", "cluster"];
+pub const RESERVED: &[&str] = &[
+    "info", "http", "wal", "cache", "jobs", "write", "metrics", "trace", "cluster", "heat",
+    "account", "slo",
+];
 
 /// The Web-service layer over a cluster (the paper's "application
 /// server" role).
@@ -110,6 +112,20 @@ impl OcpService {
             root.tag("route", route);
         }
         root.tag("status", resp.status.to_string());
+        // Tenant accounting, at the one place every project request
+        // passes through. Only live tokens mint ledgers (an unknown
+        // first segment must not grow the accountant unboundedly);
+        // streamed bodies count zero out-bytes — their length is
+        // unknown until the connection drains them.
+        if let Some(&token) = segs.first() {
+            if !RESERVED.contains(&token) && self.cluster.has_project(token) {
+                let out = resp.body.len().unwrap_or(0) as u64;
+                self.cluster
+                    .accountant()
+                    .ledger(token)
+                    .record_request(req.body.len() as u64, out);
+            }
+        }
         resp.request_id = Some(request_id);
         resp
     }
@@ -177,6 +193,28 @@ fn route_table() -> Vec<Route<OcpService>> {
             pattern: &[Lit("trace"), Lit("slow")],
             handler: obs::trace_slow,
             doc: "slow traces (above the threshold) as span trees",
+        },
+        // ---- workload telemetry --------------------------------------
+        Route {
+            name: "heat-status",
+            methods: GET,
+            pattern: &[Lit("heat"), Lit("status")],
+            handler: telemetry::heat_status,
+            doc: "per-project shard heat ranking and top hot key ranges",
+        },
+        Route {
+            name: "account-status",
+            methods: GET,
+            pattern: &[Lit("account"), Lit("status")],
+            handler: telemetry::account_status,
+            doc: "per-project request, byte, and worker-second ledgers",
+        },
+        Route {
+            name: "slo-status",
+            methods: GET,
+            pattern: &[Lit("slo"), Lit("status")],
+            handler: telemetry::slo_status,
+            doc: "latency-objective attainment and error-budget burn per route class",
         },
         // ---- WAL (SSD write-absorber) --------------------------------
         Route {
@@ -530,12 +568,15 @@ mod tests {
         // Every reserved name that owns routes appears as a literal
         // first segment; every route has methods and a doc line.
         let listing = r.listing();
-        for reserved in
-            ["info", "http", "wal", "cache", "jobs", "write", "metrics", "trace", "cluster"]
-        {
+        for reserved in [
+            "info", "http", "wal", "cache", "jobs", "write", "metrics", "trace", "cluster",
+            "heat", "account", "slo",
+        ] {
             assert!(listing.contains(&format!("/{reserved}")), "{reserved} missing:\n{listing}");
         }
-        for label in ["cutout", "metadata", "ramon-put", "http-status", "trace-slow"] {
+        for label in
+            ["cutout", "metadata", "ramon-put", "http-status", "trace-slow", "heat-status"]
+        {
             assert!(listing.contains(label), "{label} missing:\n{listing}");
         }
     }

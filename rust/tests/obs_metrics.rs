@@ -116,6 +116,23 @@ fn one_scrape_carries_every_subsystem() {
         "ocpd_http_request_latency_us",
         "ocpd_http_route_latency_us",
         "ocpd_http_in_flight",
+        "ocpd_heat_shard_score",
+        "ocpd_heat_shard_read_bytes",
+        "ocpd_heat_shard_write_bytes",
+        "ocpd_heat_shard_ops",
+        "ocpd_heat_total_score",
+        "ocpd_account_requests_total",
+        "ocpd_account_bytes_in_total",
+        "ocpd_account_bytes_out_total",
+        "ocpd_account_read_worker_us_total",
+        "ocpd_account_write_worker_us_total",
+        "ocpd_account_job_worker_us_total",
+        "ocpd_account_cache_bytes",
+        "ocpd_slo_requests_total",
+        "ocpd_slo_within_total",
+        "ocpd_slo_threshold_us",
+        "ocpd_slo_attainment_milli",
+        "ocpd_slo_burn_milli",
     ] {
         assert!(typed.contains_key(family), "missing family {family}:\n{text}");
     }
@@ -134,6 +151,19 @@ fn one_scrape_carries_every_subsystem() {
     assert!(split_sample(req_line).1.parse::<u64>().unwrap() > 0, "{req_line}");
     assert!(text.contains("ocpd_http_request_latency_us_bucket{le=\"+Inf\"}"), "{text}");
     assert!(text.contains("ocpd_http_request_latency_us_count"), "{text}");
+
+    // The telemetry layer carries the driven traffic: the image
+    // project is warm in the heat map and metered in its ledger.
+    let heat_line = text
+        .lines()
+        .find(|l| l.starts_with("ocpd_heat_total_score") && l.contains("project=\"img\""))
+        .unwrap();
+    assert_ne!(split_sample(heat_line).1, "0", "{heat_line}");
+    let acct_line = text
+        .lines()
+        .find(|l| l.starts_with("ocpd_account_requests_total") && l.contains("project=\"img\""))
+        .unwrap();
+    assert!(split_sample(acct_line).1.parse::<u64>().unwrap() > 0, "{acct_line}");
 }
 
 #[test]

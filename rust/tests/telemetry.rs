@@ -1,0 +1,159 @@
+//! Workload telemetry (DESIGN.md §11): the skewed-workload heat-map
+//! ranking, per-tenant accounting ledgers, SLO attainment, and the
+//! collector lifecycle — a dropped project must vanish from
+//! `/metrics/`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use ocpd::array::DenseVolume;
+use ocpd::client::OcpClient;
+use ocpd::cluster::Cluster;
+use ocpd::core::{Box3, DatasetBuilder, Project, WriteDiscipline};
+use ocpd::ingest::{generate, ingest_volume, SynthSpec};
+use ocpd::loadgen::{self, LoadgenConfig, ScenarioMix};
+use ocpd::web::Server;
+
+const DIMS: [u64; 3] = [256, 256, 32];
+
+/// Boot a two-node sharded cluster with an ingested image project and
+/// a hot annotation project, served over HTTP.
+fn fixture() -> (Arc<Cluster>, Server) {
+    let cluster = Cluster::in_memory(2, 1);
+    cluster.register_dataset(DatasetBuilder::new("img", DIMS).levels(2).build());
+    let img = cluster.create_image_project(Project::image("img", "img")).unwrap();
+    cluster.create_annotation_project(Project::annotation("ann", "img"), true).unwrap();
+    let sv = generate(&SynthSpec::small(DIMS, 3));
+    ingest_volume(&img, &sv.vol, [256, 256, 16]).unwrap();
+    let server = ocpd::web::serve(Arc::clone(&cluster), None, "127.0.0.1:0", 8).unwrap();
+    (cluster, server)
+}
+
+#[test]
+fn skewed_workload_tops_the_hot_shard_in_the_heat_ranking() {
+    let (cluster, server) = fixture();
+
+    // Open-loop, cutout-only, every request pinned to the origin
+    // corner: all traffic lands on the low end of the Morton
+    // key-space, which shard 0 owns.
+    let mut cfg = LoadgenConfig::new(&server.url(), "img");
+    cfg.rate = 400.0;
+    cfg.duration = Duration::from_millis(500);
+    cfg.concurrency = 4;
+    cfg.hotspot = 1.0;
+    cfg.mix = ScenarioMix { cutout: 1, tile: 0, write: 0, poll: 0 };
+    let report = loadgen::run(&cfg).unwrap();
+
+    // The loadgen itself: every scheduled arrival issued and answered,
+    // and the latency histogram is non-empty.
+    let overall = report.overall();
+    assert_eq!(overall.requests, 200, "{}", report.render_text());
+    assert_eq!(overall.transport_errors, 0, "{}", report.render_text());
+    assert_eq!(overall.ok, overall.requests, "{}", report.render_text());
+    assert!(overall.p50_us > 0);
+    assert_eq!(report.rows[1].scenario, "cutout_read");
+    assert_eq!(report.rows[1].requests, overall.requests);
+
+    // In-process view: shard 0 ranks first and strictly dominates.
+    let heat = cluster.heat("img").expect("image project has a heat tracker");
+    let snap = heat.snapshot();
+    assert!(snap.total_score > 0.0);
+    let hottest = &snap.shards[0];
+    assert_eq!(hottest.shard, 0, "origin-corner reads must heat shard 0");
+    assert!(hottest.read_ops > 0.0);
+    assert!(hottest.read_bytes > 0.0, "cutout responses carry bytes");
+    assert!(hottest.score > snap.shards[1].score);
+
+    // The split key a dynamic splitter would use lies strictly inside
+    // the hot shard's key range.
+    let split = heat.hot_split_key(hottest.shard).expect("hot shard has a split key");
+    assert!(split > hottest.lo && split < hottest.hi, "split {split} outside shard");
+
+    // HTTP view agrees: in the img section, the first (hottest-first)
+    // shard line is shard 0.
+    let body = ocpd::client::heat_status(&server.url()).unwrap();
+    let img_section = &body[body.find("  img:").unwrap_or_else(|| panic!("{body}"))..];
+    let shard_line = img_section
+        .lines()
+        .find(|l| l.trim_start().starts_with("shard "))
+        .unwrap_or_else(|| panic!("{body}"));
+    assert!(shard_line.trim_start().starts_with("shard 0 "), "{body}");
+    assert!(img_section.contains("hot ["), "hot bucket ranges listed: {body}");
+
+    // The same traffic showed up in the SLO report (interactive class
+    // covers cutout reads) and the per-tenant ledger.
+    let slo = ocpd::client::slo_status(&server.url()).unwrap();
+    assert!(slo.contains("interactive: threshold="), "{slo}");
+    let account = ocpd::client::account_status(&server.url()).unwrap();
+    assert!(account.contains("  img: requests="), "{account}");
+}
+
+#[test]
+fn ledgers_meter_requests_bytes_and_worker_time_per_tenant() {
+    let (cluster, server) = fixture();
+
+    let client = OcpClient::new(&server.url(), "img");
+    let bx = Box3::new([0, 0, 0], [128, 128, 16]);
+    for _ in 0..8 {
+        let _ = client.cutout_u8(0, bx).unwrap();
+    }
+    let ann = OcpClient::new(&server.url(), "ann");
+    let wbx = Box3::new([32, 32, 4], [96, 96, 12]);
+    let mut v = DenseVolume::<u32>::zeros(wbx.extent());
+    v.fill_box(Box3::new([0, 0, 0], wbx.extent()), 7);
+    ann.write_annotation(0, wbx.lo, &v, WriteDiscipline::Overwrite).unwrap();
+
+    let accounts = cluster.account_status();
+    let (_, img_ledger) =
+        accounts.iter().find(|(t, _)| t == "img").expect("img ledger exists");
+    assert!(img_ledger.requests >= 8, "{img_ledger:?}");
+    assert!(img_ledger.bytes_out > 0, "cutout responses metered: {img_ledger:?}");
+    assert!(img_ledger.read_worker_us > 0, "read-pool busy time metered: {img_ledger:?}");
+
+    let (_, ann_ledger) =
+        accounts.iter().find(|(t, _)| t == "ann").expect("ann ledger exists");
+    assert!(ann_ledger.requests >= 1, "{ann_ledger:?}");
+    assert!(ann_ledger.bytes_in > 0, "write bodies metered: {ann_ledger:?}");
+
+    // Unknown tokens 404 at admission and must not mint a ledger.
+    let ghost = OcpClient::new(&server.url(), "ghost");
+    assert!(ghost.cutout_u8(0, bx).is_err());
+    assert!(
+        !cluster.account_status().iter().any(|(t, _)| t == "ghost"),
+        "unknown token minted a ledger"
+    );
+}
+
+#[test]
+fn dropped_project_disappears_from_the_metrics_scrape() {
+    let (cluster, server) = fixture();
+
+    // Exercise the project so every per-project collector has samples.
+    let client = OcpClient::new(&server.url(), "img");
+    let _ = client.cutout_u8(0, Box3::new([0, 0, 0], [64, 64, 8])).unwrap();
+
+    let before = ocpd::client::metrics(&server.url()).unwrap();
+    for needle in [
+        "project=\"img\"",
+        "ocpd_heat_shard_score",
+        "ocpd_heat_total_score",
+        "ocpd_account_requests_total",
+    ] {
+        assert!(before.contains(needle), "missing {needle}:\n{before}");
+    }
+
+    cluster.drop_project("img").unwrap();
+
+    let after = ocpd::client::metrics(&server.url()).unwrap();
+    assert!(
+        !after.contains("project=\"img\""),
+        "dropped project still in the scrape:\n{after}"
+    );
+    // The surviving project's collectors are untouched.
+    assert!(after.contains("project=\"ann\""), "{after}");
+    // The heat/account status views forget the token too.
+    assert!(!ocpd::client::heat_status(&server.url()).unwrap().contains("  img:"));
+    assert!(!ocpd::client::account_status(&server.url()).unwrap().contains("  img:"));
+    // Dropping again is a clean NotFound, not a panic.
+    assert!(cluster.drop_project("img").is_err());
+}
