@@ -1,0 +1,260 @@
+//! QoS money shot (DESIGN.md §12): one interactive tenant reading small
+//! cutouts over live HTTP while a bulk tenant storms annotation writes
+//! and batch ingest jobs churn in the background — first with QoS
+//! enforcement off, then on (bulk quota'd, interactive weighted up).
+//! The claim under test: enforcement buys the interactive tenant at
+//! least a 2x better p99 under the same storm.
+//!
+//! Prints the table and rewrites `../BENCH_qos.json` (override with
+//! `OCPD_BENCH_OUT`). `OCPD_BENCH_SMOKE=1` shrinks the workload for CI
+//! (and skips the 2x assertion — smoke timings are too noisy to gate
+//! on).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use ocpd::array::DenseVolume;
+use ocpd::client::{self, OcpClient};
+use ocpd::cluster::Cluster;
+use ocpd::core::{Box3, DatasetBuilder, Dtype, Project};
+use ocpd::ingest::{generate, ingest_volume, SynthSpec};
+use ocpd::web::http::request_info;
+use ocpd::web::{ocpk, Server};
+
+use common::*;
+
+struct Workload {
+    dims: [u64; 3],
+    read_extent: [u64; 3],
+    reads: usize,
+    bulk_threads: usize,
+    /// Bulk write payload extent (u32 voxels).
+    write_extent: [u64; 3],
+    /// Background ingest jobs per phase.
+    jobs: usize,
+    job_dims: [u64; 3],
+}
+
+fn workload() -> Workload {
+    if std::env::var("OCPD_BENCH_SMOKE").is_ok() {
+        Workload {
+            dims: [256, 256, 32],
+            read_extent: [64, 64, 8],
+            reads: 40,
+            bulk_threads: 2,
+            write_extent: [64, 64, 8],
+            jobs: 1,
+            job_dims: [128, 128, 16],
+        }
+    } else {
+        Workload {
+            dims: [256, 256, 32],
+            read_extent: [64, 64, 16],
+            reads: 300,
+            bulk_threads: 4,
+            write_extent: [128, 128, 16],
+            jobs: 2,
+            job_dims: [256, 256, 32],
+        }
+    }
+}
+
+fn boot(w: &Workload) -> (Arc<Cluster>, Server) {
+    let cluster = Cluster::in_memory(2, 1);
+    cluster.register_dataset(DatasetBuilder::new("img", w.dims).levels(1).build());
+    let img = cluster.create_image_project(Project::image("img", "img")).unwrap();
+    cluster.create_annotation_project(Project::annotation("ann", "img"), true).unwrap();
+    let sv = generate(&SynthSpec::small(w.dims, 17));
+    ingest_volume(&img, &sv.vol, [256, 256, 16]).unwrap();
+    let server = ocpd::web::serve(Arc::clone(&cluster), None, "127.0.0.1:0", 8).unwrap();
+    (cluster, server)
+}
+
+struct Row {
+    mode: &'static str,
+    reads: usize,
+    p50_us: u64,
+    p99_us: u64,
+    bulk_ok: u64,
+    bulk_throttled: u64,
+    preemptions: u64,
+}
+
+fn percentile(sorted: &[u64], p: f64) -> u64 {
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx]
+}
+
+/// One phase: boot a fresh cluster, optionally arm enforcement, start
+/// the bulk storm + job churn, then measure the interactive tenant's
+/// per-read latency from a cold start of the contention (cache warmed
+/// first so both phases compare scheduling, not I/O).
+fn run_mode(mode: &'static str, w: &Workload) -> Row {
+    let (cluster, server) = boot(w);
+    let url = server.url();
+    if mode == "on" {
+        client::qos_set_quota(&url, "ann", "req_per_s=8 bytes_per_s=4000000").unwrap();
+        client::qos_set_quota(&url, "img", "req_per_s=unlimited weight=4").unwrap();
+        client::qos_enforce(&url, "on", None).unwrap();
+    }
+
+    // Background job churn: synthetic ingest jobs whose block loop is
+    // the preemption point under test.
+    for i in 0..w.jobs {
+        client::submit_job(
+            &url,
+            "ingest/img",
+            &format!(
+                "dims={},{},{} block=64,64,16 workers=2 seed={}",
+                w.job_dims[0], w.job_dims[1], w.job_dims[2], 100 + i
+            ),
+        )
+        .unwrap();
+    }
+
+    // Bulk storm: adversarial writers that hammer the annotation
+    // project as fast as the server lets them, shrugging off 429s.
+    let stop = Arc::new(AtomicBool::new(false));
+    let e = w.write_extent;
+    let vol = DenseVolume::<u32>::zeros(e);
+    let body = Arc::new(ocpk::encode_volume(Dtype::U32, [0, 0, 0], &vol).unwrap());
+    let mut writers = Vec::new();
+    for _ in 0..w.bulk_threads {
+        let url = url.clone();
+        let stop = Arc::clone(&stop);
+        let body = Arc::clone(&body);
+        writers.push(std::thread::spawn(move || {
+            let wurl = format!("{url}/ann/overwrite/0/");
+            let (mut ok, mut throttled) = (0u64, 0u64);
+            while !stop.load(Ordering::Relaxed) {
+                match request_info("PUT", &wurl, &body) {
+                    Ok(i) if i.status == 200 => ok += 1,
+                    Ok(i) if i.status == 429 || i.status == 503 => {
+                        throttled += 1;
+                        // An over-quota tenant that won't back off still
+                        // shouldn't spin the transport flat out.
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    _ => {}
+                }
+            }
+            (ok, throttled)
+        }));
+    }
+
+    // The interactive tenant: small human-scale cutouts, one at a time.
+    let img = OcpClient::new(&url, "img");
+    let re = w.read_extent;
+    let boxes: Vec<Box3> = (0..4)
+        .map(|i| {
+            let x0 = i * re[0];
+            Box3::new([x0, 0, 0], [x0 + re[0], re[1], re[2]])
+        })
+        .collect();
+    for bx in &boxes {
+        // Warm the cuboid cache: both phases measure contention.
+        let _ = img.cutout_u8(0, *bx).unwrap();
+    }
+    let mut lat = Vec::with_capacity(w.reads);
+    for i in 0..w.reads {
+        let bx = boxes[i % boxes.len()];
+        let t0 = Instant::now();
+        let v = img.cutout_u8(0, bx).unwrap();
+        lat.push(t0.elapsed().as_micros() as u64);
+        assert_eq!(v.dims(), bx.extent());
+    }
+
+    stop.store(true, Ordering::Relaxed);
+    let (mut bulk_ok, mut bulk_throttled) = (0u64, 0u64);
+    for h in writers {
+        let (ok, thr) = h.join().unwrap();
+        bulk_ok += ok;
+        bulk_throttled += thr;
+    }
+    lat.sort_unstable();
+    Row {
+        mode,
+        reads: w.reads,
+        p50_us: percentile(&lat, 0.50),
+        p99_us: percentile(&lat, 0.99),
+        bulk_ok,
+        bulk_throttled,
+        preemptions: cluster.qos().preemptions(),
+    }
+}
+
+fn main() {
+    let w = workload();
+    header(
+        "interactive cutout latency under a bulk storm + job churn",
+        &["enforcement", "reads", "p50_us", "p99_us", "bulk_ok", "bulk_429", "preempt"],
+    );
+    let mut rows = Vec::new();
+    for mode in ["off", "on"] {
+        let r = run_mode(mode, &w);
+        row(&[
+            r.mode.to_string(),
+            r.reads.to_string(),
+            r.p50_us.to_string(),
+            r.p99_us.to_string(),
+            r.bulk_ok.to_string(),
+            r.bulk_throttled.to_string(),
+            r.preemptions.to_string(),
+        ]);
+        rows.push(r);
+    }
+    let improvement = rows[0].p99_us as f64 / rows[1].p99_us.max(1) as f64;
+    println!("\np99 improvement (off/on): {improvement:.2}x");
+    if std::env::var("OCPD_BENCH_SMOKE").is_err() {
+        assert!(
+            improvement >= 2.0,
+            "enforcement must buy the interactive tenant >= 2x p99 ({improvement:.2}x)"
+        );
+    }
+
+    let out = std::env::var("OCPD_BENCH_OUT").unwrap_or_else(|_| "../BENCH_qos.json".into());
+    let mut json = String::from("{\n  \"bench\": \"bench_qos\",\n");
+    json.push_str(&format!(
+        "  \"workload\": {{\"dims\": [{}, {}, {}], \"read_extent\": [{}, {}, {}], \
+         \"reads\": {}, \"bulk_threads\": {}, \"write_extent\": [{}, {}, {}], \
+         \"jobs\": {}, \"quota\": \"ann req_per_s=8 bytes_per_s=4000000; img weight=4\"}},\n",
+        w.dims[0],
+        w.dims[1],
+        w.dims[2],
+        w.read_extent[0],
+        w.read_extent[1],
+        w.read_extent[2],
+        w.reads,
+        w.bulk_threads,
+        w.write_extent[0],
+        w.write_extent[1],
+        w.write_extent[2],
+        w.jobs
+    ));
+    json.push_str("  \"provenance\": \"measured by cargo bench --bench bench_qos\",\n");
+    json.push_str(&format!("  \"p99_improvement\": {improvement:.2},\n"));
+    json.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"enforcement\": \"{}\", \"reads\": {}, \"p50_us\": {}, \"p99_us\": {}, \
+             \"bulk_ok\": {}, \"bulk_throttled\": {}, \"job_preemptions\": {}}}{}\n",
+            r.mode,
+            r.reads,
+            r.p50_us,
+            r.p99_us,
+            r.bulk_ok,
+            r.bulk_throttled,
+            r.preemptions,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

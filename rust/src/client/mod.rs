@@ -11,7 +11,7 @@
 use crate::annotation::RamonObject;
 use crate::array::DenseVolume;
 use crate::core::{Box3, Vec3, WriteDiscipline};
-use crate::web::http::request;
+use crate::web::http::{request, request_with, RequestOpts, RetryPolicy};
 use crate::web::ocpk;
 use crate::{Error, Result};
 
@@ -19,14 +19,35 @@ use crate::{Error, Result};
 pub struct OcpClient {
     base: String,
     token: String,
+    opts: RequestOpts,
 }
 
 impl OcpClient {
     pub fn new(base_url: &str, token: &str) -> Self {
-        OcpClient { base: base_url.trim_end_matches('/').to_string(), token: token.to_string() }
+        OcpClient {
+            base: base_url.trim_end_matches('/').to_string(),
+            token: token.to_string(),
+            opts: RequestOpts::default(),
+        }
     }
 
-    fn check(status: u16, body: Vec<u8>) -> Result<Vec<u8>> {
+    /// Opt in to throttle retries: 429/503 answers are re-issued under
+    /// `policy` (capped exponential backoff with full jitter, floored
+    /// at the server's `Retry-After`). Idempotent calls only — the
+    /// transport never replays a POST.
+    pub fn with_retry(mut self, policy: RetryPolicy) -> Self {
+        self.opts.retry = Some(policy);
+        self
+    }
+
+    /// Send `X-OCPD-Deadline-Ms: ms` on every call: the server abandons
+    /// remaining batch work and answers 504 once the budget expires.
+    pub fn with_deadline_ms(mut self, ms: u64) -> Self {
+        self.opts.deadline_ms = Some(ms);
+        self
+    }
+
+    fn check(status: u16, retry_after: Option<u64>, body: Vec<u8>) -> Result<Vec<u8>> {
         if status == 200 {
             Ok(body)
         } else {
@@ -34,19 +55,23 @@ impl OcpClient {
             Err(match status {
                 404 => Error::NotFound(msg),
                 400 => Error::BadRequest(msg),
+                429 | 503 if retry_after.is_some() => Error::Throttled {
+                    retry_after_ms: retry_after.unwrap_or(1).saturating_mul(1000),
+                },
+                504 => Error::DeadlineExceeded(msg),
                 _ => Error::Other(format!("http {status}: {msg}")),
             })
         }
     }
 
     fn get(&self, path: &str) -> Result<Vec<u8>> {
-        let (s, b) = request("GET", &format!("{}{path}", self.base), &[])?;
-        Self::check(s, b)
+        let info = request_with("GET", &format!("{}{path}", self.base), &[], &self.opts)?;
+        Self::check(info.status, info.retry_after, info.body)
     }
 
     fn put(&self, path: &str, body: &[u8]) -> Result<Vec<u8>> {
-        let (s, b) = request("PUT", &format!("{}{path}", self.base), body)?;
-        Self::check(s, b)
+        let info = request_with("PUT", &format!("{}{path}", self.base), body, &self.opts)?;
+        Self::check(info.status, info.retry_after, info.body)
     }
 
     /// Image cutout (Table 1's first row).
@@ -370,6 +395,45 @@ pub fn job_status(base_url: &str, id: Option<u64>) -> Result<String> {
 pub fn cancel_job(base_url: &str, id: u64) -> Result<String> {
     let url = format!("{}/jobs/cancel/{id}/", base_url.trim_end_matches('/'));
     let (s, b) = request("POST", &url, &[])?;
+    if s != 200 {
+        return Err(Error::Other(format!("http {s}: {}", String::from_utf8_lossy(&b))));
+    }
+    Ok(String::from_utf8_lossy(&b).to_string())
+}
+
+/// QoS admission/fair-sharing status: enforcement state, in-flight
+/// accounting, pool-gate queues, and per-tenant quota and token levels
+/// (`GET /qos/status/`).
+pub fn qos_status(base_url: &str) -> Result<String> {
+    let (s, b) =
+        request("GET", &format!("{}/qos/status/", base_url.trim_end_matches('/')), &[])?;
+    if s != 200 {
+        return Err(Error::Other(format!("http {s}: {}", String::from_utf8_lossy(&b))));
+    }
+    Ok(String::from_utf8_lossy(&b).to_string())
+}
+
+/// Set one tenant's QoS quota. `params` is the whitespace-separated
+/// `key=value` body (`req_per_s=F bytes_per_s=F weight=N`; rates may
+/// be `inf`). Returns the server's `quota TOKEN: ...` echo.
+pub fn qos_set_quota(base_url: &str, token: &str, params: &str) -> Result<String> {
+    let url = format!("{}/qos/quota/{token}/", base_url.trim_end_matches('/'));
+    let (s, b) = request("PUT", &url, params.as_bytes())?;
+    if s != 200 {
+        return Err(Error::Other(format!("http {s}: {}", String::from_utf8_lossy(&b))));
+    }
+    Ok(String::from_utf8_lossy(&b).to_string())
+}
+
+/// Toggle QoS enforcement (`mode` is `on`/`off`); `high_water`, when
+/// given, retunes the overload-shed threshold in in-flight bytes.
+pub fn qos_enforce(base_url: &str, mode: &str, high_water: Option<u64>) -> Result<String> {
+    let url = format!("{}/qos/enforce/{mode}/", base_url.trim_end_matches('/'));
+    let body = match high_water {
+        Some(hw) => format!("high_water={hw}"),
+        None => String::new(),
+    };
+    let (s, b) = request("PUT", &url, body.as_bytes())?;
     if s != 200 {
         return Err(Error::Other(format!("http {s}: {}", String::from_utf8_lossy(&b))));
     }

@@ -68,6 +68,7 @@ use crate::jobs::JobManager;
 use crate::obs::account::{Accountant, LedgerSnapshot};
 use crate::obs::heat::{HeatSnapshot, HeatTracker};
 use crate::obs::registry::{MetricsRegistry, Sample};
+use crate::qos::QosEnforcer;
 use crate::shard::{NodeId, ShardMap};
 use crate::storage::{migrate, DeviceProfile, Engine, FaultInjector, MemStore, SimulatedStore};
 use crate::wal::{Wal, WalConfig, WalEngine, WalStatus};
@@ -115,6 +116,11 @@ pub struct Cluster {
     heats: RwLock<HashMap<String, Arc<HeatTracker>>>,
     /// Per-project tenant ledgers (the `/account/status/` surface).
     accountant: Arc<Accountant>,
+    /// Multi-tenant QoS enforcement: admission token buckets, fair
+    /// worker-pool gates, and preemption (the `/qos/...` surface,
+    /// DESIGN.md §12). Off by default; shared by the dispatcher, the
+    /// cutout/write engines, and the job workers.
+    qos: Arc<QosEnforcer>,
     /// Configuration applied to every project's cache.
     cache_cfg: CacheConfig,
     /// The batch compute engine (the `/jobs/...` surface). Checkpoint
@@ -222,6 +228,8 @@ impl Cluster {
         let registry = Self::new_registry(&jobs);
         let accountant = Arc::new(Accountant::new());
         jobs.set_accountant(Arc::clone(&accountant));
+        let qos = Arc::new(QosEnforcer::new());
+        jobs.set_qos(Arc::clone(&qos));
         let control = ControlPlane::new(
             nodes
                 .iter()
@@ -239,6 +247,7 @@ impl Cluster {
             caches: RwLock::new(HashMap::new()),
             heats: RwLock::new(HashMap::new()),
             accountant,
+            qos,
             cache_cfg: CacheConfig::default(),
             jobs,
             registry,
@@ -246,6 +255,10 @@ impl Cluster {
             cfg,
         });
         Self::register_account_metrics(&cluster);
+        // The QoS collector (`ocpd_qos_*`) captures the enforcer
+        // directly — it holds no cluster reference, so no Weak dance.
+        let qos = Arc::clone(&cluster.qos);
+        cluster.registry.register("qos", move |out| qos.collect(out));
         cluster
     }
 
@@ -533,6 +546,7 @@ impl Cluster {
         store.set_heat(Arc::clone(&heat));
         let svc = Arc::new(CutoutService::new(store));
         svc.set_ledger(self.accountant.ledger(&project.token));
+        svc.set_qos(Arc::clone(&self.qos));
         self.register_project_metrics(
             &project.token,
             ProjectHandle::Image(Arc::clone(&svc)),
@@ -610,6 +624,7 @@ impl Cluster {
         store.set_heat(Arc::clone(&heat));
         let db = Arc::new(AnnotationDb::new_with_wal(store, engine, wal.clone())?);
         db.cutout.set_ledger(self.accountant.ledger(&project.token));
+        db.cutout.set_qos(Arc::clone(&self.qos));
         self.register_project_metrics(
             &project.token,
             ProjectHandle::Annotation(Arc::clone(&db)),
@@ -704,6 +719,7 @@ impl Cluster {
         if let Some(ledger) = self.accountant.get(token) {
             new_db.cutout.set_ledger(ledger);
         }
+        new_db.cutout.set_qos(Arc::clone(&self.qos));
         // Rebind the project's metrics collector too: the old one holds
         // the retired service (and its WAL), which would freeze on the
         // exposition.
@@ -1116,6 +1132,12 @@ impl Cluster {
         &self.accountant
     }
 
+    /// The QoS enforcer: admission token buckets, fair pool gates, and
+    /// preemption (the `/qos/...` surface and `ocpd qos`).
+    pub fn qos(&self) -> &Arc<QosEnforcer> {
+        &self.qos
+    }
+
     /// Ledger snapshots of every project, by token (the
     /// `GET /account/status/` route).
     pub fn account_status(&self) -> Vec<(String, LedgerSnapshot)> {
@@ -1199,6 +1221,7 @@ impl Cluster {
         self.caches.write().unwrap().remove(token);
         self.heats.write().unwrap().remove(token);
         self.accountant.remove(token);
+        self.qos.retire_tenant(token);
         self.control.unregister_sets(token);
         self.registry.unregister(&format!("project/{token}"));
         self.registry.unregister(&format!("replication/{token}"));

@@ -61,6 +61,7 @@ use crate::core::{Box3, Vec3};
 use crate::metrics::{Counter, Histogram};
 use crate::morton;
 use crate::obs::account::Ledger;
+use crate::qos::{GateGuard, Pool, QosEnforcer};
 use crate::util::pool::scoped_map;
 use crate::{Error, Result};
 
@@ -261,6 +262,10 @@ pub struct CutoutService {
     /// engines charge their workers' busy time here when the cluster
     /// attaches one. Set once; reads are lock-free.
     ledger: OnceLock<Arc<Ledger>>,
+    /// The cluster's QoS enforcer (DESIGN.md §12): read/write batches
+    /// acquire fair-gate slots and honor request deadlines when one is
+    /// attached. Set once; reads are lock-free.
+    qos: OnceLock<Arc<QosEnforcer>>,
 }
 
 impl CutoutService {
@@ -272,6 +277,7 @@ impl CutoutService {
             metrics: ReadMetrics::default(),
             write_metrics: WriteMetrics::default(),
             ledger: OnceLock::new(),
+            qos: OnceLock::new(),
         }
     }
 
@@ -284,6 +290,19 @@ impl CutoutService {
     /// The attached ledger, if any.
     pub fn ledger(&self) -> Option<&Arc<Ledger>> {
         self.ledger.get()
+    }
+
+    /// Attach the cluster's QoS enforcer. Idempotent: the first attach
+    /// wins (a migration rebind re-attaches the same enforcer).
+    pub fn set_qos(&self, qos: Arc<QosEnforcer>) {
+        let _ = self.qos.set(qos);
+    }
+
+    /// Acquire a fair-gate slot for one batch of work in `pool`.
+    /// `None` when no enforcer is attached (library use, unit tests);
+    /// a disabled enforcer returns a free guard.
+    fn qos_enter(&self, pool: Pool) -> Option<GateGuard<'_>> {
+        self.qos.get().map(|q| q.enter(pool))
     }
 
     /// Override the read-engine configuration.
@@ -462,6 +481,8 @@ impl CutoutService {
             if record {
                 self.metrics.sequential_reads.inc();
             }
+            crate::qos::ctx::check_deadline()?;
+            let _slot = self.qos_enter(Pool::Read);
             let t0 = std::time::Instant::now();
             let cuboids = self.store.read_cuboids::<T>(res, channel, &codes)?;
             for (code, cub) in codes.iter().zip(cuboids) {
@@ -488,6 +509,11 @@ impl CutoutService {
         let results = scoped_map(batches.len(), workers, |b| -> Result<()> {
             let t0 = std::time::Instant::now();
             let r = (|| -> Result<()> {
+                // Batch boundary: an expired request stops here rather
+                // than finishing work nobody waits for, and the fair
+                // gate interleaves this batch with other tenants'.
+                crate::qos::ctx::check_deadline()?;
+                let _slot = self.qos_enter(Pool::Read);
                 let (lo, hi) = batches[b];
                 let chunk = &codes[lo..hi];
                 let mut bsp = crate::obs::trace::span("cutout", format!("batch {b}"));
@@ -748,6 +774,8 @@ impl CutoutService {
         };
         if batches.len() <= 1 {
             self.write_metrics.sequential_writes.inc();
+            crate::qos::ctx::check_deadline()?;
+            let _slot = self.qos_enter(Pool::Write);
             let t0 = std::time::Instant::now();
             let r = self.merge_and_commit(res, channel, &items, &bx, vol, merge);
             if let Some(l) = self.ledger.get() {
@@ -761,8 +789,14 @@ impl CutoutService {
         let busy_us = AtomicU64::new(0);
         let results = scoped_map(batches.len(), workers, |b| {
             let t0 = std::time::Instant::now();
-            let (lo, hi) = batches[b];
-            let r = self.merge_and_commit(res, channel, &items[lo..hi], &bx, vol, merge);
+            let r = (|| {
+                // Batch boundary: deadline check + fair-gate slot, as
+                // in the read engine.
+                crate::qos::ctx::check_deadline()?;
+                let _slot = self.qos_enter(Pool::Write);
+                let (lo, hi) = batches[b];
+                self.merge_and_commit(res, channel, &items[lo..hi], &bx, vol, merge)
+            })();
             busy_us.fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
             r
         });

@@ -249,6 +249,13 @@ pub struct JobHandle {
     /// Tenant ledger the workers bill block time to (resolved from the
     /// manager's accountant and the spec's project at submit).
     ledger: Option<Arc<crate::obs::account::Ledger>>,
+    /// Project token the job runs against — the QoS tenant its block
+    /// workers schedule under.
+    tenant: Option<Arc<str>>,
+    /// The cluster's QoS enforcer (set by the cluster on the manager):
+    /// workers install a bulk-class context, yield to in-flight
+    /// interactive work at block boundaries, and take job-gate slots.
+    qos: Option<Arc<crate::qos::QosEnforcer>>,
 }
 
 impl JobHandle {
@@ -457,11 +464,29 @@ fn run_job(handle: &JobHandle) -> (JobState, Option<String>) {
                 let trace_ctx = trace_ctx.clone();
                 s.spawn(move || {
                     let _trace = crate::obs::trace::install(trace_ctx);
+                    // Workers run as bulk-class work attributed to the
+                    // job's project: engine calls made inside a block
+                    // queue behind interactive requests in the fair
+                    // gates instead of competing head-to-head.
+                    let _qos_ctx = crate::qos::ctx::install(
+                        handle
+                            .qos
+                            .as_ref()
+                            .map(|_| crate::qos::ctx::ReqCtx::bulk(handle.tenant.clone())),
+                    );
                     loop {
                         if handle.cancel.load(Ordering::Relaxed) {
                             break;
                         }
                         let Some(bi) = claim(queues, w) else { break };
+                        // Block boundary: cheap preemption (jobs
+                        // checkpoint per block, so pausing here costs
+                        // only the wait) and a fair job-gate slot held
+                        // for the block's whole attempt loop.
+                        let _slot = handle.qos.as_ref().map(|q| {
+                            q.yield_to_interactive();
+                            q.enter(crate::qos::Pool::Job)
+                        });
                         let block = &plan[bi];
                         let mut sp =
                             crate::obs::trace::span("job", format!("block {}", block.index));
@@ -579,6 +604,9 @@ pub struct JobManager {
     /// Tenant accountant (set by the cluster): jobs whose spec names a
     /// project bill their block time to that project's ledger.
     accountant: RwLock<Option<Arc<crate::obs::account::Accountant>>>,
+    /// QoS enforcer (set by the cluster): jobs submitted afterwards
+    /// schedule their blocks under it.
+    qos: RwLock<Option<Arc<crate::qos::QosEnforcer>>>,
 }
 
 impl JobManager {
@@ -602,6 +630,7 @@ impl JobManager {
             jobs: RwLock::new(BTreeMap::new()),
             next_id: AtomicU64::new(next),
             accountant: RwLock::new(None),
+            qos: RwLock::new(None),
         }
     }
 
@@ -610,6 +639,14 @@ impl JobManager {
     /// [`JobSpec::project`].
     pub fn set_accountant(&self, accountant: Arc<crate::obs::account::Accountant>) {
         *self.accountant.write().unwrap() = Some(accountant);
+    }
+
+    /// Point job scheduling at the cluster's QoS enforcer. Jobs
+    /// submitted afterwards run their blocks as bulk-class work: they
+    /// yield to in-flight interactive requests at block boundaries and
+    /// take weighted fair job-gate slots per block.
+    pub fn set_qos(&self, qos: Arc<crate::qos::QosEnforcer>) {
+        *self.qos.write().unwrap() = Some(qos);
     }
 
     /// Engine holding the checkpoint journals.
@@ -665,12 +702,13 @@ impl JobManager {
             }
         }
         let name = spec.name();
+        let project = spec.project();
         let ledger = self
             .accountant
             .read()
             .unwrap()
             .as_ref()
-            .and_then(|a| spec.project().map(|p| a.ledger(&p)));
+            .and_then(|a| project.as_ref().map(|p| a.ledger(p)));
         let handle = Arc::new(JobHandle {
             id,
             name,
@@ -687,6 +725,8 @@ impl JobManager {
             started: Instant::now(),
             metrics: JobMetrics::default(),
             ledger,
+            tenant: project.map(Arc::from),
+            qos: self.qos.read().unwrap().clone(),
         });
         let runner = Arc::clone(&handle);
         std::thread::Builder::new()

@@ -47,6 +47,7 @@ pub mod loadgen;
 pub mod metrics;
 pub mod morton;
 pub mod obs;
+pub mod qos;
 pub mod resolution;
 pub mod runtime;
 pub mod shard;
@@ -90,6 +91,14 @@ pub enum Error {
     /// opposed to a transient per-operation failure.
     #[error("node down: {0}")]
     NodeDown(String),
+    /// The caller is over its QoS quota: retry after the bucket refills
+    /// (`Retry-After` is derived from `retry_after_ms`).
+    #[error("throttled: retry after {retry_after_ms}ms")]
+    Throttled { retry_after_ms: u64 },
+    /// The request's `X-OCPD-Deadline-Ms` budget ran out before the
+    /// work finished; remaining work was abandoned.
+    #[error("deadline exceeded: {0}")]
+    DeadlineExceeded(String),
     #[error("{0}")]
     Other(String),
 }
@@ -107,7 +116,9 @@ impl Error {
             Error::BadRequest(_) => 400,
             Error::NotFound(_) => 404,
             Error::Fenced { .. } => 409,
+            Error::Throttled { .. } => 429,
             Error::NodeDown(_) => 503,
+            Error::DeadlineExceeded(_) => 504,
             _ => 500,
         }
     }

@@ -29,7 +29,7 @@ use crate::array::DenseVolume;
 use crate::core::Dtype;
 use crate::metrics::{Counter, Histogram};
 use crate::util::Rng;
-use crate::web::http::request;
+use crate::web::http::{request_with, RequestOpts};
 use crate::web::ocpk;
 use crate::{Error, Result};
 
@@ -115,6 +115,9 @@ pub struct LoadgenConfig {
     /// Cutout read extent (clamped to `dims`).
     pub read_extent: [u64; 3],
     pub mix: ScenarioMix,
+    /// Per-request latency budget, sent as `X-OCPD-Deadline-Ms`; the
+    /// server answers 504 (counted separately) once it expires.
+    pub deadline_ms: Option<u64>,
 }
 
 impl LoadgenConfig {
@@ -131,6 +134,7 @@ impl LoadgenConfig {
             hotspot: 0.0,
             read_extent: [64, 64, 8],
             mix: ScenarioMix::default(),
+            deadline_ms: None,
         }
     }
 }
@@ -142,7 +146,9 @@ struct Stats {
     ok: Counter,
     http_429: Counter,
     http_503: Counter,
-    /// Non-2xx answers other than 429/503.
+    /// Deadline expiries: the server abandoned remaining work.
+    http_504: Counter,
+    /// Non-2xx answers other than 429/503/504.
     http_errors: Counter,
     /// Connect/read/write failures — the request never got an answer.
     transport_errors: Counter,
@@ -155,6 +161,7 @@ impl Stats {
             Ok((200, _)) => self.ok.inc(),
             Ok((429, _)) => self.http_429.inc(),
             Ok((503, _)) => self.http_503.inc(),
+            Ok((504, _)) => self.http_504.inc(),
             Ok(_) => self.http_errors.inc(),
             Err(_) => self.transport_errors.inc(),
         }
@@ -168,6 +175,7 @@ impl Stats {
             ok: self.ok.get(),
             http_429: self.http_429.get(),
             http_503: self.http_503.get(),
+            http_504: self.http_504.get(),
             http_errors: self.http_errors.get(),
             transport_errors: self.transport_errors.get(),
             mean_us: snap.mean(),
@@ -188,6 +196,7 @@ pub struct ScenarioRow {
     pub ok: u64,
     pub http_429: u64,
     pub http_503: u64,
+    pub http_504: u64,
     pub http_errors: u64,
     pub transport_errors: u64,
     pub mean_us: f64,
@@ -203,7 +212,8 @@ impl ScenarioRow {
     pub fn to_json(&self) -> String {
         format!(
             "{{\"scenario\": \"{}\", \"requests\": {}, \"ok\": {}, \"http_429\": {}, \
-             \"http_503\": {}, \"http_errors\": {}, \"transport_errors\": {}, \
+             \"http_503\": {}, \"http_504\": {}, \"http_errors\": {}, \
+             \"transport_errors\": {}, \
              \"mean_us\": {:.1}, \"p50_us\": {}, \"p95_us\": {}, \"p99_us\": {}, \
              \"p999_us\": {}}}",
             self.scenario,
@@ -211,6 +221,7 @@ impl ScenarioRow {
             self.ok,
             self.http_429,
             self.http_503,
+            self.http_504,
             self.http_errors,
             self.transport_errors,
             self.mean_us,
@@ -248,13 +259,14 @@ impl LoadgenReport {
         );
         for r in &self.rows {
             out.push_str(&format!(
-                "  {}: n={} ok={} 429={} 503={} http_err={} transport_err={} \
+                "  {}: n={} ok={} 429={} 503={} 504={} http_err={} transport_err={} \
                  p50={}us p95={}us p99={}us p999={}us\n",
                 r.scenario,
                 r.requests,
                 r.ok,
                 r.http_429,
                 r.http_503,
+                r.http_504,
                 r.http_errors,
                 r.transport_errors,
                 r.p50_us,
@@ -354,12 +366,19 @@ fn pick_box(cfg: &LoadgenConfig, rng: &mut Rng, extent: [u64; 3]) -> ([u64; 3], 
 /// Issue one arrival's request. Returns the raw transport outcome.
 fn issue(cfg: &LoadgenConfig, scenario: Scenario, rng: &mut Rng) -> Result<(u16, Vec<u8>)> {
     let base = &cfg.base_url;
+    // Loadgen measures the server's answers, so throttles are counted,
+    // never retried; the deadline budget rides every request.
+    let opts = RequestOpts { deadline_ms: cfg.deadline_ms, retry: None };
+    let call = |method: &str, url: String, body: &[u8]| -> Result<(u16, Vec<u8>)> {
+        let info = request_with(method, &url, body, &opts)?;
+        Ok((info.status, info.body))
+    };
     match scenario {
         Scenario::CutoutRead => {
             let (lo, hi) = pick_box(cfg, rng, cfg.read_extent);
-            request(
+            call(
                 "GET",
-                &format!(
+                format!(
                     "{base}/{}/ocpk/0/{},{}/{},{}/{},{}/",
                     cfg.image_token, lo[0], hi[0], lo[1], hi[1], lo[2], hi[2]
                 ),
@@ -370,9 +389,9 @@ fn issue(cfg: &LoadgenConfig, scenario: Scenario, rng: &mut Rng) -> Result<(u16,
             // Tiles are 256² in x/y; pick an in-bounds tile coordinate
             // and a z slice, hot-corner-skewed like cutouts.
             let (lo, _) = pick_box(cfg, rng, [1, 1, 1]);
-            request(
+            call(
                 "GET",
-                &format!(
+                format!(
                     "{base}/{}/tile/0/{}/{}_{}.gray",
                     cfg.image_token,
                     lo[2],
@@ -392,9 +411,9 @@ fn issue(cfg: &LoadgenConfig, scenario: Scenario, rng: &mut Rng) -> Result<(u16,
                 1 + rng.below(1 << 20) as u32,
             );
             let body = ocpk::encode_volume(Dtype::U32, lo, &vol)?;
-            request("PUT", &format!("{base}/{token}/overwrite/0/"), &body)
+            call("PUT", format!("{base}/{token}/overwrite/0/"), &body)
         }
-        Scenario::JobPoll => request("GET", &format!("{base}/jobs/status/"), &[]),
+        Scenario::JobPoll => call("GET", format!("{base}/jobs/status/"), &[]),
     }
 }
 
@@ -528,6 +547,7 @@ mod tests {
                 ok: 498,
                 http_429: 0,
                 http_503: 2,
+                http_504: 0,
                 http_errors: 0,
                 transport_errors: 0,
                 mean_us: 1234.5,

@@ -60,12 +60,22 @@
 //! ocpd loadgen [--url http://host:port] [--token T] [--annotation T]
 //!              [--rate R] [--duration S] [--concurrency N[,N...]]
 //!              [--hotspot P] [--seed S] [--dims X,Y,Z]
-//!              [--mix C,T,W,P] [--out FILE]
+//!              [--mix C,T,W,P] [--deadline-ms MS] [--out FILE]
 //!     Open-loop load generator: drive a mixed workload (cutout reads,
 //!     tile zooms, annotation writes, job polls) at a fixed arrival
-//!     rate, print latency percentiles and 429/503/error counts per
+//!     rate, print latency percentiles and 429/503/504/error counts per
 //!     scenario, and — with --out — write the BENCH_loadgen.json
 //!     report (one run per comma-separated concurrency level).
+//!     --deadline-ms stamps X-OCPD-Deadline-Ms on every request; the
+//!     server's 504 expiries are counted separately.
+//!
+//! ocpd qos     [--url http://host:port] [--quota TOKEN] [--req-per-s R]
+//!              [--bytes-per-s R] [--weight W] [--enforce on|off]
+//!              [--high-water BYTES]
+//!     Print the QoS admission/fair-sharing status (enforcement state,
+//!     in-flight bytes, throttle/shed/preemption counters, per-tenant
+//!     quotas and token levels). --quota sets one tenant's rates and
+//!     scheduling weight first; --enforce toggles enforcement.
 //! ```
 //!
 //! Data output goes to stdout; server-side events (boot progress,
@@ -179,6 +189,7 @@ fn cmd_serve(flags: HashMap<String, String>) -> ocpd::Result<()> {
         ("GET", "/heat/status/"),
         ("GET", "/account/status/"),
         ("GET", "/slo/status/"),
+        ("GET", "/qos/status/"),
         ("POST", "/jobs/propagate/synapses_v0/"),
         ("GET", "/jobs/status/"),
     ] {
@@ -319,6 +330,14 @@ fn cmd_loadgen(flags: HashMap<String, String>) -> ocpd::Result<()> {
     cfg.duration = std::time::Duration::from_secs_f64(flag(&flags, "duration", 5.0));
     cfg.seed = flag(&flags, "seed", cfg.seed);
     cfg.hotspot = flag(&flags, "hotspot", cfg.hotspot);
+    if let Some(ms) = flags.get("deadline-ms") {
+        let ms = ms
+            .parse::<u64>()
+            .ok()
+            .filter(|&ms| ms > 0)
+            .ok_or_else(|| ocpd::Error::BadRequest(format!("bad deadline-ms '{ms}'")))?;
+        cfg.deadline_ms = Some(ms);
+    }
     if let Some(mix) = flags.get("mix") {
         let v: Vec<u32> = mix.split(',').filter_map(|p| p.parse().ok()).collect();
         if v.len() != 4 {
@@ -356,6 +375,33 @@ fn cmd_loadgen(flags: HashMap<String, String>) -> ocpd::Result<()> {
     Ok(())
 }
 
+fn cmd_qos(flags: HashMap<String, String>) -> ocpd::Result<()> {
+    let url: String = flag(&flags, "url", "http://127.0.0.1:8642".to_string());
+    if let Some(token) = flags.get("quota") {
+        let mut params = String::new();
+        for (flag_key, body_key) in
+            [("req-per-s", "req_per_s"), ("bytes-per-s", "bytes_per_s"), ("weight", "weight")]
+        {
+            if let Some(v) = flags.get(flag_key) {
+                params.push_str(&format!("{body_key}={v} "));
+            }
+        }
+        println!("{}", ocpd::client::qos_set_quota(&url, token, &params)?);
+    }
+    if let Some(mode) = flags.get("enforce") {
+        let hw = flags
+            .get("high-water")
+            .map(|v| {
+                v.parse::<u64>()
+                    .map_err(|_| ocpd::Error::BadRequest(format!("bad high-water '{v}'")))
+            })
+            .transpose()?;
+        println!("{}", ocpd::client::qos_enforce(&url, mode, hw)?);
+    }
+    print!("{}", ocpd::client::qos_status(&url)?);
+    Ok(())
+}
+
 fn cmd_jobs(flags: HashMap<String, String>) -> ocpd::Result<()> {
     let url: String = flag(&flags, "url", "http://127.0.0.1:8642".to_string());
     if let Some(id) = flags.get("cancel") {
@@ -385,7 +431,7 @@ fn main() {
         None => {
             eprintln!(
                 "usage: ocpd <serve|detect|info|wal|cache|write|jobs|http|cluster|metrics|trace\
-                 |heat|loadgen> [flags]"
+                 |heat|qos|loadgen> [flags]"
             );
             std::process::exit(2);
         }
@@ -404,12 +450,13 @@ fn main() {
         "metrics" => cmd_metrics(flags),
         "trace" => cmd_trace(flags),
         "heat" => cmd_heat(flags),
+        "qos" => cmd_qos(flags),
         "loadgen" => cmd_loadgen(flags),
         other => {
             eprintln!(
                 "unknown command '{other}' \
                  (want serve|detect|info|wal|cache|write|jobs|http|cluster|metrics|trace\
-                 |heat|loadgen)"
+                 |heat|qos|loadgen)"
             );
             std::process::exit(2);
         }

@@ -1,0 +1,182 @@
+//! Per-request QoS context: route class, tenant, and deadline, carried
+//! on a thread-local stack exactly like [`crate::obs::trace`]'s active
+//! trace — deep layers (a cutout batch worker, a WAL flusher invoked
+//! from a handler) consult it without plumbing a parameter through
+//! every signature, and [`scoped_map`] propagates it onto fork-join
+//! workers via [`current`]/[`install`].
+//!
+//! The context is installed at the admission point (`OcpService::
+//! handle`) for HTTP requests, and by the job engine's block workers
+//! (as [`RouteClass::Bulk`], so job-driven reads queue behind
+//! interactive ones inside the fair gates). Code running with *no*
+//! context — direct library use, unit tests — is treated as
+//! interactive and undeadlined: un-attributed work is never throttled
+//! or expired.
+//!
+//! [`scoped_map`]: crate::util::pool::scoped_map
+
+use std::cell::RefCell;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::obs::slo::RouteClass;
+use crate::{Error, Result};
+
+/// The ambient QoS identity of the work on this thread.
+#[derive(Clone, Debug)]
+pub struct ReqCtx {
+    /// Route class from [`crate::obs::slo::class_of_route`].
+    pub class: RouteClass,
+    /// Project token the request was attributed to, if any.
+    pub tenant: Option<Arc<str>>,
+    /// Absolute expiry (from `X-OCPD-Deadline-Ms`), if the caller set one.
+    pub deadline: Option<Instant>,
+}
+
+impl ReqCtx {
+    /// A bulk-class context for background work attributed to `tenant`.
+    pub fn bulk(tenant: Option<Arc<str>>) -> Self {
+        ReqCtx { class: RouteClass::Bulk, tenant, deadline: None }
+    }
+}
+
+thread_local! {
+    static CURRENT: RefCell<Vec<ReqCtx>> = const { RefCell::new(Vec::new()) };
+}
+
+/// The innermost installed context, if any (cloned; cheap — the tenant
+/// is an `Arc<str>`).
+pub fn current() -> Option<ReqCtx> {
+    CURRENT.with(|c| c.borrow().last().cloned())
+}
+
+/// Route class of the current work; [`RouteClass::Interactive`] when no
+/// context is installed (un-attributed work is never deprioritized).
+pub fn class() -> RouteClass {
+    CURRENT.with(|c| c.borrow().last().map(|x| x.class).unwrap_or(RouteClass::Interactive))
+}
+
+/// Tenant of the current work, if attributed.
+pub fn tenant() -> Option<Arc<str>> {
+    CURRENT.with(|c| c.borrow().last().and_then(|x| x.tenant.clone()))
+}
+
+/// Deadline of the current work, if the caller set one.
+pub fn deadline() -> Option<Instant> {
+    CURRENT.with(|c| c.borrow().last().and_then(|x| x.deadline))
+}
+
+/// Fail with [`Error::DeadlineExceeded`] if the current context's
+/// deadline has passed. Engines call this at batch boundaries so an
+/// expired request stops burning workers instead of finishing work
+/// nobody will wait for.
+pub fn check_deadline() -> Result<()> {
+    if let Some(d) = deadline() {
+        if Instant::now() >= d {
+            return Err(Error::DeadlineExceeded(
+                "request deadline expired before completion".into(),
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Install `ctx` on this thread for the guard's lifetime. `None` is a
+/// no-op guard, so call sites forward `current()` unconditionally.
+pub fn install(ctx: Option<ReqCtx>) -> InstallGuard {
+    match ctx {
+        Some(c) => {
+            CURRENT.with(|s| s.borrow_mut().push(c));
+            InstallGuard { installed: true }
+        }
+        None => InstallGuard { installed: false },
+    }
+}
+
+/// Pops the installed context on drop.
+pub struct InstallGuard {
+    installed: bool,
+}
+
+impl Drop for InstallGuard {
+    fn drop(&mut self) {
+        if self.installed {
+            CURRENT.with(|s| {
+                s.borrow_mut().pop();
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn no_context_defaults_to_interactive_and_no_deadline() {
+        assert!(current().is_none());
+        assert_eq!(class(), RouteClass::Interactive);
+        assert!(tenant().is_none());
+        assert!(check_deadline().is_ok());
+    }
+
+    #[test]
+    fn install_stacks_and_pops() {
+        let outer = ReqCtx { class: RouteClass::Bulk, tenant: Some("t1".into()), deadline: None };
+        let g1 = install(Some(outer));
+        assert_eq!(class(), RouteClass::Bulk);
+        assert_eq!(tenant().as_deref(), Some("t1"));
+        {
+            let inner =
+                ReqCtx { class: RouteClass::Status, tenant: Some("t2".into()), deadline: None };
+            let _g2 = install(Some(inner));
+            assert_eq!(class(), RouteClass::Status);
+            assert_eq!(tenant().as_deref(), Some("t2"));
+        }
+        assert_eq!(class(), RouteClass::Bulk);
+        drop(g1);
+        assert!(current().is_none());
+    }
+
+    #[test]
+    fn none_install_is_a_no_op() {
+        let _g = install(None);
+        assert!(current().is_none());
+    }
+
+    #[test]
+    fn expired_deadline_fails_check() {
+        let past = Instant::now() - Duration::from_millis(1);
+        let _g = install(Some(ReqCtx {
+            class: RouteClass::Interactive,
+            tenant: None,
+            deadline: Some(past),
+        }));
+        match check_deadline() {
+            Err(Error::DeadlineExceeded(_)) => {}
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        let future = Instant::now() + Duration::from_secs(60);
+        let _g2 = install(Some(ReqCtx {
+            class: RouteClass::Interactive,
+            tenant: None,
+            deadline: Some(future),
+        }));
+        assert!(check_deadline().is_ok());
+    }
+
+    #[test]
+    fn scoped_map_carries_the_context() {
+        let _g = install(Some(ReqCtx {
+            class: RouteClass::Bulk,
+            tenant: Some("carried".into()),
+            deadline: None,
+        }));
+        let seen = crate::util::pool::scoped_map(4, 4, |_| (class(), tenant()));
+        for (c, t) in seen {
+            assert_eq!(c, RouteClass::Bulk);
+            assert_eq!(t.as_deref(), Some("carried"));
+        }
+    }
+}

@@ -1,0 +1,730 @@
+//! Multi-tenant QoS enforcement: token-bucket admission, weighted fair
+//! worker scheduling, and priority preemption.
+//!
+//! PR 8 built the *measurement* half of multi-tenancy — per-tenant
+//! ledgers ([`crate::obs::account`]), per-class latency SLOs
+//! ([`crate::obs::slo`]) — and this module is the *enforcement* half:
+//! the cluster must degrade gracefully under overload instead of
+//! letting one bulk-ingest storm starve every interactive reader. It
+//! acts at three points:
+//!
+//! 1. **Admission** ([`QosEnforcer::admit`], called by the service
+//!    dispatcher before routing): per-tenant token buckets — one in
+//!    requests/s, one in bytes/s, refilled from configured
+//!    [`Quota`]s — deny over-quota requests with `429` and a
+//!    `Retry-After` computed from the bucket's actual refill time.
+//!    A global overload guard sheds lowest-priority work with `503`
+//!    when in-flight request bytes cross a high-water mark (bulk
+//!    first, then status; interactive is never shed).
+//! 2. **Worker pools** ([`fair::FairGate`]): the cutout read engine,
+//!    the parallel write engine, and the job engine acquire a gate
+//!    slot per batch/block, granted priority-then-weighted-fair, so a
+//!    greedy tenant's deep batch list interleaves with everyone else.
+//! 3. **Preemption** ([`QosEnforcer::yield_to_interactive`]): job
+//!    workers pause at block boundaries while interactive requests are
+//!    in flight — jobs checkpoint per block, so preemption costs
+//!    nothing but the wait.
+//!
+//! Identity and deadline ride a thread-local [`ctx`], installed at
+//! admission and propagated to fork-join workers by `scoped_map`.
+//! Everything is off by default ([`QosEnforcer::enabled`] = false):
+//! with enforcement off the only cost anywhere is one atomic load.
+
+pub mod ctx;
+pub mod fair;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+use crate::metrics::Counter;
+use crate::obs::registry::Sample;
+use crate::obs::slo::RouteClass;
+
+pub use fair::{FairGate, GateGuard};
+
+/// Default global high-water mark for in-flight request bytes (the
+/// overload-shed trigger): 256 MiB.
+pub const DEFAULT_HIGH_WATER_BYTES: u64 = 256 << 20;
+
+/// Per-tenant rate and share configuration.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Quota {
+    /// Sustained admitted requests per second (burst = one second).
+    pub req_per_s: f64,
+    /// Sustained admitted request-payload bytes per second (burst = one
+    /// second).
+    pub bytes_per_s: f64,
+    /// Fair-share weight inside the worker-pool gates (default 1; a
+    /// weight-2 tenant receives twice the slots under contention).
+    pub weight: u64,
+}
+
+impl Default for Quota {
+    fn default() -> Self {
+        Quota { req_per_s: f64::INFINITY, bytes_per_s: f64::INFINITY, weight: 1 }
+    }
+}
+
+/// A token bucket: `rate` units/s refill toward a `burst` cap. On
+/// denial, reports how long until the requested tokens exist.
+pub struct TokenBucket {
+    rate: f64,
+    burst: f64,
+    state: Mutex<(f64, Instant)>,
+}
+
+impl TokenBucket {
+    pub fn new(rate: f64, burst: f64) -> Self {
+        TokenBucket { rate, burst, state: Mutex::new((burst, Instant::now())) }
+    }
+
+    fn refill(level: &mut f64, last: &mut Instant, rate: f64, burst: f64) {
+        let now = Instant::now();
+        if rate.is_finite() {
+            *level = (*level + now.duration_since(*last).as_secs_f64() * rate).min(burst);
+        } else {
+            *level = burst;
+        }
+        *last = now;
+    }
+
+    /// Take `n` tokens, or report the wait until `n` would be
+    /// available (the `Retry-After` source). Denials consume nothing.
+    pub fn try_take(&self, n: f64) -> std::result::Result<(), Duration> {
+        let mut st = self.state.lock().unwrap();
+        let (level, last) = &mut *st;
+        Self::refill(level, last, self.rate, self.burst);
+        if *level >= n {
+            *level -= n;
+            Ok(())
+        } else {
+            let deficit = n - *level;
+            Err(Duration::from_secs_f64(deficit / self.rate.max(1e-9)))
+        }
+    }
+
+    /// Return `n` tokens (undo a take whose sibling check failed).
+    pub fn give(&self, n: f64) {
+        let mut st = self.state.lock().unwrap();
+        st.0 = (st.0 + n).min(self.burst);
+    }
+
+    /// Current token level (refreshed), for the status surface.
+    pub fn level(&self) -> f64 {
+        let mut st = self.state.lock().unwrap();
+        let (level, last) = &mut *st;
+        Self::refill(level, last, self.rate, self.burst);
+        *level
+    }
+}
+
+/// Live enforcement state for one quota'd tenant.
+struct TenantQos {
+    quota: Quota,
+    req: TokenBucket,
+    bytes: TokenBucket,
+    throttled: Counter,
+}
+
+impl TenantQos {
+    fn new(quota: Quota) -> Self {
+        TenantQos {
+            quota,
+            // Burst capacity: one second of the sustained rate (at
+            // least one request / 64 KiB so a fresh bucket admits
+            // *something*).
+            req: TokenBucket::new(quota.req_per_s, quota.req_per_s.max(1.0)),
+            bytes: TokenBucket::new(quota.bytes_per_s, quota.bytes_per_s.max(65_536.0)),
+            throttled: Counter::default(),
+        }
+    }
+}
+
+/// Why admission refused a request.
+#[derive(Debug)]
+pub enum Denial {
+    /// Per-tenant quota exhausted → `429 Too Many Requests`.
+    Throttled { tenant: String, retry_after: Duration },
+    /// Global overload shed → `503 Service Unavailable`.
+    Shed { class: RouteClass, retry_after: Duration },
+}
+
+impl Denial {
+    /// HTTP status this denial maps to.
+    pub fn http_status(&self) -> u16 {
+        match self {
+            Denial::Throttled { .. } => 429,
+            Denial::Shed { .. } => 503,
+        }
+    }
+
+    /// `Retry-After` in whole seconds (ceiling, minimum 1).
+    pub fn retry_after_secs(&self) -> u64 {
+        let d = match self {
+            Denial::Throttled { retry_after, .. } | Denial::Shed { retry_after, .. } => {
+                *retry_after
+            }
+        };
+        (d.as_secs_f64().ceil() as u64).max(1)
+    }
+
+    pub fn message(&self) -> String {
+        match self {
+            Denial::Throttled { tenant, retry_after } => format!(
+                "tenant {tenant} over quota; retry after {:.3}s",
+                retry_after.as_secs_f64()
+            ),
+            Denial::Shed { class, .. } => {
+                format!("overloaded: {} work shed at the admission gate", class.name())
+            }
+        }
+    }
+}
+
+/// Pool identifiers for the three fair gates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pool {
+    Read,
+    Write,
+    Job,
+}
+
+impl Pool {
+    pub fn name(self) -> &'static str {
+        match self {
+            Pool::Read => "read",
+            Pool::Write => "write",
+            Pool::Job => "job",
+        }
+    }
+}
+
+/// The cluster-wide QoS enforcer: quota table, token buckets, overload
+/// guard, fair gates, and the counters behind `ocpd_qos_*`.
+pub struct QosEnforcer {
+    enabled: Arc<AtomicBool>,
+    tenants: RwLock<HashMap<String, Arc<TenantQos>>>,
+    /// Sum of admitted request-payload bytes currently in flight.
+    inflight_bytes: AtomicU64,
+    high_water: AtomicU64,
+    /// Interactive requests currently admitted — the preemption signal
+    /// job workers poll at block boundaries.
+    interactive_active: AtomicU64,
+    read_gate: FairGate,
+    write_gate: FairGate,
+    job_gate: FairGate,
+    admitted: Counter,
+    throttled: Counter,
+    shed: Counter,
+    deadline_expired: Counter,
+    preemptions: Counter,
+}
+
+impl Default for QosEnforcer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl QosEnforcer {
+    /// An enforcer with enforcement **off** and the default pool
+    /// capacities: read = cores, write = 3·cores/4, job = cores/2 —
+    /// reads get the whole machine, background work a bounded share.
+    pub fn new() -> Self {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        Self::with_capacities(cores, (cores * 3 / 4).max(1), (cores / 2).max(1))
+    }
+
+    pub fn with_capacities(read: usize, write: usize, job: usize) -> Self {
+        let enabled = Arc::new(AtomicBool::new(false));
+        QosEnforcer {
+            read_gate: FairGate::new("read", read, enabled.clone()),
+            write_gate: FairGate::new("write", write, enabled.clone()),
+            job_gate: FairGate::new("job", job, enabled.clone()),
+            enabled,
+            tenants: RwLock::new(HashMap::new()),
+            inflight_bytes: AtomicU64::new(0),
+            high_water: AtomicU64::new(DEFAULT_HIGH_WATER_BYTES),
+            interactive_active: AtomicU64::new(0),
+            admitted: Counter::default(),
+            throttled: Counter::default(),
+            shed: Counter::default(),
+            deadline_expired: Counter::default(),
+            preemptions: Counter::default(),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    pub fn high_water(&self) -> u64 {
+        self.high_water.load(Ordering::Relaxed)
+    }
+
+    pub fn set_high_water(&self, bytes: u64) {
+        self.high_water.store(bytes.max(1), Ordering::Relaxed);
+    }
+
+    /// Configure (or replace) `tenant`'s quota. Buckets restart full.
+    pub fn set_quota(&self, tenant: &str, quota: Quota) {
+        self.tenants
+            .write()
+            .unwrap()
+            .insert(tenant.to_string(), Arc::new(TenantQos::new(quota)));
+    }
+
+    /// The configured quota for `tenant`, if any.
+    pub fn quota(&self, tenant: &str) -> Option<Quota> {
+        self.tenants.read().unwrap().get(tenant).map(|t| t.quota)
+    }
+
+    /// Fair-share weight for `tenant` (1 when unconfigured).
+    pub fn weight(&self, tenant: &str) -> u64 {
+        self.quota(tenant).map(|q| q.weight.max(1)).unwrap_or(1)
+    }
+
+    /// Drop all QoS state for a retired tenant (project deletion).
+    pub fn retire_tenant(&self, tenant: &str) {
+        self.tenants.write().unwrap().remove(tenant);
+        self.read_gate.retire_tenant(tenant);
+        self.write_gate.retire_tenant(tenant);
+        self.job_gate.retire_tenant(tenant);
+    }
+
+    /// Admit one request of `bytes_in` payload attributed to `tenant`
+    /// in route-class `class`. On success the returned guard holds the
+    /// in-flight accounting until the response is written. Denials
+    /// consume no tokens.
+    pub fn admit(
+        self: &Arc<Self>,
+        tenant: Option<&str>,
+        class: RouteClass,
+        bytes_in: u64,
+    ) -> std::result::Result<AdmitGuard, Denial> {
+        if !self.enabled() {
+            return Ok(AdmitGuard { enf: None, bytes: 0, interactive: false });
+        }
+        // Global overload guard: shed lowest-priority work first. Over
+        // the high-water mark bulk is shed; over twice it, status work
+        // too. Interactive is never shed — it is what the mark protects.
+        let inflight = self.inflight_bytes.load(Ordering::Relaxed);
+        let hw = self.high_water();
+        let shed = match class {
+            RouteClass::Bulk => inflight >= hw,
+            RouteClass::Status => inflight >= hw.saturating_mul(2),
+            RouteClass::Interactive => false,
+        };
+        if shed {
+            self.shed.inc();
+            return Err(Denial::Shed { class, retry_after: Duration::from_secs(1) });
+        }
+        // Per-tenant token buckets (tenants without a configured quota
+        // are unlimited — admission cost stays one map lookup).
+        if let Some(token) = tenant {
+            let t = self.tenants.read().unwrap().get(token).cloned();
+            if let Some(t) = t {
+                if let Err(wait) = t.req.try_take(1.0) {
+                    t.throttled.inc();
+                    self.throttled.inc();
+                    return Err(Denial::Throttled {
+                        tenant: token.to_string(),
+                        retry_after: wait,
+                    });
+                }
+                if bytes_in > 0 {
+                    if let Err(wait) = t.bytes.try_take(bytes_in as f64) {
+                        t.req.give(1.0); // undo the sibling take
+                        t.throttled.inc();
+                        self.throttled.inc();
+                        return Err(Denial::Throttled {
+                            tenant: token.to_string(),
+                            retry_after: wait,
+                        });
+                    }
+                }
+            }
+        }
+        let charged = bytes_in.max(1);
+        self.inflight_bytes.fetch_add(charged, Ordering::Relaxed);
+        let interactive = class == RouteClass::Interactive;
+        if interactive {
+            self.interactive_active.fetch_add(1, Ordering::Relaxed);
+        }
+        self.admitted.inc();
+        Ok(AdmitGuard { enf: Some(self.clone()), bytes: charged, interactive })
+    }
+
+    /// Acquire a slot in `pool`'s fair gate for one batch of work,
+    /// attributed from the ambient [`ctx`]. Engines call this at batch
+    /// boundaries; it is a no-op while enforcement is off.
+    pub fn enter(&self, pool: Pool) -> GateGuard<'_> {
+        let gate = self.gate(pool);
+        if !self.enabled() {
+            // Fast path: skip the ctx lookup entirely.
+            return gate.acquire_disabled();
+        }
+        let (class, tenant) = match ctx::current() {
+            Some(c) => (c.class, c.tenant),
+            None => (RouteClass::Interactive, None),
+        };
+        let weight = tenant.as_deref().map(|t| self.weight(t)).unwrap_or(1);
+        gate.acquire(class, tenant, weight)
+    }
+
+    pub fn gate(&self, pool: Pool) -> &FairGate {
+        match pool {
+            Pool::Read => &self.read_gate,
+            Pool::Write => &self.write_gate,
+            Pool::Job => &self.job_gate,
+        }
+    }
+
+    /// Block-boundary preemption point for job workers: while
+    /// interactive requests are in flight, wait (bounded) before
+    /// scheduling the next block. Returns whether the worker yielded.
+    pub fn yield_to_interactive(&self) -> bool {
+        if !self.enabled() || self.interactive_active.load(Ordering::Relaxed) == 0 {
+            return false;
+        }
+        self.preemptions.inc();
+        let give_up = Instant::now() + Duration::from_millis(250);
+        while self.interactive_active.load(Ordering::Relaxed) > 0 && Instant::now() < give_up {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        true
+    }
+
+    /// Count one request that died at its deadline (504).
+    pub fn note_deadline_expired(&self) {
+        self.deadline_expired.inc();
+    }
+
+    pub fn inflight_bytes(&self) -> u64 {
+        self.inflight_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn interactive_active(&self) -> u64 {
+        self.interactive_active.load(Ordering::Relaxed)
+    }
+
+    pub fn preemptions(&self) -> u64 {
+        self.preemptions.get()
+    }
+
+    pub fn throttled_total(&self) -> u64 {
+        self.throttled.get()
+    }
+
+    pub fn shed_total(&self) -> u64 {
+        self.shed.get()
+    }
+
+    /// The `GET /qos/status/` body.
+    pub fn status_text(&self) -> String {
+        let mut out = String::from("qos:\n");
+        out.push_str(&format!(
+            "  enforcement: {}\n",
+            if self.enabled() { "on" } else { "off" }
+        ));
+        out.push_str(&format!(
+            "  inflight_bytes: {} high_water: {}\n",
+            self.inflight_bytes(),
+            self.high_water()
+        ));
+        out.push_str(&format!(
+            "  admitted: {} throttled: {} shed: {} deadline_expired: {} preemptions: {}\n",
+            self.admitted.get(),
+            self.throttled.get(),
+            self.shed.get(),
+            self.deadline_expired.get(),
+            self.preemptions.get()
+        ));
+        out.push_str(&format!("  interactive_active: {}\n", self.interactive_active()));
+        for pool in [Pool::Read, Pool::Write, Pool::Job] {
+            let g = self.gate(pool);
+            out.push_str(&format!(
+                "  gate {}: capacity={} waiting={} granted_interactive={} \
+                 granted_status={} granted_bulk={}\n",
+                g.name(),
+                g.capacity(),
+                g.waiting(),
+                g.granted(RouteClass::Interactive),
+                g.granted(RouteClass::Status),
+                g.granted(RouteClass::Bulk),
+            ));
+        }
+        let mut tenants: Vec<(String, Arc<TenantQos>)> = self
+            .tenants
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect();
+        tenants.sort_by(|a, b| a.0.cmp(&b.0));
+        for (token, t) in tenants {
+            out.push_str(&format!(
+                "  tenant {token}: req_per_s={} bytes_per_s={} weight={} \
+                 req_tokens={:.1} byte_tokens={:.0} throttled={}\n",
+                t.quota.req_per_s,
+                t.quota.bytes_per_s,
+                t.quota.weight,
+                t.req.level(),
+                t.bytes.level(),
+                t.throttled.get(),
+            ));
+        }
+        out
+    }
+
+    /// Emit the `ocpd_qos_*` families (the cluster registers this under
+    /// the `"qos"` collector key).
+    pub fn collect(&self, out: &mut Vec<Sample>) {
+        out.push(Sample::gauge(
+            "ocpd_qos_enforcement_enabled",
+            "1 while QoS enforcement is active.",
+            self.enabled() as u64,
+        ));
+        out.push(Sample::gauge(
+            "ocpd_qos_inflight_bytes",
+            "Admitted request-payload bytes currently in flight.",
+            self.inflight_bytes(),
+        ));
+        out.push(Sample::gauge(
+            "ocpd_qos_interactive_active",
+            "Interactive requests currently admitted (the preemption signal).",
+            self.interactive_active(),
+        ));
+        out.push(Sample::counter(
+            "ocpd_qos_admitted_total",
+            "Requests admitted past the QoS gate.",
+            self.admitted.get(),
+        ));
+        out.push(Sample::counter(
+            "ocpd_qos_shed_total",
+            "Requests shed (503) by the global overload guard.",
+            self.shed.get(),
+        ));
+        out.push(Sample::counter(
+            "ocpd_qos_deadline_expired_total",
+            "Requests that died at their deadline (504).",
+            self.deadline_expired.get(),
+        ));
+        out.push(Sample::counter(
+            "ocpd_qos_preemptions_total",
+            "Job-block yields to in-flight interactive work.",
+            self.preemptions.get(),
+        ));
+        for (token, t) in self.tenants.read().unwrap().iter() {
+            out.push(
+                Sample::counter(
+                    "ocpd_qos_throttled_total",
+                    "Requests throttled (429) per tenant.",
+                    t.throttled.get(),
+                )
+                .label("project", token.clone()),
+            );
+            out.push(
+                Sample::gauge(
+                    "ocpd_qos_tokens",
+                    "Token-bucket level per tenant and bucket kind.",
+                    t.req.level().clamp(0.0, 1e18) as u64,
+                )
+                .label("project", token.clone())
+                .label("kind", "req"),
+            );
+            out.push(
+                Sample::gauge(
+                    "ocpd_qos_tokens",
+                    "Token-bucket level per tenant and bucket kind.",
+                    t.bytes.level().clamp(0.0, 1e18) as u64,
+                )
+                .label("project", token.clone())
+                .label("kind", "bytes"),
+            );
+        }
+        for pool in [Pool::Read, Pool::Write, Pool::Job] {
+            let g = self.gate(pool);
+            for class in [RouteClass::Interactive, RouteClass::Status, RouteClass::Bulk] {
+                out.push(
+                    Sample::histogram(
+                        "ocpd_qos_queue_wait_us",
+                        "Fair-gate queue wait per pool and class, microseconds.",
+                        g.wait_hist(class).snapshot(),
+                    )
+                    .label("pool", pool.name())
+                    .label("class", class.name()),
+                );
+            }
+        }
+    }
+}
+
+/// Releases a request's in-flight accounting on drop (response
+/// written or connection torn down).
+pub struct AdmitGuard {
+    enf: Option<Arc<QosEnforcer>>,
+    bytes: u64,
+    interactive: bool,
+}
+
+impl Drop for AdmitGuard {
+    fn drop(&mut self) {
+        if let Some(enf) = &self.enf {
+            enf.inflight_bytes.fetch_sub(self.bytes, Ordering::Relaxed);
+            if self.interactive {
+                enf.interactive_active.fetch_sub(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn enforcer_on() -> Arc<QosEnforcer> {
+        let e = Arc::new(QosEnforcer::new());
+        e.set_enabled(true);
+        e
+    }
+
+    #[test]
+    fn disabled_enforcer_admits_everything() {
+        let e = Arc::new(QosEnforcer::new());
+        e.set_quota("t", Quota { req_per_s: 0.001, bytes_per_s: 1.0, weight: 1 });
+        for _ in 0..100 {
+            assert!(e.admit(Some("t"), RouteClass::Bulk, 1 << 20).is_ok());
+        }
+        assert_eq!(e.inflight_bytes(), 0, "disabled admits carry no accounting");
+    }
+
+    #[test]
+    fn req_bucket_throttles_and_reports_refill_wait() {
+        let e = enforcer_on();
+        e.set_quota("t", Quota { req_per_s: 2.0, bytes_per_s: f64::INFINITY, weight: 1 });
+        // Burst = 2 requests; the third inside the same instant denies.
+        let _a = e.admit(Some("t"), RouteClass::Interactive, 0).unwrap();
+        let _b = e.admit(Some("t"), RouteClass::Interactive, 0).unwrap();
+        match e.admit(Some("t"), RouteClass::Interactive, 0) {
+            Err(d @ Denial::Throttled { .. }) => {
+                assert_eq!(d.http_status(), 429);
+                // One token at 2/s regenerates in ≤ 0.5s → Retry-After
+                // rounds up to exactly 1.
+                assert_eq!(d.retry_after_secs(), 1);
+            }
+            other => panic!("expected throttle, got {other:?}"),
+        }
+        assert_eq!(e.throttled_total(), 1);
+        // Unquota'd tenants are untouched.
+        assert!(e.admit(Some("other"), RouteClass::Interactive, 0).is_ok());
+    }
+
+    #[test]
+    fn byte_bucket_throttles_and_refunds_the_request_token() {
+        let e = enforcer_on();
+        e.set_quota("t", Quota { req_per_s: 1000.0, bytes_per_s: 100_000.0, weight: 1 });
+        // 100 KB/s, 100 KB burst: a 60 KB put fits, the next one trips.
+        assert!(e.admit(Some("t"), RouteClass::Bulk, 60_000).is_ok());
+        assert!(matches!(
+            e.admit(Some("t"), RouteClass::Bulk, 60_000),
+            Err(Denial::Throttled { .. })
+        ));
+        // The refunded request token is still spendable on a small op.
+        assert!(e.admit(Some("t"), RouteClass::Status, 10).is_ok());
+    }
+
+    #[test]
+    fn overload_guard_sheds_bulk_then_status_never_interactive() {
+        let e = enforcer_on();
+        e.set_high_water(1000);
+        let _big = e.admit(None, RouteClass::Bulk, 1000).unwrap();
+        // At the mark: bulk sheds, status and interactive pass.
+        assert!(matches!(e.admit(None, RouteClass::Bulk, 10), Err(Denial::Shed { .. })));
+        assert!(e.admit(None, RouteClass::Status, 10).is_ok());
+        let _big2 = e.admit(None, RouteClass::Interactive, 1200).unwrap();
+        // Over 2x: status sheds too; interactive still passes.
+        assert!(matches!(e.admit(None, RouteClass::Status, 10), Err(Denial::Shed { .. })));
+        let ia = e.admit(None, RouteClass::Interactive, 10);
+        assert!(ia.is_ok());
+        assert_eq!(e.shed_total(), 2);
+        assert_eq!(e.interactive_active(), 2);
+        drop(ia);
+        assert_eq!(e.interactive_active(), 1);
+    }
+
+    #[test]
+    fn admit_guard_releases_inflight_accounting() {
+        let e = enforcer_on();
+        let g = e.admit(Some("t"), RouteClass::Interactive, 500).unwrap();
+        assert_eq!(e.inflight_bytes(), 500);
+        assert_eq!(e.interactive_active(), 1);
+        drop(g);
+        assert_eq!(e.inflight_bytes(), 0);
+        assert_eq!(e.interactive_active(), 0);
+    }
+
+    #[test]
+    fn yield_to_interactive_waits_only_while_interactive_in_flight() {
+        let e = enforcer_on();
+        assert!(!e.yield_to_interactive(), "nothing to yield to");
+        let g = e.admit(None, RouteClass::Interactive, 0).unwrap();
+        let t0 = Instant::now();
+        let e2 = e.clone();
+        let h = std::thread::spawn(move || e2.yield_to_interactive());
+        std::thread::sleep(Duration::from_millis(10));
+        drop(g);
+        assert!(h.join().unwrap(), "should report a yield");
+        assert!(t0.elapsed() < Duration::from_millis(250), "released early on guard drop");
+        assert_eq!(e.preemptions(), 1);
+    }
+
+    #[test]
+    fn retire_tenant_drops_quota_state() {
+        let e = enforcer_on();
+        e.set_quota("gone", Quota { req_per_s: 1.0, bytes_per_s: 1.0, weight: 5 });
+        assert_eq!(e.weight("gone"), 5);
+        e.retire_tenant("gone");
+        assert!(e.quota("gone").is_none());
+        assert_eq!(e.weight("gone"), 1);
+    }
+
+    #[test]
+    fn status_text_lists_tenants_and_gates() {
+        let e = enforcer_on();
+        e.set_quota("alpha", Quota { req_per_s: 10.0, bytes_per_s: 1e6, weight: 2 });
+        let txt = e.status_text();
+        assert!(txt.contains("enforcement: on"), "{txt}");
+        assert!(txt.contains("gate read:"), "{txt}");
+        assert!(txt.contains("tenant alpha:"), "{txt}");
+        assert!(txt.contains("weight=2"), "{txt}");
+    }
+
+    #[test]
+    fn collector_emits_qos_families() {
+        let e = enforcer_on();
+        e.set_quota("t", Quota { req_per_s: 5.0, bytes_per_s: 1e6, weight: 1 });
+        let _g = e.enter(Pool::Read);
+        let mut out = Vec::new();
+        e.collect(&mut out);
+        let names: Vec<&str> = out.iter().map(|s| s.name).collect();
+        for family in [
+            "ocpd_qos_enforcement_enabled",
+            "ocpd_qos_inflight_bytes",
+            "ocpd_qos_admitted_total",
+            "ocpd_qos_throttled_total",
+            "ocpd_qos_shed_total",
+            "ocpd_qos_preemptions_total",
+            "ocpd_qos_tokens",
+            "ocpd_qos_queue_wait_us",
+        ] {
+            assert!(names.contains(&family), "missing {family}");
+        }
+    }
+}

@@ -148,7 +148,10 @@ impl Semaphore {
 ///   transient [`Error::Storage`] (targeted mid-write faults);
 /// * `set_error_rate(p)` — each operation independently fails with
 ///   probability `p`, drawn from an RNG seeded at construction, so two
-///   runs with the same seed and operation sequence fire the same faults.
+///   runs with the same seed and operation sequence fire the same faults;
+/// * `set_delay_range(lo, hi)` — each operation sleeps a seeded-uniform
+///   duration from `[lo, hi]` before touching the engine (degraded-node
+///   and tail-latency scenarios: the op succeeds, just late).
 ///
 /// Every fired transient fault records the operation sequence number at
 /// which it fired ([`FaultInjector::fired`]); tests compare these logs
@@ -158,6 +161,7 @@ pub struct FaultInjector {
     crashed: AtomicBool,
     fail_next: AtomicU64,
     rate: Mutex<Option<(f64, Rng)>>,
+    delay: Mutex<Option<(u64, u64, Rng)>>,
     op_seq: AtomicU64,
     fired: Mutex<Vec<u64>>,
 }
@@ -169,6 +173,7 @@ impl FaultInjector {
             crashed: AtomicBool::new(false),
             fail_next: AtomicU64::new(0),
             rate: Mutex::new(None),
+            delay: Mutex::new(None),
             op_seq: AtomicU64::new(0),
             fired: Mutex::new(Vec::new()),
         }
@@ -200,6 +205,21 @@ impl FaultInjector {
     pub fn set_error_rate(&self, p: f64) {
         let mut g = self.rate.lock().unwrap();
         *g = if p > 0.0 { Some((p, Rng::new(self.seed))) } else { None };
+    }
+
+    /// Delay each subsequent operation by a seeded-uniform duration in
+    /// `[lo, hi]` — a slow node rather than a dead one. The draw
+    /// sequence restarts from the injector's seed, so a run's delays
+    /// are as reproducible as its faults. `Duration::ZERO, ZERO`
+    /// disables the delay.
+    pub fn set_delay_range(&self, lo: Duration, hi: Duration) {
+        let (lo_us, hi_us) = (lo.as_micros() as u64, hi.as_micros() as u64);
+        let mut g = self.delay.lock().unwrap();
+        *g = if hi_us > 0 && hi_us >= lo_us {
+            Some((lo_us, hi_us, Rng::new(self.seed)))
+        } else {
+            None
+        };
     }
 
     /// Operation sequence numbers at which transient faults fired — the
@@ -242,6 +262,16 @@ impl FaultInjector {
                 self.fired.lock().unwrap().push(seq);
                 return Err(Error::Storage(format!("injected transient fault ({op})")));
             }
+        }
+        drop(g);
+        // Latency injection last: a delayed op still runs, so the sleep
+        // happens only after every failure hook has passed.
+        let sleep_us = {
+            let mut d = self.delay.lock().unwrap();
+            d.as_mut().map(|(lo, hi, rng)| *lo + rng.next_u64() % (*hi - *lo + 1))
+        };
+        if let Some(us) = sleep_us {
+            precise_sleep(Duration::from_micros(us));
         }
         Ok(())
     }
@@ -589,6 +619,46 @@ mod tests {
         for k in 0..50u64 {
             s.put("t", k, b"x").unwrap();
         }
+    }
+
+    #[test]
+    fn delay_range_slows_ops_and_disarms_clean() {
+        let s = instant(9);
+        s.faults().set_delay_range(Duration::from_micros(500), Duration::from_micros(800));
+        let t0 = Instant::now();
+        for k in 0..5u64 {
+            s.put("t", k, b"x").unwrap();
+        }
+        // Five ops, each ≥ 500µs of injected latency.
+        assert!(
+            t0.elapsed() >= Duration::from_micros(2_500),
+            "delays not applied: {:?}",
+            t0.elapsed()
+        );
+        // Zero range disarms; ops still succeed (and the data landed).
+        s.faults().set_delay_range(Duration::ZERO, Duration::ZERO);
+        for k in 0..5u64 {
+            assert!(s.get("t", k).unwrap().is_some());
+        }
+    }
+
+    #[test]
+    fn delay_rng_does_not_perturb_fault_draws() {
+        // The delay hook carries its own seeded RNG: arming it must not
+        // shift which ops the error rate fails, or a latency experiment
+        // would silently change the fault schedule it runs under.
+        let run = |with_delay: bool| {
+            let f = FaultInjector::new(5);
+            f.set_error_rate(0.3);
+            if with_delay {
+                f.set_delay_range(Duration::from_micros(1), Duration::from_micros(2));
+            }
+            for _ in 0..100 {
+                let _ = f.check("op");
+            }
+            f.fired()
+        };
+        assert_eq!(run(false), run(true));
     }
 
     #[test]

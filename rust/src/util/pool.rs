@@ -111,16 +111,21 @@ where
     let next = AtomicUsize::new(0);
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
     let slots = out.as_mut_ptr() as usize;
-    // Carry the caller's trace context onto the workers so spans opened
-    // inside `f` attach to the request's trace, not nowhere.
+    // Carry the caller's trace and QoS contexts onto the workers so
+    // spans opened inside `f` attach to the request's trace, and fair
+    // gates / deadline checks see the request's class, tenant, and
+    // deadline rather than nothing.
     let trace_ctx = crate::obs::trace::current();
+    let qos_ctx = crate::qos::ctx::current();
     std::thread::scope(|s| {
         for _ in 0..par {
             let next = &next;
             let f = &f;
             let trace_ctx = trace_ctx.clone();
+            let qos_ctx = qos_ctx.clone();
             s.spawn(move || {
                 let _trace = crate::obs::trace::install(trace_ctx);
+                let _qos = crate::qos::ctx::install(qos_ctx);
                 loop {
                     let i = next.fetch_add(1, Ordering::Relaxed);
                     if i >= n {

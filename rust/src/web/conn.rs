@@ -26,6 +26,7 @@ use std::net::TcpStream;
 use std::sync::{Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
+use crate::util::Rng;
 use crate::{Error, Result};
 
 /// Per-host cap on parked idle connections; excess sockets are closed
@@ -62,6 +63,68 @@ pub struct ResponseInfo {
     /// The server's `X-Request-Id` echo — names the request's trace on
     /// the server's `/trace/*` surface (DESIGN.md §9).
     pub request_id: Option<String>,
+    /// Seconds from a `Retry-After` header (429 throttle / 503 shed).
+    pub retry_after: Option<u64>,
+    /// Throttle retries [`request_with`] performed before this answer.
+    pub retries: u32,
+}
+
+/// Backoff schedule for throttled (429) and overloaded (503) answers:
+/// capped exponential with full jitter, floored at whatever the server
+/// advertised in `Retry-After`. Used by [`request_with`]; only
+/// idempotent methods (anything but POST) are ever retried.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Retries after the first attempt (total attempts = this + 1).
+    pub max_retries: u32,
+    /// Backoff scale: attempt `n` draws uniform from
+    /// `[0, min(cap, base * 2^n)]`.
+    pub base: Duration,
+    /// Ceiling on the drawn backoff (the `Retry-After` floor still
+    /// applies on top).
+    pub cap: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: 4,
+            base: Duration::from_millis(100),
+            cap: Duration::from_secs(5),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Sleep before retry `attempt` (0-based): full-jitter backoff, but
+    /// never less than the server's `Retry-After` when one was sent.
+    fn delay(&self, attempt: u32, retry_after: Option<u64>, rng: &mut Rng) -> Duration {
+        let ceil = self
+            .cap
+            .min(self.base.saturating_mul(1u32 << attempt.min(20)))
+            .as_millis() as u64;
+        let jittered = Duration::from_millis(if ceil == 0 { 0 } else { rng.next_u64() % (ceil + 1) });
+        jittered.max(retry_after.map(Duration::from_secs).unwrap_or(Duration::ZERO))
+    }
+}
+
+/// Per-request knobs for [`request_with`].
+#[derive(Default, Clone, Copy, Debug)]
+pub struct RequestOpts {
+    /// Latency budget sent as `X-OCPD-Deadline-Ms`: the server abandons
+    /// remaining batch work and answers 504 once it expires.
+    pub deadline_ms: Option<u64>,
+    /// Retry 429/503 answers under this policy (idempotent methods
+    /// only — POST is returned to the caller on the first answer).
+    pub retry: Option<RetryPolicy>,
+}
+
+/// Deterministic-per-process jitter seed stream: splitmix increments
+/// give each retry loop its own sequence without consulting a clock.
+fn jitter_seed() -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SEQ: AtomicU64 = AtomicU64::new(0x0cd9_1dc3_9f1a_5a21);
+    SEQ.fetch_add(0x9e37_79b9_7f4a_7c15, Ordering::Relaxed)
 }
 
 struct IdleConn {
@@ -152,6 +215,7 @@ fn exchange(
     path: &str,
     body: &[u8],
     close: bool,
+    deadline_ms: Option<u64>,
 ) -> std::result::Result<Exchange, (bool, Error)> {
     // retryable=true until the first response byte arrives.
     // Propagate the caller's trace context: a client call made inside a
@@ -160,8 +224,11 @@ fn exchange(
     let req_id = crate::obs::trace::current_request_id()
         .map(|id| format!("X-Request-Id: {id}\r\n"))
         .unwrap_or_default();
+    let deadline = deadline_ms
+        .map(|ms| format!("X-OCPD-Deadline-Ms: {ms}\r\n"))
+        .unwrap_or_default();
     let head = format!(
-        "{method} {path} HTTP/1.1\r\nHost: {host}\r\nContent-Length: {}\r\n{req_id}{}\r\n",
+        "{method} {path} HTTP/1.1\r\nHost: {host}\r\nContent-Length: {}\r\n{req_id}{deadline}{}\r\n",
         body.len(),
         if close { "Connection: close\r\n" } else { "" }
     );
@@ -192,6 +259,7 @@ fn exchange(
     let mut chunked = false;
     let mut server_close = close;
     let mut request_id: Option<String> = None;
+    let mut retry_after: Option<u64> = None;
     loop {
         let mut h = String::new();
         match conn.reader.read_line(&mut h) {
@@ -213,6 +281,8 @@ fn exchange(
                 server_close = true;
             } else if k.eq_ignore_ascii_case("x-request-id") && !v.is_empty() {
                 request_id = Some(v.to_string());
+            } else if k.eq_ignore_ascii_case("retry-after") {
+                retry_after = v.parse::<u64>().ok();
             }
         }
     }
@@ -279,6 +349,8 @@ fn exchange(
             max_chunk,
             reused: false,
             request_id,
+            retry_after,
+            retries: 0,
         },
         keep: !server_close,
     })
@@ -296,18 +368,47 @@ pub fn request(method: &str, url: &str, body: &[u8]) -> Result<(u16, Vec<u8>)> {
 /// [`request`] with transport detail: whether the connection was
 /// reused, whether the response streamed, and the peak chunk size.
 pub fn request_info(method: &str, url: &str, body: &[u8]) -> Result<ResponseInfo> {
-    request_inner(method, url, body, false)
+    request_inner(method, url, body, false, None)
+}
+
+/// [`request_info`] with per-request knobs: a deadline header and/or a
+/// throttle-retry policy. On 429/503 the retry sleeps
+/// `max(server Retry-After, full-jitter backoff)` and re-issues the
+/// exchange, up to `max_retries` times — but only for idempotent
+/// methods (POST answers are returned as-is, never replayed). The
+/// final answer's `retries` field counts the sleeps taken.
+pub fn request_with(method: &str, url: &str, body: &[u8], opts: &RequestOpts) -> Result<ResponseInfo> {
+    let mut info = request_inner(method, url, body, false, opts.deadline_ms)?;
+    let Some(policy) = opts.retry else { return Ok(info) };
+    if method.eq_ignore_ascii_case("POST") {
+        return Ok(info);
+    }
+    let mut rng = Rng::new(jitter_seed());
+    let mut retries = 0;
+    while (info.status == 429 || info.status == 503) && retries < policy.max_retries {
+        std::thread::sleep(policy.delay(retries, info.retry_after, &mut rng));
+        retries += 1;
+        info = request_inner(method, url, body, false, opts.deadline_ms)?;
+    }
+    info.retries = retries;
+    Ok(info)
 }
 
 /// Close-per-request exchange on a dedicated socket (`Connection:
 /// close`), bypassing the pool — the pre-keep-alive behavior, kept for
 /// the transport benches' baseline.
 pub fn request_once(method: &str, url: &str, body: &[u8]) -> Result<(u16, Vec<u8>)> {
-    let info = request_inner(method, url, body, true)?;
+    let info = request_inner(method, url, body, true, None)?;
     Ok((info.status, info.body))
 }
 
-fn request_inner(method: &str, url: &str, body: &[u8], close: bool) -> Result<ResponseInfo> {
+fn request_inner(
+    method: &str,
+    url: &str,
+    body: &[u8],
+    close: bool,
+    deadline_ms: Option<u64>,
+) -> Result<ResponseInfo> {
     let (host, path) = split_url(url)?;
     // POST is the grammar's one non-idempotent verb: always start it on
     // a fresh socket so the stale-retry path (which replays the
@@ -320,7 +421,7 @@ fn request_inner(method: &str, url: &str, body: &[u8], close: bool) -> Result<Re
         Some(c) => c,
         None => connect(host)?,
     };
-    match exchange(&mut conn, method, host, &path, body, close) {
+    match exchange(&mut conn, method, host, &path, body, close, deadline_ms) {
         Ok(Exchange { mut info, keep }) => {
             info.reused = reused;
             if keep && !close {
@@ -335,7 +436,7 @@ fn request_inner(method: &str, url: &str, body: &[u8], close: bool) -> Result<Re
             if retryable && reused {
                 let mut fresh = connect(host)?;
                 let Exchange { mut info, keep } =
-                    exchange(&mut fresh, method, host, &path, body, close)
+                    exchange(&mut fresh, method, host, &path, body, close, deadline_ms)
                         .map_err(|(_, e)| e)?;
                 info.reused = false;
                 if keep && !close {
@@ -394,5 +495,108 @@ mod tests {
     #[test]
     fn url_parsing_rejects_non_http() {
         assert!(request("GET", "ftp://host/x", &[]).is_err());
+    }
+
+    #[test]
+    fn retry_policy_backs_off_429_until_success() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        use std::sync::Arc;
+        let hits = Arc::new(AtomicU32::new(0));
+        let h = Arc::clone(&hits);
+        let s = Server::bind("127.0.0.1:0", 2, move |_req| {
+            if h.fetch_add(1, Ordering::SeqCst) < 2 {
+                let mut r = Response::error(429, "throttled");
+                r.retry_after = Some(0);
+                r
+            } else {
+                Response::text("ok")
+            }
+        })
+        .unwrap();
+        let opts = RequestOpts {
+            deadline_ms: None,
+            retry: Some(RetryPolicy {
+                max_retries: 4,
+                base: Duration::from_millis(1),
+                cap: Duration::from_millis(5),
+            }),
+        };
+        let info = request_with("GET", &format!("{}/x/", s.url()), &[], &opts).unwrap();
+        assert_eq!(info.status, 200);
+        assert_eq!(info.retries, 2);
+        assert_eq!(hits.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn retry_gives_up_after_max_and_reports_retry_after() {
+        let s = Server::bind("127.0.0.1:0", 2, |_req| {
+            let mut r = Response::error(429, "throttled");
+            r.retry_after = Some(0);
+            r
+        })
+        .unwrap();
+        let opts = RequestOpts {
+            deadline_ms: None,
+            retry: Some(RetryPolicy {
+                max_retries: 2,
+                base: Duration::from_millis(1),
+                cap: Duration::from_millis(2),
+            }),
+        };
+        let info = request_with("GET", &format!("{}/x/", s.url()), &[], &opts).unwrap();
+        assert_eq!(info.status, 429);
+        assert_eq!(info.retries, 2);
+        assert_eq!(info.retry_after, Some(0));
+    }
+
+    #[test]
+    fn post_is_never_replayed_on_throttle() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        use std::sync::Arc;
+        let hits = Arc::new(AtomicU32::new(0));
+        let h = Arc::clone(&hits);
+        let s = Server::bind("127.0.0.1:0", 2, move |_req| {
+            h.fetch_add(1, Ordering::SeqCst);
+            let mut r = Response::error(429, "throttled");
+            r.retry_after = Some(0);
+            r
+        })
+        .unwrap();
+        let opts = RequestOpts { deadline_ms: None, retry: Some(RetryPolicy::default()) };
+        let info = request_with("POST", &format!("{}/jobs/x/", s.url()), b"k=v", &opts).unwrap();
+        assert_eq!(info.status, 429);
+        assert_eq!(info.retries, 0);
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn deadline_header_reaches_the_server() {
+        let s = Server::bind("127.0.0.1:0", 2, |req| {
+            Response::text(format!("{:?}", req.deadline_ms))
+        })
+        .unwrap();
+        let opts = RequestOpts { deadline_ms: Some(1234), retry: None };
+        let info = request_with("GET", &format!("{}/x/", s.url()), &[], &opts).unwrap();
+        assert_eq!(String::from_utf8_lossy(&info.body), "Some(1234)");
+        let info = request_with("GET", &format!("{}/x/", s.url()), &[], &RequestOpts::default())
+            .unwrap();
+        assert_eq!(String::from_utf8_lossy(&info.body), "None");
+    }
+
+    #[test]
+    fn retry_delay_respects_floor_and_cap() {
+        let p = RetryPolicy {
+            max_retries: 3,
+            base: Duration::from_millis(10),
+            cap: Duration::from_millis(40),
+        };
+        let mut rng = Rng::new(7);
+        for attempt in 0..6 {
+            let d = p.delay(attempt, None, &mut rng);
+            assert!(d <= Duration::from_millis(40), "{d:?}");
+        }
+        // The server floor dominates a small jitter draw.
+        let d = p.delay(0, Some(2), &mut rng);
+        assert!(d >= Duration::from_secs(2), "{d:?}");
     }
 }

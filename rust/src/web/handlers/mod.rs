@@ -11,6 +11,7 @@ pub(crate) mod cluster;
 pub(crate) mod jobs;
 pub(crate) mod obs;
 pub(crate) mod projects;
+pub(crate) mod qos;
 pub(crate) mod system;
 pub(crate) mod telemetry;
 pub(crate) mod wal;

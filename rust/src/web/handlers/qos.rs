@@ -1,0 +1,96 @@
+//! QoS control-plane routes: enforcement toggle, per-tenant quotas,
+//! and the admission/fair-sharing status surface.
+
+use crate::qos::Quota;
+use crate::web::http::Response;
+use crate::web::router::Ctx;
+use crate::web::routes::{parse_params, OcpService};
+use crate::{Error, Result};
+
+/// GET /qos/status/ — enforcement state, in-flight accounting,
+/// admission counters, pool-gate queues, and per-tenant quota/token
+/// levels.
+pub(crate) fn status(svc: &OcpService, _ctx: &Ctx<'_>) -> Result<Response> {
+    Ok(Response::text(svc.cluster.qos().status_text()))
+}
+
+/// PUT/POST /qos/quota/{token}/ — set one tenant's quota. Body is
+/// whitespace-separated `key=value` pairs: `req_per_s`, `bytes_per_s`
+/// (both float; omitted = unlimited) and `weight` (integer ≥ 1,
+/// default 1). Replaces the tenant's whole quota — token buckets
+/// restart full at the new rates.
+pub(crate) fn set_quota(svc: &OcpService, ctx: &Ctx<'_>) -> Result<Response> {
+    let token = ctx.params[0];
+    if !svc.cluster.has_project(token) {
+        return Err(Error::NotFound(format!("project '{token}'")));
+    }
+    let params = parse_params(ctx.body);
+    let mut quota = Quota::default();
+    if let Some(v) = params.get("req_per_s") {
+        quota.req_per_s = parse_rate(v, "req_per_s")?;
+    }
+    if let Some(v) = params.get("bytes_per_s") {
+        quota.bytes_per_s = parse_rate(v, "bytes_per_s")?;
+    }
+    if let Some(v) = params.get("weight") {
+        quota.weight = v
+            .parse::<u64>()
+            .ok()
+            .filter(|&w| w >= 1)
+            .ok_or_else(|| Error::BadRequest(format!("bad weight '{v}' (want integer >= 1)")))?;
+    }
+    svc.cluster.qos().set_quota(token, quota);
+    Ok(Response::text(format!(
+        "quota {token}: req_per_s={} bytes_per_s={} weight={}\n",
+        rate_str(quota.req_per_s),
+        rate_str(quota.bytes_per_s),
+        quota.weight
+    )))
+}
+
+/// PUT/POST /qos/enforce/{mode}/ — `on` or `off`. The body may carry
+/// `high_water=<bytes>` to retune the overload-shed threshold.
+pub(crate) fn enforce(svc: &OcpService, ctx: &Ctx<'_>) -> Result<Response> {
+    let enabled = match ctx.params[0] {
+        "on" => true,
+        "off" => false,
+        other => {
+            return Err(Error::BadRequest(format!("bad enforce mode '{other}' (want on|off)")))
+        }
+    };
+    let qos = svc.cluster.qos();
+    let params = parse_params(ctx.body);
+    if let Some(v) = params.get("high_water") {
+        let hw = v
+            .parse::<u64>()
+            .ok()
+            .filter(|&b| b > 0)
+            .ok_or_else(|| Error::BadRequest(format!("bad high_water '{v}'")))?;
+        qos.set_high_water(hw);
+    }
+    qos.set_enabled(enabled);
+    Ok(Response::text(format!(
+        "qos enforcement {} (high_water={})\n",
+        if enabled { "on" } else { "off" },
+        qos.high_water()
+    )))
+}
+
+/// A quota rate: positive float, or `inf`/`unlimited` for no limit.
+fn parse_rate(v: &str, key: &str) -> Result<f64> {
+    if matches!(v, "inf" | "unlimited") {
+        return Ok(f64::INFINITY);
+    }
+    v.parse::<f64>()
+        .ok()
+        .filter(|r| *r > 0.0)
+        .ok_or_else(|| Error::BadRequest(format!("bad {key} '{v}' (want positive number or inf)")))
+}
+
+fn rate_str(r: f64) -> String {
+    if r.is_infinite() {
+        "unlimited".to_string()
+    } else {
+        format!("{r}")
+    }
+}

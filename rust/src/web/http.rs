@@ -43,7 +43,9 @@ use std::time::Duration;
 use crate::metrics::{Counter, Gauge, Histogram};
 use crate::Result;
 
-pub use crate::web::conn::{request, request_info, request_once, ResponseInfo};
+pub use crate::web::conn::{
+    request, request_info, request_once, request_with, RequestOpts, ResponseInfo, RetryPolicy,
+};
 
 /// Default request-body cap (64 MiB — comfortably above the largest
 /// cutout upload the benches issue). See [`ServerConfig`].
@@ -94,6 +96,10 @@ pub struct Request {
     /// Inbound `X-Request-Id`, if the client sent one; the service tier
     /// mints an id otherwise and echoes it on the response either way.
     pub request_id: Option<String>,
+    /// Inbound `X-OCPD-Deadline-Ms`: the caller's latency budget. The
+    /// admission layer converts it to an absolute deadline; engines
+    /// abandon remaining work (504) once it passes.
+    pub deadline_ms: Option<u64>,
     /// Whether the connection may serve another request after this one
     /// (HTTP/1.1 default, overridden by `Connection: close` or an
     /// HTTP/1.0 request line).
@@ -257,7 +263,9 @@ impl Response {
             404 => "Not Found",
             405 => "Method Not Allowed",
             413 => "Payload Too Large",
+            429 => "Too Many Requests",
             503 => "Service Unavailable",
+            504 => "Gateway Timeout",
             _ => "Internal Server Error",
         }
     }
@@ -851,6 +859,7 @@ fn read_request(
     let mut connection_close = http10;
     let mut connection_keep = false;
     let mut request_id: Option<String> = None;
+    let mut deadline_ms: Option<u64> = None;
     loop {
         let mut h = String::new();
         match read_line_bounded(&mut head, &mut h, deadline) {
@@ -897,6 +906,10 @@ fn read_request(
                         connection_keep = true;
                     }
                 }
+            } else if k.eq_ignore_ascii_case("x-ocpd-deadline-ms") {
+                // An unparseable budget is ignored rather than refused:
+                // deadlines are advisory, not part of the grammar.
+                deadline_ms = v.parse::<u64>().ok().filter(|&ms| ms > 0);
             } else if k.eq_ignore_ascii_case("x-request-id") && !v.is_empty() {
                 // Cap and sanitize: the id is echoed in a response
                 // header and rendered in trace/log output.
@@ -935,7 +948,7 @@ fn read_request(
         }
     }
     let keep_alive = !connection_close || (http10 && connection_keep);
-    Ok(Request { method, path, body, request_id, keep_alive, http10 })
+    Ok(Request { method, path, body, request_id, deadline_ms, keep_alive, http10 })
 }
 
 /// [`write_response_v`] with chunked framing allowed (HTTP/1.1 peers).

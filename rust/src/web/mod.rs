@@ -41,15 +41,22 @@
 //! GET /heat/status/                                               shard heat ranking + hot ranges
 //! GET /account/status/                                            per-tenant ledgers
 //! GET /slo/status/                                                latency-objective attainment
+//! GET /qos/status/                                                QoS admission + fair sharing
+//! PUT /qos/quota/{token}/                                         set a tenant's quota/weight
+//! PUT /qos/enforce/{on|off}/                                      toggle QoS enforcement
 //! ```
 //!
 //! `info`, `http`, `wal`, `cache`, `jobs`, `write`, `metrics`,
-//! `trace`, `cluster`, `heat`, `account`, and `slo` are reserved
-//! top-level names, not project tokens;
+//! `trace`, `cluster`, `heat`, `account`, `slo`, and `qos` are
+//! reserved top-level names, not project tokens;
 //! wrong-method requests anywhere in the grammar answer `405` with an
 //! auto-derived `Allow` header. Every response carries an
 //! `X-Request-Id` header (echoing the request's, if sent) naming the
-//! request's trace (DESIGN.md §9).
+//! request's trace (DESIGN.md §9). Requests may carry an
+//! `X-OCPD-Deadline-Ms` latency budget — once it expires the engines
+//! abandon remaining batch work and the answer is `504`. Over-quota
+//! tenants get `429` and overload sheds get `503`, both with a
+//! `Retry-After` header (DESIGN.md §12).
 
 pub(crate) mod conn;
 mod handlers;

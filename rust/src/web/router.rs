@@ -154,6 +154,17 @@ impl<S> Router<S> {
         Outcome::NoMatch
     }
 
+    /// Match-only lookup: the route name `method segs` would dispatch
+    /// to, without running its handler. The admission layer uses this
+    /// to classify a request (route class, tenant attribution) *before*
+    /// deciding whether to run it at all.
+    pub fn peek(&self, method: &str, segs: &[&str]) -> Option<&'static str> {
+        self.routes
+            .iter()
+            .find(|r| r.methods.contains(&method) && self.matches(r.pattern, segs).is_some())
+            .map(|r| r.name)
+    }
+
     /// Render the table: one `METHODS PATTERN  name — doc` line per
     /// route (the `/info/` route listing).
     pub fn listing(&self) -> String {
@@ -290,6 +301,16 @@ mod tests {
             r.dispatch(&Nop, "GET", &["wal", "ocpk", "5"], &[]),
             Outcome::NoMatch
         ));
+    }
+
+    #[test]
+    fn peek_names_the_route_without_dispatching() {
+        let r = router();
+        assert_eq!(r.peek("GET", &["wal", "status"]), Some("status"));
+        assert_eq!(r.peek("GET", &["tok", "ocpk", "5"]), Some("cutout"));
+        // Wrong method / unknown path: no name.
+        assert_eq!(r.peek("DELETE", &["wal", "flush"]), None);
+        assert_eq!(r.peek("GET", &["nope"]), None);
     }
 
     #[test]

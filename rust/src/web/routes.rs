@@ -13,7 +13,9 @@ use crate::cluster::Cluster;
 use crate::core::Box3;
 use crate::runtime::Runtime;
 use crate::tiles::TileService;
-use crate::web::handlers::{cache, cluster, jobs, obs, projects, system, telemetry, wal, write_engine};
+use crate::web::handlers::{
+    cache, cluster, jobs, obs, projects, qos, system, telemetry, wal, write_engine,
+};
 use crate::web::http::{HttpMetrics, Request, Response};
 use crate::web::router::{Outcome, Route, Router, Seg};
 use crate::{Error, Result};
@@ -28,7 +30,7 @@ pub const DEFAULT_STREAM_THRESHOLD: usize = 8 << 20;
 /// the cluster refuses to create projects under them.
 pub const RESERVED: &[&str] = &[
     "info", "http", "wal", "cache", "jobs", "write", "metrics", "trace", "cluster", "heat",
-    "account", "slo",
+    "account", "slo", "qos",
 ];
 
 /// The Web-service layer over a cluster (the paper's "application
@@ -90,24 +92,66 @@ impl OcpService {
         let mut root = crate::obs::trace::start_trace("http", name, &request_id);
         root.tag("method", req.method.clone());
         let segs: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
-        let mut resp = if segs.is_empty() {
-            Response::text("ocpd: Open Connectome Project data cluster")
-        } else {
-            match router().dispatch(self, req.method.as_str(), &segs, &req.body) {
-                Outcome::Handled(resp) | Outcome::MethodNotAllowed(resp) => resp,
-                Outcome::NoMatch => {
-                    if !matches!(req.method.as_str(), "GET" | "PUT" | "POST") {
-                        // Methods outside the grammar entirely.
-                        Response::method_not_allowed("GET, POST, PUT")
-                    } else {
-                        Response::error(
-                            400,
-                            format!("bad request: unrecognized {} /{}", req.method, segs.join("/")),
-                        )
+        // ---- QoS admission ------------------------------------------
+        // Classify BEFORE dispatch (match-only router peek → SLO route
+        // class; tenant = the project the request touches), so denials
+        // cost a table walk and a map lookup, never a handler.
+        let route_name = router().peek(req.method.as_str(), &segs);
+        let class = route_name
+            .map(crate::obs::slo::class_of_route)
+            .unwrap_or(crate::obs::slo::RouteClass::Status);
+        let tenant = tenant_of(&self.cluster, &segs);
+        let deadline = req
+            .deadline_ms
+            .map(|ms| std::time::Instant::now() + std::time::Duration::from_millis(ms));
+        let qos = self.cluster.qos();
+        let admit = qos.admit(tenant, class, req.body.len() as u64);
+        // The context rides a thread-local so engines deep below see the
+        // class/tenant (fair gates) and deadline (batch-loop checks).
+        let _qos_ctx = crate::qos::ctx::install(Some(crate::qos::ctx::ReqCtx {
+            class,
+            tenant: tenant.map(Arc::from),
+            deadline,
+        }));
+        let mut resp = match admit {
+            Err(denial) => {
+                let mut r = Response::error(denial.http_status(), denial.message());
+                r.retry_after = Some(denial.retry_after_secs());
+                r.route = route_name;
+                r
+            }
+            Ok(_admitted) => {
+                // `_admitted` holds the in-flight accounting (and the
+                // interactive-preemption signal) until dispatch returns.
+                if segs.is_empty() {
+                    Response::text("ocpd: Open Connectome Project data cluster")
+                } else if crate::qos::ctx::check_deadline().is_err() {
+                    Response::error(504, "deadline expired before dispatch")
+                } else {
+                    match router().dispatch(self, req.method.as_str(), &segs, &req.body) {
+                        Outcome::Handled(resp) | Outcome::MethodNotAllowed(resp) => resp,
+                        Outcome::NoMatch => {
+                            if !matches!(req.method.as_str(), "GET" | "PUT" | "POST") {
+                                // Methods outside the grammar entirely.
+                                Response::method_not_allowed("GET, POST, PUT")
+                            } else {
+                                Response::error(
+                                    400,
+                                    format!(
+                                        "bad request: unrecognized {} /{}",
+                                        req.method,
+                                        segs.join("/")
+                                    ),
+                                )
+                            }
+                        }
                     }
                 }
             }
         };
+        if resp.status == 504 {
+            qos.note_deadline_expired();
+        }
         if let Some(route) = resp.route {
             root.tag("route", route);
         }
@@ -139,6 +183,26 @@ impl OcpService {
         let ts = Arc::new(TileService::new(svc, 256, 1024));
         guard.insert(token.to_string(), Arc::clone(&ts));
         Ok(ts)
+    }
+}
+
+/// The project a request touches, for QoS attribution: the first path
+/// segment when it names a live project, or the job target for the
+/// `/jobs/{propagate|synapse|ingest}/{token}` submission surfaces (a
+/// tenant's batch jobs bill against — and are throttled by — that
+/// tenant's quota, not a shared anonymous pool). Unknown tokens
+/// attribute to no tenant, so garbage paths never mint quota state.
+fn tenant_of<'a>(cluster: &Cluster, segs: &'a [&'a str]) -> Option<&'a str> {
+    if segs.len() >= 3
+        && segs[0] == "jobs"
+        && matches!(segs[1], "propagate" | "synapse" | "ingest")
+        && cluster.has_project(segs[2])
+    {
+        return Some(segs[2]);
+    }
+    match segs.first() {
+        Some(&tok) if !RESERVED.contains(&tok) && cluster.has_project(tok) => Some(tok),
+        _ => None,
     }
 }
 
@@ -215,6 +279,28 @@ fn route_table() -> Vec<Route<OcpService>> {
             pattern: &[Lit("slo"), Lit("status")],
             handler: telemetry::slo_status,
             doc: "latency-objective attainment and error-budget burn per route class",
+        },
+        // ---- QoS (multi-tenant admission + fair sharing) -------------
+        Route {
+            name: "qos-status",
+            methods: GET,
+            pattern: &[Lit("qos"), Lit("status")],
+            handler: qos::status,
+            doc: "enforcement state, per-tenant quotas/tokens, pool-gate queues",
+        },
+        Route {
+            name: "qos-quota",
+            methods: PUT_POST,
+            pattern: &[Lit("qos"), Lit("quota"), Param],
+            handler: qos::set_quota,
+            doc: "set one tenant's req_per_s / bytes_per_s / weight quota",
+        },
+        Route {
+            name: "qos-enforce",
+            methods: PUT_POST,
+            pattern: &[Lit("qos"), Lit("enforce"), Param],
+            handler: qos::enforce,
+            doc: "toggle enforcement on|off (body may override high_water)",
         },
         // ---- WAL (SSD write-absorber) --------------------------------
         Route {
@@ -570,13 +656,14 @@ mod tests {
         let listing = r.listing();
         for reserved in [
             "info", "http", "wal", "cache", "jobs", "write", "metrics", "trace", "cluster",
-            "heat", "account", "slo",
+            "heat", "account", "slo", "qos",
         ] {
             assert!(listing.contains(&format!("/{reserved}")), "{reserved} missing:\n{listing}");
         }
-        for label in
-            ["cutout", "metadata", "ramon-put", "http-status", "trace-slow", "heat-status"]
-        {
+        for label in [
+            "cutout", "metadata", "ramon-put", "http-status", "trace-slow", "heat-status",
+            "qos-status",
+        ] {
             assert!(listing.contains(label), "{label} missing:\n{listing}");
         }
     }

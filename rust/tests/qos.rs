@@ -1,0 +1,256 @@
+//! Multi-tenant QoS enforcement over live HTTP (DESIGN.md §12):
+//! per-tenant token-bucket admission with honest `Retry-After`,
+//! client-side throttle retries, request deadlines abandoning engine
+//! work as 504, and batch jobs yielding to in-flight interactive
+//! requests at block boundaries.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use ocpd::array::DenseVolume;
+use ocpd::client::{self, OcpClient};
+use ocpd::cluster::Cluster;
+use ocpd::core::{Box3, DatasetBuilder, Dtype, Project};
+use ocpd::ingest::{generate, ingest_volume, SynthSpec};
+use ocpd::obs::slo::RouteClass;
+use ocpd::web::http::{request_info, RetryPolicy};
+use ocpd::web::{ocpk, Server};
+use ocpd::Error;
+
+const DIMS: [u64; 3] = [256, 256, 32];
+
+/// Boot a two-node sharded cluster with an ingested image project and
+/// a hot annotation project, served over HTTP. Enforcement starts off
+/// (the default) — each test opts in.
+fn fixture() -> (Arc<Cluster>, Server) {
+    let cluster = Cluster::in_memory(2, 1);
+    cluster.register_dataset(DatasetBuilder::new("img", DIMS).levels(2).build());
+    let img = cluster.create_image_project(Project::image("img", "img")).unwrap();
+    cluster.create_annotation_project(Project::annotation("ann", "img"), true).unwrap();
+    let sv = generate(&SynthSpec::small(DIMS, 3));
+    ingest_volume(&img, &sv.vol, [256, 256, 16]).unwrap();
+    let server = ocpd::web::serve(Arc::clone(&cluster), None, "127.0.0.1:0", 8).unwrap();
+    (cluster, server)
+}
+
+/// Pull the integer after `key` out of a `/qos/status/` body.
+fn counter(status: &str, key: &str) -> u64 {
+    let pos = status.find(key).unwrap_or_else(|| panic!("{key} missing in:\n{status}"));
+    status[pos + key.len()..]
+        .split_whitespace()
+        .next()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| panic!("unparsable {key} in:\n{status}"))
+}
+
+#[test]
+fn quota_throttles_with_retry_after_and_retrying_clients_recover() {
+    let (cluster, server) = fixture();
+    let url = server.url();
+
+    client::qos_set_quota(&url, "img", "req_per_s=3").unwrap();
+    let on = client::qos_enforce(&url, "on", None).unwrap();
+    assert!(on.contains("on"), "{on}");
+
+    // Hammer the quota'd tenant with raw requests: the token bucket
+    // drains and the server answers 429 with an honest Retry-After.
+    let cutout = format!("{url}/img/ocpk/0/0,64/0,64/0,16/");
+    let mut ok = 0u32;
+    let mut throttle = None;
+    for _ in 0..40 {
+        let info = request_info("GET", &cutout, &[]).unwrap();
+        match info.status {
+            200 => ok += 1,
+            429 => {
+                throttle = Some(info);
+                break;
+            }
+            s => panic!("unexpected status {s}"),
+        }
+    }
+    assert!(ok >= 1, "the bucket starts full: the first request must pass");
+    let throttle = throttle.expect("40 back-to-back requests must overrun 3 req/s");
+    assert!(
+        throttle.retry_after >= Some(1),
+        "Retry-After floors at one second: {:?}",
+        throttle.retry_after
+    );
+
+    // An unquota'd tenant is untouched while its neighbor is throttled.
+    let ann = OcpClient::new(&url, "ann");
+    for _ in 0..10 {
+        ann.cutout_u32(0, Box3::new([0, 0, 0], [64, 64, 16])).unwrap();
+    }
+
+    // A client that opts into throttle retries rides it out: every call
+    // lands, sleeping out the server's Retry-After in between.
+    let img = OcpClient::new(&url, "img").with_retry(RetryPolicy {
+        max_retries: 5,
+        base: Duration::from_millis(50),
+        cap: Duration::from_secs(2),
+    });
+    for _ in 0..4 {
+        let vol = img.cutout_u8(0, Box3::new([0, 0, 0], [64, 64, 16])).unwrap();
+        assert_eq!(vol.dims(), [64, 64, 16]);
+    }
+
+    let status = client::qos_status(&url).unwrap();
+    assert!(status.contains("enforcement: on"), "{status}");
+    assert!(status.contains("tenant img:"), "{status}");
+    assert!(cluster.qos().throttled_total() > 0);
+}
+
+#[test]
+fn enforcement_shields_interactive_reads_from_a_bulk_storm() {
+    let (cluster, server) = fixture();
+    let url = server.url();
+
+    let vol = DenseVolume::<u32>::zeros([64, 64, 8]);
+    let body = ocpk::encode_volume(Dtype::U32, [0, 0, 0], &vol).unwrap();
+    let write_url = format!("{url}/ann/overwrite/0/");
+
+    // Enforcement off (the default): the storm is admitted wholesale.
+    for _ in 0..8 {
+        let info = request_info("PUT", &write_url, &body).unwrap();
+        assert_eq!(info.status, 200, "enforcement off never throttles");
+    }
+    assert_eq!(cluster.qos().throttled_total(), 0);
+
+    // Quota the bulk tenant and switch enforcement on: the storm gets
+    // paced while an interactive reader on another project, interleaved
+    // with it, sails through untouched.
+    client::qos_set_quota(&url, "ann", "req_per_s=4 bytes_per_s=400000").unwrap();
+    client::qos_enforce(&url, "on", None).unwrap();
+
+    let img = OcpClient::new(&url, "img");
+    let (mut ok, mut throttled) = (0u32, 0u32);
+    for i in 0..24 {
+        let info = request_info("PUT", &write_url, &body).unwrap();
+        match info.status {
+            200 => ok += 1,
+            429 => {
+                throttled += 1;
+                assert!(
+                    info.retry_after >= Some(1),
+                    "429 carries Retry-After: {:?}",
+                    info.retry_after
+                );
+            }
+            s => panic!("unexpected status {s}"),
+        }
+        if i % 3 == 0 {
+            let v = img.cutout_u8(0, Box3::new([0, 0, 0], [128, 128, 16])).unwrap();
+            assert_eq!(v.dims(), [128, 128, 16]);
+        }
+    }
+    assert!(ok >= 1, "the bucket starts full: some of the storm lands");
+    assert!(throttled > 0, "24 back-to-back 128 KiB writes must overrun the quota");
+
+    let status = client::qos_status(&url).unwrap();
+    assert!(status.contains("tenant ann:"), "{status}");
+    assert!(counter(&status, "throttled:") >= u64::from(throttled), "{status}");
+
+    // The qos families surface on the unified exposition.
+    let metrics = request_info("GET", &format!("{url}/metrics/"), &[]).unwrap();
+    assert_eq!(metrics.status, 200);
+    let text = String::from_utf8_lossy(&metrics.body).to_string();
+    for family in
+        ["ocpd_qos_enforcement_enabled", "ocpd_qos_throttled_total", "ocpd_qos_inflight_bytes"]
+    {
+        assert!(text.contains(family), "missing {family}");
+    }
+}
+
+#[test]
+fn expired_deadlines_abandon_reads_and_answer_504() {
+    // The parallel read path checks the deadline at batch boundaries; on
+    // a single hardware thread the engine degenerates to the one-shot
+    // sequential pass, which has no mid-read boundary to observe the
+    // expiry deterministically.
+    if std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) < 2 {
+        return;
+    }
+    let cluster = Cluster::simulated(2, 1, 1e-4);
+    // Small cuboids (32x32x8) turn the full-volume read into 256
+    // cuboids, so the planner always forms more batches than workers: a
+    // second scheduling wave is guaranteed to hit a batch boundary after
+    // the injected device latency has burned the budget.
+    cluster.register_dataset(
+        DatasetBuilder::new("img", DIMS).cuboids([32, 32, 8], [32, 32, 32]).build(),
+    );
+    let img = cluster.create_image_project(Project::image("img", "img")).unwrap();
+    let sv = generate(&SynthSpec::small(DIMS, 11));
+    ingest_volume(&img, &sv.vol, [256, 256, 16]).unwrap();
+    let server = ocpd::web::serve(Arc::clone(&cluster), None, "127.0.0.1:0", 8).unwrap();
+    let url = server.url();
+
+    // 20-25 ms per device op against a 5 ms budget: the first wave of
+    // batches alone overruns the deadline.
+    for node in 0..2 {
+        cluster
+            .fault(node)
+            .unwrap()
+            .set_delay_range(Duration::from_millis(20), Duration::from_millis(25));
+    }
+    let slow = OcpClient::new(&url, "img").with_deadline_ms(5);
+    let err = slow.cutout_u8(0, Box3::new([0, 0, 0], DIMS)).unwrap_err();
+    assert!(matches!(err, Error::DeadlineExceeded(_)), "got {err:?}");
+    let status = client::qos_status(&url).unwrap();
+    assert!(counter(&status, "deadline_expired:") >= 1, "{status}");
+
+    // Disarm the latency and drop the budget: the same read completes.
+    for node in 0..2 {
+        cluster.fault(node).unwrap().set_delay_range(Duration::ZERO, Duration::ZERO);
+    }
+    let v = OcpClient::new(&url, "img").cutout_u8(0, Box3::new([0, 0, 0], DIMS)).unwrap();
+    assert_eq!(v.dims(), DIMS);
+}
+
+#[test]
+fn job_blocks_yield_while_interactive_requests_are_in_flight() {
+    let (cluster, server) = fixture();
+    let url = server.url();
+    client::qos_enforce(&url, "on", None).unwrap();
+
+    // Pin an interactive request "in flight" exactly the way admission
+    // does, then submit a batch ingest: every block boundary must
+    // observe the live interactive work and yield before scheduling the
+    // next block.
+    let qos = Arc::clone(cluster.qos());
+    let base = qos.preemptions();
+    let guard = qos.admit(Some("img"), RouteClass::Interactive, 0).unwrap();
+
+    let reply = client::submit_job(
+        &url,
+        "ingest/img",
+        "dims=128,128,32 block=64,64,16 workers=1 seed=9",
+    )
+    .unwrap();
+    let id: u64 = reply
+        .split_whitespace()
+        .find_map(|kv| kv.strip_prefix("id="))
+        .unwrap_or_else(|| panic!("submit echoes id=: {reply}"))
+        .parse()
+        .unwrap();
+
+    let t0 = Instant::now();
+    while qos.preemptions() == base && t0.elapsed() < Duration::from_secs(20) {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(qos.preemptions() > base, "job blocks must yield to live interactive work");
+    drop(guard);
+
+    // With the interactive load gone the job runs unimpeded to the end.
+    let t0 = Instant::now();
+    loop {
+        let s = client::job_status(&url, Some(id)).unwrap();
+        if s.contains("state=completed") {
+            break;
+        }
+        assert!(!s.contains("state=failed"), "{s}");
+        assert!(t0.elapsed() < Duration::from_secs(60), "job stuck: {s}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let status = client::qos_status(&url).unwrap();
+    assert!(counter(&status, "preemptions:") >= 1, "{status}");
+}
