@@ -1,0 +1,326 @@
+//! Shard-split money shot: what does a heat-driven split buy a skewed
+//! workload, and what does the live move cost readers while it runs?
+//!
+//! A 2-shard engine over simulated seek-bound nodes (parallelism 1, so
+//! a node serializes its ops — the contention a hot shard creates)
+//! takes a 90%-hot skewed read/write workload:
+//!
+//! * **before** — the hot shard's node serializes ~90% of all traffic;
+//! * **during** — the same workload runs while the copier drains the
+//!   move window in chunks (read latencies collected mid-move);
+//! * **after** — the hot shard is split at the heat tracker's
+//!   `hot_split_key` and its upper half rehomed to a fresh node, so the
+//!   hot traffic spreads over two devices.
+//!
+//! Prints the table and rewrites `../BENCH_shardsplit.json` (override
+//! with `OCPD_BENCH_OUT`). `OCPD_BENCH_SMOKE=1` shrinks the workload
+//! for CI. Acceptance (ISSUE 10): skewed throughput after the split is
+//! >= 1.5x before, and no read during the move pays more than 10x the
+//! steady-state p99.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use ocpd::cluster::{ReplicaSet, ShardMove, ShardedEngine};
+use ocpd::obs::heat::HeatTracker;
+use ocpd::shard::ShardMap;
+use ocpd::storage::{DeviceProfile, Engine, MemStore, SimulatedStore, StorageEngine};
+use ocpd::util::Rng;
+
+use common::*;
+
+const TABLE: &str = "bench/data";
+
+struct Workload {
+    threads: usize,
+    ops_per_thread: usize,
+    value_bytes: usize,
+    total_keys: u64,
+    /// Fraction of ops aimed at the hot shard.
+    hot_frac: f64,
+    write_frac: f64,
+    copy_chunk: usize,
+}
+
+fn workload() -> Workload {
+    if std::env::var("OCPD_BENCH_SMOKE").is_ok() {
+        Workload {
+            threads: 4,
+            ops_per_thread: 400,
+            value_bytes: 256,
+            total_keys: 4096,
+            hot_frac: 0.9,
+            write_frac: 0.2,
+            copy_chunk: 16,
+        }
+    } else {
+        Workload {
+            threads: 4,
+            ops_per_thread: 2500,
+            value_bytes: 256,
+            total_keys: 4096,
+            hot_frac: 0.9,
+            write_frac: 0.2,
+            copy_chunk: 16,
+        }
+    }
+}
+
+/// A seek-bound single-spindle node: every op pays a positioning cost
+/// and the device serializes (parallelism 1), so a hot shard's node is
+/// a genuine bottleneck and a split genuinely parallelizes.
+fn bench_profile() -> DeviceProfile {
+    DeviceProfile {
+        name: "bench-spindle",
+        read_seek_us: 120.0,
+        write_seek_us: 150.0,
+        read_mbps: 1e6,
+        write_mbps: 1e6,
+        iops: 0.0,
+        parallelism: 1,
+    }
+}
+
+fn sim_node(mem: &Arc<MemStore>) -> Engine {
+    Arc::new(SimulatedStore::new(Arc::clone(mem) as Engine, bench_profile(), 1.0))
+}
+
+/// One client thread's slice of the skewed workload. Returns the read
+/// latencies (µs) it observed; `until` (if set) overrides the op count
+/// and runs until the flag flips.
+#[allow(clippy::too_many_arguments)]
+fn client(
+    s: &ShardedEngine,
+    w: &Workload,
+    heat: Option<&HeatTracker>,
+    seed: u64,
+    ops: usize,
+    until: Option<&AtomicBool>,
+    hot_lo: u64,
+    value: &[u8],
+) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    let hot_span = w.total_keys - hot_lo;
+    let mut lats = Vec::new();
+    let mut done = 0usize;
+    loop {
+        match until {
+            Some(stop) => {
+                if stop.load(Ordering::Acquire) {
+                    break;
+                }
+            }
+            None => {
+                if done >= ops {
+                    break;
+                }
+            }
+        }
+        let k = if rng.chance(w.hot_frac) {
+            hot_lo + rng.next_u64() % hot_span
+        } else {
+            rng.next_u64() % hot_lo
+        };
+        if rng.chance(w.write_frac) {
+            s.put(TABLE, k, value).unwrap();
+            if let Some(h) = heat {
+                h.record_write(k, value.len() as u64);
+            }
+        } else {
+            let t0 = Instant::now();
+            let v = s.get(TABLE, k).unwrap();
+            lats.push(t0.elapsed().as_secs_f64() * 1e6);
+            assert!(v.is_some(), "preloaded key {k} missing");
+            if let Some(h) = heat {
+                h.record_read(k, value.len() as u64);
+            }
+        }
+        done += 1;
+    }
+    lats
+}
+
+/// Run `threads` clients to completion; returns (wall seconds, ops,
+/// all read latencies).
+fn run_phase(
+    s: &ShardedEngine,
+    w: &Workload,
+    heat: Option<&HeatTracker>,
+    seed: u64,
+    hot_lo: u64,
+    value: &[u8],
+) -> (f64, u64, Vec<f64>) {
+    let t0 = Instant::now();
+    let mut lats = Vec::new();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..w.threads)
+            .map(|i| {
+                scope.spawn(move || {
+                    client(s, w, heat, seed ^ (i as u64) << 32, w.ops_per_thread, None, hot_lo, value)
+                })
+            })
+            .collect();
+        for h in handles {
+            lats.extend(h.join().unwrap());
+        }
+    });
+    (t0.elapsed().as_secs_f64(), (w.threads * w.ops_per_thread) as u64, lats)
+}
+
+fn p99_us(lats: &mut [f64]) -> f64 {
+    assert!(!lats.is_empty(), "no read latencies collected");
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    lats[(lats.len() * 99 / 100).min(lats.len() - 1)]
+}
+
+fn main() {
+    let w = workload();
+    let value = vec![0xCD_u8; w.value_bytes];
+
+    // Two shards over two seek-bound nodes; shard 1 will run hot.
+    let mems: Vec<Arc<MemStore>> = (0..3).map(|_| Arc::new(MemStore::new())).collect();
+    let map = ShardMap::even(w.total_keys, vec![0, 1]).unwrap();
+    let hot_lo = map.shard_range(1).0;
+    // Preload every key straight into the backing stores (no simulated
+    // latency for setup).
+    for k in 0..w.total_keys {
+        mems[map.nodes()[map.shard_for(k)]].put(TABLE, k, &value).unwrap();
+    }
+    let engines: Vec<Engine> = mems.iter().take(2).map(sim_node).collect();
+    let map = Arc::new(map);
+    let s = ShardedEngine::new(ShardMap::even(w.total_keys, vec![0, 1]).unwrap(), engines);
+    let heat = HeatTracker::new(w.total_keys, Arc::clone(&map));
+
+    // Phase A: steady state, skewed at the 2-shard layout.
+    let (secs_before, ops, mut steady_lats) =
+        run_phase(&s, &w, Some(&heat), 0xBE9C, hot_lo, &value);
+    let thr_before = ops as f64 / secs_before;
+    let p99_steady = p99_us(&mut steady_lats);
+
+    // The tracker names the cut: hottest shard, Morton-block-snapped.
+    let snap = heat.snapshot();
+    let hot_shard = snap.shards.first().expect("heat snapshot empty").shard;
+    assert_eq!(hot_shard, 1, "skew missed the intended shard");
+    let cut = heat.hot_split_key(hot_shard).expect("no split key for the hot shard");
+
+    // Phase B: open the move window and drain it while the same
+    // workload keeps running; every read in this phase is a mid-move
+    // read.
+    let new_map =
+        Arc::new(s.map().split(hot_shard, cut).unwrap().assign(hot_shard + 1, 2).unwrap());
+    let to = ReplicaSet::solo(hot_shard + 1, 2, sim_node(&mems[2]));
+    to.set_range(new_map.shard_range(hot_shard + 1));
+    let from = Arc::clone(&s.sets()[hot_shard]);
+    let mut sets = s.sets();
+    sets.insert(hot_shard + 1, Arc::clone(&to));
+    s.begin_move(ShardMove {
+        range: new_map.shard_range(hot_shard + 1),
+        from,
+        to,
+        scope: "bench".into(),
+        map: Arc::clone(&new_map),
+        sets,
+    })
+    .unwrap();
+
+    let stop = AtomicBool::new(false);
+    let mut move_lats: Vec<f64> = Vec::new();
+    let mut keys_moved = 0u64;
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..w.threads)
+            .map(|i| {
+                let s = &s;
+                let w = &w;
+                let stop = &stop;
+                let value = &value[..];
+                scope.spawn(move || {
+                    client(s, w, None, 0x30BE ^ (i as u64) << 32, 0, Some(stop), hot_lo, value)
+                })
+            })
+            .collect();
+        keys_moved = s.copy_moving(w.copy_chunk).unwrap();
+        s.commit_move().unwrap();
+        stop.store(true, Ordering::Release);
+        for h in handles {
+            move_lats.extend(h.join().unwrap());
+        }
+    });
+    let p99_move = p99_us(&mut move_lats);
+    assert_eq!(s.map().num_shards(), 3, "split did not install");
+
+    // Phase C: steady state again, hot traffic now spread over 2 nodes.
+    let (secs_after, _, _) = run_phase(&s, &w, None, 0xAF7E9, hot_lo, &value);
+    let thr_after = ops as f64 / secs_after;
+
+    let speedup = thr_after / thr_before;
+    let p99_ratio = p99_move / p99_steady;
+
+    header(
+        "skewed throughput, before/after heat-driven split",
+        &["phase", "shards", "ops", "seconds", "ops/s", "speedup"],
+    );
+    row(&[
+        "before".into(),
+        "2".into(),
+        ops.to_string(),
+        format!("{secs_before:.4}"),
+        format!("{thr_before:.0}"),
+        "1.00x".into(),
+    ]);
+    row(&[
+        "after".into(),
+        "3".into(),
+        ops.to_string(),
+        format!("{secs_after:.4}"),
+        format!("{thr_after:.0}"),
+        format!("{speedup:.2}x"),
+    ]);
+    println!(
+        "\nsplit: shard {hot_shard} at key {cut} (heat-driven, Morton-snapped), \
+         {keys_moved} keys moved live"
+    );
+    println!(
+        "read p99: steady={p99_steady:.0}µs during-move={p99_move:.0}µs \
+         ratio={p99_ratio:.2}x (limit 10x)"
+    );
+
+    let speedup_ok = speedup >= 1.5;
+    let p99_ok = p99_ratio < 10.0;
+    if !speedup_ok || !p99_ok {
+        println!("WARNING: acceptance not met (speedup_ok={speedup_ok} p99_ok={p99_ok})");
+    }
+
+    let out =
+        std::env::var("OCPD_BENCH_OUT").unwrap_or_else(|_| "../BENCH_shardsplit.json".into());
+    let mut json = String::from("{\n  \"bench\": \"bench_shardsplit\",\n");
+    json.push_str(&format!(
+        "  \"workload\": {{\"threads\": {}, \"ops_per_thread\": {}, \"value_bytes\": {}, \
+         \"total_keys\": {}, \"hot_frac\": {}, \"write_frac\": {}, \"copy_chunk\": {}}},\n",
+        w.threads, w.ops_per_thread, w.value_bytes, w.total_keys, w.hot_frac, w.write_frac,
+        w.copy_chunk
+    ));
+    json.push_str("  \"provenance\": \"measured by cargo bench --bench bench_shardsplit\",\n");
+    json.push_str(&format!("  \"split_cut\": {cut},\n"));
+    json.push_str(&format!("  \"keys_moved\": {keys_moved},\n"));
+    json.push_str(&format!(
+        "  \"throughput_before_ops_per_sec\": {thr_before:.1},\n\
+         \x20 \"throughput_after_ops_per_sec\": {thr_after:.1},\n\
+         \x20 \"speedup\": {speedup:.3},\n\
+         \x20 \"read_p99_steady_us\": {p99_steady:.1},\n\
+         \x20 \"read_p99_move_us\": {p99_move:.1},\n\
+         \x20 \"p99_ratio\": {p99_ratio:.3},\n"
+    ));
+    json.push_str(&format!(
+        "  \"acceptance\": {{\"speedup_min\": 1.5, \"speedup_ok\": {speedup_ok}, \
+         \"p99_ratio_max\": 10.0, \"p99_ratio_ok\": {p99_ok}}}\n"
+    ));
+    json.push_str("}\n");
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

@@ -358,6 +358,38 @@ pub fn cluster_failover(base_url: &str, token: &str, shard: usize) -> Result<Str
     Ok(String::from_utf8_lossy(&b).to_string())
 }
 
+/// Shard maps, move windows, and split-planner counters
+/// (`GET /shards/status/`).
+pub fn shards_status(base_url: &str) -> Result<String> {
+    let (s, b) =
+        request("GET", &format!("{}/shards/status/", base_url.trim_end_matches('/')), &[])?;
+    if s != 200 {
+        return Err(Error::Other(format!("http {s}: {}", String::from_utf8_lossy(&b))));
+    }
+    Ok(String::from_utf8_lossy(&b).to_string())
+}
+
+/// Split one project shard at its heat median and rehome the hot half.
+/// Returns the server's `split: ...` report.
+pub fn shards_split(base_url: &str, token: &str, shard: usize) -> Result<String> {
+    let url = format!("{}/shards/split/{token}/{shard}/", base_url.trim_end_matches('/'));
+    let (s, b) = request("POST", &url, &[])?;
+    if s != 200 {
+        return Err(Error::Other(format!("http {s}: {}", String::from_utf8_lossy(&b))));
+    }
+    Ok(String::from_utf8_lossy(&b).to_string())
+}
+
+/// Toggle the heat-driven auto splitter (`PUT /shards/auto/{on|off}/`).
+pub fn shards_auto(base_url: &str, mode: &str) -> Result<String> {
+    let url = format!("{}/shards/auto/{mode}/", base_url.trim_end_matches('/'));
+    let (s, b) = request("PUT", &url, &[])?;
+    if s != 200 {
+        return Err(Error::Other(format!("http {s}: {}", String::from_utf8_lossy(&b))));
+    }
+    Ok(String::from_utf8_lossy(&b).to_string())
+}
+
 /// Submit a batch compute job. `spec` is the submit path after `/jobs/`
 /// (e.g. `propagate/synapses_v0` or `synapse/synth/synapses_v0`);
 /// `params` is the whitespace-separated `key=value` body (`workers=N`,

@@ -1,0 +1,449 @@
+//! Heat-driven shard splitting and live rebalancing (DESIGN.md §13).
+//!
+//! The balancer closes the loop that ROADMAP item 1 left open: the
+//! per-project [`HeatTracker`] already ranks shards and computes the
+//! cumulative-heat-median split key; this module *acts* on it. Each
+//! [`Cluster::balance_tick`] inspects every sharded image project and,
+//! when the hottest shard's decayed score exceeds the project mean by
+//! the configured imbalance ratio, cuts it at the heat median (snapped
+//! to a Morton-block boundary so no cuboid run is ever torn across
+//! shards) and rehomes the hot half onto the least-loaded database node
+//! through [`ShardedEngine`]'s dual-route move window — readers never
+//! stall while the bytes travel.
+//!
+//! The same machinery backs the manual surface (`POST
+//! /shards/split/{token}/{shard}/`, `ocpd shards --split TOKEN/SHARD`):
+//! a manual split of a *cold* shard falls back to the block-snapped
+//! range midpoint, since there is no heat median to cut at.
+//!
+//! Auto mode (`PUT /shards/auto/{on|off}/`) runs ticks on a background
+//! thread holding only a `Weak<Cluster>`, mirroring the control plane's
+//! failure monitor: dropping the cluster stops the thread.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Duration;
+
+use crate::log_warn;
+use crate::metrics::Counter;
+use crate::obs::heat::snap_split_key;
+use crate::shard::{NodeId, ShardMap};
+use crate::storage::{Engine, StorageEngine};
+use crate::{Error, Result};
+
+use super::replica::{ReplicaSet, ReplicationConfig};
+use super::sharded::{ShardMove, ShardedEngine, TopologyStatus};
+use super::{Cluster, NodeRole};
+
+/// Splitter policy knobs.
+#[derive(Clone, Debug)]
+pub struct BalanceConfig {
+    /// Split when the hottest shard's score exceeds the project mean by
+    /// this factor.
+    pub imbalance_ratio: f64,
+    /// Ignore shards cooler than this decayed score — a skewed but idle
+    /// project is not worth moving bytes for.
+    pub min_score: f64,
+    /// Never grow a project past this many shards.
+    pub max_shards: usize,
+    /// Auto-mode tick cadence.
+    pub interval: Duration,
+    /// Keys copied per move-lock hold — the knob bounding how long a
+    /// copy chunk can stall a dual-routed write.
+    pub copy_chunk: usize,
+}
+
+impl Default for BalanceConfig {
+    fn default() -> Self {
+        BalanceConfig {
+            imbalance_ratio: 2.0,
+            min_score: 4096.0,
+            max_shards: 64,
+            interval: Duration::from_millis(500),
+            copy_chunk: 256,
+        }
+    }
+}
+
+/// Balancer counters, exported as `ocpd_shard_*` metrics.
+#[derive(Debug, Default)]
+pub struct BalanceMetrics {
+    /// Planner rounds run (manual or auto).
+    pub ticks: Counter,
+    /// Splits executed to completion.
+    pub splits: Counter,
+    /// Split candidates passed over (unsplittable shard or failed move).
+    pub skipped: Counter,
+}
+
+/// What one executed split did — the `POST /shards/split/` response
+/// body and the `ocpd shards` audit trail.
+#[derive(Clone, Debug)]
+pub struct SplitReport {
+    pub token: String,
+    /// The shard that was split (it keeps the lower half).
+    pub shard: usize,
+    /// The Morton key the range was cut at (block-snapped).
+    pub cut: u64,
+    /// Node now owning the upper half.
+    pub target_node: NodeId,
+    /// Keys copied through the move window.
+    pub keys_moved: u64,
+    /// Keys purged from the old owner after commit.
+    pub keys_purged: u64,
+    /// Map generation installed by the split.
+    pub map_version: u64,
+}
+
+/// The cluster's splitter state: policy, counters, and the auto-mode
+/// switch. One per cluster, embedded in [`Cluster`].
+pub struct Balancer {
+    pub(super) enabled: AtomicBool,
+    pub(super) thread_started: AtomicBool,
+    cfg: RwLock<BalanceConfig>,
+    pub metrics: BalanceMetrics,
+    /// Most recent split reports, oldest first (bounded).
+    history: Mutex<Vec<SplitReport>>,
+}
+
+impl Balancer {
+    pub(super) fn new() -> Self {
+        Balancer {
+            enabled: AtomicBool::new(false),
+            thread_started: AtomicBool::new(false),
+            cfg: RwLock::new(BalanceConfig::default()),
+            metrics: BalanceMetrics::default(),
+            history: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn config(&self) -> BalanceConfig {
+        self.cfg.read().unwrap().clone()
+    }
+
+    pub fn set_config(&self, cfg: BalanceConfig) {
+        *self.cfg.write().unwrap() = cfg;
+    }
+
+    /// The most recent split reports, oldest first.
+    pub fn recent_splits(&self) -> Vec<SplitReport> {
+        self.history.lock().unwrap().clone()
+    }
+
+    fn record(&self, report: SplitReport) {
+        let mut h = self.history.lock().unwrap();
+        h.push(report);
+        let overflow = h.len().saturating_sub(32);
+        if overflow > 0 {
+            h.drain(..overflow);
+        }
+    }
+}
+
+impl Cluster {
+    /// The sharded engine behind an image project.
+    pub fn sharded_engine(&self, token: &str) -> Result<Arc<ShardedEngine>> {
+        self.sharded
+            .read()
+            .unwrap()
+            .get(token)
+            .cloned()
+            .ok_or_else(|| Error::NotFound(format!("'{token}' is not a sharded image project")))
+    }
+
+    /// Topology snapshots of every sharded project, by token (the
+    /// `GET /shards/status/` surface).
+    pub fn shard_status(&self) -> Vec<(String, TopologyStatus)> {
+        let engines: Vec<(String, Arc<ShardedEngine>)> = {
+            let guard = self.sharded.read().unwrap();
+            guard.iter().map(|(k, e)| (k.clone(), Arc::clone(e))).collect()
+        };
+        let mut v: Vec<(String, TopologyStatus)> =
+            engines.into_iter().map(|(k, e)| (k, e.topology_status())).collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
+    /// Human-readable topology report (the `GET /shards/status/` route
+    /// body and `ocpd shards`).
+    pub fn shard_status_text(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        let m = &self.balance.metrics;
+        let _ = writeln!(
+            s,
+            "auto balance: {}  (ticks {}  splits {}  skipped {})",
+            if self.auto_balance() { "on" } else { "off" },
+            m.ticks.get(),
+            m.splits.get(),
+            m.skipped.get(),
+        );
+        for (token, st) in self.shard_status() {
+            let moving = match st.moving {
+                Some((lo, hi, copied)) => {
+                    format!("  moving [{lo}, {hi}) ({copied} keys copied)")
+                }
+                None => String::new(),
+            };
+            let _ = writeln!(
+                s,
+                "project {token}: map v{}  {} shard(s){moving}",
+                st.version,
+                st.shards.len(),
+            );
+            for sh in &st.shards {
+                let _ = writeln!(
+                    s,
+                    "  shard {:>3}  [{}, {})  node {}  epoch {}  x{}",
+                    sh.shard, sh.lo, sh.hi, sh.node, sh.epoch, sh.replicas,
+                );
+            }
+            let _ = writeln!(
+                s,
+                "  fence retries {}  map swaps {}  dual writes {}  keys moved {}",
+                st.fence_retries, st.map_swaps, st.dual_writes, st.keys_moved,
+            );
+        }
+        for r in self.balance.recent_splits() {
+            let _ = writeln!(
+                s,
+                "split {}/{} at {} -> node {}  ({} moved, {} purged, v{})",
+                r.token, r.shard, r.cut, r.target_node, r.keys_moved, r.keys_purged, r.map_version,
+            );
+        }
+        s
+    }
+
+    /// Is the background splitter acting on heat evidence?
+    pub fn auto_balance(&self) -> bool {
+        self.balance.enabled.load(Ordering::Acquire)
+    }
+
+    /// Switch auto balancing on or off (`PUT /shards/auto/{on|off}/`).
+    /// The first enable starts the background tick thread.
+    pub fn set_auto_balance(self: &Arc<Self>, on: bool) -> bool {
+        self.balance.enabled.store(on, Ordering::Release);
+        if on {
+            self.ensure_balance_thread();
+        }
+        on
+    }
+
+    fn ensure_balance_thread(self: &Arc<Self>) {
+        if self.balance.thread_started.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        let weak = Arc::downgrade(self);
+        let interval = self.balance.config().interval;
+        let _ = std::thread::Builder::new().name("ocpd-balance".into()).spawn(move || loop {
+            std::thread::sleep(interval);
+            let Some(c) = weak.upgrade() else { return };
+            if c.balance.enabled.load(Ordering::Acquire) {
+                let _ = c.balance_tick();
+            }
+        });
+    }
+
+    /// One planner round over every sharded project: split the hottest
+    /// shard of any project whose heat skew crosses the imbalance
+    /// ratio. Returns the splits performed (usually zero or one).
+    pub fn balance_tick(&self) -> Vec<SplitReport> {
+        self.balance.metrics.ticks.inc();
+        let cfg = self.balance.config();
+        let tokens: Vec<String> = {
+            let guard = self.sharded.read().unwrap();
+            let mut t: Vec<String> = guard.keys().cloned().collect();
+            t.sort();
+            t
+        };
+        let mut out = Vec::new();
+        for token in tokens {
+            let Ok(eng) = self.sharded_engine(&token) else { continue };
+            if eng.move_in_flight().is_some() {
+                continue;
+            }
+            let Some(heat) = self.heat(&token) else { continue };
+            let map = eng.map();
+            if map.num_shards() >= cfg.max_shards {
+                continue;
+            }
+            let snap = heat.snapshot();
+            let Some(hot) = snap.shards.first() else { continue };
+            if hot.score < cfg.min_score {
+                continue;
+            }
+            let mean = snap.total_score / snap.shards.len().max(1) as f64;
+            if mean > 0.0 && hot.score / mean < cfg.imbalance_ratio {
+                continue;
+            }
+            let Some(cut) = heat.hot_split_key(hot.shard) else {
+                // Hot but unsplittable (sub-block shard): nothing to do.
+                self.balance.metrics.skipped.inc();
+                continue;
+            };
+            let target = self.split_target_node(&token, &map);
+            match self.execute_split(&token, &eng, hot.shard, cut, target) {
+                Ok(r) => out.push(r),
+                Err(e) => {
+                    self.balance.metrics.skipped.inc();
+                    log_warn!(
+                        target: "balance",
+                        "split failed project={token} shard={} cut={cut}: {e}",
+                        hot.shard
+                    );
+                }
+            }
+        }
+        out
+    }
+
+    /// Split one shard of one project (`POST
+    /// /shards/split/{token}/{shard}/`). Cuts at the heat median when
+    /// the shard is hot, else at the block-snapped range midpoint.
+    pub fn split_shard(&self, token: &str, shard: usize) -> Result<SplitReport> {
+        self.balance.metrics.ticks.inc();
+        let eng = self.sharded_engine(token)?;
+        let map = eng.map();
+        if shard >= map.num_shards() {
+            return Err(Error::NotFound(format!(
+                "shard {shard} of '{token}' ({} shards)",
+                map.num_shards()
+            )));
+        }
+        let (lo, hi) = map.shard_range(shard);
+        let heat = self.heat(token);
+        // Cold fallback: cut at the range midpoint. The last shard's
+        // range is open-ended (`hi == u64::MAX`); clamp it to the real
+        // key space so the cut lands inside actual data.
+        let data_hi = match &heat {
+            Some(h) if hi == u64::MAX => h.total_keys().max(lo + 1),
+            _ => hi,
+        };
+        let cut = heat
+            .and_then(|h| h.hot_split_key(shard))
+            .or_else(|| snap_split_key(lo + (data_hi - lo) / 2, lo, hi))
+            .ok_or_else(|| {
+                Error::BadRequest(format!("shard {shard} of '{token}' is too small to split"))
+            })?;
+        let target = self.split_target_node(token, &map);
+        self.execute_split(token, &eng, shard, cut, target)
+    }
+
+    /// The database node that should receive a split's hot half: the
+    /// one whose led shards carry the least decayed heat (idle nodes
+    /// score zero and win immediately).
+    fn split_target_node(&self, token: &str, map: &ShardMap) -> NodeId {
+        let db = self.nodes_with_role(NodeRole::Database);
+        let mut load: HashMap<NodeId, f64> = db.iter().map(|&n| (n, 0.0)).collect();
+        if let Some(heat) = self.heat(token) {
+            for sh in &heat.snapshot().shards {
+                if let Some(&node) = map.nodes().get(sh.shard) {
+                    if let Some(l) = load.get_mut(&node) {
+                        *l += sh.score;
+                    }
+                }
+            }
+        }
+        db.into_iter()
+            .min_by(|a, b| load[a].partial_cmp(&load[b]).unwrap_or(std::cmp::Ordering::Equal))
+            .unwrap_or(0)
+    }
+
+    /// A replica set for a freshly split-off shard: leader on `leader`,
+    /// followers round-robin over the remaining database nodes, exactly
+    /// as [`Cluster::create_image_project`] builds the initial sets.
+    fn new_shard_set(
+        &self,
+        token: &str,
+        shard: usize,
+        range: (u64, u64),
+        leader: NodeId,
+    ) -> Result<Arc<ReplicaSet>> {
+        let db = self.nodes_with_role(NodeRole::Database);
+        let replicas = self.cfg.replicas.min(db.len()).max(1);
+        let li = db.iter().position(|&n| n == leader).unwrap_or(0);
+        let members: Vec<(NodeId, Engine)> = (0..replicas)
+            .map(|j| {
+                let node = db[(li + j) % db.len()];
+                (node, Arc::clone(&self.nodes[node].engine))
+            })
+            .collect();
+        let rcfg = ReplicationConfig {
+            min_acks: self.cfg.min_acks,
+            staleness_bound: self.cfg.staleness_bound,
+            lease: self.cfg.lease,
+            ..ReplicationConfig::default()
+        };
+        let set = ReplicaSet::new(token, shard, range, members, rcfg)?;
+        if let Some(cache) = self.cache(token) {
+            set.set_on_promote(Some(Arc::new(move |_epoch| cache.clear())));
+        }
+        Ok(set)
+    }
+
+    /// Execute one split end to end: settle pending writes, open the
+    /// dual-route window, copy the hot half to its new owner, commit
+    /// the new map, and rebind every living object (heat tracker,
+    /// control plane, metrics) to the new generation.
+    fn execute_split(
+        &self,
+        token: &str,
+        eng: &Arc<ShardedEngine>,
+        shard: usize,
+        cut: u64,
+        target: NodeId,
+    ) -> Result<SplitReport> {
+        // Settle pending state first — the WAL'd-project analogue of
+        // flush-then-migrate; image shards just sync their engines.
+        if self.wal(token).is_some() {
+            self.flush_wal(token)?;
+        }
+        eng.sync()?;
+        let map = eng.map();
+        let new_map = Arc::new(map.split(shard, cut)?.assign(shard + 1, target)?);
+        let upper = new_map.shard_range(shard + 1);
+        let old_sets = eng.sets();
+        let from = Arc::clone(&old_sets[shard]);
+        let to = self.new_shard_set(token, shard + 1, upper, target)?;
+        let mut sets = old_sets;
+        sets.insert(shard + 1, Arc::clone(&to));
+        eng.begin_move(ShardMove {
+            range: upper,
+            from,
+            to,
+            scope: token.to_string(),
+            map: Arc::clone(&new_map),
+            sets,
+        })?;
+        let moved = match eng.copy_moving(self.balance.config().copy_chunk) {
+            Ok(n) => n,
+            Err(e) => {
+                let _ = eng.abort_move();
+                return Err(e);
+            }
+        };
+        let purged = eng.commit_move()?;
+        // Rebind the living objects to the new generation.
+        if let Some(heat) = self.heat(token) {
+            heat.set_shards(Arc::clone(&new_map));
+        }
+        self.control.unregister_sets(token);
+        self.control.register_sets(token, &eng.sets());
+        if self.cfg.replicas > 1 {
+            self.register_replication_metrics(token, &eng.sets());
+        }
+        let report = SplitReport {
+            token: token.to_string(),
+            shard,
+            cut,
+            target_node: target,
+            keys_moved: moved,
+            keys_purged: purged,
+            map_version: new_map.version(),
+        };
+        self.balance.metrics.splits.inc();
+        self.balance.record(report.clone());
+        Ok(report)
+    }
+}

@@ -46,15 +46,17 @@
 //! readers are fenced (DESIGN.md §10). The surface is
 //! `GET /cluster/status/` / `ocpd cluster`.
 
+pub mod balance;
 pub mod control;
 pub mod replica;
 mod sharded;
 
+pub use balance::{BalanceConfig, Balancer, SplitReport};
 pub use control::{ControlPlane, NodeHealth};
 pub use replica::{
     PromotionReport, ReplicaSet, ReplicaSetStatus, ReplicaStatus, ReplicationConfig,
 };
-pub use sharded::ShardedEngine;
+pub use sharded::{ShardInfo, ShardMove, ShardedEngine, TopologyStatus};
 
 use std::collections::HashMap;
 use std::sync::{Arc, RwLock};
@@ -136,6 +138,12 @@ pub struct Cluster {
     /// `/cluster/status/` surface). Present even for unreplicated
     /// clusters — it then just reports node health.
     control: Arc<ControlPlane>,
+    /// Sharded engines of image projects, by token — the handles the
+    /// shard splitter ([`balance`], DESIGN.md §13) drives moves through.
+    sharded: RwLock<HashMap<String, Arc<ShardedEngine>>>,
+    /// Split planner state: policy knobs, counters, auto-mode switch
+    /// (the `/shards/...` surface).
+    balance: Balancer,
     /// The topology knobs this cluster was built with.
     cfg: ClusterConfig,
 }
@@ -252,6 +260,8 @@ impl Cluster {
             jobs,
             registry,
             control,
+            sharded: RwLock::new(HashMap::new()),
+            balance: Balancer::new(),
             cfg,
         });
         Self::register_account_metrics(&cluster);
@@ -259,6 +269,7 @@ impl Cluster {
         // directly — it holds no cluster reference, so no Weak dance.
         let qos = Arc::clone(&cluster.qos);
         cluster.registry.register("qos", move |out| qos.collect(out));
+        Self::register_balance_metrics(&cluster);
         cluster
     }
 
@@ -500,7 +511,7 @@ impl Cluster {
         let heat = Arc::new(HeatTracker::new(total_keys, Arc::new(map.clone())));
         let cache = Arc::new(CuboidCache::new(self.cache_cfg));
         let replicas = self.cfg.replicas.min(db_nodes.len());
-        let engine: Engine = if replicas > 1 {
+        let sharded: Arc<ShardedEngine> = if replicas > 1 {
             // Replica sets: shard i's leader is its map node; followers
             // are the next `replicas - 1` database nodes, round-robin.
             let rcfg = ReplicationConfig {
@@ -533,12 +544,19 @@ impl Cluster {
             }
             self.control.register_sets(&project.token, &sets);
             self.register_replication_metrics(&project.token, &sets);
-            Arc::new(ShardedEngine::replicated(map, sets)?) as Engine
+            Arc::new(ShardedEngine::replicated(map, sets)?)
         } else {
             let engines: Vec<Engine> =
                 self.nodes.iter().map(|n| Arc::clone(&n.engine)).collect();
-            Arc::new(ShardedEngine::new(map, engines)) as Engine
+            Arc::new(ShardedEngine::new(map, engines))
         };
+        // A shard split strands cuboids cached under the old routing;
+        // clear on every map swap, like the promotion hook above.
+        let hook_cache = Arc::clone(&cache);
+        sharded.set_on_map_change(Some(Arc::new(move |_version| hook_cache.clear())));
+        self.register_shard_metrics(&project.token, &sharded);
+        self.sharded.write().unwrap().insert(project.token.clone(), Arc::clone(&sharded));
+        let engine: Engine = sharded;
         let store = Arc::new(
             CuboidStore::new(ds, Arc::new(project.clone()), engine)
                 .with_cache(Arc::clone(&cache)),
@@ -1041,6 +1059,81 @@ impl Cluster {
         });
     }
 
+    /// Register one image project's sharding collector: shard count,
+    /// map generation, move/fence/dual-write counters (`ocpd_shard_*`).
+    fn register_shard_metrics(&self, token: &str, eng: &Arc<ShardedEngine>) {
+        let project = token.to_string();
+        let eng = Arc::clone(eng);
+        self.registry.register(format!("shards/{token}"), move |out| {
+            let st = eng.topology_status();
+            let labeled = |s: Sample| s.label("project", project.clone());
+            out.push(labeled(Sample::gauge(
+                "ocpd_shard_count",
+                "Shards in the project's current map.",
+                st.shards.len() as u64,
+            )));
+            out.push(labeled(Sample::gauge(
+                "ocpd_shard_map_version",
+                "Generation of the project's shard map.",
+                st.version,
+            )));
+            out.push(labeled(Sample::gauge(
+                "ocpd_shard_move_in_flight",
+                "1 while a shard move's dual-route window is open.",
+                u64::from(st.moving.is_some()),
+            )));
+            out.push(labeled(Sample::counter(
+                "ocpd_shard_fence_retries_total",
+                "Operations fenced by a topology swap and re-routed.",
+                st.fence_retries,
+            )));
+            out.push(labeled(Sample::counter(
+                "ocpd_shard_map_swaps_total",
+                "Shard-map generations installed by splits/merges.",
+                st.map_swaps,
+            )));
+            out.push(labeled(Sample::counter(
+                "ocpd_shard_dual_writes_total",
+                "Write rounds mirrored to a move's new owner.",
+                st.dual_writes,
+            )));
+            out.push(labeled(Sample::counter(
+                "ocpd_shard_keys_moved_total",
+                "Keys rehomed by committed shard moves.",
+                st.keys_moved,
+            )));
+        });
+    }
+
+    /// Register the global split-planner collector (`ocpd_balance_*`).
+    fn register_balance_metrics(cluster: &Arc<Cluster>) {
+        let weak = Arc::downgrade(cluster);
+        cluster.registry.register("balance", move |out| {
+            let Some(c) = weak.upgrade() else { return };
+            let m = &c.balance.metrics;
+            out.push(Sample::gauge(
+                "ocpd_balance_auto",
+                "1 while heat-driven auto splitting is enabled.",
+                u64::from(c.auto_balance()),
+            ));
+            out.push(Sample::counter(
+                "ocpd_balance_ticks_total",
+                "Split-planner rounds run.",
+                m.ticks.get(),
+            ));
+            out.push(Sample::counter(
+                "ocpd_balance_splits_total",
+                "Shard splits executed to completion.",
+                m.splits.get(),
+            ));
+            out.push(Sample::counter(
+                "ocpd_balance_skipped_total",
+                "Split candidates passed over (unsplittable or failed).",
+                m.skipped.get(),
+            ));
+        });
+    }
+
     // ------------------------------------------------------------------
     // Cuboid caches
     // ------------------------------------------------------------------
@@ -1220,12 +1313,14 @@ impl Cluster {
         }
         self.caches.write().unwrap().remove(token);
         self.heats.write().unwrap().remove(token);
+        self.sharded.write().unwrap().remove(token);
         self.accountant.remove(token);
         self.qos.retire_tenant(token);
         self.control.unregister_sets(token);
         self.registry.unregister(&format!("project/{token}"));
         self.registry.unregister(&format!("replication/{token}"));
         self.registry.unregister(&format!("heat/{token}"));
+        self.registry.unregister(&format!("shards/{token}"));
         Ok(())
     }
 

@@ -205,11 +205,17 @@ impl MutRef<'_> {
 /// promotion can never interleave with a half-shipped write.
 pub struct ReplicaSet {
     scope: String,
-    shard: usize,
+    /// Shard index in the owning map — shifts when a split renumbers the
+    /// shards after it, hence atomic.
+    shard: AtomicUsize,
     /// Key range `[lo, hi)` this shard owns (`hi == u64::MAX` open-ended)
     /// — bounds full resyncs so shared node engines don't bleed other
-    /// shards' data across replicas.
-    range: (u64, u64),
+    /// shards' data across replicas. A split shrinks it; a merge extends
+    /// it (the map is a living object, DESIGN.md §13).
+    range: RwLock<(u64, u64)>,
+    /// A retired set (its range moved elsewhere and it left the
+    /// topology) fences every operation permanently.
+    retired: AtomicBool,
     members: Vec<Replica>,
     leader: AtomicUsize,
     epoch: AtomicU64,
@@ -249,8 +255,9 @@ impl ReplicaSet {
         let lease = cfg.lease;
         Ok(Arc::new(ReplicaSet {
             scope: scope.to_string(),
-            shard,
-            range,
+            shard: AtomicUsize::new(shard),
+            range: RwLock::new(range),
+            retired: AtomicBool::new(false),
             members,
             leader: AtomicUsize::new(0),
             epoch: AtomicU64::new(0),
@@ -273,12 +280,58 @@ impl ReplicaSet {
     }
 
     pub fn shard(&self) -> usize {
-        self.shard
+        self.shard.load(Ordering::Acquire)
+    }
+
+    /// Renumber the set after a split shifts shard indices.
+    pub fn set_shard(&self, shard: usize) {
+        self.shard.store(shard, Ordering::Release);
+    }
+
+    /// Project token this set replicates for ("" = everything).
+    pub fn scope(&self) -> &str {
+        &self.scope
+    }
+
+    /// The key range `[lo, hi)` this set currently owns.
+    pub fn range(&self) -> (u64, u64) {
+        *self.range.read().unwrap()
+    }
+
+    /// Rebound the owned range (split shrinks, merge extends). Bounds
+    /// future resyncs and purges; routing is the shard map's business.
+    pub fn set_range(&self, range: (u64, u64)) {
+        *self.range.write().unwrap() = range;
     }
 
     /// Current shard-map epoch; bumped by every promotion.
     pub fn epoch(&self) -> u64 {
         self.epoch.load(Ordering::Acquire)
+    }
+
+    /// Bump the epoch without changing leadership — fences every
+    /// operation still holding the old view (a topology swap uses this
+    /// to chase in-flight ops onto the new map). Runs the on-promote
+    /// hook so dependent caches fence too. Returns the new epoch.
+    pub fn bump_epoch(&self) -> u64 {
+        let _g = self.ship_lock.lock().unwrap();
+        let epoch = self.epoch.fetch_add(1, Ordering::AcqRel) + 1;
+        let hook = self.on_promote.read().unwrap().clone();
+        if let Some(h) = hook {
+            h(epoch);
+        }
+        epoch
+    }
+
+    /// Permanently fence the set: its range has moved to another owner
+    /// and it left the topology. Idempotent.
+    pub fn retire(&self) {
+        self.retired.store(true, Ordering::Release);
+        self.bump_epoch();
+    }
+
+    pub fn is_retired(&self) -> bool {
+        self.retired.load(Ordering::Acquire)
     }
 
     pub fn num_members(&self) -> usize {
@@ -299,8 +352,15 @@ impl ReplicaSet {
         self.leader.load(Ordering::Acquire)
     }
 
-    /// Refuse the operation if `held` is not the current epoch.
+    /// Refuse the operation if `held` is not the current epoch, or the
+    /// set is retired (then nothing is ever current again — `current`
+    /// reports the sentinel `u64::MAX` so callers re-route instead of
+    /// refreshing).
     fn fence(&self, held: u64) -> Result<()> {
+        if self.is_retired() {
+            self.metrics.fenced.inc();
+            return Err(Error::Fenced { held, current: u64::MAX });
+        }
         let current = self.epoch.load(Ordering::Acquire);
         if held != current {
             self.metrics.fenced.inc();
@@ -363,6 +423,12 @@ impl ReplicaSet {
         self.fence(held)?;
         if self.members.len() == 1 {
             // Solo fast path: no framing, no shipping — seed behavior.
+            // Still serialized with epoch bumps: a topology swap bumps
+            // the epoch under this lock, and a write that re-checked the
+            // fence after losing the race here could otherwise land
+            // unseen by a move's copier.
+            let _g = self.ship_lock.lock().unwrap();
+            self.fence(held)?;
             return muts.apply_to(&self.members[self.leader_idx()].engine, table);
         }
         let _g = self.ship_lock.lock().unwrap();
@@ -413,7 +479,7 @@ impl ReplicaSet {
                 }
             }
         }
-        sp.tag("shard", self.shard.to_string());
+        sp.tag("shard", self.shard().to_string());
         sp.tag("records", muts.len().to_string());
         sp.tag("acks", format!("{acks}/{live}"));
         drop(sp);
@@ -429,7 +495,7 @@ impl ReplicaSet {
         if acks < required {
             return Err(Error::Cluster(format!(
                 "shard {}: write under-replicated ({acks}/{required} follower acks)",
-                self.shard
+                self.shard()
             )));
         }
         Ok(())
@@ -544,6 +610,64 @@ impl ReplicaSet {
         self.reader().tables()
     }
 
+    /// Batched read pinned to the leader copy regardless of the
+    /// staleness bound — the move copier must see the authoritative
+    /// head, or a lagging follower's value could overwrite a fresher
+    /// dual-written one on the new owner.
+    pub fn get_batch_leader(&self, held: u64, table: &str, keys: &[u64]) -> Result<Vec<Option<Blob>>> {
+        self.fence(held)?;
+        self.members[self.leader_idx()].engine.get_batch(table, keys)
+    }
+
+    /// Key listing pinned to the leader copy (see
+    /// [`ReplicaSet::get_batch_leader`]).
+    pub fn keys_leader(&self, held: u64, table: &str) -> Result<Vec<u64>> {
+        self.fence(held)?;
+        self.members[self.leader_idx()].engine.keys(table)
+    }
+
+    /// Table listing pinned to the leader copy (see
+    /// [`ReplicaSet::get_batch_leader`]).
+    pub fn tables_leader(&self, held: u64) -> Result<Vec<String>> {
+        self.fence(held)?;
+        self.members[self.leader_idx()].engine.tables()
+    }
+
+    /// Engines of every member, in member order — the move machinery
+    /// checks these against the old owner's members so a purge never
+    /// deletes from an engine the new set also lives on.
+    pub fn engines(&self) -> Vec<Engine> {
+        self.members.iter().map(|m| Arc::clone(&m.engine)).collect()
+    }
+
+    /// Delete every key in `[lo, hi)` (`hi == u64::MAX` open-ended) of
+    /// the in-scope tables from every member engine not in `exclude` —
+    /// the retire step after the range moved to another owner. `scope`
+    /// bounds the table set the same way resync's scope does ("" =
+    /// every table). Bypasses fencing: a retired set must still purge.
+    pub fn purge_range(&self, scope: &str, lo: u64, hi: u64, exclude: &[Engine]) -> Result<u64> {
+        let in_range = |k: u64| k >= lo && (k < hi || hi == u64::MAX);
+        let prefix = format!("{scope}/");
+        let mut purged = 0u64;
+        for m in &self.members {
+            if exclude.iter().any(|e| Arc::ptr_eq(e, &m.engine)) {
+                continue;
+            }
+            for table in m.engine.tables()? {
+                if !scope.is_empty() && !table.starts_with(&prefix) {
+                    continue;
+                }
+                let dead: Vec<u64> =
+                    m.engine.keys(&table)?.into_iter().filter(|&k| in_range(k)).collect();
+                if !dead.is_empty() {
+                    purged += dead.len() as u64;
+                    m.engine.delete_batch(&table, &dead)?;
+                }
+            }
+        }
+        Ok(purged)
+    }
+
     pub fn sync(&self) -> Result<()> {
         let idx = self.leader_idx();
         self.members[idx].engine.sync()
@@ -581,7 +705,7 @@ impl ReplicaSet {
         let Some(new) = best else {
             return Err(Error::Cluster(format!(
                 "shard {}: no live follower to promote",
-                self.shard
+                self.shard()
             )));
         };
         let mut sp = trace::span("cluster", "promote");
@@ -596,7 +720,7 @@ impl ReplicaSet {
         self.next_lsn.store(new_lsn + 1, Ordering::Relaxed);
         self.metrics.failovers.inc();
         self.renew_lease();
-        sp.tag("shard", self.shard.to_string());
+        sp.tag("shard", self.shard().to_string());
         sp.tag("from_node", self.members[old].node.to_string());
         sp.tag("to_node", self.members[new].node.to_string());
         sp.tag("epoch", epoch.to_string());
@@ -605,7 +729,7 @@ impl ReplicaSet {
             h(epoch);
         }
         Ok(PromotionReport {
-            shard: self.shard,
+            shard: self.shard(),
             from: self.members[old].node,
             to: self.members[new].node,
             epoch,
@@ -656,7 +780,7 @@ impl ReplicaSet {
                 recovered += 1;
             }
         }
-        sp.tag("shard", self.shard.to_string());
+        sp.tag("shard", self.shard().to_string());
         sp.tag("recovered", recovered.to_string());
     }
 
@@ -680,9 +804,9 @@ impl ReplicaSet {
     /// the leader no longer holds.
     fn resync(&self, leader: &Engine, m: &Replica) -> Result<()> {
         let mut sp = trace::span("cluster", "resync");
-        sp.tag("shard", self.shard.to_string());
+        sp.tag("shard", self.shard().to_string());
         sp.tag("node", m.node.to_string());
-        let (lo, hi) = self.range;
+        let (lo, hi) = self.range();
         let in_range = |k: u64| k >= lo && (k < hi || hi == u64::MAX);
         let prefix = format!("{}/", self.scope);
         for table in leader.tables()? {
@@ -738,7 +862,7 @@ impl ReplicaSet {
             })
             .collect();
         ReplicaSetStatus {
-            shard: self.shard,
+            shard: self.shard(),
             epoch: self.epoch(),
             leader: self.members[leader_idx].node,
             next_lsn: self.next_lsn.load(Ordering::Relaxed),

@@ -8,33 +8,142 @@
 //! single cutout fans out across the node set the way the paper's
 //! requests fan out across disk arrays (§4.1).
 //!
-//! The engine holds a *view* of each shard's epoch. Routed operations
-//! carry it; when a failover bumps a shard's epoch the set answers
-//! [`Error::Fenced`], and the engine refreshes its view and retries the
-//! operation once against the new leader — callers above (`CuboidStore`,
-//! the write engine) never see the fence.
+//! The shard map is a *living object* (DESIGN.md §13). The engine holds
+//! an immutable [`Topology`] snapshot — map + replica sets + its view of
+//! each set's epoch — behind one swap pointer. Routed operations clone
+//! the snapshot, so an in-flight batched read can never observe a torn
+//! map; a split or live move builds the next generation and swaps it in
+//! whole. Fencing closes the gap: when a failover (or a topology swap)
+//! bumps a set's epoch, the set answers [`Error::Fenced`], and the
+//! engine re-reads the current topology and retries — callers above
+//! (`CuboidStore`, the write engine) never see the fence.
+//!
+//! A live move runs through a **dual-route window** ([`ShardMove`]):
+//! while the moving range is copied to its new owner, writes apply to
+//! both owners (old first — the old set stays authoritative) and reads
+//! prefer the new owner with fallback to the old, so the move never
+//! stalls readers. The copy is chunked under the window's lock, which
+//! serializes each copy chunk against dual writes — a chunk can never
+//! overwrite a newer dual-written value.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, RwLock};
 
 use crate::metrics::Counter;
-use crate::shard::ShardMap;
+use crate::shard::{NodeId, ShardMap};
 use crate::storage::{Blob, Engine, IoStats, StorageEngine};
 use crate::util::pool::scoped_map;
 use crate::{Error, Result};
 
 use super::replica::ReplicaSet;
 
+/// Everything a live move needs, built by the planner up front: the
+/// range changing owner, the sets on each side of the window, and the
+/// topology to install when the copy commits.
+pub struct ShardMove {
+    /// Keys being rehomed, `[lo, hi)` (`hi == u64::MAX` open-ended).
+    pub range: (u64, u64),
+    /// The set the range is leaving. Stays in the new topology when the
+    /// move is a split (it keeps the other half); retired when it is not.
+    pub from: Arc<ReplicaSet>,
+    /// The set receiving the copy and the window's dual writes.
+    pub to: Arc<ReplicaSet>,
+    /// Project scope: only tables named `{scope}/...` are copied and
+    /// purged. Empty copies everything (engines dedicated to one
+    /// project).
+    pub scope: String,
+    /// The map to install at commit (a newer version than the current).
+    pub map: Arc<ShardMap>,
+    /// One set per shard of `map`, in shard order.
+    pub sets: Vec<Arc<ReplicaSet>>,
+}
+
+/// An open dual-route window.
+struct MoveState {
+    mv: ShardMove,
+    /// Serializes copy chunks against dual writes: each chunk reads the
+    /// old owner and writes the new one under this lock, so it can never
+    /// overwrite a newer value a dual write put there.
+    lock: Mutex<()>,
+    /// Keys copied so far (the `/shards/status/` progress gauge).
+    copied: AtomicU64,
+}
+
+/// One immutable generation of the sharding: map, sets, and this
+/// engine's view of each set's epoch. Swapped whole; ops run against
+/// the snapshot they loaded.
+struct Topology {
+    map: Arc<ShardMap>,
+    sets: Vec<Arc<ReplicaSet>>,
+    epochs: Vec<AtomicU64>,
+    moving: Option<Arc<MoveState>>,
+}
+
+impl Topology {
+    fn snapshot(map: Arc<ShardMap>, sets: Vec<Arc<ReplicaSet>>, moving: Option<Arc<MoveState>>) -> Arc<Self> {
+        let epochs = sets.iter().map(|s| AtomicU64::new(s.epoch())).collect();
+        Arc::new(Topology { map, sets, epochs, moving })
+    }
+
+    fn refresh_epochs(&self) {
+        for (e, s) in self.epochs.iter().zip(&self.sets) {
+            e.store(s.epoch(), Ordering::Release);
+        }
+    }
+
+    /// Is `key` inside the open move window?
+    fn in_window(&self, key: u64) -> bool {
+        match &self.moving {
+            Some(ms) => {
+                let (lo, hi) = ms.mv.range;
+                key >= lo && (key < hi || hi == u64::MAX)
+            }
+            None => false,
+        }
+    }
+}
+
+/// One shard's row of `GET /shards/status/`.
+#[derive(Clone, Debug)]
+pub struct ShardInfo {
+    pub shard: usize,
+    pub lo: u64,
+    pub hi: u64,
+    pub node: NodeId,
+    pub epoch: u64,
+    pub replicas: usize,
+}
+
+/// Point-in-time view of the sharding topology.
+#[derive(Clone, Debug)]
+pub struct TopologyStatus {
+    /// Map generation ([`ShardMap::version`]).
+    pub version: u64,
+    pub shards: Vec<ShardInfo>,
+    /// The open move window, if any: `(lo, hi, keys_copied)`.
+    pub moving: Option<(u64, u64, u64)>,
+    pub fence_retries: u64,
+    pub map_swaps: u64,
+    pub dual_writes: u64,
+    pub keys_moved: u64,
+}
+
 /// Routes keys across per-shard replica sets by Morton partition.
 pub struct ShardedEngine {
-    map: ShardMap,
-    /// One set per shard, in shard order.
-    sets: Vec<Arc<ReplicaSet>>,
-    /// This engine's view of each shard's epoch (refreshed on fence).
-    epochs: Vec<AtomicU64>,
-    /// Operations that were fenced by a failover and transparently
-    /// re-routed to the new leader.
+    topo: RwLock<Arc<Topology>>,
+    /// Operations that were fenced (failover or topology swap) and
+    /// transparently re-routed.
     pub fence_retries: Counter,
+    /// Topology generations installed ([`ShardedEngine::commit_move`]).
+    pub map_swaps: Counter,
+    /// Write rounds mirrored to a move's new owner during the window.
+    pub dual_writes: Counter,
+    /// Keys shipped to new owners by committed moves.
+    pub keys_moved: Counter,
+    /// Run after every topology swap with the new map version — the
+    /// cluster fences the project's cuboid cache here, mirroring the
+    /// replica sets' on-promote hook.
+    on_map_change: RwLock<Option<Arc<dyn Fn(u64) + Send + Sync>>>,
     stats: IoStats,
 }
 
@@ -47,7 +156,11 @@ impl ShardedEngine {
             .nodes()
             .iter()
             .enumerate()
-            .map(|(shard, &node)| ReplicaSet::solo(shard, node, Arc::clone(&engines[node])))
+            .map(|(shard, &node)| {
+                let set = ReplicaSet::solo(shard, node, Arc::clone(&engines[node]));
+                set.set_range(map.shard_range(shard));
+                set
+            })
             .collect();
         Self::from_sets(map, sets).expect("solo sets match the map by construction")
     }
@@ -67,56 +180,312 @@ impl ShardedEngine {
     }
 
     fn from_sets(map: ShardMap, sets: Vec<Arc<ReplicaSet>>) -> Result<Self> {
-        let epochs = sets.iter().map(|s| AtomicU64::new(s.epoch())).collect();
         Ok(ShardedEngine {
-            map,
-            sets,
-            epochs,
+            topo: RwLock::new(Topology::snapshot(Arc::new(map), sets, None)),
             fence_retries: Counter::default(),
+            map_swaps: Counter::default(),
+            dual_writes: Counter::default(),
+            keys_moved: Counter::default(),
+            on_map_change: RwLock::new(None),
             stats: IoStats::default(),
         })
     }
 
-    pub fn map(&self) -> &ShardMap {
-        &self.map
+    fn topo(&self) -> Arc<Topology> {
+        Arc::clone(&self.topo.read().unwrap())
     }
 
-    /// The per-shard replica sets, in shard order.
-    pub fn sets(&self) -> &[Arc<ReplicaSet>] {
-        &self.sets
+    /// The current map generation (a consistent snapshot; the next swap
+    /// does not mutate it).
+    pub fn map(&self) -> Arc<ShardMap> {
+        Arc::clone(&self.topo().map)
     }
 
-    /// Run `f(set, epoch)` against one shard with this engine's epoch
-    /// view; on an epoch fence (a failover happened since the view was
-    /// taken) refresh the view and retry once against the new leader.
-    fn with_set<T>(&self, shard: usize, f: impl Fn(&ReplicaSet, u64) -> Result<T>) -> Result<T> {
-        let set = &self.sets[shard];
-        let held = self.epochs[shard].load(Ordering::Acquire);
-        match f(set, held) {
-            Err(Error::Fenced { current, .. }) => {
-                self.fence_retries.inc();
-                self.epochs[shard].store(current, Ordering::Release);
-                f(set, current)
+    /// The per-shard replica sets of the current generation, in shard
+    /// order.
+    pub fn sets(&self) -> Vec<Arc<ReplicaSet>> {
+        self.topo().sets.clone()
+    }
+
+    /// Run `hook(map_version)` after every topology swap.
+    pub fn set_on_map_change(&self, hook: Option<Arc<dyn Fn(u64) + Send + Sync>>) {
+        *self.on_map_change.write().unwrap() = hook;
+    }
+
+    /// Run `f` against a topology snapshot; on an epoch fence that the
+    /// per-shard retry could not absorb (a topology swap retired or
+    /// re-routed the shard), re-read the current topology and run the
+    /// whole operation again.
+    fn run_op<T>(&self, f: impl Fn(&Topology) -> Result<T>) -> Result<T> {
+        let mut tries = 0;
+        loop {
+            let topo = self.topo();
+            match f(&topo) {
+                Err(Error::Fenced { .. }) if tries < 3 => {
+                    tries += 1;
+                    self.fence_retries.inc();
+                    topo.refresh_epochs();
+                }
+                r => return r,
             }
-            r => r,
         }
+    }
+
+    /// Run `f(set, epoch)` against one shard of `topo`. Fences propagate
+    /// to [`ShardedEngine::run_op`] — a fence can mean a promotion *or*
+    /// a move window opening, and only re-reading the topology handles
+    /// both (an in-place retry would run an op that routed before the
+    /// window straight past the dual-write path).
+    fn call<T>(
+        &self,
+        topo: &Topology,
+        shard: usize,
+        f: impl Fn(&ReplicaSet, u64) -> Result<T>,
+    ) -> Result<T> {
+        let set = &topo.sets[shard];
+        let held = topo.epochs[shard].load(Ordering::Acquire);
+        f(set, held)
+    }
+
+    /// Mirror a write round into the move window's new owner, serialized
+    /// with the copier. The old owner was already written — it stays
+    /// authoritative until commit — so a hit on the new owner always
+    /// equals the old owner's current value.
+    fn dual_write(
+        &self,
+        topo: &Topology,
+        table: &str,
+        muts: &[(u64, Option<Vec<u8>>)],
+    ) -> Result<()> {
+        let Some(ms) = &topo.moving else { return Ok(()) };
+        let moving: Vec<(u64, Option<Vec<u8>>)> = muts
+            .iter()
+            .filter(|(k, _)| topo.in_window(*k))
+            .cloned()
+            .collect();
+        if moving.is_empty() {
+            return Ok(());
+        }
+        let _g = ms.lock.lock().unwrap();
+        self.dual_writes.inc();
+        ms.mv.to.apply(ms.mv.to.epoch(), table, &moving)
     }
 
     /// Group keys by owning shard, preserving arrival order within each
     /// group; items carry their original index for reassembly.
     fn by_shard<T: Copy>(
-        &self,
+        map: &ShardMap,
         keys: impl Iterator<Item = (T, u64)>,
     ) -> Vec<(usize, Vec<(T, u64)>)> {
         let mut per_shard: Vec<(usize, Vec<(T, u64)>)> = Vec::new();
         for (tag, k) in keys {
-            let shard = self.map.shard_for(k);
+            let shard = map.shard_for(k);
             match per_shard.iter_mut().find(|(s, _)| *s == shard) {
                 Some((_, v)) => v.push((tag, k)),
                 None => per_shard.push((shard, vec![(tag, k)])),
             }
         }
         per_shard
+    }
+
+    // ------------------------------------------------------------------
+    // Live moves (split / merge / rebalance)
+    // ------------------------------------------------------------------
+
+    /// Open the dual-route window for `mv`. From here until
+    /// [`ShardedEngine::commit_move`], writes into `mv.range` land on
+    /// both owners and reads prefer the new one. In-flight operations
+    /// that routed before the window are fenced by an epoch bump on the
+    /// old owner, so none of their writes can slip past the copier.
+    pub fn begin_move(&self, mv: ShardMove) -> Result<()> {
+        let (lo, hi) = mv.range;
+        if lo >= hi {
+            return Err(Error::Cluster(format!("move: empty range [{lo}, {hi})")));
+        }
+        {
+            let mut guard = self.topo.write().unwrap();
+            let cur = Arc::clone(&guard);
+            if cur.moving.is_some() {
+                return Err(Error::Cluster("a shard move is already in flight".into()));
+            }
+            let shard = cur.map.shard_for(lo);
+            let (slo, shi) = cur.map.shard_range(shard);
+            if lo < slo || hi > shi {
+                return Err(Error::Cluster(format!(
+                    "move: range [{lo}, {hi}) is not within one current shard ([{slo}, {shi}))"
+                )));
+            }
+            if !Arc::ptr_eq(&cur.sets[shard], &mv.from) {
+                return Err(Error::Cluster("move: `from` is not the range's current owner".into()));
+            }
+            if mv.map.version() <= cur.map.version() {
+                return Err(Error::Cluster(format!(
+                    "move: target map version {} is not newer than current {}",
+                    mv.map.version(),
+                    cur.map.version()
+                )));
+            }
+            if mv.sets.len() != mv.map.num_shards() {
+                return Err(Error::Cluster(format!(
+                    "move: target map has {} shards but {} sets were supplied",
+                    mv.map.num_shards(),
+                    mv.sets.len()
+                )));
+            }
+            let from = Arc::clone(&mv.from);
+            let ms = Arc::new(MoveState {
+                mv,
+                lock: Mutex::new(()),
+                copied: AtomicU64::new(0),
+            });
+            *guard = Topology::snapshot(Arc::clone(&cur.map), cur.sets.clone(), Some(ms));
+            drop(guard);
+            // Fence writers that routed before the window opened: their
+            // retry re-reads the topology and dual-routes.
+            from.bump_epoch();
+        }
+        Ok(())
+    }
+
+    /// The open move window's range, if any.
+    pub fn move_in_flight(&self) -> Option<(u64, u64)> {
+        self.topo().moving.as_ref().map(|ms| ms.mv.range)
+    }
+
+    /// Copy the moving range to its new owner in chunks of `chunk`
+    /// keys. Each chunk reads the old owner's *leader* and writes the
+    /// new set under the window lock, so dual writes interleave between
+    /// chunks (bounded reader/writer stall) but never lose to a chunk.
+    pub fn copy_moving(&self, chunk: usize) -> Result<u64> {
+        let topo = self.topo();
+        let Some(ms) = &topo.moving else {
+            return Err(Error::Cluster("no shard move in flight".into()));
+        };
+        let (lo, hi) = ms.mv.range;
+        let in_range = |k: u64| k >= lo && (k < hi || hi == u64::MAX);
+        let from = &ms.mv.from;
+        let to = &ms.mv.to;
+        let prefix = format!("{}/", ms.mv.scope);
+        let mut moved = 0u64;
+        let mut sp = crate::obs::trace::span("shard", "move_copy");
+        for table in from.tables_leader(from.epoch())? {
+            if !ms.mv.scope.is_empty() && !table.starts_with(&prefix) {
+                continue;
+            }
+            let keys: Vec<u64> = from
+                .keys_leader(from.epoch(), &table)?
+                .into_iter()
+                .filter(|&k| in_range(k))
+                .collect();
+            for ck in keys.chunks(chunk.max(1)) {
+                let _g = ms.lock.lock().unwrap();
+                let vals = from.get_batch_leader(from.epoch(), &table, ck)?;
+                let items: Vec<(u64, Vec<u8>)> = ck
+                    .iter()
+                    .zip(vals)
+                    .filter_map(|(&k, v)| v.map(|v| (k, (*v).clone())))
+                    .collect();
+                if !items.is_empty() {
+                    to.put_batch(to.epoch(), &table, &items)?;
+                    moved += items.len() as u64;
+                    ms.copied.fetch_add(items.len() as u64, Ordering::Relaxed);
+                }
+            }
+        }
+        sp.tag("range", format!("[{lo}, {hi})"));
+        sp.tag("keys", moved.to_string());
+        Ok(moved)
+    }
+
+    /// Close the window: install the move's topology, fence stragglers,
+    /// retire the old owner if it left the topology, and purge the moved
+    /// range from it. Returns the keys purged from the old owner.
+    pub fn commit_move(&self) -> Result<u64> {
+        let ms = {
+            let mut guard = self.topo.write().unwrap();
+            let cur = Arc::clone(&guard);
+            let Some(ms) = cur.moving.clone() else {
+                return Err(Error::Cluster("no shard move in flight".into()));
+            };
+            // Align every set's identity with the new map before it
+            // serves: shard indices shift by one past a split point.
+            for (i, set) in ms.mv.sets.iter().enumerate() {
+                set.set_shard(i);
+                set.set_range(ms.mv.map.shard_range(i));
+            }
+            *guard = Topology::snapshot(
+                Arc::clone(&ms.mv.map),
+                ms.mv.sets.clone(),
+                None,
+            );
+            ms
+        };
+        self.map_swaps.inc();
+        self.keys_moved.add(ms.copied.load(Ordering::Relaxed));
+        // Stragglers holding window-era views dual-wrote the new owner,
+        // so nothing is lost; the bump just hurries them onto the new
+        // topology. A set that left the topology is retired outright —
+        // it fences everything from now on.
+        ms.mv.from.bump_epoch();
+        let stays = ms.mv.sets.iter().any(|s| Arc::ptr_eq(s, &ms.mv.from));
+        if !stays {
+            ms.mv.from.retire();
+        }
+        // Drop the moved keys from the old owner — but never from an
+        // engine the new set also lives on (shared nodes keep the data
+        // as legitimate members of the new set).
+        let purged =
+            ms.mv.from.purge_range(&ms.mv.scope, ms.mv.range.0, ms.mv.range.1, &ms.mv.to.engines())?;
+        let hook = self.on_map_change.read().unwrap().clone();
+        if let Some(h) = hook {
+            h(ms.mv.map.version());
+        }
+        let mut sp = crate::obs::trace::span("shard", "move_commit");
+        sp.tag("version", ms.mv.map.version().to_string());
+        sp.tag("purged", purged.to_string());
+        Ok(purged)
+    }
+
+    /// Abandon an open window without installing its topology (the
+    /// planner's error path). Data already copied stays on the target —
+    /// it is value-identical — but routing never changes.
+    pub fn abort_move(&self) -> Result<()> {
+        let mut guard = self.topo.write().unwrap();
+        let cur = Arc::clone(&guard);
+        if cur.moving.is_none() {
+            return Err(Error::Cluster("no shard move in flight".into()));
+        }
+        *guard = Topology::snapshot(Arc::clone(&cur.map), cur.sets.clone(), None);
+        Ok(())
+    }
+
+    /// Point-in-time topology view (the `GET /shards/status/` surface).
+    pub fn topology_status(&self) -> TopologyStatus {
+        let topo = self.topo();
+        let shards = (0..topo.map.num_shards())
+            .map(|s| {
+                let (lo, hi) = topo.map.shard_range(s);
+                ShardInfo {
+                    shard: s,
+                    lo,
+                    hi,
+                    node: topo.sets[s].leader_node(),
+                    epoch: topo.sets[s].epoch(),
+                    replicas: topo.sets[s].num_members(),
+                }
+            })
+            .collect();
+        TopologyStatus {
+            version: topo.map.version(),
+            shards,
+            moving: topo.moving.as_ref().map(|ms| {
+                (ms.mv.range.0, ms.mv.range.1, ms.copied.load(Ordering::Relaxed))
+            }),
+            fence_retries: self.fence_retries.get(),
+            map_swaps: self.map_swaps.get(),
+            dual_writes: self.dual_writes.get(),
+            keys_moved: self.keys_moved.get(),
+        }
     }
 }
 
@@ -126,8 +495,20 @@ impl StorageEngine for ShardedEngine {
     }
 
     fn get(&self, table: &str, key: u64) -> Result<Option<Blob>> {
-        let shard = self.map.shard_for(key);
-        let v = self.with_set(shard, |set, e| set.get(e, table, key))?;
+        let v = self.run_op(|topo| {
+            // Dual-route window: prefer the new owner, fall back to the
+            // old — a hit on the new owner always equals the old one's
+            // current value.
+            if topo.in_window(key) {
+                if let Some(ms) = &topo.moving {
+                    if let Some(v) = ms.mv.to.get(ms.mv.to.epoch(), table, key)? {
+                        return Ok(Some(v));
+                    }
+                }
+            }
+            let shard = topo.map.shard_for(key);
+            self.call(topo, shard, |set, e| set.get(e, table, key))
+        })?;
         if let Some(v) = &v {
             self.stats.record_read(v.len());
         } else {
@@ -138,76 +519,113 @@ impl StorageEngine for ShardedEngine {
 
     fn put(&self, table: &str, key: u64, value: &[u8]) -> Result<()> {
         self.stats.record_write(value.len());
-        let shard = self.map.shard_for(key);
-        let item = [(key, value.to_vec())];
-        self.with_set(shard, |set, e| set.put_batch(e, table, &item))
+        self.run_op(|topo| {
+            let shard = topo.map.shard_for(key);
+            let item = [(key, value.to_vec())];
+            self.call(topo, shard, |set, e| set.put_batch(e, table, &item))?;
+            self.dual_write(topo, table, &[(key, Some(value.to_vec()))])
+        })
     }
 
     fn delete(&self, table: &str, key: u64) -> Result<()> {
-        let shard = self.map.shard_for(key);
-        self.with_set(shard, |set, e| set.delete_batch(e, table, &[key]))
+        self.run_op(|topo| {
+            let shard = topo.map.shard_for(key);
+            self.call(topo, shard, |set, e| set.delete_batch(e, table, &[key]))?;
+            self.dual_write(topo, table, &[(key, None)])
+        })
     }
 
     fn delete_batch(&self, table: &str, keys: &[u64]) -> Result<()> {
         // Group by shard, one batched delete per shard, issued
         // concurrently when several shards are involved (mirrors
         // `get_batch`).
-        let per_shard = self.by_shard(keys.iter().map(|&k| ((), k)));
-        let n = per_shard.len();
-        let results = scoped_map(n, n, |p| {
-            let (shard, items) = &per_shard[p];
-            let mut sp = crate::obs::trace::span("shard", "delete_batch");
-            sp.tag("shard", shard.to_string());
-            sp.tag("keys", items.len().to_string());
-            let ks: Vec<u64> = items.iter().map(|(_, k)| *k).collect();
-            self.with_set(*shard, |set, e| set.delete_batch(e, table, &ks))
-        });
-        for r in results {
-            r?;
-        }
-        Ok(())
+        self.run_op(|topo| {
+            let per_shard = Self::by_shard(&topo.map, keys.iter().map(|&k| ((), k)));
+            let n = per_shard.len();
+            let results = scoped_map(n, n, |p| {
+                let (shard, items) = &per_shard[p];
+                let mut sp = crate::obs::trace::span("shard", "delete_batch");
+                sp.tag("shard", shard.to_string());
+                sp.tag("keys", items.len().to_string());
+                let ks: Vec<u64> = items.iter().map(|(_, k)| *k).collect();
+                self.call(topo, *shard, |set, e| set.delete_batch(e, table, &ks))
+            });
+            for r in results {
+                r?;
+            }
+            let muts: Vec<(u64, Option<Vec<u8>>)> =
+                keys.iter().map(|&k| (k, None)).collect();
+            self.dual_write(topo, table, &muts)
+        })
     }
 
     fn get_batch(&self, table: &str, keys: &[u64]) -> Result<Vec<Option<Blob>>> {
         // Group by shard, one batched request per shard — issued
         // concurrently when several shards are involved — then
         // reassemble in request order.
-        let mut out = vec![None; keys.len()];
-        let per_shard = self.by_shard(keys.iter().copied().enumerate());
-        let n = per_shard.len();
-        let fetched = scoped_map(n, n, |p| {
-            let (shard, items) = &per_shard[p];
-            let mut sp = crate::obs::trace::span("shard", "get_batch");
-            sp.tag("shard", shard.to_string());
-            sp.tag("keys", items.len().to_string());
-            let ks: Vec<u64> = items.iter().map(|(_, k)| *k).collect();
-            self.with_set(*shard, |set, e| set.get_batch(e, table, &ks))
-        });
-        for ((_, items), vs) in per_shard.iter().zip(fetched) {
-            for ((i, _), v) in items.iter().zip(vs?) {
-                out[*i] = v;
+        self.run_op(|topo| {
+            let mut out = vec![None; keys.len()];
+            let per_shard = Self::by_shard(&topo.map, keys.iter().copied().enumerate());
+            let n = per_shard.len();
+            let fetched = scoped_map(n, n, |p| {
+                let (shard, items) = &per_shard[p];
+                let mut sp = crate::obs::trace::span("shard", "get_batch");
+                sp.tag("shard", shard.to_string());
+                sp.tag("keys", items.len().to_string());
+                let ks: Vec<u64> = items.iter().map(|(_, k)| *k).collect();
+                self.call(topo, *shard, |set, e| set.get_batch(e, table, &ks))
+            });
+            for ((_, items), vs) in per_shard.iter().zip(fetched) {
+                for ((i, _), v) in items.iter().zip(vs?) {
+                    out[*i] = v;
+                }
             }
-        }
-        Ok(out)
+            // Dual-route window: overlay the new owner's values for
+            // moving keys (prefer new, fall back to the old result).
+            if let Some(ms) = &topo.moving {
+                let moving: Vec<(usize, u64)> = keys
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &k)| topo.in_window(k))
+                    .map(|(i, &k)| (i, k))
+                    .collect();
+                if !moving.is_empty() {
+                    let ks: Vec<u64> = moving.iter().map(|(_, k)| *k).collect();
+                    let vs = ms.mv.to.get_batch(ms.mv.to.epoch(), table, &ks)?;
+                    for ((i, _), v) in moving.iter().zip(vs) {
+                        if v.is_some() {
+                            out[*i] = v;
+                        }
+                    }
+                }
+            }
+            Ok(out)
+        })
     }
 
     fn put_batch(&self, table: &str, items: &[(u64, Vec<u8>)]) -> Result<()> {
-        let mut per_shard: Vec<(usize, Vec<(u64, Vec<u8>)>)> = Vec::new();
-        for (k, v) in items {
+        for (_, v) in items {
             self.stats.record_write(v.len());
-            let shard = self.map.shard_for(*k);
-            match per_shard.iter_mut().find(|(s, _)| *s == shard) {
-                Some((_, batch)) => batch.push((*k, v.clone())),
-                None => per_shard.push((shard, vec![(*k, v.clone())])),
+        }
+        self.run_op(|topo| {
+            let mut per_shard: Vec<(usize, Vec<(u64, Vec<u8>)>)> = Vec::new();
+            for (k, v) in items {
+                let shard = topo.map.shard_for(*k);
+                match per_shard.iter_mut().find(|(s, _)| *s == shard) {
+                    Some((_, batch)) => batch.push((*k, v.clone())),
+                    None => per_shard.push((shard, vec![(*k, v.clone())])),
+                }
             }
-        }
-        for (shard, batch) in per_shard {
-            let mut sp = crate::obs::trace::span("shard", "put_batch");
-            sp.tag("shard", shard.to_string());
-            sp.tag("keys", batch.len().to_string());
-            self.with_set(shard, |set, e| set.put_batch(e, table, &batch))?;
-        }
-        Ok(())
+            for (shard, batch) in per_shard {
+                let mut sp = crate::obs::trace::span("shard", "put_batch");
+                sp.tag("shard", shard.to_string());
+                sp.tag("keys", batch.len().to_string());
+                self.call(topo, shard, |set, e| set.put_batch(e, table, &batch))?;
+            }
+            let muts: Vec<(u64, Option<Vec<u8>>)> =
+                items.iter().map(|(k, v)| (*k, Some(v.clone()))).collect();
+            self.dual_write(topo, table, &muts)
+        })
     }
 
     fn get_run(&self, table: &str, start: u64, len: u64) -> Result<Vec<(u64, Blob)>> {
@@ -215,43 +633,68 @@ impl StorageEngine for ShardedEngine {
         // A run that straddles shard boundaries reads each shard's
         // fragment concurrently; per-shard sub-runs are disjoint and
         // ascending, so concatenation preserves key order.
-        let parts = self.map.route_run(start, len);
-        let n = parts.len();
-        let fetched = scoped_map(n, n, |p| {
-            let (_, lo, l) = parts[p];
-            let shard = self.map.shard_for(lo);
-            let mut sp = crate::obs::trace::span("shard", "get_run");
-            sp.tag("shard", shard.to_string());
-            sp.tag("len", l.to_string());
-            self.with_set(shard, |set, e| set.get_run(e, table, lo, l))
-        });
-        let mut out = Vec::new();
-        for part in fetched {
-            out.extend(part?);
-        }
-        Ok(out)
+        self.run_op(|topo| {
+            let parts = topo.map.route_run(start, len);
+            let n = parts.len();
+            let fetched = scoped_map(n, n, |p| {
+                let (_, lo, l) = parts[p];
+                let shard = topo.map.shard_for(lo);
+                let mut sp = crate::obs::trace::span("shard", "get_run");
+                sp.tag("shard", shard.to_string());
+                sp.tag("len", l.to_string());
+                self.call(topo, shard, |set, e| set.get_run(e, table, lo, l))
+            });
+            let mut out = Vec::new();
+            for part in fetched {
+                out.extend(part?);
+            }
+            // Dual-route window: overlay the new owner's fragment of the
+            // run, preferring its values where both owners hold a key.
+            if let Some(ms) = &topo.moving {
+                let (mlo, mhi) = ms.mv.range;
+                let end = start.saturating_add(len);
+                let olo = start.max(mlo);
+                let ohi = end.min(mhi);
+                if olo < ohi {
+                    let fresh = ms.mv.to.get_run(ms.mv.to.epoch(), table, olo, ohi - olo)?;
+                    if !fresh.is_empty() {
+                        let mut merged: std::collections::BTreeMap<u64, Blob> =
+                            out.into_iter().collect();
+                        merged.extend(fresh);
+                        out = merged.into_iter().collect();
+                    } else {
+                        return Ok(out);
+                    }
+                }
+            }
+            Ok(out)
+        })
     }
 
     fn keys(&self, table: &str) -> Result<Vec<u64>> {
         // Shards own disjoint ascending key ranges, so per-shard keys
         // (filtered to the shard's own range — replica sets of different
         // shards may share node engines) concatenate already sorted.
-        let mut all = Vec::new();
-        for (shard, _) in self.sets.iter().enumerate() {
-            let ks = self.with_set(shard, |set, e| set.keys(e, table))?;
-            all.extend(ks.into_iter().filter(|&k| self.map.shard_for(k) == shard));
-        }
-        Ok(all)
+        self.run_op(|topo| {
+            let mut all = Vec::new();
+            for shard in 0..topo.sets.len() {
+                let ks = self.call(topo, shard, |set, e| set.keys(e, table))?;
+                all.extend(ks.into_iter().filter(|&k| topo.map.shard_for(k) == shard));
+            }
+            Ok(all)
+        })
     }
 
     fn tables(&self) -> Result<Vec<String>> {
-        let mut names = Vec::new();
-        for (shard, _) in self.sets.iter().enumerate() {
-            names.extend(self.with_set(shard, |set, e| set.tables(e))?);
-        }
-        names.sort();
-        names.dedup();
-        Ok(names)
+        self.run_op(|topo| {
+            let mut names = Vec::new();
+            for shard in 0..topo.sets.len() {
+                names.extend(self.call(topo, shard, |set, e| set.tables(e))?);
+            }
+            names.sort();
+            names.dedup();
+            Ok(names)
+        })
     }
 
     fn stats(&self) -> &IoStats {
@@ -259,14 +702,14 @@ impl StorageEngine for ShardedEngine {
     }
 
     fn sync(&self) -> Result<()> {
-        for set in &self.sets {
+        for set in &self.topo().sets {
             set.sync()?;
         }
         Ok(())
     }
 
-    fn shard_map(&self) -> Option<&ShardMap> {
-        Some(&self.map)
+    fn shard_map(&self) -> Option<Arc<ShardMap>> {
+        Some(self.map())
     }
 }
 
@@ -309,6 +752,33 @@ mod tests {
             })
             .collect();
         (ShardedEngine::replicated(map, sets).unwrap(), engines)
+    }
+
+    /// A split-and-move of shard `shard` cut at `at`, upper half to a
+    /// brand-new engine; returns the target engine.
+    fn split_move(s: &ShardedEngine, shard: usize, at: u64) -> Arc<MemStore> {
+        let target = Arc::new(MemStore::new());
+        let map = s.map();
+        let new_map = map.split(shard, at).unwrap();
+        let new_node = new_map.nodes().iter().copied().max().unwrap_or(0) + 1;
+        let new_map = new_map.assign(shard + 1, new_node).unwrap();
+        let from = Arc::clone(&s.sets()[shard]);
+        let to = ReplicaSet::solo(shard + 1, new_node, Arc::clone(&target) as Engine);
+        to.set_range(new_map.shard_range(shard + 1));
+        let mut sets = s.sets();
+        sets.insert(shard + 1, Arc::clone(&to));
+        s.begin_move(ShardMove {
+            range: new_map.shard_range(shard + 1),
+            from,
+            to,
+            scope: String::new(),
+            map: Arc::new(new_map),
+            sets,
+        })
+        .unwrap();
+        s.copy_moving(64).unwrap();
+        s.commit_move().unwrap();
+        target
     }
 
     #[test]
@@ -391,5 +861,152 @@ mod tests {
         // Shard 1 was untouched: no fence on its path.
         s.put("t/a", 60, b"s1").unwrap();
         assert_eq!(**s.get("t/a", 60).unwrap().unwrap(), *b"s1");
+    }
+
+    #[test]
+    fn split_move_rehomes_the_upper_half() {
+        let (s, mems) = sharded(2, 128); // shards [0,64), [64,128)
+        for k in 0..128u64 {
+            s.put("t", k, &k.to_le_bytes()).unwrap();
+        }
+        let target = split_move(&s, 1, 96);
+        // New topology: 3 shards, the hot tail on the new node.
+        let map = s.map();
+        assert_eq!(map.num_shards(), 3);
+        assert_eq!(map.version(), 2);
+        assert_eq!(map.shard_range(2), (96, u64::MAX));
+        // Every key still reads back through the engine.
+        for k in 0..128u64 {
+            assert_eq!(**s.get("t", k).unwrap().unwrap(), k.to_le_bytes(), "key {k}");
+        }
+        // The moved half lives on the target, and only there.
+        assert_eq!(target.keys("t").unwrap(), (96..128).collect::<Vec<u64>>());
+        assert_eq!(mems[1].keys("t").unwrap(), (64..96).collect::<Vec<u64>>());
+        assert_eq!(s.keys("t").unwrap(), (0..128).collect::<Vec<u64>>());
+        // Writes route to the new owner now.
+        s.put("t", 100, b"fresh").unwrap();
+        assert_eq!(**target.get("t", 100).unwrap().unwrap(), *b"fresh");
+        assert_eq!(mems[1].get("t", 100).unwrap(), None);
+    }
+
+    #[test]
+    fn dual_route_window_serves_both_sides() {
+        let (s, mems) = sharded(1, 128);
+        for k in 0..128u64 {
+            s.put("t", k, b"old").unwrap();
+        }
+        // Open the window but do NOT copy yet: reads of the moving half
+        // must fall back to the old owner.
+        let target = Arc::new(MemStore::new());
+        let map = s.map();
+        let new_map = map.split(0, 64).unwrap().assign(1, 1).unwrap();
+        let from = Arc::clone(&s.sets()[0]);
+        let to = ReplicaSet::solo(1, 1, Arc::clone(&target) as Engine);
+        to.set_range(new_map.shard_range(1));
+        let sets = vec![Arc::clone(&from), Arc::clone(&to)];
+        s.begin_move(ShardMove {
+            range: (64, u64::MAX),
+            from,
+            to,
+            scope: String::new(),
+            map: Arc::new(new_map),
+            sets,
+        })
+        .unwrap();
+        assert_eq!(s.move_in_flight(), Some((64, u64::MAX)));
+        assert_eq!(**s.get("t", 100).unwrap().unwrap(), *b"old");
+        // A write during the window lands on BOTH owners.
+        s.put("t", 100, b"both").unwrap();
+        assert_eq!(**mems[0].get("t", 100).unwrap().unwrap(), *b"both");
+        assert_eq!(**target.get("t", 100).unwrap().unwrap(), *b"both");
+        // Reads prefer the new owner (which only has the dual write).
+        assert_eq!(**s.get("t", 100).unwrap().unwrap(), *b"both");
+        assert_eq!(**s.get("t", 80).unwrap().unwrap(), *b"old", "fallback to old owner");
+        // Deletes dual-route too.
+        s.delete("t", 101).unwrap();
+        assert_eq!(s.get("t", 101).unwrap(), None);
+        // Run reads across the boundary merge both owners.
+        let run = s.get_run("t", 60, 50).unwrap();
+        assert_eq!(run.len(), 49, "key 101 deleted");
+        // Copy + commit: everything converges on the new owner.
+        s.copy_moving(16).unwrap();
+        s.commit_move().unwrap();
+        assert_eq!(**s.get("t", 100).unwrap().unwrap(), *b"both");
+        assert_eq!(s.get("t", 101).unwrap(), None);
+        assert_eq!(mems[0].keys("t").unwrap().last().copied(), Some(63));
+        assert!(s.dual_writes.get() >= 2);
+        assert_eq!(s.map_swaps.get(), 1);
+    }
+
+    #[test]
+    fn begin_move_rejects_bad_plans() {
+        let (s, _) = sharded(2, 128);
+        let map = s.map();
+        let from = Arc::clone(&s.sets()[0]);
+        let to = ReplicaSet::solo(2, 2, Arc::new(MemStore::new()) as Engine);
+        let plan = |range, map: Arc<ShardMap>, sets| ShardMove {
+            range,
+            from: Arc::clone(&from),
+            to: Arc::clone(&to),
+            scope: String::new(),
+            map,
+            sets,
+        };
+        // Empty range.
+        let m2 = Arc::new(map.split(0, 32).unwrap());
+        let sets3 = {
+            let mut v = s.sets();
+            v.insert(1, Arc::clone(&to));
+            v
+        };
+        assert!(s.begin_move(plan((32, 32), Arc::clone(&m2), sets3.clone())).is_err());
+        // Range straddling a shard boundary.
+        assert!(s.begin_move(plan((32, 100), Arc::clone(&m2), sets3.clone())).is_err());
+        // Stale map version.
+        assert!(s.begin_move(plan((32, 64), Arc::new((*map).clone()), sets3.clone())).is_err());
+        // Set count mismatch.
+        assert!(s.begin_move(plan((32, 64), Arc::clone(&m2), s.sets())).is_err());
+        // A valid plan is accepted exactly once while in flight.
+        assert!(s.begin_move(plan((32, 64), Arc::clone(&m2), sets3.clone())).is_ok());
+        assert!(s.begin_move(plan((32, 64), m2, sets3)).is_err(), "window already open");
+        s.abort_move().unwrap();
+        assert_eq!(s.move_in_flight(), None);
+    }
+
+    #[test]
+    fn merge_move_returns_a_shard_home() {
+        let (s, mems) = sharded(2, 128); // shards [0,64) on 0, [64,128) on 1
+        for k in 0..128u64 {
+            s.put("t", k, &k.to_le_bytes()).unwrap();
+        }
+        // Move shard 1's range back onto node 0's set, then merge.
+        let map = s.map();
+        let from = Arc::clone(&s.sets()[1]);
+        let to = Arc::clone(&s.sets()[0]);
+        to.set_range((0, u64::MAX));
+        let merged = Arc::new(map.merge(0, 1).unwrap());
+        s.begin_move(ShardMove {
+            range: (64, u64::MAX),
+            from: Arc::clone(&from),
+            to: Arc::clone(&to),
+            scope: String::new(),
+            map: Arc::clone(&merged),
+            sets: vec![to],
+        })
+        .unwrap();
+        s.copy_moving(32).unwrap();
+        s.commit_move().unwrap();
+        assert_eq!(s.map().num_shards(), 1);
+        assert!(from.is_retired());
+        // All 128 keys on node 0; node 1 purged.
+        assert_eq!(mems[0].keys("t").unwrap().len(), 128);
+        assert!(mems[1].keys("t").unwrap().is_empty());
+        for k in (0..128u64).step_by(17) {
+            assert_eq!(**s.get("t", k).unwrap().unwrap(), k.to_le_bytes());
+        }
+        // A straggler write that would have routed to the retired set
+        // re-routes transparently.
+        s.put("t", 100, b"rerouted").unwrap();
+        assert_eq!(**mems[0].get("t", 100).unwrap().unwrap(), *b"rerouted");
     }
 }

@@ -566,7 +566,7 @@ impl CutoutService {
         let mut bounds: Vec<(usize, usize)> = Vec::new();
         let mut idx = 0usize;
         for run in morton::coalesce_runs(codes) {
-            match map {
+            match map.as_deref() {
                 Some(m) => {
                     for (_node, lo, len) in m.route_run(run.start, run.len) {
                         let off = (lo - run.start) as usize;

@@ -45,6 +45,12 @@
 //!     epochs/leaders/lag, failover counters); with --failover, force a
 //!     leader promotion on one project shard first.
 //!
+//! ocpd shards  [--url http://host:port] [--split TOKEN/SHARD] [--auto on|off]
+//!     Print every sharded project's topology (shard ranges, owners,
+//!     move windows) and the split planner's counters; with --split,
+//!     split one shard at its heat median first; with --auto, toggle
+//!     heat-driven auto splitting.
+//!
 //! ocpd metrics [--url http://host:port]
 //!     Print the unified Prometheus-text exposition (`GET /metrics/`).
 //!
@@ -288,6 +294,23 @@ fn cmd_cluster(flags: HashMap<String, String>) -> ocpd::Result<()> {
     Ok(())
 }
 
+fn cmd_shards(flags: HashMap<String, String>) -> ocpd::Result<()> {
+    let url: String = flag(&flags, "url", "http://127.0.0.1:8642".to_string());
+    if let Some(spec) = flags.get("split") {
+        let parsed =
+            spec.split_once('/').and_then(|(t, s)| s.parse::<usize>().ok().map(|n| (t, n)));
+        let (token, shard) = parsed.ok_or_else(|| {
+            ocpd::Error::BadRequest(format!("bad split spec '{spec}' (want TOKEN/SHARD)"))
+        })?;
+        println!("{}", ocpd::client::shards_split(&url, token, shard)?);
+    }
+    if let Some(mode) = flags.get("auto") {
+        println!("{}", ocpd::client::shards_auto(&url, mode)?);
+    }
+    print!("{}", ocpd::client::shards_status(&url)?);
+    Ok(())
+}
+
 fn cmd_metrics(flags: HashMap<String, String>) -> ocpd::Result<()> {
     let url: String = flag(&flags, "url", "http://127.0.0.1:8642".to_string());
     print!("{}", ocpd::client::metrics(&url)?);
@@ -430,8 +453,8 @@ fn main() {
         Some((c, r)) => (c.as_str(), r.to_vec()),
         None => {
             eprintln!(
-                "usage: ocpd <serve|detect|info|wal|cache|write|jobs|http|cluster|metrics|trace\
-                 |heat|qos|loadgen> [flags]"
+                "usage: ocpd <serve|detect|info|wal|cache|write|jobs|http|cluster|shards\
+                 |metrics|trace|heat|qos|loadgen> [flags]"
             );
             std::process::exit(2);
         }
@@ -447,6 +470,7 @@ fn main() {
         "write" => cmd_write(flags),
         "jobs" => cmd_jobs(flags),
         "cluster" => cmd_cluster(flags),
+        "shards" => cmd_shards(flags),
         "metrics" => cmd_metrics(flags),
         "trace" => cmd_trace(flags),
         "heat" => cmd_heat(flags),
@@ -455,8 +479,8 @@ fn main() {
         other => {
             eprintln!(
                 "unknown command '{other}' \
-                 (want serve|detect|info|wal|cache|write|jobs|http|cluster|metrics|trace\
-                 |heat|qos|loadgen)"
+                 (want serve|detect|info|wal|cache|write|jobs|http|cluster|shards|metrics\
+                 |trace|heat|qos|loadgen)"
             );
             std::process::exit(2);
         }

@@ -26,7 +26,7 @@
 //! tests drive decay deterministically via [`HeatTracker::fold_after`].
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use crate::shard::ShardMap;
@@ -35,6 +35,35 @@ use crate::shard::ShardMap;
 /// Metadata-sized ops (WAL applies, RAMON lookups) move the needle
 /// without having to lie about their byte volume.
 const OP_WEIGHT: u64 = 1024;
+
+/// A 2x2x2 Morton sibling group: `encode3` visits the whole octant in 8
+/// consecutive keys, so a cuboid run never crosses a multiple-of-8 key
+/// except at an octant boundary. Split cuts snap here so no split can
+/// ever put two halves of one cuboid's run on different shards.
+pub const MORTON_BLOCK: u64 = 8;
+
+/// Snap `cut` to the nearest Morton-block boundary strictly inside
+/// `(lo, hi)` — the public entry for cold (manual) splits, which cut at
+/// the range midpoint instead of a heat median but must respect cuboid
+/// runs all the same. `None` when the range holds no interior boundary.
+pub fn snap_split_key(cut: u64, lo: u64, hi: u64) -> Option<u64> {
+    snap_cut(cut, lo, hi)
+}
+
+/// Snap `cut` to the nearest Morton-block boundary strictly inside
+/// `(lo, hi)`. `None` when the range holds no interior block boundary
+/// (the shard is too small to split without cutting a cuboid run).
+fn snap_cut(cut: u64, lo: u64, hi: u64) -> Option<u64> {
+    let down = cut - cut % MORTON_BLOCK;
+    let up = down.saturating_add(MORTON_BLOCK);
+    let ok = |k: u64| k > lo && k < hi;
+    match (ok(down), ok(up)) {
+        (true, true) => Some(if cut - down <= up - cut { down } else { up }),
+        (true, false) => Some(down),
+        (false, true) => Some(up),
+        (false, false) => None,
+    }
+}
 
 /// Default bucket count over the key-space (clamped to `total_keys`).
 pub const DEFAULT_BUCKETS: usize = 64;
@@ -133,8 +162,10 @@ pub struct HeatTracker {
     state: Mutex<FoldState>,
     half_life: Duration,
     /// Shard key ranges `[lo, hi)`, ascending; one entry covering
-    /// everything for unsharded (annotation) projects.
-    shards: Arc<ShardMap>,
+    /// everything for unsharded (annotation) projects. Swappable: a
+    /// split/merge/move rebinds the tracker to the new generation via
+    /// [`HeatTracker::set_shards`] without losing bucket state.
+    shards: RwLock<Arc<ShardMap>>,
 }
 
 impl HeatTracker {
@@ -165,13 +196,25 @@ impl HeatTracker {
                 last_fold: Instant::now(),
             }),
             half_life,
-            shards,
+            shards: RwLock::new(shards),
         }
     }
 
     /// Total key-space size this tracker covers.
     pub fn total_keys(&self) -> u64 {
         self.total_keys
+    }
+
+    /// Rebind the tracker to a new shard map generation (after a split,
+    /// merge, or move). Bucket heat is untouched — only the per-shard
+    /// aggregation view changes.
+    pub fn set_shards(&self, shards: Arc<ShardMap>) {
+        *self.shards.write().unwrap() = shards;
+    }
+
+    /// The shard map generation the tracker currently aggregates by.
+    pub fn shards(&self) -> Arc<ShardMap> {
+        Arc::clone(&self.shards.read().unwrap())
     }
 
     fn bucket_of(&self, key: u64) -> usize {
@@ -243,9 +286,10 @@ impl HeatTracker {
                 score: e.score(),
             });
         }
-        let mut shards: Vec<ShardHeat> = (0..self.shards.num_shards())
+        let shard_map = self.shards();
+        let mut shards: Vec<ShardHeat> = (0..shard_map.num_shards())
             .map(|s| {
-                let (lo, hi) = self.shards.shard_range(s);
+                let (lo, hi) = shard_map.shard_range(s);
                 ShardHeat {
                     shard: s,
                     lo,
@@ -261,7 +305,7 @@ impl HeatTracker {
         for b in &buckets {
             // Buckets never straddle shards when the bucket grid is
             // finer; attribute by the bucket's low key either way.
-            let s = self.shards.shard_for(b.lo.min(self.total_keys - 1));
+            let s = shard_map.shard_for(b.lo.min(self.total_keys - 1));
             if let Some(sh) = shards.get_mut(s) {
                 sh.read_ops += b.read_ops;
                 sh.read_bytes += b.read_bytes;
@@ -278,11 +322,14 @@ impl HeatTracker {
     }
 
     /// The key within shard `shard` where cumulative heat reaches half
-    /// of the shard's total — the split point a dynamic shard splitter
-    /// would cut at. `None` when the shard is cold (no heat to split).
+    /// of the shard's total — the split point the dynamic shard splitter
+    /// cuts at, snapped to a Morton-block ([`MORTON_BLOCK`]) boundary so
+    /// the two halves of one cuboid's run can never land on different
+    /// shards. `None` when the shard is cold (no heat to split) or too
+    /// small to hold an interior block boundary.
     pub fn hot_split_key(&self, shard: usize) -> Option<u64> {
         let snap = self.snapshot();
-        let (lo, hi) = self.shards.shard_range(shard);
+        let (lo, hi) = self.shards().shard_range(shard);
         let in_shard: Vec<&BucketHeat> =
             snap.buckets.iter().filter(|b| b.lo >= lo && b.lo < hi).collect();
         let total: f64 = in_shard.iter().map(|b| b.score).sum();
@@ -295,10 +342,11 @@ impl HeatTracker {
             if acc >= total / 2.0 {
                 // Cut *after* the bucket that crosses the midpoint, but
                 // never at the shard boundary itself.
-                return Some(b.hi.min(hi.saturating_sub(1)).max(lo + 1));
+                let raw = b.hi.min(hi.saturating_sub(1)).max(lo + 1);
+                return snap_cut(raw, lo, hi);
             }
         }
-        Some(hi.saturating_sub(1).max(lo + 1))
+        snap_cut(hi.saturating_sub(1).max(lo + 1), lo, hi)
     }
 }
 
@@ -380,6 +428,47 @@ mod tests {
         // Cold shard has nothing to split.
         let cold = tracker(1024, 1, 8);
         assert_eq!(cold.hot_split_key(0), None);
+    }
+
+    #[test]
+    fn hot_split_key_snaps_to_a_morton_block_boundary() {
+        // 10 buckets over 1024 keys: bucket_width = 103, so every raw
+        // bucket edge (103, 206, …) lands mid-octant. The cut must snap
+        // to a multiple of MORTON_BLOCK anyway.
+        let t = tracker(1024, 1, 10);
+        t.record_read(50, 1 << 20);
+        t.fold_after(Duration::ZERO);
+        let split = t.hot_split_key(0).expect("hot shard splits");
+        assert_eq!(split % MORTON_BLOCK, 0, "cut {split} is mid-cuboid");
+        // The raw median is bucket 0's hi = 103; the nearest block
+        // boundary is 104 — a cuboid's 8-key run [96, 104) stays whole.
+        assert_eq!(split, 104);
+    }
+
+    #[test]
+    fn hot_split_key_refuses_sub_block_shards() {
+        // Shard 0 owns [0, 4): hot, but no interior multiple of 8 — a
+        // split would necessarily cut a cuboid run, so there is none.
+        let map = Arc::new(ShardMap::new(vec![4], vec![0, 1]).unwrap());
+        let t = HeatTracker::with_config(1024, map, 256, Duration::from_secs(60));
+        t.record_read(1, 1 << 20);
+        t.record_read(2, 1 << 20);
+        assert_eq!(t.hot_split_key(0), None);
+    }
+
+    #[test]
+    fn set_shards_rebinds_the_aggregation_view() {
+        let t = tracker(1024, 1, 8);
+        t.record_read(1000, 1 << 20);
+        t.fold_after(Duration::ZERO);
+        assert_eq!(t.snapshot_folded().shards.len(), 1);
+        // Rebinding to a post-split map regroups the same buckets.
+        let split = t.shards().split(0, 512).unwrap();
+        t.set_shards(Arc::new(split));
+        let snap = t.snapshot_folded();
+        assert_eq!(snap.shards.len(), 2);
+        assert_eq!(snap.shards[0].shard, 1, "heat is all in the upper half");
+        assert_eq!(snap.shards[0].lo, 512);
     }
 
     #[test]

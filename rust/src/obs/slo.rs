@@ -86,7 +86,7 @@ pub fn class_of_route(route: &str) -> RouteClass {
         // Ingest and batch-work submission.
         "ramon-put" | "image-put" | "annotation-put" | "jobs-propagate" | "jobs-synapse"
         | "jobs-ingest" | "wal-flush" | "wal-flush-one" | "cluster-failover"
-        | "write-workers" => RouteClass::Bulk,
+        | "write-workers" | "shards-split" => RouteClass::Bulk,
         // Everything else polls state.
         _ => RouteClass::Status,
     }

@@ -27,16 +27,22 @@ pub type NodeId = usize;
 
 /// A partition of the Morton key space: `splits[i]` is the first key of
 /// shard `i + 1`. `n` shards need `n - 1` ascending split points.
+///
+/// Maps are immutable values: [`ShardMap::split`], [`ShardMap::merge`],
+/// and [`ShardMap::assign`] return a *new* map whose `version` is one
+/// past the source's, so a topology swap can be fenced the same way a
+/// leader promotion is (DESIGN.md §13).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ShardMap {
     splits: Vec<u64>,
     nodes: Vec<NodeId>,
+    version: u64,
 }
 
 impl ShardMap {
     /// A single-node (unsharded) map.
     pub fn single(node: NodeId) -> Self {
-        ShardMap { splits: Vec::new(), nodes: vec![node] }
+        ShardMap { splits: Vec::new(), nodes: vec![node], version: 0 }
     }
 
     /// Build from explicit split points (ascending) and one node per
@@ -56,7 +62,7 @@ impl ShardMap {
         if splits.windows(2).any(|w| w[0] >= w[1]) {
             return Err(Error::Cluster("split points must be strictly ascending".into()));
         }
-        Ok(ShardMap { splits, nodes })
+        Ok(ShardMap { splits, nodes, version: 0 })
     }
 
     /// Partition a Morton key space of `total_keys` evenly across `nodes`
@@ -72,6 +78,13 @@ impl ShardMap {
 
     pub fn num_shards(&self) -> usize {
         self.nodes.len()
+    }
+
+    /// Monotone map generation: bumped by every [`ShardMap::split`],
+    /// [`ShardMap::merge`], and [`ShardMap::assign`]. Fresh maps start
+    /// at 0.
+    pub fn version(&self) -> u64 {
+        self.version
     }
 
     pub fn nodes(&self) -> &[NodeId] {
@@ -119,23 +132,79 @@ impl ShardMap {
 
     /// Split a contiguous key run `[start, start+len)` into per-shard
     /// sub-runs (runs never straddle a shard boundary after this).
+    ///
+    /// One binary search locates the starting shard; each further
+    /// sub-run advances to the next split point directly, so a wide run
+    /// over a many-shard map (what dynamic splitting produces) costs
+    /// O(log n + sub-runs), not O(n) per sub-run.
     pub fn route_run(&self, start: u64, len: u64) -> Vec<(NodeId, u64, u64)> {
         let mut out = Vec::new();
         let end = start + len;
         let mut cur = start;
+        let mut shard = self.shard_for(start);
         while cur < end {
-            let node = self.node_for(cur);
-            let next_split = self
-                .splits
-                .iter()
-                .copied()
-                .find(|&s| s > cur)
-                .unwrap_or(u64::MAX)
-                .min(end);
-            out.push((node, cur, next_split - cur));
+            let next_split = self.splits.get(shard).copied().unwrap_or(u64::MAX).min(end);
+            out.push((self.nodes[shard], cur, next_split - cur));
             cur = next_split;
+            shard += 1;
         }
         out
+    }
+
+    /// Cut shard `shard` in two at `at_key`: the lower half keeps the
+    /// shard index, the upper half becomes shard `shard + 1`, and both
+    /// halves stay on the shard's current node (a subsequent
+    /// [`ShardMap::assign`] moves one). Returns a new map one version up.
+    pub fn split(&self, shard: usize, at_key: u64) -> Result<ShardMap> {
+        if shard >= self.num_shards() {
+            return Err(Error::Cluster(format!(
+                "split: no shard {shard} in a {}-shard map",
+                self.num_shards()
+            )));
+        }
+        let (lo, hi) = self.shard_range(shard);
+        if at_key <= lo || at_key >= hi {
+            return Err(Error::Cluster(format!(
+                "split: cut {at_key} outside shard {shard}'s interior ({lo}, {hi})"
+            )));
+        }
+        let mut splits = self.splits.clone();
+        splits.insert(shard, at_key);
+        let mut nodes = self.nodes.clone();
+        nodes.insert(shard + 1, self.nodes[shard]);
+        Ok(ShardMap { splits, nodes, version: self.version + 1 })
+    }
+
+    /// Merge adjacent shards `i` and `i + 1` back into one shard that
+    /// keeps shard `i`'s node (the caller migrates `i + 1`'s keys there
+    /// first). Returns a new map one version up.
+    pub fn merge(&self, i: usize, j: usize) -> Result<ShardMap> {
+        if j != i + 1 || j >= self.num_shards() {
+            return Err(Error::Cluster(format!(
+                "merge: shards {i} and {j} are not an adjacent pair of a {}-shard map",
+                self.num_shards()
+            )));
+        }
+        let mut splits = self.splits.clone();
+        splits.remove(i);
+        let mut nodes = self.nodes.clone();
+        nodes.remove(j);
+        Ok(ShardMap { splits, nodes, version: self.version + 1 })
+    }
+
+    /// Reassign shard `shard` to `node` — the rebind step of a live
+    /// move, after the data has been copied. Returns a new map one
+    /// version up.
+    pub fn assign(&self, shard: usize, node: NodeId) -> Result<ShardMap> {
+        if shard >= self.num_shards() {
+            return Err(Error::Cluster(format!(
+                "assign: no shard {shard} in a {}-shard map",
+                self.num_shards()
+            )));
+        }
+        let mut nodes = self.nodes.clone();
+        nodes[shard] = node;
+        Ok(ShardMap { splits: self.splits.clone(), nodes, version: self.version + 1 })
     }
 
     /// Rebalance onto a new node set: returns the new map and the key
@@ -283,6 +352,91 @@ mod tests {
             }
             assert_eq!(cur, u64::MAX);
         });
+    }
+
+    #[test]
+    fn split_and_merge_round_trip() {
+        let m = ShardMap::even(100, vec![0, 1]).unwrap(); // split at 50
+        let s = m.split(0, 24).unwrap();
+        assert_eq!(s.num_shards(), 3);
+        assert_eq!(s.version(), 1);
+        // Both halves stay on the old node until an assign moves one.
+        assert_eq!(s.node_for(10), 0);
+        assert_eq!(s.node_for(30), 0);
+        assert_eq!(s.node_for(60), 1);
+        assert_eq!(s.shard_range(0), (0, 24));
+        assert_eq!(s.shard_range(1), (24, 50));
+        let moved = s.assign(1, 2).unwrap();
+        assert_eq!(moved.node_for(30), 2);
+        assert_eq!(moved.version(), 2);
+        // Merging back (after a hypothetical copy home) restores the
+        // original partition at a higher version.
+        let back = s.merge(0, 1).unwrap();
+        assert_eq!(back.num_shards(), 2);
+        assert_eq!(back.version(), 2);
+        for k in [0u64, 10, 30, 49, 50, 99] {
+            assert_eq!(back.node_for(k), m.node_for(k));
+            assert_eq!(back.shard_for(k), m.shard_for(k));
+        }
+    }
+
+    #[test]
+    fn split_rejects_out_of_range_cuts() {
+        let m = ShardMap::even(100, vec![0, 1]).unwrap();
+        assert!(m.split(2, 10).is_err()); // no such shard
+        assert!(m.split(0, 0).is_err()); // cut at lo
+        assert!(m.split(0, 50).is_err()); // cut at hi (boundary already)
+        assert!(m.split(0, 70).is_err()); // cut inside the other shard
+        assert!(m.split(1, 50).is_err()); // cut at shard 1's lo
+        assert!(m.split(1, 75).is_ok());
+    }
+
+    #[test]
+    fn merge_rejects_non_adjacent_pairs() {
+        let m = ShardMap::even(90, vec![0, 1, 2]).unwrap();
+        assert!(m.merge(0, 2).is_err());
+        assert!(m.merge(1, 0).is_err());
+        assert!(m.merge(2, 3).is_err());
+        assert!(m.merge(1, 2).is_ok());
+        assert!(m.assign(3, 0).is_err());
+    }
+
+    #[test]
+    fn route_run_many_shard_map_stays_consistent() {
+        // A map splitting has grown to many shards: route_run must agree
+        // with the linear reference and tile exactly. (The implementation
+        // is one binary search + O(1) per sub-run; this guards the
+        // boundary arithmetic, a perf regression shows up in benches.)
+        let total: u64 = 1 << 14;
+        let n = 512usize;
+        let mut m = ShardMap::even(total, (0..4).collect()).unwrap();
+        let mut at = Vec::new();
+        let width = total / n as u64;
+        for i in 1..n as u64 {
+            at.push(i * width);
+        }
+        for k in at {
+            let shard = m.shard_for(k);
+            let (lo, _) = m.shard_range(shard);
+            if k > lo {
+                m = m.split(shard, k).unwrap();
+            }
+        }
+        assert_eq!(m.num_shards(), n);
+        for (start, len) in [(0u64, total), (37, total - 37), (width - 1, 3 * width), (total - 1, 1)] {
+            let parts = m.route_run(start, len);
+            let mut cur = start;
+            for (node, lo, l) in &parts {
+                assert_eq!(*lo, cur);
+                assert!(*l > 0);
+                assert_eq!(m.node_for(*lo), *node);
+                assert_eq!(m.node_for(lo + l - 1), *node);
+                cur = lo + l;
+            }
+            assert_eq!(cur, start + len);
+        }
+        // A full-space run visits every shard exactly once.
+        assert_eq!(m.route_run(0, total).len(), n);
     }
 
     #[test]

@@ -152,8 +152,11 @@ pub trait StorageEngine: Send + Sync {
 
     /// The Morton partition behind this engine, if it is sharded — the
     /// parallel cutout engine aligns its fan-out batches to these shard
-    /// boundaries so each worker's run lands wholly on one node.
-    fn shard_map(&self) -> Option<&crate::shard::ShardMap> {
+    /// boundaries so each worker's run lands wholly on one node. Returned
+    /// as a shared snapshot because a sharded engine's map is a living
+    /// object: a split or live move swaps it, and callers plan against
+    /// one consistent generation.
+    fn shard_map(&self) -> Option<Arc<crate::shard::ShardMap>> {
         None
     }
 
@@ -196,6 +199,39 @@ pub fn migrate(src: &dyn StorageEngine, dst: &dyn StorageEngine, table: Option<&
         if !batch.is_empty() {
             dst.put_batch(&t, &batch)?;
         }
+    }
+    Ok(moved)
+}
+
+/// [`migrate`], scoped to keys in `[lo, hi)` of one table — the shard
+/// move's copy step ships only the half that changes owner instead of
+/// the whole table. `hi == u64::MAX` is open-ended, matching
+/// [`crate::shard::ShardMap::shard_range`]'s last shard.
+pub fn migrate_range(
+    src: &dyn StorageEngine,
+    dst: &dyn StorageEngine,
+    table: &str,
+    lo: u64,
+    hi: u64,
+) -> Result<u64> {
+    let in_range = |k: u64| k >= lo && (k < hi || hi == u64::MAX);
+    let mut moved = 0u64;
+    let mut batch = Vec::with_capacity(256);
+    for k in src.keys(table)? {
+        if !in_range(k) {
+            continue;
+        }
+        if let Some(v) = src.get(table, k)? {
+            batch.push((k, (*v).clone()));
+            moved += 1;
+        }
+        if batch.len() >= 256 {
+            dst.put_batch(table, &batch)?;
+            batch.clear();
+        }
+    }
+    if !batch.is_empty() {
+        dst.put_batch(table, &batch)?;
     }
     Ok(moved)
 }
@@ -271,5 +307,56 @@ pub(crate) mod tests {
         let c = MemStore::new();
         assert_eq!(migrate(&a, &c, Some("other")).unwrap(), 1);
         assert_eq!(c.get("tbl", 0).unwrap(), None);
+    }
+
+    #[test]
+    fn migrate_range_ships_only_the_window() {
+        let a = MemStore::new();
+        let b = MemStore::new();
+        for k in 0..100u64 {
+            a.put("tbl", k, &k.to_le_bytes()).unwrap();
+        }
+        // The moving half only: [40, 60).
+        assert_eq!(migrate_range(&a, &b, "tbl", 40, 60).unwrap(), 20);
+        assert_eq!(b.get("tbl", 39).unwrap(), None);
+        assert_eq!(**b.get("tbl", 40).unwrap().unwrap(), 40u64.to_le_bytes());
+        assert_eq!(**b.get("tbl", 59).unwrap().unwrap(), 59u64.to_le_bytes());
+        assert_eq!(b.get("tbl", 60).unwrap(), None);
+        // The source keeps everything — migrate copies, retire deletes.
+        assert_eq!(a.keys("tbl").unwrap().len(), 100);
+    }
+
+    #[test]
+    fn migrate_range_empty_window_moves_nothing() {
+        let a = MemStore::new();
+        let b = MemStore::new();
+        for k in 0..10u64 {
+            a.put("tbl", k, b"v").unwrap();
+        }
+        // Empty ranges: degenerate [5, 5) and a window past the data.
+        assert_eq!(migrate_range(&a, &b, "tbl", 5, 5).unwrap(), 0);
+        assert_eq!(migrate_range(&a, &b, "tbl", 500, 600).unwrap(), 0);
+        assert!(b.keys("tbl").unwrap().is_empty());
+        // An absent table is also empty, not an error.
+        assert_eq!(migrate_range(&a, &b, "ghost", 0, 100).unwrap(), 0);
+    }
+
+    #[test]
+    fn migrate_range_boundaries_are_half_open() {
+        let a = MemStore::new();
+        let b = MemStore::new();
+        // Keys straddling both boundaries: lo is included, hi excluded.
+        for k in [9u64, 10, 11, 19, 20, 21] {
+            a.put("tbl", k, &k.to_le_bytes()).unwrap();
+        }
+        assert_eq!(migrate_range(&a, &b, "tbl", 10, 20).unwrap(), 3);
+        assert_eq!(b.keys("tbl").unwrap(), vec![10, 11, 19]);
+        // Open-ended hi == u64::MAX includes the top key itself.
+        let c = MemStore::new();
+        c.put("tbl", u64::MAX, b"top").unwrap();
+        c.put("tbl", 0, b"bottom").unwrap();
+        let d = MemStore::new();
+        assert_eq!(migrate_range(&c, &d, "tbl", 1, u64::MAX).unwrap(), 1);
+        assert_eq!(**d.get("tbl", u64::MAX).unwrap().unwrap(), *b"top");
     }
 }

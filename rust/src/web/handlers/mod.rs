@@ -12,6 +12,7 @@ pub(crate) mod jobs;
 pub(crate) mod obs;
 pub(crate) mod projects;
 pub(crate) mod qos;
+pub(crate) mod shards;
 pub(crate) mod system;
 pub(crate) mod telemetry;
 pub(crate) mod wal;

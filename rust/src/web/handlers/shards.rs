@@ -1,0 +1,41 @@
+//! Dynamic-sharding routes: topology status, manual splits, and the
+//! heat-driven auto balancer switch (DESIGN.md §13).
+
+use crate::web::http::Response;
+use crate::web::router::Ctx;
+use crate::web::routes::{parse_num, OcpService};
+use crate::{Error, Result};
+
+/// GET /shards/status/ — every sharded project's topology (map
+/// generation, per-shard ranges/owners/epochs, open move windows) plus
+/// the balancer's counters and recent splits.
+pub(crate) fn status(svc: &OcpService, _ctx: &Ctx<'_>) -> Result<Response> {
+    Ok(Response::text(svc.cluster.shard_status_text()))
+}
+
+/// POST /shards/split/{token}/{shard}/ — split one shard at its heat
+/// median (block-snapped range midpoint when cold) and rehome the upper
+/// half through the dual-route move window.
+pub(crate) fn split(svc: &OcpService, ctx: &Ctx<'_>) -> Result<Response> {
+    let token = ctx.params[0];
+    let shard = parse_num(ctx.params[1])? as usize;
+    let r = svc.cluster.split_shard(token, shard)?;
+    Ok(Response::text(format!(
+        "split: project={} shard={} cut={} target=node{} moved={} purged={} map_version={}\n",
+        r.token, r.shard, r.cut, r.target_node, r.keys_moved, r.keys_purged, r.map_version
+    )))
+}
+
+/// PUT /shards/auto/{on|off}/ — switch the background heat-driven
+/// splitter on or off.
+pub(crate) fn auto(svc: &OcpService, ctx: &Ctx<'_>) -> Result<Response> {
+    let on = match ctx.params[0] {
+        "on" => true,
+        "off" => false,
+        other => {
+            return Err(Error::BadRequest(format!("bad auto mode '{other}' (want on|off)")))
+        }
+    };
+    svc.cluster.set_auto_balance(on);
+    Ok(Response::text(format!("auto balance: {}\n", if on { "on" } else { "off" })))
+}

@@ -13,6 +13,10 @@
 //! * **admission gate** — at most [`ServerConfig::max_connections`]
 //!   concurrent connections; excess connections are answered `503` with
 //!   a `Retry-After` header and closed instead of queueing unboundedly.
+//!   With a tenant-weight hook installed
+//!   ([`Server::set_tenant_weights`], wired to `qos/` quota weights by
+//!   the service layer) over-cap connections are shed
+//!   lowest-tenant-weight first instead of FIFO.
 //! * **streaming bodies** — handlers return a [`Body`], either buffered
 //!   bytes or a chunk-producing stream written as chunked
 //!   transfer-encoding, so multi-hundred-MB cutouts never materialize
@@ -37,7 +41,7 @@ use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
 
 use crate::metrics::{Counter, Gauge, Histogram};
@@ -77,6 +81,10 @@ const IDLE_POLL: Duration = Duration::from_millis(100);
 
 /// What a 503 tells the client about when to come back.
 const RETRY_AFTER_SECS: u64 = 1;
+
+/// How long the weighted gate waits for an over-cap connection's
+/// request line before treating it as lowest-weight and shedding it.
+const PEEK_DEADLINE: Duration = Duration::from_millis(250);
 
 /// Accept-loop backoff caps: transient `WouldBlock` idles back off to
 /// stay responsive; real errors (EMFILE, ENFILE, ECONNABORTED storms)
@@ -287,6 +295,10 @@ pub struct HttpMetrics {
     pub connections: Counter,
     /// Connections rejected by the admission gate (503).
     pub rejected: Counter,
+    /// Over-cap connections admitted anyway because their tenant
+    /// outweighed every tenant currently holding a connection
+    /// (weighted shedding; see [`Server::set_tenant_weights`]).
+    pub priority_admits: Counter,
     /// Accept-loop errors (EMFILE and friends; `WouldBlock` idle polls
     /// are not errors and are not counted).
     pub accept_errors: Counter,
@@ -348,11 +360,12 @@ impl HttpMetrics {
     pub fn status_text(&self) -> String {
         let mut out = String::from("http:\n");
         out.push_str(&format!(
-            "  requests={} connections={} reuse={:.2} rejected_503={} accept_errors={}\n",
+            "  requests={} connections={} reuse={:.2} rejected_503={} priority_admits={} accept_errors={}\n",
             self.requests.get(),
             self.connections.get(),
             self.reuse_ratio(),
             self.rejected.get(),
+            self.priority_admits.get(),
             self.accept_errors.get(),
         ));
         out.push_str(&format!(
@@ -406,6 +419,84 @@ impl Default for ServerConfig {
     }
 }
 
+/// Resolves a tenant name to its admission weight (the service layer
+/// wires this to `qos/` quota weights; unknown tenants weigh 1).
+pub type WeightFn = Arc<dyn Fn(&str) -> u64 + Send + Sync>;
+
+/// The tenant's-eye view of the admission gate: which tenants hold live
+/// connections right now, plus the optional weight hook. With no hook
+/// installed — or with every weight equal, the hook's answer for
+/// unconfigured tenants — over-cap connections are shed FIFO exactly as
+/// before; with differentiated weights the gate sheds
+/// lowest-weight-first instead (see [`Server::set_tenant_weights`]).
+struct Gate {
+    /// tenant → number of live connections it holds. A connection
+    /// registers its tenant when its first request line parses and
+    /// deregisters when the connection ends.
+    tenants: Mutex<HashMap<String, usize>>,
+    weight_of: RwLock<Option<WeightFn>>,
+}
+
+impl Gate {
+    fn new() -> Gate {
+        Gate { tenants: Mutex::new(HashMap::new()), weight_of: RwLock::new(None) }
+    }
+
+    fn hook(&self) -> Option<WeightFn> {
+        self.weight_of.read().unwrap().clone()
+    }
+
+    fn note_open(&self, tenant: &str) {
+        *self.tenants.lock().unwrap().entry(tenant.to_string()).or_insert(0) += 1;
+    }
+
+    fn note_close(&self, tenant: &str) {
+        let mut held = self.tenants.lock().unwrap();
+        if let Some(n) = held.get_mut(tenant) {
+            *n -= 1;
+            if *n == 0 {
+                held.remove(tenant);
+            }
+        }
+    }
+
+    /// The lowest weight among tenants currently holding a connection —
+    /// the bar a newcomer must clear to be admitted past a full gate.
+    /// 0 when no connection has identified its tenant yet, so any
+    /// weighted tenant outranks a gate full of silent connections.
+    fn min_active_weight(&self, weight_of: &WeightFn) -> u64 {
+        self.tenants.lock().unwrap().keys().map(|t| weight_of(t)).min().unwrap_or(0)
+    }
+}
+
+/// The tenant a connection's request belongs to: the first path
+/// segment — the same attribution the QoS admission layer uses for
+/// project routes (reserved surfaces resolve to the default weight).
+fn tenant_of(path: &str) -> &str {
+    path.split('/').find(|s| !s.is_empty()).unwrap_or("")
+}
+
+/// Hard ceiling on over-cap priority admissions: the configured gate
+/// width plus a small bounded allowance, so weighted admission cannot
+/// grow the connection count without limit under a heavy-tenant storm.
+fn overflow_cap(cfg: &ServerConfig) -> usize {
+    cfg.max_connections + cfg.max_connections / 8 + 1
+}
+
+/// Atomically claim a connection slot if `active` is still below `cap`.
+fn try_reserve(active: &AtomicUsize, cap: usize) -> bool {
+    let mut cur = active.load(Ordering::Acquire);
+    loop {
+        if cur >= cap {
+            return false;
+        }
+        match active.compare_exchange_weak(cur, cur + 1, Ordering::AcqRel, Ordering::Acquire) {
+            Ok(_) => return true,
+            Err(now) => cur = now,
+        }
+    }
+}
+
 /// A running HTTP server (drops → graceful drain: stop accepting, let
 /// in-flight requests finish, close every connection).
 pub struct Server {
@@ -419,6 +510,7 @@ pub struct Server {
     /// Per-request latency — the same histogram as `metrics.latency`.
     pub latency: Arc<Histogram>,
     active: Arc<AtomicUsize>,
+    gate: Arc<Gate>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -472,15 +564,17 @@ impl Server {
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let active = Arc::new(AtomicUsize::new(0));
+        let gate = Arc::new(Gate::new());
         let handler = Arc::new(handler);
 
         let stop2 = Arc::clone(&stop);
         let active2 = Arc::clone(&active);
         let metrics2 = Arc::clone(&metrics);
+        let gate2 = Arc::clone(&gate);
         let accept_thread = std::thread::Builder::new()
             .name("ocpd-accept".into())
             .spawn(move || {
-                accept_loop(listener, cfg, stop2, active2, metrics2, handler);
+                accept_loop(listener, cfg, stop2, active2, metrics2, gate2, handler);
             })
             .expect("spawn accept thread");
 
@@ -493,8 +587,22 @@ impl Server {
             requests,
             latency,
             active,
+            gate,
             accept_thread: Some(accept_thread),
         })
+    }
+
+    /// Install the tenant-weight hook for the admission gate. With a
+    /// hook installed, over-cap connections are no longer shed FIFO:
+    /// the gate peeks the pending request line (bounded, without
+    /// consuming it), resolves the tenant's weight, and admits the
+    /// connection — within a small bounded overflow allowance — iff it
+    /// outweighs every tenant currently holding a connection. Under a
+    /// storm, the lowest-weight tenant is shed first. The service layer
+    /// wires this to `qos/` quota weights, so with no quotas configured
+    /// (all weights 1) the gate behaves exactly as the FIFO one.
+    pub fn set_tenant_weights(&self, weight_of: WeightFn) {
+        *self.gate.weight_of.write().unwrap() = Some(weight_of);
     }
 
     pub fn addr(&self) -> std::net::SocketAddr {
@@ -542,6 +650,7 @@ fn accept_loop<F>(
     stop: Arc<AtomicBool>,
     active: Arc<AtomicUsize>,
     metrics: Arc<HttpMetrics>,
+    gate: Arc<Gate>,
     handler: Arc<F>,
 ) where
     F: Fn(Request) -> Response + Send + Sync + 'static,
@@ -558,27 +667,36 @@ fn accept_loop<F>(
                 error_backoff = ACCEPT_ERROR_BACKOFF_START;
                 // Admission gate: answer 503 + Retry-After instead of
                 // queueing more connections than we are willing to run.
+                // Either way the decision runs on a disposable thread:
+                // the 503 write, the bounded drain (closing with unread
+                // data would RST the 503 out of the peer's receive
+                // buffer), and the weighted gate's request-line peek
+                // must not stall the accept loop — a trickling peer
+                // could otherwise hold accepts for hundreds of ms. If
+                // even that thread cannot spawn, just drop the socket.
                 if active.load(Ordering::Acquire) >= cfg.max_connections {
-                    metrics.rejected.inc();
-                    // Shed on a disposable thread: the 503 write and the
-                    // bounded drain (closing with unread data would RST
-                    // the 503 out of the peer's receive buffer) must not
-                    // stall the accept loop — a trickling peer could
-                    // otherwise hold accepts for hundreds of ms. If even
-                    // that thread cannot spawn, just drop the socket.
-                    let _ = std::thread::Builder::new().name("ocpd-shed".into()).spawn(
-                        move || {
-                            let _ = write_response(&stream, Response::overloaded(), false);
-                            stream.set_read_timeout(Some(Duration::from_millis(50))).ok();
-                            let mut sink = [0u8; 8192];
-                            for _ in 0..8 {
-                                match (&stream).read(&mut sink) {
-                                    Ok(0) | Err(_) => break,
-                                    Ok(_) => {}
-                                }
-                            }
-                        },
-                    );
+                    if let Some(weight_of) = gate.hook() {
+                        // Weighted shedding: peek the request line and
+                        // shed the lowest-weight tenant first instead
+                        // of FIFO.
+                        let g = Arc::clone(&gate);
+                        let st = Arc::clone(&stop);
+                        let a = Arc::clone(&active);
+                        let m = Arc::clone(&metrics);
+                        let h = Arc::clone(&handler);
+                        let spawned =
+                            std::thread::Builder::new().name("ocpd-shed".into()).spawn(
+                                move || shed_or_admit(stream, cfg, g, weight_of, st, a, m, h),
+                            );
+                        if spawned.is_err() {
+                            metrics.rejected.inc();
+                        }
+                    } else {
+                        metrics.rejected.inc();
+                        let _ = std::thread::Builder::new()
+                            .name("ocpd-shed".into())
+                            .spawn(move || shed_503(stream));
+                    }
                     continue;
                 }
                 metrics.connections.inc();
@@ -590,6 +708,7 @@ fn accept_loop<F>(
                     metrics: Arc::clone(&metrics),
                 };
                 let m = Arc::clone(&metrics);
+                let g = Arc::clone(&gate);
                 let stop = Arc::clone(&stop);
                 let spawned = std::thread::Builder::new().name("ocpd-conn".into()).spawn(
                     move || {
@@ -597,7 +716,7 @@ fn accept_loop<F>(
                         // (unwinding runs drops), so the admission gate
                         // and drain never count ghost connections.
                         let _guard = guard;
-                        let _ = serve_connection(stream, h.as_ref(), &cfg, &m, &stop);
+                        let _ = serve_connection(stream, h.as_ref(), &cfg, &m, &stop, &g);
                     },
                 );
                 if spawned.is_err() {
@@ -639,6 +758,92 @@ impl Drop for ConnGuard {
         self.active.fetch_sub(1, Ordering::AcqRel);
         self.metrics.active_connections.sub(1);
     }
+}
+
+/// Answer 503 + Retry-After and drain briefly, so closing with unread
+/// data does not RST the response out of the peer's receive buffer.
+fn shed_503(stream: TcpStream) {
+    let _ = write_response(&stream, Response::overloaded(), false);
+    stream.set_read_timeout(Some(Duration::from_millis(50))).ok();
+    let mut sink = [0u8; 8192];
+    for _ in 0..8 {
+        match (&stream).read(&mut sink) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
+        }
+    }
+}
+
+/// Peek (without consuming) the pending request line of an over-cap
+/// connection and return its path, waiting up to [`PEEK_DEADLINE`] for
+/// the peer to send it. `None` — a silent, closed, or garbled peer —
+/// means the caller sheds exactly as the FIFO gate would have.
+fn peek_first_path(stream: &TcpStream) -> Option<String> {
+    stream.set_read_timeout(Some(Duration::from_millis(50))).ok()?;
+    let deadline = std::time::Instant::now() + PEEK_DEADLINE;
+    let mut buf = [0u8; 2048];
+    loop {
+        match stream.peek(&mut buf) {
+            Ok(0) => return None,
+            Ok(n) => {
+                if let Some(eol) = buf[..n].iter().position(|&b| b == b'\n') {
+                    let line = String::from_utf8_lossy(&buf[..eol]);
+                    let mut parts = line.split_whitespace();
+                    let _method = parts.next()?;
+                    return parts.next().map(str::to_string);
+                }
+                if n == buf.len() {
+                    return None; // request line longer than any sane one
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(_) => return None,
+        }
+        if std::time::Instant::now() >= deadline {
+            return None;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// The weighted gate's over-capacity decision, run on the disposable
+/// shed thread. Peek the pending request line, resolve its tenant's
+/// weight, and admit the connection iff it outweighs every tenant
+/// currently holding one AND a slot under the bounded overflow
+/// allowance can be claimed; shed it with a 503 otherwise. `peek` does
+/// not consume bytes, so the admitted connection runs the ordinary
+/// request loop from byte zero.
+#[allow(clippy::too_many_arguments)]
+fn shed_or_admit<F>(
+    stream: TcpStream,
+    cfg: ServerConfig,
+    gate: Arc<Gate>,
+    weight_of: WeightFn,
+    stop: Arc<AtomicBool>,
+    active: Arc<AtomicUsize>,
+    metrics: Arc<HttpMetrics>,
+    handler: Arc<F>,
+) where
+    F: Fn(Request) -> Response + Send + Sync + 'static,
+{
+    let admit = peek_first_path(&stream).is_some_and(|path| {
+        weight_of(tenant_of(&path)) > gate.min_active_weight(&weight_of)
+            && try_reserve(&active, overflow_cap(&cfg))
+    });
+    if !admit {
+        metrics.rejected.inc();
+        shed_503(stream);
+        return;
+    }
+    // The slot is claimed (try_reserve): mirror the admitted path's
+    // accounting, with the guard releasing the slot on any exit.
+    metrics.priority_admits.inc();
+    metrics.connections.inc();
+    metrics.active_connections.add(1);
+    let _guard = ConnGuard { active, metrics: Arc::clone(&metrics) };
+    let _ = serve_connection(stream, handler.as_ref(), &cfg, &metrics, &stop, &gate);
 }
 
 /// Decrements the in-flight gauge when request handling ends, panic or
@@ -694,6 +899,32 @@ fn await_next_request(
     }
 }
 
+/// Registers the connection's tenant (from its first parsed request)
+/// with the admission gate, and deregisters on any exit path — panics
+/// included — so [`Gate::min_active_weight`] never counts ghosts.
+struct TenantGuard<'a> {
+    gate: &'a Gate,
+    tenant: Option<String>,
+}
+
+impl TenantGuard<'_> {
+    fn register(&mut self, path: &str) {
+        if self.tenant.is_none() {
+            let t = tenant_of(path).to_string();
+            self.gate.note_open(&t);
+            self.tenant = Some(t);
+        }
+    }
+}
+
+impl Drop for TenantGuard<'_> {
+    fn drop(&mut self) {
+        if let Some(t) = &self.tenant {
+            self.gate.note_close(t);
+        }
+    }
+}
+
 /// One connection's lifetime: a request loop until close/drain/error.
 fn serve_connection<F: Fn(Request) -> Response>(
     stream: TcpStream,
@@ -701,9 +932,11 @@ fn serve_connection<F: Fn(Request) -> Response>(
     cfg: &ServerConfig,
     metrics: &HttpMetrics,
     stop: &AtomicBool,
+    gate: &Gate,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
+    let mut tenant = TenantGuard { gate, tenant: None };
     let mut served = 0usize;
     loop {
         if served > 0 {
@@ -722,6 +955,7 @@ fn serve_connection<F: Fn(Request) -> Response>(
         let outcome = read_request(&mut reader, cfg.max_body, deadline);
         let result = match outcome {
             Ok(req) => {
+                tenant.register(&req.path);
                 // Drain takes priority over the client's preference; a
                 // response during drain is the connection's last.
                 let mut keep = req.keep_alive && !stop.load(Ordering::Relaxed);
@@ -1338,6 +1572,73 @@ mod tests {
         }
         assert!(got_503, "admission gate never rejected past capacity");
         assert!(s.metrics.rejected.get() >= 1);
+    }
+
+    /// Weighted shedding (ROADMAP item 2 leftover): with a QoS weight
+    /// hook installed and the gate full, the heavy (low-weight) tenant
+    /// is shed first while the high-weight tenant is admitted past the
+    /// same full gate.
+    #[test]
+    fn admission_gate_sheds_lowest_weight_tenant_first() {
+        let cfg = ServerConfig { max_connections: 1, ..ServerConfig::default() };
+        let s = Server::bind_with_config(
+            "127.0.0.1:0",
+            cfg,
+            Arc::new(HttpMetrics::default()),
+            |_req| Response::text("ok"),
+        )
+        .unwrap();
+        s.set_tenant_weights(Arc::new(|t: &str| if t == "vip" { 100 } else { 1 }));
+
+        // A low-weight tenant's keep-alive connection occupies the only
+        // slot; reading the response guarantees its tenant registered.
+        let mut held = TcpStream::connect(s.addr()).unwrap();
+        held.write_all(b"GET /bulk/a/ HTTP/1.1\r\n\r\n").unwrap();
+        let mut r = BufReader::new(held.try_clone().unwrap());
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert!(line.contains("200"), "{line}");
+
+        // Over-cap admissions release their slot when the connection
+        // ends; wait for that before the next probe so the bounded
+        // overflow allowance (1 here) is free again.
+        let await_held_only = || {
+            let t0 = std::time::Instant::now();
+            while s.metrics.active_connections.get() > 1 {
+                assert!(
+                    t0.elapsed() < Duration::from_secs(2),
+                    "over-cap connection never released its slot"
+                );
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        };
+
+        // Storm the full gate, alternating tenants: vip (weight 100)
+        // outweighs the holder (weight 1) and is admitted every time;
+        // bulk (weight 1) does not outweigh it and is shed every time.
+        for _ in 0..5 {
+            assert_eq!(
+                raw_status(s.addr(), b"GET /vip/x/ HTTP/1.1\r\nConnection: close\r\n\r\n"),
+                200,
+                "high-weight tenant shed at the gate"
+            );
+            await_held_only();
+            assert_eq!(
+                raw_status(s.addr(), b"GET /bulk/x/ HTTP/1.1\r\nConnection: close\r\n\r\n"),
+                503,
+                "low-weight tenant admitted past a full gate"
+            );
+        }
+        assert!(s.metrics.priority_admits.get() >= 5);
+        assert!(s.metrics.rejected.get() >= 5);
+        // The held connection still works after the storm. The reader
+        // still holds the first response's unread headers and body, so
+        // drain to EOF (`Connection: close` ends the socket) and look
+        // for the second response's status line in the remainder.
+        held.write_all(b"GET /bulk/a/ HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap();
+        let mut rest = String::new();
+        r.read_to_string(&mut rest).unwrap();
+        assert!(rest.contains("HTTP/1.1 200"), "{rest}");
     }
 
     #[test]

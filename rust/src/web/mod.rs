@@ -44,11 +44,14 @@
 //! GET /qos/status/                                                QoS admission + fair sharing
 //! PUT /qos/quota/{token}/                                         set a tenant's quota/weight
 //! PUT /qos/enforce/{on|off}/                                      toggle QoS enforcement
+//! GET /shards/status/                                             shard maps + move windows
+//! POST /shards/split/{token}/{shard}/                             split a shard, rehome hot half
+//! PUT /shards/auto/{on|off}/                                      toggle heat-driven splitting
 //! ```
 //!
 //! `info`, `http`, `wal`, `cache`, `jobs`, `write`, `metrics`,
-//! `trace`, `cluster`, `heat`, `account`, `slo`, and `qos` are
-//! reserved top-level names, not project tokens;
+//! `trace`, `cluster`, `heat`, `account`, `slo`, `qos`, and `shards`
+//! are reserved top-level names, not project tokens;
 //! wrong-method requests anywhere in the grammar answer `405` with an
 //! auto-derived `Allow` header. Every response carries an
 //! `X-Request-Id` header (echoing the request's, if sent) naming the
@@ -127,6 +130,7 @@ pub fn serve_with(
 ) -> crate::Result<Server> {
     let metrics = Arc::new(HttpMetrics::default());
     register_http_metrics(cluster.registry(), &metrics);
+    let qos = Arc::clone(cluster.qos());
     let svc = Arc::new(
         OcpService::new(cluster, runtime)
             .with_http_metrics(Arc::clone(&metrics))
@@ -137,7 +141,13 @@ pub fn serve_with(
         max_connections: opts.max_connections,
         ..ServerConfig::default()
     };
-    Server::bind_with_config(addr, cfg, metrics, move |req| svc.handle(req))
+    let server = Server::bind_with_config(addr, cfg, metrics, move |req| svc.handle(req))?;
+    // Over-cap connections are shed lowest-tenant-weight first, using
+    // the same `qos/` quota weights the fair-sharing gates use (weight
+    // 1 for unconfigured tenants, so with no quotas set the gate sheds
+    // FIFO exactly as before).
+    server.set_tenant_weights(Arc::new(move |tenant| qos.weight(tenant)));
+    Ok(server)
 }
 
 /// Register the transport's collector into the cluster's unified
@@ -156,6 +166,11 @@ fn register_http_metrics(
                 "ocpd_http_rejected_total",
                 "Connections rejected by the admission gate.",
                 m.rejected.get(),
+            ),
+            (
+                "ocpd_http_priority_admits_total",
+                "Over-cap connections admitted by tenant weight.",
+                m.priority_admits.get(),
             ),
             ("ocpd_http_accept_errors_total", "Accept-loop errors.", m.accept_errors.get()),
             (

@@ -14,7 +14,7 @@ use crate::core::Box3;
 use crate::runtime::Runtime;
 use crate::tiles::TileService;
 use crate::web::handlers::{
-    cache, cluster, jobs, obs, projects, qos, system, telemetry, wal, write_engine,
+    cache, cluster, jobs, obs, projects, qos, shards, system, telemetry, wal, write_engine,
 };
 use crate::web::http::{HttpMetrics, Request, Response};
 use crate::web::router::{Outcome, Route, Router, Seg};
@@ -30,7 +30,7 @@ pub const DEFAULT_STREAM_THRESHOLD: usize = 8 << 20;
 /// the cluster refuses to create projects under them.
 pub const RESERVED: &[&str] = &[
     "info", "http", "wal", "cache", "jobs", "write", "metrics", "trace", "cluster", "heat",
-    "account", "slo", "qos",
+    "account", "slo", "qos", "shards",
 ];
 
 /// The Web-service layer over a cluster (the paper's "application
@@ -338,6 +338,28 @@ fn route_table() -> Vec<Route<OcpService>> {
             pattern: &[Lit("cluster"), Lit("failover"), Param, Param],
             handler: cluster::failover,
             doc: "force a leader promotion on one project shard",
+        },
+        // ---- dynamic sharding ----------------------------------------
+        Route {
+            name: "shards-status",
+            methods: GET,
+            pattern: &[Lit("shards"), Lit("status")],
+            handler: shards::status,
+            doc: "shard maps, move windows, and split-planner counters",
+        },
+        Route {
+            name: "shards-split",
+            methods: PUT_POST,
+            pattern: &[Lit("shards"), Lit("split"), Param, Param],
+            handler: shards::split,
+            doc: "split one project shard at its heat median and rehome the hot half",
+        },
+        Route {
+            name: "shards-auto",
+            methods: PUT_POST,
+            pattern: &[Lit("shards"), Lit("auto"), Param],
+            handler: shards::auto,
+            doc: "toggle heat-driven auto splitting on|off",
         },
         // ---- cuboid cache --------------------------------------------
         Route {
@@ -656,7 +678,7 @@ mod tests {
         let listing = r.listing();
         for reserved in [
             "info", "http", "wal", "cache", "jobs", "write", "metrics", "trace", "cluster",
-            "heat", "account", "slo", "qos",
+            "heat", "account", "slo", "qos", "shards",
         ] {
             assert!(listing.contains(&format!("/{reserved}")), "{reserved} missing:\n{listing}");
         }

@@ -1,0 +1,238 @@
+//! Dynamic shard splitting, end to end (DESIGN.md §13).
+//!
+//! Two property drills over the live-move machinery:
+//!
+//! * **Round trip**: split a shard at a random block-aligned cut, move
+//!   the upper half to a fresh node, then merge it back home — every
+//!   byte reads back identically before, during, and after both moves,
+//!   and routing agrees with the map at every step.
+//! * **Concurrent writes**: writers keep mutating both halves while the
+//!   copier drains the window and the map commits; a reader thread
+//!   observes every key as present and well-formed mid-copy, and the
+//!   last write per key wins after the move — no loss, no tears.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use ocpd::cluster::{ReplicaSet, ShardMove, ShardedEngine};
+use ocpd::obs::heat::snap_split_key;
+use ocpd::shard::ShardMap;
+use ocpd::storage::{Engine, MemStore, StorageEngine};
+use ocpd::util::prop::property;
+
+const TABLE: &str = "t/data";
+/// A table outside the move's scope: must never be copied or purged.
+const OTHER: &str = "other/data";
+
+/// Deterministic payload for `key` at write round `round`; the first
+/// two bytes self-identify the key so a torn or misrouted read is
+/// detectable from the value alone.
+fn payload(key: u64, round: u8) -> Vec<u8> {
+    vec![(key % 251) as u8, (key >> 8) as u8, round, 0xC3]
+}
+
+fn well_formed(key: u64, v: &[u8]) -> bool {
+    v.len() == 4 && v[0] == (key % 251) as u8 && v[1] == (key >> 8) as u8 && v[3] == 0xC3
+}
+
+/// A 2-shard engine over dedicated per-node stores.
+fn two_shard(total: u64) -> (Arc<ShardedEngine>, Vec<Arc<MemStore>>) {
+    let mems: Vec<Arc<MemStore>> = (0..2).map(|_| Arc::new(MemStore::new())).collect();
+    let engines: Vec<Engine> = mems.iter().map(|m| Arc::clone(m) as Engine).collect();
+    let map = ShardMap::even(total, vec![0, 1]).unwrap();
+    (Arc::new(ShardedEngine::new(map, engines)), mems)
+}
+
+/// Split `shard` at `cut`, rehoming the upper half onto a brand-new
+/// store (returned). Mirrors what the cluster's balancer executes.
+fn split_move(s: &ShardedEngine, shard: usize, cut: u64, chunk: usize) -> Arc<MemStore> {
+    let target = Arc::new(MemStore::new());
+    let map = s.map();
+    let new_node = map.nodes().iter().copied().max().unwrap_or(0) + 1;
+    let new_map = Arc::new(map.split(shard, cut).unwrap().assign(shard + 1, new_node).unwrap());
+    let from = Arc::clone(&s.sets()[shard]);
+    let to = ReplicaSet::solo(shard + 1, new_node, Arc::clone(&target) as Engine);
+    to.set_range(new_map.shard_range(shard + 1));
+    let mut sets = s.sets();
+    sets.insert(shard + 1, Arc::clone(&to));
+    s.begin_move(ShardMove {
+        range: new_map.shard_range(shard + 1),
+        from,
+        to,
+        scope: "t".into(),
+        map: new_map,
+        sets,
+    })
+    .unwrap();
+    s.copy_moving(chunk).unwrap();
+    s.commit_move().unwrap();
+    target
+}
+
+/// Merge shard `hi` back into shard `lo` (adjacent), moving its keys
+/// home and retiring its set.
+fn merge_move(s: &ShardedEngine, lo: usize, hi: usize, chunk: usize) {
+    let map = s.map();
+    let range = map.shard_range(hi);
+    let sets = s.sets();
+    let from = Arc::clone(&sets[hi]);
+    let to = Arc::clone(&sets[lo]);
+    let merged = Arc::new(map.merge(lo, hi).unwrap());
+    to.set_range(merged.shard_range(lo));
+    let mut new_sets = sets;
+    new_sets.remove(hi);
+    s.begin_move(ShardMove { range, from, to, scope: "t".into(), map: merged, sets: new_sets })
+        .unwrap();
+    s.copy_moving(chunk).unwrap();
+    s.commit_move().unwrap();
+}
+
+#[test]
+fn split_route_merge_round_trip_preserves_every_byte() {
+    property("split_route_merge_round_trip", 16, |g| {
+        let total = 1u64 << (7 + g.u64_below(4)); // 128..=1024 keys
+        let (s, mems) = two_shard(total);
+        let original_map = s.map();
+        let keys: Vec<u64> = (0..total).step_by(3).collect();
+        for &k in &keys {
+            s.put(TABLE, k, &payload(k, 0)).unwrap();
+            s.put(OTHER, k, b"keep").unwrap();
+        }
+        // Split a random shard at a random block-snapped interior cut.
+        let shard = g.usize_below(2);
+        let (lo, hi) = original_map.shard_range(shard);
+        let span = hi.min(total) - lo;
+        let cut = match snap_split_key(lo + 1 + g.u64_below(span.saturating_sub(2).max(1)), lo, hi)
+        {
+            Some(c) => c,
+            None => return, // degenerate draw: shard too small to split
+        };
+        let chunk = 1 + g.usize_below(64);
+        let target = split_move(&s, shard, cut, chunk);
+        let split_map = s.map();
+        assert_eq!(split_map.num_shards(), 3);
+        assert_eq!(split_map.version(), original_map.version() + 1);
+        // Every byte identical, and routing agrees with the new map.
+        for &k in &keys {
+            let v = s.get(TABLE, k).unwrap().unwrap_or_else(|| panic!("key {k} lost by split"));
+            assert_eq!(**v, *payload(k, 0), "key {k} corrupted by split");
+        }
+        // The rehomed half lives on the target — scoped tables only.
+        let upper: Vec<u64> = keys.iter().copied().filter(|&k| k >= cut).collect();
+        assert_eq!(target.keys(TABLE).unwrap(), upper);
+        assert!(target.keys(OTHER).unwrap().is_empty(), "out-of-scope table copied");
+        // The old owner purged the moved range but kept its own half
+        // and every out-of-scope key.
+        let donor = &mems[split_map.nodes()[shard]];
+        let lower: Vec<u64> = keys.iter().copied().filter(|&k| k >= lo && k < cut).collect();
+        let shard_keys: Vec<u64> =
+            keys.iter().copied().filter(|&k| k >= lo && k < hi).collect();
+        assert_eq!(donor.keys(TABLE).unwrap(), lower, "donor kept wrong half");
+        assert_eq!(donor.keys(OTHER).unwrap(), shard_keys, "out-of-scope table purged");
+        // Merge the new shard back home and prove the round trip.
+        merge_move(&s, shard, shard + 1, chunk);
+        let merged_map = s.map();
+        assert_eq!(merged_map.num_shards(), 2);
+        for &k in &keys {
+            let v = s.get(TABLE, k).unwrap().unwrap_or_else(|| panic!("key {k} lost by merge"));
+            assert_eq!(**v, *payload(k, 0), "key {k} corrupted by merge");
+            assert_eq!(
+                merged_map.shard_for(k),
+                original_map.shard_for(k),
+                "routing diverged after round trip"
+            );
+        }
+        assert!(target.keys(TABLE).unwrap().is_empty(), "merge left keys on the split node");
+        // Writes still land after two topology swaps.
+        let probe = keys[keys.len() / 2];
+        s.put(TABLE, probe, &payload(probe, 9)).unwrap();
+        assert_eq!(**s.get(TABLE, probe).unwrap().unwrap(), *payload(probe, 9));
+    });
+}
+
+#[test]
+fn concurrent_writes_survive_a_live_split() {
+    property("concurrent_writes_survive_split", 8, |g| {
+        let total = 256u64;
+        let (s, _mems) = two_shard(total);
+        let keys: Vec<u64> = (0..total).collect();
+        for &k in &keys {
+            s.put(TABLE, k, &payload(k, 0)).unwrap();
+        }
+        // Open the window by hand so writers and readers overlap the
+        // copy: shard 1 = [128, MAX), cut mid-shard.
+        let cut = snap_split_key(128 + 8 + g.u64_below(96), 128, u64::MAX).unwrap();
+        let target = Arc::new(MemStore::new());
+        let map = s.map();
+        let new_map = Arc::new(map.split(1, cut).unwrap().assign(2, 2).unwrap());
+        let from = Arc::clone(&s.sets()[1]);
+        let to = ReplicaSet::solo(2, 2, Arc::clone(&target) as Engine);
+        to.set_range(new_map.shard_range(2));
+        let mut sets = s.sets();
+        sets.insert(2, Arc::clone(&to));
+        s.begin_move(ShardMove {
+            range: new_map.shard_range(2),
+            from,
+            to,
+            scope: "t".into(),
+            map: new_map,
+            sets,
+        })
+        .unwrap();
+
+        let rounds: u8 = 3 + g.u64_below(3) as u8;
+        let stop = AtomicBool::new(false);
+        std::thread::scope(|scope| {
+            // Two writers own disjoint stripes (even/odd keys) and
+            // rewrite them round by round across copy AND commit.
+            let mut writers = Vec::new();
+            for stripe in 0..2u64 {
+                let s = &s;
+                let keys = &keys;
+                writers.push(scope.spawn(move || {
+                    for round in 1..=rounds {
+                        for &k in keys.iter().filter(|&&k| k % 2 == stripe) {
+                            s.put(TABLE, k, &payload(k, round)).unwrap();
+                        }
+                    }
+                }));
+            }
+            // A reader hammers random keys mid-copy: every value must
+            // be present and self-consistent at all times.
+            let reader = {
+                let s = &s;
+                let keys = &keys;
+                let stop = &stop;
+                let mut seed = 0x5EED ^ rounds as u64;
+                scope.spawn(move || {
+                    while !stop.load(Ordering::Acquire) {
+                        seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+                        let k = keys[(seed >> 33) as usize % keys.len()];
+                        let v = s.get(TABLE, k).unwrap().expect("key vanished mid-move");
+                        assert!(well_formed(k, &v), "torn read of key {k}: {:?}", &**v);
+                    }
+                })
+            };
+            // Drain the window in small chunks while the writers run,
+            // then commit with them still going.
+            s.copy_moving(1 + g.usize_below(16)).unwrap();
+            s.commit_move().unwrap();
+            for w in writers {
+                w.join().unwrap();
+            }
+            stop.store(true, Ordering::Release);
+            reader.join().unwrap();
+        });
+
+        // Last write wins for every key, read through the new topology
+        // and present on the correct owner's store.
+        assert_eq!(s.map().num_shards(), 3);
+        for &k in &keys {
+            let v = s.get(TABLE, k).unwrap().unwrap_or_else(|| panic!("key {k} lost"));
+            assert_eq!(**v, *payload(k, rounds), "key {k} lost the last write");
+        }
+        let moved = target.keys(TABLE).unwrap();
+        assert!(moved.iter().all(|&k| k >= cut), "target holds out-of-range keys");
+        assert_eq!(moved.len() as u64, total - cut, "target missing moved keys");
+    });
+}
